@@ -1,0 +1,63 @@
+//! End-to-end validation driver (DESIGN.md's required full-system run):
+//! res50 on the NC benchmark — 8 continual scenarios, 240 training batches
+//! (3 840 samples through the AOT train artifacts), 300 inference requests,
+//! all four methods — logging the per-round validation-accuracy curve and
+//! the final paper-shaped comparison.  Results recorded in EXPERIMENTS.md
+//! §End-to-end.
+//!
+//!     cargo run --release --example e2e_core50_nc
+
+use etuner::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+    let methods = [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("LazyTune", TunePolicyKind::LazyTune, FreezePolicyKind::None),
+        ("SimFreeze", TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+    let mut rows = Vec::new();
+    for (name, tune, freeze) in methods {
+        let mut cfg = RunConfig::quickstart("res50", Benchmark::Nc)
+            .with_policies(tune, freeze);
+        cfg.n_requests = 300;
+        println!("=== {name} ===");
+        let r = Simulation::new(&rt, cfg)?.run()?;
+        // loss/accuracy curve: one line per fine-tuning round
+        println!("round  t        scen  merged  frozen  val_acc");
+        for (i, rr) in r.round_log.iter().enumerate() {
+            if i % 8 == 0 || i + 1 == r.round_log.len() {
+                println!(
+                    "{:>5}  {:>7.0}  {:>4}  {:>6}  {:>6}  {:>6.3}",
+                    i, rr.t, rr.scenario, rr.batches, rr.frozen_units, rr.val_acc
+                );
+            }
+        }
+        println!(
+            "{name}: acc {:.2}%  time {:.0}s  energy {:.2}Wh  rounds {}  \
+             changes detected {}  wall {:.1}s\n",
+            r.avg_inference_accuracy * 100.0,
+            r.energy.total_s(),
+            r.energy.total_wh(),
+            r.rounds,
+            r.scenario_changes_detected,
+            r.wall_exec_s,
+        );
+        rows.push((name, r));
+    }
+
+    let base = rows[0].1.energy.total_s();
+    let base_j = rows[0].1.energy.total_j();
+    let base_a = rows[0].1.avg_inference_accuracy;
+    println!("summary (vs Immed.):");
+    for (name, r) in &rows {
+        println!(
+            "  {name:<10} time x{:.2}  energy x{:.2}  acc {:+.2}%",
+            r.energy.total_s() / base,
+            r.energy.total_j() / base_j,
+            (r.avg_inference_accuracy - base_a) * 100.0,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! NLP continual learning (paper §V-B2 / Table IV): the bert proxy on the
+//! 20News-style benchmark — 10 scenarios of 2 topic classes each — plus the
+//! semi-supervised mode (paper §IV-C): only 10% of the stream is labeled,
+//! the rest trains through the SimSiam self-supervised artifact.
+//!
+//!     cargo run --release --example nlp_streaming
+
+use etuner::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+
+    println!("-- fully supervised (Table IV shape) --");
+    for (name, tune, freeze) in [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("LazyTune", TunePolicyKind::LazyTune, FreezePolicyKind::None),
+        ("SimFreeze", TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ] {
+        let mut cfg = RunConfig::quickstart("bert", Benchmark::News20)
+            .with_policies(tune, freeze);
+        cfg.n_requests = 200;
+        let r = Simulation::new(&rt, cfg)?.run()?;
+        println!(
+            "  {name:<10} acc {:.2}%  time {:.1}min  energy {:.2}Wh",
+            r.avg_inference_accuracy * 100.0,
+            r.energy.total_s() / 60.0,
+            r.energy.total_wh(),
+        );
+    }
+
+    println!("-- semi-supervised CV (Table VI shape): 10% labels, mbv2/NC --");
+    for (name, tune, freeze) in [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ] {
+        let mut cfg = RunConfig::quickstart("mbv2", Benchmark::Nc)
+            .with_policies(tune, freeze);
+        cfg.labeled_fraction = Some(0.1);
+        cfg.n_requests = 200;
+        let r = Simulation::new(&rt, cfg)?.run()?;
+        println!(
+            "  {name:<10} acc {:.2}%  energy {:.2}Wh",
+            r.avg_inference_accuracy * 100.0,
+            r.energy.total_wh(),
+        );
+    }
+    Ok(())
+}

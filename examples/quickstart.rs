@@ -1,0 +1,44 @@
+//! Quickstart: deploy a model, run one continual-learning benchmark under
+//! ETuner (LazyTune + SimFreeze), and compare against immediate
+//! fine-tuning.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This exercises the full stack: the rust coordinator triggers fine-tuning
+//! rounds, every train/infer/CKA step executes an AOT-compiled JAX/Pallas
+//! artifact through PJRT, and costs are charged to the Jetson-scale device
+//! model.
+
+use etuner::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+
+    // Immediate fine-tuning baseline: a round per arriving batch.
+    let immediate = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+    // ETuner: lazy round merging + CKA-guided layer freezing.
+    let etuner = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+
+    println!("running immediate fine-tuning baseline ...");
+    let base = Simulation::new(&rt, immediate)?.run()?;
+    println!("  {}", base.summary());
+
+    println!("running ETuner ...");
+    let ours = Simulation::new(&rt, etuner)?.run()?;
+    println!("  {}", ours.summary());
+
+    let dt = 1.0 - ours.energy.total_s() / base.energy.total_s();
+    let de = 1.0 - ours.energy.total_j() / base.energy.total_j();
+    let da = (ours.avg_inference_accuracy - base.avg_inference_accuracy) * 100.0;
+    println!("\nETuner vs immediate fine-tuning:");
+    println!("  fine-tuning time   -{:.0}%", dt * 100.0);
+    println!("  energy             -{:.0}%", de * 100.0);
+    println!("  avg inference acc  {:+.2}%", da);
+    println!(
+        "  rounds {} -> {}  (delayed & merged)",
+        base.rounds, ours.rounds
+    );
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT compiler: lower every artifact to HLO *text* + emit the manifest.
+
+Run once at build time (``make artifacts``); the rust coordinator then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+touches python again.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate binds)
+rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs:
+    artifacts/<name>.hlo.txt        one per artifact (see DESIGN.md table)
+    artifacts/<model>_theta0.bin    raw little-endian f32 initial params
+    artifacts/manifest.json         everything rust needs: artifact names +
+                                    signatures, flat-theta tensor layout,
+                                    freeze-unit segments, paper-scale
+                                    per-unit cost anchors
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import cka as cka_kernel
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def shape(s, dtype=F32):
+    return jax.ShapeDtypeStruct(s, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale cost anchors (per freeze unit), carried into the manifest.
+#
+# The rust cost model charges time/energy as if the artifact were the real
+# model on the Jetson: per-image forward FLOPs and per-unit parameter bytes
+# are distributed over [embed, block_1..L, head].  Depth profiles follow the
+# real networks coarsely: stem/embedding ~5-8% of FLOPs, head ~1-2%, blocks
+# split the rest with later blocks slightly heavier (channel growth).
+# ---------------------------------------------------------------------------
+
+def paper_unit_costs(spec: M.ModelSpec):
+    L = spec.blocks
+    fwd_total = spec.paper_fwd_gflops * 1e9          # FLOPs per image fwd
+    bytes_total = spec.paper_params_mb * 1e6         # param bytes
+    embed_frac, head_frac = 0.07, 0.02
+    rest = 1.0 - embed_frac - head_frac
+    # later blocks heavier: weight i proportional to (1 + i/L)
+    ws = [1.0 + i / L for i in range(1, L + 1)]
+    wsum = sum(ws)
+    fracs = [embed_frac] + [rest * w / wsum for w in ws] + [head_frac]
+    return [
+        {"fwd_flops": fwd_total * f, "param_bytes": bytes_total * f}
+        for f in fracs
+    ]
+
+
+def model_manifest(spec: M.ModelSpec, lay: M.Layout, artifacts):
+    segs = lay.unit_segments()
+    head_w = lay.by_name("head.w")
+    head_b = lay.by_name("head.b")
+    return {
+        "d": spec.d, "h": spec.h, "blocks": spec.blocks,
+        "classes": spec.classes, "kind": spec.kind,
+        "units": spec.units,
+        "theta_len": lay.total,
+        "batch_train": M.BATCH_TRAIN,
+        "batch_infer": M.BATCH_INFER,
+        "batch_probe": M.BATCH_PROBE,
+        "unit_segments": [{"offset": o, "len": n} for (o, n) in segs],
+        "tensors": [
+            {"name": t.name, "shape": list(t.shape), "unit": t.unit,
+             "offset": t.offset}
+            for t in lay.tensors
+        ],
+        "head": {
+            "w_offset": head_w.offset, "w_shape": list(head_w.shape),
+            "b_offset": head_b.offset, "b_shape": list(head_b.shape),
+        },
+        "paper_units": paper_unit_costs(spec),
+        "artifacts": artifacts,
+    }
+
+
+def build_model(spec: M.ModelSpec, outdir, quant: bool, ssl: bool, emitted):
+    lay = M.layout(spec)
+    th = shape((lay.total,))
+    x_tr = shape((M.BATCH_TRAIN, spec.d))
+    y_tr = shape((M.BATCH_TRAIN,), I32)
+    x_inf = shape((M.BATCH_INFER, spec.d))
+    x_probe = shape((M.BATCH_PROBE, spec.d))
+    mask = shape((spec.units,))
+    lr = shape(())
+
+    arts = {"train": [], "train_q": []}
+
+    def emit(name, fn, *args):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = lower(fn, *args)
+        with open(path, "w") as f:
+            f.write(text)
+        emitted.append(name)
+        print(f"  {name}: {len(text)} chars")
+        return name
+
+    arts["infer"] = emit(f"{spec.name}_infer",
+                         M.infer_fn(spec, lay), th, x_inf)
+    arts["features"] = emit(f"{spec.name}_features",
+                            M.features_fn(spec, lay), th, x_probe)
+    for k in range(spec.units):  # k = 0..blocks+1 prefix-frozen units
+        arts["train"].append(
+            emit(f"{spec.name}_train_{k}",
+                 M.train_fn(spec, lay, k), th, x_tr, y_tr, mask, lr))
+    if quant:
+        for k in range(spec.units):
+            arts["train_q"].append(
+                emit(f"{spec.name}_train_q_{k}",
+                     M.train_fn(spec, lay, k, fake_quant=True),
+                     th, x_tr, y_tr, mask, lr))
+    if ssl:
+        slay = M.ssl_layout(spec)
+        phi = shape((slay.total,))
+        arts["ssl"] = emit(f"{spec.name}_ssl",
+                           M.ssl_fn(spec, lay, slay),
+                           th, phi, x_tr, x_tr, mask, lr)
+        arts["ssl_phi_len"] = slay.total
+
+    # deterministic initial parameters for the rust side
+    theta0 = M.init_theta(lay, jax.random.PRNGKey(17))
+    np.asarray(theta0, dtype="<f4").tofile(
+        os.path.join(outdir, f"{spec.name}_theta0.bin"))
+    if ssl:
+        slay = M.ssl_layout(spec)
+        phi0 = M.init_theta(slay, jax.random.PRNGKey(18))
+        np.asarray(phi0, dtype="<f4").tofile(
+            os.path.join(outdir, f"{spec.name}_phi0.bin"))
+
+    return model_manifest(spec, lay, arts)
+
+
+def build_cka(outdir, widths, emitted):
+    out = {}
+    for h in sorted(set(widths)):
+        name = f"cka_{h}"
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        xs = shape((M.BATCH_PROBE, h))
+        text = lower(lambda x, y: (cka_kernel.cka(x, y),), xs, xs)
+        with open(path, "w") as f:
+            f.write(text)
+        emitted.append(name)
+        print(f"  {name}: {len(text)} chars")
+        out[str(h)] = name
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--models", default="res50,mbv2,deit,bert")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = args.models.split(",")
+    emitted = []
+    manifest = {"version": 1, "models": {}, "cka": {}}
+    for spec in M.specs():
+        if spec.name not in wanted:
+            continue
+        print(f"[aot] {spec.name}")
+        quant = spec.name == "res50"           # Table VIII is res50-only
+        ssl = spec.name in ("res50", "mbv2", "deit")  # Table VI CV models
+        manifest["models"][spec.name] = build_model(
+            spec, args.out, quant, ssl, emitted)
+    manifest["cka"] = build_cka(
+        args.out, [s.h for s in M.specs() if s.name in wanted], emitted)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(emitted)} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the ETuner compute path.
+
+Every dense contraction in the deployed models routes through
+:func:`matmul.dense` (a tiled Pallas matmul with fused bias + activation
+epilogue), and SimFreeze's CKA probe routes through :func:`cka.cka` (a
+Pallas Gram-matrix kernel).  Pure-jnp oracles live in :mod:`ref` and the
+pytest/hypothesis suites assert allclose between the two.
+
+Kernels are lowered with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT client that the rust coordinator uses (real-TPU lowering would emit
+a Mosaic custom-call the CPU plugin cannot execute).  See
+DESIGN.md#hardware-adaptation for the GPU->TPU mapping rationale.
+"""
+
+from . import matmul, cka, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pallas CKA kernel — SimFreeze's similarity probe (paper Eq. 1).
+
+    CKA(X, Y) = ||Y^T X||_F^2 / (||X^T X||_F * ||Y^T Y||_F)
+
+X and Y are per-layer output feature maps (batch, features) from the model
+being tuned and the initial reference model, on the same probe batch.  The
+kernel computes the three Gram Frobenius norms in one pass: each grid step
+loads a feature-column tile of X and Y into VMEM, forms the (bf, F) partial
+cross/self products against the full feature panel, and accumulates their
+squared Frobenius norms into a 3-vector in SMEM-like scratch (here: the
+output ref, accumulated across sequential grid steps).
+
+The batch dimension (16 for the probe batch) is small; the feature dimension
+is the wide axis, so tiling is along features.  interpret=True for CPU-PJRT.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, xf_ref, o_ref):
+    """Grid step j: accumulate ||Y_j^T Xfull||_F^2, ||X_j^T Xfull||_F^2,
+    ||Y_j^T Yfull||_F^2 into o_ref[0..3).
+
+    ``x_ref/y_ref`` are (B, bf) column tiles; ``xf_ref`` carries the full
+    (B, F) X and Y panels stacked as (2, B, F) so each step can contract a
+    tile against the whole feature panel.  Because Frobenius norms decompose
+    over column blocks of the Gram matrix, summing tile-level squared norms
+    over the grid yields the exact full-matrix quantities.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xt = x_ref[...]          # (B, bf) tile of X
+    yt = y_ref[...]          # (B, bf) tile of Y
+    xf = xf_ref[0]           # (B, F) full X
+    yf = xf_ref[1]           # (B, F) full Y
+    # (bf, F) panels of the Gram matrices Y^T X, X^T X, Y^T Y.
+    cross = jnp.dot(yt.T, xf, preferred_element_type=jnp.float32)
+    selfx = jnp.dot(xt.T, xf, preferred_element_type=jnp.float32)
+    selfy = jnp.dot(yt.T, yf, preferred_element_type=jnp.float32)
+    o_ref[0] += jnp.sum(cross * cross)
+    o_ref[1] += jnp.sum(selfx * selfx)
+    o_ref[2] += jnp.sum(selfy * selfy)
+
+
+def _pick_block(dim, cap):
+    for cand in range(min(cap, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@partial(jax.jit, static_argnames=("bf",))
+def cka(x, y, bf=64):
+    """Linear CKA between feature maps ``x`` and ``y`` of shape (B, F)."""
+    assert x.shape == y.shape, (x.shape, y.shape)
+    b, f = x.shape
+    bf = _pick_block(f, bf)
+    stacked = jnp.stack([x, y])  # (2, B, F) — full panels for the kernel
+    sums = pl.pallas_call(
+        _gram_kernel,
+        grid=(f // bf,),
+        in_specs=[
+            pl.BlockSpec((b, bf), lambda j: (0, j)),
+            pl.BlockSpec((b, bf), lambda j: (0, j)),
+            pl.BlockSpec((2, b, f), lambda j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(x, y, stacked)
+    cross2, selfx2, selfy2 = sums[0], sums[1], sums[2]
+    denom = jnp.sqrt(selfx2) * jnp.sqrt(selfy2)
+    return cross2 / jnp.maximum(denom, 1e-12)

@@ -1,0 +1,138 @@
+"""Tiled Pallas dense kernel: ``act(x @ w + b)`` with a fused epilogue.
+
+TPU-style mapping of the paper's GPU training hot loop (DESIGN.md
+#hardware-adaptation):
+
+* the grid tiles the output over ``(M/bm, N/bn)`` program instances — the
+  role CUDA threadblocks play on the Jetson GPU;
+* each instance keeps an ``x`` row-panel ``(bm, K)`` and a ``w`` column-panel
+  ``(K, bn)`` resident in VMEM (the TPU scratchpad standing in for shared
+  memory) and feeds the MXU with a single ``(bm,K)x(K,bn)`` contraction in
+  fp32 — ``preferred_element_type`` pins the accumulator type;
+* bias add and the activation run in the epilogue while the tile is still in
+  VMEM, so the activation never round-trips to HBM (the paper's models pay
+  that trip on GPU between the conv and the ReLU).
+
+Training support: ``pallas_call`` has no automatic reverse-mode rule, so
+``dense`` carries a ``jax.custom_vjp`` whose backward is built from the same
+Pallas kernel — ``dz @ w^T`` and ``x^T @ dz`` are themselves tiled Pallas
+matmuls, and the activation derivative is applied elementwise (ReLU from the
+saved output mask; GELU by rematerializing the pre-activation with one extra
+kernel call, the usual remat-vs-residency trade).
+
+Block sizes default to 64x64: multiples of the 8x128 VPU lane shape at the
+paper's layer widths, and small enough that ``bm*K + K*bn + bm*bn`` floats
+stay well under the ~16 MiB VMEM budget for every layer in the four deployed
+models.  ``interpret=True`` everywhere: the artifacts must execute on the CPU
+PJRT client.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _epilogue(acc, b, activation):
+    acc = acc + b[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One (bm, bn) output tile: full-K MXU contraction + fused epilogue."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(acc, b_ref[...], activation)
+
+
+def _pick_block(dim, cap):
+    """Largest divisor of ``dim`` <= cap (the grid must tile exactly)."""
+    for cand in range(min(cap, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _dense_impl(x, w, b, activation, bm, bn):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        partial(_dense_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            # x row-panel: varies along grid axis 0 only, full K resident.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # w column-panel: varies along grid axis 1 only.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            # bias slice for this column tile.
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _matmul(a, b, bm=64, bn=64):
+    """Plain a @ b through the same kernel (zero bias, no activation)."""
+    zero_b = jnp.zeros((b.shape[1],), jnp.float32)
+    return _dense_impl(a, b, zero_b, "none", bm, bn)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def dense(x, w, b, activation="none", bm=64, bn=64):
+    """``act(x @ w + b)`` via the tiled Pallas kernel (differentiable).
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    """
+    return _dense_impl(x, w, b, activation, bm, bn)
+
+
+def _dense_fwd(x, w, b, activation, bm, bn):
+    out = _dense_impl(x, w, b, activation, bm, bn)
+    return out, (x, w, b, out)
+
+
+def _dense_bwd(activation, bm, bn, res, dout):
+    x, w, b, out = res
+    if activation == "relu":
+        dz = dout * (out > 0).astype(dout.dtype)
+    elif activation == "gelu":
+        # rematerialize the pre-activation (one extra kernel call) and push
+        # the cotangent through gelu elementwise.
+        z = _dense_impl(x, w, b, "none", bm, bn)
+        _, gelu_vjp = jax.vjp(jax.nn.gelu, z)
+        (dz,) = gelu_vjp(dout)
+    else:
+        dz = dout
+    dx = _matmul(dz, w.T, bm, bn)        # (M, K)
+    dw = _matmul(x.T, dz, bm, bn)        # (K, N)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def vmem_bytes(m, k, n, bm=64, bn=64):
+    """Estimated VMEM residency per program instance, bytes (f32).
+
+    Used by the structural perf audit (EXPERIMENTS.md §Perf L1) — interpret
+    mode has no real VMEM, so the budget check is analytic.
+    """
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return 4 * (bm * k + k * bn + bn + bm * bn)

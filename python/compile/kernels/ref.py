@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package has a reference here with identical semantics;
+``python/tests/test_kernels.py`` sweeps shapes/activations with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense(x, w, b, activation="none"):
+    """Reference for matmul.dense: act(x @ w + b) in plain jnp."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def cka(x, y):
+    """Reference for cka.cka: paper Eq. 1, linear CKA on (B, F) features."""
+    cross = jnp.linalg.norm(y.T @ x, "fro") ** 2
+    denom = jnp.linalg.norm(x.T @ x, "fro") * jnp.linalg.norm(y.T @ y, "fro")
+    return cross / jnp.maximum(denom, 1e-12)

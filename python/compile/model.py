@@ -1,0 +1,377 @@
+"""Layer-2: the deployed models' forward/backward in JAX, on Pallas kernels.
+
+The paper fine-tunes ResNet50 / MobileNetV2 / DeiT-tiny (CV) and BERT-base
+(NLP) on a Jetson Xavier NX.  Per DESIGN.md's substitution table we deploy
+scaled-down proxies with the same *freezing-relevant structure* — a stack of
+residual blocks between an embed layer and a classifier head — and carry each
+role's paper-scale FLOPs/bytes in the manifest so the rust cost model charges
+Jetson-scale time/energy:
+
+  =========  ======================================  ====  ===  =======
+  model      block kind                              H     L    classes
+  =========  ======================================  ====  ===  =======
+  res50      post-act residual ReLU MLP blocks       64    8    50
+  mbv2       inverted-bottleneck (narrow-wide)       48    6    50
+  deit       pre-LN GELU MLP blocks (ViT-style)      56    6    50
+  bert       pre-LN GELU MLP blocks                  64    4    20
+  =========  ======================================  ====  ===  =======
+
+Freeze units are ``[embed, block_1..block_L, head]`` (L+2 units).  Two
+freezing mechanisms mirror the paper's Figure 2 cases:
+
+* **prefix truncation** (Case 3): ``train_step`` is specialized per ``k`` —
+  a ``stop_gradient`` placed after unit ``k`` makes XLA dead-code-eliminate
+  the whole backward graph below it, a *real* compute saving in the artifact;
+* **lr mask** (Case 2): a per-unit multiplier zeroes the weight-update of
+  interior frozen units (weight-grad skipped on the device is charged by the
+  rust cost model; the artifact keeps one compiled shape per prefix).
+
+All parameters live in ONE flat f32 vector ``theta`` so the rust coordinator
+can hold model state as a single buffer, do CWR head surgery and RigL masking
+by manifest segment offsets, and call any artifact with the same layout.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+BATCH_TRAIN = 16   # paper: fixed to 16 to avoid OOM on the Jetson
+BATCH_INFER = 64   # inference-request batch (one request = one test draw)
+BATCH_PROBE = 16   # CKA probe batch (first training batch of the scenario)
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    unit: int          # freeze-unit index owning this tensor
+    offset: int = 0    # filled by Layout
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    d: int               # input feature dim
+    h: int               # hidden width
+    blocks: int          # residual blocks (freeze units 1..blocks)
+    classes: int
+    kind: str            # relu_res | bottleneck | preln_gelu
+    expansion: int       # bottleneck/MLP expansion factor
+    # paper-scale cost anchors (per image / sequence, forward, GFLOPs; MB)
+    paper_fwd_gflops: float = 4.1
+    paper_params_mb: float = 97.8
+
+    @property
+    def units(self) -> int:
+        return self.blocks + 2  # embed + blocks + head
+
+
+def specs() -> List[ModelSpec]:
+    return [
+        ModelSpec("res50", 128, 64, 8, 50, "relu_res", 1,
+                  paper_fwd_gflops=4.1, paper_params_mb=97.8),
+        ModelSpec("mbv2", 128, 48, 6, 50, "bottleneck", 2,
+                  paper_fwd_gflops=0.31, paper_params_mb=13.4),
+        ModelSpec("deit", 128, 56, 6, 50, "preln_gelu", 2,
+                  paper_fwd_gflops=1.26, paper_params_mb=21.8),
+        ModelSpec("bert", 128, 64, 4, 20, "preln_gelu", 2,
+                  paper_fwd_gflops=22.4, paper_params_mb=419.0),
+    ]
+
+
+def spec_by_name(name: str) -> ModelSpec:
+    for s in specs():
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Layout:
+    spec: ModelSpec
+    tensors: List[TensorSpec] = field(default_factory=list)
+    total: int = 0
+
+    def _add(self, name, shape, unit):
+        t = TensorSpec(name, tuple(shape), unit, self.total)
+        self.tensors.append(t)
+        self.total += t.size
+        return t
+
+    def by_name(self, name):
+        for t in self.tensors:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def unit_segments(self):
+        """[(offset, len)] per freeze unit (contiguous by construction)."""
+        segs = []
+        for u in range(self.spec.units):
+            ts = [t for t in self.tensors if t.unit == u]
+            lo = min(t.offset for t in ts)
+            hi = max(t.offset + t.size for t in ts)
+            segs.append((lo, hi - lo))
+        return segs
+
+
+def layout(spec: ModelSpec) -> Layout:
+    lay = Layout(spec)
+    h, d, e = spec.h, spec.d, spec.h * spec.expansion
+    lay._add("embed.w", (d, h), 0)
+    lay._add("embed.b", (h,), 0)
+    for i in range(1, spec.blocks + 1):
+        p = f"block{i}."
+        if spec.kind == "preln_gelu":
+            lay._add(p + "ln_s", (h,), i)
+            lay._add(p + "ln_b", (h,), i)
+        lay._add(p + "w1", (h, e), i)
+        lay._add(p + "b1", (e,), i)
+        lay._add(p + "w2", (e, h), i)
+        lay._add(p + "b2", (h,), i)
+    head_unit = spec.blocks + 1
+    lay._add("head.w", (h, spec.classes), head_unit)
+    lay._add("head.b", (spec.classes,), head_unit)
+    return lay
+
+
+def unflatten(lay: Layout, theta):
+    """Slice the flat vector into named arrays (static offsets -> free)."""
+    out = {}
+    for t in lay.tensors:
+        out[t.name] = theta[t.offset:t.offset + t.size].reshape(t.shape)
+    return out
+
+
+def init_theta(lay: Layout, key) -> jnp.ndarray:
+    """He/LeCun-style init, deterministic per (model, key).
+
+    Written to ``artifacts/<model>_theta0.bin`` by aot.py; the rust
+    coordinator loads it as the deployment-time initial model.
+    """
+    parts = []
+    for t in lay.tensors:
+        key, sub = jax.random.split(key)
+        if t.name.endswith((".b", ".b1", ".b2", ".ln_b")):
+            parts.append(jnp.zeros(t.size, jnp.float32))
+        elif t.name.endswith(".ln_s"):
+            parts.append(jnp.ones(t.size, jnp.float32))
+        elif t.name.endswith(".w2"):
+            # ReZero-style: residual branches start as identity so the
+            # freshly deployed model is numerically tame at any depth.
+            parts.append(jnp.zeros(t.size, jnp.float32))
+        else:
+            fan_in = t.shape[0]
+            std = (2.0 / fan_in) ** 0.5
+            parts.append(std * jax.random.normal(sub, (t.size,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block(spec: ModelSpec, p, i, hcur, fake_quant=False):
+    q = _fq if fake_quant else (lambda v: v)
+    pre = f"block{i}."
+    if spec.kind == "relu_res":
+        mid = matmul.dense(q(hcur), q(p[pre + "w1"]), p[pre + "b1"], "relu")
+        out = matmul.dense(q(mid), q(p[pre + "w2"]), p[pre + "b2"], "none")
+        return jnp.maximum(hcur + out, 0.0)
+    if spec.kind == "bottleneck":
+        mid = matmul.dense(q(hcur), q(p[pre + "w1"]), p[pre + "b1"], "relu")
+        out = matmul.dense(q(mid), q(p[pre + "w2"]), p[pre + "b2"], "none")
+        return hcur + out
+    if spec.kind == "preln_gelu":
+        mu = jnp.mean(hcur, axis=-1, keepdims=True)
+        var = jnp.var(hcur, axis=-1, keepdims=True)
+        ln = (hcur - mu) / jnp.sqrt(var + 1e-5)
+        ln = ln * p[pre + "ln_s"][None, :] + p[pre + "ln_b"][None, :]
+        mid = matmul.dense(q(ln), q(p[pre + "w1"]), p[pre + "b1"], "gelu")
+        out = matmul.dense(q(mid), q(p[pre + "w2"]), p[pre + "b2"], "none")
+        return hcur + out
+    raise ValueError(spec.kind)
+
+
+def _fq(v, bits=8):
+    """Fake-quantize (symmetric, per-tensor) with a straight-through grad.
+
+    Simulated quantization-aware training as in the paper's Table VIII
+    (weights + activations; the STE makes backward flow as fp32)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8) / qmax
+    q = jnp.round(v / scale).clip(-qmax, qmax) * scale
+    return v + jax.lax.stop_gradient(q - v)
+
+
+def forward(spec: ModelSpec, lay: Layout, theta, x,
+            stop_after: int = -1, collect: bool = False, fake_quant=False):
+    """Run the model.
+
+    stop_after=k inserts stop_gradient after freeze unit k (k=-1: none) —
+    the Case-3 backprop truncation.  collect=True returns per-unit features
+    (embed output + each block output) for the CKA probe.
+    """
+    p = unflatten(lay, theta)
+    q = _fq if fake_quant else (lambda v: v)
+    feats = []
+    h = matmul.dense(q(x), q(p["embed.w"]), p["embed.b"], "relu")
+    if collect:
+        feats.append(h)
+    if stop_after >= 0:
+        h = jax.lax.stop_gradient(h)
+    for i in range(1, spec.blocks + 1):
+        h = _block(spec, p, i, h, fake_quant)
+        if collect:
+            feats.append(h)
+        if stop_after >= i:
+            h = jax.lax.stop_gradient(h)
+    logits = matmul.dense(q(h), q(p["head.w"]), p["head.b"], "none")
+    if collect:
+        return logits, jnp.stack(feats)  # (blocks+1, B, H)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Artifact entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def infer_fn(spec: ModelSpec, lay: Layout):
+    def infer(theta, x):
+        return (forward(spec, lay, theta, x),)
+    return infer
+
+
+def features_fn(spec: ModelSpec, lay: Layout):
+    def features(theta, x):
+        _, feats = forward(spec, lay, theta, x, collect=True)
+        return (feats,)
+    return features
+
+
+def _lr_mask_vector(lay: Layout, lr_mask):
+    """Expand the per-unit mask (units,) to a theta-length multiplier."""
+    segs = []
+    for t in lay.tensors:
+        segs.append(jnp.broadcast_to(lr_mask[t.unit], (t.size,)))
+    return jnp.concatenate(segs)
+
+
+def _ce_loss(spec, lay, theta, x, y, stop_after, fake_quant=False):
+    logits = forward(spec, lay, theta, x, stop_after=stop_after,
+                     fake_quant=fake_quant)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+MAX_GRAD_NORM = 5.0
+
+
+def _clip_global(g):
+    """Clip-by-global-norm — the edge fine-tuning stream is bursty and
+    correlated (whole batches of one class under one scenario transform),
+    which raw SGD at a usable lr cannot survive; clipping is standard in
+    the on-device training stacks the paper builds on."""
+    norm = jnp.sqrt(jnp.sum(g * g))
+    return g * jnp.minimum(1.0, MAX_GRAD_NORM / jnp.maximum(norm, 1e-12))
+
+
+def train_fn(spec: ModelSpec, lay: Layout, k: int, fake_quant=False):
+    """SGD step with the first ``k`` freeze units prefix-frozen.
+
+    k=0 trains everything; k=j stops backprop after unit j-1's output (i.e.
+    units 0..j-1 frozen).  Signature:
+        (theta, x[16,D], y[16] i32, lr_mask[units], lr[]) -> (theta', loss)
+    """
+    stop_after = k - 1  # stop_gradient placed after unit (k-1)
+
+    def step(theta, x, y, lr_mask, lr):
+        loss, g = jax.value_and_grad(
+            lambda th: _ce_loss(spec, lay, th, x, y, stop_after, fake_quant)
+        )(theta)
+        # mask BEFORE clipping so Case 2 (lr-mask) and Case 3 (prefix
+        # truncation) freezing produce identical surviving updates.
+        g = _clip_global(g * _lr_mask_vector(lay, lr_mask))
+        theta_new = theta - lr * g
+        return theta_new, loss
+
+    return step
+
+
+# --- SimSiam semi-supervised step (paper §IV-C) ----------------------------
+
+SSL_PROJ = "proj"
+
+
+def ssl_layout(spec: ModelSpec) -> Layout:
+    """Projector (H->H) + predictor (H->H) params, separate flat vector."""
+    lay = Layout(spec)
+    h = spec.h
+    lay._add("proj.w", (h, h), 0)
+    lay._add("proj.b", (h,), 0)
+    lay._add("pred.w", (h, h), 1)
+    lay._add("pred.b", (h,), 1)
+    return lay
+
+
+def ssl_fn(spec: ModelSpec, lay: Layout, slay: Layout):
+    """One SimSiam step on two augmented views.
+
+        (theta, phi, x1[16,D], x2[16,D], lr_mask[units], lr[])
+            -> (theta', phi', loss)
+
+    loss = -(cos(p1, sg(z2)) + cos(p2, sg(z1))) / 2, z = proj(backbone(x)),
+    p = pred(z).  Backbone freezing (SimFreeze) applies through lr_mask;
+    the projector/predictor always train.
+    """
+    def backbone(theta, x):
+        p = unflatten(lay, theta)
+        h = matmul.dense(x, p["embed.w"], p["embed.b"], "relu")
+        for i in range(1, spec.blocks + 1):
+            h = _block(spec, p, i, h)
+        return h
+
+    def cos(a, b):
+        a = a / jnp.maximum(jnp.linalg.norm(a, axis=-1, keepdims=True), 1e-8)
+        b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-8)
+        return jnp.mean(jnp.sum(a * b, axis=-1))
+
+    def loss_fn(theta, phi, x1, x2):
+        sp = unflatten(slay, phi)
+        z1 = matmul.dense(backbone(theta, x1), sp["proj.w"], sp["proj.b"], "none")
+        z2 = matmul.dense(backbone(theta, x2), sp["proj.w"], sp["proj.b"], "none")
+        p1 = matmul.dense(z1, sp["pred.w"], sp["pred.b"], "none")
+        p2 = matmul.dense(z2, sp["pred.w"], sp["pred.b"], "none")
+        sg = jax.lax.stop_gradient
+        return -(cos(p1, sg(z2)) + cos(p2, sg(z1))) / 2.0
+
+    def step(theta, phi, x1, x2, lr_mask, lr):
+        loss, (gt, gp) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            theta, phi, x1, x2)
+        gt = _clip_global(gt * _lr_mask_vector(lay, lr_mask))
+        gp = _clip_global(gp)
+        theta_new = theta - lr * gt
+        phi_new = phi - lr * gp
+        return theta_new, phi_new, loss
+
+    return step

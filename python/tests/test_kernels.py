@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and activations; every property asserts allclose
+against ``kernels.ref``.  These tests are the build-time correctness bar for
+everything the rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cka, matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 17, 32, 48, 64, 96, 128])
+ACT = st.sampled_from(matmul.ACTIVATIONS)
+
+
+def _rng(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, act=ACT, seed=st.integers(0, 2**16))
+def test_dense_matches_ref(m, k, n, act, seed):
+    x = _rng(seed, (m, k))
+    w = _rng(seed + 1, (k, n))
+    b = _rng(seed + 2, (n,))
+    got = matmul.dense(x, w, b, act)
+    want = ref.dense(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([4, 16, 32]), k=st.sampled_from([8, 48, 64]),
+       n=st.sampled_from([8, 50, 96]), act=ACT,
+       seed=st.integers(0, 2**16))
+def test_dense_grads_match_ref(m, k, n, act, seed):
+    """custom_vjp backward (Pallas) == autodiff through the jnp oracle."""
+    x = _rng(seed, (m, k))
+    w = _rng(seed + 1, (k, n))
+    b = _rng(seed + 2, (n,))
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(matmul.dense(x, w, b, act) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.dense(x, w, b, act) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-4)
+
+
+def test_dense_block_cap_does_not_change_result():
+    """Tiling is value-invariant: different block caps, same numbers."""
+    x, w, b = _rng(0, (32, 64)), _rng(1, (64, 96)), _rng(2, (96,))
+    base = matmul.dense(x, w, b, "relu", bm=64, bn=64)
+    for bm, bn in [(8, 8), (16, 96), (32, 1)]:
+        # tiling changes fp32 summation order; allow rounding-level drift
+        np.testing.assert_allclose(
+            matmul.dense(x, w, b, "relu", bm=bm, bn=bn), base,
+            rtol=1e-4, atol=1e-5)
+
+
+def test_dense_rejects_bad_activation():
+    x, w, b = _rng(0, (4, 4)), _rng(1, (4, 4)), _rng(2, (4,))
+    with pytest.raises(ValueError):
+        matmul.dense(x, w, b, "swish")
+
+
+def test_vmem_budget_all_model_layers():
+    """Structural perf check: every deployed layer's tile set fits VMEM."""
+    from compile import model as M
+    budget = 2 * 1024 * 1024  # 2 MiB per-instance target (16 MiB VMEM / 8)
+    for spec in M.specs():
+        e = spec.h * spec.expansion
+        shapes = [(M.BATCH_TRAIN, spec.d, spec.h),
+                  (M.BATCH_TRAIN, spec.h, e),
+                  (M.BATCH_TRAIN, e, spec.h),
+                  (M.BATCH_INFER, spec.h, spec.classes)]
+        for m, k, n in shapes:
+            assert matmul.vmem_bytes(m, k, n) <= budget, (spec.name, m, k, n)
+
+
+# ---------------------------------------------------------------------------
+# CKA kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from([4, 8, 16]), f=st.sampled_from([8, 16, 48, 56, 64]),
+       bf=st.sampled_from([8, 16, 64]), seed=st.integers(0, 2**16))
+def test_cka_matches_ref(b, f, bf, seed):
+    x = _rng(seed, (b, f))
+    y = _rng(seed + 1, (b, f))
+    got = cka.cka(x, y, bf=bf)
+    want = ref.cka(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cka_identity_is_one():
+    x = _rng(7, (16, 64))
+    assert abs(float(cka.cka(x, x)) - 1.0) < 1e-5
+
+
+def test_cka_symmetric():
+    x, y = _rng(1, (16, 48)), _rng(2, (16, 48))
+    assert abs(float(cka.cka(x, y)) - float(cka.cka(y, x))) < 1e-5
+
+
+def test_cka_bounded_unit_interval():
+    for seed in range(5):
+        x, y = _rng(seed, (16, 56)), _rng(seed + 100, (16, 56))
+        v = float(cka.cka(x, y))
+        assert -1e-6 <= v <= 1.0 + 1e-6
+
+
+def test_cka_invariant_to_orthogonal_rotation():
+    """Linear CKA is invariant to orthogonal transforms of features."""
+    x, y = _rng(1, (16, 32)), _rng(2, (16, 32))
+    q, _ = np.linalg.qr(np.asarray(_rng(3, (32, 32))))
+    base = float(cka.cka(x, y))
+    rot = float(cka.cka(x @ jnp.asarray(q), y))
+    assert abs(base - rot) < 1e-4

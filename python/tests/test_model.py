@@ -1,0 +1,167 @@
+"""L2 correctness: model forward/backward, freeze semantics, SSL, QAT."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPECS = M.specs()
+
+
+def _data(spec, seed=0, batch=M.BATCH_TRAIN):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (batch, spec.d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (batch,), 0,
+                           spec.classes)
+    return x, y
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_layout_is_contiguous_and_complete(spec):
+    lay = M.layout(spec)
+    offset = 0
+    for t in lay.tensors:
+        assert t.offset == offset, t.name
+        offset += t.size
+    assert lay.total == offset
+    segs = lay.unit_segments()
+    assert len(segs) == spec.units
+    assert segs[0][0] == 0
+    assert segs[-1][0] + segs[-1][1] == lay.total
+    # segments are contiguous and ordered
+    for (o1, l1), (o2, _) in zip(segs, segs[1:]):
+        assert o1 + l1 == o2
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_forward_shapes(spec):
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(0))
+    x, _ = _data(spec)
+    logits = M.forward(spec, lay, th, x)
+    assert logits.shape == (M.BATCH_TRAIN, spec.classes)
+    logits2, feats = M.forward(spec, lay, th, x, collect=True)
+    np.testing.assert_allclose(logits, logits2, rtol=1e-6)
+    assert feats.shape == (spec.blocks + 1, M.BATCH_TRAIN, spec.h)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_train_step_reduces_loss(spec):
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(1))
+    x, y = _data(spec, seed=3)
+    step = M.train_fn(spec, lay, 0)
+    mask = jnp.ones((spec.units,))
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(8):
+        th, loss = step(th, x, y, mask, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+@pytest.mark.parametrize("k", [1, 2])
+def test_prefix_freeze_keeps_prefix_constant(spec, k):
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(2))
+    x, y = _data(spec, seed=5)
+    step = M.train_fn(spec, lay, k)
+    mask = jnp.ones((spec.units,))
+    th2, _ = step(th, x, y, mask, jnp.float32(0.1))
+    segs = lay.unit_segments()
+    for u, (o, n) in enumerate(segs):
+        changed = bool(jnp.any(th2[o:o + n] != th[o:o + n]))
+        if u < k:
+            assert not changed, f"frozen unit {u} changed"
+        else:
+            assert changed, f"trainable unit {u} did not change"
+
+
+def test_lr_mask_freezes_interior_unit():
+    spec = M.spec_by_name("mbv2")
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(4))
+    x, y = _data(spec, seed=7)
+    step = M.train_fn(spec, lay, 0)
+    mask = jnp.ones((spec.units,)).at[3].set(0.0)
+    th2, _ = step(th, x, y, mask, jnp.float32(0.1))
+    segs = lay.unit_segments()
+    o, n = segs[3]
+    assert not bool(jnp.any(th2[o:o + n] != th[o:o + n]))
+    o, n = segs[2]
+    assert bool(jnp.any(th2[o:o + n] != th[o:o + n]))
+
+
+def test_prefix_freeze_equals_mask_freeze_numerically():
+    """Case 3 (stop_gradient) and Case 2 (lr mask) must agree on the
+    surviving updates when the same prefix is frozen."""
+    spec = M.spec_by_name("mbv2")
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(6))
+    x, y = _data(spec, seed=11)
+    lr = jnp.float32(0.05)
+    ones = jnp.ones((spec.units,))
+    mask = ones.at[0].set(0.0).at[1].set(0.0)
+    th_prefix, _ = M.train_fn(spec, lay, 2)(th, x, y, ones, lr)
+    th_mask, _ = M.train_fn(spec, lay, 0)(th, x, y, mask, lr)
+    np.testing.assert_allclose(th_prefix, th_mask, rtol=2e-4, atol=2e-5)
+
+
+def test_quant_train_step_runs_and_learns():
+    spec = M.spec_by_name("res50")
+    lay = M.layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(8))
+    x, y = _data(spec, seed=13)
+    step = M.train_fn(spec, lay, 0, fake_quant=True)
+    mask = jnp.ones((spec.units,))
+    losses = []
+    for _ in range(6):
+        th, loss = step(th, x, y, mask, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_fake_quant_quantizes_forward():
+    v = jnp.linspace(-1.0, 1.0, 1000)
+    q = M._fq(v)
+    # at most 255 distinct levels for 8-bit symmetric quantization
+    assert len(np.unique(np.asarray(q))) <= 255
+    # straight-through: d/dv sum(q^2) = 2*q (the STE passes the cotangent
+    # through the rounding unchanged)
+    g = jax.grad(lambda v: jnp.sum(M._fq(v) ** 2))(v)
+    np.testing.assert_allclose(g, 2 * q, rtol=1e-5, atol=1e-6)
+
+
+def test_ssl_step_improves_view_agreement():
+    spec = M.spec_by_name("mbv2")
+    lay = M.layout(spec)
+    slay = M.ssl_layout(spec)
+    th = M.init_theta(lay, jax.random.PRNGKey(9))
+    phi = M.init_theta(slay, jax.random.PRNGKey(10))
+    x, _ = _data(spec, seed=17)
+    key = jax.random.PRNGKey(21)
+    x1 = x + 0.1 * jax.random.normal(key, x.shape)
+    x2 = x * 1.05
+    step = M.ssl_fn(spec, lay, slay)
+    mask = jnp.ones((spec.units,))
+    losses = []
+    for _ in range(6):
+        th, phi, loss = step(th, phi, x1, x2, mask, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert losses[-1] >= -1.0 - 1e-5  # negative cosine is bounded below
+
+
+def test_init_theta_deterministic_and_rezero():
+    spec = M.spec_by_name("deit")
+    lay = M.layout(spec)
+    a = M.init_theta(lay, jax.random.PRNGKey(17))
+    b = M.init_theta(lay, jax.random.PRNGKey(17))
+    np.testing.assert_array_equal(a, b)
+    w2 = lay.by_name("block1.w2")
+    assert not bool(jnp.any(a[w2.offset:w2.offset + w2.size] != 0.0))

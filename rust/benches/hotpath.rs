@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks (dependency-free harness; criterion is not
+//! available offline).  These are the §Perf L3 numbers in EXPERIMENTS.md:
+//!
+//!   * train-step latency          (PJRT execute + θ marshalling)
+//!   * inference latency           (the request-path cost)
+//!   * CKA probe                   (SimFreeze's periodic overhead)
+//!   * θ literal marshalling alone (host-side copy cost)
+//!   * coordinator-only components (NNLS fit, OOD observe, stream gen)
+//!
+//! Run: `cargo bench --bench hotpath` (artifacts required).
+
+use etuner::coordinator::{curve, EnergyOod};
+use etuner::cost::flops::FreezeState;
+use etuner::data::arrival::ArrivalKind;
+use etuner::data::benchmarks::Benchmark;
+use etuner::data::stream::Stream;
+use etuner::model::ModelSession;
+use etuner::rng::Pcg32;
+use etuner::runtime::{Runtime, TensorF32};
+use etuner::testkit::{self, bench};
+
+fn main() -> anyhow::Result<()> {
+    if !testkit::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::load(testkit::artifacts_dir())?;
+    println!("{:<38} {:>9} {:>9} {:>9}", "benchmark", "mean_ms", "min_ms", "max_ms");
+    let report = |name: &str, (mean, min, max): (f64, f64, f64)| {
+        println!("{name:<38} {mean:>9.3} {min:>9.3} {max:>9.3}");
+    };
+
+    let mut rng = Pcg32::new(42, 1);
+    for model in ["res50", "mbv2", "deit", "bert"] {
+        let sess = ModelSession::new(&rt, model)?;
+        let mut p = sess.theta0()?;
+        let d = sess.m.d;
+        let x: Vec<f32> =
+            (0..sess.m.batch_train * d).map(|_| rng.normal()).collect();
+        let y: Vec<i32> =
+            (0..sess.m.batch_train).map(|_| (rng.next_u32() % 4) as i32).collect();
+        let fs = FreezeState::none(sess.m.units);
+        report(
+            &format!("{model}: train_step (k=0)"),
+            bench(3, 20, || {
+                sess.train_step(&mut p, &x, &y, &fs).unwrap();
+            }),
+        );
+        // prefix-truncated variant: real backprop saving in the artifact
+        let mut fs_k = FreezeState::none(sess.m.units);
+        for u in 0..sess.m.units - 2 {
+            fs_k.frozen[u] = true;
+        }
+        report(
+            &format!("{model}: train_step (k=max)"),
+            bench(3, 20, || {
+                sess.train_step(&mut p, &x, &y, &fs_k).unwrap();
+            }),
+        );
+        let xi: Vec<f32> =
+            (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
+        report(
+            &format!("{model}: infer (batch {})", sess.m.batch_infer),
+            bench(3, 20, || {
+                sess.infer(&p, &xi).unwrap();
+            }),
+        );
+    }
+
+    // SimFreeze probe: features + per-layer CKA
+    let sess = ModelSession::new(&rt, "res50")?;
+    let p = sess.theta0()?;
+    let probe: Vec<f32> = (0..sess.m.batch_probe * sess.m.d)
+        .map(|_| rng.normal())
+        .collect();
+    let feats = sess.features(&p, &probe)?;
+    report(
+        "res50: features probe",
+        bench(3, 20, || {
+            sess.features(&p, &probe).unwrap();
+        }),
+    );
+    report(
+        "res50: cka one layer (pallas)",
+        bench(3, 20, || {
+            sess.cka_layer(&feats, &feats, 4).unwrap();
+        }),
+    );
+
+    // θ marshalling alone (no execute): host->literal->host
+    let theta = p.theta.clone();
+    report(
+        "theta literal roundtrip (res50)",
+        bench(3, 50, || {
+            let t = TensorF32::new(vec![theta.len()], theta.clone());
+            let lit = t.to_literal().unwrap();
+            let _ = TensorF32::from_literal(lit).unwrap();
+        }),
+    );
+
+    // coordinator-only components
+    let pts: Vec<(f64, f64)> =
+        (1..40).map(|k| (k as f64, 0.8 - 0.5 / k as f64)).collect();
+    report(
+        "nnls curve fit (40 points)",
+        bench(10, 200, || {
+            let _ = curve::fit(&pts);
+        }),
+    );
+    let mut ood = EnergyOod::new();
+    let mut i = 0u64;
+    report(
+        "ood observe",
+        bench(10, 200, || {
+            for _ in 0..100 {
+                i += 1;
+                ood.observe(-8.0 + (i % 7) as f64 * 0.05);
+            }
+        }),
+    );
+    report(
+        "stream generate (NIC391, 500 reqs)",
+        bench(2, 10, || {
+            let _ = Stream::generate(
+                Benchmark::Nic391,
+                500,
+                ArrivalKind::Poisson,
+                ArrivalKind::Poisson,
+                7,
+            );
+        }),
+    );
+    Ok(())
+}

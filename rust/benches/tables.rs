@@ -1,0 +1,37 @@
+//! End-to-end table/figure regeneration — one harness per paper artifact
+//! (DESIGN.md experiment index).  This is the `cargo bench` entry the
+//! Makefile's `bench` target runs; it executes the *fast* profile (1 seed,
+//! reduced request count) so a full sweep finishes on a laptop-class CPU.
+//! For paper-grade numbers run `etuner repro all --seeds 1,2,3,4,5`.
+//!
+//! Set `ETUNER_BENCH_FULL=1` for the full default profile.
+
+use etuner::repro::experiments::{self, ReproOpts};
+use etuner::runtime::Runtime;
+use etuner::testkit;
+
+fn main() -> anyhow::Result<()> {
+    if !testkit::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return Ok(());
+    }
+    let full = std::env::var_os("ETUNER_BENCH_FULL").is_some();
+    let opts = ReproOpts {
+        seeds: if full { vec![1, 2] } else { vec![1] },
+        n_requests: if full { 200 } else { 120 },
+        results_dir: "results".into(),
+    };
+    let rt = Runtime::load(testkit::artifacts_dir())?;
+    let t0 = std::time::Instant::now();
+    for (id, desc) in experiments::list() {
+        if id == "fig9" || id == "tab2" || id == "fig10" {
+            continue; // emitted together with fig8 / tab3
+        }
+        println!("\n##### {id}: {desc}");
+        let t = std::time::Instant::now();
+        experiments::run_experiment(&rt, id, &opts)?;
+        println!("##### {id} done in {:.1}s", t.elapsed().as_secs_f64());
+    }
+    println!("\nall tables/figures regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Egeria (Wang et al., EuroSys'23 [88]): knowledge-guided layer freezing
+//! driven by similarity against a reference model — like SimFreeze — but
+//! with the two restrictions the paper's §V-C calls out and exploits:
+//!
+//! 1. **module granularity** — layers are assessed in blocks of two
+//!    ("modules"), so a converged layer inside a non-converged module keeps
+//!    training;
+//! 2. **strictly front-to-back** — module `i` may only freeze if every
+//!    module before it is already frozen, so late layers that converge
+//!    early (residual networks, paper Fig. 5) are over-trained.
+
+use anyhow::Result;
+
+use crate::coordinator::policy::FreezePolicy;
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+use crate::runtime::artifact::ModelManifest;
+use crate::runtime::exec::TensorF32;
+
+/// Module size in freeze units (Egeria freezes in blocks).
+const MODULE: usize = 2;
+
+pub struct Egeria {
+    state: FreezeState,
+    ref_theta: Vec<f32>,
+    probe: Option<Vec<f32>>,
+    ref_feats: Option<TensorF32>,
+    last_cka: Vec<Option<f32>>,
+    interval: u64,
+    since: u64,
+    th: f64,
+}
+
+impl Egeria {
+    pub fn new(m: &ModelManifest, ref_theta: Vec<f32>, interval: u64) -> Egeria {
+        Egeria {
+            state: FreezeState::none(m.units),
+            ref_theta,
+            probe: None,
+            ref_feats: None,
+            last_cka: vec![None; m.units - 1],
+            interval,
+            since: 0,
+            th: 0.01,
+        }
+    }
+
+    fn feature_layers(&self) -> usize {
+        self.state.units() - 1
+    }
+
+    /// The next candidate module: the first unfrozen one (front-to-back).
+    fn next_module(&self) -> Option<(usize, usize)> {
+        let fl = self.feature_layers();
+        let mut u = 0;
+        while u < fl {
+            let hi = (u + MODULE).min(fl);
+            if (u..hi).any(|l| !self.state.frozen[l]) {
+                return Some((u, hi));
+            }
+            u = hi;
+        }
+        None
+    }
+}
+
+impl FreezePolicy for Egeria {
+    fn name(&self) -> &'static str {
+        "Egeria"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.state
+    }
+
+    fn on_scenario_probe(
+        &mut self,
+        sess: &ModelSession,
+        _params: &Params,
+        probe: &[f32],
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        let ref_params = Params { theta: self.ref_theta.clone() };
+        self.ref_feats = Some(sess.features(&ref_params, probe)?);
+        self.probe = Some(probe.to_vec());
+        // Egeria has no unfreezing path: on scenario change it keeps its
+        // plan and relies on the reference snapshot refresh.
+        self.last_cka.iter_mut().for_each(|c| *c = None);
+        Ok(())
+    }
+
+    fn after_iteration(
+        &mut self,
+        sess: &ModelSession,
+        params: &mut Params,
+        book: &mut CostBook,
+    ) -> Result<()> {
+        self.since += 1;
+        if self.since < self.interval || self.probe.is_none() {
+            return Ok(());
+        }
+        self.since = 0;
+        let Some((lo, hi)) = self.next_module() else {
+            return Ok(());
+        };
+        book.charge_cka_probe(&sess.m, hi - lo);
+        let feats = sess.features(params, self.probe.as_ref().unwrap())?;
+        let ref_feats = self.ref_feats.as_ref().unwrap();
+        // whole-module test: every layer in the candidate module must be
+        // stable for the module to freeze.
+        let mut all_stable = true;
+        for l in lo..hi {
+            let cka = sess.cka_layer(&feats, ref_feats, l)?;
+            if let Some(prev) = self.last_cka[l] {
+                let var = ((cka - prev) / prev.abs().max(1e-6)).abs() as f64;
+                if var > self.th {
+                    all_stable = false;
+                }
+            } else {
+                all_stable = false;
+            }
+            self.last_cka[l] = Some(cka);
+        }
+        if all_stable {
+            for l in lo..hi {
+                self.state.frozen[l] = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment,
+    };
+
+    fn toy(units: usize) -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 4,
+            h: 4,
+            blocks: units - 2,
+            classes: 3,
+            units,
+            kind: "relu_res".into(),
+            theta_len: 10,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![Segment { offset: 0, len: 1 }; units],
+            tensors: vec![],
+            head: HeadInfo { w_offset: 0, w_shape: [4, 3], b_offset: 0, classes: 3 },
+            paper_units: (0..units)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn next_module_is_front_to_back() {
+        let m = toy(6); // 5 feature layers, modules [0,2) [2,4) [4,5)
+        let mut e = Egeria::new(&m, vec![], 10);
+        assert_eq!(e.next_module(), Some((0, 2)));
+        e.state.frozen[0] = true;
+        e.state.frozen[1] = true;
+        assert_eq!(e.next_module(), Some((2, 4)));
+        for l in 2..5 {
+            e.state.frozen[l] = true;
+        }
+        assert_eq!(e.next_module(), None);
+    }
+
+    #[test]
+    fn partially_frozen_module_is_still_the_candidate() {
+        let m = toy(6);
+        let mut e = Egeria::new(&m, vec![], 10);
+        e.state.frozen[1] = true; // interior layer frozen out of order
+        assert_eq!(e.next_module(), Some((0, 2)));
+    }
+}

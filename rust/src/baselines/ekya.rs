@@ -1,0 +1,171 @@
+//! Ekya (Bhardwaj et al., NSDI'22 [12]): continuous-learning scheduler that
+//! picks training configurations (here: how many leading units to freeze)
+//! by **trial-and-error microprofiling** — at each scenario it runs a short
+//! trial with every candidate configuration, observes validation accuracy,
+//! and commits to the best for the rest of the scenario.  The trials
+//! themselves are the inefficiency the paper's §V-C points at: a chunk of
+//! each scenario's data is spent training under configurations that get
+//! discarded.
+
+use anyhow::Result;
+
+use crate::coordinator::policy::FreezePolicy;
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+use crate::runtime::artifact::ModelManifest;
+
+/// Rounds of trial per candidate configuration.
+const TRIAL_ROUNDS: usize = 2;
+
+pub struct Ekya {
+    state: FreezeState,
+    candidates: Vec<usize>, // prefix-freeze depths to microprofile
+    /// trial bookkeeping: (candidate idx, rounds seen, best-so-far).
+    trial: Option<TrialState>,
+}
+
+struct TrialState {
+    idx: usize,
+    rounds_in_trial: usize,
+    results: Vec<f64>,
+}
+
+impl Ekya {
+    pub fn new(m: &ModelManifest) -> Ekya {
+        let u = m.units;
+        // candidate prefixes: 0, ¼, ½, ¾ of the feature units.
+        let fl = u - 1;
+        let mut candidates = vec![0, fl / 4, fl / 2, (3 * fl) / 4];
+        candidates.dedup();
+        Ekya {
+            state: FreezeState::none(u),
+            candidates,
+            trial: None,
+        }
+    }
+
+    fn set_prefix(&mut self, k: usize) {
+        for (i, f) in self.state.frozen.iter_mut().enumerate() {
+            *f = i < k;
+        }
+    }
+
+    pub fn profiling(&self) -> bool {
+        self.trial.is_some()
+    }
+}
+
+impl FreezePolicy for Ekya {
+    fn name(&self) -> &'static str {
+        "Ekya"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.state
+    }
+
+    fn on_scenario_probe(
+        &mut self,
+        _sess: &ModelSession,
+        _params: &Params,
+        _probe: &[f32],
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        // new scenario: restart microprofiling from the first candidate.
+        self.trial = Some(TrialState {
+            idx: 0,
+            rounds_in_trial: 0,
+            results: vec![],
+        });
+        let k = self.candidates[0];
+        self.set_prefix(k);
+        Ok(())
+    }
+
+    fn on_round_end(
+        &mut self,
+        sess: &ModelSession,
+        _params: &mut Params,
+        val_acc: f64,
+        book: &mut CostBook,
+    ) -> Result<()> {
+        let Some(trial) = &mut self.trial else {
+            return Ok(());
+        };
+        trial.rounds_in_trial += 1;
+        if trial.rounds_in_trial < TRIAL_ROUNDS {
+            return Ok(());
+        }
+        // trial for this candidate done
+        trial.results.push(val_acc);
+        trial.rounds_in_trial = 0;
+        trial.idx += 1;
+        // microprofiling bookkeeping cost (thumbnail evaluation)
+        book.charge_validation(&sess.m, sess.m.batch_infer);
+        if trial.idx < self.candidates.len() {
+            let k = self.candidates[trial.idx];
+            self.set_prefix(k);
+        } else {
+            // commit to the best configuration for the rest of the scenario
+            let best = trial
+                .results
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let k = self.candidates[best];
+            self.set_prefix(k);
+            self.trial = None;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment,
+    };
+
+    fn toy(units: usize) -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 4,
+            h: 4,
+            blocks: units - 2,
+            classes: 3,
+            units,
+            kind: "relu_res".into(),
+            theta_len: 10,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![Segment { offset: 0, len: 1 }; units],
+            tensors: vec![],
+            head: HeadInfo { w_offset: 0, w_shape: [4, 3], b_offset: 0, classes: 3 },
+            paper_units: (0..units)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn candidates_cover_increasing_depths() {
+        let e = Ekya::new(&toy(10)); // 9 feature layers
+        assert_eq!(e.candidates, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn set_prefix_freezes_exactly_k() {
+        let mut e = Ekya::new(&toy(6));
+        e.set_prefix(3);
+        assert_eq!(e.state.frozen_prefix(), 3);
+        assert_eq!(e.state.trainable_count(), 3);
+        e.set_prefix(0);
+        assert_eq!(e.state.frozen_prefix(), 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! SOTA efficient-training baselines the paper compares against in
+//! Table V.  All four are implemented for real against the same
+//! [`crate::coordinator::policy::FreezePolicy`] surface, and — as the
+//! paper does for fairness — every baseline is run *with* LazyTune's
+//! inter-tuning optimization integrated.
+//!
+//! | baseline | mechanism (our faithful scale-down)                        |
+//! |----------|------------------------------------------------------------|
+//! | Egeria [88]  | reference-model similarity at *module* granularity, frozen strictly front-to-back |
+//! | SlimFit [9]  | freeze layers whose weight-update magnitude falls below a threshold (indirect metric) |
+//! | RigL [23]    | sparse training: magnitude drop / gradient-proxy grow masks over θ segments |
+//! | Ekya [12]    | trial-and-error microprofiling of freeze configurations at each scenario |
+
+pub mod egeria;
+pub mod ekya;
+pub mod rigl;
+pub mod slimfit;

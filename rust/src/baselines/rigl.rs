@@ -1,0 +1,226 @@
+//! RigL (Evci et al., ICML'20 [23]): sparse training with dynamic topology.
+//! A fixed global sparsity is maintained over the backbone weights; every
+//! `update_interval` iterations the lowest-magnitude fraction of active
+//! weights is *dropped* and the same number of inactive weights with the
+//! largest gradient proxy (here: recent parameter movement, since dense
+//! gradients for masked weights are not materialized by the artifacts) is
+//! *grown*.
+//!
+//! Cost accounting: the paper's §V-C notes sparse training underuses edge
+//! GPUs (irregular access, imbalance).  We charge compute as
+//! `dense_flops × (1 − sparsity) × inefficiency` with inefficiency 2.2 —
+//! RigL saves FLOPs on paper but only part of it materializes.
+
+use anyhow::Result;
+
+use crate::coordinator::policy::FreezePolicy;
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+use crate::rng::Pcg32;
+use crate::runtime::artifact::ModelManifest;
+
+const UPDATE_INTERVAL: u64 = 10;
+const DROP_FRACTION: f32 = 0.2;
+const INEFFICIENCY: f64 = 2.2;
+
+pub struct RigL {
+    state: FreezeState, // nothing ever freezes; kept for the trait
+    /// active-weight mask over the backbone θ range (head stays dense).
+    mask: Vec<bool>,
+    backbone_len: usize,
+    sparsity: f32,
+    since: u64,
+    prev: Option<Vec<f32>>,
+    rng: Pcg32,
+}
+
+impl RigL {
+    pub fn new(m: &ModelManifest, sparsity: f32, seed: u64) -> RigL {
+        // head (last unit) stays dense: classifier rows must stay trainable.
+        let backbone_len = m.unit_segments[m.units - 1].offset;
+        let mut rng = Pcg32::new(seed ^ 0x51AB, 9);
+        let mut mask = vec![true; backbone_len];
+        // ERK-style random init at the target sparsity
+        let target_off = (backbone_len as f32 * sparsity) as usize;
+        let mut off = 0;
+        while off < target_off {
+            let i = rng.below(backbone_len);
+            if mask[i] {
+                mask[i] = false;
+                off += 1;
+            }
+        }
+        RigL {
+            state: FreezeState::none(m.units),
+            mask,
+            backbone_len,
+            sparsity,
+            since: 0,
+            prev: None,
+            rng,
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.mask.iter().filter(|&&a| a).count()
+    }
+
+    fn apply_mask(&self, params: &mut Params) {
+        for (i, &active) in self.mask.iter().enumerate() {
+            if !active {
+                params.theta[i] = 0.0;
+            }
+        }
+    }
+
+    /// drop lowest-|w| active weights, grow by movement proxy.
+    fn update_topology(&mut self, params: &Params) {
+        let n_active = self.active_count();
+        let k = ((n_active as f32) * DROP_FRACTION) as usize;
+        if k == 0 {
+            return;
+        }
+        // drop: k smallest-magnitude active weights
+        let mut active: Vec<usize> =
+            (0..self.backbone_len).filter(|&i| self.mask[i]).collect();
+        active.sort_by(|&a, &b| {
+            params.theta[a]
+                .abs()
+                .partial_cmp(&params.theta[b].abs())
+                .unwrap()
+        });
+        for &i in active.iter().take(k) {
+            self.mask[i] = false;
+        }
+        // grow: k inactive weights with the largest movement proxy (or
+        // random when no history yet)
+        let mut inactive: Vec<usize> =
+            (0..self.backbone_len).filter(|&i| !self.mask[i]).collect();
+        match &self.prev {
+            Some(prev) => {
+                inactive.sort_by(|&a, &b| {
+                    let ma = (params.theta[a] - prev[a]).abs();
+                    let mb = (params.theta[b] - prev[b]).abs();
+                    mb.partial_cmp(&ma).unwrap()
+                });
+            }
+            None => self.rng.shuffle(&mut inactive),
+        }
+        for &i in inactive.iter().take(k) {
+            self.mask[i] = true;
+        }
+    }
+}
+
+impl FreezePolicy for RigL {
+    fn name(&self) -> &'static str {
+        "RigL"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.state
+    }
+
+    fn after_iteration(
+        &mut self,
+        _sess: &ModelSession,
+        params: &mut Params,
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        self.since += 1;
+        if self.since >= UPDATE_INTERVAL {
+            self.since = 0;
+            self.update_topology(params);
+            self.prev = Some(params.theta[..self.backbone_len].to_vec());
+        }
+        self.apply_mask(params);
+        Ok(())
+    }
+
+    fn compute_inefficiency(&self) -> f64 {
+        ((1.0 - self.sparsity as f64) * INEFFICIENCY).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment,
+    };
+
+    fn toy() -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 4,
+            h: 4,
+            blocks: 2,
+            classes: 3,
+            units: 4,
+            kind: "relu_res".into(),
+            theta_len: 100,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![
+                Segment { offset: 0, len: 30 },
+                Segment { offset: 30, len: 30 },
+                Segment { offset: 60, len: 20 },
+                Segment { offset: 80, len: 20 },
+            ],
+            tensors: vec![],
+            head: HeadInfo { w_offset: 80, w_shape: [4, 3], b_offset: 92, classes: 3 },
+            paper_units: (0..4)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn init_hits_target_sparsity_over_backbone_only() {
+        let m = toy();
+        let r = RigL::new(&m, 0.8, 1);
+        assert_eq!(r.backbone_len, 80); // head (20) stays dense
+        let active = r.active_count();
+        assert_eq!(active, 80 - (80.0f32 * 0.8) as usize);
+    }
+
+    #[test]
+    fn topology_update_preserves_active_count() {
+        let m = toy();
+        let mut r = RigL::new(&m, 0.5, 2);
+        let before = r.active_count();
+        let mut p = Params::new(
+            (0..100).map(|i| (i as f32 * 0.37).sin()).collect(),
+            &m,
+        )
+        .unwrap();
+        r.update_topology(&p);
+        assert_eq!(r.active_count(), before);
+        r.apply_mask(&mut p);
+        let zeroed = p.theta[..80].iter().filter(|&&v| v == 0.0).count();
+        assert!(zeroed >= 80 - before);
+    }
+
+    #[test]
+    fn mask_zeroes_only_backbone() {
+        let m = toy();
+        let r = RigL::new(&m, 0.9, 3);
+        let mut p = Params::new(vec![1.0; 100], &m).unwrap();
+        r.apply_mask(&mut p);
+        assert!(p.theta[80..].iter().all(|&v| v == 1.0), "head touched");
+        let active = p.theta[..80].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(active, r.active_count());
+    }
+
+    #[test]
+    fn inefficiency_caps_at_dense() {
+        let m = toy();
+        let r = RigL::new(&m, 0.1, 4); // low sparsity: (0.9*2.2) > 1 -> cap
+        assert_eq!(r.compute_inefficiency(), 1.0);
+        let r2 = RigL::new(&m, 0.8, 4);
+        assert!((r2.compute_inefficiency() - 0.44).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,160 @@
+//! SlimFit (Ardakani et al. [9]): freeze layers by *weight-update
+//! magnitude* — an indirect training-dynamics signal.  Each interval, the
+//! per-unit L1 norm of the parameter delta (normalized by the unit's norm)
+//! is compared to a threshold; quiet units freeze.  Unlike SimFreeze there
+//! is no representation-level check, so units whose weights move little but
+//! whose features still shift get frozen prematurely — the inaccuracy the
+//! paper's §V-C attributes to it.  Frozen units thaw on scenario changes
+//! (SlimFit re-evaluates when the loss landscape shifts).
+
+use anyhow::Result;
+
+use crate::coordinator::policy::FreezePolicy;
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+use crate::runtime::artifact::ModelManifest;
+
+pub struct SlimFit {
+    state: FreezeState,
+    snapshot: Option<Params>,
+    interval: u64,
+    since: u64,
+    /// relative update-magnitude threshold.
+    th: f32,
+}
+
+impl SlimFit {
+    pub fn new(m: &ModelManifest, interval: u64) -> SlimFit {
+        SlimFit {
+            state: FreezeState::none(m.units),
+            snapshot: None,
+            interval,
+            since: 0,
+            th: 2e-3,
+        }
+    }
+}
+
+impl FreezePolicy for SlimFit {
+    fn name(&self) -> &'static str {
+        "SlimFit"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.state
+    }
+
+    fn on_scenario_probe(
+        &mut self,
+        _sess: &ModelSession,
+        params: &Params,
+        _probe: &[f32],
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        // thaw everything; new scenario, new dynamics.
+        self.state.frozen.iter_mut().for_each(|f| *f = false);
+        self.snapshot = Some(params.clone());
+        self.since = 0;
+        Ok(())
+    }
+
+    fn after_iteration(
+        &mut self,
+        sess: &ModelSession,
+        params: &mut Params,
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        self.since += 1;
+        if self.since < self.interval {
+            return Ok(());
+        }
+        self.since = 0;
+        let m = &sess.m;
+        if let Some(snap) = &self.snapshot {
+            // never freeze the head (last unit): the classifier must track
+            // new classes.
+            for u in 0..m.units - 1 {
+                if self.state.frozen[u] {
+                    continue;
+                }
+                let delta = params.unit_delta_l1(snap, m, u);
+                let norm = params.unit_norm(m, u).max(1e-6);
+                if delta / norm < self.th * self.interval as f32 {
+                    self.state.frozen[u] = true;
+                }
+            }
+        }
+        self.snapshot = Some(params.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment, TensorInfo,
+    };
+
+    fn toy() -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 2,
+            h: 2,
+            blocks: 1,
+            classes: 2,
+            units: 3,
+            kind: "relu_res".into(),
+            theta_len: 9,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![
+                Segment { offset: 0, len: 3 },
+                Segment { offset: 3, len: 3 },
+                Segment { offset: 6, len: 3 },
+            ],
+            tensors: vec![TensorInfo {
+                name: "embed.w".into(),
+                shape: vec![3],
+                unit: 0,
+                offset: 0,
+            }],
+            head: HeadInfo { w_offset: 6, w_shape: [1, 2], b_offset: 8, classes: 2 },
+            paper_units: (0..3)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    // after_iteration needs a ModelSession only for the manifest; build a
+    // fake by transmuting is unsafe — instead test the decision math via
+    // the public pieces (delta/norm) and the freeze bookkeeping directly.
+    #[test]
+    fn quiet_units_freeze_active_units_do_not() {
+        let m = toy();
+        let snap = Params::new(vec![1.0; 9], &m).unwrap();
+        let mut moved = snap.clone();
+        // unit 0 quiet; unit 1 moves a lot
+        moved.theta[3] += 1.0;
+        let d0 = moved.unit_delta_l1(&snap, &m, 0);
+        let d1 = moved.unit_delta_l1(&snap, &m, 1);
+        assert_eq!(d0, 0.0);
+        assert_eq!(d1, 1.0);
+        let th = 2e-3f32 * 8.0;
+        assert!(d0 / moved.unit_norm(&m, 0) < th);
+        assert!(d1 / moved.unit_norm(&m, 1) > th);
+    }
+
+    #[test]
+    fn head_is_never_a_freeze_candidate() {
+        // encoded in the loop bound; assert the invariant used there.
+        let m = toy();
+        let sf = SlimFit::new(&m, 4);
+        assert_eq!(sf.state.units(), 3);
+        // the freeze loop runs over 0..units-1 — the head (unit 2) is out.
+        assert_eq!((0..m.units - 1).last(), Some(1));
+    }
+}

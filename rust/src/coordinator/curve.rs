@@ -1,0 +1,137 @@
+//! Optimus-style accuracy-vs-iterations curve fitting (paper §IV-A1).
+//!
+//! After each fine-tuning round LazyTune records `(iterations, validation
+//! accuracy)` and fits the non-linear saturation model
+//!
+//! ```text
+//! acc(k) ≈ c0 − c1·(1/k) − c2·(1/k²),     c ≥ 0
+//! ```
+//!
+//! with the NNLS solver ([`crate::nnls`]), exactly the Optimus [70] recipe
+//! the paper cites (`scipy.optimize.nnls` [3]).  The fitted curve
+//! extrapolates how many more iterations are needed for the next round to
+//! match the current round's accuracy gain; as the curve flattens the
+//! answer grows and rounds get delayed & merged.
+
+use crate::nnls::{nnls, Mat};
+
+/// Fitted saturation curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Curve {
+    pub c0: f64,
+    pub c1: f64,
+    pub c2: f64,
+}
+
+impl Curve {
+    pub fn eval(&self, k: f64) -> f64 {
+        let k = k.max(1.0);
+        self.c0 - self.c1 / k - self.c2 / (k * k)
+    }
+}
+
+/// Fit the curve to `(iterations, accuracy)` observations.  Returns `None`
+/// with fewer than 3 points (the caller falls back to immediate tuning,
+/// matching the paper's "initial value = 1 batch").
+pub fn fit(points: &[(f64, f64)]) -> Option<Curve> {
+    if points.len() < 3 {
+        return None;
+    }
+    // Parameterize acc = c0 - c1/k - c2/k^2 with all c >= 0:
+    //   acc = [1, -1/k, -1/k^2] . c  — flip signs into the basis so the
+    // NNLS nonnegativity constraint expresses "monotone saturating".
+    let rows: Vec<Vec<f64>> = points
+        .iter()
+        .map(|&(k, _)| {
+            let k = k.max(1.0);
+            vec![1.0, -1.0 / k, -1.0 / (k * k)]
+        })
+        .collect();
+    let b: Vec<f64> = points.iter().map(|&(_, a)| a).collect();
+    let a = Mat::from_rows(&rows);
+    let x = nnls(&a, &b);
+    Some(Curve { c0: x[0], c1: x[1], c2: x[2] })
+}
+
+/// Given the fit, the current iteration count, and the gain achieved by the
+/// last round, estimate how many iterations the next round needs to achieve
+/// a comparable gain.  Clamped to `[1, cap]`.
+pub fn iterations_for_next_gain(
+    curve: &Curve,
+    k_now: f64,
+    last_gain: f64,
+    cap: usize,
+) -> usize {
+    let target = (last_gain * 0.9).max(1e-4); // match ~90% of last gain
+    let base = curve.eval(k_now);
+    for n in 1..=cap {
+        if curve.eval(k_now + n as f64) - base >= target {
+            return n;
+        }
+    }
+    cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_points(c0: f64, c1: f64, c2: f64, ks: &[f64]) -> Vec<(f64, f64)> {
+        let c = Curve { c0, c1, c2 };
+        ks.iter().map(|&k| (k, c.eval(k))).collect()
+    }
+
+    #[test]
+    fn recovers_exact_curve() {
+        let pts = synth_points(0.8, 0.5, 0.2, &[1.0, 2.0, 4.0, 8.0, 16.0]);
+        let c = fit(&pts).unwrap();
+        assert!((c.c0 - 0.8).abs() < 1e-6, "{c:?}");
+        assert!((c.c1 - 0.5).abs() < 1e-5, "{c:?}");
+        assert!((c.c2 - 0.2).abs() < 1e-4, "{c:?}");
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        assert!(fit(&[(1.0, 0.5), (2.0, 0.6)]).is_none());
+    }
+
+    #[test]
+    fn curve_is_monotone_increasing_with_nonneg_coeffs() {
+        let pts = synth_points(0.9, 0.4, 0.1, &[1.0, 3.0, 5.0, 9.0, 20.0]);
+        let c = fit(&pts).unwrap();
+        let mut prev = f64::NEG_INFINITY;
+        for k in 1..200 {
+            let v = c.eval(k as f64);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+        assert!(c.c0 >= 0.0 && c.c1 >= 0.0 && c.c2 >= 0.0);
+    }
+
+    #[test]
+    fn saturated_curve_requests_many_iterations() {
+        // flat curve: each extra iteration adds almost nothing
+        let c = Curve { c0: 0.8, c1: 0.01, c2: 0.0 };
+        let n_late = iterations_for_next_gain(&c, 100.0, 0.05, 30);
+        assert_eq!(n_late, 30, "should hit the cap when saturated");
+    }
+
+    #[test]
+    fn steep_curve_requests_few_iterations() {
+        let c = Curve { c0: 0.8, c1: 2.0, c2: 0.0 };
+        // at k=2 the curve still climbs fast; small gain target is quick
+        let n = iterations_for_next_gain(&c, 2.0, 0.05, 30);
+        assert!(n <= 3, "steep curve wanted {n}");
+    }
+
+    #[test]
+    fn noisy_fit_is_reasonable() {
+        // points with small perturbations still give a saturating fit
+        let mut pts = synth_points(0.7, 0.6, 0.0, &[1., 2., 3., 5., 8., 13.]);
+        for (i, p) in pts.iter_mut().enumerate() {
+            p.1 += if i % 2 == 0 { 0.01 } else { -0.01 };
+        }
+        let c = fit(&pts).unwrap();
+        assert!((c.eval(100.0) - 0.7).abs() < 0.05);
+    }
+}

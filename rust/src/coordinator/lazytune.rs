@@ -1,0 +1,228 @@
+//! LazyTune — the inter-tuning optimization (paper §IV-A, Algorithm 1).
+//!
+//! A fine-tuning round is triggered only when `batches_ava >=
+//! batches_needed`.  Three signals steer `batches_needed`:
+//!
+//! 1. **per-round accuracy gain** (lines 11–12): after each round, fit the
+//!    accuracy-iteration curve (NNLS, [`super::curve`]) and set
+//!    `batches_needed` to the data volume that should buy a gain comparable
+//!    to the last round's — as the model saturates, rounds are delayed and
+//!    merged;
+//! 2. **inference arrivals** (lines 15–18): on every request,
+//!    `d ← d·(1 − 1/ln d)` — the logarithmic backoff [62], less aggressive
+//!    than exponential, faster than additive;
+//! 3. **scenario change** (lines 20–21): reset to the initial value
+//!    (1 batch == immediate fine-tuning) for quick adaptation.
+
+use super::curve;
+
+/// Default cap on how many batches a merged round may wait for.
+pub const DEFAULT_CAP: usize = 30;
+
+/// How `batches_needed` shrinks on each inference arrival.  The paper
+/// (§IV-A2) picks the logarithmic backoff [62] as the middle ground
+/// between the exponential [50] (too aggressive) and additive [22] (too
+/// slow) alternatives; all three are implemented for the ablation bench
+/// (`etuner repro abl-decay`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DecayKind {
+    /// `d ← d·(1 − 1/ln d)` — the paper's choice.
+    Logarithmic,
+    /// `d ← d/2` — exponential backoff.
+    Exponential,
+    /// `d ← d − 1` — additive decrease.
+    Additive,
+}
+
+#[derive(Clone, Debug)]
+pub struct LazyTune {
+    /// Current trigger threshold (the paper's `batches_needed`); kept as
+    /// f64 because the log-decay is multiplicative.
+    batches_needed: f64,
+    cap: usize,
+    decay: DecayKind,
+    /// (cumulative training iterations, validation accuracy) history for
+    /// the curve fit — reset at scenario changes (fresh curve per scenario).
+    history: Vec<(f64, f64)>,
+    last_acc: Option<f64>,
+}
+
+impl LazyTune {
+    pub fn new(cap: usize) -> LazyTune {
+        Self::with_decay(cap, DecayKind::Logarithmic)
+    }
+
+    pub fn with_decay(cap: usize, decay: DecayKind) -> LazyTune {
+        LazyTune {
+            batches_needed: 1.0,
+            cap,
+            decay,
+            history: Vec::new(),
+            last_acc: None,
+        }
+    }
+
+    /// The paper's `batches_needed` (ceil for triggering).
+    pub fn batches_needed(&self) -> usize {
+        (self.batches_needed.ceil() as usize).clamp(1, self.cap)
+    }
+
+    /// Algorithm 1 line 2: trigger once enough data is buffered.
+    pub fn should_trigger(&self, batches_ava: usize) -> bool {
+        batches_ava >= self.batches_needed()
+    }
+
+    /// Algorithm 1 lines 11–12: after a round ends, re-estimate the data
+    /// needed for a comparable gain next round.
+    pub fn on_round_end(&mut self, total_iterations: u64, val_acc: f64) {
+        let gain = self
+            .last_acc
+            .map(|prev| (val_acc - prev).max(0.0))
+            .unwrap_or(1.0);
+        self.last_acc = Some(val_acc);
+        self.history.push((total_iterations as f64, val_acc));
+        if let Some(c) = curve::fit(&self.history) {
+            let n = curve::iterations_for_next_gain(
+                &c,
+                total_iterations as f64,
+                gain,
+                self.cap,
+            );
+            self.batches_needed = n as f64;
+        }
+        // with <3 observations the fit is undefined: stay immediate.
+    }
+
+    /// Algorithm 1 lines 15–18: inference arrived — decay the threshold so
+    /// frequent requests force fresher models.
+    pub fn on_inference(&mut self) {
+        let d = self.batches_needed;
+        self.batches_needed = match self.decay {
+            DecayKind::Logarithmic => {
+                if d >= 3.0 {
+                    d * (1.0 - 1.0 / d.ln())
+                } else {
+                    // ln(d) <= 1 makes the formula non-contractive;
+                    // saturate low.
+                    d.min(2.0).max(1.0) - 0.25
+                }
+            }
+            DecayKind::Exponential => d / 2.0,
+            DecayKind::Additive => d - 1.0,
+        }
+        .max(1.0);
+    }
+
+    /// Algorithm 1 lines 20–21: scenario change — back to immediate.
+    pub fn on_scenario_change(&mut self) {
+        self.batches_needed = 1.0;
+        self.history.clear();
+        self.last_acc = None;
+    }
+}
+
+impl Default for LazyTune {
+    fn default() -> Self {
+        LazyTune::new(DEFAULT_CAP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_immediate() {
+        let lt = LazyTune::default();
+        assert_eq!(lt.batches_needed(), 1);
+        assert!(lt.should_trigger(1));
+        assert!(!lt.should_trigger(0));
+    }
+
+    #[test]
+    fn saturating_accuracy_grows_threshold() {
+        let mut lt = LazyTune::default();
+        // saturating curve: gains shrink round over round
+        let accs = [0.30, 0.50, 0.60, 0.65, 0.67, 0.68, 0.685, 0.688];
+        let mut iters = 0;
+        for (i, &a) in accs.iter().enumerate() {
+            iters += 1 + i as u64;
+            lt.on_round_end(iters, a);
+        }
+        assert!(
+            lt.batches_needed() >= 5,
+            "saturated model should wait for more data: {}",
+            lt.batches_needed()
+        );
+    }
+
+    #[test]
+    fn inference_pressure_shrinks_threshold() {
+        let mut lt = LazyTune::default();
+        lt.batches_needed = 20.0;
+        let before = lt.batches_needed();
+        for _ in 0..6 {
+            lt.on_inference();
+        }
+        assert!(lt.batches_needed() < before);
+        // decay follows d(1 - 1/ln d) for d >= 3
+        let mut d: f64 = 20.0;
+        let mut lt2 = LazyTune::default();
+        lt2.batches_needed = d;
+        lt2.on_inference();
+        d *= 1.0 - 1.0 / d.ln();
+        assert!((lt2.batches_needed - d).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inference_decay_never_below_one() {
+        let mut lt = LazyTune::default();
+        for _ in 0..100 {
+            lt.on_inference();
+        }
+        assert_eq!(lt.batches_needed(), 1);
+    }
+
+    #[test]
+    fn scenario_change_resets_to_immediate() {
+        let mut lt = LazyTune::default();
+        lt.batches_needed = 17.0;
+        lt.history.push((5.0, 0.5));
+        lt.on_scenario_change();
+        assert_eq!(lt.batches_needed(), 1);
+        assert!(lt.history.is_empty());
+    }
+
+    #[test]
+    fn decay_kinds_order_by_aggressiveness() {
+        // exponential reaches 1 fastest, additive slowest, log in between
+        let steps_to_one = |kind: DecayKind| {
+            let mut lt = LazyTune::with_decay(64, kind);
+            lt.batches_needed = 24.0;
+            let mut n = 0;
+            while lt.batches_needed() > 1 {
+                lt.on_inference();
+                n += 1;
+                assert!(n < 100);
+            }
+            n
+        };
+        let exp = steps_to_one(DecayKind::Exponential);
+        let log = steps_to_one(DecayKind::Logarithmic);
+        let add = steps_to_one(DecayKind::Additive);
+        assert!(exp < log, "exp {exp} !< log {log}");
+        assert!(log < add, "log {log} !< add {add}");
+    }
+
+    #[test]
+    fn threshold_respects_cap() {
+        let mut lt = LazyTune::new(8);
+        let accs = [0.5, 0.6, 0.62, 0.625, 0.626, 0.6261];
+        let mut iters = 0;
+        for &a in &accs {
+            iters += 3;
+            lt.on_round_end(iters, a);
+        }
+        assert!(lt.batches_needed() <= 8);
+    }
+}

@@ -1,0 +1,13 @@
+//! The ETuner coordinator: LazyTune (inter-tuning), SimFreeze
+//! (intra-tuning), scenario-change detection, and the policy traits that
+//! the SOTA baselines plug into.
+
+pub mod curve;
+pub mod lazytune;
+pub mod ood;
+pub mod policy;
+pub mod simfreeze;
+
+pub use lazytune::LazyTune;
+pub use ood::EnergyOod;
+pub use simfreeze::SimFreeze;

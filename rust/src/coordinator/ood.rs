@@ -1,0 +1,160 @@
+//! Energy-score scenario-change detection (paper §IV-A3, citing Liu et al.
+//! [56]): `E(x) = −logsumexp(logits)` is low for in-distribution inputs and
+//! rises for out-of-distribution ones.
+//!
+//! Detection is a robust sliding-window test: keep the last `window` scores,
+//! compare each new score against the window's median ± `k`·MAD (median
+//! absolute deviation).  Two consecutive outliers flag a scenario change
+//! (single spikes are noise); the window is then cleared so the new scenario
+//! establishes its own baseline.
+
+#[derive(Clone, Debug)]
+pub struct EnergyOod {
+    window: Vec<f64>,
+    max_window: usize,
+    min_baseline: usize,
+    k: f64,
+    pending_outliers: u32,
+    consecutive_needed: u32,
+}
+
+impl EnergyOod {
+    pub fn new() -> EnergyOod {
+        EnergyOod {
+            window: Vec::new(),
+            // short window: within a scenario the model's confidence keeps
+            // growing (energy drifts down), so the baseline must be local.
+            max_window: 8,
+            min_baseline: 4,
+            k: 4.0,
+            pending_outliers: 0,
+            consecutive_needed: 2,
+        }
+    }
+
+    fn median(sorted: &[f64]) -> f64 {
+        let n = sorted.len();
+        if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        }
+    }
+
+    /// Feed the mean energy score of one request batch; returns true when
+    /// a scenario change is detected (baseline resets afterwards).
+    pub fn observe(&mut self, score: f64) -> bool {
+        if self.window.len() < self.min_baseline {
+            self.window.push(score);
+            return false;
+        }
+        let mut sorted = self.window.clone();
+        sorted.sort_by(f64::total_cmp);
+        let med = Self::median(&sorted);
+        let mut devs: Vec<f64> =
+            sorted.iter().map(|v| (v - med).abs()).collect();
+        devs.sort_by(f64::total_cmp);
+        let mad = Self::median(&devs).max(0.02 * med.abs()).max(1e-3);
+        // OOD inputs push the energy score UP (lower confidence); downward
+        // drift is in-distribution convergence.  Require both a robust
+        // multiple of the local spread and an absolute floor so slow
+        // within-scenario wiggle never fires.
+        let jump = score - med;
+        let outlier = jump > (self.k * mad).max(1.0).max(0.10 * med.abs());
+        if outlier {
+            self.pending_outliers += 1;
+            if self.pending_outliers >= self.consecutive_needed {
+                // change confirmed: restart baseline from the new level.
+                self.window.clear();
+                self.window.push(score);
+                self.pending_outliers = 0;
+                return true;
+            }
+            // don't poison the baseline with a suspected outlier.
+            return false;
+        }
+        self.pending_outliers = 0;
+        self.window.push(score);
+        if self.window.len() > self.max_window {
+            self.window.remove(0);
+        }
+        false
+    }
+}
+
+impl Default for EnergyOod {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn stable_stream_never_fires() {
+        let mut d = EnergyOod::new();
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..300 {
+            assert!(!d.observe(-10.0 + 0.3 * rng.normal() as f64));
+        }
+    }
+
+    #[test]
+    fn level_shift_fires_once_then_restabilizes() {
+        let mut d = EnergyOod::new();
+        let mut rng = Pcg32::new(2, 2);
+        for _ in 0..50 {
+            d.observe(-10.0 + 0.2 * rng.normal() as f64);
+        }
+        let mut fired = 0;
+        for _ in 0..30 {
+            if d.observe(-4.0 + 0.2 * rng.normal() as f64) {
+                fired += 1;
+            }
+        }
+        assert!(fired >= 1, "never detected the shift");
+        assert!(fired <= 2, "fired {fired} times for one shift");
+    }
+
+    #[test]
+    fn detects_multiple_sequential_shifts() {
+        let mut d = EnergyOod::new();
+        let mut rng = Pcg32::new(3, 3);
+        let levels = [-12.0, -6.0, -1.0, 5.0];
+        let mut detections = 0;
+        for &lvl in &levels {
+            for _ in 0..40 {
+                if d.observe(lvl + 0.2 * rng.normal() as f64) {
+                    detections += 1;
+                }
+            }
+        }
+        assert!(detections >= 3, "only {detections} of 3 shifts found");
+        assert!(detections <= 4, "{detections} false positives");
+    }
+
+    #[test]
+    fn single_spike_is_not_a_change() {
+        let mut d = EnergyOod::new();
+        let mut rng = Pcg32::new(4, 4);
+        for _ in 0..30 {
+            d.observe(-8.0 + 0.2 * rng.normal() as f64);
+        }
+        assert!(!d.observe(10.0)); // one spike
+        let mut fired = false;
+        for _ in 0..20 {
+            fired |= d.observe(-8.0 + 0.2 * rng.normal() as f64);
+        }
+        assert!(!fired, "spike poisoned the detector");
+    }
+
+    #[test]
+    fn warmup_suppresses_early_firing() {
+        let mut d = EnergyOod::new();
+        assert!(!d.observe(-10.0));
+        assert!(!d.observe(50.0)); // huge jump during warmup: ignored
+    }
+}

@@ -1,0 +1,285 @@
+//! Policy surfaces: when to trigger fine-tuning rounds (inter-tuning) and
+//! which layers to freeze (intra-tuning).  ETuner's own policies and the
+//! four SOTA baselines ([`crate::baselines`]) plug into the same traits so
+//! the simulation engine treats them uniformly (as Table V requires — every
+//! baseline is run *with* LazyTune integrated).
+
+use anyhow::Result;
+
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+
+use super::lazytune::LazyTune;
+
+/// Inter-tuning (trigger) policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TunePolicyKind {
+    /// Fine-tune the moment a batch arrives (the paper's `Immed.`).
+    Immediate,
+    /// Static lazy strategy: trigger every `n` batches (Table VII S1–S4).
+    Static(usize),
+    /// The paper's adaptive LazyTune.
+    LazyTune,
+}
+
+impl TunePolicyKind {
+    pub fn name(&self) -> String {
+        match self {
+            TunePolicyKind::Immediate => "Immed.".into(),
+            TunePolicyKind::Static(n) => format!("Static({n})"),
+            TunePolicyKind::LazyTune => "LazyTune".into(),
+        }
+    }
+
+    pub fn build(&self) -> TunePolicy {
+        match self {
+            TunePolicyKind::Immediate => TunePolicy::Immediate,
+            TunePolicyKind::Static(n) => TunePolicy::Static(*n),
+            TunePolicyKind::LazyTune => TunePolicy::Lazy(LazyTune::default()),
+        }
+    }
+}
+
+/// Concrete trigger policy.
+#[derive(Clone, Debug)]
+pub enum TunePolicy {
+    Immediate,
+    Static(usize),
+    Lazy(LazyTune),
+}
+
+impl TunePolicy {
+    pub fn should_trigger(&self, batches_ava: usize) -> bool {
+        match self {
+            TunePolicy::Immediate => batches_ava >= 1,
+            TunePolicy::Static(n) => batches_ava >= *n,
+            TunePolicy::Lazy(lt) => lt.should_trigger(batches_ava),
+        }
+    }
+
+    pub fn batches_needed(&self) -> usize {
+        match self {
+            TunePolicy::Immediate => 1,
+            TunePolicy::Static(n) => *n,
+            TunePolicy::Lazy(lt) => lt.batches_needed(),
+        }
+    }
+
+    pub fn on_round_end(&mut self, total_iterations: u64, val_acc: f64) {
+        if let TunePolicy::Lazy(lt) = self {
+            lt.on_round_end(total_iterations, val_acc);
+        }
+    }
+
+    pub fn on_inference(&mut self) {
+        if let TunePolicy::Lazy(lt) = self {
+            lt.on_inference();
+        }
+    }
+
+    pub fn on_scenario_change(&mut self) {
+        if let TunePolicy::Lazy(lt) = self {
+            lt.on_scenario_change();
+        }
+    }
+}
+
+/// Intra-tuning (freezing) policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FreezePolicyKind {
+    /// Never freeze anything.
+    None,
+    /// The paper's CKA-guided SimFreeze.
+    SimFreeze,
+    /// Egeria [88]: module-granularity, strictly front-to-back freezing.
+    Egeria,
+    /// SlimFit [9]: freeze by weight-update magnitude.
+    SlimFit,
+    /// RigL [23]: sparse training with drop/grow masks (no freezing).
+    RigL,
+    /// Ekya [12]: trial-and-error microprofiled freeze configuration.
+    Ekya,
+}
+
+impl FreezePolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FreezePolicyKind::None => "none",
+            FreezePolicyKind::SimFreeze => "SimFreeze",
+            FreezePolicyKind::Egeria => "Egeria",
+            FreezePolicyKind::SlimFit => "SlimFit",
+            FreezePolicyKind::RigL => "RigL",
+            FreezePolicyKind::Ekya => "Ekya",
+        }
+    }
+}
+
+/// Intra-tuning policy: hooks the engine calls around training.
+pub trait FreezePolicy {
+    fn name(&self) -> &'static str;
+
+    /// Current freeze decisions (drives artifact choice, lr mask, FLOPs).
+    fn state(&self) -> &FreezeState;
+
+    /// First training batch of a (new) scenario arrived — (re)install probe
+    /// data and re-evaluate frozen layers.
+    fn on_scenario_probe(
+        &mut self,
+        _sess: &ModelSession,
+        _params: &Params,
+        _probe: &[f32],
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called after every training iteration (may freeze layers, apply
+    /// sparsity masks, ...).
+    fn after_iteration(
+        &mut self,
+        _sess: &ModelSession,
+        _params: &mut Params,
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called when a fine-tuning round completes.
+    fn on_round_end(
+        &mut self,
+        _sess: &ModelSession,
+        _params: &mut Params,
+        _val_acc: f64,
+        _book: &mut CostBook,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Multiplier on effective compute the device actually saves relative
+    /// to the freeze-state accounting (RigL's sparse kernels don't reach
+    /// dense efficiency on edge GPUs — paper §V-C).
+    fn compute_inefficiency(&self) -> f64 {
+        1.0
+    }
+
+    /// CKA observations collected so far (SimFreeze with tracing only).
+    fn cka_trace(&self) -> Vec<super::simfreeze::CkaSample> {
+        vec![]
+    }
+}
+
+/// The trivial policy: nothing ever freezes.
+pub struct NoFreeze {
+    state: FreezeState,
+}
+
+impl NoFreeze {
+    pub fn new(units: usize) -> NoFreeze {
+        NoFreeze { state: FreezeState::none(units) }
+    }
+}
+
+impl FreezePolicy for NoFreeze {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.state
+    }
+}
+
+/// SimFreeze adapted to the [`FreezePolicy`] trait.
+pub struct SimFreezePolicy {
+    inner: super::simfreeze::SimFreeze,
+    first_probe_seen: bool,
+}
+
+impl SimFreezePolicy {
+    pub fn new(inner: super::simfreeze::SimFreeze) -> Self {
+        SimFreezePolicy { inner, first_probe_seen: false }
+    }
+
+    pub fn inner(&self) -> &super::simfreeze::SimFreeze {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut super::simfreeze::SimFreeze {
+        &mut self.inner
+    }
+}
+
+impl FreezePolicy for SimFreezePolicy {
+    fn name(&self) -> &'static str {
+        "SimFreeze"
+    }
+
+    fn state(&self) -> &FreezeState {
+        &self.inner.frozen
+    }
+
+    fn on_scenario_probe(
+        &mut self,
+        sess: &ModelSession,
+        params: &Params,
+        probe: &[f32],
+        book: &mut CostBook,
+    ) -> Result<()> {
+        if !self.first_probe_seen {
+            self.first_probe_seen = true;
+            self.inner.set_probe(sess, probe)
+        } else {
+            self.inner
+                .on_scenario_change(sess, params, probe, book)
+                .map(|_| ())
+        }
+    }
+
+    fn after_iteration(
+        &mut self,
+        sess: &ModelSession,
+        params: &mut Params,
+        book: &mut CostBook,
+    ) -> Result<()> {
+        if self.inner.tick(1) {
+            self.inner.check_and_freeze(sess, params, book)?;
+        }
+        Ok(())
+    }
+
+    fn cka_trace(&self) -> Vec<super::simfreeze::CkaSample> {
+        self.inner.trace.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_policy_triggering() {
+        assert!(TunePolicyKind::Immediate.build().should_trigger(1));
+        let s = TunePolicyKind::Static(5).build();
+        assert!(!s.should_trigger(4));
+        assert!(s.should_trigger(5));
+        let l = TunePolicyKind::LazyTune.build();
+        assert!(l.should_trigger(1)); // starts immediate
+    }
+
+    #[test]
+    fn static_policy_ignores_signals() {
+        let mut s = TunePolicyKind::Static(10).build();
+        s.on_inference();
+        s.on_round_end(50, 0.9);
+        s.on_scenario_change();
+        assert_eq!(s.batches_needed(), 10);
+    }
+
+    #[test]
+    fn no_freeze_never_freezes() {
+        let nf = NoFreeze::new(6);
+        assert_eq!(nf.state().frozen_prefix(), 0);
+        assert_eq!(nf.state().trainable_count(), 6);
+    }
+}

@@ -1,0 +1,169 @@
+//! SimFreeze — the intra-tuning optimization (paper §IV-B, Algorithm 1).
+//!
+//! Every `freeze_interval` training iterations, compute each *active*
+//! layer's CKA between the model being tuned and the deployment-time
+//! reference model on the scenario's probe batch (the first training batch
+//! that arrived in the scenario).  A layer whose CKA variation rate drops
+//! below the stability threshold has converged and is frozen.  On a
+//! scenario change, frozen layers are re-probed with new-scenario data and
+//! the ones whose CKA moved are unfrozen (front layers doing task-agnostic
+//! feature extraction usually stay frozen).
+//!
+//! The CKA itself runs through the Pallas Gram-kernel artifact
+//! ([`crate::model::ModelSession::cka`]); its energy cost is charged to the
+//! ledger and reported (<2% of total in the paper, validated in tab-level
+//! benches).
+
+use anyhow::Result;
+
+use crate::cost::energy::CostBook;
+use crate::cost::flops::FreezeState;
+use crate::model::{ModelSession, Params};
+use crate::runtime::exec::TensorF32;
+
+/// One CKA observation (kept for the Fig. 5 reproduction).
+#[derive(Clone, Copy, Debug)]
+pub struct CkaSample {
+    pub iteration: u64,
+    pub layer: usize,
+    pub cka: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimFreeze {
+    pub freeze_interval: u64,
+    pub cka_th: f64,
+    pub frozen: FreezeState,
+    /// last CKA value per feature layer (embed + blocks; head excluded).
+    last_cka: Vec<Option<f32>>,
+    probe: Option<Vec<f32>>,
+    ref_feats: Option<TensorF32>,
+    ref_theta: Vec<f32>,
+    iters_since_check: u64,
+    total_iters: u64,
+    pub trace: Vec<CkaSample>,
+    pub keep_trace: bool,
+}
+
+impl SimFreeze {
+    /// `units` = freeze units of the model; `ref_theta` = the reference
+    /// (initial, pre-fine-tuning) parameters.
+    pub fn new(units: usize, ref_theta: Vec<f32>, freeze_interval: u64, cka_th: f64) -> SimFreeze {
+        SimFreeze {
+            freeze_interval,
+            cka_th,
+            frozen: FreezeState::none(units),
+            last_cka: vec![None; units - 1],
+            probe: None,
+            ref_feats: None,
+            ref_theta,
+            iters_since_check: 0,
+            total_iters: 0,
+            trace: Vec::new(),
+            keep_trace: false,
+        }
+    }
+
+    fn feature_layers(&self) -> usize {
+        self.frozen.units() - 1
+    }
+
+    /// Install the scenario's CKA probe batch (Algorithm 1 line 22: the
+    /// first training batch that arrives in a scenario).
+    pub fn set_probe(&mut self, sess: &ModelSession, x: &[f32]) -> Result<()> {
+        let ref_params = Params { theta: self.ref_theta.clone() };
+        self.ref_feats = Some(sess.features(&ref_params, x)?);
+        self.probe = Some(x.to_vec());
+        Ok(())
+    }
+
+    pub fn has_probe(&self) -> bool {
+        self.probe.is_some()
+    }
+
+    /// Record `n` training iterations; returns true if a CKA check is due.
+    pub fn tick(&mut self, n: u64) -> bool {
+        self.iters_since_check += n;
+        self.total_iters += n;
+        self.probe.is_some() && self.iters_since_check >= self.freeze_interval
+    }
+
+    /// Algorithm 1 lines 5–9: probe active layers, freeze the stable ones.
+    /// Returns the layers newly frozen.
+    pub fn check_and_freeze(
+        &mut self,
+        sess: &ModelSession,
+        params: &Params,
+        book: &mut CostBook,
+    ) -> Result<Vec<usize>> {
+        self.iters_since_check = 0;
+        let probe = self.probe.as_ref().expect("probe installed");
+        let active = (0..self.feature_layers())
+            .filter(|&l| !self.frozen.frozen[l])
+            .count();
+        if active == 0 {
+            return Ok(vec![]);
+        }
+        book.charge_cka_probe(&sess.m, active);
+        let feats = sess.features(params, probe)?;
+        let ref_feats = self.ref_feats.as_ref().unwrap();
+        let mut newly = vec![];
+        for l in 0..self.feature_layers() {
+            if self.frozen.frozen[l] {
+                continue;
+            }
+            let cka = sess.cka_layer(&feats, ref_feats, l)?;
+            if self.keep_trace {
+                self.trace.push(CkaSample { iteration: self.total_iters, layer: l, cka });
+            }
+            if let Some(prev) = self.last_cka[l] {
+                let variation = ((cka - prev) / prev.abs().max(1e-6)).abs() as f64;
+                if variation <= self.cka_th {
+                    self.frozen.frozen[l] = true;
+                    newly.push(l);
+                }
+            }
+            self.last_cka[l] = Some(cka);
+        }
+        Ok(newly)
+    }
+
+    /// Algorithm 1 lines 20–26: scenario change — new probe data, re-check
+    /// every frozen layer and unfreeze the unstable ones.  Returns the
+    /// layers unfrozen.
+    pub fn on_scenario_change(
+        &mut self,
+        sess: &ModelSession,
+        params: &Params,
+        new_probe: &[f32],
+        book: &mut CostBook,
+    ) -> Result<Vec<usize>> {
+        self.set_probe(sess, new_probe)?;
+        let frozen_layers = (0..self.feature_layers())
+            .filter(|&l| self.frozen.frozen[l])
+            .count();
+        let mut unfrozen = vec![];
+        if frozen_layers > 0 {
+            book.charge_cka_probe(&sess.m, frozen_layers);
+            let feats = sess.features(params, new_probe)?;
+            let ref_feats = self.ref_feats.as_ref().unwrap();
+            for l in 0..self.feature_layers() {
+                if !self.frozen.frozen[l] {
+                    continue;
+                }
+                let cka = sess.cka_layer(&feats, ref_feats, l)?;
+                if let Some(prev) = self.last_cka[l] {
+                    let variation =
+                        ((cka - prev) / prev.abs().max(1e-6)).abs() as f64;
+                    if variation > self.cka_th {
+                        self.frozen.frozen[l] = false;
+                        unfrozen.push(l);
+                    }
+                }
+                self.last_cka[l] = Some(cka);
+            }
+        }
+        self.iters_since_check = 0;
+        Ok(unfrozen)
+    }
+}

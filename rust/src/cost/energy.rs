@@ -1,0 +1,209 @@
+//! Cost accumulation: the run-level ledger behind Figs. 3/8/9 and every
+//! energy column in the tables.
+
+use super::device::DeviceModel;
+use super::flops::{self, FreezeState};
+use crate::runtime::artifact::ModelManifest;
+
+/// Time/energy split by the paper's three Fig.-3 categories.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub init_s: f64,
+    pub loadsave_s: f64,
+    pub compute_s: f64,
+    pub init_j: f64,
+    pub loadsave_j: f64,
+    pub compute_j: f64,
+}
+
+impl CostBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.init_s + self.loadsave_s + self.compute_s
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.init_j + self.loadsave_j + self.compute_j
+    }
+
+    pub fn total_wh(&self) -> f64 {
+        self.total_j() / 3600.0
+    }
+
+    pub fn add(&mut self, other: &CostBreakdown) {
+        self.init_s += other.init_s;
+        self.loadsave_s += other.loadsave_s;
+        self.compute_s += other.compute_s;
+        self.init_j += other.init_j;
+        self.loadsave_j += other.loadsave_j;
+        self.compute_j += other.compute_j;
+    }
+}
+
+/// Run-level ledger: accumulates per-round costs and whole-run counters.
+#[derive(Clone, Debug)]
+pub struct CostBook {
+    pub device: DeviceModel,
+    pub breakdown: CostBreakdown,
+    pub rounds: u64,
+    pub train_iterations: u64,
+    pub train_flops: f64,
+    pub cka_probes: u64,
+    pub cka_flops: f64,
+}
+
+impl CostBook {
+    pub fn new(device: DeviceModel) -> Self {
+        CostBook {
+            device,
+            breakdown: CostBreakdown::default(),
+            rounds: 0,
+            train_iterations: 0,
+            train_flops: 0.0,
+            cka_probes: 0,
+            cka_flops: 0.0,
+        }
+    }
+
+    /// Charge the per-round overheads (system init + model load/save).
+    /// Returns the wall time added (virtual seconds).
+    pub fn charge_round_overhead(&mut self, m: &ModelManifest) -> f64 {
+        let bytes = m.paper_param_bytes();
+        let init = self.device.init_s(bytes);
+        let ls = self.device.loadsave_s(bytes);
+        self.breakdown.init_s += init;
+        self.breakdown.loadsave_s += ls;
+        self.breakdown.init_j += self.device.overhead_j(init);
+        self.breakdown.loadsave_j += self.device.overhead_j(ls);
+        self.rounds += 1;
+        init + ls
+    }
+
+    /// Charge `iters` training iterations under the given freeze state.
+    /// Returns the wall time added.
+    pub fn charge_train(
+        &mut self,
+        m: &ModelManifest,
+        fs: &FreezeState,
+        iters: u64,
+    ) -> f64 {
+        self.charge_train_scaled(m, fs, iters, 1.0)
+    }
+
+    /// Like [`Self::charge_train`] but with an efficiency scale — sparse
+    /// training (RigL) cuts FLOPs on paper but edge GPUs don't realize the
+    /// full saving (irregular access, workload imbalance; paper §V-C).
+    pub fn charge_train_scaled(
+        &mut self,
+        m: &ModelManifest,
+        fs: &FreezeState,
+        iters: u64,
+        scale: f64,
+    ) -> f64 {
+        let fl =
+            flops::train_iter_flops(m, fs, m.batch_train) * iters as f64 * scale;
+        let t = self.device.compute_s(fl);
+        self.breakdown.compute_s += t;
+        self.breakdown.compute_j += self.device.compute_j(fl);
+        self.train_iterations += iters;
+        self.train_flops += fl;
+        t
+    }
+
+    /// Charge one CKA probe over `active_layers` non-frozen layers
+    /// (SimFreeze overhead; the paper reports <2% of total energy).
+    pub fn charge_cka_probe(&mut self, m: &ModelManifest, active_layers: usize) -> f64 {
+        let fl = flops::cka_probe_flops(m, active_layers);
+        let t = self.device.compute_s(fl);
+        self.breakdown.compute_s += t;
+        self.breakdown.compute_j += self.device.compute_j(fl);
+        self.cka_probes += 1;
+        self.cka_flops += fl;
+        t
+    }
+
+    /// Charge a validation evaluation (`n` samples forward).
+    pub fn charge_validation(&mut self, m: &ModelManifest, n: usize) -> f64 {
+        let fl = m.paper_fwd_flops() * n as f64;
+        let t = self.device.compute_s(fl);
+        self.breakdown.compute_s += t;
+        self.breakdown.compute_j += self.device.compute_j(fl);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment,
+    };
+
+    fn toy() -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 8,
+            h: 4,
+            blocks: 2,
+            classes: 3,
+            units: 4,
+            kind: "relu_res".into(),
+            theta_len: 100,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![Segment { offset: 0, len: 10 }; 4],
+            tensors: vec![],
+            head: HeadInfo { w_offset: 0, w_shape: [4, 3], b_offset: 0, classes: 3 },
+            paper_units: (0..4)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn ledger_accumulates_by_category() {
+        let mut book = CostBook::new(DeviceModel::jetson_nx_15w());
+        let m = toy();
+        let fs = FreezeState::none(4);
+        book.charge_round_overhead(&m);
+        book.charge_train(&m, &fs, 3);
+        assert_eq!(book.rounds, 1);
+        assert_eq!(book.train_iterations, 3);
+        assert!(book.breakdown.init_s > 0.0);
+        assert!(book.breakdown.loadsave_s > 0.0);
+        assert!(book.breakdown.compute_s > 0.0);
+        assert!(book.breakdown.total_j() > 0.0);
+    }
+
+    #[test]
+    fn fewer_rounds_less_overhead_same_compute() {
+        let m = toy();
+        let fs = FreezeState::none(4);
+        // immediate: 10 rounds x 1 iter
+        let mut imm = CostBook::new(DeviceModel::jetson_nx_15w());
+        for _ in 0..10 {
+            imm.charge_round_overhead(&m);
+            imm.charge_train(&m, &fs, 1);
+        }
+        // lazy: 2 rounds x 5 iters
+        let mut lazy = CostBook::new(DeviceModel::jetson_nx_15w());
+        for _ in 0..2 {
+            lazy.charge_round_overhead(&m);
+            lazy.charge_train(&m, &fs, 5);
+        }
+        assert_eq!(imm.train_flops, lazy.train_flops);
+        assert!(lazy.breakdown.total_s() < imm.breakdown.total_s());
+        assert!(lazy.breakdown.total_j() < imm.breakdown.total_j());
+        assert!(
+            (imm.breakdown.compute_j - lazy.breakdown.compute_j).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn wh_conversion() {
+        let mut b = CostBreakdown::default();
+        b.compute_j = 3600.0;
+        assert!((b.total_wh() - 1.0).abs() < 1e-12);
+    }
+}

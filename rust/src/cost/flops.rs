@@ -1,0 +1,203 @@
+//! Freeze-aware FLOPs & memory accounting (paper Fig. 2).
+//!
+//! A training iteration decomposes into
+//!   * forward        — every unit, frozen or not (Case 1/2/3 all pay it);
+//!   * activation-grad — every unit *above* the earliest trainable unit
+//!     (backprop must carry dL/dX down to it; Case 3 truncates this);
+//!   * weight-grad     — every *trainable* unit (Case 2 skips it when a
+//!     unit is frozen mid-network).
+//!
+//! Each component costs ≈ the unit's forward FLOPs, giving the standard
+//! 1:2 fwd:bwd ratio when nothing is frozen.
+
+use crate::runtime::artifact::ModelManifest;
+
+/// Which freeze units are currently frozen.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FreezeState {
+    pub frozen: Vec<bool>, // len = units (embed, blocks..., head)
+}
+
+impl FreezeState {
+    pub fn none(units: usize) -> Self {
+        FreezeState { frozen: vec![false; units] }
+    }
+
+    pub fn units(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// Longest frozen prefix — selects the `train_k` artifact (real
+    /// backprop truncation); interior frozen units are handled by lr-mask.
+    pub fn frozen_prefix(&self) -> usize {
+        self.frozen.iter().take_while(|&&f| f).count()
+    }
+
+    /// Index of the earliest trainable unit (== units() if all frozen).
+    pub fn first_trainable(&self) -> usize {
+        self.frozen_prefix()
+    }
+
+    /// Per-unit lr multipliers for the train artifacts (0 = frozen).
+    pub fn lr_mask(&self) -> Vec<f32> {
+        self.frozen.iter().map(|&f| if f { 0.0 } else { 1.0 }).collect()
+    }
+
+    pub fn trainable_count(&self) -> usize {
+        self.frozen.iter().filter(|&&f| !f).count()
+    }
+}
+
+/// Paper-scale FLOPs for ONE training iteration at `batch` samples.
+pub fn train_iter_flops(m: &ModelManifest, fs: &FreezeState, batch: usize) -> f64 {
+    debug_assert_eq!(fs.units(), m.units);
+    let ft = fs.first_trainable();
+    let mut fwd = 0.0;
+    let mut act_grad = 0.0;
+    let mut w_grad = 0.0;
+    for (u, pu) in m.paper_units.iter().enumerate() {
+        fwd += pu.fwd_flops;
+        if u > ft {
+            act_grad += pu.fwd_flops;
+        }
+        if !fs.frozen[u] {
+            w_grad += pu.fwd_flops;
+        }
+    }
+    (fwd + act_grad + w_grad) * batch as f64
+}
+
+/// Paper-scale FLOPs for one inference pass at `batch` samples.
+pub fn infer_flops(m: &ModelManifest, batch: usize) -> f64 {
+    m.paper_fwd_flops() * batch as f64
+}
+
+/// Paper-scale FLOPs for one CKA probe: forward through tuning + reference
+/// model on the probe batch, plus the Gram reductions for `active_layers`.
+pub fn cka_probe_flops(m: &ModelManifest, active_layers: usize) -> f64 {
+    let fwd2 = 2.0 * m.paper_fwd_flops() * m.batch_probe as f64;
+    // Gram: 3 products of (F x B)(B x F) per layer at paper scale F≈4096.
+    let gram = active_layers as f64 * 3.0 * 2.0 * 4096.0 * 4096.0 * m.batch_probe as f64;
+    fwd2 + gram
+}
+
+/// Training memory footprint (bytes, paper scale) for Fig. 10: parameters
+/// (always resident) + gradients for trainable units + saved activations
+/// for every unit at or above the earliest trainable one.
+pub fn train_memory_bytes(m: &ModelManifest, fs: &FreezeState, batch: usize) -> f64 {
+    let ft = fs.first_trainable();
+    let params: f64 = m.paper_units.iter().map(|u| u.param_bytes).sum();
+    let mut grads = 0.0;
+    let mut acts = 0.0;
+    for (u, pu) in m.paper_units.iter().enumerate() {
+        if !fs.frozen[u] {
+            grads += pu.param_bytes;
+        }
+        if u >= ft {
+            // activation bytes per sample ≈ fwd_flops / arithmetic
+            // intensity of the real layers (~150 FLOP/byte for conv nets).
+            acts += pu.fwd_flops / 150.0 * batch as f64;
+        }
+    }
+    params + grads + acts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment,
+    };
+
+    fn toy(units: usize) -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            d: 8,
+            h: 4,
+            blocks: units - 2,
+            classes: 3,
+            units,
+            kind: "relu_res".into(),
+            theta_len: 100,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![Segment { offset: 0, len: 10 }; units],
+            tensors: vec![],
+            head: HeadInfo {
+                w_offset: 0,
+                w_shape: [4, 3],
+                b_offset: 0,
+                classes: 3,
+            },
+            paper_units: (0..units)
+                .map(|_| PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 })
+                .collect(),
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn unfrozen_is_three_times_forward() {
+        let m = toy(5);
+        let fs = FreezeState::none(5);
+        let fwd = infer_flops(&m, 16);
+        let train = train_iter_flops(&m, &fs, 16);
+        // act-grad skips the first unit (nothing below it needs dX)
+        let expect = fwd * 3.0 - 1e9 * 16.0;
+        assert!((train - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn freezing_prefix_cuts_activation_and_weight_grads() {
+        let m = toy(5);
+        let mut fs = FreezeState::none(5);
+        let full = train_iter_flops(&m, &fs, 16);
+        fs.frozen[0] = true;
+        fs.frozen[1] = true;
+        let cut = train_iter_flops(&m, &fs, 16);
+        assert!(cut < full);
+        // fwd unchanged: 5 fwd; act-grad: units 3,4 (above ft=2); w-grad: 2,3,4
+        let expect = (5.0 + 2.0 + 3.0) * 1e9 * 16.0;
+        assert!((cut - expect).abs() < 1.0, "{cut} vs {expect}");
+    }
+
+    #[test]
+    fn interior_freeze_cuts_weight_grad_only() {
+        let m = toy(5);
+        let mut fs = FreezeState::none(5);
+        let full = train_iter_flops(&m, &fs, 16);
+        fs.frozen[2] = true; // interior: Case 2
+        let cut = train_iter_flops(&m, &fs, 16);
+        assert!((full - cut - 1e9 * 16.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn all_frozen_costs_forward_only() {
+        let m = toy(4);
+        let fs = FreezeState { frozen: vec![true; 4] };
+        let train = train_iter_flops(&m, &fs, 16);
+        assert!((train - infer_flops(&m, 16)).abs() < 1.0);
+    }
+
+    #[test]
+    fn prefix_and_mask_helpers() {
+        let fs = FreezeState { frozen: vec![true, true, false, true, false] };
+        assert_eq!(fs.frozen_prefix(), 2);
+        assert_eq!(fs.lr_mask(), vec![0.0, 0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(fs.trainable_count(), 2);
+    }
+
+    #[test]
+    fn memory_shrinks_with_freezing() {
+        let m = toy(6);
+        let none = FreezeState::none(6);
+        let mut half = FreezeState::none(6);
+        for u in 0..3 {
+            half.frozen[u] = true;
+        }
+        let m0 = train_memory_bytes(&m, &none, 16);
+        let m1 = train_memory_bytes(&m, &half, 16);
+        assert!(m1 < m0, "{m1} !< {m0}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Benchmark schedules mirroring the paper's evaluation suite.
+//!
+//! | paper benchmark | scenarios | change type                    | classes |
+//! |-----------------|-----------|--------------------------------|---------|
+//! | CORe50 NC       | 9         | +new classes each scenario     | 50      |
+//! | CORe50 NICv2-79 | 79        | mixed new-class / new-pattern  | 50      |
+//! | CORe50 NICv2-391| 391       | mixed, tiny scenarios          | 50      |
+//! | S-CIFAR-10      | 5         | 2 fresh classes per scenario   | 10      |
+//! | 20News (NLP)    | 10        | 2 fresh classes per scenario   | 20      |
+//!
+//! Scenario 1 is the pre-deployment training scenario (the paper assumes the
+//! model is "originally well-trained" on it); the continual-learning run
+//! covers scenarios 2..N.
+
+use crate::rng::Pcg32;
+
+use super::synth::{Transform, World};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// CORe50 NC: 9 scenarios, new classes.
+    Nc,
+    /// CORe50 NICv2 with 79 scenarios.
+    Nic79,
+    /// CORe50 NICv2 with 391 scenarios.
+    Nic391,
+    /// Split CIFAR-10: 5 scenarios x 2 classes.
+    SCifar10,
+    /// 20 Newsgroups: 10 scenarios x 2 classes (NLP, bert model).
+    News20,
+}
+
+impl Benchmark {
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "nc" => Benchmark::Nc,
+            "nic79" | "nicv2_79" => Benchmark::Nic79,
+            "nic391" | "nicv2_391" => Benchmark::Nic391,
+            "scifar10" | "s-cifar-10" | "scifar" => Benchmark::SCifar10,
+            "news20" | "20news" => Benchmark::News20,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::Nc => "NC",
+            Benchmark::Nic79 => "NICv2_79",
+            Benchmark::Nic391 => "NICv2_391",
+            Benchmark::SCifar10 => "S-CIFAR-10",
+            Benchmark::News20 => "20News",
+        }
+    }
+
+    pub fn total_classes(&self) -> usize {
+        match self {
+            Benchmark::Nc | Benchmark::Nic79 | Benchmark::Nic391 => 50,
+            Benchmark::SCifar10 => 10,
+            Benchmark::News20 => 20,
+        }
+    }
+
+    pub fn scenario_count(&self) -> usize {
+        match self {
+            Benchmark::Nc => 9,
+            Benchmark::Nic79 => 79,
+            Benchmark::Nic391 => 391,
+            Benchmark::SCifar10 => 5,
+            Benchmark::News20 => 10,
+        }
+    }
+
+    /// Training batches arriving per continual-learning scenario.  Scaled
+    /// down from the real datasets to keep CPU-PJRT runs tractable while
+    /// preserving the saturation dynamics (see EXPERIMENTS.md §Setup).
+    pub fn batches_per_scenario(&self) -> usize {
+        match self {
+            Benchmark::Nc => 30,
+            Benchmark::Nic79 => 6,
+            Benchmark::Nic391 => 2,
+            Benchmark::SCifar10 => 30,
+            Benchmark::News20 => 15,
+        }
+    }
+
+    /// Pre-deployment ("well-trained on the first scenario") steps.
+    pub fn warmup_batches(&self) -> usize {
+        match self {
+            Benchmark::Nc | Benchmark::SCifar10 => 60,
+            Benchmark::News20 => 40,
+            Benchmark::Nic79 | Benchmark::Nic391 => 60,
+        }
+    }
+}
+
+/// One scenario of the schedule.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub id: usize,
+    /// Classes whose data arrives in this scenario.
+    pub classes: Vec<usize>,
+    /// All classes seen up to and including this scenario.
+    pub seen: Vec<usize>,
+    /// True if this scenario changes feature patterns (vs only new classes).
+    pub new_pattern: bool,
+}
+
+/// Full schedule: the world (prototypes + transforms) plus scenarios.
+pub struct Schedule {
+    pub benchmark: Benchmark,
+    pub world: World,
+    pub scenarios: Vec<Scenario>,
+}
+
+/// Build the deterministic schedule for `(benchmark, seed)`.
+pub fn build(benchmark: Benchmark, seed: u64) -> Schedule {
+    let classes = benchmark.total_classes();
+    let mut world = World::new(seed, classes, 3.0, 1.0);
+    let mut rng = Pcg32::new(seed ^ 0xBEEF, 11);
+    let n = benchmark.scenario_count();
+    let mut scenarios = Vec::with_capacity(n);
+    let mut seen: Vec<usize> = vec![];
+
+    match benchmark {
+        Benchmark::Nc => {
+            // scenario 1: 10 classes; +5 classes in each of scenarios 2..9.
+            for s in 0..n {
+                let fresh: Vec<usize> = if s == 0 {
+                    (0..10).collect()
+                } else {
+                    (10 + (s - 1) * 5..10 + s * 5).collect()
+                };
+                seen.extend(&fresh);
+                // mild environment drift between sessions
+                let strength = if s == 0 { 0.0 } else { 0.15 };
+                world.push_transform(Transform::random(&mut rng, strength));
+                scenarios.push(Scenario {
+                    id: s,
+                    classes: fresh,
+                    seen: seen.clone(),
+                    new_pattern: false,
+                });
+            }
+        }
+        Benchmark::Nic79 | Benchmark::Nic391 => {
+            // scenario 1: 10 classes; later scenarios are small and mixed:
+            // ~30% introduce a new class (until 50), others re-expose seen
+            // classes under a new pattern.
+            seen.extend(0..10);
+            world.push_transform(Transform::identity());
+            scenarios.push(Scenario {
+                id: 0,
+                classes: (0..10).collect(),
+                seen: seen.clone(),
+                new_pattern: false,
+            });
+            let mut next_class = 10;
+            for s in 1..n {
+                let want_new = next_class < classes
+                    && (rng.f32() < 0.35 || (classes - next_class) >= (n - s));
+                if want_new {
+                    let fresh = vec![next_class];
+                    next_class += 1;
+                    seen.extend(&fresh);
+                    world.push_transform(Transform::random(&mut rng, 0.1));
+                    scenarios.push(Scenario {
+                        id: s,
+                        classes: fresh,
+                        seen: seen.clone(),
+                        new_pattern: false,
+                    });
+                } else {
+                    // new pattern over a subset of seen classes
+                    let k = 3.min(seen.len());
+                    let mut subset = seen.clone();
+                    rng.shuffle(&mut subset);
+                    subset.truncate(k);
+                    world.push_transform(Transform::random(&mut rng, 0.45));
+                    scenarios.push(Scenario {
+                        id: s,
+                        classes: subset,
+                        seen: seen.clone(),
+                        new_pattern: true,
+                    });
+                }
+            }
+        }
+        Benchmark::SCifar10 | Benchmark::News20 => {
+            for s in 0..n {
+                let fresh = vec![2 * s, 2 * s + 1];
+                seen.extend(&fresh);
+                world.push_transform(Transform::random(
+                    &mut rng,
+                    if s == 0 { 0.0 } else { 0.1 },
+                ));
+                scenarios.push(Scenario {
+                    id: s,
+                    classes: fresh,
+                    seen: seen.clone(),
+                    new_pattern: false,
+                });
+            }
+        }
+    }
+
+    Schedule { benchmark, world, scenarios }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nc_schedule_adds_five_classes_per_scenario() {
+        let s = build(Benchmark::Nc, 1);
+        assert_eq!(s.scenarios.len(), 9);
+        assert_eq!(s.scenarios[0].classes.len(), 10);
+        for sc in &s.scenarios[1..] {
+            assert_eq!(sc.classes.len(), 5);
+        }
+        assert_eq!(s.scenarios[8].seen.len(), 50);
+    }
+
+    #[test]
+    fn nic_schedules_reach_all_classes() {
+        for (b, n) in [(Benchmark::Nic79, 79), (Benchmark::Nic391, 391)] {
+            let s = build(b, 3);
+            assert_eq!(s.scenarios.len(), n);
+            assert_eq!(s.scenarios.last().unwrap().seen.len(), 50);
+            assert!(s.scenarios.iter().any(|sc| sc.new_pattern));
+            // transforms registered for every scenario
+            assert_eq!(s.world.transforms.len(), n);
+        }
+    }
+
+    #[test]
+    fn split_benchmarks_partition_classes() {
+        for (b, total) in [(Benchmark::SCifar10, 10), (Benchmark::News20, 20)] {
+            let s = build(b, 7);
+            let mut all: Vec<usize> =
+                s.scenarios.iter().flat_map(|sc| sc.classes.clone()).collect();
+            all.sort();
+            assert_eq!(all, (0..total).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = build(Benchmark::Nic79, 42);
+        let b = build(Benchmark::Nic79, 42);
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.classes, y.classes);
+            assert_eq!(x.new_pattern, y.new_pattern);
+        }
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for b in [
+            Benchmark::Nc,
+            Benchmark::Nic79,
+            Benchmark::Nic391,
+            Benchmark::SCifar10,
+            Benchmark::News20,
+        ] {
+            assert_eq!(Benchmark::parse(b.name()), Some(b));
+        }
+        assert_eq!(Benchmark::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,161 @@
+//! The merged continual-learning event stream (paper Fig. 1): training
+//! batches and inference requests arriving over virtual time, across the
+//! benchmark's scenario schedule.
+//!
+//! Scenario 0 is the pre-deployment training scenario and does not appear in
+//! the stream; the continual-learning run covers scenarios `1..N`.  Each
+//! scenario occupies a contiguous window of virtual time sized by its batch
+//! count; inference requests are spread over the whole horizon.
+
+use crate::rng::Pcg32;
+
+use super::arrival::{arrivals, ArrivalKind};
+use super::benchmarks::Benchmark;
+
+/// Mean virtual seconds between training-batch arrivals.
+pub const TRAIN_GAP_S: f64 = 20.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// One training batch (16 samples) became available.
+    TrainBatch,
+    /// One inference request (one test draw) must be served now.
+    Inference,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub t: f64,
+    pub scenario: usize,
+    pub kind: EventKind,
+}
+
+/// The full, pre-generated event stream for one run.
+#[derive(Clone, Debug)]
+pub struct Stream {
+    pub events: Vec<Event>,
+    /// start time of each scenario window (index = scenario id; entry 0 is
+    /// the deployment time = 0.0 for scenario 1).
+    pub scenario_starts: Vec<f64>,
+    pub horizon: f64,
+}
+
+impl Stream {
+    /// Build the stream: `n_requests` inference requests over the horizon,
+    /// training batches per scenario per the benchmark schedule.
+    pub fn generate(
+        benchmark: Benchmark,
+        n_requests: usize,
+        train_kind: ArrivalKind,
+        infer_kind: ArrivalKind,
+        seed: u64,
+    ) -> Stream {
+        let mut rng = Pcg32::new(seed ^ 0xA221, 21);
+        let n_scen = benchmark.scenario_count();
+        let batches = benchmark.batches_per_scenario();
+        let window = batches as f64 * TRAIN_GAP_S;
+
+        let mut events = Vec::new();
+        let mut scenario_starts = Vec::with_capacity(n_scen);
+        let mut t0 = 0.0;
+        for s in 1..n_scen {
+            scenario_starts.push(t0);
+            let ts = arrivals(train_kind, batches, window, &mut rng);
+            for t in ts {
+                events.push(Event {
+                    t: t0 + t,
+                    scenario: s,
+                    kind: EventKind::TrainBatch,
+                });
+            }
+            t0 += window;
+        }
+        let horizon = t0;
+
+        let req_times = arrivals(infer_kind, n_requests, horizon, &mut rng);
+        for t in req_times {
+            // scenario active at time t
+            let idx = ((t / window) as usize).min(n_scen - 2);
+            events.push(Event {
+                t,
+                scenario: idx + 1,
+                kind: EventKind::Inference,
+            });
+        }
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        Stream { events, scenario_starts, horizon }
+    }
+
+    pub fn train_batches(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == EventKind::TrainBatch)
+            .count()
+    }
+
+    pub fn inference_requests(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == EventKind::Inference)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_counts_match_schedule() {
+        let s = Stream::generate(
+            Benchmark::Nc, 100, ArrivalKind::Poisson, ArrivalKind::Poisson, 7,
+        );
+        // 8 continual scenarios x 30 batches
+        assert_eq!(s.train_batches(), 8 * 30);
+        assert_eq!(s.inference_requests(), 100);
+    }
+
+    #[test]
+    fn events_sorted_and_scenarios_monotone_for_train() {
+        let s = Stream::generate(
+            Benchmark::SCifar10, 50, ArrivalKind::Poisson, ArrivalKind::Poisson, 3,
+        );
+        assert!(s.events.windows(2).all(|w| w[0].t <= w[1].t));
+        let train_scen: Vec<usize> = s
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::TrainBatch)
+            .map(|e| e.scenario)
+            .collect();
+        assert!(train_scen.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*train_scen.first().unwrap(), 1);
+        assert_eq!(*train_scen.last().unwrap(), 4);
+    }
+
+    #[test]
+    fn request_scenario_matches_window() {
+        let s = Stream::generate(
+            Benchmark::Nc, 300, ArrivalKind::Uniform, ArrivalKind::Uniform, 11,
+        );
+        let window = 30.0 * TRAIN_GAP_S;
+        for e in s.events.iter().filter(|e| e.kind == EventKind::Inference) {
+            let expect = ((e.t / window) as usize).min(7) + 1;
+            assert_eq!(e.scenario, expect);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Stream::generate(
+            Benchmark::Nc, 40, ArrivalKind::Poisson, ArrivalKind::Poisson, 5,
+        );
+        let b = Stream::generate(
+            Benchmark::Nc, 40, ArrivalKind::Poisson, ArrivalKind::Poisson, 5,
+        );
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.t, y.t);
+            assert_eq!(x.kind, y.kind);
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! # etuner — redundancy-aware continual learning for edge devices
+//!
+//! Rust implementation of the coordination layer of **ETuner / EdgeOL**
+//! (Li et al., 2024): an edge continual-learning runtime that serves
+//! streaming inference requests while continually fine-tuning the deployed
+//! model, and removes two redundancies of the immediate-fine-tuning
+//! baseline:
+//!
+//! * **inter-tuning** — [`coordinator::lazytune`] delays & merges
+//!   fine-tuning rounds (NNLS accuracy-curve extrapolation, logarithmic
+//!   decay on inference arrivals, reset on scenario change);
+//! * **intra-tuning** — [`coordinator::simfreeze`] freezes layers whose CKA
+//!   self-representational similarity has stabilized, and selectively
+//!   unfreezes them on scenario changes.
+//!
+//! Compute (model fwd/bwd, CKA probes) is **never** implemented in rust:
+//! the python build step (`make artifacts`) AOT-lowers JAX + Pallas programs
+//! to HLO text, and [`runtime`] executes them through the PJRT C API.
+//! After artifacts are built the binary is self-contained.
+//!
+//! ```no_run
+//! use etuner::prelude::*;
+//! let rt = Runtime::load("artifacts").unwrap();
+//! let cfg = RunConfig::quickstart("res50", Benchmark::Nc);
+//! let report = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+//! println!("avg accuracy {:.2}%  energy {:.1} Wh",
+//!          report.avg_inference_accuracy * 100.0,
+//!          report.energy.total_wh());
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod nnls;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+    pub use crate::cost::device::DeviceModel;
+    pub use crate::data::arrival::ArrivalKind;
+    pub use crate::data::benchmarks::Benchmark;
+    pub use crate::metrics::Report;
+    pub use crate::runtime::Runtime;
+    pub use crate::sim::{RunConfig, Simulation};
+}

@@ -1,0 +1,165 @@
+//! `etuner` CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! etuner list                           # experiments + models
+//! etuner run --model res50 --benchmark nc [--tune lazytune]
+//!            [--freeze simfreeze] [--requests 200] [--seed 1]
+//! etuner repro <id|all> [--seeds 1,2] [--requests 200] [--out results]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::arrival::ArrivalKind;
+use etuner::data::benchmarks::Benchmark;
+use etuner::repro::experiments::{self, ReproOpts};
+use etuner::runtime::Runtime;
+use etuner::sim::{RunConfig, Simulation};
+use etuner::testkit;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => {
+            println!("experiments (etuner repro <id>):");
+            for (id, desc) in experiments::list() {
+                println!("  {id:<6} {desc}");
+            }
+            println!("\nmodels: res50 mbv2 deit bert");
+            println!("benchmarks: nc nic79 nic391 scifar10 news20");
+            println!("tune policies: immediate static:<n> lazytune");
+            println!("freeze policies: none simfreeze egeria slimfit rigl ekya");
+            Ok(())
+        }
+        "run" => cmd_run(&args[1..]),
+        "repro" => cmd_repro(&args[1..]),
+        "help" | "--help" | "-h" => {
+            println!(
+                "usage: etuner <list|run|repro> [options]\n\
+                 run   --model M --benchmark B [--tune P] [--freeze F]\n\
+                       [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
+                       [--quant] [--labeled FRAC] [--cka-th TH]\n\
+                 repro <id|all> [--seeds 1,2] [--requests N] [--out DIR]"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `etuner help`"),
+    }
+}
+
+fn opt<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn parse_tune(s: &str) -> Result<TunePolicyKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "immediate" | "immed" => TunePolicyKind::Immediate,
+        "lazytune" | "lazy" => TunePolicyKind::LazyTune,
+        other => {
+            if let Some(n) = other.strip_prefix("static:") {
+                TunePolicyKind::Static(n.parse()?)
+            } else {
+                bail!("unknown tune policy {other:?}")
+            }
+        }
+    })
+}
+
+fn parse_freeze(s: &str) -> Result<FreezePolicyKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "none" => FreezePolicyKind::None,
+        "simfreeze" => FreezePolicyKind::SimFreeze,
+        "egeria" => FreezePolicyKind::Egeria,
+        "slimfit" => FreezePolicyKind::SlimFit,
+        "rigl" => FreezePolicyKind::RigL,
+        "ekya" => FreezePolicyKind::Ekya,
+        other => bail!("unknown freeze policy {other:?}"),
+    })
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let model = opt(args, "--model").unwrap_or("res50");
+    let bench = Benchmark::parse(opt(args, "--benchmark").unwrap_or("nc"))
+        .context("bad --benchmark")?;
+    let mut cfg = RunConfig::quickstart(model, bench);
+    if let Some(t) = opt(args, "--tune") {
+        cfg.tune = parse_tune(t)?;
+    }
+    if let Some(f) = opt(args, "--freeze") {
+        cfg.freeze = parse_freeze(f)?;
+    }
+    if let Some(n) = opt(args, "--requests") {
+        cfg.n_requests = n.parse()?;
+    }
+    if let Some(s) = opt(args, "--seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(a) = opt(args, "--arrival") {
+        let k = ArrivalKind::parse(a).context("bad --arrival")?;
+        cfg.train_arrival = k;
+        cfg.infer_arrival = k;
+    }
+    if let Some(th) = opt(args, "--cka-th") {
+        cfg.cka_th = th.parse()?;
+    }
+    if let Some(l) = opt(args, "--labeled") {
+        cfg.labeled_fraction = Some(l.parse()?);
+    }
+    cfg.quant = flag(args, "--quant");
+    cfg.oracle_change_detection = flag(args, "--oracle-changes");
+    if let Some(d) = opt(args, "--decay") {
+        use etuner::coordinator::lazytune::DecayKind;
+        cfg.decay = match d {
+            "log" | "logarithmic" => DecayKind::Logarithmic,
+            "exp" | "exponential" => DecayKind::Exponential,
+            "add" | "additive" => DecayKind::Additive,
+            other => bail!("unknown decay {other:?}"),
+        };
+    }
+
+    let rt = Runtime::load(testkit::artifacts_dir())?;
+    let report = Simulation::new(&rt, cfg)?.run()?;
+    println!("{}", report.summary());
+    println!(
+        "  breakdown: init {:.1}s / loadsave {:.1}s / compute {:.1}s; \
+         {:.2} Wh total; {} scenario changes detected; wall {:.1}s",
+        report.energy.init_s,
+        report.energy.loadsave_s,
+        report.energy.compute_s,
+        report.energy.total_wh(),
+        report.scenario_changes_detected,
+        report.wall_exec_s,
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &[String]) -> Result<()> {
+    let id = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut opts = ReproOpts::default();
+    if let Some(s) = opt(args, "--seeds") {
+        opts.seeds = s
+            .split(',')
+            .map(|x| x.parse().context("bad --seeds"))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(n) = opt(args, "--requests") {
+        opts.n_requests = n.parse()?;
+    }
+    if let Some(o) = opt(args, "--out") {
+        opts.results_dir = o.into();
+    }
+    let rt = Runtime::load(testkit::artifacts_dir())?;
+    experiments::run_experiment(&rt, id, &opts)
+}

@@ -1,0 +1,152 @@
+//! Run metrics: average inference accuracy (the paper's headline accuracy
+//! metric), cost ledger snapshots, and traces used by the figure
+//! reproductions.
+
+use crate::coordinator::simfreeze::CkaSample;
+use crate::cost::energy::CostBreakdown;
+
+/// One served inference request.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    pub t: f64,
+    pub scenario: usize,
+    pub accuracy: f32,
+    /// model staleness: batches buffered but not yet trained on when served.
+    pub stale_batches: usize,
+}
+
+/// One fine-tuning round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub t: f64,
+    pub scenario: usize,
+    pub batches: usize,
+    pub iterations: u64,
+    pub batches_needed: usize,
+    pub val_acc: f64,
+    pub frozen_units: usize,
+}
+
+/// Full result of one continual-learning run.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub model: String,
+    pub benchmark: String,
+    pub tune_policy: String,
+    pub freeze_policy: String,
+    pub seed: u64,
+    /// arithmetic mean of per-request accuracies (paper §II).
+    pub avg_inference_accuracy: f64,
+    pub energy: CostBreakdown,
+    pub rounds: u64,
+    pub train_iterations: u64,
+    pub train_tflops: f64,
+    pub cka_tflops: f64,
+    pub scenario_changes_detected: u64,
+    pub requests: Vec<RequestRecord>,
+    pub round_log: Vec<RoundRecord>,
+    /// training memory at the first and last round (Fig. 10), bytes.
+    pub memory_begin_bytes: f64,
+    pub memory_end_bytes: f64,
+    /// wallclock spent in PJRT executions (real, not simulated), seconds.
+    pub wall_exec_s: f64,
+    /// per-layer CKA observations (populated when `keep_cka_trace` is set).
+    pub cka_trace: Vec<CkaSample>,
+}
+
+impl Report {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} tune={} freeze={} seed={}: acc {:.2}% time {:.0}s energy {:.2}Wh rounds {} iters {}",
+            self.model,
+            self.benchmark,
+            self.tune_policy,
+            self.freeze_policy,
+            self.seed,
+            self.avg_inference_accuracy * 100.0,
+            self.energy.total_s(),
+            self.energy.total_wh(),
+            self.rounds,
+            self.train_iterations,
+        )
+    }
+
+    pub fn finish(&mut self) {
+        if !self.requests.is_empty() {
+            self.avg_inference_accuracy = self
+                .requests
+                .iter()
+                .map(|r| r.accuracy as f64)
+                .sum::<f64>()
+                / self.requests.len() as f64;
+        }
+    }
+}
+
+/// Mean of reports over seeds (the paper averages 5 runs).
+pub fn average(reports: &[Report]) -> Report {
+    assert!(!reports.is_empty());
+    let mut out = reports[0].clone();
+    let n = reports.len() as f64;
+    out.avg_inference_accuracy =
+        reports.iter().map(|r| r.avg_inference_accuracy).sum::<f64>() / n;
+    let mut acc = CostBreakdown::default();
+    for r in reports {
+        acc.add(&r.energy);
+    }
+    out.energy = CostBreakdown {
+        init_s: acc.init_s / n,
+        loadsave_s: acc.loadsave_s / n,
+        compute_s: acc.compute_s / n,
+        init_j: acc.init_j / n,
+        loadsave_j: acc.loadsave_j / n,
+        compute_j: acc.compute_j / n,
+    };
+    out.rounds = (reports.iter().map(|r| r.rounds).sum::<u64>() as f64 / n) as u64;
+    out.train_iterations =
+        (reports.iter().map(|r| r.train_iterations).sum::<u64>() as f64 / n) as u64;
+    out.train_tflops = reports.iter().map(|r| r.train_tflops).sum::<f64>() / n;
+    out.cka_tflops = reports.iter().map(|r| r.cka_tflops).sum::<f64>() / n;
+    out.memory_begin_bytes =
+        reports.iter().map(|r| r.memory_begin_bytes).sum::<f64>() / n;
+    out.memory_end_bytes =
+        reports.iter().map(|r| r.memory_end_bytes).sum::<f64>() / n;
+    out.seed = u64::MAX; // marker: averaged
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_computes_mean_accuracy() {
+        let mut r = Report::default();
+        for a in [0.5, 0.7, 0.9] {
+            r.requests.push(RequestRecord {
+                t: 0.0,
+                scenario: 1,
+                accuracy: a,
+                stale_batches: 0,
+            });
+        }
+        r.finish();
+        assert!((r.avg_inference_accuracy - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let mut a = Report::default();
+        a.avg_inference_accuracy = 0.6;
+        a.energy.compute_j = 100.0;
+        a.rounds = 10;
+        let mut b = Report::default();
+        b.avg_inference_accuracy = 0.8;
+        b.energy.compute_j = 200.0;
+        b.rounds = 20;
+        let m = average(&[a, b]);
+        assert!((m.avg_inference_accuracy - 0.7).abs() < 1e-9);
+        assert!((m.energy.compute_j - 150.0).abs() < 1e-9);
+        assert_eq!(m.rounds, 15);
+    }
+}

@@ -1,0 +1,146 @@
+//! CopyWeights-with-Reinit (CWR) — the CORe50 paper's anti-forgetting
+//! technique, applied by default in ETuner's experiments (paper §V-A).
+//!
+//! The head maintains two sets of per-class discriminators:
+//!   * a *consolidated* bank holding the best weights learned for every
+//!     class seen in past scenarios;
+//!   * the *training* head that the current scenario fine-tunes.
+//!
+//! On a scenario change the coordinator (1) merges the rows of the classes
+//! trained in the finished scenario into the bank (weighted by how often a
+//! class has been seen), and (2) reinitializes the training rows of the
+//! incoming scenario's classes.  At inference, the consolidated bank is
+//! written into θ so past classes keep their discriminators.
+
+use crate::runtime::artifact::ModelManifest;
+
+use super::params::Params;
+
+#[derive(Clone, Debug)]
+pub struct Cwr {
+    /// consolidated per-class head weights: classes x (H+1) (bias last).
+    bank: Vec<Vec<f32>>,
+    /// how many scenarios contributed to each class's consolidated row.
+    seen_count: Vec<u32>,
+}
+
+impl Cwr {
+    pub fn new(m: &ModelManifest) -> Cwr {
+        Cwr {
+            bank: vec![vec![0.0; m.head.w_shape[0] + 1]; m.classes],
+            seen_count: vec![0; m.classes],
+        }
+    }
+
+    pub fn seen(&self, c: usize) -> bool {
+        self.seen_count[c] > 0
+    }
+
+    /// Merge the trained rows of `classes` from θ into the bank
+    /// (running average over scenarios, as CWR+ does).
+    pub fn consolidate(&mut self, m: &ModelManifest, p: &Params, classes: &[usize]) {
+        for &c in classes {
+            let (widx, bidx) = Params::head_class_indices(m, c);
+            let n = self.seen_count[c] as f32;
+            let row = &mut self.bank[c];
+            for (slot, &i) in row.iter_mut().zip(widx.iter()) {
+                *slot = (*slot * n + p.theta[i]) / (n + 1.0);
+            }
+            let last = row.len() - 1;
+            row[last] = (row[last] * n + p.theta[bidx]) / (n + 1.0);
+            self.seen_count[c] += 1;
+        }
+    }
+
+    /// Write the consolidated bank into θ for every seen class (called
+    /// before serving inference and at scenario start).
+    pub fn install(&self, m: &ModelManifest, p: &mut Params) {
+        for c in 0..m.classes {
+            if self.seen_count[c] == 0 {
+                continue;
+            }
+            self.install_class(m, p, c);
+        }
+    }
+
+    /// Write one class's consolidated row into θ.
+    pub fn install_class(&self, m: &ModelManifest, p: &mut Params, c: usize) {
+        let (widx, bidx) = Params::head_class_indices(m, c);
+        let row = &self.bank[c];
+        for (&i, &v) in widx.iter().zip(row.iter()) {
+            p.theta[i] = v;
+        }
+        p.theta[bidx] = row[row.len() - 1];
+    }
+
+    /// Zero the training rows for `classes` (re-init on scenario entry so
+    /// fresh classes start from a clean discriminator).
+    pub fn reinit_rows(&self, m: &ModelManifest, p: &mut Params, classes: &[usize]) {
+        for &c in classes {
+            let (widx, bidx) = Params::head_class_indices(m, c);
+            for &i in &widx {
+                p.theta[i] = 0.0;
+            }
+            p.theta[bidx] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::tests::toy_manifest;
+
+    #[test]
+    fn consolidate_then_install_roundtrips() {
+        let m = toy_manifest();
+        let mut p = Params::new((0..22).map(|x| x as f32).collect(), &m).unwrap();
+        let mut cwr = Cwr::new(&m);
+        cwr.consolidate(&m, &p, &[1, 2]);
+        assert!(cwr.seen(1) && cwr.seen(2) && !cwr.seen(0));
+        // trash the head, install restores classes 1 and 2 only
+        let orig = p.clone();
+        for v in p.unit_mut(&m, 1) {
+            *v = -99.0;
+        }
+        cwr.install(&m, &mut p);
+        for c in [1usize, 2] {
+            let (widx, bidx) = Params::head_class_indices(&m, c);
+            for &i in &widx {
+                assert_eq!(p.theta[i], orig.theta[i], "class {c} idx {i}");
+            }
+            assert_eq!(p.theta[bidx], orig.theta[bidx]);
+        }
+        let (w0, b0) = Params::head_class_indices(&m, 0);
+        assert!(w0.iter().all(|&i| p.theta[i] == -99.0));
+        assert_eq!(p.theta[b0], -99.0);
+    }
+
+    #[test]
+    fn consolidation_averages_over_scenarios() {
+        let m = toy_manifest();
+        let mut cwr = Cwr::new(&m);
+        let mut p = Params::new(vec![0.0; 22], &m).unwrap();
+        let (widx, _) = Params::head_class_indices(&m, 3);
+        p.theta[widx[0]] = 2.0;
+        cwr.consolidate(&m, &p, &[3]);
+        p.theta[widx[0]] = 4.0;
+        cwr.consolidate(&m, &p, &[3]);
+        let mut q = Params::new(vec![0.0; 22], &m).unwrap();
+        cwr.install(&m, &mut q);
+        assert_eq!(q.theta[widx[0]], 3.0); // average of 2 and 4
+    }
+
+    #[test]
+    fn reinit_zeroes_only_requested_rows() {
+        let m = toy_manifest();
+        let mut p = Params::new(vec![1.0; 22], &m).unwrap();
+        let cwr = Cwr::new(&m);
+        cwr.reinit_rows(&m, &mut p, &[0]);
+        let (w0, b0) = Params::head_class_indices(&m, 0);
+        assert!(w0.iter().all(|&i| p.theta[i] == 0.0));
+        assert_eq!(p.theta[b0], 0.0);
+        let (w1, _) = Params::head_class_indices(&m, 1);
+        assert!(w1.iter().all(|&i| p.theta[i] == 1.0));
+    }
+}

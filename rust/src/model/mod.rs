@@ -1,0 +1,10 @@
+//! Deployed-model state management: the flat parameter vector, typed
+//! sessions over the runtime artifacts, and CWR head consolidation.
+
+pub mod cwr;
+pub mod params;
+pub mod session;
+
+pub use cwr::Cwr;
+pub use params::Params;
+pub use session::ModelSession;

@@ -1,0 +1,158 @@
+//! Flat parameter vector with manifest-driven segment views.
+//!
+//! The whole model is one `Vec<f32>` (matching the python side's flat θ);
+//! freeze units, individual tensors, and the classifier head are views by
+//! manifest offsets.  RigL's sparsity masks and CWR's head surgery operate
+//! directly on these views.
+
+use anyhow::Result;
+
+use crate::runtime::artifact::ModelManifest;
+
+/// Model parameters + metadata needed for segment addressing.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub theta: Vec<f32>,
+}
+
+impl Params {
+    pub fn new(theta: Vec<f32>, m: &ModelManifest) -> Result<Params> {
+        anyhow::ensure!(
+            theta.len() == m.theta_len,
+            "theta length {} != manifest {}",
+            theta.len(),
+            m.theta_len
+        );
+        Ok(Params { theta })
+    }
+
+    /// View of one freeze unit's slice.
+    pub fn unit<'a>(&'a self, m: &ModelManifest, u: usize) -> &'a [f32] {
+        let s = m.unit_segments[u];
+        &self.theta[s.offset..s.offset + s.len]
+    }
+
+    pub fn unit_mut<'a>(&'a mut self, m: &ModelManifest, u: usize) -> &'a mut [f32] {
+        let s = m.unit_segments[u];
+        &mut self.theta[s.offset..s.offset + s.len]
+    }
+
+    /// View of a named tensor.
+    pub fn tensor<'a>(&'a self, m: &ModelManifest, name: &str) -> Result<&'a [f32]> {
+        let t = m
+            .tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no tensor {name:?}"))?;
+        Ok(&self.theta[t.offset..t.offset + t.size()])
+    }
+
+    /// Head weight column for class `c`: the row-major (H, C) weight matrix
+    /// stores class `c` at stride C — returns (indices, bias_index).
+    /// Used by CWR to copy/reset per-class discriminators.
+    pub fn head_class_indices(m: &ModelManifest, c: usize) -> (Vec<usize>, usize) {
+        let h = m.head.w_shape[0];
+        let cdim = m.head.w_shape[1];
+        debug_assert!(c < cdim);
+        let idx = (0..h).map(|r| m.head.w_offset + r * cdim + c).collect();
+        (idx, m.head.b_offset + c)
+    }
+
+    /// L2 norm of one unit's slice (used by SlimFit-style baselines).
+    pub fn unit_norm(&self, m: &ModelManifest, u: usize) -> f32 {
+        self.unit(m, u).iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// L1 of elementwise delta vs `other`, per unit.
+    pub fn unit_delta_l1(&self, other: &Params, m: &ModelManifest, u: usize) -> f32 {
+        self.unit(m, u)
+            .iter()
+            .zip(other.unit(m, u))
+            .map(|(a, b)| (a - b).abs())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::runtime::artifact::{
+        ArtifactNames, HeadInfo, ModelManifest, PaperUnit, Segment, TensorInfo,
+    };
+
+    pub(crate) fn toy_manifest() -> ModelManifest {
+        // layout: embed.w (2x3=6) | head.w (3x4=12), head.b (4)
+        ModelManifest {
+            name: "toy".into(),
+            d: 2,
+            h: 3,
+            blocks: 0,
+            classes: 4,
+            units: 2,
+            kind: "relu_res".into(),
+            theta_len: 22,
+            batch_train: 16,
+            batch_infer: 64,
+            batch_probe: 16,
+            unit_segments: vec![
+                Segment { offset: 0, len: 6 },
+                Segment { offset: 6, len: 16 },
+            ],
+            tensors: vec![
+                TensorInfo { name: "embed.w".into(), shape: vec![2, 3], unit: 0, offset: 0 },
+                TensorInfo { name: "head.w".into(), shape: vec![3, 4], unit: 1, offset: 6 },
+                TensorInfo { name: "head.b".into(), shape: vec![4], unit: 1, offset: 18 },
+            ],
+            head: HeadInfo { w_offset: 6, w_shape: [3, 4], b_offset: 18, classes: 4 },
+            paper_units: vec![
+                PaperUnit { fwd_flops: 1e9, param_bytes: 1e6 },
+                PaperUnit { fwd_flops: 1e8, param_bytes: 1e5 },
+            ],
+            artifacts: ArtifactNames::default(),
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let m = toy_manifest();
+        assert!(Params::new(vec![0.0; 3], &m).is_err());
+        assert!(Params::new(vec![0.0; 22], &m).is_ok());
+    }
+
+    #[test]
+    fn unit_views_are_disjoint_and_cover() {
+        let m = toy_manifest();
+        let p = Params::new((0..22).map(|x| x as f32).collect(), &m).unwrap();
+        assert_eq!(p.unit(&m, 0), &(0..6).map(|x| x as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(p.unit(&m, 1).len(), 16);
+        assert_eq!(p.unit(&m, 1)[0], 6.0);
+    }
+
+    #[test]
+    fn head_class_indices_stride_by_classes() {
+        let m = toy_manifest();
+        let (idx, b) = Params::head_class_indices(&m, 2);
+        // head.w offset 6, shape (3,4): class-2 column = 6+2, 6+6, 6+10
+        assert_eq!(idx, vec![8, 12, 16]);
+        assert_eq!(b, 20);
+    }
+
+    #[test]
+    fn named_tensor_view() {
+        let m = toy_manifest();
+        let p = Params::new((0..22).map(|x| x as f32).collect(), &m).unwrap();
+        assert_eq!(p.tensor(&m, "head.b").unwrap(), &[18.0, 19.0, 20.0, 21.0]);
+        assert!(p.tensor(&m, "nope").is_err());
+    }
+
+    #[test]
+    fn delta_l1_detects_change() {
+        let m = toy_manifest();
+        let a = Params::new(vec![0.0; 22], &m).unwrap();
+        let mut b = a.clone();
+        b.theta[1] = 2.0;
+        b.theta[7] = -1.0;
+        assert_eq!(a.unit_delta_l1(&b, &m, 0), 2.0);
+        assert_eq!(a.unit_delta_l1(&b, &m, 1), 1.0);
+    }
+}

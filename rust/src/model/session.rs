@@ -1,0 +1,158 @@
+//! Typed session over one deployed model: binds the runtime artifacts to
+//! the flat parameter vector and exposes the operations the coordinator
+//! needs (train step, inference, CKA probe, SimSiam step).
+
+use anyhow::Result;
+
+use crate::cost::flops::FreezeState;
+use crate::runtime::exec::{i32_literal, TensorF32};
+use crate::runtime::{ModelManifest, Runtime};
+
+use super::params::Params;
+
+/// A bound (runtime, model) pair.
+pub struct ModelSession<'rt> {
+    pub rt: &'rt Runtime,
+    pub m: ModelManifest,
+    /// Use the 8-bit QAT train artifacts (Table VIII).
+    pub quant: bool,
+    pub lr: f32,
+}
+
+impl<'rt> ModelSession<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        let m = rt.manifest.model(model)?.clone();
+        Ok(ModelSession { rt, m, quant: false, lr: 0.05 })
+    }
+
+    /// Initial (pre-deployment) parameters from the artifact directory.
+    pub fn theta0(&self) -> Result<Params> {
+        Params::new(self.rt.theta0(&self.m.name)?, &self.m)
+    }
+
+    /// One SGD step on a batch.  Chooses the `train_k` artifact matching
+    /// the frozen *prefix* (real backprop truncation) and passes the
+    /// per-unit lr mask for interior frozen units.  Returns the loss.
+    pub fn train_step(
+        &self,
+        params: &mut Params,
+        x: &[f32],
+        y: &[i32],
+        fs: &FreezeState,
+    ) -> Result<f32> {
+        let b = self.m.batch_train;
+        anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
+        anyhow::ensure!(y.len() == b, "bad y len {}", y.len());
+        let k = fs.frozen_prefix().min(self.m.units - 1);
+        let name = self.m.train_artifact(k, self.quant)?.to_string();
+        let inputs = vec![
+            TensorF32::new(vec![self.m.theta_len], params.theta.clone()).to_literal()?,
+            TensorF32::new(vec![b, self.m.d], x.to_vec()).to_literal()?,
+            i32_literal(y, &[b])?,
+            TensorF32::vec(fs.lr_mask()).to_literal()?,
+            TensorF32::scalar(self.lr).to_literal()?,
+        ];
+        let mut out = self.rt.exec_raw(&name, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "train artifact returned {}", out.len());
+        let loss = out.pop().unwrap().data[0];
+        params.theta = out.pop().unwrap().data;
+        Ok(loss)
+    }
+
+    /// Forward pass at the inference batch size; returns logits [B, C].
+    pub fn infer(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
+        let b = self.m.batch_infer;
+        anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
+        let inputs = vec![
+            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
+            TensorF32::new(vec![b, self.m.d], x.to_vec()),
+        ];
+        let mut out = self.rt.exec(&self.m.artifacts.infer, &inputs)?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Classification accuracy on (x, y) at the inference batch size.
+    pub fn accuracy(&self, params: &Params, x: &[f32], y: &[i32]) -> Result<f32> {
+        let logits = self.infer(params, x)?;
+        let pred = logits.argmax_rows();
+        let correct = pred
+            .iter()
+            .zip(y)
+            .filter(|(p, t)| **p == **t as usize)
+            .count();
+        Ok(correct as f32 / y.len() as f32)
+    }
+
+    /// Energy scores `E(x) = -logsumexp(logits)` for OOD detection.
+    pub fn energy_scores(&self, params: &Params, x: &[f32]) -> Result<Vec<f32>> {
+        let logits = self.infer(params, x)?;
+        Ok(logits.logsumexp_rows().iter().map(|v| -v).collect())
+    }
+
+    /// Per-unit feature maps on the probe batch: returns [units-1, B, H]
+    /// (embed output + each block output; the head has no feature map).
+    pub fn features(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
+        let b = self.m.batch_probe;
+        anyhow::ensure!(x.len() == b * self.m.d, "bad probe len {}", x.len());
+        let inputs = vec![
+            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
+            TensorF32::new(vec![b, self.m.d], x.to_vec()),
+        ];
+        let mut out = self.rt.exec(&self.m.artifacts.features, &inputs)?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// CKA between two (B, H) feature maps via the Pallas Gram artifact.
+    pub fn cka(&self, fx: &[f32], fy: &[f32]) -> Result<f32> {
+        let b = self.m.batch_probe;
+        let h = self.m.h;
+        anyhow::ensure!(fx.len() == b * h && fy.len() == b * h, "bad feature len");
+        let name = self.rt.manifest.cka_artifact(h)?.to_string();
+        let inputs = vec![
+            TensorF32::new(vec![b, h], fx.to_vec()),
+            TensorF32::new(vec![b, h], fy.to_vec()),
+        ];
+        let out = self.rt.exec(&name, &inputs)?;
+        Ok(out[0].data[0])
+    }
+
+    /// CKA of layer `l` between two stacked feature tensors [L, B, H].
+    pub fn cka_layer(&self, feats_a: &TensorF32, feats_b: &TensorF32, l: usize) -> Result<f32> {
+        let bh = self.m.batch_probe * self.m.h;
+        let fa = &feats_a.data[l * bh..(l + 1) * bh];
+        let fb = &feats_b.data[l * bh..(l + 1) * bh];
+        self.cka(fa, fb)
+    }
+
+    /// One SimSiam self-supervised step on two augmented views (Table VI).
+    pub fn ssl_step(
+        &self,
+        params: &mut Params,
+        phi: &mut Vec<f32>,
+        x1: &[f32],
+        x2: &[f32],
+        fs: &FreezeState,
+    ) -> Result<f32> {
+        let b = self.m.batch_train;
+        let name = self
+            .m
+            .artifacts
+            .ssl
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("{} has no ssl artifact", self.m.name))?;
+        let inputs = vec![
+            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
+            TensorF32::new(vec![phi.len()], phi.clone()),
+            TensorF32::new(vec![b, self.m.d], x1.to_vec()),
+            TensorF32::new(vec![b, self.m.d], x2.to_vec()),
+            TensorF32::vec(fs.lr_mask()),
+            TensorF32::scalar(self.lr),
+        ];
+        let mut out = self.rt.exec(&name, &inputs)?;
+        anyhow::ensure!(out.len() == 3, "ssl artifact returned {}", out.len());
+        let loss = out.pop().unwrap().data[0];
+        *phi = out.pop().unwrap().data;
+        params.theta = out.pop().unwrap().data;
+        Ok(loss)
+    }
+}

@@ -1,0 +1,304 @@
+//! Non-Negative Least Squares (Lawson–Hanson) — the solver behind
+//! LazyTune's accuracy-curve fitting (paper §IV-A1, following Optimus [70];
+//! the paper calls scipy's `optimize.nnls` [3], this is the same algorithm).
+//!
+//! Solves `argmin_{x >= 0} ||A x - b||_2` for small dense systems (the
+//! curve fit uses 3 basis functions over tens of observations).
+
+/// Dense column-major-free matrix as rows of `Vec<f64>`.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>, // row-major
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Mat::new(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// A^T * v
+    fn tmul(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            for j in 0..self.cols {
+                out[j] += self.at(i, j) * vi;
+            }
+        }
+        out
+    }
+
+    /// A * x
+    fn mul(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += self.at(i, j) * x[j];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+}
+
+/// Unconstrained least squares on the passive-set columns via normal
+/// equations + Gaussian elimination with partial pivoting.  Fine for the
+/// tiny, well-scaled systems the curve fitter produces.
+fn ls_on_set(a: &Mat, b: &[f64], set: &[usize]) -> Option<Vec<f64>> {
+    let k = set.len();
+    if k == 0 {
+        return Some(vec![]);
+    }
+    // G = Ap^T Ap (k x k), rhs = Ap^T b
+    let mut g = vec![0.0; k * k];
+    let mut rhs = vec![0.0; k];
+    for (cj, &j) in set.iter().enumerate() {
+        for (ci, &i) in set.iter().enumerate() {
+            let mut acc = 0.0;
+            for r in 0..a.rows {
+                acc += a.at(r, i) * a.at(r, j);
+            }
+            g[ci * k + cj] = acc;
+        }
+        let mut acc = 0.0;
+        for r in 0..a.rows {
+            acc += a.at(r, j) * b[r];
+        }
+        rhs[cj] = acc;
+    }
+    // solve G z = rhs
+    let mut z = rhs;
+    for col in 0..k {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..k {
+            if g[r * k + col].abs() > g[piv * k + col].abs() {
+                piv = r;
+            }
+        }
+        if g[piv * k + col].abs() < 1e-12 {
+            return None; // singular
+        }
+        if piv != col {
+            for c in 0..k {
+                g.swap(col * k + c, piv * k + c);
+            }
+            z.swap(col, piv);
+        }
+        let d = g[col * k + col];
+        for r in col + 1..k {
+            let f = g[r * k + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..k {
+                g[r * k + c] -= f * g[col * k + c];
+            }
+            z[r] -= f * z[col];
+        }
+    }
+    for col in (0..k).rev() {
+        let mut acc = z[col];
+        for c in col + 1..k {
+            acc -= g[col * k + c] * z[c];
+        }
+        z[col] = acc / g[col * k + col];
+    }
+    Some(z)
+}
+
+/// Lawson–Hanson active-set NNLS.  Returns `x >= 0` minimizing `||Ax-b||`.
+pub fn nnls(a: &Mat, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    let n = a.cols;
+    let mut x = vec![0.0; n];
+    let mut passive: Vec<usize> = Vec::new();
+    let tol = 1e-10;
+
+    for _outer in 0..(3 * n + 30) {
+        // w = A^T (b - A x): Lagrange gradient on the active set
+        let ax = a.mul(&x);
+        let resid: Vec<f64> =
+            b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+        let w = a.tmul(&resid);
+
+        // pick the most violated active constraint
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..n {
+            if !passive.contains(&j) && w[j] > tol {
+                if best.map_or(true, |(_, bw)| w[j] > bw) {
+                    best = Some((j, w[j]));
+                }
+            }
+        }
+        let Some((j, _)) = best else { break };
+        passive.push(j);
+
+        // inner loop: solve LS on passive set, clip negatives
+        loop {
+            let Some(z) = ls_on_set(a, b, &passive) else {
+                passive.pop();
+                return x;
+            };
+            if z.iter().all(|&v| v > tol) {
+                x.iter_mut().for_each(|v| *v = 0.0);
+                for (c, &jj) in passive.iter().enumerate() {
+                    x[jj] = z[c];
+                }
+                break;
+            }
+            // step toward z until the first passive var hits zero
+            let mut alpha = f64::INFINITY;
+            for (c, &jj) in passive.iter().enumerate() {
+                if z[c] <= tol {
+                    let denom = x[jj] - z[c];
+                    if denom.abs() > 1e-15 {
+                        alpha = alpha.min(x[jj] / denom);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (c, &jj) in passive.iter().enumerate() {
+                x[jj] += alpha * (z[c] - x[jj]);
+            }
+            let drop: Vec<usize> = passive
+                .iter()
+                .copied()
+                .filter(|&jj| x[jj] <= tol)
+                .collect();
+            for d in drop {
+                passive.retain(|&jj| jj != d);
+                x[d] = 0.0;
+            }
+            if passive.is_empty() {
+                break;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn resid_norm(a: &Mat, x: &[f64], b: &[f64]) -> f64 {
+        a.mul(x)
+            .iter()
+            .zip(b)
+            .map(|(ax, bi)| (ax - bi) * (ax - bi))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn exact_nonnegative_solution_recovered() {
+        // A x* = b with x* >= 0 and A well conditioned -> recover x*.
+        let a = Mat::from_rows(&[
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0],
+            vec![0.0, 0.0, 3.0],
+            vec![1.0, 1.0, 1.0],
+        ]);
+        let xstar = [0.5, 1.5, 2.0];
+        let b = a.mul(&xstar);
+        let x = nnls(&a, &b);
+        for (xi, xs) in x.iter().zip(&xstar) {
+            assert!((xi - xs).abs() < 1e-8, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn negative_ls_solution_clamps_to_zero() {
+        // unconstrained solution would be negative in x0
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.1]]);
+        let b = [1.0, 1.2];
+        let x = nnls(&a, &b);
+        assert!(x.iter().all(|&v| v >= 0.0), "{x:?}");
+        // KKT: gradient of active vars must be <= 0
+        let ax = a.mul(&x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let w = a.tmul(&r);
+        for j in 0..2 {
+            if x[j] == 0.0 {
+                assert!(w[j] <= 1e-8, "KKT violated {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_kkt_conditions_random_problems() {
+        // Hand-rolled property test: for random (A, b), the solution is
+        // feasible and satisfies the NNLS KKT conditions.
+        let mut r = Pcg32::new(99, 1);
+        for case in 0..50 {
+            let rows = 3 + r.below(8);
+            let cols = 1 + r.below(4);
+            let mut rowv = Vec::new();
+            for _ in 0..rows {
+                rowv.push((0..cols).map(|_| r.normal() as f64).collect());
+            }
+            let a = Mat::from_rows(&rowv);
+            let b: Vec<f64> = (0..rows).map(|_| r.normal() as f64).collect();
+            let x = nnls(&a, &b);
+            assert!(x.iter().all(|&v| v >= 0.0), "case {case}: {x:?}");
+            let ax = a.mul(&x);
+            let resid: Vec<f64> =
+                b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+            let w = a.tmul(&resid);
+            for j in 0..cols {
+                if x[j] > 1e-9 {
+                    assert!(w[j].abs() < 1e-6, "case {case}: grad {w:?}");
+                } else {
+                    assert!(w[j] <= 1e-6, "case {case}: active grad {w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn never_worse_than_zero_vector() {
+        let mut r = Pcg32::new(7, 2);
+        for _ in 0..30 {
+            let rows = 4 + r.below(6);
+            let mut rowv = Vec::new();
+            for _ in 0..rows {
+                rowv.push((0..3).map(|_| r.normal() as f64).collect());
+            }
+            let a = Mat::from_rows(&rowv);
+            let b: Vec<f64> = (0..rows).map(|_| r.normal() as f64).collect();
+            let x = nnls(&a, &b);
+            let zero = vec![0.0; 3];
+            assert!(
+                resid_norm(&a, &x, &b) <= resid_norm(&a, &zero, &b) + 1e-9
+            );
+        }
+    }
+}

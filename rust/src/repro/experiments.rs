@@ -1,0 +1,679 @@
+//! The experiment registry: `etuner repro <id>` regenerates one paper
+//! table/figure.  Workloads are scaled to this testbed (see EXPERIMENTS.md
+//! §Setup); the *shape* of each result — who wins, by what factor, where
+//! crossovers sit — is the reproduction target.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use crate::data::arrival::ArrivalKind;
+use crate::data::benchmarks::Benchmark;
+use crate::metrics::Report;
+use crate::runtime::Runtime;
+use crate::sim::{run_averaged, RunConfig};
+
+use super::table::{f1, f2, pct, Table};
+
+/// All experiment ids with a one-line description.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig3", "time & energy breakdown of immediate fine-tuning"),
+        ("fig4", "validation-accuracy saturation across rounds (2 scenarios)"),
+        ("fig5", "per-layer CKA variation as fine-tuning proceeds"),
+        ("fig8", "overall fine-tuning execution time (normalized)"),
+        ("fig9", "overall fine-tuning energy (normalized)"),
+        ("tab2", "average inference accuracy (methods x models x benchmarks)"),
+        ("tab3", "whole-process computation TFLOPs (NC)"),
+        ("fig10", "training memory at begin vs end of continual learning"),
+        ("fig11", "convergence speed: Immed vs ETuner in one scenario"),
+        ("fig12", "LazyTune case study: batches_needed trace"),
+        ("tab4", "NLP workload (bert / 20News)"),
+        ("tab5", "SOTA comparison (Egeria/SlimFit/RigL/Ekya + LazyTune)"),
+        ("fig13", "sensitivity: number of inference requests"),
+        ("fig14", "sensitivity: arrival distributions"),
+        ("fig15", "sensitivity: CKA stability threshold"),
+        ("tab6", "semi-supervised learning (10% labels)"),
+        ("tab7", "static lazy strategies S1-S4 vs LazyTune"),
+        ("tab8", "compatibility with 8-bit quantization"),
+        ("abl-decay", "ablation: log vs exponential vs additive decay (§IV-A2)"),
+        ("abl-interval", "ablation: SimFreeze probe interval"),
+        ("abl-oracle", "ablation: energy-score detector vs oracle boundaries"),
+    ]
+}
+
+/// Experiment-wide defaults: seeds + request count are overridable from the
+/// CLI (`--seeds`, `--requests`) to trade runtime for variance.
+#[derive(Clone, Debug)]
+pub struct ReproOpts {
+    pub seeds: Vec<u64>,
+    pub n_requests: usize,
+    pub results_dir: std::path::PathBuf,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts {
+            seeds: vec![1, 2],
+            n_requests: 200,
+            results_dir: "results".into(),
+        }
+    }
+}
+
+pub fn run_experiment(rt: &Runtime, id: &str, opts: &ReproOpts) -> Result<()> {
+    match id {
+        "fig3" => fig3(rt, opts),
+        "fig4" => fig4(rt, opts),
+        "fig5" => fig5(rt, opts),
+        "fig8" | "fig9" | "tab2" => fig8_9_tab2(rt, opts),
+        "tab3" | "fig10" => tab3_fig10(rt, opts),
+        "fig11" => fig11(rt, opts),
+        "fig12" => fig12(rt, opts),
+        "tab4" => tab4(rt, opts),
+        "tab5" => tab5(rt, opts),
+        "fig13" => fig13(rt, opts),
+        "fig14" => fig14(rt, opts),
+        "fig15" => fig15(rt, opts),
+        "tab6" => tab6(rt, opts),
+        "tab7" => tab7(rt, opts),
+        "tab8" => tab8(rt, opts),
+        "abl-decay" => abl_decay(rt, opts),
+        "abl-interval" => abl_interval(rt, opts),
+        "abl-oracle" => abl_oracle(rt, opts),
+        "all" => {
+            for (id, _) in list() {
+                if id == "fig9" || id == "tab2" || id == "fig10" {
+                    continue; // produced jointly with fig8/tab3
+                }
+                run_experiment(rt, id, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (try `list`)"),
+    }
+}
+
+fn cfg(model: &str, b: Benchmark, opts: &ReproOpts) -> RunConfig {
+    let mut c = RunConfig::quickstart(model, b);
+    c.n_requests = opts.n_requests;
+    c
+}
+
+/// The four methods of the main grid (paper Figs. 8/9, Table II).
+fn methods() -> Vec<(&'static str, TunePolicyKind, FreezePolicyKind)> {
+    vec![
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("LazyTune", TunePolicyKind::LazyTune, FreezePolicyKind::None),
+        ("SimFreeze", TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ]
+}
+
+fn run_cfg(rt: &Runtime, c: &RunConfig, opts: &ReproOpts) -> Result<Report> {
+    Ok(run_averaged(rt, c, &opts.seeds)?.0)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — time/energy breakdown of immediate fine-tuning
+// ---------------------------------------------------------------------------
+
+fn fig3(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 3: breakdown of immediate fine-tuning (NC)",
+        &["model", "init%t", "load/save%t", "compute%t", "init%e",
+          "load/save%e", "compute%e", "time_s", "energy_Wh"],
+    );
+    for model in ["res50", "mbv2", "deit"] {
+        let c = cfg(model, Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+        let r = run_cfg(rt, &c, opts)?;
+        let e = &r.energy;
+        let ts = e.total_s();
+        let tj = e.total_j();
+        t.row(vec![
+            model.into(),
+            pct(e.init_s / ts),
+            pct(e.loadsave_s / ts),
+            pct(e.compute_s / ts),
+            pct(e.init_j / tj),
+            pct(e.loadsave_j / tj),
+            pct(e.compute_j / tj),
+            f1(ts),
+            f2(e.total_wh()),
+        ]);
+    }
+    t.emit(&opts.results_dir, "fig3")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — accuracy saturation across fine-tuning rounds
+// ---------------------------------------------------------------------------
+
+fn fig4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 4: validation accuracy over rounds (scenarios 2-3, Immed.)",
+        &["model", "round", "scenario", "val_acc%"],
+    );
+    for model in ["res50", "mbv2"] {
+        let c = cfg(model, Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None)
+            .with_seed(opts.seeds[0]);
+        let r = crate::sim::Simulation::new(rt, c)?.run()?;
+        for (i, rr) in r
+            .round_log
+            .iter()
+            .filter(|rr| rr.scenario <= 2)
+            .enumerate()
+        {
+            t.row(vec![
+                model.into(),
+                format!("{i}"),
+                format!("{}", rr.scenario),
+                pct(rr.val_acc),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "fig4")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — CKA variation curves
+// ---------------------------------------------------------------------------
+
+fn fig5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut c = cfg("res50", Benchmark::Nc, opts)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze)
+        .with_seed(opts.seeds[0]);
+    c.keep_cka_trace = true;
+    c.cka_th = 0.0; // observe without freezing so full curves are traced
+    let report = crate::sim::Simulation::new(rt, c)?.run()?;
+    let mut t = Table::new(
+        "Fig 5: CKA of selected layers over fine-tuning (res50, NC)",
+        &["iteration", "layer", "cka"],
+    );
+    let picks = [0usize, 2, 4, 6, 8];
+    for s in &report.cka_trace {
+        if picks.contains(&s.layer) {
+            t.row(vec![
+                format!("{}", s.iteration),
+                format!("{}", s.layer),
+                format!("{:.4}", s.cka),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "fig5")
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 8/9 + Table II — the main grid
+// ---------------------------------------------------------------------------
+
+fn fig8_9_tab2(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let benches = [
+        Benchmark::Nc,
+        Benchmark::Nic79,
+        Benchmark::Nic391,
+        Benchmark::SCifar10,
+    ];
+    let mut t8 = Table::new(
+        "Fig 8: overall fine-tuning time, normalized to Immed.",
+        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+    );
+    let mut t9 = Table::new(
+        "Fig 9: overall fine-tuning energy, normalized to Immed.",
+        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+    );
+    let mut t2 = Table::new(
+        "Table II: average inference accuracy (%)",
+        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+    );
+    for model in ["res50", "mbv2", "deit"] {
+        for b in benches {
+            let mut times = vec![];
+            let mut energies = vec![];
+            let mut accs = vec![];
+            for (_, tune, freeze) in methods() {
+                let c = cfg(model, b, opts).with_policies(tune, freeze);
+                let r = run_cfg(rt, &c, opts)?;
+                times.push(r.energy.total_s());
+                energies.push(r.energy.total_j());
+                accs.push(r.avg_inference_accuracy);
+            }
+            let norm = |v: &[f64]| -> Vec<String> {
+                v.iter().map(|x| f2(x / v[0])).collect()
+            };
+            let mut row8 = vec![model.to_string(), b.name().to_string()];
+            row8.extend(norm(&times));
+            t8.row(row8);
+            let mut row9 = vec![model.to_string(), b.name().to_string()];
+            row9.extend(norm(&energies));
+            t9.row(row9);
+            let mut row2 = vec![model.to_string(), b.name().to_string()];
+            row2.extend(accs.iter().map(|a| pct(*a)));
+            t2.row(row2);
+        }
+    }
+    t8.emit(&opts.results_dir, "fig8")?;
+    t9.emit(&opts.results_dir, "fig9")?;
+    t2.emit(&opts.results_dir, "tab2")
+}
+
+// ---------------------------------------------------------------------------
+// Table III + Fig. 10 — computation & memory
+// ---------------------------------------------------------------------------
+
+fn tab3_fig10(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t3 = Table::new(
+        "Table III: computation of the whole NC process (paper-scale TFLOPs)",
+        &["model", "Immed.", "ETuner", "reduction%"],
+    );
+    let mut t10 = Table::new(
+        "Fig 10: training memory begin vs end (paper-scale MB)",
+        &["model", "method", "begin_MB", "end_MB", "reduction%"],
+    );
+    for model in ["res50", "mbv2"] {
+        let ci = cfg(model, Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+        let ri = run_cfg(rt, &ci, opts)?;
+        let ce = cfg(model, Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        let re = run_cfg(rt, &ce, opts)?;
+        t3.row(vec![
+            model.into(),
+            f1(ri.train_tflops),
+            f1(re.train_tflops + re.cka_tflops),
+            pct(1.0 - (re.train_tflops + re.cka_tflops) / ri.train_tflops),
+        ]);
+        for (name, r) in [("Immed.", &ri), ("ETuner", &re)] {
+            t10.row(vec![
+                model.into(),
+                name.into(),
+                f1(r.memory_begin_bytes / 1e6),
+                f1(r.memory_end_bytes / 1e6),
+                pct(1.0 - r.memory_end_bytes / r.memory_begin_bytes.max(1.0)),
+            ]);
+        }
+    }
+    t3.emit(&opts.results_dir, "tab3")?;
+    t10.emit(&opts.results_dir, "fig10")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — convergence speed
+// ---------------------------------------------------------------------------
+
+fn fig11(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 11: convergence within scenario 2 (res50, NC)",
+        &["method", "round_in_scenario", "val_acc%"],
+    );
+    for (name, tune, freeze) in [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
+    ] {
+        let c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(tune, freeze)
+            .with_seed(opts.seeds[0]);
+        let r = crate::sim::Simulation::new(rt, c)?.run()?;
+        for (i, rr) in r
+            .round_log
+            .iter()
+            .filter(|rr| rr.scenario == 1)
+            .enumerate()
+        {
+            t.row(vec![name.into(), format!("{i}"), pct(rr.val_acc)]);
+        }
+    }
+    t.emit(&opts.results_dir, "fig11")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12 — LazyTune case study
+// ---------------------------------------------------------------------------
+
+fn fig12(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let c = cfg("res50", Benchmark::Nc, opts)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None)
+        .with_seed(opts.seeds[0]);
+    let r = crate::sim::Simulation::new(rt, c)?.run()?;
+    let mut t = Table::new(
+        "Fig 12: batches_needed trace (res50, NC, scenarios 2-3)",
+        &["t", "scenario", "batches_needed", "batches_merged", "val_acc%"],
+    );
+    for rr in r.round_log.iter().filter(|rr| rr.scenario <= 2) {
+        t.row(vec![
+            f1(rr.t),
+            format!("{}", rr.scenario),
+            format!("{}", rr.batches_needed),
+            format!("{}", rr.batches),
+            pct(rr.val_acc),
+        ]);
+    }
+    t.emit(&opts.results_dir, "fig12")
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — NLP workload
+// ---------------------------------------------------------------------------
+
+fn tab4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Table IV: NLP workload (bert, 20News)",
+        &["method", "accuracy%", "time_min", "energy_Wh"],
+    );
+    for (name, tune, freeze) in methods() {
+        let c = cfg("bert", Benchmark::News20, opts).with_policies(tune, freeze);
+        let r = run_cfg(rt, &c, opts)?;
+        t.row(vec![
+            name.into(),
+            pct(r.avg_inference_accuracy),
+            f1(r.energy.total_s() / 60.0),
+            f2(r.energy.total_wh()),
+        ]);
+    }
+    t.emit(&opts.results_dir, "tab4")
+}
+
+// ---------------------------------------------------------------------------
+// Table V — SOTA comparison (all with LazyTune integrated)
+// ---------------------------------------------------------------------------
+
+fn tab5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Table V: SOTA efficient-learning comparison (LazyTune integrated)",
+        &["model", "benchmark", "method", "accuracy%", "energy_Wh"],
+    );
+    let entries = [
+        ("LazyTune (base)", FreezePolicyKind::None),
+        ("Egeria", FreezePolicyKind::Egeria),
+        ("SlimFit", FreezePolicyKind::SlimFit),
+        ("RigL", FreezePolicyKind::RigL),
+        ("Ekya", FreezePolicyKind::Ekya),
+        ("ETuner", FreezePolicyKind::SimFreeze),
+    ];
+    for model in ["res50", "mbv2", "deit"] {
+        for b in [Benchmark::Nc, Benchmark::Nic391] {
+            for (name, freeze) in entries {
+                let c = cfg(model, b, opts)
+                    .with_policies(TunePolicyKind::LazyTune, freeze);
+                let r = run_cfg(rt, &c, opts)?;
+                t.row(vec![
+                    model.into(),
+                    b.name().into(),
+                    name.into(),
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                ]);
+            }
+        }
+    }
+    t.emit(&opts.results_dir, "tab5")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — sensitivity to the number of inference requests
+// ---------------------------------------------------------------------------
+
+fn fig13(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 13: sensitivity to request count (res50, NC)",
+        &["requests", "method", "accuracy%", "energy_Wh"],
+    );
+    for n in [50usize, 100, 200, 400, 800] {
+        for (name, tune, freeze) in [
+            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+        ] {
+            let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
+            c.n_requests = n;
+            let r = run_cfg(rt, &c, opts)?;
+            t.row(vec![
+                format!("{n}"),
+                name.into(),
+                pct(r.avg_inference_accuracy),
+                f2(r.energy.total_wh()),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "fig13")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — arrival distributions
+// ---------------------------------------------------------------------------
+
+fn fig14(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 14: arrival-distribution sensitivity (res50, NC)",
+        &["distribution", "method", "accuracy%", "energy_Wh"],
+    );
+    for kind in [
+        ArrivalKind::Poisson,
+        ArrivalKind::Uniform,
+        ArrivalKind::Normal,
+        ArrivalKind::Trace,
+    ] {
+        for (name, tune, freeze) in [
+            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+        ] {
+            let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
+            c.train_arrival = kind;
+            c.infer_arrival = kind;
+            let r = run_cfg(rt, &c, opts)?;
+            t.row(vec![
+                kind.name().into(),
+                name.into(),
+                pct(r.avg_inference_accuracy),
+                f2(r.energy.total_wh()),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "fig14")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 15 — CKA stability threshold
+// ---------------------------------------------------------------------------
+
+fn fig15(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 15: CKA stability threshold sweep (res50, NC, ETuner)",
+        &["threshold%", "accuracy%", "energy_Wh"],
+    );
+    for th in [0.005, 0.01, 0.02, 0.04, 0.08] {
+        let mut c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        c.cka_th = th;
+        let r = run_cfg(rt, &c, opts)?;
+        t.row(vec![
+            format!("{:.1}", th * 100.0),
+            pct(r.avg_inference_accuracy),
+            f2(r.energy.total_wh()),
+        ]);
+    }
+    t.emit(&opts.results_dir, "fig15")
+}
+
+// ---------------------------------------------------------------------------
+// Table VI — semi-supervised learning
+// ---------------------------------------------------------------------------
+
+fn tab6(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Table VI: semi-supervised (NC, 10% labeled, SimSiam + supervised)",
+        &["model", "method", "accuracy%", "energy_Wh"],
+    );
+    for model in ["res50", "mbv2", "deit"] {
+        for (name, tune, freeze) in [
+            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+        ] {
+            let mut c = cfg(model, Benchmark::Nc, opts).with_policies(tune, freeze);
+            c.labeled_fraction = Some(0.1);
+            let r = run_cfg(rt, &c, opts)?;
+            t.row(vec![
+                model.into(),
+                name.into(),
+                pct(r.avg_inference_accuracy),
+                f2(r.energy.total_wh()),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "tab6")
+}
+
+// ---------------------------------------------------------------------------
+// Table VII — static lazy strategies
+// ---------------------------------------------------------------------------
+
+fn tab7(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Table VII: static fine-tuning strategies vs LazyTune (res50, NC)",
+        &["method", "batches_to_trigger", "accuracy%", "energy_Wh"],
+    );
+    let mut entries: Vec<(String, TunePolicyKind)> =
+        vec![("Immed.".into(), TunePolicyKind::Immediate)];
+    for (i, n) in [5usize, 10, 20, 50].iter().enumerate() {
+        entries.push((format!("S{}", i + 1), TunePolicyKind::Static(*n)));
+    }
+    entries.push(("LazyTune".into(), TunePolicyKind::LazyTune));
+    for (name, tune) in entries {
+        let c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(tune, FreezePolicyKind::None);
+        let r = run_cfg(rt, &c, opts)?;
+        let trig = match tune {
+            TunePolicyKind::Immediate => "1".to_string(),
+            TunePolicyKind::Static(n) => format!("{n}"),
+            TunePolicyKind::LazyTune => "-".to_string(),
+        };
+        t.row(vec![
+            name,
+            trig,
+            pct(r.avg_inference_accuracy),
+            f2(r.energy.total_wh()),
+        ]);
+    }
+    t.emit(&opts.results_dir, "tab7")
+}
+
+// ---------------------------------------------------------------------------
+// Table VIII — quantization compatibility
+// ---------------------------------------------------------------------------
+
+fn tab8(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Table VIII: 8-bit QAT compatibility (res50)",
+        &["benchmark", "method", "acc_8bit%", "acc_32bit%"],
+    );
+    for b in [Benchmark::Nc, Benchmark::Nic79] {
+        for (name, tune, freeze) in [
+            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+        ] {
+            let mut cq = cfg("res50", b, opts).with_policies(tune, freeze);
+            cq.quant = true;
+            let rq = run_cfg(rt, &cq, opts)?;
+            let cf = cfg("res50", b, opts).with_policies(tune, freeze);
+            let rf = run_cfg(rt, &cf, opts)?;
+            t.row(vec![
+                b.name().into(),
+                name.into(),
+                pct(rq.avg_inference_accuracy),
+                pct(rf.avg_inference_accuracy),
+            ]);
+        }
+    }
+    t.emit(&opts.results_dir, "tab8")
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (design-choice benches called out in DESIGN.md)
+// ---------------------------------------------------------------------------
+
+fn abl_decay(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    use crate::coordinator::lazytune::DecayKind;
+    let mut t = Table::new(
+        "Ablation: batches_needed decay function (res50, NC, ETuner)",
+        &["decay", "accuracy%", "energy_Wh", "rounds"],
+    );
+    for (name, decay) in [
+        ("logarithmic (paper)", DecayKind::Logarithmic),
+        ("exponential", DecayKind::Exponential),
+        ("additive", DecayKind::Additive),
+    ] {
+        let mut c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        c.decay = decay;
+        let r = run_cfg(rt, &c, opts)?;
+        t.row(vec![
+            name.into(),
+            pct(r.avg_inference_accuracy),
+            f2(r.energy.total_wh()),
+            format!("{}", r.rounds),
+        ]);
+    }
+    t.emit(&opts.results_dir, "abl_decay")
+}
+
+fn abl_interval(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Ablation: SimFreeze probe interval (res50, NC, ETuner)",
+        &["interval_iters", "accuracy%", "energy_Wh", "cka_TFLOPs"],
+    );
+    for interval in [4u64, 8, 16, 32] {
+        let mut c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        c.freeze_interval = interval;
+        let r = run_cfg(rt, &c, opts)?;
+        t.row(vec![
+            format!("{interval}"),
+            pct(r.avg_inference_accuracy),
+            f2(r.energy.total_wh()),
+            format!("{:.2}", r.cka_tflops),
+        ]);
+    }
+    t.emit(&opts.results_dir, "abl_interval")
+}
+
+fn abl_oracle(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+    let mut t = Table::new(
+        "Ablation: scenario-change signal (res50, NC, ETuner)",
+        &["signal", "accuracy%", "energy_Wh", "changes_detected"],
+    );
+    for (name, oracle) in
+        [("energy-score detector (paper)", false), ("oracle boundaries", true)]
+    {
+        let mut c = cfg("res50", Benchmark::Nc, opts)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        c.oracle_change_detection = oracle;
+        let r = run_cfg(rt, &c, opts)?;
+        t.row(vec![
+            name.into(),
+            pct(r.avg_inference_accuracy),
+            f2(r.energy.total_wh()),
+            format!("{}", r.scenario_changes_detected),
+        ]);
+    }
+    t.emit(&opts.results_dir, "abl_oracle")
+}
+
+/// Shared helper for callers needing just one averaged cell.
+pub fn one_cell(
+    rt: &Runtime,
+    model: &str,
+    b: Benchmark,
+    tune: TunePolicyKind,
+    freeze: FreezePolicyKind,
+    opts: &ReproOpts,
+) -> Result<Report> {
+    let c = cfg(model, b, opts).with_policies(tune, freeze);
+    run_cfg(rt, &c, opts)
+}
+
+/// Results directory helper used by main.
+pub fn default_results_dir() -> &'static Path {
+    Path::new("results")
+}

@@ -1,0 +1,8 @@
+//! Experiment reproduction harness: one entry point per table/figure of the
+//! paper's evaluation (see DESIGN.md's experiment index).  Each experiment
+//! prints the paper-shaped rows/series and writes a CSV under `results/`.
+
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{list, run_experiment};

@@ -1,0 +1,279 @@
+//! Artifact manifest: everything the coordinator needs to know about the
+//! AOT-compiled programs — names, flat-θ layout, freeze-unit segments, and
+//! the paper-scale per-unit cost anchors used by [`crate::cost`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// Contiguous slice of the flat parameter vector owned by one freeze unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One named tensor inside the flat θ vector.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub unit: usize,
+    pub offset: usize,
+}
+
+impl TensorInfo {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Classifier-head location (CWR does per-class row surgery here).
+#[derive(Clone, Debug)]
+pub struct HeadInfo {
+    pub w_offset: usize,
+    pub w_shape: [usize; 2], // (H, C) row-major
+    pub b_offset: usize,
+    pub classes: usize,
+}
+
+/// Paper-scale cost anchors for one freeze unit (per-image forward FLOPs
+/// and parameter bytes of the corresponding slice of the *real* model).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperUnit {
+    pub fwd_flops: f64,
+    pub param_bytes: f64,
+}
+
+/// Artifact names for one model.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactNames {
+    pub infer: String,
+    pub features: String,
+    pub train: Vec<String>,   // index = prefix-frozen unit count k
+    pub train_q: Vec<String>, // 8-bit QAT variants (may be empty)
+    pub ssl: Option<String>,
+    pub ssl_phi_len: usize,
+}
+
+/// Everything the coordinator needs about one deployed model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub d: usize,
+    pub h: usize,
+    pub blocks: usize,
+    pub classes: usize,
+    pub units: usize,
+    pub kind: String,
+    pub theta_len: usize,
+    pub batch_train: usize,
+    pub batch_infer: usize,
+    pub batch_probe: usize,
+    pub unit_segments: Vec<Segment>,
+    pub tensors: Vec<TensorInfo>,
+    pub head: HeadInfo,
+    pub paper_units: Vec<PaperUnit>,
+    pub artifacts: ArtifactNames,
+}
+
+impl ModelManifest {
+    /// Artifact implementing a train step with `k` prefix-frozen units.
+    pub fn train_artifact(&self, k: usize, quant: bool) -> Result<&str> {
+        let list = if quant { &self.artifacts.train_q } else { &self.artifacts.train };
+        list.get(k)
+            .map(|s| s.as_str())
+            .with_context(|| format!("{}: no train artifact k={k} quant={quant}", self.name))
+    }
+
+    /// Total paper-scale forward FLOPs per image.
+    pub fn paper_fwd_flops(&self) -> f64 {
+        self.paper_units.iter().map(|u| u.fwd_flops).sum()
+    }
+
+    /// Total paper-scale parameter bytes.
+    pub fn paper_param_bytes(&self) -> f64 {
+        self.paper_units.iter().map(|u| u.param_bytes).sum()
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    /// feature-width -> cka artifact name
+    pub cka: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let mut cka = BTreeMap::new();
+        for (w, n) in v.get("cka")?.obj()? {
+            cka.insert(w.parse::<usize>()?, n.str()?.to_string());
+        }
+        Ok(Manifest { models, cka })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?}"))
+    }
+
+    pub fn cka_artifact(&self, width: usize) -> Result<&str> {
+        self.cka
+            .get(&width)
+            .map(|s| s.as_str())
+            .with_context(|| format!("no cka artifact for width {width}"))
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelManifest> {
+    let arts = m.get("artifacts")?;
+    let train = arts
+        .get("train")?
+        .arr()?
+        .iter()
+        .map(|a| Ok(a.str()?.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    let train_q = match arts.opt("train_q") {
+        Some(a) => a
+            .arr()?
+            .iter()
+            .map(|x| Ok(x.str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![],
+    };
+    let head = m.get("head")?;
+    let hw = head.get("w_shape")?.arr()?;
+    Ok(ModelManifest {
+        name: name.to_string(),
+        d: m.get("d")?.usize()?,
+        h: m.get("h")?.usize()?,
+        blocks: m.get("blocks")?.usize()?,
+        classes: m.get("classes")?.usize()?,
+        units: m.get("units")?.usize()?,
+        kind: m.get("kind")?.str()?.to_string(),
+        theta_len: m.get("theta_len")?.usize()?,
+        batch_train: m.get("batch_train")?.usize()?,
+        batch_infer: m.get("batch_infer")?.usize()?,
+        batch_probe: m.get("batch_probe")?.usize()?,
+        unit_segments: m
+            .get("unit_segments")?
+            .arr()?
+            .iter()
+            .map(|s| {
+                Ok(Segment {
+                    offset: s.get("offset")?.usize()?,
+                    len: s.get("len")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        tensors: m
+            .get("tensors")?
+            .arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorInfo {
+                    name: t.get("name")?.str()?.to_string(),
+                    shape: t
+                        .get("shape")?
+                        .arr()?
+                        .iter()
+                        .map(|d| d.usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    unit: t.get("unit")?.usize()?,
+                    offset: t.get("offset")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        head: HeadInfo {
+            w_offset: head.get("w_offset")?.usize()?,
+            w_shape: [hw[0].usize()?, hw[1].usize()?],
+            b_offset: head.get("b_offset")?.usize()?,
+            classes: hw[1].usize()?,
+        },
+        paper_units: m
+            .get("paper_units")?
+            .arr()?
+            .iter()
+            .map(|u| {
+                Ok(PaperUnit {
+                    fwd_flops: u.get("fwd_flops")?.num()?,
+                    param_bytes: u.get("param_bytes")?.num()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        artifacts: ArtifactNames {
+            infer: arts.get("infer")?.str()?.to_string(),
+            features: arts.get("features")?.str()?.to_string(),
+            train,
+            train_q,
+            ssl: arts.opt("ssl").map(|s| s.str().map(str::to_string)).transpose()?,
+            ssl_phi_len: arts.opt("ssl_phi_len").map(|v| v.usize()).transpose()?.unwrap_or(0),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1,
+      "models": {
+        "toy": {
+          "d": 8, "h": 4, "blocks": 2, "classes": 3, "kind": "relu_res",
+          "units": 4, "theta_len": 100,
+          "batch_train": 16, "batch_infer": 64, "batch_probe": 16,
+          "unit_segments": [{"offset":0,"len":36},{"offset":36,"len":20},
+                            {"offset":56,"len":20},{"offset":76,"len":24}],
+          "tensors": [{"name":"embed.w","shape":[8,4],"unit":0,"offset":0}],
+          "head": {"w_offset":76,"w_shape":[4,3],"b_offset":88,"b_shape":[3]},
+          "paper_units": [{"fwd_flops":1e9,"param_bytes":1e6},
+                          {"fwd_flops":2e9,"param_bytes":2e6},
+                          {"fwd_flops":2e9,"param_bytes":2e6},
+                          {"fwd_flops":1e8,"param_bytes":1e5}],
+          "artifacts": {"infer":"toy_infer","features":"toy_features",
+                        "train":["toy_train_0","toy_train_1"],
+                        "train_q":[]}
+        }
+      },
+      "cka": {"4": "cka_4"}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.units, 4);
+        assert_eq!(toy.unit_segments.len(), 4);
+        assert_eq!(toy.train_artifact(1, false).unwrap(), "toy_train_1");
+        assert!(toy.train_artifact(5, false).is_err());
+        assert!(toy.train_artifact(0, true).is_err());
+        assert_eq!(m.cka_artifact(4).unwrap(), "cka_4");
+        assert!(m.cka_artifact(9).is_err());
+        assert!((toy.paper_fwd_flops() - 5.1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

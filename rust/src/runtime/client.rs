@@ -1,0 +1,122 @@
+//! The PJRT client wrapper: compile-on-demand executable cache over the
+//! artifact directory.  One compiled executable per artifact, reused for
+//! the whole process lifetime (the paper's per-round "system initialization"
+//! cost is *charged* by the cost model, not re-paid for real — see
+//! [`crate::cost::device`]).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::exec::TensorF32;
+
+/// Loaded runtime: PJRT CPU client + manifest + executable cache.
+///
+/// Not `Sync`: PJRT executables are cached behind a `RefCell`.  Run one
+/// `Runtime` per thread (the simulator is single-threaded per run; sweeps
+/// parallelize across runs by constructing one runtime each).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of artifact executions so far (metrics/tests).
+    pub fn executions(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 host tensors; returns the flattened
+    /// output tuple as host tensors.  Integer inputs go through
+    /// [`Self::exec_raw`].
+    pub fn exec(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(TensorF32::to_literal).collect::<Result<_>>()?;
+        self.exec_raw(name, &lits)
+    }
+
+    /// Execute with pre-built literals (callers with i32 inputs or reused
+    /// buffers).  Output tuple is decomposed into individual tensors.
+    pub fn exec_raw(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<TensorF32>> {
+        let exe = self.executable(name)?;
+        *self.exec_count.borrow_mut() += 1;
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        parts.into_iter().map(TensorF32::from_literal).collect()
+    }
+
+    /// Read a raw little-endian f32 binary (the `<model>_theta0.bin`
+    /// initial parameters written by aot.py).
+    pub fn load_f32_bin(&self, file: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "{file}: not a multiple of 4 bytes");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Initial parameters for a model.
+    pub fn theta0(&self, model: &str) -> Result<Vec<f32>> {
+        self.load_f32_bin(&format!("{model}_theta0.bin"))
+    }
+
+    /// Initial SimSiam projector/predictor parameters.
+    pub fn phi0(&self, model: &str) -> Result<Vec<f32>> {
+        self.load_f32_bin(&format!("{model}_phi0.bin"))
+    }
+}

@@ -1,0 +1,144 @@
+//! Host-side tensor type and literal conversion helpers.
+//!
+//! Everything above the runtime deals in `TensorF32` (shape + contiguous
+//! row-major data).  Conversions to/from `xla::Literal` happen only at the
+//! execute boundary.
+
+use anyhow::Result;
+
+/// A host f32 tensor: row-major contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        TensorF32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        TensorF32 { shape: vec![data.len()], data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: reshape to rank 0
+            return lit
+                .reshape(&[])
+                .map_err(|e| anyhow::anyhow!("reshape scalar: {e:?}"));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {:?}: {e:?}", self.shape))
+    }
+
+    pub fn from_literal(lit: xla::Literal) -> Result<TensorF32> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        Ok(TensorF32::new(dims, data))
+    }
+
+    /// argmax over the last axis of a rank-2 tensor, per row.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        debug_assert_eq!(self.shape.len(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// log-sum-exp per row (rank-2) — the energy-score OOD statistic is
+    /// `E(x) = -logsumexp(logits)` (paper §IV-A3, citing [56]).
+    pub fn logsumexp_rows(&self) -> Vec<f32> {
+        debug_assert_eq!(self.shape.len(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let s: f32 = row.iter().map(|&v| (v - m).exp()).sum();
+                m + s.ln()
+            })
+            .collect()
+    }
+}
+
+/// Build an i32 literal (labels input of the train artifacts).
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape i32 {shape:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_picks_max_per_row() {
+        let t = TensorF32::new(vec![2, 3], vec![0.1, 0.9, 0.2, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let t = TensorF32::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let naive = (1f32.exp() + 2f32.exp() + 3f32.exp() + 4f32.exp()).ln();
+        assert!((t.logsumexp_rows()[0] - naive).abs() < 1e-5);
+    }
+
+    #[test]
+    fn logsumexp_stable_for_large_values() {
+        let t = TensorF32::new(vec![1, 2], vec![1000.0, 1000.0]);
+        let v = t.logsumexp_rows()[0];
+        assert!((v - (1000.0 + 2f32.ln())).abs() < 1e-3);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn row_view_is_correct_slice() {
+        let t = TensorF32::new(vec![3, 2], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.row(1), &[2.0, 3.0]);
+    }
+}

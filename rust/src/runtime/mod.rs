@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `make artifacts` and
+//! executes them on the request path.  This is the only module that talks
+//! to XLA; everything above it deals in `Vec<f32>`.
+//!
+//! Interchange is **HLO text** (see DESIGN.md / aot.py): jax ≥ 0.5 protos
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids and round-trips cleanly.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
+pub use client::Runtime;
+pub use exec::TensorF32;

@@ -1,0 +1,10 @@
+//! The continual-learning simulation: one deployed model serving a
+//! benchmark's event stream under a (tune, freeze) policy pair, with all
+//! compute flowing through the PJRT artifacts and all costs charged to the
+//! Jetson-scale ledger.
+
+pub mod run;
+pub mod sweep;
+
+pub use run::{RunConfig, Simulation};
+pub use sweep::run_averaged;

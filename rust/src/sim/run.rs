@@ -1,0 +1,538 @@
+//! One continual-learning run (the runtime behind every table and figure).
+//!
+//! Mirrors the paper's Fig. 1 timeline: training batches and inference
+//! requests arrive over virtual time; the coordinator buffers batches,
+//! triggers fine-tuning rounds per the inter-tuning policy, freezes layers
+//! per the intra-tuning policy, detects scenario changes from inference
+//! energy scores, and maintains CWR head consolidation across scenarios.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::coordinator::policy::{
+    FreezePolicy, FreezePolicyKind, NoFreeze, SimFreezePolicy, TunePolicy,
+    TunePolicyKind,
+};
+use crate::coordinator::lazytune::{DecayKind, LazyTune, DEFAULT_CAP};
+use crate::coordinator::simfreeze::SimFreeze;
+use crate::coordinator::EnergyOod;
+use crate::cost::device::DeviceModel;
+use crate::cost::energy::CostBook;
+use crate::cost::flops;
+use crate::data::arrival::ArrivalKind;
+use crate::data::benchmarks::{self, Benchmark, Schedule};
+use crate::data::stream::{EventKind, Stream};
+use crate::metrics::{Report, RequestRecord, RoundRecord};
+use crate::model::{Cwr, ModelSession, Params};
+use crate::rng::Pcg32;
+use crate::runtime::Runtime;
+
+/// Everything configurable about one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub benchmark: Benchmark,
+    pub tune: TunePolicyKind,
+    pub freeze: FreezePolicyKind,
+    pub seed: u64,
+    pub n_requests: usize,
+    pub train_arrival: ArrivalKind,
+    pub infer_arrival: ArrivalKind,
+    /// SimFreeze stability threshold (paper default 1%).
+    pub cka_th: f64,
+    /// SimFreeze probe interval in training iterations.
+    pub freeze_interval: u64,
+    /// Use the 8-bit QAT artifacts (Table VIII; res50 only).
+    pub quant: bool,
+    /// `Some(frac)`: semi-supervised mode with `frac` of batches labeled.
+    pub labeled_fraction: Option<f32>,
+    pub lr: f32,
+    /// RigL sparsity when `freeze == RigL`.
+    pub rigl_sparsity: f32,
+    pub device: DeviceModel,
+    /// Keep the per-layer CKA trace (Fig. 5) — costs memory.
+    pub keep_cka_trace: bool,
+    /// LazyTune's request-pressure decay function (ablation: §IV-A2).
+    pub decay: DecayKind,
+    /// Use the event stream's true scenario boundaries instead of the
+    /// energy-score detector (oracle ablation).
+    pub oracle_change_detection: bool,
+}
+
+impl RunConfig {
+    pub fn quickstart(model: &str, benchmark: Benchmark) -> RunConfig {
+        RunConfig {
+            model: model.to_string(),
+            benchmark,
+            tune: TunePolicyKind::LazyTune,
+            freeze: FreezePolicyKind::SimFreeze,
+            seed: 1,
+            n_requests: 500,
+            train_arrival: ArrivalKind::Poisson,
+            infer_arrival: ArrivalKind::Poisson,
+            cka_th: 0.01,
+            freeze_interval: 8,
+            quant: false,
+            labeled_fraction: None,
+            lr: 0.05,
+            rigl_sparsity: 0.8,
+            device: DeviceModel::jetson_nx_15w(),
+            keep_cka_trace: false,
+            decay: DecayKind::Logarithmic,
+            oracle_change_detection: false,
+        }
+    }
+
+    pub fn with_policies(mut self, tune: TunePolicyKind, freeze: FreezePolicyKind) -> Self {
+        self.tune = tune;
+        self.freeze = freeze;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Ready-to-run simulation state.
+pub struct Simulation<'rt> {
+    cfg: RunConfig,
+    sess: ModelSession<'rt>,
+    schedule: Schedule,
+    stream: Stream,
+    params: Params,
+    phi: Vec<f32>,
+    cwr: Cwr,
+    tune: TunePolicy,
+    freeze: Box<dyn FreezePolicy>,
+    ood: EnergyOod,
+    book: CostBook,
+    rng: Pcg32,
+    val_pool_x: Vec<f32>,
+    val_pool_y: Vec<i32>,
+    last_energy_score: Option<f64>,
+    report: Report,
+}
+
+const VAL_KEEP: usize = 64; // rolling validation window (≈5% of stream)
+
+impl<'rt> Simulation<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Simulation<'rt>> {
+        let mut sess = ModelSession::new(rt, &cfg.model)?;
+        sess.quant = cfg.quant;
+        sess.lr = cfg.lr;
+        let mut schedule = benchmarks::build(cfg.benchmark, cfg.seed);
+        let stream = Stream::generate(
+            cfg.benchmark,
+            cfg.n_requests,
+            cfg.train_arrival,
+            cfg.infer_arrival,
+            cfg.seed,
+        );
+        let rng = Pcg32::new(cfg.seed ^ 0xE7E7, 5);
+
+        // --- pre-deployment: "originally well-trained on scenario 1" ----
+        let mut params = sess.theta0()?;
+        let warm_fs = flops::FreezeState::none(sess.m.units);
+        let warm_classes = schedule.scenarios[0].classes.clone();
+        for _ in 0..cfg.benchmark.warmup_batches() {
+            let (x, y) =
+                schedule.world.batch(sess.m.batch_train, 0, &warm_classes);
+            sess.train_step(&mut params, &x, &y, &warm_fs)?;
+        }
+        let mut cwr = Cwr::new(&sess.m);
+        cwr.consolidate(&sess.m, &params, &warm_classes);
+
+        let phi = if cfg.labeled_fraction.is_some() {
+            rt.phi0(&cfg.model)?
+        } else {
+            vec![]
+        };
+
+        // --- policies ----------------------------------------------------
+        let tune = match cfg.tune {
+            TunePolicyKind::LazyTune => TunePolicy::Lazy(
+                LazyTune::with_decay(DEFAULT_CAP, cfg.decay),
+            ),
+            other => other.build(),
+        };
+        let freeze: Box<dyn FreezePolicy> = match cfg.freeze {
+            FreezePolicyKind::None => Box::new(NoFreeze::new(sess.m.units)),
+            FreezePolicyKind::SimFreeze => {
+                let mut sf = SimFreeze::new(
+                    sess.m.units,
+                    params.theta.clone(),
+                    cfg.freeze_interval,
+                    cfg.cka_th,
+                );
+                sf.keep_trace = cfg.keep_cka_trace;
+                Box::new(SimFreezePolicy::new(sf))
+            }
+            FreezePolicyKind::Egeria => Box::new(baselines::egeria::Egeria::new(
+                &sess.m,
+                params.theta.clone(),
+                cfg.freeze_interval,
+            )),
+            FreezePolicyKind::SlimFit => Box::new(
+                baselines::slimfit::SlimFit::new(&sess.m, cfg.freeze_interval),
+            ),
+            FreezePolicyKind::RigL => Box::new(baselines::rigl::RigL::new(
+                &sess.m,
+                cfg.rigl_sparsity,
+                cfg.seed,
+            )),
+            FreezePolicyKind::Ekya => {
+                Box::new(baselines::ekya::Ekya::new(&sess.m))
+            }
+        };
+
+        let book = CostBook::new(cfg.device.clone());
+        let mut report = Report::default();
+        report.model = cfg.model.clone();
+        report.benchmark = cfg.benchmark.name().to_string();
+        report.tune_policy = cfg.tune.name();
+        report.freeze_policy = cfg.freeze.name().to_string();
+        report.seed = cfg.seed;
+
+        Ok(Simulation {
+            cfg,
+            sess,
+            schedule,
+            stream,
+            params,
+            phi,
+            cwr,
+            tune,
+            freeze,
+            ood: EnergyOod::new(),
+            book,
+            rng,
+            val_pool_x: Vec::new(),
+            val_pool_y: Vec::new(),
+            last_energy_score: None,
+            report,
+        })
+    }
+
+    /// Run the whole event stream; consumes the simulation.
+    pub fn run(mut self) -> Result<Report> {
+        let wall = Instant::now();
+        let mut buffer: Vec<(Vec<f32>, Vec<i32>, usize)> = Vec::new();
+        let mut trained_classes: Vec<usize> = Vec::new();
+        let mut reinit_done: Vec<bool> = vec![false; self.sess.m.classes];
+        let mut probe_pending = true;
+        let mut total_iters: u64 = 0;
+        let mut first_round = true;
+        let mut last_train_scenario: Option<usize> = None;
+
+        let events = std::mem::take(&mut self.stream.events);
+        for ev in &events {
+            match ev.kind {
+                EventKind::TrainBatch => {
+                    // oracle ablation: take scenario boundaries from the
+                    // stream instead of the energy-score detector.
+                    if self.cfg.oracle_change_detection
+                        && last_train_scenario
+                            .is_some_and(|s| s != ev.scenario)
+                    {
+                        self.report.scenario_changes_detected += 1;
+                        self.tune.on_scenario_change();
+                        self.cwr.consolidate(
+                            &self.sess.m,
+                            &self.params,
+                            &trained_classes,
+                        );
+                        trained_classes.clear();
+                        reinit_done.iter_mut().for_each(|r| *r = false);
+                        probe_pending = true;
+                    }
+                    last_train_scenario = Some(ev.scenario);
+                    let scen = &self.schedule.scenarios[ev.scenario];
+                    let classes = scen.classes.clone();
+                    let (x, y) = self.schedule.world.batch(
+                        self.sess.m.batch_train,
+                        ev.scenario,
+                        &classes,
+                    );
+                    // 5%-ish validation split: 1 of every 16 samples.
+                    if self.rng.f32() < 0.05 * 16.0 / 16.0 {
+                        self.push_val(&x, &y);
+                    }
+                    if probe_pending {
+                        self.freeze.on_scenario_probe(
+                            &self.sess,
+                            &self.params,
+                            &x,
+                            &mut self.book,
+                        )?;
+                        probe_pending = false;
+                    }
+                    // CWR: first exposure of a class since the last change
+                    // reinitializes its training row.
+                    let fresh: Vec<usize> = y
+                        .iter()
+                        .map(|&c| c as usize)
+                        .filter(|&c| !reinit_done[c])
+                        .collect();
+                    if !fresh.is_empty() {
+                        for &c in &fresh {
+                            reinit_done[c] = true;
+                        }
+                        // only classes never consolidated start from zero —
+                        // re-exposed classes keep their bank discriminator.
+                        let unseen: Vec<usize> = fresh
+                            .iter()
+                            .copied()
+                            .filter(|&c| !self.cwr.seen(c))
+                            .collect();
+                        self.cwr.reinit_rows(&self.sess.m, &mut self.params, &unseen);
+                    }
+                    buffer.push((x, y, ev.scenario));
+
+                    if self.tune.should_trigger(buffer.len()) {
+                        self.run_round(
+                            ev.t,
+                            ev.scenario,
+                            &mut buffer,
+                            &mut trained_classes,
+                            &mut total_iters,
+                            &mut first_round,
+                        )?;
+                    }
+                }
+                EventKind::Inference => {
+                    self.serve_request(ev.t, ev.scenario, buffer.len())?;
+                    self.tune.on_inference();
+                    // scenario-change detection from the request stream
+                    if !self.cfg.oracle_change_detection && self.detect_change()? {
+                        self.report.scenario_changes_detected += 1;
+                        self.tune.on_scenario_change();
+                        self.cwr.consolidate(
+                            &self.sess.m,
+                            &self.params,
+                            &trained_classes,
+                        );
+                        trained_classes.clear();
+                        reinit_done.iter_mut().for_each(|r| *r = false);
+                        probe_pending = true;
+                    }
+                }
+            }
+        }
+        // flush any remaining buffered data as a final round
+        if !buffer.is_empty() {
+            let t = self.stream.horizon;
+            let scen = buffer.last().unwrap().2;
+            self.run_round(
+                t,
+                scen,
+                &mut buffer,
+                &mut trained_classes,
+                &mut total_iters,
+                &mut first_round,
+            )?;
+        }
+        self.cwr
+            .consolidate(&self.sess.m, &self.params, &trained_classes);
+
+        self.report.memory_end_bytes = flops::train_memory_bytes(
+            &self.sess.m,
+            self.freeze.state(),
+            self.sess.m.batch_train,
+        );
+        self.report.cka_trace = self.freeze.cka_trace();
+        self.report.energy = self.book.breakdown;
+        self.report.rounds = self.book.rounds;
+        self.report.train_iterations = self.book.train_iterations;
+        self.report.train_tflops = self.book.train_flops / 1e12;
+        self.report.cka_tflops = self.book.cka_flops / 1e12;
+        self.report.wall_exec_s = wall.elapsed().as_secs_f64();
+        self.report.finish();
+        Ok(self.report)
+    }
+
+    // -- internals -----------------------------------------------------------
+
+    fn push_val(&mut self, x: &[f32], y: &[i32]) {
+        let d = self.sess.m.d;
+        // take the first 4 samples of the batch into the rolling pool
+        for i in 0..4.min(y.len()) {
+            self.val_pool_x.extend_from_slice(&x[i * d..(i + 1) * d]);
+            self.val_pool_y.push(y[i]);
+        }
+        while self.val_pool_y.len() > VAL_KEEP {
+            self.val_pool_x.drain(0..d);
+            self.val_pool_y.remove(0);
+        }
+    }
+
+    fn validation_accuracy(&mut self) -> Result<f64> {
+        if self.val_pool_y.is_empty() {
+            return Ok(0.0);
+        }
+        let d = self.sess.m.d;
+        let b = self.sess.m.batch_infer;
+        let mut x = Vec::with_capacity(b * d);
+        let mut y = Vec::with_capacity(b);
+        for i in 0..b {
+            let j = i % self.val_pool_y.len();
+            x.extend_from_slice(&self.val_pool_x[j * d..(j + 1) * d]);
+            y.push(self.val_pool_y[j]);
+        }
+        self.book.charge_validation(&self.sess.m, b);
+        let acc = self.sess.accuracy(&self.params, &x, &y)?;
+        Ok(acc as f64)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_round(
+        &mut self,
+        t: f64,
+        scenario: usize,
+        buffer: &mut Vec<(Vec<f32>, Vec<i32>, usize)>,
+        trained_classes: &mut Vec<usize>,
+        total_iters: &mut u64,
+        first_round: &mut bool,
+    ) -> Result<()> {
+        let batches_needed = self.tune.batches_needed();
+        self.book.charge_round_overhead(&self.sess.m);
+        if *first_round {
+            self.report.memory_begin_bytes = flops::train_memory_bytes(
+                &self.sess.m,
+                self.freeze.state(),
+                self.sess.m.batch_train,
+            );
+            *first_round = false;
+        }
+        let batches = buffer.len();
+        let mut iters_this_round = 0u64;
+        for (x, y, _scen) in buffer.drain(..) {
+            let labeled = match self.cfg.labeled_fraction {
+                None => true,
+                Some(f) => self.rng.f32() < f,
+            };
+            let scale = self.freeze.compute_inefficiency();
+            self.book
+                .charge_train_scaled(&self.sess.m, self.freeze.state(), 1, scale);
+            if labeled {
+                self.sess
+                    .train_step(&mut self.params, &x, &y, self.freeze.state())?;
+                for &c in &y {
+                    if !trained_classes.contains(&(c as usize)) {
+                        trained_classes.push(c as usize);
+                    }
+                }
+            } else {
+                // SimSiam on two augmented views (noise + per-dim jitter)
+                let (v1, v2) = self.augment(&x);
+                let mut phi = std::mem::take(&mut self.phi);
+                self.sess.ssl_step(
+                    &mut self.params,
+                    &mut phi,
+                    &v1,
+                    &v2,
+                    self.freeze.state(),
+                )?;
+                self.phi = phi;
+            }
+            self.freeze
+                .after_iteration(&self.sess, &mut self.params, &mut self.book)?;
+            iters_this_round += 1;
+            *total_iters += 1;
+        }
+        let val_acc = self.validation_accuracy()?;
+        self.tune.on_round_end(*total_iters, val_acc);
+        self.freeze.on_round_end(
+            &self.sess,
+            &mut self.params,
+            val_acc,
+            &mut self.book,
+        )?;
+        self.report.round_log.push(RoundRecord {
+            t,
+            scenario,
+            batches,
+            iterations: iters_this_round,
+            batches_needed,
+            val_acc,
+            frozen_units: self.freeze.state().frozen.iter().filter(|&&f| f).count(),
+        });
+        Ok(())
+    }
+
+    fn augment(&mut self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let mut v1 = x.to_vec();
+        let mut v2 = x.to_vec();
+        for v in v1.iter_mut() {
+            *v = *v * (0.9 + 0.2 * self.rng.f32()) + 0.1 * self.rng.normal();
+        }
+        for v in v2.iter_mut() {
+            *v = *v * (0.9 + 0.2 * self.rng.f32()) + 0.1 * self.rng.normal();
+        }
+        (v1, v2)
+    }
+
+    /// Serve one inference request: a test draw over the classes present in
+    /// the deployment environment so far (the CORe50 protocol evaluates on
+    /// encountered objects), under the active scenario's transform.
+    fn serve_request(&mut self, t: f64, scenario: usize, stale: usize) -> Result<()> {
+        let seen = self.schedule.scenarios[scenario].seen.clone();
+        let (x, y) = self.schedule.world.batch(
+            self.sess.m.batch_infer,
+            scenario,
+            &seen,
+        );
+        // serve with the consolidated head for past classes, keeping the
+        // live training rows for classes of the current scenario.
+        let mut serving = self.params.clone();
+        let current = self.schedule.scenarios[scenario].classes.clone();
+        self.install_bank_except(&mut serving, &current);
+        // ONE artifact execution serves both the prediction and the OOD
+        // energy score (§Perf L3: halves the request-path cost).
+        let logits = self.sess.infer(&serving, &x)?;
+        let pred = logits.argmax_rows();
+        let correct = pred
+            .iter()
+            .zip(&y)
+            .filter(|(p, t)| **p == **t as usize)
+            .count();
+        let acc = correct as f32 / y.len() as f32;
+        let lse = logits.logsumexp_rows();
+        let mean_score =
+            lse.iter().map(|&s| -s as f64).sum::<f64>() / lse.len() as f64;
+        self.last_energy_score = Some(mean_score);
+        if std::env::var_os("ETUNER_DEBUG").is_some() {
+            eprintln!(
+                "[dbg] t={t:.0} scen={scenario} acc={acc:.3} energy={mean_score:.3}"
+            );
+        }
+        self.report.requests.push(RequestRecord {
+            t,
+            scenario,
+            accuracy: acc,
+            stale_batches: stale,
+        });
+        Ok(())
+    }
+
+    fn detect_change(&mut self) -> Result<bool> {
+        if let Some(score) = self.last_energy_score.take() {
+            Ok(self.ood.observe(score))
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn install_bank_except(&mut self, p: &mut Params, except: &[usize]) {
+        // install consolidated rows for every seen class not being trained
+        for c in 0..self.sess.m.classes {
+            if except.contains(&c) || !self.cwr.seen(c) {
+                continue;
+            }
+            self.cwr.install_class(&self.sess.m, p, c);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Seed sweeps: the paper reports every number as the average of 5 runs
+//! with different random seeds.
+
+use anyhow::Result;
+
+use crate::metrics::{average, Report};
+use crate::runtime::Runtime;
+
+use super::run::{RunConfig, Simulation};
+
+/// Run `cfg` under `seeds` and return (mean report, per-seed reports).
+pub fn run_averaged(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    seeds: &[u64],
+) -> Result<(Report, Vec<Report>)> {
+    anyhow::ensure!(!seeds.is_empty(), "need at least one seed");
+    let mut reports = Vec::with_capacity(seeds.len());
+    for &s in seeds {
+        let c = cfg.clone().with_seed(s);
+        reports.push(Simulation::new(rt, c)?.run()?);
+    }
+    Ok((average(&reports), reports))
+}

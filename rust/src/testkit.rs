@@ -1,0 +1,53 @@
+//! Shared helpers for tests, benches and examples.
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$ETUNER_ARTIFACTS` or
+/// `<crate root>/artifacts` (works from `cargo test/bench/run`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ETUNER_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Simple timing helper for the dependency-free bench harness.
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Measure `f` with warmup; returns (mean_ms, min_ms, max_ms) over `n`.
+pub fn bench<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_ms());
+    }
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    (mean, min, max)
+}

@@ -1,0 +1,229 @@
+//! Property-based tests on coordinator invariants (hand-rolled generators —
+//! proptest is not available offline).  Each property runs over hundreds of
+//! randomized cases seeded from a PCG stream, so failures are reproducible.
+
+use etuner::coordinator::policy::{TunePolicy, TunePolicyKind};
+use etuner::coordinator::{curve, EnergyOod, LazyTune};
+use etuner::cost::flops::FreezeState;
+use etuner::nnls::{nnls, Mat};
+use etuner::rng::Pcg32;
+
+/// Property: whatever signal sequence LazyTune sees, `batches_needed`
+/// stays within [1, cap] and triggering is monotone in buffered batches.
+#[test]
+fn prop_lazytune_threshold_always_in_bounds() {
+    let mut rng = Pcg32::new(101, 1);
+    for case in 0..300 {
+        let cap = 1 + rng.below(40);
+        let mut lt = LazyTune::new(cap);
+        let mut iters = 0u64;
+        for _ in 0..rng.below(60) {
+            match rng.below(4) {
+                0 => {
+                    iters += 1 + rng.below(10) as u64;
+                    lt.on_round_end(iters, rng.f64());
+                }
+                1 => lt.on_inference(),
+                2 => lt.on_scenario_change(),
+                _ => {}
+            }
+            let n = lt.batches_needed();
+            assert!(
+                (1..=cap).contains(&n),
+                "case {case}: batches_needed {n} not in [1, {cap}]"
+            );
+            // monotone triggering
+            if lt.should_trigger(3) {
+                assert!(lt.should_trigger(4));
+            }
+            if !lt.should_trigger(5) {
+                assert!(!lt.should_trigger(4));
+            }
+        }
+    }
+}
+
+/// Property: the log-decay from any starting point reaches 1 within a
+/// bounded number of inference arrivals and never increases.
+#[test]
+fn prop_inference_decay_monotone_and_convergent() {
+    let mut rng = Pcg32::new(102, 2);
+    for _ in 0..200 {
+        let mut lt = LazyTune::new(64);
+        // drive threshold up with a saturating history
+        let mut iters = 0;
+        for r in 0..(3 + rng.below(20)) {
+            iters += 1;
+            lt.on_round_end(iters, 0.9 - 0.5 / (r + 1) as f64);
+        }
+        let mut prev = lt.batches_needed();
+        let mut steps = 0;
+        while lt.batches_needed() > 1 {
+            lt.on_inference();
+            let cur = lt.batches_needed();
+            assert!(cur <= prev, "decay increased: {prev} -> {cur}");
+            prev = cur;
+            steps += 1;
+            assert!(steps < 500, "decay did not converge");
+        }
+    }
+}
+
+/// Property: NNLS curve fits on monotone-increasing histories are
+/// monotone non-decreasing everywhere (non-negative coefficients).
+#[test]
+fn prop_fitted_curves_are_monotone() {
+    let mut rng = Pcg32::new(103, 3);
+    for case in 0..200 {
+        let n = 3 + rng.below(20);
+        let mut pts = Vec::new();
+        let mut acc: f64 = 0.2 + 0.3 * rng.f64();
+        let mut k = 0.0;
+        for _ in 0..n {
+            k += 1.0 + rng.below(5) as f64;
+            acc += (1.0 - acc) * 0.3 * rng.f64(); // saturating growth
+            pts.push((k, acc));
+        }
+        let Some(c) = curve::fit(&pts) else {
+            panic!("fit failed with {n} points")
+        };
+        let mut prev = f64::NEG_INFINITY;
+        for kk in 1..100 {
+            let v = c.eval(kk as f64);
+            assert!(v >= prev - 1e-9, "case {case}: curve decreases");
+            prev = v;
+        }
+    }
+}
+
+/// Property: iterations_for_next_gain is in [1, cap] and weakly decreasing
+/// in the requested gain's achievability (steeper curve -> fewer iters).
+#[test]
+fn prop_iterations_estimate_bounded() {
+    let mut rng = Pcg32::new(104, 4);
+    for _ in 0..300 {
+        let c = curve::Curve {
+            c0: rng.f64(),
+            c1: rng.f64() * 2.0,
+            c2: rng.f64(),
+        };
+        let cap = 1 + rng.below(50);
+        let n = curve::iterations_for_next_gain(
+            &c,
+            1.0 + rng.below(100) as f64,
+            rng.f64() * 0.2,
+            cap,
+        );
+        assert!((1..=cap).contains(&n));
+    }
+}
+
+/// Property: NNLS never returns negative components and never increases
+/// the residual relative to the zero vector (random rectangular systems).
+#[test]
+fn prop_nnls_feasible_and_no_worse_than_zero() {
+    let mut rng = Pcg32::new(105, 5);
+    for case in 0..200 {
+        let rows = 2 + rng.below(10);
+        let cols = 1 + rng.below(6);
+        let mut rv = Vec::new();
+        for _ in 0..rows {
+            rv.push((0..cols).map(|_| rng.normal() as f64).collect::<Vec<_>>());
+        }
+        let a = Mat::from_rows(&rv);
+        let b: Vec<f64> = (0..rows).map(|_| rng.normal() as f64).collect();
+        let x = nnls(&a, &b);
+        assert_eq!(x.len(), cols);
+        assert!(x.iter().all(|&v| v >= 0.0), "case {case}: negative x");
+        let resid = |x: &[f64]| -> f64 {
+            (0..rows)
+                .map(|i| {
+                    let ax: f64 =
+                        (0..cols).map(|j| a.at(i, j) * x[j]).sum();
+                    (ax - b[i]).powi(2)
+                })
+                .sum()
+        };
+        assert!(
+            resid(&x) <= resid(&vec![0.0; cols]) + 1e-9,
+            "case {case}: worse than zero"
+        );
+    }
+}
+
+/// Property: FreezeState invariants — lr_mask matches frozen flags,
+/// frozen_prefix is the longest prefix, counts are consistent.
+#[test]
+fn prop_freeze_state_consistency() {
+    let mut rng = Pcg32::new(106, 6);
+    for _ in 0..500 {
+        let units = 2 + rng.below(12);
+        let mut fs = FreezeState::none(units);
+        for f in fs.frozen.iter_mut() {
+            *f = rng.f32() < 0.5;
+        }
+        let mask = fs.lr_mask();
+        assert_eq!(mask.len(), units);
+        for (u, (&f, &m)) in fs.frozen.iter().zip(mask.iter()).enumerate() {
+            assert_eq!(m == 0.0, f, "unit {u}");
+        }
+        let p = fs.frozen_prefix();
+        assert!(fs.frozen[..p].iter().all(|&f| f));
+        assert!(p == units || !fs.frozen[p]);
+        assert_eq!(
+            fs.trainable_count(),
+            fs.frozen.iter().filter(|&&f| !f).count()
+        );
+    }
+}
+
+/// Property: the OOD detector never fires on a constant stream, and the
+/// false-positive rate on pure noise stays tiny.
+#[test]
+fn prop_ood_quiet_on_stationary_streams() {
+    let mut rng = Pcg32::new(107, 7);
+    let mut false_positives = 0;
+    let mut total = 0;
+    for _ in 0..50 {
+        let level = -20.0 + 30.0 * rng.f64();
+        let noise = 0.05 + 0.3 * rng.f64();
+        let mut d = EnergyOod::new();
+        for _ in 0..120 {
+            total += 1;
+            if d.observe(level + noise * rng.normal() as f64) {
+                false_positives += 1;
+            }
+        }
+    }
+    assert!(
+        (false_positives as f64) < 0.01 * total as f64,
+        "{false_positives}/{total} false positives"
+    );
+}
+
+/// Property: a tune policy's trigger decision equals `batches_needed()`
+/// comparison for every policy kind.
+#[test]
+fn prop_trigger_consistent_with_threshold() {
+    let mut rng = Pcg32::new(108, 8);
+    for _ in 0..200 {
+        let kind = match rng.below(3) {
+            0 => TunePolicyKind::Immediate,
+            1 => TunePolicyKind::Static(1 + rng.below(30)),
+            _ => TunePolicyKind::LazyTune,
+        };
+        let mut p: TunePolicy = kind.build();
+        // random signal soup
+        for _ in 0..rng.below(30) {
+            match rng.below(3) {
+                0 => p.on_round_end(rng.below(100) as u64 + 1, rng.f64()),
+                1 => p.on_inference(),
+                _ => p.on_scenario_change(),
+            }
+        }
+        let need = p.batches_needed();
+        for ava in 0..need + 3 {
+            assert_eq!(p.should_trigger(ava), ava >= need);
+        }
+    }
+}

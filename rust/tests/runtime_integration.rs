@@ -1,0 +1,258 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Skipped (with a notice) when `make artifacts` has not run.
+//!
+//! NOTE: each test builds its own `Runtime` (PJRT CPU client); they are
+//! cheap.  Tests requiring artifacts call `require!()` first.
+
+use etuner::cost::flops::FreezeState;
+use etuner::model::ModelSession;
+use etuner::rng::Pcg32;
+use etuner::runtime::Runtime;
+use etuner::testkit;
+
+macro_rules! require {
+    () => {
+        if !testkit::artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn runtime() -> Runtime {
+    Runtime::load(testkit::artifacts_dir()).expect("runtime")
+}
+
+/// Two linearly separable synthetic classes.
+fn two_class_batch(
+    rng: &mut Pcg32,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0.0f32; n * d];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = (rng.next_u32() % 2) as i32;
+        y.push(c);
+        for j in 0..d {
+            let mu = if c == 0 { 1.0 } else { -1.0 };
+            let sign = if j % 2 == 0 { mu } else { -mu };
+            x[i * d + j] = 0.8 * sign + 0.5 * rng.normal();
+        }
+    }
+    (x, y)
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    require!();
+    let rt = runtime();
+    for m in ["res50", "mbv2", "deit", "bert"] {
+        let mm = rt.manifest.model(m).unwrap();
+        assert_eq!(mm.artifacts.train.len(), mm.units);
+        assert!(rt.theta0(m).unwrap().len() == mm.theta_len);
+    }
+}
+
+#[test]
+fn infer_runs_and_is_deterministic() {
+    require!();
+    let rt = runtime();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let p = sess.theta0().unwrap();
+    let x = vec![0.1f32; sess.m.batch_infer * sess.m.d];
+    let a = sess.infer(&p, &x).unwrap();
+    let b = sess.infer(&p, &x).unwrap();
+    assert_eq!(a.shape, vec![sess.m.batch_infer, sess.m.classes]);
+    assert_eq!(a.data, b.data);
+    assert!(a.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn training_learns_two_classes() {
+    require!();
+    let rt = runtime();
+    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    sess.lr = 0.05;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(7, 7);
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..40 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        let loss = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+        assert!(loss.is_finite(), "loss diverged");
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+    }
+    assert!(
+        last_loss < first_loss.unwrap() * 0.6,
+        "loss {first_loss:?} -> {last_loss}"
+    );
+    // accuracy on a fresh draw
+    let (x, y) = {
+        let mut x = vec![0.0f32; sess.m.batch_infer * sess.m.d];
+        let mut y = Vec::new();
+        let (bx, by) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
+        x.copy_from_slice(&bx);
+        y.extend(by);
+        (x, y)
+    };
+    let acc = sess.accuracy(&p, &x, &y).unwrap();
+    assert!(acc > 0.8, "accuracy {acc}");
+}
+
+#[test]
+fn prefix_frozen_units_do_not_move() {
+    require!();
+    let rt = runtime();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let mut fs = FreezeState::none(sess.m.units);
+    fs.frozen[0] = true;
+    fs.frozen[1] = true;
+    let mut rng = Pcg32::new(8, 8);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    for u in 0..sess.m.units {
+        let moved = p
+            .unit(&sess.m, u)
+            .iter()
+            .zip(p0.unit(&sess.m, u))
+            .any(|(a, b)| a != b);
+        if u < 2 {
+            assert!(!moved, "frozen unit {u} moved");
+        } else {
+            assert!(moved, "trainable unit {u} did not move");
+        }
+    }
+}
+
+#[test]
+fn interior_lr_mask_freezes_unit() {
+    require!();
+    let rt = runtime();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let mut fs = FreezeState::none(sess.m.units);
+    fs.frozen[3] = true; // interior unit: lr-mask path (Case 2)
+    let mut rng = Pcg32::new(9, 9);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    let moved3 = p
+        .unit(&sess.m, 3)
+        .iter()
+        .zip(p0.unit(&sess.m, 3))
+        .any(|(a, b)| a != b);
+    assert!(!moved3, "masked unit moved");
+    let moved2 = p
+        .unit(&sess.m, 2)
+        .iter()
+        .zip(p0.unit(&sess.m, 2))
+        .any(|(a, b)| a != b);
+    assert!(moved2);
+}
+
+#[test]
+fn features_and_cka_probe_work() {
+    require!();
+    let rt = runtime();
+    let sess = ModelSession::new(&rt, "res50").unwrap();
+    let p = sess.theta0().unwrap();
+    let x = {
+        let mut rng = Pcg32::new(10, 10);
+        (0..sess.m.batch_probe * sess.m.d)
+            .map(|_| rng.normal())
+            .collect::<Vec<f32>>()
+    };
+    let f = sess.features(&p, &x).unwrap();
+    assert_eq!(
+        f.shape,
+        vec![sess.m.blocks + 1, sess.m.batch_probe, sess.m.h]
+    );
+    // identical models -> CKA == 1 for every layer
+    for l in 0..sess.m.blocks + 1 {
+        let cka = sess.cka_layer(&f, &f, l).unwrap();
+        assert!((cka - 1.0).abs() < 1e-4, "layer {l}: {cka}");
+    }
+}
+
+#[test]
+fn cka_differs_after_training() {
+    require!();
+    let rt = runtime();
+    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    sess.lr = 0.1;
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(11, 11);
+    let (probe, _) = two_class_batch(&mut rng, sess.m.batch_probe, sess.m.d);
+    for _ in 0..20 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    }
+    let f0 = sess.features(&p0, &probe).unwrap();
+    let f1 = sess.features(&p, &probe).unwrap();
+    // at least one later layer must have drifted from the reference
+    let mut min_cka = f32::INFINITY;
+    for l in 0..sess.m.blocks + 1 {
+        min_cka = min_cka.min(sess.cka_layer(&f1, &f0, l).unwrap());
+    }
+    assert!(min_cka < 0.9999, "nothing drifted: {min_cka}");
+}
+
+#[test]
+fn ssl_step_runs_and_is_finite() {
+    require!();
+    let rt = runtime();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let mut phi = rt.phi0("mbv2").unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(12, 12);
+    let (x, _) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    let x2: Vec<f32> = x.iter().map(|v| v * 1.05).collect();
+    let mut last = 0.0;
+    for _ in 0..5 {
+        last = sess.ssl_step(&mut p, &mut phi, &x, &x2, &fs).unwrap();
+        assert!(last.is_finite());
+    }
+    assert!(last >= -1.0 - 1e-5, "cosine loss out of range: {last}");
+}
+
+#[test]
+fn quant_train_artifact_runs() {
+    require!();
+    let rt = runtime();
+    let mut sess = ModelSession::new(&rt, "res50").unwrap();
+    sess.quant = true;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(13, 13);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    let loss = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn energy_scores_are_finite_after_warmup_training() {
+    require!();
+    let rt = runtime();
+    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    sess.lr = 0.05;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(14, 14);
+    for _ in 0..60 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        let loss = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+        assert!(loss.is_finite(), "warmup diverged");
+    }
+    let (x, _) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
+    let scores = sess.energy_scores(&p, &x).unwrap();
+    assert!(scores.iter().all(|s| s.is_finite()), "{scores:?}");
+}

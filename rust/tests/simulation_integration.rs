@@ -1,0 +1,239 @@
+//! Whole-system integration tests: full continual-learning runs through the
+//! real artifacts, checking the paper's qualitative claims hold on this
+//! testbed.  Heavier than unit tests; all require `make artifacts`.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::arrival::ArrivalKind;
+use etuner::data::benchmarks::Benchmark;
+use etuner::runtime::Runtime;
+use etuner::sim::{RunConfig, Simulation};
+use etuner::testkit;
+
+macro_rules! require {
+    () => {
+        if !testkit::artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn quick(model: &str, b: Benchmark) -> RunConfig {
+    let mut c = RunConfig::quickstart(model, b);
+    c.n_requests = 80;
+    c
+}
+
+#[test]
+fn immediate_run_fires_one_round_per_batch() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let cfg = quick("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let batches = Benchmark::SCifar10.batches_per_scenario()
+        * (Benchmark::SCifar10.scenario_count() - 1);
+    assert_eq!(r.rounds as usize, batches);
+    assert_eq!(r.train_iterations as usize, batches);
+    assert_eq!(r.requests.len(), 80);
+    assert!(r.avg_inference_accuracy > 0.2, "{}", r.summary());
+}
+
+#[test]
+fn lazytune_merges_rounds_without_losing_data() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let cfg = quick("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None);
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let batches = Benchmark::SCifar10.batches_per_scenario()
+        * (Benchmark::SCifar10.scenario_count() - 1);
+    // no batch dropped (the paper: "we do not drop any training data")
+    assert_eq!(r.train_iterations as usize, batches);
+    // but far fewer rounds were launched
+    assert!(
+        (r.rounds as usize) < batches / 2,
+        "rounds {} vs batches {batches}",
+        r.rounds
+    );
+}
+
+#[test]
+fn lazytune_cuts_time_and_energy_vs_immediate() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let imm = Simulation::new(
+        &rt,
+        quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let lazy = Simulation::new(
+        &rt,
+        quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert!(lazy.energy.total_s() < 0.75 * imm.energy.total_s());
+    assert!(lazy.energy.total_j() < 0.85 * imm.energy.total_j());
+    // accuracy should not collapse (paper: -0.22% on average)
+    assert!(
+        lazy.avg_inference_accuracy > imm.avg_inference_accuracy - 0.08,
+        "lazy {} vs imm {}",
+        lazy.avg_inference_accuracy,
+        imm.avg_inference_accuracy
+    );
+}
+
+#[test]
+fn simfreeze_freezes_layers_and_cuts_compute() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let imm = Simulation::new(
+        &rt,
+        quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let sf = Simulation::new(
+        &rt,
+        quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    // same number of rounds (tuning policy identical) ...
+    assert_eq!(imm.rounds, sf.rounds);
+    // ... but layers froze at some point
+    assert!(
+        sf.round_log.iter().any(|r| r.frozen_units > 0),
+        "nothing ever froze"
+    );
+    // ... and training compute went down
+    assert!(
+        sf.train_tflops < imm.train_tflops,
+        "{} !< {}",
+        sf.train_tflops,
+        imm.train_tflops
+    );
+    // memory at end below memory at begin (Fig 10 shape)
+    assert!(sf.memory_end_bytes < sf.memory_begin_bytes);
+}
+
+#[test]
+fn scenario_changes_are_detected_and_reset_lazytune() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let mut cfg = quick("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None);
+    cfg.n_requests = 150; // enough requests for the detector to see jumps
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(
+        r.scenario_changes_detected >= 2,
+        "detected {} of 3 changes",
+        r.scenario_changes_detected
+    );
+    // after a detection, some round must run with a lowered threshold
+    let resets = r
+        .round_log
+        .windows(2)
+        .filter(|w| w[1].batches_needed < w[0].batches_needed)
+        .count();
+    assert!(resets > 0, "batches_needed never dropped");
+}
+
+#[test]
+fn semi_supervised_run_completes_with_ssl_steps() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let mut cfg = quick("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+    cfg.labeled_fraction = Some(0.1);
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(
+        r.train_iterations as usize,
+        Benchmark::SCifar10.batches_per_scenario() * 4
+    );
+    assert!(r.avg_inference_accuracy.is_finite());
+}
+
+#[test]
+fn quant_run_completes_and_learns() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let mut cfg = quick("res50", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze);
+    cfg.quant = true;
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(r.avg_inference_accuracy > 0.2, "{}", r.summary());
+}
+
+#[test]
+fn all_baselines_run_on_small_benchmark() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    for freeze in [
+        FreezePolicyKind::Egeria,
+        FreezePolicyKind::SlimFit,
+        FreezePolicyKind::RigL,
+        FreezePolicyKind::Ekya,
+    ] {
+        let cfg = quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::LazyTune, freeze);
+        let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+        assert!(
+            r.avg_inference_accuracy > 0.15,
+            "{:?}: {}",
+            freeze,
+            r.summary()
+        );
+        assert!(r.energy.total_j() > 0.0);
+    }
+}
+
+#[test]
+fn runs_are_reproducible_per_seed() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let mk = || {
+        quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+            .with_seed(33)
+    };
+    let a = Simulation::new(&rt, mk()).unwrap().run().unwrap();
+    let b = Simulation::new(&rt, mk()).unwrap().run().unwrap();
+    assert_eq!(a.avg_inference_accuracy, b.avg_inference_accuracy);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.energy.total_j(), b.energy.total_j());
+}
+
+#[test]
+fn different_arrival_kinds_complete() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    for kind in [ArrivalKind::Uniform, ArrivalKind::Normal, ArrivalKind::Trace] {
+        let mut cfg = quick("mbv2", Benchmark::SCifar10)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+        cfg.train_arrival = kind;
+        cfg.infer_arrival = kind;
+        let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+        assert!(r.avg_inference_accuracy > 0.15, "{kind:?}");
+    }
+}
+
+#[test]
+fn nlp_benchmark_runs_on_bert() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let cfg = quick("bert", Benchmark::News20)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(r.avg_inference_accuracy > 0.3, "{}", r.summary());
+}
