@@ -1,0 +1,29 @@
+# ETuner / EdgeOL reproduction — build & perf-tracking entry points.
+#
+#   make artifacts   AOT-lower the JAX/Pallas programs to HLO text + θ0 bins
+#   make build       release build of the rust coordinator
+#   make test        tier-1 gate: release build + full test suite
+#   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
+#                    (mean/min/max ms per benchmark; tracked across PRs)
+#   make repro       regenerate every paper table/figure, all cores
+
+ARTIFACTS ?= $(CURDIR)/rust/artifacts
+JOBS ?= $(shell nproc 2>/dev/null || echo 1)
+
+.PHONY: artifacts build test bench repro
+
+artifacts:
+	cd python/compile && python3 aot.py --out $(ARTIFACTS)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \
+		cargo bench --bench hotpath
+
+repro:
+	cd rust && cargo run --release -- repro all --jobs $(JOBS)

@@ -2,18 +2,25 @@
 //! available offline).  These are the §Perf L3 numbers in EXPERIMENTS.md:
 //!
 //!   * train-step latency          (PJRT execute + θ marshalling)
-//!   * inference latency           (the request-path cost)
+//!   * inference latency           (the request-path cost), with the
+//!     session θ-literal cache warm vs force-invalidated
 //!   * CKA probe                   (SimFreeze's periodic overhead)
 //!   * θ literal marshalling alone (host-side copy cost)
 //!   * coordinator-only components (NNLS fit, OOD observe, stream gen)
 //!
-//! Run: `cargo bench --bench hotpath` (artifacts required).
+//! Run: `make bench` / `cargo bench --bench hotpath` (artifacts required).
+//! Results are also written as JSON (mean/min/max per benchmark) to
+//! `$ETUNER_BENCH_OUT` (default `BENCH_hotpath.json`) so the perf
+//! trajectory is trackable across PRs.
+
+use std::collections::BTreeMap;
 
 use etuner::coordinator::{curve, EnergyOod};
 use etuner::cost::flops::FreezeState;
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::data::stream::Stream;
+use etuner::json::Json;
 use etuner::model::ModelSession;
 use etuner::rng::Pcg32;
 use etuner::runtime::{Runtime, TensorF32};
@@ -26,8 +33,10 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Runtime::load(testkit::artifacts_dir())?;
     println!("{:<38} {:>9} {:>9} {:>9}", "benchmark", "mean_ms", "min_ms", "max_ms");
-    let report = |name: &str, (mean, min, max): (f64, f64, f64)| {
+    let mut results: Vec<(String, (f64, f64, f64))> = Vec::new();
+    let mut report = |name: &str, (mean, min, max): (f64, f64, f64)| {
         println!("{name:<38} {mean:>9.3} {min:>9.3} {max:>9.3}");
+        results.push((name.to_string(), (mean, min, max)));
     };
 
     let mut rng = Pcg32::new(42, 1);
@@ -59,11 +68,27 @@ fn main() -> anyhow::Result<()> {
         );
         let xi: Vec<f32> =
             (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
+        // θ unchanged between calls: after the first marshal every infer
+        // reuses the session's cached θ literal (the serving hot path).
         report(
-            &format!("{model}: infer (batch {})", sess.m.batch_infer),
+            &format!("{model}: infer warm θ-cache (b {})", sess.m.batch_infer),
             bench(3, 20, || {
                 sess.infer(&p, &xi).unwrap();
             }),
+        );
+        // force-invalidated: bump the parameter generation each call so θ
+        // is re-marshalled every time (the seed's per-request cost).
+        report(
+            &format!("{model}: infer cold θ-cache (b {})", sess.m.batch_infer),
+            bench(3, 20, || {
+                p.theta_mut();
+                sess.infer(&p, &xi).unwrap();
+            }),
+        );
+        eprintln!(
+            "  [{model}] θ marshals {} / cache hits {}",
+            sess.theta_marshal_count(),
+            sess.theta_cache_hit_count()
         );
     }
 
@@ -88,7 +113,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // θ marshalling alone (no execute): host->literal->host
-    let theta = p.theta.clone();
+    let theta = p.theta().to_vec();
     report(
         "theta literal roundtrip (res50)",
         bench(3, 50, || {
@@ -130,5 +155,19 @@ fn main() -> anyhow::Result<()> {
             );
         }),
     );
+
+    // machine-readable trajectory file (tracked across PRs by `make bench`)
+    let mut obj = BTreeMap::new();
+    for (name, (mean, min, max)) in &results {
+        let mut entry = BTreeMap::new();
+        entry.insert("mean_ms".to_string(), Json::Num(*mean));
+        entry.insert("min_ms".to_string(), Json::Num(*min));
+        entry.insert("max_ms".to_string(), Json::Num(*max));
+        obj.insert(name.clone(), Json::Obj(entry));
+    }
+    let out = std::env::var("ETUNER_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&out, Json::Obj(obj).to_string())?;
+    println!("\nwrote {out}");
     Ok(())
 }

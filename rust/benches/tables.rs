@@ -4,10 +4,12 @@
 //! reduced request count) so a full sweep finishes on a laptop-class CPU.
 //! For paper-grade numbers run `etuner repro all --seeds 1,2,3,4,5`.
 //!
-//! Set `ETUNER_BENCH_FULL=1` for the full default profile.
+//! Set `ETUNER_BENCH_FULL=1` for the full default profile and
+//! `ETUNER_JOBS=N` to bound the sweep worker count (default: all cores).
 
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::Runtime;
+use etuner::sim::ParallelSweeper;
 use etuner::testkit;
 
 fn main() -> anyhow::Result<()> {
@@ -21,7 +23,12 @@ fn main() -> anyhow::Result<()> {
         n_requests: if full { 200 } else { 120 },
         results_dir: "results".into(),
     };
+    let jobs = std::env::var("ETUNER_JOBS")
+        .ok()
+        .and_then(|j| j.parse().ok())
+        .unwrap_or_else(ParallelSweeper::default_jobs);
     let rt = Runtime::load(testkit::artifacts_dir())?;
+    let sw = ParallelSweeper::new(rt, jobs);
     let t0 = std::time::Instant::now();
     for (id, desc) in experiments::list() {
         if id == "fig9" || id == "tab2" || id == "fig10" {
@@ -29,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         }
         println!("\n##### {id}: {desc}");
         let t = std::time::Instant::now();
-        experiments::run_experiment(&rt, id, &opts)?;
+        experiments::run_experiment(&sw, id, &opts)?;
         println!("##### {id} done in {:.1}s", t.elapsed().as_secs_f64());
     }
     println!("\nall tables/figures regenerated in {:.1}s", t0.elapsed().as_secs_f64());

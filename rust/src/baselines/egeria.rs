@@ -23,7 +23,7 @@ const MODULE: usize = 2;
 
 pub struct Egeria {
     state: FreezeState,
-    ref_theta: Vec<f32>,
+    ref_params: Params,
     probe: Option<Vec<f32>>,
     ref_feats: Option<TensorF32>,
     last_cka: Vec<Option<f32>>,
@@ -36,7 +36,7 @@ impl Egeria {
     pub fn new(m: &ModelManifest, ref_theta: Vec<f32>, interval: u64) -> Egeria {
         Egeria {
             state: FreezeState::none(m.units),
-            ref_theta,
+            ref_params: Params::from_vec(ref_theta),
             probe: None,
             ref_feats: None,
             last_cka: vec![None; m.units - 1],
@@ -81,8 +81,7 @@ impl FreezePolicy for Egeria {
         probe: &[f32],
         _book: &mut CostBook,
     ) -> Result<()> {
-        let ref_params = Params { theta: self.ref_theta.clone() };
-        self.ref_feats = Some(sess.features(&ref_params, probe)?);
+        self.ref_feats = Some(sess.features(&self.ref_params, probe)?);
         self.probe = Some(probe.to_vec());
         // Egeria has no unfreezing path: on scenario change it keeps its
         // plan and relies on the reference snapshot refresh.

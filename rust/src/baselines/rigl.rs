@@ -67,9 +67,10 @@ impl RigL {
     }
 
     fn apply_mask(&self, params: &mut Params) {
+        let theta = params.theta_mut();
         for (i, &active) in self.mask.iter().enumerate() {
             if !active {
-                params.theta[i] = 0.0;
+                theta[i] = 0.0;
             }
         }
     }
@@ -81,14 +82,12 @@ impl RigL {
         if k == 0 {
             return;
         }
+        let theta = params.theta();
         // drop: k smallest-magnitude active weights
         let mut active: Vec<usize> =
             (0..self.backbone_len).filter(|&i| self.mask[i]).collect();
         active.sort_by(|&a, &b| {
-            params.theta[a]
-                .abs()
-                .partial_cmp(&params.theta[b].abs())
-                .unwrap()
+            theta[a].abs().partial_cmp(&theta[b].abs()).unwrap()
         });
         for &i in active.iter().take(k) {
             self.mask[i] = false;
@@ -100,8 +99,8 @@ impl RigL {
         match &self.prev {
             Some(prev) => {
                 inactive.sort_by(|&a, &b| {
-                    let ma = (params.theta[a] - prev[a]).abs();
-                    let mb = (params.theta[b] - prev[b]).abs();
+                    let ma = (theta[a] - prev[a]).abs();
+                    let mb = (theta[b] - prev[b]).abs();
                     mb.partial_cmp(&ma).unwrap()
                 });
             }
@@ -132,7 +131,7 @@ impl FreezePolicy for RigL {
         if self.since >= UPDATE_INTERVAL {
             self.since = 0;
             self.update_topology(params);
-            self.prev = Some(params.theta[..self.backbone_len].to_vec());
+            self.prev = Some(params.theta()[..self.backbone_len].to_vec());
         }
         self.apply_mask(params);
         Ok(())
@@ -200,7 +199,7 @@ mod tests {
         r.update_topology(&p);
         assert_eq!(r.active_count(), before);
         r.apply_mask(&mut p);
-        let zeroed = p.theta[..80].iter().filter(|&&v| v == 0.0).count();
+        let zeroed = p.theta()[..80].iter().filter(|&&v| v == 0.0).count();
         assert!(zeroed >= 80 - before);
     }
 
@@ -210,8 +209,8 @@ mod tests {
         let r = RigL::new(&m, 0.9, 3);
         let mut p = Params::new(vec![1.0; 100], &m).unwrap();
         r.apply_mask(&mut p);
-        assert!(p.theta[80..].iter().all(|&v| v == 1.0), "head touched");
-        let active = p.theta[..80].iter().filter(|&&v| v != 0.0).count();
+        assert!(p.theta()[80..].iter().all(|&v| v == 1.0), "head touched");
+        let active = p.theta()[..80].iter().filter(|&&v| v != 0.0).count();
         assert_eq!(active, r.active_count());
     }
 

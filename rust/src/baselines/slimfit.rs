@@ -138,7 +138,7 @@ mod tests {
         let snap = Params::new(vec![1.0; 9], &m).unwrap();
         let mut moved = snap.clone();
         // unit 0 quiet; unit 1 moves a lot
-        moved.theta[3] += 1.0;
+        moved.theta_mut()[3] += 1.0;
         let d0 = moved.unit_delta_l1(&snap, &m, 0);
         let d1 = moved.unit_delta_l1(&snap, &m, 1);
         assert_eq!(d0, 0.0);

@@ -1,0 +1,129 @@
+//! Fixed-capacity bitset over small dense id spaces (class ids, unit ids).
+//!
+//! Replaces the `Vec<usize>` + `contains` scans on the simulator's request
+//! and training hot paths: membership is O(1), iteration is ascending, and
+//! clearing reuses the allocation.
+
+/// Fixed-capacity set of `usize` ids in `0..capacity`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+    len: usize,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> BitSet {
+        BitSet { words: vec![0; (capacity + 63) / 64], capacity, len: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of ids currently in the set.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert `i`; returns true if it was newly inserted.
+    pub fn insert(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.capacity, "bit {i} out of range {}", self.capacity);
+        let (w, b) = (i / 64, 1u64 << (i % 64));
+        if self.words[w] & b != 0 {
+            return false;
+        }
+        self.words[w] |= b;
+        self.len += 1;
+        true
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.capacity, "bit {i} out of range {}", self.capacity);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Remove every id, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.len = 0;
+    }
+
+    /// Ascending iterator over the set ids.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let b = w.trailing_zeros() as usize;
+                w &= w - 1;
+                Some(wi * 64 + b)
+            })
+        })
+    }
+
+    /// Refill from a slice of ids (duplicates collapse).
+    pub fn assign(&mut self, ids: &[usize]) {
+        self.clear();
+        for &i in ids {
+            self.insert(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_and_dedup() {
+        let mut s = BitSet::new(130);
+        assert!(s.insert(0));
+        assert!(s.insert(129));
+        assert!(s.insert(64));
+        assert!(!s.insert(64), "duplicate insert must report false");
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert!(!s.contains(1) && !s.contains(128));
+    }
+
+    #[test]
+    fn iter_is_ascending_and_complete() {
+        let mut s = BitSet::new(200);
+        for i in [199, 3, 64, 65, 0, 127] {
+            s.insert(i);
+        }
+        let got: Vec<usize> = s.iter().collect();
+        assert_eq!(got, vec![0, 3, 64, 65, 127, 199]);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut s = BitSet::new(70);
+        s.insert(69);
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert!(!s.contains(69));
+        assert_eq!(s.capacity(), 70);
+        s.assign(&[1, 1, 2]);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn empty_and_full_words() {
+        let s = BitSet::new(64);
+        assert_eq!(s.iter().count(), 0);
+        let mut f = BitSet::new(64);
+        for i in 0..64 {
+            f.insert(i);
+        }
+        assert_eq!(f.iter().count(), 64);
+        assert_eq!(f.iter().last(), Some(63));
+    }
+}

@@ -38,7 +38,10 @@ pub struct SimFreeze {
     last_cka: Vec<Option<f32>>,
     probe: Option<Vec<f32>>,
     ref_feats: Option<TensorF32>,
-    ref_theta: Vec<f32>,
+    /// Reference (initial, pre-fine-tuning) parameters, held as `Params`
+    /// once so probing reuses the session's cached θ literal instead of
+    /// cloning the full vector every scenario change.
+    ref_params: Params,
     iters_since_check: u64,
     total_iters: u64,
     pub trace: Vec<CkaSample>,
@@ -56,7 +59,7 @@ impl SimFreeze {
             last_cka: vec![None; units - 1],
             probe: None,
             ref_feats: None,
-            ref_theta,
+            ref_params: Params::from_vec(ref_theta),
             iters_since_check: 0,
             total_iters: 0,
             trace: Vec::new(),
@@ -71,8 +74,7 @@ impl SimFreeze {
     /// Install the scenario's CKA probe batch (Algorithm 1 line 22: the
     /// first training batch that arrives in a scenario).
     pub fn set_probe(&mut self, sess: &ModelSession, x: &[f32]) -> Result<()> {
-        let ref_params = Params { theta: self.ref_theta.clone() };
-        self.ref_feats = Some(sess.features(&ref_params, x)?);
+        self.ref_feats = Some(sess.features(&self.ref_params, x)?);
         self.probe = Some(x.to_vec());
         Ok(())
     }

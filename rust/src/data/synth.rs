@@ -124,11 +124,9 @@ impl World {
         for i in 0..n {
             let c = classes_avail[self.sampler.below(classes_avail.len())];
             ys.push(c as i32);
-            let row = &mut xs[i * DIM..(i + 1) * DIM];
-            // borrow dance: sample_into needs &mut self
-            let mut tmp = vec![0.0f32; DIM];
-            self.sample_into(c, scenario, &mut tmp);
-            row.copy_from_slice(&tmp);
+            // `xs` is a local: the row borrow is disjoint from `self`, so
+            // samples are written in place (no per-sample scratch Vec).
+            self.sample_into(c, scenario, &mut xs[i * DIM..(i + 1) * DIM]);
         }
         (xs, ys)
     }

@@ -29,6 +29,7 @@
 //! ```
 
 pub mod baselines;
+pub mod bitset;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
@@ -50,5 +51,5 @@ pub mod prelude {
     pub use crate::data::benchmarks::Benchmark;
     pub use crate::metrics::Report;
     pub use crate::runtime::Runtime;
-    pub use crate::sim::{RunConfig, Simulation};
+    pub use crate::sim::{ParallelSweeper, RunConfig, Simulation};
 }

@@ -5,6 +5,7 @@
 //! etuner run --model res50 --benchmark nc [--tune lazytune]
 //!            [--freeze simfreeze] [--requests 200] [--seed 1]
 //! etuner repro <id|all> [--seeds 1,2] [--requests 200] [--out results]
+//!              [--jobs N]               # N sweep worker threads
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -14,7 +15,7 @@ use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::Runtime;
-use etuner::sim::{RunConfig, Simulation};
+use etuner::sim::{ParallelSweeper, RunConfig, Simulation};
 use etuner::testkit;
 
 fn main() -> Result<()> {
@@ -40,7 +41,8 @@ fn main() -> Result<()> {
                  run   --model M --benchmark B [--tune P] [--freeze F]\n\
                        [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
                        [--quant] [--labeled FRAC] [--cka-th TH]\n\
-                 repro <id|all> [--seeds 1,2] [--requests N] [--out DIR]"
+                 repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
+                       --jobs N runs N seed-sweep workers (default: all cores)"
             );
             Ok(())
         }
@@ -160,6 +162,11 @@ fn cmd_repro(args: &[String]) -> Result<()> {
     if let Some(o) = opt(args, "--out") {
         opts.results_dir = o.into();
     }
+    let jobs = match opt(args, "--jobs") {
+        Some(j) => j.parse().context("bad --jobs")?,
+        None => ParallelSweeper::default_jobs(),
+    };
     let rt = Runtime::load(testkit::artifacts_dir())?;
-    experiments::run_experiment(&rt, id, &opts)
+    let sw = ParallelSweeper::new(rt, jobs);
+    experiments::run_experiment(&sw, id, &opts)
 }

@@ -52,6 +52,16 @@ pub struct Report {
     pub wall_exec_s: f64,
     /// per-layer CKA observations (populated when `keep_cka_trace` is set).
     pub cka_trace: Vec<CkaSample>,
+    /// zero-copy instrumentation (host-side plumbing, *not* part of the
+    /// scientific result — excluded from [`Report::fingerprint`]):
+    /// θ host→literal marshals performed by the session.
+    pub theta_marshals: u64,
+    /// θ literal-cache hits (calls that skipped the marshal).
+    pub theta_cache_hits: u64,
+    /// serving-θ rebuilds (full copy + bank install).
+    pub serving_rebuilds: u64,
+    /// requests served straight from the cached serving θ.
+    pub serving_hits: u64,
 }
 
 impl Report {
@@ -80,6 +90,94 @@ impl Report {
                 .sum::<f64>()
                 / self.requests.len() as f64;
         }
+    }
+
+    /// FNV-1a digest over every *scientific* field at full bit precision.
+    /// Excludes wall-clock time and the zero-copy instrumentation counters,
+    /// which legitimately differ between runs that must otherwise be
+    /// bit-identical (cache on/off, 1 vs N sweep workers).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.str(&self.model);
+        h.str(&self.benchmark);
+        h.str(&self.tune_policy);
+        h.str(&self.freeze_policy);
+        h.u64(self.seed);
+        h.f64(self.avg_inference_accuracy);
+        for v in [
+            self.energy.init_s,
+            self.energy.loadsave_s,
+            self.energy.compute_s,
+            self.energy.init_j,
+            self.energy.loadsave_j,
+            self.energy.compute_j,
+        ] {
+            h.f64(v);
+        }
+        h.u64(self.rounds);
+        h.u64(self.train_iterations);
+        h.f64(self.train_tflops);
+        h.f64(self.cka_tflops);
+        h.u64(self.scenario_changes_detected);
+        h.u64(self.requests.len() as u64);
+        for r in &self.requests {
+            h.f64(r.t);
+            h.u64(r.scenario as u64);
+            h.f64(r.accuracy as f64);
+            h.u64(r.stale_batches as u64);
+        }
+        h.u64(self.round_log.len() as u64);
+        for r in &self.round_log {
+            h.f64(r.t);
+            h.u64(r.scenario as u64);
+            h.u64(r.batches as u64);
+            h.u64(r.iterations);
+            h.u64(r.batches_needed as u64);
+            h.f64(r.val_acc);
+            h.u64(r.frozen_units as u64);
+        }
+        h.f64(self.memory_begin_bytes);
+        h.f64(self.memory_end_bytes);
+        h.u64(self.cka_trace.len() as u64);
+        for s in &self.cka_trace {
+            h.u64(s.iteration);
+            h.u64(s.layer as u64);
+            h.f64(s.cka as f64);
+        }
+        h.finish()
+    }
+}
+
+/// Tiny FNV-1a hasher (no external crates offline).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_bits().to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+        self.bytes(&[0xff]); // delimiter
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
     }
 }
 
@@ -148,5 +246,30 @@ mod tests {
         assert!((m.avg_inference_accuracy - 0.7).abs() < 1e-9);
         assert!((m.energy.compute_j - 150.0).abs() < 1e-9);
         assert_eq!(m.rounds, 15);
+    }
+
+    #[test]
+    fn fingerprint_ignores_wall_clock_and_perf_counters() {
+        let mut a = Report::default();
+        a.avg_inference_accuracy = 0.5;
+        a.requests.push(RequestRecord {
+            t: 1.0,
+            scenario: 0,
+            accuracy: 0.5,
+            stale_batches: 2,
+        });
+        let mut b = a.clone();
+        b.wall_exec_s = 99.0;
+        b.theta_marshals = 7;
+        b.theta_cache_hits = 3;
+        b.serving_rebuilds = 1;
+        b.serving_hits = 40;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.requests[0].accuracy = 0.5000001;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = a.clone();
+        d.rounds += 1;
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 }

@@ -11,7 +11,12 @@
 //! class has been seen), and (2) reinitializes the training rows of the
 //! incoming scenario's classes.  At inference, the consolidated bank is
 //! written into θ so past classes keep their discriminators.
+//!
+//! The bank carries a `generation` counter (bumped whenever consolidation
+//! changes it) so the simulator's serving cache can tell whether a
+//! previously bank-installed serving θ is still valid.
 
+use crate::bitset::BitSet;
 use crate::runtime::artifact::ModelManifest;
 
 use super::params::Params;
@@ -22,6 +27,8 @@ pub struct Cwr {
     bank: Vec<Vec<f32>>,
     /// how many scenarios contributed to each class's consolidated row.
     seen_count: Vec<u32>,
+    /// bumped whenever the bank's contents change.
+    generation: u64,
 }
 
 impl Cwr {
@@ -29,6 +36,7 @@ impl Cwr {
         Cwr {
             bank: vec![vec![0.0; m.head.w_shape[0] + 1]; m.classes],
             seen_count: vec![0; m.classes],
+            generation: 0,
         }
     }
 
@@ -36,52 +44,107 @@ impl Cwr {
         self.seen_count[c] > 0
     }
 
-    /// Merge the trained rows of `classes` from θ into the bank
-    /// (running average over scenarios, as CWR+ does).
+    /// Bank-content version (serving-cache invalidation key).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Merge one trained class row of θ into the bank (running average
+    /// over scenarios, as CWR+ does).
+    fn consolidate_class(&mut self, m: &ModelManifest, theta: &[f32], c: usize) {
+        let h = m.head.w_shape[0];
+        let cdim = m.head.w_shape[1];
+        let n = self.seen_count[c] as f32;
+        let row = &mut self.bank[c];
+        for r in 0..h {
+            let v = theta[m.head.w_offset + r * cdim + c];
+            row[r] = (row[r] * n + v) / (n + 1.0);
+        }
+        row[h] = (row[h] * n + theta[m.head.b_offset + c]) / (n + 1.0);
+        self.seen_count[c] += 1;
+    }
+
+    /// Merge the trained rows of `classes` from θ into the bank.
     pub fn consolidate(&mut self, m: &ModelManifest, p: &Params, classes: &[usize]) {
+        if classes.is_empty() {
+            return;
+        }
+        self.generation += 1;
+        let theta = p.theta();
         for &c in classes {
-            let (widx, bidx) = Params::head_class_indices(m, c);
-            let n = self.seen_count[c] as f32;
-            let row = &mut self.bank[c];
-            for (slot, &i) in row.iter_mut().zip(widx.iter()) {
-                *slot = (*slot * n + p.theta[i]) / (n + 1.0);
-            }
-            let last = row.len() - 1;
-            row[last] = (row[last] * n + p.theta[bidx]) / (n + 1.0);
-            self.seen_count[c] += 1;
+            self.consolidate_class(m, theta, c);
+        }
+    }
+
+    /// Bitset variant used by the simulator's trained-class accumulator
+    /// (ascending order; the per-class merge is order-independent).
+    pub fn consolidate_set(&mut self, m: &ModelManifest, p: &Params, classes: &BitSet) {
+        if classes.is_empty() {
+            return;
+        }
+        self.generation += 1;
+        let theta = p.theta();
+        // iterate via a local collect-free loop: BitSet::iter borrows
+        // `classes`, which is disjoint from `self`.
+        for c in classes.iter() {
+            self.consolidate_class(m, theta, c);
         }
     }
 
     /// Write the consolidated bank into θ for every seen class (called
     /// before serving inference and at scenario start).
     pub fn install(&self, m: &ModelManifest, p: &mut Params) {
+        let theta = p.theta_mut();
         for c in 0..m.classes {
             if self.seen_count[c] == 0 {
                 continue;
             }
-            self.install_class(m, p, c);
+            self.write_class(m, theta, c);
+        }
+    }
+
+    /// Write the bank into θ for every *seen* class not in `except`
+    /// (serving-time install: classes of the live scenario keep their
+    /// training rows).  O(classes) bit probes, no index vectors.
+    pub fn install_except(&self, m: &ModelManifest, p: &mut Params, except: &BitSet) {
+        let theta = p.theta_mut();
+        for c in 0..m.classes {
+            if self.seen_count[c] == 0 || except.contains(c) {
+                continue;
+            }
+            self.write_class(m, theta, c);
         }
     }
 
     /// Write one class's consolidated row into θ.
     pub fn install_class(&self, m: &ModelManifest, p: &mut Params, c: usize) {
-        let (widx, bidx) = Params::head_class_indices(m, c);
+        self.write_class(m, p.theta_mut(), c);
+    }
+
+    fn write_class(&self, m: &ModelManifest, theta: &mut [f32], c: usize) {
+        let h = m.head.w_shape[0];
+        let cdim = m.head.w_shape[1];
         let row = &self.bank[c];
-        for (&i, &v) in widx.iter().zip(row.iter()) {
-            p.theta[i] = v;
+        for r in 0..h {
+            theta[m.head.w_offset + r * cdim + c] = row[r];
         }
-        p.theta[bidx] = row[row.len() - 1];
+        theta[m.head.b_offset + c] = row[h];
     }
 
     /// Zero the training rows for `classes` (re-init on scenario entry so
     /// fresh classes start from a clean discriminator).
     pub fn reinit_rows(&self, m: &ModelManifest, p: &mut Params, classes: &[usize]) {
+        if classes.is_empty() {
+            return;
+        }
+        let h = m.head.w_shape[0];
+        let cdim = m.head.w_shape[1];
+        let theta = p.theta_mut();
         for &c in classes {
-            let (widx, bidx) = Params::head_class_indices(m, c);
-            for &i in &widx {
-                p.theta[i] = 0.0;
+            for r in 0..h {
+                theta[m.head.w_offset + r * cdim + c] = 0.0;
             }
-            p.theta[bidx] = 0.0;
+            theta[m.head.b_offset + c] = 0.0;
         }
     }
 }
@@ -107,13 +170,13 @@ mod tests {
         for c in [1usize, 2] {
             let (widx, bidx) = Params::head_class_indices(&m, c);
             for &i in &widx {
-                assert_eq!(p.theta[i], orig.theta[i], "class {c} idx {i}");
+                assert_eq!(p.theta()[i], orig.theta()[i], "class {c} idx {i}");
             }
-            assert_eq!(p.theta[bidx], orig.theta[bidx]);
+            assert_eq!(p.theta()[bidx], orig.theta()[bidx]);
         }
         let (w0, b0) = Params::head_class_indices(&m, 0);
-        assert!(w0.iter().all(|&i| p.theta[i] == -99.0));
-        assert_eq!(p.theta[b0], -99.0);
+        assert!(w0.iter().all(|&i| p.theta()[i] == -99.0));
+        assert_eq!(p.theta()[b0], -99.0);
     }
 
     #[test]
@@ -122,13 +185,13 @@ mod tests {
         let mut cwr = Cwr::new(&m);
         let mut p = Params::new(vec![0.0; 22], &m).unwrap();
         let (widx, _) = Params::head_class_indices(&m, 3);
-        p.theta[widx[0]] = 2.0;
+        p.theta_mut()[widx[0]] = 2.0;
         cwr.consolidate(&m, &p, &[3]);
-        p.theta[widx[0]] = 4.0;
+        p.theta_mut()[widx[0]] = 4.0;
         cwr.consolidate(&m, &p, &[3]);
         let mut q = Params::new(vec![0.0; 22], &m).unwrap();
         cwr.install(&m, &mut q);
-        assert_eq!(q.theta[widx[0]], 3.0); // average of 2 and 4
+        assert_eq!(q.theta()[widx[0]], 3.0); // average of 2 and 4
     }
 
     #[test]
@@ -138,9 +201,67 @@ mod tests {
         let cwr = Cwr::new(&m);
         cwr.reinit_rows(&m, &mut p, &[0]);
         let (w0, b0) = Params::head_class_indices(&m, 0);
-        assert!(w0.iter().all(|&i| p.theta[i] == 0.0));
-        assert_eq!(p.theta[b0], 0.0);
+        assert!(w0.iter().all(|&i| p.theta()[i] == 0.0));
+        assert_eq!(p.theta()[b0], 0.0);
         let (w1, _) = Params::head_class_indices(&m, 1);
-        assert!(w1.iter().all(|&i| p.theta[i] == 1.0));
+        assert!(w1.iter().all(|&i| p.theta()[i] == 1.0));
+    }
+
+    #[test]
+    fn install_except_skips_live_classes() {
+        let m = toy_manifest();
+        let mut p = Params::new(vec![5.0; 22], &m).unwrap();
+        let mut cwr = Cwr::new(&m);
+        cwr.consolidate(&m, &p, &[0, 1, 2]);
+        // overwrite the whole head, then install all but class 1
+        for v in p.unit_mut(&m, 1) {
+            *v = -7.0;
+        }
+        let mut except = BitSet::new(m.classes);
+        except.insert(1);
+        cwr.install_except(&m, &mut p, &except);
+        let (w0, b0) = Params::head_class_indices(&m, 0);
+        assert!(w0.iter().all(|&i| p.theta()[i] == 5.0));
+        assert_eq!(p.theta()[b0], 5.0);
+        let (w1, b1) = Params::head_class_indices(&m, 1);
+        assert!(w1.iter().all(|&i| p.theta()[i] == -7.0), "live class overwritten");
+        assert_eq!(p.theta()[b1], -7.0);
+        // class 3 was never consolidated: untouched
+        let (w3, _) = Params::head_class_indices(&m, 3);
+        assert!(w3.iter().all(|&i| p.theta()[i] == -7.0));
+    }
+
+    #[test]
+    fn generation_bumps_only_when_bank_changes() {
+        let m = toy_manifest();
+        let p = Params::new(vec![1.0; 22], &m).unwrap();
+        let mut cwr = Cwr::new(&m);
+        let g0 = cwr.generation();
+        cwr.consolidate(&m, &p, &[]);
+        assert_eq!(cwr.generation(), g0, "empty consolidation must not bump");
+        cwr.consolidate(&m, &p, &[2]);
+        assert_eq!(cwr.generation(), g0 + 1);
+        let mut set = BitSet::new(m.classes);
+        set.insert(0);
+        cwr.consolidate_set(&m, &p, &set);
+        assert_eq!(cwr.generation(), g0 + 2);
+    }
+
+    #[test]
+    fn set_and_slice_consolidation_agree() {
+        let m = toy_manifest();
+        let mut p = Params::new((0..22).map(|x| x as f32 * 0.5).collect(), &m).unwrap();
+        p.theta_mut()[7] = 3.25;
+        let mut a = Cwr::new(&m);
+        let mut b = Cwr::new(&m);
+        a.consolidate(&m, &p, &[3, 0, 2]); // order must not matter
+        let mut set = BitSet::new(m.classes);
+        set.assign(&[0, 2, 3]);
+        b.consolidate_set(&m, &p, &set);
+        let mut qa = Params::new(vec![0.0; 22], &m).unwrap();
+        let mut qb = Params::new(vec![0.0; 22], &m).unwrap();
+        a.install(&m, &mut qa);
+        b.install(&m, &mut qb);
+        assert_eq!(qa.theta(), qb.theta());
     }
 }

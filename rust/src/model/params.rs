@@ -4,15 +4,40 @@
 //! freeze units, individual tensors, and the classifier head are views by
 //! manifest offsets.  RigL's sparsity masks and CWR's head surgery operate
 //! directly on these views.
+//!
+//! Every `Params` carries a process-unique `id` and a `generation` counter
+//! that bumps on every mutable access.  `(id, generation)` is a stable
+//! content key: the session's literal cache and the simulator's serving
+//! cache use it to skip re-marshalling θ when nothing changed.  All
+//! mutation is funneled through `theta_mut`/`set_theta`/`copy_from`, so
+//! the compiler guarantees no write can bypass the counter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
 use crate::runtime::artifact::ModelManifest;
 
+static NEXT_PARAMS_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_id() -> u64 {
+    NEXT_PARAMS_ID.fetch_add(1, Ordering::Relaxed)
+}
+
 /// Model parameters + metadata needed for segment addressing.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Params {
-    pub theta: Vec<f32>,
+    theta: Vec<f32>,
+    id: u64,
+    generation: u64,
+}
+
+impl Clone for Params {
+    /// Clones get a fresh identity: two instances that later diverge must
+    /// never collide in a `(id, generation)`-keyed cache.
+    fn clone(&self) -> Params {
+        Params { theta: self.theta.clone(), id: next_id(), generation: 0 }
+    }
 }
 
 impl Params {
@@ -23,7 +48,57 @@ impl Params {
             theta.len(),
             m.theta_len
         );
-        Ok(Params { theta })
+        Ok(Params::from_vec(theta))
+    }
+
+    /// Wrap a raw θ vector without a manifest length check (reference
+    /// snapshots held by freeze policies).
+    pub fn from_vec(theta: Vec<f32>) -> Params {
+        Params { theta, id: next_id(), generation: 0 }
+    }
+
+    /// Read-only view of the flat parameter vector.
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Mutable view; bumps the generation (conservatively — taking the
+    /// borrow counts as a write).
+    pub fn theta_mut(&mut self) -> &mut [f32] {
+        self.generation += 1;
+        &mut self.theta
+    }
+
+    /// Replace the whole vector (train-step output install).
+    pub fn set_theta(&mut self, theta: Vec<f32>) {
+        self.generation += 1;
+        self.theta = theta;
+    }
+
+    /// Copy `other`'s contents into this instance, reusing the allocation
+    /// and keeping this instance's `id` (the serving cache overwrites its
+    /// slot in place).
+    pub fn copy_from(&mut self, other: &Params) {
+        self.generation += 1;
+        self.theta.clone_from(&other.theta);
+    }
+
+    pub fn len(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.theta.is_empty()
+    }
+
+    /// Process-unique instance id (cache key half 1).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Mutation counter (cache key half 2).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// View of one freeze unit's slice.
@@ -33,6 +108,7 @@ impl Params {
     }
 
     pub fn unit_mut<'a>(&'a mut self, m: &ModelManifest, u: usize) -> &'a mut [f32] {
+        self.generation += 1;
         let s = m.unit_segments[u];
         &mut self.theta[s.offset..s.offset + s.len]
     }
@@ -150,9 +226,40 @@ pub(crate) mod tests {
         let m = toy_manifest();
         let a = Params::new(vec![0.0; 22], &m).unwrap();
         let mut b = a.clone();
-        b.theta[1] = 2.0;
-        b.theta[7] = -1.0;
+        b.theta_mut()[1] = 2.0;
+        b.theta_mut()[7] = -1.0;
         assert_eq!(a.unit_delta_l1(&b, &m, 0), 2.0);
         assert_eq!(a.unit_delta_l1(&b, &m, 1), 1.0);
+    }
+
+    #[test]
+    fn generation_bumps_on_every_mutable_access() {
+        let m = toy_manifest();
+        let mut p = Params::new(vec![0.0; 22], &m).unwrap();
+        let g0 = p.generation();
+        let _ = p.theta(); // read: no bump
+        assert_eq!(p.generation(), g0);
+        p.theta_mut()[0] = 1.0;
+        assert_eq!(p.generation(), g0 + 1);
+        p.unit_mut(&m, 1)[0] = 2.0;
+        assert_eq!(p.generation(), g0 + 2);
+        p.set_theta(vec![0.0; 22]);
+        assert_eq!(p.generation(), g0 + 3);
+    }
+
+    #[test]
+    fn clones_get_fresh_identity_and_copy_from_keeps_it() {
+        let m = toy_manifest();
+        let a = Params::new(vec![1.0; 22], &m).unwrap();
+        let b = a.clone();
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.theta(), b.theta());
+        let mut c = Params::new(vec![0.0; 22], &m).unwrap();
+        let cid = c.id();
+        let g = c.generation();
+        c.copy_from(&a);
+        assert_eq!(c.id(), cid);
+        assert_eq!(c.generation(), g + 1);
+        assert_eq!(c.theta(), a.theta());
     }
 }

@@ -1,14 +1,38 @@
 //! Typed session over one deployed model: binds the runtime artifacts to
 //! the flat parameter vector and exposes the operations the coordinator
 //! needs (train step, inference, CKA probe, SimSiam step).
+//!
+//! # Zero-copy θ boundary
+//!
+//! θ is by far the largest tensor crossing the execute boundary; the seed
+//! implementation cloned it into a fresh `Vec` *and* re-marshalled it into
+//! a PJRT literal on every call.  The session now keeps a literal cache
+//! keyed by [`Params::id`]`/`[`Params::generation`]: θ is re-marshalled
+//! only when the parameter generation changed, input batches are
+//! marshalled straight from the caller's slice (no intermediate `Vec`),
+//! and a train step's *output* θ literal is put back into the cache so
+//! consecutive train steps never round-trip θ through the host at all.
+//! `theta_marshals`/`theta_cache_hits` counters expose the behaviour to
+//! benches and regression tests.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::cost::flops::FreezeState;
-use crate::runtime::exec::{i32_literal, TensorF32};
+use crate::runtime::exec::{f32_literal, i32_literal, TensorF32};
 use crate::runtime::{ModelManifest, Runtime};
 
+#[cfg(not(feature = "xla"))]
+use crate::runtime::stub as xla;
+
 use super::params::Params;
+
+/// Soft bound on distinct `Params` instances tracked by the literal cache.
+/// A simulation touches a handful (live θ, serving θ, policy references);
+/// the cap only guards against pathological callers churning instances.
+const THETA_CACHE_CAP: usize = 16;
 
 /// A bound (runtime, model) pair.
 pub struct ModelSession<'rt> {
@@ -17,17 +41,67 @@ pub struct ModelSession<'rt> {
     /// Use the 8-bit QAT train artifacts (Table VIII).
     pub quant: bool,
     pub lr: f32,
+    /// (params id) -> (generation, marshalled θ literal).
+    theta_cache: RefCell<HashMap<u64, (u64, xla::Literal)>>,
+    theta_marshals: Cell<u64>,
+    theta_cache_hits: Cell<u64>,
 }
 
 impl<'rt> ModelSession<'rt> {
     pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
         let m = rt.manifest.model(model)?.clone();
-        Ok(ModelSession { rt, m, quant: false, lr: 0.05 })
+        Ok(ModelSession {
+            rt,
+            m,
+            quant: false,
+            lr: 0.05,
+            theta_cache: RefCell::new(HashMap::new()),
+            theta_marshals: Cell::new(0),
+            theta_cache_hits: Cell::new(0),
+        })
     }
 
     /// Initial (pre-deployment) parameters from the artifact directory.
     pub fn theta0(&self) -> Result<Params> {
         Params::new(self.rt.theta0(&self.m.name)?, &self.m)
+    }
+
+    /// Times θ was serialized host → literal since session creation.
+    pub fn theta_marshal_count(&self) -> u64 {
+        self.theta_marshals.get()
+    }
+
+    /// Times a call reused a cached θ literal instead of re-marshalling.
+    pub fn theta_cache_hit_count(&self) -> u64 {
+        self.theta_cache_hits.get()
+    }
+
+    /// Make sure the cache holds a literal for `params`' current content.
+    fn ensure_theta_literal(&self, params: &Params) -> Result<()> {
+        let mut cache = self.theta_cache.borrow_mut();
+        if let Some((gen, _)) = cache.get(&params.id()) {
+            if *gen == params.generation() {
+                self.theta_cache_hits.set(self.theta_cache_hits.get() + 1);
+                return Ok(());
+            }
+        }
+        if cache.len() >= THETA_CACHE_CAP {
+            cache.clear();
+        }
+        self.theta_marshals.set(self.theta_marshals.get() + 1);
+        let lit = f32_literal(params.theta(), &[self.m.theta_len])?;
+        cache.insert(params.id(), (params.generation(), lit));
+        Ok(())
+    }
+
+    /// Store an execute-produced θ literal for `params`' current content
+    /// (train/ssl output reuse: the next step's input marshal is free).
+    fn adopt_theta_literal(&self, params: &Params, lit: xla::Literal) {
+        let mut cache = self.theta_cache.borrow_mut();
+        if cache.len() >= THETA_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(params.id(), (params.generation(), lit));
     }
 
     /// One SGD step on a batch.  Chooses the `train_k` artifact matching
@@ -44,30 +118,44 @@ impl<'rt> ModelSession<'rt> {
         anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
         anyhow::ensure!(y.len() == b, "bad y len {}", y.len());
         let k = fs.frozen_prefix().min(self.m.units - 1);
-        let name = self.m.train_artifact(k, self.quant)?.to_string();
-        let inputs = vec![
-            TensorF32::new(vec![self.m.theta_len], params.theta.clone()).to_literal()?,
-            TensorF32::new(vec![b, self.m.d], x.to_vec()).to_literal()?,
-            i32_literal(y, &[b])?,
-            TensorF32::vec(fs.lr_mask()).to_literal()?,
-            TensorF32::scalar(self.lr).to_literal()?,
-        ];
-        let mut out = self.rt.exec_raw(&name, &inputs)?;
+        let name = self.m.train_artifact(k, self.quant)?;
+        self.ensure_theta_literal(params)?;
+        let x_lit = f32_literal(x, &[b, self.m.d])?;
+        let y_lit = i32_literal(y, &[b])?;
+        let mask_lit = f32_literal(&fs.lr_mask(), &[fs.units()])?;
+        let lr_lit = f32_literal(&[self.lr], &[])?;
+        let mut out = {
+            let cache = self.theta_cache.borrow();
+            let theta_lit = &cache.get(&params.id()).unwrap().1;
+            let inputs = [theta_lit, &x_lit, &y_lit, &mask_lit, &lr_lit];
+            self.rt.exec_lits(name, &inputs)?
+        };
         anyhow::ensure!(out.len() == 2, "train artifact returned {}", out.len());
-        let loss = out.pop().unwrap().data[0];
-        params.theta = out.pop().unwrap().data;
+        let loss = TensorF32::from_literal(out.pop().unwrap())?.data[0];
+        let theta_lit = out.pop().unwrap();
+        let theta = theta_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("θ to_vec: {e:?}"))?;
+        anyhow::ensure!(theta.len() == self.m.theta_len, "train returned bad θ len");
+        params.set_theta(theta);
+        self.adopt_theta_literal(params, theta_lit);
         Ok(loss)
+    }
+
+    /// Execute a (θ, x)-shaped artifact through the θ literal cache.
+    fn exec_theta_x(&self, name: &str, params: &Params, x_lit: &xla::Literal) -> Result<Vec<TensorF32>> {
+        self.ensure_theta_literal(params)?;
+        let cache = self.theta_cache.borrow();
+        let theta_lit = &cache.get(&params.id()).unwrap().1;
+        self.rt.exec_refs(name, &[theta_lit, x_lit])
     }
 
     /// Forward pass at the inference batch size; returns logits [B, C].
     pub fn infer(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
         let b = self.m.batch_infer;
         anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
-        let inputs = vec![
-            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
-            TensorF32::new(vec![b, self.m.d], x.to_vec()),
-        ];
-        let mut out = self.rt.exec(&self.m.artifacts.infer, &inputs)?;
+        let x_lit = f32_literal(x, &[b, self.m.d])?;
+        let mut out = self.exec_theta_x(&self.m.artifacts.infer, params, &x_lit)?;
         Ok(out.pop().unwrap())
     }
 
@@ -94,11 +182,8 @@ impl<'rt> ModelSession<'rt> {
     pub fn features(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
         let b = self.m.batch_probe;
         anyhow::ensure!(x.len() == b * self.m.d, "bad probe len {}", x.len());
-        let inputs = vec![
-            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
-            TensorF32::new(vec![b, self.m.d], x.to_vec()),
-        ];
-        let mut out = self.rt.exec(&self.m.artifacts.features, &inputs)?;
+        let x_lit = f32_literal(x, &[b, self.m.d])?;
+        let mut out = self.exec_theta_x(&self.m.artifacts.features, params, &x_lit)?;
         Ok(out.pop().unwrap())
     }
 
@@ -107,12 +192,11 @@ impl<'rt> ModelSession<'rt> {
         let b = self.m.batch_probe;
         let h = self.m.h;
         anyhow::ensure!(fx.len() == b * h && fy.len() == b * h, "bad feature len");
-        let name = self.rt.manifest.cka_artifact(h)?.to_string();
-        let inputs = vec![
-            TensorF32::new(vec![b, h], fx.to_vec()),
-            TensorF32::new(vec![b, h], fy.to_vec()),
-        ];
-        let out = self.rt.exec(&name, &inputs)?;
+        let name = self.rt.manifest.cka_artifact(h)?;
+        // marshal straight from the stacked-feature slices: no `to_vec`.
+        let fx_lit = f32_literal(fx, &[b, h])?;
+        let fy_lit = f32_literal(fy, &[b, h])?;
+        let out = self.rt.exec_refs(name, &[&fx_lit, &fy_lit])?;
         Ok(out[0].data[0])
     }
 
@@ -138,21 +222,30 @@ impl<'rt> ModelSession<'rt> {
             .m
             .artifacts
             .ssl
-            .clone()
+            .as_deref()
             .ok_or_else(|| anyhow::anyhow!("{} has no ssl artifact", self.m.name))?;
-        let inputs = vec![
-            TensorF32::new(vec![self.m.theta_len], params.theta.clone()),
-            TensorF32::new(vec![phi.len()], phi.clone()),
-            TensorF32::new(vec![b, self.m.d], x1.to_vec()),
-            TensorF32::new(vec![b, self.m.d], x2.to_vec()),
-            TensorF32::vec(fs.lr_mask()),
-            TensorF32::scalar(self.lr),
-        ];
-        let mut out = self.rt.exec(&name, &inputs)?;
+        self.ensure_theta_literal(params)?;
+        let phi_lit = f32_literal(phi, &[phi.len()])?;
+        let x1_lit = f32_literal(x1, &[b, self.m.d])?;
+        let x2_lit = f32_literal(x2, &[b, self.m.d])?;
+        let mask_lit = f32_literal(&fs.lr_mask(), &[fs.units()])?;
+        let lr_lit = f32_literal(&[self.lr], &[])?;
+        let mut out = {
+            let cache = self.theta_cache.borrow();
+            let theta_lit = &cache.get(&params.id()).unwrap().1;
+            let inputs = [theta_lit, &phi_lit, &x1_lit, &x2_lit, &mask_lit, &lr_lit];
+            self.rt.exec_lits(name, &inputs)?
+        };
         anyhow::ensure!(out.len() == 3, "ssl artifact returned {}", out.len());
-        let loss = out.pop().unwrap().data[0];
-        *phi = out.pop().unwrap().data;
-        params.theta = out.pop().unwrap().data;
+        let loss = TensorF32::from_literal(out.pop().unwrap())?.data[0];
+        *phi = TensorF32::from_literal(out.pop().unwrap())?.data;
+        let theta_lit = out.pop().unwrap();
+        let theta = theta_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("θ to_vec: {e:?}"))?;
+        anyhow::ensure!(theta.len() == self.m.theta_len, "ssl returned bad θ len");
+        params.set_theta(theta);
+        self.adopt_theta_literal(params, theta_lit);
         Ok(loss)
     }
 }

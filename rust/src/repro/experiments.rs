@@ -11,8 +11,7 @@ use crate::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use crate::data::arrival::ArrivalKind;
 use crate::data::benchmarks::Benchmark;
 use crate::metrics::Report;
-use crate::runtime::Runtime;
-use crate::sim::{run_averaged, RunConfig};
+use crate::sim::{ParallelSweeper, RunConfig};
 
 use super::table::{f1, f2, pct, Table};
 
@@ -62,32 +61,32 @@ impl Default for ReproOpts {
     }
 }
 
-pub fn run_experiment(rt: &Runtime, id: &str, opts: &ReproOpts) -> Result<()> {
+pub fn run_experiment(sw: &ParallelSweeper, id: &str, opts: &ReproOpts) -> Result<()> {
     match id {
-        "fig3" => fig3(rt, opts),
-        "fig4" => fig4(rt, opts),
-        "fig5" => fig5(rt, opts),
-        "fig8" | "fig9" | "tab2" => fig8_9_tab2(rt, opts),
-        "tab3" | "fig10" => tab3_fig10(rt, opts),
-        "fig11" => fig11(rt, opts),
-        "fig12" => fig12(rt, opts),
-        "tab4" => tab4(rt, opts),
-        "tab5" => tab5(rt, opts),
-        "fig13" => fig13(rt, opts),
-        "fig14" => fig14(rt, opts),
-        "fig15" => fig15(rt, opts),
-        "tab6" => tab6(rt, opts),
-        "tab7" => tab7(rt, opts),
-        "tab8" => tab8(rt, opts),
-        "abl-decay" => abl_decay(rt, opts),
-        "abl-interval" => abl_interval(rt, opts),
-        "abl-oracle" => abl_oracle(rt, opts),
+        "fig3" => fig3(sw, opts),
+        "fig4" => fig4(sw, opts),
+        "fig5" => fig5(sw, opts),
+        "fig8" | "fig9" | "tab2" => fig8_9_tab2(sw, opts),
+        "tab3" | "fig10" => tab3_fig10(sw, opts),
+        "fig11" => fig11(sw, opts),
+        "fig12" => fig12(sw, opts),
+        "tab4" => tab4(sw, opts),
+        "tab5" => tab5(sw, opts),
+        "fig13" => fig13(sw, opts),
+        "fig14" => fig14(sw, opts),
+        "fig15" => fig15(sw, opts),
+        "tab6" => tab6(sw, opts),
+        "tab7" => tab7(sw, opts),
+        "tab8" => tab8(sw, opts),
+        "abl-decay" => abl_decay(sw, opts),
+        "abl-interval" => abl_interval(sw, opts),
+        "abl-oracle" => abl_oracle(sw, opts),
         "all" => {
             for (id, _) in list() {
                 if id == "fig9" || id == "tab2" || id == "fig10" {
                     continue; // produced jointly with fig8/tab3
                 }
-                run_experiment(rt, id, opts)?;
+                run_experiment(sw, id, opts)?;
             }
             Ok(())
         }
@@ -111,15 +110,15 @@ fn methods() -> Vec<(&'static str, TunePolicyKind, FreezePolicyKind)> {
     ]
 }
 
-fn run_cfg(rt: &Runtime, c: &RunConfig, opts: &ReproOpts) -> Result<Report> {
-    Ok(run_averaged(rt, c, &opts.seeds)?.0)
+fn run_cfg(sw: &ParallelSweeper, c: &RunConfig, opts: &ReproOpts) -> Result<Report> {
+    Ok(sw.run_averaged(c, &opts.seeds)?.0)
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 3 — time/energy breakdown of immediate fine-tuning
 // ---------------------------------------------------------------------------
 
-fn fig3(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig3(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 3: breakdown of immediate fine-tuning (NC)",
         &["model", "init%t", "load/save%t", "compute%t", "init%e",
@@ -128,7 +127,7 @@ fn fig3(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
     for model in ["res50", "mbv2", "deit"] {
         let c = cfg(model, Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         let e = &r.energy;
         let ts = e.total_s();
         let tj = e.total_j();
@@ -151,7 +150,7 @@ fn fig3(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 4 — accuracy saturation across fine-tuning rounds
 // ---------------------------------------------------------------------------
 
-fn fig4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig4(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 4: validation accuracy over rounds (scenarios 2-3, Immed.)",
         &["model", "round", "scenario", "val_acc%"],
@@ -160,7 +159,7 @@ fn fig4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let c = cfg(model, Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None)
             .with_seed(opts.seeds[0]);
-        let r = crate::sim::Simulation::new(rt, c)?.run()?;
+        let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
         for (i, rr) in r
             .round_log
             .iter()
@@ -182,13 +181,13 @@ fn fig4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 5 — CKA variation curves
 // ---------------------------------------------------------------------------
 
-fn fig5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig5(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut c = cfg("res50", Benchmark::Nc, opts)
         .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze)
         .with_seed(opts.seeds[0]);
     c.keep_cka_trace = true;
     c.cka_th = 0.0; // observe without freezing so full curves are traced
-    let report = crate::sim::Simulation::new(rt, c)?.run()?;
+    let report = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
     let mut t = Table::new(
         "Fig 5: CKA of selected layers over fine-tuning (res50, NC)",
         &["iteration", "layer", "cka"],
@@ -210,7 +209,7 @@ fn fig5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Figs. 8/9 + Table II — the main grid
 // ---------------------------------------------------------------------------
 
-fn fig8_9_tab2(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig8_9_tab2(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let benches = [
         Benchmark::Nc,
         Benchmark::Nic79,
@@ -229,14 +228,27 @@ fn fig8_9_tab2(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         "Table II: average inference accuracy (%)",
         &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
     );
-    for model in ["res50", "mbv2", "deit"] {
+    // whole grid as one flat job list: every (model, benchmark, method,
+    // seed) run lands on the sweeper's work queue at once, so the worker
+    // pool stays busy across cell boundaries.
+    let models = ["res50", "mbv2", "deit"];
+    let mut cfgs = Vec::new();
+    for model in models {
+        for b in benches {
+            for (_, tune, freeze) in methods() {
+                cfgs.push(cfg(model, b, opts).with_policies(tune, freeze));
+            }
+        }
+    }
+    let reports = sw.run_averaged_many(&cfgs, &opts.seeds)?;
+    let mut cells = reports.iter();
+    for model in models {
         for b in benches {
             let mut times = vec![];
             let mut energies = vec![];
             let mut accs = vec![];
-            for (_, tune, freeze) in methods() {
-                let c = cfg(model, b, opts).with_policies(tune, freeze);
-                let r = run_cfg(rt, &c, opts)?;
+            for _ in methods() {
+                let r = cells.next().expect("grid cell");
                 times.push(r.energy.total_s());
                 energies.push(r.energy.total_j());
                 accs.push(r.avg_inference_accuracy);
@@ -264,7 +276,7 @@ fn fig8_9_tab2(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table III + Fig. 10 — computation & memory
 // ---------------------------------------------------------------------------
 
-fn tab3_fig10(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab3_fig10(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t3 = Table::new(
         "Table III: computation of the whole NC process (paper-scale TFLOPs)",
         &["model", "Immed.", "ETuner", "reduction%"],
@@ -276,10 +288,10 @@ fn tab3_fig10(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
     for model in ["res50", "mbv2"] {
         let ci = cfg(model, Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
-        let ri = run_cfg(rt, &ci, opts)?;
+        let ri = run_cfg(sw, &ci, opts)?;
         let ce = cfg(model, Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        let re = run_cfg(rt, &ce, opts)?;
+        let re = run_cfg(sw, &ce, opts)?;
         t3.row(vec![
             model.into(),
             f1(ri.train_tflops),
@@ -304,7 +316,7 @@ fn tab3_fig10(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 11 — convergence speed
 // ---------------------------------------------------------------------------
 
-fn fig11(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig11(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 11: convergence within scenario 2 (res50, NC)",
         &["method", "round_in_scenario", "val_acc%"],
@@ -316,7 +328,7 @@ fn fig11(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(tune, freeze)
             .with_seed(opts.seeds[0]);
-        let r = crate::sim::Simulation::new(rt, c)?.run()?;
+        let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
         for (i, rr) in r
             .round_log
             .iter()
@@ -333,11 +345,11 @@ fn fig11(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 12 — LazyTune case study
 // ---------------------------------------------------------------------------
 
-fn fig12(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig12(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let c = cfg("res50", Benchmark::Nc, opts)
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None)
         .with_seed(opts.seeds[0]);
-    let r = crate::sim::Simulation::new(rt, c)?.run()?;
+    let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
     let mut t = Table::new(
         "Fig 12: batches_needed trace (res50, NC, scenarios 2-3)",
         &["t", "scenario", "batches_needed", "batches_merged", "val_acc%"],
@@ -358,14 +370,14 @@ fn fig12(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table IV — NLP workload
 // ---------------------------------------------------------------------------
 
-fn tab4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab4(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Table IV: NLP workload (bert, 20News)",
         &["method", "accuracy%", "time_min", "energy_Wh"],
     );
     for (name, tune, freeze) in methods() {
         let c = cfg("bert", Benchmark::News20, opts).with_policies(tune, freeze);
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         t.row(vec![
             name.into(),
             pct(r.avg_inference_accuracy),
@@ -380,7 +392,7 @@ fn tab4(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table V — SOTA comparison (all with LazyTune integrated)
 // ---------------------------------------------------------------------------
 
-fn tab5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab5(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Table V: SOTA efficient-learning comparison (LazyTune integrated)",
         &["model", "benchmark", "method", "accuracy%", "energy_Wh"],
@@ -393,12 +405,26 @@ fn tab5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         ("Ekya", FreezePolicyKind::Ekya),
         ("ETuner", FreezePolicyKind::SimFreeze),
     ];
-    for model in ["res50", "mbv2", "deit"] {
-        for b in [Benchmark::Nc, Benchmark::Nic391] {
-            for (name, freeze) in entries {
-                let c = cfg(model, b, opts)
-                    .with_policies(TunePolicyKind::LazyTune, freeze);
-                let r = run_cfg(rt, &c, opts)?;
+    // one flat parallel batch over the whole comparison grid
+    let models = ["res50", "mbv2", "deit"];
+    let benches = [Benchmark::Nc, Benchmark::Nic391];
+    let mut cfgs = Vec::new();
+    for model in models {
+        for b in benches {
+            for (_, freeze) in entries {
+                cfgs.push(
+                    cfg(model, b, opts)
+                        .with_policies(TunePolicyKind::LazyTune, freeze),
+                );
+            }
+        }
+    }
+    let reports = sw.run_averaged_many(&cfgs, &opts.seeds)?;
+    let mut cells = reports.iter();
+    for model in models {
+        for b in benches {
+            for (name, _) in entries {
+                let r = cells.next().expect("grid cell");
                 t.row(vec![
                     model.into(),
                     b.name().into(),
@@ -416,7 +442,7 @@ fn tab5(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 13 — sensitivity to the number of inference requests
 // ---------------------------------------------------------------------------
 
-fn fig13(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig13(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 13: sensitivity to request count (res50, NC)",
         &["requests", "method", "accuracy%", "energy_Wh"],
@@ -428,7 +454,7 @@ fn fig13(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         ] {
             let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
             c.n_requests = n;
-            let r = run_cfg(rt, &c, opts)?;
+            let r = run_cfg(sw, &c, opts)?;
             t.row(vec![
                 format!("{n}"),
                 name.into(),
@@ -444,7 +470,7 @@ fn fig13(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 14 — arrival distributions
 // ---------------------------------------------------------------------------
 
-fn fig14(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig14(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 14: arrival-distribution sensitivity (res50, NC)",
         &["distribution", "method", "accuracy%", "energy_Wh"],
@@ -462,7 +488,7 @@ fn fig14(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
             let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
             c.train_arrival = kind;
             c.infer_arrival = kind;
-            let r = run_cfg(rt, &c, opts)?;
+            let r = run_cfg(sw, &c, opts)?;
             t.row(vec![
                 kind.name().into(),
                 name.into(),
@@ -478,7 +504,7 @@ fn fig14(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Fig. 15 — CKA stability threshold
 // ---------------------------------------------------------------------------
 
-fn fig15(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn fig15(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Fig 15: CKA stability threshold sweep (res50, NC, ETuner)",
         &["threshold%", "accuracy%", "energy_Wh"],
@@ -487,7 +513,7 @@ fn fig15(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let mut c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
         c.cka_th = th;
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         t.row(vec![
             format!("{:.1}", th * 100.0),
             pct(r.avg_inference_accuracy),
@@ -501,7 +527,7 @@ fn fig15(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table VI — semi-supervised learning
 // ---------------------------------------------------------------------------
 
-fn tab6(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab6(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Table VI: semi-supervised (NC, 10% labeled, SimSiam + supervised)",
         &["model", "method", "accuracy%", "energy_Wh"],
@@ -513,7 +539,7 @@ fn tab6(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         ] {
             let mut c = cfg(model, Benchmark::Nc, opts).with_policies(tune, freeze);
             c.labeled_fraction = Some(0.1);
-            let r = run_cfg(rt, &c, opts)?;
+            let r = run_cfg(sw, &c, opts)?;
             t.row(vec![
                 model.into(),
                 name.into(),
@@ -529,7 +555,7 @@ fn tab6(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table VII — static lazy strategies
 // ---------------------------------------------------------------------------
 
-fn tab7(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab7(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Table VII: static fine-tuning strategies vs LazyTune (res50, NC)",
         &["method", "batches_to_trigger", "accuracy%", "energy_Wh"],
@@ -543,7 +569,7 @@ fn tab7(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
     for (name, tune) in entries {
         let c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(tune, FreezePolicyKind::None);
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         let trig = match tune {
             TunePolicyKind::Immediate => "1".to_string(),
             TunePolicyKind::Static(n) => format!("{n}"),
@@ -563,7 +589,7 @@ fn tab7(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Table VIII — quantization compatibility
 // ---------------------------------------------------------------------------
 
-fn tab8(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn tab8(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Table VIII: 8-bit QAT compatibility (res50)",
         &["benchmark", "method", "acc_8bit%", "acc_32bit%"],
@@ -575,9 +601,9 @@ fn tab8(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         ] {
             let mut cq = cfg("res50", b, opts).with_policies(tune, freeze);
             cq.quant = true;
-            let rq = run_cfg(rt, &cq, opts)?;
+            let rq = run_cfg(sw, &cq, opts)?;
             let cf = cfg("res50", b, opts).with_policies(tune, freeze);
-            let rf = run_cfg(rt, &cf, opts)?;
+            let rf = run_cfg(sw, &cf, opts)?;
             t.row(vec![
                 b.name().into(),
                 name.into(),
@@ -593,7 +619,7 @@ fn tab8(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 // Ablations (design-choice benches called out in DESIGN.md)
 // ---------------------------------------------------------------------------
 
-fn abl_decay(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn abl_decay(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     use crate::coordinator::lazytune::DecayKind;
     let mut t = Table::new(
         "Ablation: batches_needed decay function (res50, NC, ETuner)",
@@ -607,7 +633,7 @@ fn abl_decay(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let mut c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
         c.decay = decay;
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         t.row(vec![
             name.into(),
             pct(r.avg_inference_accuracy),
@@ -618,7 +644,7 @@ fn abl_decay(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
     t.emit(&opts.results_dir, "abl_decay")
 }
 
-fn abl_interval(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn abl_interval(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Ablation: SimFreeze probe interval (res50, NC, ETuner)",
         &["interval_iters", "accuracy%", "energy_Wh", "cka_TFLOPs"],
@@ -627,7 +653,7 @@ fn abl_interval(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let mut c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
         c.freeze_interval = interval;
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         t.row(vec![
             format!("{interval}"),
             pct(r.avg_inference_accuracy),
@@ -638,7 +664,7 @@ fn abl_interval(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
     t.emit(&opts.results_dir, "abl_interval")
 }
 
-fn abl_oracle(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
+fn abl_oracle(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
     let mut t = Table::new(
         "Ablation: scenario-change signal (res50, NC, ETuner)",
         &["signal", "accuracy%", "energy_Wh", "changes_detected"],
@@ -649,7 +675,7 @@ fn abl_oracle(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
         let mut c = cfg("res50", Benchmark::Nc, opts)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
         c.oracle_change_detection = oracle;
-        let r = run_cfg(rt, &c, opts)?;
+        let r = run_cfg(sw, &c, opts)?;
         t.row(vec![
             name.into(),
             pct(r.avg_inference_accuracy),
@@ -662,7 +688,7 @@ fn abl_oracle(rt: &Runtime, opts: &ReproOpts) -> Result<()> {
 
 /// Shared helper for callers needing just one averaged cell.
 pub fn one_cell(
-    rt: &Runtime,
+    sw: &ParallelSweeper,
     model: &str,
     b: Benchmark,
     tune: TunePolicyKind,
@@ -670,7 +696,7 @@ pub fn one_cell(
     opts: &ReproOpts,
 ) -> Result<Report> {
     let c = cfg(model, b, opts).with_policies(tune, freeze);
-    run_cfg(rt, &c, opts)
+    run_cfg(sw, &c, opts)
 }
 
 /// Results directory helper used by main.

@@ -14,11 +14,15 @@ use anyhow::{Context, Result};
 use super::artifact::Manifest;
 use super::exec::TensorF32;
 
+#[cfg(not(feature = "xla"))]
+use crate::runtime::stub as xla;
+
 /// Loaded runtime: PJRT CPU client + manifest + executable cache.
 ///
 /// Not `Sync`: PJRT executables are cached behind a `RefCell`.  Run one
-/// `Runtime` per thread (the simulator is single-threaded per run; sweeps
-/// parallelize across runs by constructing one runtime each).
+/// `Runtime` per thread (the simulator is single-threaded per run;
+/// [`crate::sim::ParallelSweeper`] parallelizes across runs by constructing
+/// one runtime per worker thread).
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -82,19 +86,35 @@ impl Runtime {
     /// Execute with pre-built literals (callers with i32 inputs or reused
     /// buffers).  Output tuple is decomposed into individual tensors.
     pub fn exec_raw(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<TensorF32>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_refs(name, &refs)
+    }
+
+    /// Execute with borrowed literals — the zero-copy entry: callers keep
+    /// ownership of cached literals (e.g. the session's θ literal) and no
+    /// literal is rebuilt or cloned for the call.
+    pub fn exec_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<TensorF32>> {
+        self.exec_lits(name, inputs)?
+            .into_iter()
+            .map(TensorF32::from_literal)
+            .collect()
+    }
+
+    /// Like [`Self::exec_refs`] but returns the raw output literals, so a
+    /// caller can keep one (e.g. the updated θ of a train step) as the next
+    /// call's input without a host round-trip re-marshal.
+    pub fn exec_lits(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let exe = self.executable(name)?;
         *self.exec_count.borrow_mut() += 1;
         let out = exe
-            .execute::<xla::Literal>(inputs)
+            .execute::<&xla::Literal>(inputs)
             .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
         let lit = out[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
         // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
-        parts.into_iter().map(TensorF32::from_literal).collect()
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
     }
 
     /// Read a raw little-endian f32 binary (the `<model>_theta0.bin`

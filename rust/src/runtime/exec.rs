@@ -6,6 +6,9 @@
 
 use anyhow::Result;
 
+#[cfg(not(feature = "xla"))]
+use crate::runtime::stub as xla;
+
 /// A host f32 tensor: row-major contiguous.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorF32 {
@@ -48,16 +51,7 @@ impl TensorF32 {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.shape.is_empty() {
-            // scalar: reshape to rank 0
-            return lit
-                .reshape(&[])
-                .map_err(|e| anyhow::anyhow!("reshape scalar: {e:?}"));
-        }
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        lit.reshape(&dims)
-            .map_err(|e| anyhow::anyhow!("reshape {:?}: {e:?}", self.shape))
+        f32_literal(&self.data, &self.shape)
     }
 
     pub fn from_literal(lit: xla::Literal) -> Result<TensorF32> {
@@ -103,6 +97,22 @@ impl TensorF32 {
     }
 }
 
+/// Build an f32 literal straight from a host slice — the zero-copy-side
+/// marshalling entry: no intermediate `Vec` / `TensorF32` is materialized,
+/// the slice goes directly into the literal.  An empty `shape` produces a
+/// rank-0 scalar.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        return lit
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("reshape scalar: {e:?}"));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}
+
 /// Build an i32 literal (labels input of the train artifacts).
 pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
@@ -134,6 +144,18 @@ mod tests {
         let v = t.logsumexp_rows()[0];
         assert!((v - (1000.0 + 2f32.ln())).abs() < 1e-3);
         assert!(v.is_finite());
+    }
+
+    #[test]
+    fn literal_roundtrip_preserves_shape_and_data() {
+        let t = TensorF32::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let back = TensorF32::from_literal(t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+        let s = TensorF32::scalar(7.5);
+        let lit = f32_literal(&s.data, &s.shape).unwrap();
+        let back = TensorF32::from_literal(lit).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.data, vec![7.5]);
     }
 
     #[test]

@@ -5,10 +5,17 @@
 //! Interchange is **HLO text** (see DESIGN.md / aot.py): jax ≥ 0.5 protos
 //! carry 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
 //! text parser reassigns ids and round-trips cleanly.
+//!
+//! Builds without the `xla` cargo feature swap the real bindings for
+//! [`stub`], an API-identical inert backend: literals still marshal on the
+//! host (so the zero-copy caches are testable), but artifact execution
+//! reports a clear error.
 
 pub mod artifact;
 pub mod client;
 pub mod exec;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
 pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
 pub use client::Runtime;

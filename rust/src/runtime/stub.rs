@@ -1,0 +1,178 @@
+//! Inert stand-in for the `xla` crate when the `xla` cargo feature is off.
+//!
+//! Mirrors exactly the API surface the runtime layer uses so the whole
+//! crate (coordinator, policies, simulator data structures, CLI) compiles
+//! and unit-tests on machines without the XLA toolchain.  Host-side
+//! literals are *functional* (shape + data round-trips work, so the
+//! marshalling layer and its caches can be exercised); anything that would
+//! need a real PJRT client fails with a clear error at runtime.
+
+use std::path::Path;
+
+/// Error type standing in for `xla::Error`; only `Debug` is needed by the
+/// `map_err(|e| anyhow!("..: {e:?}"))` call sites.
+#[derive(Debug)]
+pub struct Error(pub &'static str);
+
+const NO_XLA: &str = "etuner was built without the `xla` feature; \
+                      rebuild with `--features xla` to execute artifacts";
+
+/// Element types a stub literal can hold.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Conversion glue so `Literal::vec1` / `Literal::to_vec` stay generic like
+/// the real crate's.
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: &[Self]) -> Data;
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::F32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
+        match data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::I32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
+        match data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32")),
+        }
+    }
+}
+
+/// Host literal: shape + typed data (enough for marshal/unmarshal tests).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Shape view matching `xla::ArrayShape`'s `dims()` accessor.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error("reshape: element count mismatch"));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error(NO_XLA))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(Error(NO_XLA))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(NO_XLA))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(NO_XLA))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(NO_XLA))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(NO_XLA))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_shape_and_data() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn execution_paths_error_without_xla() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,10 +1,12 @@
 //! The continual-learning simulation: one deployed model serving a
 //! benchmark's event stream under a (tune, freeze) policy pair, with all
 //! compute flowing through the PJRT artifacts and all costs charged to the
-//! Jetson-scale ledger.
+//! Jetson-scale ledger.  Seed sweeps scale across cores through
+//! [`ParallelSweeper`] (one runtime per worker thread).
 
 pub mod run;
 pub mod sweep;
+pub mod valpool;
 
 pub use run::{RunConfig, Simulation};
-pub use sweep::run_averaged;
+pub use sweep::{run_averaged, ParallelSweeper};

@@ -5,12 +5,23 @@
 //! triggers fine-tuning rounds per the inter-tuning policy, freezes layers
 //! per the intra-tuning policy, detects scenario changes from inference
 //! energy scores, and maintains CWR head consolidation across scenarios.
+//!
+//! # Request-path costs
+//!
+//! The serving path is cache-structured so a request whose inputs did not
+//! change performs **zero full-θ copies**: the bank-installed serving θ is
+//! kept in a [`ServingCache`] and invalidated by generation counters
+//! ([`Params::generation`] moves on every train step / head surgery,
+//! [`Cwr::generation`] on every consolidation), and the session's literal
+//! cache (see [`crate::model::ModelSession`]) skips θ re-marshalling while
+//! the serving parameters are unchanged.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::baselines;
+use crate::bitset::BitSet;
 use crate::coordinator::policy::{
     FreezePolicy, FreezePolicyKind, NoFreeze, SimFreezePolicy, TunePolicy,
     TunePolicyKind,
@@ -28,6 +39,8 @@ use crate::metrics::{Report, RequestRecord, RoundRecord};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
 use crate::runtime::Runtime;
+
+use super::valpool::ValPool;
 
 /// Everything configurable about one run.
 #[derive(Clone, Debug)]
@@ -59,6 +72,9 @@ pub struct RunConfig {
     /// Use the event stream's true scenario boundaries instead of the
     /// energy-score detector (oracle ablation).
     pub oracle_change_detection: bool,
+    /// Debug/regression knob: rebuild the serving θ on every request (the
+    /// seed behaviour).  Reports must be bit-identical either way.
+    pub disable_serving_cache: bool,
 }
 
 impl RunConfig {
@@ -82,6 +98,7 @@ impl RunConfig {
             keep_cka_trace: false,
             decay: DecayKind::Logarithmic,
             oracle_change_detection: false,
+            disable_serving_cache: false,
         }
     }
 
@@ -94,6 +111,45 @@ impl RunConfig {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
+    }
+}
+
+/// Cached bank-installed serving parameters + the generation snapshot they
+/// were built from.  While the snapshot matches, `serve_request` reuses the
+/// cached θ outright (no clone, no head surgery, and — via the session's
+/// literal cache — no re-marshal).
+struct ServingCache {
+    params: Option<Params>,
+    src_id: u64,
+    src_gen: u64,
+    cwr_gen: u64,
+    scenario: usize,
+    /// scratch: live-scenario classes excluded from the bank install.
+    except: BitSet,
+    rebuilds: u64,
+    hits: u64,
+}
+
+impl ServingCache {
+    fn new(classes: usize) -> ServingCache {
+        ServingCache {
+            params: None,
+            src_id: 0,
+            src_gen: 0,
+            cwr_gen: 0,
+            scenario: usize::MAX,
+            except: BitSet::new(classes),
+            rebuilds: 0,
+            hits: 0,
+        }
+    }
+
+    fn is_valid(&self, src: &Params, cwr: &Cwr, scenario: usize) -> bool {
+        self.params.is_some()
+            && self.src_id == src.id()
+            && self.src_gen == src.generation()
+            && self.cwr_gen == cwr.generation()
+            && self.scenario == scenario
     }
 }
 
@@ -111,8 +167,12 @@ pub struct Simulation<'rt> {
     ood: EnergyOod,
     book: CostBook,
     rng: Pcg32,
-    val_pool_x: Vec<f32>,
-    val_pool_y: Vec<i32>,
+    val_pool: ValPool,
+    val_x: Vec<f32>,
+    val_y: Vec<i32>,
+    serving: ServingCache,
+    aug_a: Vec<f32>,
+    aug_b: Vec<f32>,
     last_energy_score: Option<f64>,
     report: Report,
 }
@@ -164,7 +224,7 @@ impl<'rt> Simulation<'rt> {
             FreezePolicyKind::SimFreeze => {
                 let mut sf = SimFreeze::new(
                     sess.m.units,
-                    params.theta.clone(),
+                    params.theta().to_vec(),
                     cfg.freeze_interval,
                     cfg.cka_th,
                 );
@@ -173,7 +233,7 @@ impl<'rt> Simulation<'rt> {
             }
             FreezePolicyKind::Egeria => Box::new(baselines::egeria::Egeria::new(
                 &sess.m,
-                params.theta.clone(),
+                params.theta().to_vec(),
                 cfg.freeze_interval,
             )),
             FreezePolicyKind::SlimFit => Box::new(
@@ -197,6 +257,8 @@ impl<'rt> Simulation<'rt> {
         report.freeze_policy = cfg.freeze.name().to_string();
         report.seed = cfg.seed;
 
+        let val_pool = ValPool::new(sess.m.d, VAL_KEEP);
+        let serving = ServingCache::new(sess.m.classes);
         Ok(Simulation {
             cfg,
             sess,
@@ -210,8 +272,12 @@ impl<'rt> Simulation<'rt> {
             ood: EnergyOod::new(),
             book,
             rng,
-            val_pool_x: Vec::new(),
-            val_pool_y: Vec::new(),
+            val_pool,
+            val_x: Vec::new(),
+            val_y: Vec::new(),
+            serving,
+            aug_a: Vec::new(),
+            aug_b: Vec::new(),
             last_energy_score: None,
             report,
         })
@@ -221,7 +287,7 @@ impl<'rt> Simulation<'rt> {
     pub fn run(mut self) -> Result<Report> {
         let wall = Instant::now();
         let mut buffer: Vec<(Vec<f32>, Vec<i32>, usize)> = Vec::new();
-        let mut trained_classes: Vec<usize> = Vec::new();
+        let mut trained_classes = BitSet::new(self.sess.m.classes);
         let mut reinit_done: Vec<bool> = vec![false; self.sess.m.classes];
         let mut probe_pending = true;
         let mut total_iters: u64 = 0;
@@ -240,7 +306,7 @@ impl<'rt> Simulation<'rt> {
                     {
                         self.report.scenario_changes_detected += 1;
                         self.tune.on_scenario_change();
-                        self.cwr.consolidate(
+                        self.cwr.consolidate_set(
                             &self.sess.m,
                             &self.params,
                             &trained_classes,
@@ -310,7 +376,7 @@ impl<'rt> Simulation<'rt> {
                     if !self.cfg.oracle_change_detection && self.detect_change()? {
                         self.report.scenario_changes_detected += 1;
                         self.tune.on_scenario_change();
-                        self.cwr.consolidate(
+                        self.cwr.consolidate_set(
                             &self.sess.m,
                             &self.params,
                             &trained_classes,
@@ -336,7 +402,7 @@ impl<'rt> Simulation<'rt> {
             )?;
         }
         self.cwr
-            .consolidate(&self.sess.m, &self.params, &trained_classes);
+            .consolidate_set(&self.sess.m, &self.params, &trained_classes);
 
         self.report.memory_end_bytes = flops::train_memory_bytes(
             &self.sess.m,
@@ -350,6 +416,10 @@ impl<'rt> Simulation<'rt> {
         self.report.train_tflops = self.book.train_flops / 1e12;
         self.report.cka_tflops = self.book.cka_flops / 1e12;
         self.report.wall_exec_s = wall.elapsed().as_secs_f64();
+        self.report.theta_marshals = self.sess.theta_marshal_count();
+        self.report.theta_cache_hits = self.sess.theta_cache_hit_count();
+        self.report.serving_rebuilds = self.serving.rebuilds;
+        self.report.serving_hits = self.serving.hits;
         self.report.finish();
         Ok(self.report)
     }
@@ -360,30 +430,24 @@ impl<'rt> Simulation<'rt> {
         let d = self.sess.m.d;
         // take the first 4 samples of the batch into the rolling pool
         for i in 0..4.min(y.len()) {
-            self.val_pool_x.extend_from_slice(&x[i * d..(i + 1) * d]);
-            self.val_pool_y.push(y[i]);
-        }
-        while self.val_pool_y.len() > VAL_KEEP {
-            self.val_pool_x.drain(0..d);
-            self.val_pool_y.remove(0);
+            self.val_pool.push(&x[i * d..(i + 1) * d], y[i]);
         }
     }
 
     fn validation_accuracy(&mut self) -> Result<f64> {
-        if self.val_pool_y.is_empty() {
+        if self.val_pool.is_empty() {
             return Ok(0.0);
         }
-        let d = self.sess.m.d;
         let b = self.sess.m.batch_infer;
-        let mut x = Vec::with_capacity(b * d);
-        let mut y = Vec::with_capacity(b);
+        self.val_x.clear();
+        self.val_y.clear();
         for i in 0..b {
-            let j = i % self.val_pool_y.len();
-            x.extend_from_slice(&self.val_pool_x[j * d..(j + 1) * d]);
-            y.push(self.val_pool_y[j]);
+            let (x, y) = self.val_pool.get(i % self.val_pool.len());
+            self.val_x.extend_from_slice(x);
+            self.val_y.push(y);
         }
         self.book.charge_validation(&self.sess.m, b);
-        let acc = self.sess.accuracy(&self.params, &x, &y)?;
+        let acc = self.sess.accuracy(&self.params, &self.val_x, &self.val_y)?;
         Ok(acc as f64)
     }
 
@@ -393,7 +457,7 @@ impl<'rt> Simulation<'rt> {
         t: f64,
         scenario: usize,
         buffer: &mut Vec<(Vec<f32>, Vec<i32>, usize)>,
-        trained_classes: &mut Vec<usize>,
+        trained_classes: &mut BitSet,
         total_iters: &mut u64,
         first_round: &mut bool,
     ) -> Result<()> {
@@ -421,13 +485,14 @@ impl<'rt> Simulation<'rt> {
                 self.sess
                     .train_step(&mut self.params, &x, &y, self.freeze.state())?;
                 for &c in &y {
-                    if !trained_classes.contains(&(c as usize)) {
-                        trained_classes.push(c as usize);
-                    }
+                    trained_classes.insert(c as usize);
                 }
             } else {
-                // SimSiam on two augmented views (noise + per-dim jitter)
-                let (v1, v2) = self.augment(&x);
+                // SimSiam on two augmented views (noise + per-dim jitter),
+                // written into reused per-simulation buffers.
+                let mut v1 = std::mem::take(&mut self.aug_a);
+                let mut v2 = std::mem::take(&mut self.aug_b);
+                self.augment(&x, &mut v1, &mut v2);
                 let mut phi = std::mem::take(&mut self.phi);
                 self.sess.ssl_step(
                     &mut self.params,
@@ -437,6 +502,8 @@ impl<'rt> Simulation<'rt> {
                     self.freeze.state(),
                 )?;
                 self.phi = phi;
+                self.aug_a = v1;
+                self.aug_b = v2;
             }
             self.freeze
                 .after_iteration(&self.sess, &mut self.params, &mut self.book)?;
@@ -463,36 +530,59 @@ impl<'rt> Simulation<'rt> {
         Ok(())
     }
 
-    fn augment(&mut self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let mut v1 = x.to_vec();
-        let mut v2 = x.to_vec();
+    /// Fill `v1`/`v2` with two augmented views of `x` (reused buffers).
+    fn augment(&mut self, x: &[f32], v1: &mut Vec<f32>, v2: &mut Vec<f32>) {
+        v1.clear();
+        v1.extend_from_slice(x);
+        v2.clear();
+        v2.extend_from_slice(x);
         for v in v1.iter_mut() {
             *v = *v * (0.9 + 0.2 * self.rng.f32()) + 0.1 * self.rng.normal();
         }
         for v in v2.iter_mut() {
             *v = *v * (0.9 + 0.2 * self.rng.f32()) + 0.1 * self.rng.normal();
         }
-        (v1, v2)
     }
 
     /// Serve one inference request: a test draw over the classes present in
     /// the deployment environment so far (the CORe50 protocol evaluates on
     /// encountered objects), under the active scenario's transform.
     fn serve_request(&mut self, t: f64, scenario: usize, stale: usize) -> Result<()> {
-        let seen = self.schedule.scenarios[scenario].seen.clone();
         let (x, y) = self.schedule.world.batch(
             self.sess.m.batch_infer,
             scenario,
-            &seen,
+            &self.schedule.scenarios[scenario].seen,
         );
         // serve with the consolidated head for past classes, keeping the
-        // live training rows for classes of the current scenario.
-        let mut serving = self.params.clone();
-        let current = self.schedule.scenarios[scenario].classes.clone();
-        self.install_bank_except(&mut serving, &current);
+        // live training rows for classes of the current scenario.  The
+        // bank-installed θ is cached: requests between parameter/bank
+        // changes reuse it with zero copies.
+        let cache_ok = !self.cfg.disable_serving_cache
+            && self.serving.is_valid(&self.params, &self.cwr, scenario);
+        if cache_ok {
+            self.serving.hits += 1;
+        } else {
+            self.serving.rebuilds += 1;
+            if self.serving.params.is_none() {
+                // first request: allocate the slot (keeps its id for good)
+                self.serving.params = Some(self.params.clone());
+            } else {
+                self.serving.params.as_mut().unwrap().copy_from(&self.params);
+            }
+            self.serving
+                .except
+                .assign(&self.schedule.scenarios[scenario].classes);
+            let p = self.serving.params.as_mut().unwrap();
+            self.cwr.install_except(&self.sess.m, p, &self.serving.except);
+            self.serving.src_id = self.params.id();
+            self.serving.src_gen = self.params.generation();
+            self.serving.cwr_gen = self.cwr.generation();
+            self.serving.scenario = scenario;
+        }
+        let serving = self.serving.params.as_ref().unwrap();
         // ONE artifact execution serves both the prediction and the OOD
         // energy score (§Perf L3: halves the request-path cost).
-        let logits = self.sess.infer(&serving, &x)?;
+        let logits = self.sess.infer(serving, &x)?;
         let pred = logits.argmax_rows();
         let correct = pred
             .iter()
@@ -523,16 +613,6 @@ impl<'rt> Simulation<'rt> {
             Ok(self.ood.observe(score))
         } else {
             Ok(false)
-        }
-    }
-
-    fn install_bank_except(&mut self, p: &mut Params, except: &[usize]) {
-        // install consolidated rows for every seen class not being trained
-        for c in 0..self.sess.m.classes {
-            if except.contains(&c) || !self.cwr.seen(c) {
-                continue;
-            }
-            self.cwr.install_class(&self.sess.m, p, c);
         }
     }
 }

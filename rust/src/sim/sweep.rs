@@ -1,5 +1,18 @@
 //! Seed sweeps: the paper reports every number as the average of 5 runs
 //! with different random seeds.
+//!
+//! # Parallel sweep engine
+//!
+//! [`Runtime`] is deliberately `!Sync` (PJRT executables live behind
+//! `Rc`/`RefCell`), so a *single* runtime can't be shared across threads.
+//! [`ParallelSweeper`] instead gives each worker thread its **own**
+//! runtime over the same artifact directory: workers pull `(index,
+//! RunConfig)` jobs from a shared queue and write results into their
+//! reserved slot, so the output order — and, because every simulation is
+//! seed-deterministic, every byte of every report except wall-clock
+//! timings — is identical no matter how many workers run.
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -8,7 +21,9 @@ use crate::runtime::Runtime;
 
 use super::run::{RunConfig, Simulation};
 
-/// Run `cfg` under `seeds` and return (mean report, per-seed reports).
+/// Run `cfg` under `seeds` sequentially on a borrowed runtime and return
+/// (mean report, per-seed reports).  The compatibility entry point —
+/// sweeps that should use every core go through [`ParallelSweeper`].
 pub fn run_averaged(
     rt: &Runtime,
     cfg: &RunConfig,
@@ -21,4 +36,138 @@ pub fn run_averaged(
         reports.push(Simulation::new(rt, c)?.run()?);
     }
     Ok((average(&reports), reports))
+}
+
+/// Multi-core sweep engine: owns a runtime for main-thread work and spawns
+/// `jobs` scoped worker threads (each constructing its own runtime) for
+/// batched runs.
+pub struct ParallelSweeper {
+    rt: Runtime,
+    jobs: usize,
+}
+
+impl ParallelSweeper {
+    /// Wrap an already-loaded runtime.  `jobs` is clamped to ≥ 1;
+    /// `jobs == 1` means fully sequential (no threads spawned).
+    pub fn new(rt: Runtime, jobs: usize) -> ParallelSweeper {
+        ParallelSweeper { rt, jobs: jobs.max(1) }
+    }
+
+    /// Load the runtime from an artifact directory.
+    pub fn from_dir<P: AsRef<std::path::Path>>(dir: P, jobs: usize) -> Result<ParallelSweeper> {
+        Ok(ParallelSweeper::new(Runtime::load(dir)?, jobs))
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Default worker count for CLI/bench entry points: every core.
+    pub fn default_jobs() -> usize {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    }
+
+    /// The main-thread runtime (single runs, probes, direct simulations).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Run every config, in deterministic input order, across up to
+    /// `jobs` worker threads.
+    pub fn run_many(&self, cfgs: &[RunConfig]) -> Result<Vec<Report>> {
+        let workers = self.jobs.min(cfgs.len());
+        if workers <= 1 {
+            return cfgs
+                .iter()
+                .map(|c| Simulation::new(&self.rt, c.clone())?.run())
+                .collect();
+        }
+        let dir = self.rt.artifact_dir().to_path_buf();
+        let next = Mutex::new(0usize);
+        let slots: Mutex<Vec<Option<Result<Report>>>> =
+            Mutex::new((0..cfgs.len()).map(|_| None).collect());
+        let failed = Mutex::new(false);
+        // worker-initialization failures get their own slot so a job
+        // completing concurrently can never overwrite the root cause.
+        let init_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    // each worker owns its runtime: `Runtime` is !Sync.
+                    let rt = match Runtime::load(&dir) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            *failed.lock().unwrap() = true;
+                            init_err.lock().unwrap().get_or_insert(e);
+                            return;
+                        }
+                    };
+                    loop {
+                        let i = {
+                            let mut n = next.lock().unwrap();
+                            if *n >= cfgs.len() || *failed.lock().unwrap() {
+                                break;
+                            }
+                            let i = *n;
+                            *n += 1;
+                            i
+                        };
+                        let res = Simulation::new(&rt, cfgs[i].clone())
+                            .and_then(|s| s.run());
+                        if res.is_err() {
+                            *failed.lock().unwrap() = true;
+                        }
+                        slots.lock().unwrap()[i] = Some(res);
+                    }
+                });
+            }
+        });
+        if let Some(e) = init_err.into_inner().unwrap() {
+            return Err(e.context("sweep worker failed to load its runtime"));
+        }
+        let slots = slots.into_inner().unwrap();
+        let mut out = Vec::with_capacity(cfgs.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(e)) => return Err(e.context(format!("sweep job {i}"))),
+                None => anyhow::bail!("sweep job {i} was aborted by an earlier failure"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parallel equivalent of [`run_averaged`]: identical mean and
+    /// per-seed reports (modulo wall-clock fields) for any worker count.
+    pub fn run_averaged(
+        &self,
+        cfg: &RunConfig,
+        seeds: &[u64],
+    ) -> Result<(Report, Vec<Report>)> {
+        anyhow::ensure!(!seeds.is_empty(), "need at least one seed");
+        let cfgs: Vec<RunConfig> =
+            seeds.iter().map(|&s| cfg.clone().with_seed(s)).collect();
+        let reports = self.run_many(&cfgs)?;
+        Ok((average(&reports), reports))
+    }
+
+    /// Seed-average many configs in one flat parallel batch (the whole
+    /// table grid keeps every core busy instead of one cell at a time).
+    /// Returns one mean report per input config, in input order.
+    pub fn run_averaged_many(
+        &self,
+        cfgs: &[RunConfig],
+        seeds: &[u64],
+    ) -> Result<Vec<Report>> {
+        anyhow::ensure!(!seeds.is_empty(), "need at least one seed");
+        let jobs: Vec<RunConfig> = cfgs
+            .iter()
+            .flat_map(|c| seeds.iter().map(|&s| c.clone().with_seed(s)))
+            .collect();
+        let reports = self.run_many(&jobs)?;
+        Ok(reports
+            .chunks(seeds.len())
+            .map(average)
+            .collect())
+    }
 }

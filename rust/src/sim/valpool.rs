@@ -1,0 +1,108 @@
+//! Fixed-capacity rolling validation pool.
+//!
+//! The seed kept the rolling window in two growable `Vec`s and evicted with
+//! `drain(0..d)` / `remove(0)` — an O(window) shift of the whole buffer for
+//! every arriving batch.  This ring buffer keeps identical FIFO semantics
+//! (same logical oldest-first ordering, same capacity) with O(d) pushes and
+//! zero steady-state allocation.
+
+/// Ring buffer of `(x, y)` validation samples, each `x` of dimension `d`.
+#[derive(Clone, Debug)]
+pub struct ValPool {
+    d: usize,
+    cap: usize,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    /// physical index of the logically-oldest sample (0 until full).
+    head: usize,
+    len: usize,
+}
+
+impl ValPool {
+    pub fn new(d: usize, cap: usize) -> ValPool {
+        assert!(d > 0 && cap > 0);
+        ValPool { d, cap, x: Vec::new(), y: Vec::new(), head: 0, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one sample; once full, the oldest sample is overwritten.
+    pub fn push(&mut self, x: &[f32], y: i32) {
+        debug_assert_eq!(x.len(), self.d);
+        if self.len < self.cap {
+            self.x.extend_from_slice(x);
+            self.y.push(y);
+            self.len += 1;
+        } else {
+            let pos = self.head;
+            self.x[pos * self.d..(pos + 1) * self.d].copy_from_slice(x);
+            self.y[pos] = y;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Logical index `j` (0 = oldest) -> sample view.
+    pub fn get(&self, j: usize) -> (&[f32], i32) {
+        debug_assert!(j < self.len);
+        let pos = if self.len < self.cap { j } else { (self.head + j) % self.cap };
+        (&self.x[pos * self.d..(pos + 1) * self.d], self.y[pos])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The semantics the seed's Vec-shift implementation had.
+    struct Naive {
+        d: usize,
+        cap: usize,
+        x: Vec<f32>,
+        y: Vec<i32>,
+    }
+
+    impl Naive {
+        fn push(&mut self, x: &[f32], y: i32) {
+            self.x.extend_from_slice(x);
+            self.y.push(y);
+            while self.y.len() > self.cap {
+                self.x.drain(0..self.d);
+                self.y.remove(0);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_fifo_semantics() {
+        let (d, cap) = (3, 5);
+        let mut ring = ValPool::new(d, cap);
+        let mut naive = Naive { d, cap, x: Vec::new(), y: Vec::new() };
+        for s in 0..17i32 {
+            let x: Vec<f32> = (0..d).map(|k| (s * 10 + k as i32) as f32).collect();
+            ring.push(&x, s);
+            naive.push(&x, s);
+            assert_eq!(ring.len(), naive.y.len());
+            for j in 0..ring.len() {
+                let (rx, ry) = ring.get(j);
+                assert_eq!(ry, naive.y[j], "step {s} sample {j}");
+                assert_eq!(rx, &naive.x[j * d..(j + 1) * d]);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_fill_indexes_in_arrival_order() {
+        let mut p = ValPool::new(2, 8);
+        p.push(&[1.0, 2.0], 10);
+        p.push(&[3.0, 4.0], 11);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.get(0), (&[1.0f32, 2.0][..], 10));
+        assert_eq!(p.get(1), (&[3.0f32, 4.0][..], 11));
+    }
+}

@@ -1,0 +1,175 @@
+//! Regression tests for the zero-copy execute boundary and the parallel
+//! sweep engine: the caches and the worker pool are pure plumbing, so every
+//! scientific output must be bit-identical with them on, off, or sharded
+//! across threads.  All tests need `make artifacts`.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::cost::flops::FreezeState;
+use etuner::data::benchmarks::Benchmark;
+use etuner::model::ModelSession;
+use etuner::runtime::Runtime;
+use etuner::sim::{run_averaged, ParallelSweeper, RunConfig, Simulation};
+use etuner::testkit;
+
+macro_rules! require {
+    () => {
+        if !testkit::artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 80;
+    c
+}
+
+#[test]
+fn infer_skips_theta_marshal_while_generation_unchanged() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let x = vec![0.1f32; sess.m.batch_infer * sess.m.d];
+
+    let a = sess.infer(&p, &x).unwrap();
+    assert_eq!(sess.theta_marshal_count(), 1);
+    assert_eq!(sess.theta_cache_hit_count(), 0);
+
+    let b = sess.infer(&p, &x).unwrap();
+    let c = sess.infer(&p, &x).unwrap();
+    assert_eq!(sess.theta_marshal_count(), 1, "unchanged θ re-marshalled");
+    assert_eq!(sess.theta_cache_hit_count(), 2);
+    assert_eq!(a, b, "cache-hit logits differ from cold logits");
+    assert_eq!(a, c);
+
+    // any mutable touch bumps the generation and invalidates the literal
+    p.theta_mut();
+    let d = sess.infer(&p, &x).unwrap();
+    assert_eq!(sess.theta_marshal_count(), 2);
+    assert_eq!(a, d, "identical content must give identical logits");
+}
+
+#[test]
+fn train_step_reuses_output_literal_without_remarshal() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let x = vec![0.05f32; sess.m.batch_train * sess.m.d];
+    let y: Vec<i32> = (0..sess.m.batch_train).map(|i| (i % 2) as i32).collect();
+
+    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    assert_eq!(sess.theta_marshal_count(), 1);
+    // consecutive steps feed the previous step's *output* literal back in:
+    // θ never crosses host → literal again.
+    for _ in 0..4 {
+        sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    }
+    assert_eq!(
+        sess.theta_marshal_count(),
+        1,
+        "train chain re-marshalled θ despite output-literal reuse"
+    );
+    assert_eq!(sess.theta_cache_hit_count(), 4);
+    // inference right after training reuses the adopted literal too
+    let xi = vec![0.1f32; sess.m.batch_infer * sess.m.d];
+    sess.infer(&p, &xi).unwrap();
+    assert_eq!(sess.theta_marshal_count(), 1);
+}
+
+#[test]
+fn serving_cache_is_bit_identical_to_forced_invalidation() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+
+    let cached = Simulation::new(&rt, quick(33)).unwrap().run().unwrap();
+    let mut cfg = quick(33);
+    cfg.disable_serving_cache = true;
+    let forced = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+
+    assert_eq!(
+        cached.fingerprint(),
+        forced.fingerprint(),
+        "serving cache changed the scientific output:\n  cached: {}\n  forced: {}",
+        cached.summary(),
+        forced.summary()
+    );
+    // the cache actually engaged: every request is either a hit or a rebuild,
+    // and the forced path rebuilt on every single request.
+    assert_eq!(
+        cached.serving_hits + cached.serving_rebuilds,
+        cached.requests.len() as u64
+    );
+    assert_eq!(forced.serving_hits, 0);
+    assert_eq!(forced.serving_rebuilds, forced.requests.len() as u64);
+    assert!(
+        cached.serving_hits > 0,
+        "no request ever hit the serving cache (rebuilds {})",
+        cached.serving_rebuilds
+    );
+    // zero-copy proof: cache hits skip the full-θ copy *and* the marshal,
+    // so the cached run must marshal θ strictly fewer times.
+    assert!(
+        cached.theta_marshals < forced.theta_marshals,
+        "cached {} !< forced {}",
+        cached.theta_marshals,
+        forced.theta_marshals
+    );
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_bit_for_bit() {
+    require!();
+    let dir = testkit::artifacts_dir();
+    let seeds = [1u64, 2, 3, 4];
+    let cfg = quick(0);
+
+    let rt = Runtime::load(&dir).unwrap();
+    let (seq_mean, seq_all) = run_averaged(&rt, &cfg, &seeds).unwrap();
+
+    let sw = ParallelSweeper::from_dir(&dir, 4).unwrap();
+    assert_eq!(sw.jobs(), 4);
+    let (par_mean, par_all) = sw.run_averaged(&cfg, &seeds).unwrap();
+
+    assert_eq!(seq_all.len(), par_all.len());
+    for (i, (s, p)) in seq_all.iter().zip(&par_all).enumerate() {
+        assert_eq!(s.seed, p.seed, "result order not deterministic");
+        assert_eq!(
+            s.fingerprint(),
+            p.fingerprint(),
+            "seed {} diverged across workers",
+            seeds[i]
+        );
+    }
+    assert_eq!(seq_mean.fingerprint(), par_mean.fingerprint());
+}
+
+#[test]
+fn run_averaged_many_preserves_config_order() {
+    require!();
+    let dir = testkit::artifacts_dir();
+    let seeds = [5u64, 6];
+    let cfgs = vec![
+        quick(0).with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
+        quick(0).with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+
+    let one = ParallelSweeper::from_dir(&dir, 1).unwrap();
+    let four = ParallelSweeper::from_dir(&dir, 4).unwrap();
+    let a = one.run_averaged_many(&cfgs, &seeds).unwrap();
+    let b = four.run_averaged_many(&cfgs, &seeds).unwrap();
+    assert_eq!(a.len(), 2);
+    assert_eq!(b.len(), 2);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tune_policy, y.tune_policy);
+        assert_eq!(x.fingerprint(), y.fingerprint());
+    }
+    // the two configs are genuinely different experiments
+    assert_ne!(a[0].fingerprint(), a[1].fingerprint());
+}
