@@ -3,14 +3,17 @@
 #   make artifacts   AOT-lower the JAX/Pallas programs to HLO text + θ0 bins
 #   make build       release build of the rust coordinator
 #   make test        tier-1 gate: release build + full test suite
+#   make ci          stub-feature gate: build + tests + fmt + clippy -D warnings
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
+#   make bench-snapshot PR=N   archive BENCH_hotpath.json under bench_history/
 #   make repro       regenerate every paper table/figure, all cores
 
 ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
+PR ?= dev
 
-.PHONY: artifacts build test bench repro
+.PHONY: artifacts build test ci bench bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -21,9 +24,23 @@ build:
 test:
 	cd rust && cargo build --release && cargo test -q
 
+# CI gate on the stub backend (no artifacts, no xla toolchain needed):
+# everything must build, unit-test, stay rustfmt-clean and clippy-clean.
+ci:
+	cd rust && cargo build && cargo test -q
+	cd rust && cargo fmt --check
+	cd rust && cargo clippy --all-targets -- -D warnings
+
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \
 		cargo bench --bench hotpath
+
+# Archive the current bench run as this PR's snapshot so the perf
+# trajectory is tracked mechanically (see bench_history/README.md).
+bench-snapshot:
+	@test -f BENCH_hotpath.json || { echo "run \`make bench\` first"; exit 1; }
+	cp BENCH_hotpath.json bench_history/PR$(PR)_hotpath.json
+	@echo "archived bench_history/PR$(PR)_hotpath.json"
 
 repro:
 	cd rust && cargo run --release -- repro all --jobs $(JOBS)

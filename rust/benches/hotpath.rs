@@ -6,12 +6,18 @@
 //!     session θ-literal cache warm vs force-invalidated
 //!   * CKA probe                   (SimFreeze's periodic overhead)
 //!   * θ literal marshalling alone (host-side copy cost)
+//!   * serving-engine throughput   (cross-request batching vs one execute
+//!     per request — stub-safe: a host-side row-wise executor stands in
+//!     for the fixed-shape artifact, so this series runs without
+//!     artifacts and tracks the batcher's amortization win)
 //!   * coordinator-only components (NNLS fit, OOD observe, stream gen)
 //!
-//! Run: `make bench` / `cargo bench --bench hotpath` (artifacts required).
-//! Results are also written as JSON (mean/min/max per benchmark) to
-//! `$ETUNER_BENCH_OUT` (default `BENCH_hotpath.json`) so the perf
-//! trajectory is trackable across PRs.
+//! Run: `make bench` / `cargo bench --bench hotpath`.  The serving and
+//! coordinator series run everywhere; the artifact-dependent series
+//! self-skip until `make artifacts`.  Results are also written as JSON
+//! (mean/min/max per benchmark) to `$ETUNER_BENCH_OUT` (default
+//! `BENCH_hotpath.json`) so the perf trajectory is trackable across PRs
+//! (`make bench-snapshot` archives the per-PR copy under `bench_history/`).
 
 use std::collections::BTreeMap;
 
@@ -24,14 +30,10 @@ use etuner::json::Json;
 use etuner::model::ModelSession;
 use etuner::rng::Pcg32;
 use etuner::runtime::{Runtime, TensorF32};
+use etuner::serve::{batcher::span_rows, AdaptiveBatcher, QueuedRequest, RequestQueue};
 use etuner::testkit::{self, bench};
 
 fn main() -> anyhow::Result<()> {
-    if !testkit::artifacts_available() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::load(testkit::artifacts_dir())?;
     println!("{:<38} {:>9} {:>9} {:>9}", "benchmark", "mean_ms", "min_ms", "max_ms");
     let mut results: Vec<(String, (f64, f64, f64))> = Vec::new();
     let mut report = |name: &str, (mean, min, max): (f64, f64, f64)| {
@@ -40,90 +42,195 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut rng = Pcg32::new(42, 1);
-    for model in ["res50", "mbv2", "deit", "bert"] {
-        let sess = ModelSession::new(&rt, model)?;
-        let mut p = sess.theta0()?;
-        let d = sess.m.d;
-        let x: Vec<f32> =
-            (0..sess.m.batch_train * d).map(|_| rng.normal()).collect();
-        let y: Vec<i32> =
-            (0..sess.m.batch_train).map(|_| (rng.next_u32() % 4) as i32).collect();
-        let fs = FreezeState::none(sess.m.units);
+
+    // ---- serving engine: cross-request batching throughput (stub-safe) ----
+    // A fixed-shape execute computes all `CAPACITY` rows whether they hold
+    // one 8-row request or eight, so batched serving amortizes the
+    // full-batch cost; the unbatched series pays it once per request.
+    {
+        const D: usize = 128;
+        const CLASSES: usize = 50;
+        const CAPACITY: usize = 64;
+        const ROWS: usize = 8;
+        const N_REQ: usize = 256;
+        let w: Vec<f32> = (0..D * CLASSES).map(|_| rng.normal() * 0.1).collect();
+        let execute = |x: &[f32], out: &mut Vec<f32>| {
+            out.clear();
+            out.resize(CAPACITY * CLASSES, 0.0);
+            for r in 0..CAPACITY {
+                let row = &x[r * D..(r + 1) * D];
+                let dst = &mut out[r * CLASSES..(r + 1) * CLASSES];
+                for (i, &v) in row.iter().enumerate() {
+                    let wrow = &w[i * CLASSES..(i + 1) * CLASSES];
+                    for (o, &wv) in dst.iter_mut().zip(wrow) {
+                        *o += v * wv;
+                    }
+                }
+            }
+        };
+        let reqs: Vec<QueuedRequest> = (0..N_REQ)
+            .map(|i| QueuedRequest {
+                arrival_t: i as f64,
+                deadline_t: i as f64 + 0.25,
+                scenario: 1,
+                stale_batches: 0,
+                x: (0..ROWS * D).map(|_| rng.normal()).collect(),
+                y: vec![0; ROWS],
+                rows: ROWS,
+            })
+            .collect();
+        let mut logits: Vec<f32> = Vec::new();
+        let mut sink = 0usize;
+
+        // both series pay the same queue build + request clones so the
+        // delta is purely executes-per-request
+        let unbatched = AdaptiveBatcher::new(CAPACITY, 0.0, D);
         report(
-            &format!("{model}: train_step (k=0)"),
-            bench(3, 20, || {
-                sess.train_step(&mut p, &x, &y, &fs).unwrap();
+            &format!("serving: 1 req/exec ({N_REQ} reqs)"),
+            bench(2, 10, || {
+                let mut q = RequestQueue::new();
+                for r in &reqs {
+                    q.push(r.clone());
+                }
+                while let Some(r) = q.pop() {
+                    let p = unbatched.pack(std::slice::from_ref(&r));
+                    execute(&p.x, &mut logits);
+                    sink += span_rows(&logits, CLASSES, &p.spans[0]).len();
+                }
             }),
         );
-        // prefix-truncated variant: real backprop saving in the artifact
-        let mut fs_k = FreezeState::none(sess.m.units);
-        for u in 0..sess.m.units - 2 {
-            fs_k.frozen[u] = true;
+        let batched = AdaptiveBatcher::new(CAPACITY, 30.0, D);
+        report(
+            &format!("serving: batched 8 req/exec ({N_REQ} reqs)"),
+            bench(2, 10, || {
+                let mut q = RequestQueue::new();
+                for r in &reqs {
+                    q.push(r.clone());
+                }
+                while !q.is_empty() {
+                    let batch = batched.take_batch(&mut q);
+                    let p = batched.pack(&batch);
+                    execute(&p.x, &mut logits);
+                    for s in &p.spans {
+                        sink += span_rows(&logits, CLASSES, s).len();
+                    }
+                }
+            }),
+        );
+        // pack/scatter bookkeeping alone (no execute): the batcher's own
+        // overhead must stay negligible against one artifact execution.
+        report(
+            &format!("serving: pack+scatter only ({N_REQ} reqs)"),
+            bench(2, 10, || {
+                let mut q = RequestQueue::new();
+                for r in &reqs {
+                    q.push(r.clone());
+                }
+                while !q.is_empty() {
+                    let batch = batched.take_batch(&mut q);
+                    let p = batched.pack(&batch);
+                    for s in &p.spans {
+                        sink += span_rows(&p.x, D, s).len();
+                    }
+                }
+            }),
+        );
+        std::hint::black_box(sink);
+    }
+
+    // ---- artifact-dependent series (skip until `make artifacts`) ----
+    if testkit::artifacts_available() {
+        let rt = Runtime::load(testkit::artifacts_dir())?;
+        for model in ["res50", "mbv2", "deit", "bert"] {
+            let sess = ModelSession::new(&rt, model)?;
+            let mut p = sess.theta0()?;
+            let d = sess.m.d;
+            let x: Vec<f32> =
+                (0..sess.m.batch_train * d).map(|_| rng.normal()).collect();
+            let y: Vec<i32> =
+                (0..sess.m.batch_train).map(|_| (rng.next_u32() % 4) as i32).collect();
+            let fs = FreezeState::none(sess.m.units);
+            report(
+                &format!("{model}: train_step (k=0)"),
+                bench(3, 20, || {
+                    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+                }),
+            );
+            // prefix-truncated variant: real backprop saving in the artifact
+            let mut fs_k = FreezeState::none(sess.m.units);
+            for u in 0..sess.m.units - 2 {
+                fs_k.frozen[u] = true;
+            }
+            report(
+                &format!("{model}: train_step (k=max)"),
+                bench(3, 20, || {
+                    sess.train_step(&mut p, &x, &y, &fs_k).unwrap();
+                }),
+            );
+            let xi: Vec<f32> =
+                (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
+            // θ unchanged between calls: after the first marshal every infer
+            // reuses the session's cached θ literal (the serving hot path).
+            report(
+                &format!("{model}: infer warm θ-cache (b {})", sess.m.batch_infer),
+                bench(3, 20, || {
+                    sess.infer(&p, &xi).unwrap();
+                }),
+            );
+            // force-invalidated: bump the parameter generation each call so θ
+            // is re-marshalled every time (the seed's per-request cost).
+            report(
+                &format!("{model}: infer cold θ-cache (b {})", sess.m.batch_infer),
+                bench(3, 20, || {
+                    p.theta_mut();
+                    sess.infer(&p, &xi).unwrap();
+                }),
+            );
+            eprintln!(
+                "  [{model}] θ marshals {} / cache hits {}",
+                sess.theta_marshal_count(),
+                sess.theta_cache_hit_count()
+            );
         }
+
+        // SimFreeze probe: features + per-layer CKA
+        let sess = ModelSession::new(&rt, "res50")?;
+        let p = sess.theta0()?;
+        let probe: Vec<f32> = (0..sess.m.batch_probe * sess.m.d)
+            .map(|_| rng.normal())
+            .collect();
+        let feats = sess.features(&p, &probe)?;
         report(
-            &format!("{model}: train_step (k=max)"),
+            "res50: features probe",
             bench(3, 20, || {
-                sess.train_step(&mut p, &x, &y, &fs_k).unwrap();
+                sess.features(&p, &probe).unwrap();
             }),
         );
-        let xi: Vec<f32> =
-            (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
-        // θ unchanged between calls: after the first marshal every infer
-        // reuses the session's cached θ literal (the serving hot path).
         report(
-            &format!("{model}: infer warm θ-cache (b {})", sess.m.batch_infer),
+            "res50: cka one layer (pallas)",
             bench(3, 20, || {
-                sess.infer(&p, &xi).unwrap();
+                sess.cka_layer(&feats, &feats, 4).unwrap();
             }),
         );
-        // force-invalidated: bump the parameter generation each call so θ
-        // is re-marshalled every time (the seed's per-request cost).
+
+        // θ marshalling alone (no execute): host->literal->host
+        let theta = p.theta().to_vec();
         report(
-            &format!("{model}: infer cold θ-cache (b {})", sess.m.batch_infer),
-            bench(3, 20, || {
-                p.theta_mut();
-                sess.infer(&p, &xi).unwrap();
+            "theta literal roundtrip (res50)",
+            bench(3, 50, || {
+                let t = TensorF32::new(vec![theta.len()], theta.clone());
+                let lit = t.to_literal().unwrap();
+                let _ = TensorF32::from_literal(lit).unwrap();
             }),
         );
+    } else {
         eprintln!(
-            "  [{model}] θ marshals {} / cache hits {}",
-            sess.theta_marshal_count(),
-            sess.theta_cache_hit_count()
+            "artifacts not built; skipping artifact-dependent series \
+             (run `make artifacts`)"
         );
     }
 
-    // SimFreeze probe: features + per-layer CKA
-    let sess = ModelSession::new(&rt, "res50")?;
-    let p = sess.theta0()?;
-    let probe: Vec<f32> = (0..sess.m.batch_probe * sess.m.d)
-        .map(|_| rng.normal())
-        .collect();
-    let feats = sess.features(&p, &probe)?;
-    report(
-        "res50: features probe",
-        bench(3, 20, || {
-            sess.features(&p, &probe).unwrap();
-        }),
-    );
-    report(
-        "res50: cka one layer (pallas)",
-        bench(3, 20, || {
-            sess.cka_layer(&feats, &feats, 4).unwrap();
-        }),
-    );
-
-    // θ marshalling alone (no execute): host->literal->host
-    let theta = p.theta().to_vec();
-    report(
-        "theta literal roundtrip (res50)",
-        bench(3, 50, || {
-            let t = TensorF32::new(vec![theta.len()], theta.clone());
-            let lit = t.to_literal().unwrap();
-            let _ = TensorF32::from_literal(lit).unwrap();
-        }),
-    );
-
-    // coordinator-only components
+    // ---- coordinator-only components (stub-safe) ----
     let pts: Vec<(f64, f64)> =
         (1..40).map(|k| (k as f64, 0.8 - 0.5 / k as f64)).collect();
     report(

@@ -113,6 +113,19 @@ impl LazyTune {
         .max(1.0);
     }
 
+    /// Serving-engine integration: the scheduler deferred a round with
+    /// `depth` requests still waiting for the device.  Each *queued*
+    /// (arrived-but-unserved) request keeps applying the same per-arrival
+    /// decay — real backlog, not the stale-batch proxy, so a sustained
+    /// burst pulls the next round forward harder than scattered arrivals.
+    /// With batching disabled the queue is always empty and this is never
+    /// reached (seed behaviour preserved).
+    pub fn on_queue_depth(&mut self, depth: usize) {
+        for _ in 0..depth {
+            self.on_inference();
+        }
+    }
+
     /// Algorithm 1 lines 20–21: scenario change — back to immediate.
     pub fn on_scenario_change(&mut self) {
         self.batches_needed = 1.0;
@@ -181,6 +194,22 @@ mod tests {
             lt.on_inference();
         }
         assert_eq!(lt.batches_needed(), 1);
+    }
+
+    #[test]
+    fn queue_depth_pressure_equals_repeated_arrivals() {
+        let mut a = LazyTune::default();
+        let mut b = LazyTune::default();
+        a.batches_needed = 24.0;
+        b.batches_needed = 24.0;
+        a.on_queue_depth(5);
+        for _ in 0..5 {
+            b.on_inference();
+        }
+        assert!((a.batches_needed - b.batches_needed).abs() < 1e-12);
+        let before = a.batches_needed;
+        a.on_queue_depth(0);
+        assert_eq!(a.batches_needed, before, "empty queue applies no pressure");
     }
 
     #[test]

@@ -78,6 +78,14 @@ impl TunePolicy {
         }
     }
 
+    /// Serving backlog observed when the scheduler deferred a round
+    /// (request pressure from the real queue depth).
+    pub fn on_queue_depth(&mut self, depth: usize) {
+        if let TunePolicy::Lazy(lt) = self {
+            lt.on_queue_depth(depth);
+        }
+    }
+
     pub fn on_scenario_change(&mut self) {
         if let TunePolicy::Lazy(lt) = self {
             lt.on_scenario_change();

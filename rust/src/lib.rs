@@ -40,6 +40,7 @@ pub mod nnls;
 pub mod repro;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testkit;
 
@@ -51,5 +52,6 @@ pub mod prelude {
     pub use crate::data::benchmarks::Benchmark;
     pub use crate::metrics::Report;
     pub use crate::runtime::Runtime;
+    pub use crate::serve::ServeConfig;
     pub use crate::sim::{ParallelSweeper, RunConfig, Simulation};
 }

@@ -41,6 +41,11 @@ fn main() -> Result<()> {
                  run   --model M --benchmark B [--tune P] [--freeze F]\n\
                        [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
                        [--quant] [--labeled FRAC] [--cka-th TH]\n\
+                       [--batch-window S] [--slo-ms MS] [--no-batching]\n\
+                       --batch-window S coalesces requests for up to S virtual\n\
+                       seconds per padded execute (0 = off); --slo-ms sets the\n\
+                       latency SLO; --no-batching forces the direct per-request\n\
+                       path (bit-identical reports to --batch-window 0)\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
                        --jobs N runs N seed-sweep workers (default: all cores)"
             );
@@ -117,6 +122,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     cfg.quant = flag(args, "--quant");
     cfg.oracle_change_detection = flag(args, "--oracle-changes");
+    if let Some(w) = opt(args, "--batch-window") {
+        cfg.serve.batch_window_s = w.parse().context("bad --batch-window")?;
+    }
+    if let Some(s) = opt(args, "--slo-ms") {
+        cfg.serve.slo_ms = s.parse().context("bad --slo-ms")?;
+    }
+    cfg.serve_direct = flag(args, "--no-batching");
     if let Some(d) = opt(args, "--decay") {
         use etuner::coordinator::lazytune::DecayKind;
         cfg.decay = match d {
@@ -139,6 +151,20 @@ fn cmd_run(args: &[String]) -> Result<()> {
         report.energy.total_wh(),
         report.scenario_changes_detected,
         report.wall_exec_s,
+    );
+    println!(
+        "  serving: p50 {:.1}ms / p95 {:.1}ms / p99 {:.1}ms; \
+         {} of {} requests over the {:.0}ms SLO; \
+         {} executes ({:.2} req/exec); {} rounds deferred",
+        report.latency_p50_ms,
+        report.latency_p95_ms,
+        report.latency_p99_ms,
+        report.slo_violations,
+        report.requests.len(),
+        report.slo_ms,
+        report.serve_executes,
+        report.avg_batch_requests,
+        report.rounds_deferred,
     );
     Ok(())
 }

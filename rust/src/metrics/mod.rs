@@ -13,6 +13,14 @@ pub struct RequestRecord {
     pub accuracy: f32,
     /// model staleness: batches buffered but not yet trained on when served.
     pub stale_batches: usize,
+    /// end-to-end latency (queueing delay + batched service time), virtual
+    /// seconds.  Serving-engine accounting: excluded from
+    /// [`Report::fingerprint`] like the perf counters.
+    pub latency_s: f64,
+    /// requests that shared this request's padded execute (1 = unbatched).
+    pub batch_requests: usize,
+    /// requests still queued when this one was served.
+    pub queue_depth: usize,
 }
 
 /// One fine-tuning round.
@@ -62,6 +70,28 @@ pub struct Report {
     pub serving_rebuilds: u64,
     /// requests served straight from the cached serving θ.
     pub serving_hits: u64,
+    /// serving-engine accounting (like the zero-copy counters above, this
+    /// block is excluded from [`Report::fingerprint`]: the engine is
+    /// plumbing around the scientific output, and with `batch_window_s ==
+    /// 0` the scientific fields must stay bit-identical to the seed):
+    /// latency percentiles over all served requests, milliseconds.
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_mean_ms: f64,
+    pub latency_max_ms: f64,
+    /// the SLO the run was accounted against, milliseconds.
+    pub slo_ms: f64,
+    /// requests whose latency exceeded the SLO.
+    pub slo_violations: u64,
+    /// padded artifact executions performed by the serving engine.
+    pub serve_executes: u64,
+    /// mean requests coalesced per execute (1.0 when batching never engaged).
+    pub avg_batch_requests: f64,
+    /// deepest the request queue ever got.
+    pub peak_queue_depth: u64,
+    /// fine-tuning rounds the scheduler deferred under serving backlog.
+    pub rounds_deferred: u64,
 }
 
 impl Report {
@@ -93,9 +123,11 @@ impl Report {
     }
 
     /// FNV-1a digest over every *scientific* field at full bit precision.
-    /// Excludes wall-clock time and the zero-copy instrumentation counters,
-    /// which legitimately differ between runs that must otherwise be
-    /// bit-identical (cache on/off, 1 vs N sweep workers).
+    /// Excludes wall-clock time, the zero-copy instrumentation counters,
+    /// and the serving-engine accounting (latency/batch/SLO fields), which
+    /// legitimately differ between runs that must otherwise be
+    /// bit-identical (cache on/off, 1 vs N sweep workers, engine vs
+    /// direct serving with `batch_window_s == 0`).
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.str(&self.model);
@@ -209,6 +241,22 @@ pub fn average(reports: &[Report]) -> Report {
         reports.iter().map(|r| r.memory_begin_bytes).sum::<f64>() / n;
     out.memory_end_bytes =
         reports.iter().map(|r| r.memory_end_bytes).sum::<f64>() / n;
+    out.latency_p50_ms = reports.iter().map(|r| r.latency_p50_ms).sum::<f64>() / n;
+    out.latency_p95_ms = reports.iter().map(|r| r.latency_p95_ms).sum::<f64>() / n;
+    out.latency_p99_ms = reports.iter().map(|r| r.latency_p99_ms).sum::<f64>() / n;
+    out.latency_mean_ms =
+        reports.iter().map(|r| r.latency_mean_ms).sum::<f64>() / n;
+    out.latency_max_ms = reports.iter().map(|r| r.latency_max_ms).sum::<f64>() / n;
+    out.slo_violations =
+        (reports.iter().map(|r| r.slo_violations).sum::<u64>() as f64 / n) as u64;
+    out.serve_executes =
+        (reports.iter().map(|r| r.serve_executes).sum::<u64>() as f64 / n) as u64;
+    out.avg_batch_requests =
+        reports.iter().map(|r| r.avg_batch_requests).sum::<f64>() / n;
+    out.rounds_deferred =
+        (reports.iter().map(|r| r.rounds_deferred).sum::<u64>() as f64 / n) as u64;
+    out.peak_queue_depth =
+        (reports.iter().map(|r| r.peak_queue_depth).sum::<u64>() as f64 / n) as u64;
     out.seed = u64::MAX; // marker: averaged
     out
 }
@@ -217,16 +265,23 @@ pub fn average(reports: &[Report]) -> Report {
 mod tests {
     use super::*;
 
+    fn record(t: f64, accuracy: f32, stale_batches: usize) -> RequestRecord {
+        RequestRecord {
+            t,
+            scenario: 1,
+            accuracy,
+            stale_batches,
+            latency_s: 0.0,
+            batch_requests: 1,
+            queue_depth: 0,
+        }
+    }
+
     #[test]
     fn finish_computes_mean_accuracy() {
         let mut r = Report::default();
         for a in [0.5, 0.7, 0.9] {
-            r.requests.push(RequestRecord {
-                t: 0.0,
-                scenario: 1,
-                accuracy: a,
-                stale_batches: 0,
-            });
+            r.requests.push(record(0.0, a, 0));
         }
         r.finish();
         assert!((r.avg_inference_accuracy - 0.7).abs() < 1e-6);
@@ -252,18 +307,25 @@ mod tests {
     fn fingerprint_ignores_wall_clock_and_perf_counters() {
         let mut a = Report::default();
         a.avg_inference_accuracy = 0.5;
-        a.requests.push(RequestRecord {
-            t: 1.0,
-            scenario: 0,
-            accuracy: 0.5,
-            stale_batches: 2,
-        });
+        a.requests.push(record(1.0, 0.5, 2));
         let mut b = a.clone();
         b.wall_exec_s = 99.0;
         b.theta_marshals = 7;
         b.theta_cache_hits = 3;
         b.serving_rebuilds = 1;
         b.serving_hits = 40;
+        // serving-engine accounting is plumbing, not scientific output
+        b.latency_p50_ms = 12.0;
+        b.latency_p99_ms = 80.0;
+        b.slo_ms = 250.0;
+        b.slo_violations = 5;
+        b.serve_executes = 33;
+        b.avg_batch_requests = 3.2;
+        b.peak_queue_depth = 9;
+        b.rounds_deferred = 2;
+        b.requests[0].latency_s = 0.125;
+        b.requests[0].batch_requests = 4;
+        b.requests[0].queue_depth = 3;
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;

@@ -2,6 +2,19 @@
 //! table/figure.  Workloads are scaled to this testbed (see EXPERIMENTS.md
 //! §Setup); the *shape* of each result — who wins, by what factor, where
 //! crossovers sit — is the reproduction target.
+//!
+//! # Shared work queue
+//!
+//! Every experiment is a [`Plan`]: a deterministic list of cells (a cell is
+//! one seed-averaged config or one single run) plus a render step that
+//! turns the resulting reports into tables.  `repro all` flattens the
+//! cells of *every* experiment into one job list for a single
+//! [`ParallelSweeper::run_many`] call, so the worker pool steals work
+//! across experiment boundaries instead of draining one experiment at a
+//! time — the figure grids no longer serialize behind the small
+//! single-run experiments.  Because `run_many` preserves input order and
+//! every simulation is seed-deterministic, the emitted tables are
+//! identical to the per-experiment runs.
 
 use std::path::Path;
 
@@ -10,7 +23,7 @@ use anyhow::Result;
 use crate::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use crate::data::arrival::ArrivalKind;
 use crate::data::benchmarks::Benchmark;
-use crate::metrics::Report;
+use crate::metrics::{average, Report};
 use crate::sim::{ParallelSweeper, RunConfig};
 
 use super::table::{f1, f2, pct, Table};
@@ -39,6 +52,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("abl-decay", "ablation: log vs exponential vs additive decay (§IV-A2)"),
         ("abl-interval", "ablation: SimFreeze probe interval"),
         ("abl-oracle", "ablation: energy-score detector vs oracle boundaries"),
+        ("serve", "serving engine: latency percentiles & SLO vs batch window"),
     ]
 }
 
@@ -61,37 +75,103 @@ impl Default for ReproOpts {
     }
 }
 
+/// One schedulable unit of an experiment.
+enum Cell {
+    /// Mean over `opts.seeds` (the paper averages its runs).
+    Avg(RunConfig),
+    /// Exactly one run, seed already fixed (trace/curve experiments).
+    One(RunConfig),
+}
+
+/// A planned experiment: deterministic cells + a render step consuming the
+/// cell-level reports in the same order.
+struct Plan {
+    cells: Vec<Cell>,
+    render: Box<dyn FnOnce(Vec<Report>) -> Result<()>>,
+}
+
 pub fn run_experiment(sw: &ParallelSweeper, id: &str, opts: &ReproOpts) -> Result<()> {
-    match id {
-        "fig3" => fig3(sw, opts),
-        "fig4" => fig4(sw, opts),
-        "fig5" => fig5(sw, opts),
-        "fig8" | "fig9" | "tab2" => fig8_9_tab2(sw, opts),
-        "tab3" | "fig10" => tab3_fig10(sw, opts),
-        "fig11" => fig11(sw, opts),
-        "fig12" => fig12(sw, opts),
-        "tab4" => tab4(sw, opts),
-        "tab5" => tab5(sw, opts),
-        "fig13" => fig13(sw, opts),
-        "fig14" => fig14(sw, opts),
-        "fig15" => fig15(sw, opts),
-        "tab6" => tab6(sw, opts),
-        "tab7" => tab7(sw, opts),
-        "tab8" => tab8(sw, opts),
-        "abl-decay" => abl_decay(sw, opts),
-        "abl-interval" => abl_interval(sw, opts),
-        "abl-oracle" => abl_oracle(sw, opts),
-        "all" => {
-            for (id, _) in list() {
-                if id == "fig9" || id == "tab2" || id == "fig10" {
-                    continue; // produced jointly with fig8/tab3
-                }
-                run_experiment(sw, id, opts)?;
+    let plans = if id == "all" {
+        let mut plans = Vec::new();
+        for (eid, _) in list() {
+            if eid == "fig9" || eid == "tab2" || eid == "fig10" {
+                continue; // produced jointly with fig8/tab3
             }
-            Ok(())
+            plans.push(plan(eid, opts)?);
         }
+        plans
+    } else {
+        vec![plan(id, opts)?]
+    };
+    run_plans(sw, plans, opts)
+}
+
+fn plan(id: &str, opts: &ReproOpts) -> Result<Plan> {
+    Ok(match id {
+        "fig3" => fig3(opts),
+        "fig4" => fig4(opts),
+        "fig5" => fig5(opts),
+        "fig8" | "fig9" | "tab2" => fig8_9_tab2(opts),
+        "tab3" | "fig10" => tab3_fig10(opts),
+        "fig11" => fig11(opts),
+        "fig12" => fig12(opts),
+        "tab4" => tab4(opts),
+        "tab5" => tab5(opts),
+        "fig13" => fig13(opts),
+        "fig14" => fig14(opts),
+        "fig15" => fig15(opts),
+        "tab6" => tab6(opts),
+        "tab7" => tab7(opts),
+        "tab8" => tab8(opts),
+        "abl-decay" => abl_decay(opts),
+        "abl-interval" => abl_interval(opts),
+        "abl-oracle" => abl_oracle(opts),
+        "serve" => serve_table(opts),
         other => anyhow::bail!("unknown experiment {other:?} (try `list`)"),
+    })
+}
+
+/// Expand every plan's cells into one flat job list, run it through the
+/// shared sweeper queue, re-chunk the reports per cell, and render.
+fn run_plans(sw: &ParallelSweeper, plans: Vec<Plan>, opts: &ReproOpts) -> Result<()> {
+    let mut jobs: Vec<RunConfig> = Vec::new();
+    for p in &plans {
+        for cell in &p.cells {
+            match cell {
+                Cell::Avg(c) => {
+                    for &s in &opts.seeds {
+                        jobs.push(c.clone().with_seed(s));
+                    }
+                }
+                Cell::One(c) => jobs.push(c.clone()),
+            }
+        }
     }
+    anyhow::ensure!(!opts.seeds.is_empty(), "need at least one seed");
+    let mut reports = sw.run_many(&jobs)?.into_iter();
+    for p in plans {
+        let mut cell_reports = Vec::with_capacity(p.cells.len());
+        for cell in &p.cells {
+            match cell {
+                Cell::Avg(_) => {
+                    let chunk: Vec<Report> =
+                        reports.by_ref().take(opts.seeds.len()).collect();
+                    anyhow::ensure!(
+                        chunk.len() == opts.seeds.len(),
+                        "sweep under-produced reports"
+                    );
+                    cell_reports.push(average(&chunk));
+                }
+                Cell::One(_) => cell_reports.push(
+                    reports.next().ok_or_else(|| {
+                        anyhow::anyhow!("sweep under-produced reports")
+                    })?,
+                ),
+            }
+        }
+        (p.render)(cell_reports)?;
+    }
+    Ok(())
 }
 
 fn cfg(model: &str, b: Benchmark, opts: &ReproOpts) -> RunConfig {
@@ -110,293 +190,365 @@ fn methods() -> Vec<(&'static str, TunePolicyKind, FreezePolicyKind)> {
     ]
 }
 
-fn run_cfg(sw: &ParallelSweeper, c: &RunConfig, opts: &ReproOpts) -> Result<Report> {
-    Ok(sw.run_averaged(c, &opts.seeds)?.0)
-}
-
 // ---------------------------------------------------------------------------
 // Fig. 3 — time/energy breakdown of immediate fine-tuning
 // ---------------------------------------------------------------------------
 
-fn fig3(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 3: breakdown of immediate fine-tuning (NC)",
-        &["model", "init%t", "load/save%t", "compute%t", "init%e",
-          "load/save%e", "compute%e", "time_s", "energy_Wh"],
-    );
-    for model in ["res50", "mbv2", "deit"] {
-        let c = cfg(model, Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
-        let r = run_cfg(sw, &c, opts)?;
-        let e = &r.energy;
-        let ts = e.total_s();
-        let tj = e.total_j();
-        t.row(vec![
-            model.into(),
-            pct(e.init_s / ts),
-            pct(e.loadsave_s / ts),
-            pct(e.compute_s / ts),
-            pct(e.init_j / tj),
-            pct(e.loadsave_j / tj),
-            pct(e.compute_j / tj),
-            f1(ts),
-            f2(e.total_wh()),
-        ]);
+fn fig3(opts: &ReproOpts) -> Plan {
+    let models = ["res50", "mbv2", "deit"];
+    let cells = models
+        .iter()
+        .map(|&m| {
+            Cell::Avg(
+                cfg(m, Benchmark::Nc, opts)
+                    .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
+            )
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 3: breakdown of immediate fine-tuning (NC)",
+                &["model", "init%t", "load/save%t", "compute%t", "init%e",
+                  "load/save%e", "compute%e", "time_s", "energy_Wh"],
+            );
+            for (model, r) in models.iter().zip(&reports) {
+                let e = &r.energy;
+                let ts = e.total_s();
+                let tj = e.total_j();
+                t.row(vec![
+                    (*model).into(),
+                    pct(e.init_s / ts),
+                    pct(e.loadsave_s / ts),
+                    pct(e.compute_s / ts),
+                    pct(e.init_j / tj),
+                    pct(e.loadsave_j / tj),
+                    pct(e.compute_j / tj),
+                    f1(ts),
+                    f2(e.total_wh()),
+                ]);
+            }
+            t.emit(&dir, "fig3")
+        }),
     }
-    t.emit(&opts.results_dir, "fig3")
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 4 — accuracy saturation across fine-tuning rounds
 // ---------------------------------------------------------------------------
 
-fn fig4(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 4: validation accuracy over rounds (scenarios 2-3, Immed.)",
-        &["model", "round", "scenario", "val_acc%"],
-    );
-    for model in ["res50", "mbv2"] {
-        let c = cfg(model, Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None)
-            .with_seed(opts.seeds[0]);
-        let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
-        for (i, rr) in r
-            .round_log
-            .iter()
-            .filter(|rr| rr.scenario <= 2)
-            .enumerate()
-        {
-            t.row(vec![
-                model.into(),
-                format!("{i}"),
-                format!("{}", rr.scenario),
-                pct(rr.val_acc),
-            ]);
-        }
+fn fig4(opts: &ReproOpts) -> Plan {
+    let models = ["res50", "mbv2"];
+    let seed = opts.seeds[0];
+    let cells = models
+        .iter()
+        .map(|&m| {
+            Cell::One(
+                cfg(m, Benchmark::Nc, opts)
+                    .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None)
+                    .with_seed(seed),
+            )
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 4: validation accuracy over rounds (scenarios 2-3, Immed.)",
+                &["model", "round", "scenario", "val_acc%"],
+            );
+            for (model, r) in models.iter().zip(&reports) {
+                for (i, rr) in r
+                    .round_log
+                    .iter()
+                    .filter(|rr| rr.scenario <= 2)
+                    .enumerate()
+                {
+                    t.row(vec![
+                        (*model).into(),
+                        format!("{i}"),
+                        format!("{}", rr.scenario),
+                        pct(rr.val_acc),
+                    ]);
+                }
+            }
+            t.emit(&dir, "fig4")
+        }),
     }
-    t.emit(&opts.results_dir, "fig4")
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 5 — CKA variation curves
 // ---------------------------------------------------------------------------
 
-fn fig5(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
+fn fig5(opts: &ReproOpts) -> Plan {
     let mut c = cfg("res50", Benchmark::Nc, opts)
         .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze)
         .with_seed(opts.seeds[0]);
     c.keep_cka_trace = true;
     c.cka_th = 0.0; // observe without freezing so full curves are traced
-    let report = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
-    let mut t = Table::new(
-        "Fig 5: CKA of selected layers over fine-tuning (res50, NC)",
-        &["iteration", "layer", "cka"],
-    );
-    let picks = [0usize, 2, 4, 6, 8];
-    for s in &report.cka_trace {
-        if picks.contains(&s.layer) {
-            t.row(vec![
-                format!("{}", s.iteration),
-                format!("{}", s.layer),
-                format!("{:.4}", s.cka),
-            ]);
-        }
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells: vec![Cell::One(c)],
+        render: Box::new(move |reports| {
+            let report = &reports[0];
+            let mut t = Table::new(
+                "Fig 5: CKA of selected layers over fine-tuning (res50, NC)",
+                &["iteration", "layer", "cka"],
+            );
+            let picks = [0usize, 2, 4, 6, 8];
+            for s in &report.cka_trace {
+                if picks.contains(&s.layer) {
+                    t.row(vec![
+                        format!("{}", s.iteration),
+                        format!("{}", s.layer),
+                        format!("{:.4}", s.cka),
+                    ]);
+                }
+            }
+            t.emit(&dir, "fig5")
+        }),
     }
-    t.emit(&opts.results_dir, "fig5")
 }
 
 // ---------------------------------------------------------------------------
 // Figs. 8/9 + Table II — the main grid
 // ---------------------------------------------------------------------------
 
-fn fig8_9_tab2(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
+fn fig8_9_tab2(opts: &ReproOpts) -> Plan {
     let benches = [
         Benchmark::Nc,
         Benchmark::Nic79,
         Benchmark::Nic391,
         Benchmark::SCifar10,
     ];
-    let mut t8 = Table::new(
-        "Fig 8: overall fine-tuning time, normalized to Immed.",
-        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
-    );
-    let mut t9 = Table::new(
-        "Fig 9: overall fine-tuning energy, normalized to Immed.",
-        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
-    );
-    let mut t2 = Table::new(
-        "Table II: average inference accuracy (%)",
-        &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
-    );
-    // whole grid as one flat job list: every (model, benchmark, method,
-    // seed) run lands on the sweeper's work queue at once, so the worker
-    // pool stays busy across cell boundaries.
     let models = ["res50", "mbv2", "deit"];
-    let mut cfgs = Vec::new();
+    let mut cells = Vec::new();
     for model in models {
         for b in benches {
             for (_, tune, freeze) in methods() {
-                cfgs.push(cfg(model, b, opts).with_policies(tune, freeze));
+                cells.push(Cell::Avg(cfg(model, b, opts).with_policies(tune, freeze)));
             }
         }
     }
-    let reports = sw.run_averaged_many(&cfgs, &opts.seeds)?;
-    let mut cells = reports.iter();
-    for model in models {
-        for b in benches {
-            let mut times = vec![];
-            let mut energies = vec![];
-            let mut accs = vec![];
-            for _ in methods() {
-                let r = cells.next().expect("grid cell");
-                times.push(r.energy.total_s());
-                energies.push(r.energy.total_j());
-                accs.push(r.avg_inference_accuracy);
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t8 = Table::new(
+                "Fig 8: overall fine-tuning time, normalized to Immed.",
+                &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+            );
+            let mut t9 = Table::new(
+                "Fig 9: overall fine-tuning energy, normalized to Immed.",
+                &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+            );
+            let mut t2 = Table::new(
+                "Table II: average inference accuracy (%)",
+                &["model", "benchmark", "Immed.", "LazyTune", "SimFreeze", "ETuner"],
+            );
+            let mut cells = reports.iter();
+            for model in models {
+                for b in benches {
+                    let mut times = vec![];
+                    let mut energies = vec![];
+                    let mut accs = vec![];
+                    for _ in methods() {
+                        let r = cells.next().expect("grid cell");
+                        times.push(r.energy.total_s());
+                        energies.push(r.energy.total_j());
+                        accs.push(r.avg_inference_accuracy);
+                    }
+                    let norm = |v: &[f64]| -> Vec<String> {
+                        v.iter().map(|x| f2(x / v[0])).collect()
+                    };
+                    let mut row8 = vec![model.to_string(), b.name().to_string()];
+                    row8.extend(norm(&times));
+                    t8.row(row8);
+                    let mut row9 = vec![model.to_string(), b.name().to_string()];
+                    row9.extend(norm(&energies));
+                    t9.row(row9);
+                    let mut row2 = vec![model.to_string(), b.name().to_string()];
+                    row2.extend(accs.iter().map(|a| pct(*a)));
+                    t2.row(row2);
+                }
             }
-            let norm = |v: &[f64]| -> Vec<String> {
-                v.iter().map(|x| f2(x / v[0])).collect()
-            };
-            let mut row8 = vec![model.to_string(), b.name().to_string()];
-            row8.extend(norm(&times));
-            t8.row(row8);
-            let mut row9 = vec![model.to_string(), b.name().to_string()];
-            row9.extend(norm(&energies));
-            t9.row(row9);
-            let mut row2 = vec![model.to_string(), b.name().to_string()];
-            row2.extend(accs.iter().map(|a| pct(*a)));
-            t2.row(row2);
-        }
+            t8.emit(&dir, "fig8")?;
+            t9.emit(&dir, "fig9")?;
+            t2.emit(&dir, "tab2")
+        }),
     }
-    t8.emit(&opts.results_dir, "fig8")?;
-    t9.emit(&opts.results_dir, "fig9")?;
-    t2.emit(&opts.results_dir, "tab2")
 }
 
 // ---------------------------------------------------------------------------
 // Table III + Fig. 10 — computation & memory
 // ---------------------------------------------------------------------------
 
-fn tab3_fig10(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t3 = Table::new(
-        "Table III: computation of the whole NC process (paper-scale TFLOPs)",
-        &["model", "Immed.", "ETuner", "reduction%"],
-    );
-    let mut t10 = Table::new(
-        "Fig 10: training memory begin vs end (paper-scale MB)",
-        &["model", "method", "begin_MB", "end_MB", "reduction%"],
-    );
-    for model in ["res50", "mbv2"] {
-        let ci = cfg(model, Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
-        let ri = run_cfg(sw, &ci, opts)?;
-        let ce = cfg(model, Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        let re = run_cfg(sw, &ce, opts)?;
-        t3.row(vec![
-            model.into(),
-            f1(ri.train_tflops),
-            f1(re.train_tflops + re.cka_tflops),
-            pct(1.0 - (re.train_tflops + re.cka_tflops) / ri.train_tflops),
-        ]);
-        for (name, r) in [("Immed.", &ri), ("ETuner", &re)] {
-            t10.row(vec![
-                model.into(),
-                name.into(),
-                f1(r.memory_begin_bytes / 1e6),
-                f1(r.memory_end_bytes / 1e6),
-                pct(1.0 - r.memory_end_bytes / r.memory_begin_bytes.max(1.0)),
-            ]);
-        }
+fn tab3_fig10(opts: &ReproOpts) -> Plan {
+    let models = ["res50", "mbv2"];
+    let mut cells = Vec::new();
+    for model in models {
+        cells.push(Cell::Avg(
+            cfg(model, Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ));
+        cells.push(Cell::Avg(
+            cfg(model, Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+        ));
     }
-    t3.emit(&opts.results_dir, "tab3")?;
-    t10.emit(&opts.results_dir, "fig10")
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t3 = Table::new(
+                "Table III: computation of the whole NC process (paper-scale TFLOPs)",
+                &["model", "Immed.", "ETuner", "reduction%"],
+            );
+            let mut t10 = Table::new(
+                "Fig 10: training memory begin vs end (paper-scale MB)",
+                &["model", "method", "begin_MB", "end_MB", "reduction%"],
+            );
+            let mut it = reports.iter();
+            for model in models {
+                let ri = it.next().expect("grid cell");
+                let re = it.next().expect("grid cell");
+                t3.row(vec![
+                    model.into(),
+                    f1(ri.train_tflops),
+                    f1(re.train_tflops + re.cka_tflops),
+                    pct(1.0 - (re.train_tflops + re.cka_tflops) / ri.train_tflops),
+                ]);
+                for (name, r) in [("Immed.", ri), ("ETuner", re)] {
+                    t10.row(vec![
+                        model.into(),
+                        name.into(),
+                        f1(r.memory_begin_bytes / 1e6),
+                        f1(r.memory_end_bytes / 1e6),
+                        pct(1.0 - r.memory_end_bytes / r.memory_begin_bytes.max(1.0)),
+                    ]);
+                }
+            }
+            t3.emit(&dir, "tab3")?;
+            t10.emit(&dir, "fig10")
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 11 — convergence speed
 // ---------------------------------------------------------------------------
 
-fn fig11(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 11: convergence within scenario 2 (res50, NC)",
-        &["method", "round_in_scenario", "val_acc%"],
-    );
-    for (name, tune, freeze) in [
+fn fig11(opts: &ReproOpts) -> Plan {
+    let entries = [
         ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
         ("ETuner", TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
-    ] {
-        let c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(tune, freeze)
-            .with_seed(opts.seeds[0]);
-        let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
-        for (i, rr) in r
-            .round_log
-            .iter()
-            .filter(|rr| rr.scenario == 1)
-            .enumerate()
-        {
-            t.row(vec![name.into(), format!("{i}"), pct(rr.val_acc)]);
-        }
+    ];
+    let seed = opts.seeds[0];
+    let cells = entries
+        .iter()
+        .map(|&(_, tune, freeze)| {
+            Cell::One(
+                cfg("res50", Benchmark::Nc, opts)
+                    .with_policies(tune, freeze)
+                    .with_seed(seed),
+            )
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 11: convergence within scenario 2 (res50, NC)",
+                &["method", "round_in_scenario", "val_acc%"],
+            );
+            for ((name, _, _), r) in entries.iter().zip(&reports) {
+                for (i, rr) in r
+                    .round_log
+                    .iter()
+                    .filter(|rr| rr.scenario == 1)
+                    .enumerate()
+                {
+                    t.row(vec![(*name).into(), format!("{i}"), pct(rr.val_acc)]);
+                }
+            }
+            t.emit(&dir, "fig11")
+        }),
     }
-    t.emit(&opts.results_dir, "fig11")
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 12 — LazyTune case study
 // ---------------------------------------------------------------------------
 
-fn fig12(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
+fn fig12(opts: &ReproOpts) -> Plan {
     let c = cfg("res50", Benchmark::Nc, opts)
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None)
         .with_seed(opts.seeds[0]);
-    let r = crate::sim::Simulation::new(sw.runtime(), c)?.run()?;
-    let mut t = Table::new(
-        "Fig 12: batches_needed trace (res50, NC, scenarios 2-3)",
-        &["t", "scenario", "batches_needed", "batches_merged", "val_acc%"],
-    );
-    for rr in r.round_log.iter().filter(|rr| rr.scenario <= 2) {
-        t.row(vec![
-            f1(rr.t),
-            format!("{}", rr.scenario),
-            format!("{}", rr.batches_needed),
-            format!("{}", rr.batches),
-            pct(rr.val_acc),
-        ]);
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells: vec![Cell::One(c)],
+        render: Box::new(move |reports| {
+            let r = &reports[0];
+            let mut t = Table::new(
+                "Fig 12: batches_needed trace (res50, NC, scenarios 2-3)",
+                &["t", "scenario", "batches_needed", "batches_merged", "val_acc%"],
+            );
+            for rr in r.round_log.iter().filter(|rr| rr.scenario <= 2) {
+                t.row(vec![
+                    f1(rr.t),
+                    format!("{}", rr.scenario),
+                    format!("{}", rr.batches_needed),
+                    format!("{}", rr.batches),
+                    pct(rr.val_acc),
+                ]);
+            }
+            t.emit(&dir, "fig12")
+        }),
     }
-    t.emit(&opts.results_dir, "fig12")
 }
 
 // ---------------------------------------------------------------------------
 // Table IV — NLP workload
 // ---------------------------------------------------------------------------
 
-fn tab4(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Table IV: NLP workload (bert, 20News)",
-        &["method", "accuracy%", "time_min", "energy_Wh"],
-    );
-    for (name, tune, freeze) in methods() {
-        let c = cfg("bert", Benchmark::News20, opts).with_policies(tune, freeze);
-        let r = run_cfg(sw, &c, opts)?;
-        t.row(vec![
-            name.into(),
-            pct(r.avg_inference_accuracy),
-            f1(r.energy.total_s() / 60.0),
-            f2(r.energy.total_wh()),
-        ]);
+fn tab4(opts: &ReproOpts) -> Plan {
+    let cells = methods()
+        .into_iter()
+        .map(|(_, tune, freeze)| {
+            Cell::Avg(cfg("bert", Benchmark::News20, opts).with_policies(tune, freeze))
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Table IV: NLP workload (bert, 20News)",
+                &["method", "accuracy%", "time_min", "energy_Wh"],
+            );
+            for ((name, _, _), r) in methods().iter().zip(&reports) {
+                t.row(vec![
+                    (*name).into(),
+                    pct(r.avg_inference_accuracy),
+                    f1(r.energy.total_s() / 60.0),
+                    f2(r.energy.total_wh()),
+                ]);
+            }
+            t.emit(&dir, "tab4")
+        }),
     }
-    t.emit(&opts.results_dir, "tab4")
 }
 
 // ---------------------------------------------------------------------------
 // Table V — SOTA comparison (all with LazyTune integrated)
 // ---------------------------------------------------------------------------
 
-fn tab5(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Table V: SOTA efficient-learning comparison (LazyTune integrated)",
-        &["model", "benchmark", "method", "accuracy%", "energy_Wh"],
-    );
+fn tab5(opts: &ReproOpts) -> Plan {
     let entries = [
         ("LazyTune (base)", FreezePolicyKind::None),
         ("Egeria", FreezePolicyKind::Egeria),
@@ -405,285 +557,460 @@ fn tab5(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
         ("Ekya", FreezePolicyKind::Ekya),
         ("ETuner", FreezePolicyKind::SimFreeze),
     ];
-    // one flat parallel batch over the whole comparison grid
     let models = ["res50", "mbv2", "deit"];
     let benches = [Benchmark::Nc, Benchmark::Nic391];
-    let mut cfgs = Vec::new();
+    let mut cells = Vec::new();
     for model in models {
         for b in benches {
             for (_, freeze) in entries {
-                cfgs.push(
-                    cfg(model, b, opts)
-                        .with_policies(TunePolicyKind::LazyTune, freeze),
-                );
+                cells.push(Cell::Avg(
+                    cfg(model, b, opts).with_policies(TunePolicyKind::LazyTune, freeze),
+                ));
             }
         }
     }
-    let reports = sw.run_averaged_many(&cfgs, &opts.seeds)?;
-    let mut cells = reports.iter();
-    for model in models {
-        for b in benches {
-            for (name, _) in entries {
-                let r = cells.next().expect("grid cell");
-                t.row(vec![
-                    model.into(),
-                    b.name().into(),
-                    name.into(),
-                    pct(r.avg_inference_accuracy),
-                    f2(r.energy.total_wh()),
-                ]);
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Table V: SOTA efficient-learning comparison (LazyTune integrated)",
+                &["model", "benchmark", "method", "accuracy%", "energy_Wh"],
+            );
+            let mut cells = reports.iter();
+            for model in models {
+                for b in benches {
+                    for (name, _) in entries {
+                        let r = cells.next().expect("grid cell");
+                        t.row(vec![
+                            model.into(),
+                            b.name().into(),
+                            name.into(),
+                            pct(r.avg_inference_accuracy),
+                            f2(r.energy.total_wh()),
+                        ]);
+                    }
+                }
             }
-        }
+            t.emit(&dir, "tab5")
+        }),
     }
-    t.emit(&opts.results_dir, "tab5")
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 13 — sensitivity to the number of inference requests
 // ---------------------------------------------------------------------------
 
-fn fig13(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 13: sensitivity to request count (res50, NC)",
-        &["requests", "method", "accuracy%", "energy_Wh"],
-    );
-    for n in [50usize, 100, 200, 400, 800] {
-        for (name, tune, freeze) in [
-            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
-            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
-        ] {
+fn fig13(opts: &ReproOpts) -> Plan {
+    let counts = [50usize, 100, 200, 400, 800];
+    let entries = [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+    let mut cells = Vec::new();
+    for n in counts {
+        for (_, tune, freeze) in entries {
             let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
             c.n_requests = n;
-            let r = run_cfg(sw, &c, opts)?;
-            t.row(vec![
-                format!("{n}"),
-                name.into(),
-                pct(r.avg_inference_accuracy),
-                f2(r.energy.total_wh()),
-            ]);
+            cells.push(Cell::Avg(c));
         }
     }
-    t.emit(&opts.results_dir, "fig13")
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 13: sensitivity to request count (res50, NC)",
+                &["requests", "method", "accuracy%", "energy_Wh"],
+            );
+            let mut it = reports.iter();
+            for n in counts {
+                for (name, _, _) in entries {
+                    let r = it.next().expect("grid cell");
+                    t.row(vec![
+                        format!("{n}"),
+                        name.into(),
+                        pct(r.avg_inference_accuracy),
+                        f2(r.energy.total_wh()),
+                    ]);
+                }
+            }
+            t.emit(&dir, "fig13")
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 14 — arrival distributions
 // ---------------------------------------------------------------------------
 
-fn fig14(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 14: arrival-distribution sensitivity (res50, NC)",
-        &["distribution", "method", "accuracy%", "energy_Wh"],
-    );
-    for kind in [
+fn fig14(opts: &ReproOpts) -> Plan {
+    let kinds = [
         ArrivalKind::Poisson,
         ArrivalKind::Uniform,
         ArrivalKind::Normal,
         ArrivalKind::Trace,
-    ] {
-        for (name, tune, freeze) in [
-            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
-            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
-        ] {
+    ];
+    let entries = [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+    let mut cells = Vec::new();
+    for kind in kinds {
+        for (_, tune, freeze) in entries {
             let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(tune, freeze);
             c.train_arrival = kind;
             c.infer_arrival = kind;
-            let r = run_cfg(sw, &c, opts)?;
-            t.row(vec![
-                kind.name().into(),
-                name.into(),
-                pct(r.avg_inference_accuracy),
-                f2(r.energy.total_wh()),
-            ]);
+            cells.push(Cell::Avg(c));
         }
     }
-    t.emit(&opts.results_dir, "fig14")
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 14: arrival-distribution sensitivity (res50, NC)",
+                &["distribution", "method", "accuracy%", "energy_Wh"],
+            );
+            let mut it = reports.iter();
+            for kind in kinds {
+                for (name, _, _) in entries {
+                    let r = it.next().expect("grid cell");
+                    t.row(vec![
+                        kind.name().into(),
+                        name.into(),
+                        pct(r.avg_inference_accuracy),
+                        f2(r.energy.total_wh()),
+                    ]);
+                }
+            }
+            t.emit(&dir, "fig14")
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Fig. 15 — CKA stability threshold
 // ---------------------------------------------------------------------------
 
-fn fig15(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Fig 15: CKA stability threshold sweep (res50, NC, ETuner)",
-        &["threshold%", "accuracy%", "energy_Wh"],
-    );
-    for th in [0.005, 0.01, 0.02, 0.04, 0.08] {
-        let mut c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        c.cka_th = th;
-        let r = run_cfg(sw, &c, opts)?;
-        t.row(vec![
-            format!("{:.1}", th * 100.0),
-            pct(r.avg_inference_accuracy),
-            f2(r.energy.total_wh()),
-        ]);
+fn fig15(opts: &ReproOpts) -> Plan {
+    let thresholds = [0.005, 0.01, 0.02, 0.04, 0.08];
+    let cells = thresholds
+        .iter()
+        .map(|&th| {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.cka_th = th;
+            Cell::Avg(c)
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fig 15: CKA stability threshold sweep (res50, NC, ETuner)",
+                &["threshold%", "accuracy%", "energy_Wh"],
+            );
+            for (th, r) in thresholds.iter().zip(&reports) {
+                t.row(vec![
+                    format!("{:.1}", th * 100.0),
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                ]);
+            }
+            t.emit(&dir, "fig15")
+        }),
     }
-    t.emit(&opts.results_dir, "fig15")
 }
 
 // ---------------------------------------------------------------------------
 // Table VI — semi-supervised learning
 // ---------------------------------------------------------------------------
 
-fn tab6(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Table VI: semi-supervised (NC, 10% labeled, SimSiam + supervised)",
-        &["model", "method", "accuracy%", "energy_Wh"],
-    );
-    for model in ["res50", "mbv2", "deit"] {
-        for (name, tune, freeze) in [
-            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
-            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
-        ] {
+fn tab6(opts: &ReproOpts) -> Plan {
+    let models = ["res50", "mbv2", "deit"];
+    let entries = [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+    let mut cells = Vec::new();
+    for model in models {
+        for (_, tune, freeze) in entries {
             let mut c = cfg(model, Benchmark::Nc, opts).with_policies(tune, freeze);
             c.labeled_fraction = Some(0.1);
-            let r = run_cfg(sw, &c, opts)?;
-            t.row(vec![
-                model.into(),
-                name.into(),
-                pct(r.avg_inference_accuracy),
-                f2(r.energy.total_wh()),
-            ]);
+            cells.push(Cell::Avg(c));
         }
     }
-    t.emit(&opts.results_dir, "tab6")
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Table VI: semi-supervised (NC, 10% labeled, SimSiam + supervised)",
+                &["model", "method", "accuracy%", "energy_Wh"],
+            );
+            let mut it = reports.iter();
+            for model in models {
+                for (name, _, _) in entries {
+                    let r = it.next().expect("grid cell");
+                    t.row(vec![
+                        model.into(),
+                        name.into(),
+                        pct(r.avg_inference_accuracy),
+                        f2(r.energy.total_wh()),
+                    ]);
+                }
+            }
+            t.emit(&dir, "tab6")
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Table VII — static lazy strategies
 // ---------------------------------------------------------------------------
 
-fn tab7(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Table VII: static fine-tuning strategies vs LazyTune (res50, NC)",
-        &["method", "batches_to_trigger", "accuracy%", "energy_Wh"],
-    );
+fn tab7(opts: &ReproOpts) -> Plan {
     let mut entries: Vec<(String, TunePolicyKind)> =
         vec![("Immed.".into(), TunePolicyKind::Immediate)];
     for (i, n) in [5usize, 10, 20, 50].iter().enumerate() {
         entries.push((format!("S{}", i + 1), TunePolicyKind::Static(*n)));
     }
     entries.push(("LazyTune".into(), TunePolicyKind::LazyTune));
-    for (name, tune) in entries {
-        let c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(tune, FreezePolicyKind::None);
-        let r = run_cfg(sw, &c, opts)?;
-        let trig = match tune {
-            TunePolicyKind::Immediate => "1".to_string(),
-            TunePolicyKind::Static(n) => format!("{n}"),
-            TunePolicyKind::LazyTune => "-".to_string(),
-        };
-        t.row(vec![
-            name,
-            trig,
-            pct(r.avg_inference_accuracy),
-            f2(r.energy.total_wh()),
-        ]);
+    let cells = entries
+        .iter()
+        .map(|(_, tune)| {
+            Cell::Avg(
+                cfg("res50", Benchmark::Nc, opts)
+                    .with_policies(*tune, FreezePolicyKind::None),
+            )
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Table VII: static fine-tuning strategies vs LazyTune (res50, NC)",
+                &["method", "batches_to_trigger", "accuracy%", "energy_Wh"],
+            );
+            for ((name, tune), r) in entries.into_iter().zip(&reports) {
+                let trig = match tune {
+                    TunePolicyKind::Immediate => "1".to_string(),
+                    TunePolicyKind::Static(n) => format!("{n}"),
+                    TunePolicyKind::LazyTune => "-".to_string(),
+                };
+                t.row(vec![
+                    name,
+                    trig,
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                ]);
+            }
+            t.emit(&dir, "tab7")
+        }),
     }
-    t.emit(&opts.results_dir, "tab7")
 }
 
 // ---------------------------------------------------------------------------
 // Table VIII — quantization compatibility
 // ---------------------------------------------------------------------------
 
-fn tab8(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Table VIII: 8-bit QAT compatibility (res50)",
-        &["benchmark", "method", "acc_8bit%", "acc_32bit%"],
-    );
-    for b in [Benchmark::Nc, Benchmark::Nic79] {
-        for (name, tune, freeze) in [
-            ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
-            ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
-        ] {
+fn tab8(opts: &ReproOpts) -> Plan {
+    let benches = [Benchmark::Nc, Benchmark::Nic79];
+    let entries = [
+        ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
+        ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
+    ];
+    let mut cells = Vec::new();
+    for b in benches {
+        for (_, tune, freeze) in entries {
             let mut cq = cfg("res50", b, opts).with_policies(tune, freeze);
             cq.quant = true;
-            let rq = run_cfg(sw, &cq, opts)?;
-            let cf = cfg("res50", b, opts).with_policies(tune, freeze);
-            let rf = run_cfg(sw, &cf, opts)?;
-            t.row(vec![
-                b.name().into(),
-                name.into(),
-                pct(rq.avg_inference_accuracy),
-                pct(rf.avg_inference_accuracy),
-            ]);
+            cells.push(Cell::Avg(cq));
+            cells.push(Cell::Avg(cfg("res50", b, opts).with_policies(tune, freeze)));
         }
     }
-    t.emit(&opts.results_dir, "tab8")
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Table VIII: 8-bit QAT compatibility (res50)",
+                &["benchmark", "method", "acc_8bit%", "acc_32bit%"],
+            );
+            let mut it = reports.iter();
+            for b in benches {
+                for (name, _, _) in entries {
+                    let rq = it.next().expect("grid cell");
+                    let rf = it.next().expect("grid cell");
+                    t.row(vec![
+                        b.name().into(),
+                        name.into(),
+                        pct(rq.avg_inference_accuracy),
+                        pct(rf.avg_inference_accuracy),
+                    ]);
+                }
+            }
+            t.emit(&dir, "tab8")
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Ablations (design-choice benches called out in DESIGN.md)
 // ---------------------------------------------------------------------------
 
-fn abl_decay(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
+fn abl_decay(opts: &ReproOpts) -> Plan {
     use crate::coordinator::lazytune::DecayKind;
-    let mut t = Table::new(
-        "Ablation: batches_needed decay function (res50, NC, ETuner)",
-        &["decay", "accuracy%", "energy_Wh", "rounds"],
-    );
-    for (name, decay) in [
+    let entries = [
         ("logarithmic (paper)", DecayKind::Logarithmic),
         ("exponential", DecayKind::Exponential),
         ("additive", DecayKind::Additive),
-    ] {
-        let mut c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        c.decay = decay;
-        let r = run_cfg(sw, &c, opts)?;
-        t.row(vec![
-            name.into(),
-            pct(r.avg_inference_accuracy),
-            f2(r.energy.total_wh()),
-            format!("{}", r.rounds),
-        ]);
+    ];
+    let cells = entries
+        .iter()
+        .map(|&(_, decay)| {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.decay = decay;
+            Cell::Avg(c)
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Ablation: batches_needed decay function (res50, NC, ETuner)",
+                &["decay", "accuracy%", "energy_Wh", "rounds"],
+            );
+            for ((name, _), r) in entries.iter().zip(&reports) {
+                t.row(vec![
+                    (*name).into(),
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                    format!("{}", r.rounds),
+                ]);
+            }
+            t.emit(&dir, "abl_decay")
+        }),
     }
-    t.emit(&opts.results_dir, "abl_decay")
 }
 
-fn abl_interval(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Ablation: SimFreeze probe interval (res50, NC, ETuner)",
-        &["interval_iters", "accuracy%", "energy_Wh", "cka_TFLOPs"],
-    );
-    for interval in [4u64, 8, 16, 32] {
-        let mut c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        c.freeze_interval = interval;
-        let r = run_cfg(sw, &c, opts)?;
-        t.row(vec![
-            format!("{interval}"),
-            pct(r.avg_inference_accuracy),
-            f2(r.energy.total_wh()),
-            format!("{:.2}", r.cka_tflops),
-        ]);
+fn abl_interval(opts: &ReproOpts) -> Plan {
+    let intervals = [4u64, 8, 16, 32];
+    let cells = intervals
+        .iter()
+        .map(|&interval| {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.freeze_interval = interval;
+            Cell::Avg(c)
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Ablation: SimFreeze probe interval (res50, NC, ETuner)",
+                &["interval_iters", "accuracy%", "energy_Wh", "cka_TFLOPs"],
+            );
+            for (interval, r) in intervals.iter().zip(&reports) {
+                t.row(vec![
+                    format!("{interval}"),
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                    format!("{:.2}", r.cka_tflops),
+                ]);
+            }
+            t.emit(&dir, "abl_interval")
+        }),
     }
-    t.emit(&opts.results_dir, "abl_interval")
 }
 
-fn abl_oracle(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
-    let mut t = Table::new(
-        "Ablation: scenario-change signal (res50, NC, ETuner)",
-        &["signal", "accuracy%", "energy_Wh", "changes_detected"],
-    );
-    for (name, oracle) in
-        [("energy-score detector (paper)", false), ("oracle boundaries", true)]
-    {
-        let mut c = cfg("res50", Benchmark::Nc, opts)
-            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-        c.oracle_change_detection = oracle;
-        let r = run_cfg(sw, &c, opts)?;
-        t.row(vec![
-            name.into(),
-            pct(r.avg_inference_accuracy),
-            f2(r.energy.total_wh()),
-            format!("{}", r.scenario_changes_detected),
-        ]);
+fn abl_oracle(opts: &ReproOpts) -> Plan {
+    let entries =
+        [("energy-score detector (paper)", false), ("oracle boundaries", true)];
+    let cells = entries
+        .iter()
+        .map(|&(_, oracle)| {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.oracle_change_detection = oracle;
+            Cell::Avg(c)
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Ablation: scenario-change signal (res50, NC, ETuner)",
+                &["signal", "accuracy%", "energy_Wh", "changes_detected"],
+            );
+            for ((name, _), r) in entries.iter().zip(&reports) {
+                t.row(vec![
+                    (*name).into(),
+                    pct(r.avg_inference_accuracy),
+                    f2(r.energy.total_wh()),
+                    format!("{}", r.scenario_changes_detected),
+                ]);
+            }
+            t.emit(&dir, "abl_oracle")
+        }),
     }
-    t.emit(&opts.results_dir, "abl_oracle")
+}
+
+// ---------------------------------------------------------------------------
+// Serving engine — latency percentiles & SLO attainment vs batch window
+// ---------------------------------------------------------------------------
+
+fn serve_table(opts: &ReproOpts) -> Plan {
+    // 30s SLO: windows below it coalesce freely, the 60s window is capped
+    // by the deadline-aware flush — the table shows the latency/executes
+    // trade-off and where the SLO starts binding.
+    let windows = [0.0f64, 15.0, 30.0, 60.0];
+    let n_requests = opts.n_requests;
+    let cells = windows
+        .iter()
+        .map(|&w| {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.serve.batch_window_s = w;
+            c.serve.slo_ms = 30_000.0;
+            Cell::Avg(c)
+        })
+        .collect();
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Serving: latency & SLO vs batch window (res50, NC, ETuner)",
+                &["window_s", "p50_ms", "p95_ms", "p99_ms", "slo_miss",
+                  "attain%", "req/exec", "deferred", "accuracy%"],
+            );
+            for (w, r) in windows.iter().zip(&reports) {
+                let attain =
+                    1.0 - r.slo_violations as f64 / n_requests.max(1) as f64;
+                t.row(vec![
+                    f1(*w),
+                    f1(r.latency_p50_ms),
+                    f1(r.latency_p95_ms),
+                    f1(r.latency_p99_ms),
+                    format!("{}", r.slo_violations),
+                    pct(attain),
+                    f2(r.avg_batch_requests),
+                    format!("{}", r.rounds_deferred),
+                    pct(r.avg_inference_accuracy),
+                ]);
+            }
+            t.emit(&dir, "serve")
+        }),
+    }
 }
 
 /// Shared helper for callers needing just one averaged cell.
@@ -696,7 +1023,7 @@ pub fn one_cell(
     opts: &ReproOpts,
 ) -> Result<Report> {
     let c = cfg(model, b, opts).with_policies(tune, freeze);
-    run_cfg(sw, &c, opts)
+    Ok(sw.run_averaged(&c, &opts.seeds)?.0)
 }
 
 /// Results directory helper used by main.

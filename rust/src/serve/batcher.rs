@@ -1,0 +1,287 @@
+//! Cross-request batching: coalesce queued requests into one padded
+//! fixed-shape artifact execution and scatter per-request rows back out.
+//!
+//! The infer artifacts are AOT-lowered at a fixed `[batch_infer, d]` shape,
+//! so the seed implementation paid one full-batch execute per request no
+//! matter how few rows the request actually needed.  The batcher packs up
+//! to `capacity_rows` rows from consecutive same-scenario requests into one
+//! execute (remaining rows are zero-padded; the models are row-wise, so
+//! padding rows cannot perturb real rows) and the per-request outputs are
+//! recovered by row spans.
+//!
+//! Flush rules (checked in virtual time, so they are seed-deterministic):
+//! * the batch is full (`rows_pending == capacity_rows`), or a request
+//!   would overflow it;
+//! * the oldest queued request has waited `window_s` (window 0 degenerates
+//!   to one-request batches — bit-identical to unbatched serving);
+//! * deadline-aware flush (opt-in via [`AdaptiveBatcher::with_deadline_slack`]):
+//!   the oldest request's SLO deadline minus the service time is about to
+//!   pass — waiting any longer would guarantee a violation, so the window
+//!   is cut short;
+//! * an arriving request belongs to a different scenario than the queued
+//!   ones (serving θ is scenario-dependent);
+//! * the simulation drains the queue (end of stream, or a fine-tuning
+//!   round is about to occupy the device).
+
+use super::queue::{QueuedRequest, RequestQueue};
+
+/// Rows `row0 .. row0 + rows` of the padded batch belong to request
+/// `index` (position in the flushed batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchSpan {
+    pub index: usize,
+    pub row0: usize,
+    pub rows: usize,
+}
+
+/// One packed execute: padded row-major input plus the scatter map.
+#[derive(Clone, Debug)]
+pub struct PaddedBatch {
+    /// `[capacity_rows, d]` row-major; rows past `rows_used` are zeros.
+    pub x: Vec<f32>,
+    pub spans: Vec<BatchSpan>,
+    pub rows_used: usize,
+    pub capacity_rows: usize,
+}
+
+/// Batching policy + pack/scatter mechanics.
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatcher {
+    /// Rows per execute (the artifact's `batch_infer`).
+    pub capacity_rows: usize,
+    /// Virtual-time coalescing window in seconds (0 = no coalescing).
+    pub window_s: f64,
+    /// Feature dimension.
+    pub d: usize,
+    /// `Some(service_s)`: cut the window short so the oldest request can
+    /// still meet its `deadline_t` after a `service_s`-long execute.
+    deadline_slack_s: Option<f64>,
+}
+
+impl AdaptiveBatcher {
+    pub fn new(capacity_rows: usize, window_s: f64, d: usize) -> AdaptiveBatcher {
+        AdaptiveBatcher { capacity_rows, window_s, d, deadline_slack_s: None }
+    }
+
+    /// Enable deadline-aware flushing: a batch never waits past the oldest
+    /// request's `deadline_t - slack_s` (but also never flushes before the
+    /// request arrived).
+    pub fn with_deadline_slack(mut self, slack_s: f64) -> AdaptiveBatcher {
+        self.deadline_slack_s = Some(slack_s);
+        self
+    }
+
+    /// True when the oldest queued request's window (or SLO slack) has
+    /// expired at `now` (its batch must be flushed at `due_t`, `<= now`).
+    pub fn due(&self, queue: &RequestQueue, now: f64) -> bool {
+        self.due_t(queue).is_some_and(|due| due <= now)
+    }
+
+    /// Flush deadline of the current batch: the oldest request's arrival +
+    /// window, pulled forward to its SLO deadline minus the service slack
+    /// when deadline-aware flushing is on.
+    pub fn due_t(&self, queue: &RequestQueue) -> Option<f64> {
+        queue.front().map(|r| {
+            let mut due = r.arrival_t + self.window_s;
+            if let Some(slack) = self.deadline_slack_s {
+                due = due.min(r.deadline_t - slack).max(r.arrival_t);
+            }
+            due
+        })
+    }
+
+    /// True when the queue must flush *before* accepting a request of
+    /// `scenario`/`rows` (scenario boundary or row-capacity overflow).
+    pub fn must_flush_before(
+        &self,
+        queue: &RequestQueue,
+        scenario: usize,
+        rows: usize,
+    ) -> bool {
+        match queue.front() {
+            None => false,
+            Some(front) => {
+                front.scenario != scenario
+                    || queue.rows_pending() + rows > self.capacity_rows
+            }
+        }
+    }
+
+    /// Pop one batch worth of requests: consecutive same-scenario requests
+    /// until row capacity.  Returns an empty vec on an empty queue.
+    pub fn take_batch(&self, queue: &mut RequestQueue) -> Vec<QueuedRequest> {
+        let mut batch: Vec<QueuedRequest> = Vec::new();
+        let mut rows = 0usize;
+        while let Some(front) = queue.front() {
+            if !batch.is_empty()
+                && (front.scenario != batch[0].scenario
+                    || rows + front.rows > self.capacity_rows)
+            {
+                break;
+            }
+            rows += front.rows;
+            batch.push(queue.pop().unwrap());
+            if rows >= self.capacity_rows {
+                break;
+            }
+        }
+        batch
+    }
+
+    /// Pack `batch` into a zero-padded `[capacity_rows, d]` input, reusing
+    /// `scratch` as the output allocation.
+    pub fn pack_into(&self, batch: &[QueuedRequest], scratch: &mut Vec<f32>) -> PaddedBatch {
+        let mut x = std::mem::take(scratch);
+        x.clear();
+        x.resize(self.capacity_rows * self.d, 0.0);
+        let mut spans = Vec::with_capacity(batch.len());
+        let mut row = 0usize;
+        for (index, req) in batch.iter().enumerate() {
+            debug_assert_eq!(req.x.len(), req.rows * self.d);
+            debug_assert!(row + req.rows <= self.capacity_rows, "batch overflow");
+            x[row * self.d..(row + req.rows) * self.d].copy_from_slice(&req.x);
+            spans.push(BatchSpan { index, row0: row, rows: req.rows });
+            row += req.rows;
+        }
+        PaddedBatch { x, spans, rows_used: row, capacity_rows: self.capacity_rows }
+    }
+
+    /// Pack without a reusable scratch buffer (tests/benches).
+    pub fn pack(&self, batch: &[QueuedRequest]) -> PaddedBatch {
+        let mut scratch = Vec::new();
+        self.pack_into(batch, &mut scratch)
+    }
+}
+
+/// Scatter helper: the rows of `flat` (row-major, `width` values per row)
+/// belonging to `span`.
+pub fn span_rows<'a>(flat: &'a [f32], width: usize, span: &BatchSpan) -> &'a [f32] {
+    &flat[span.row0 * width..(span.row0 + span.rows) * width]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t: f64, scenario: usize, rows: usize, fill: f32) -> QueuedRequest {
+        QueuedRequest {
+            arrival_t: t,
+            deadline_t: t + 1.0,
+            scenario,
+            stale_batches: 0,
+            x: vec![fill; rows * 3],
+            y: vec![1; rows],
+            rows,
+        }
+    }
+
+    fn batcher() -> AdaptiveBatcher {
+        AdaptiveBatcher::new(8, 5.0, 3)
+    }
+
+    #[test]
+    fn window_due_anchors_on_oldest() {
+        let b = batcher();
+        let mut q = RequestQueue::new();
+        assert!(!b.due(&q, 100.0));
+        q.push(req(10.0, 1, 2, 0.0));
+        q.push(req(14.0, 1, 2, 0.0));
+        assert!(!b.due(&q, 14.9));
+        assert!(b.due(&q, 15.0));
+        assert_eq!(b.due_t(&q), Some(15.0));
+    }
+
+    #[test]
+    fn deadline_slack_pulls_the_flush_forward() {
+        // window would flush at 15.0, but the oldest request's deadline
+        // (10.0 + 1.0) minus the 0.4s service slack pulls it to 10.6.
+        let b = batcher().with_deadline_slack(0.4);
+        let mut q = RequestQueue::new();
+        q.push(req(10.0, 1, 2, 0.0));
+        assert_eq!(b.due_t(&q), Some(10.6));
+        assert!(!b.due(&q, 10.5));
+        assert!(b.due(&q, 10.6));
+        // slack larger than the whole SLO never flushes before arrival
+        let b = batcher().with_deadline_slack(5.0);
+        assert_eq!(b.due_t(&q), Some(10.0));
+    }
+
+    #[test]
+    fn scenario_and_capacity_cut_batches() {
+        let b = batcher();
+        let mut q = RequestQueue::new();
+        q.push(req(1.0, 1, 4, 0.0));
+        assert!(b.must_flush_before(&q, 2, 1), "scenario boundary");
+        assert!(!b.must_flush_before(&q, 1, 4), "exactly fills capacity");
+        assert!(b.must_flush_before(&q, 1, 5), "overflow");
+
+        q.push(req(2.0, 1, 4, 0.0));
+        q.push(req(3.0, 2, 2, 0.0));
+        let first = b.take_batch(&mut q);
+        assert_eq!(first.len(), 2, "same-scenario requests coalesce");
+        let second = b.take_batch(&mut q);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].scenario, 2);
+        assert!(b.take_batch(&mut q).is_empty());
+    }
+
+    #[test]
+    fn pack_zero_pads_and_spans_cover_rows() {
+        let b = batcher();
+        let batch = vec![req(1.0, 1, 2, 1.5), req(2.0, 1, 3, 2.5)];
+        let p = b.pack(&batch);
+        assert_eq!(p.x.len(), 8 * 3);
+        assert_eq!(p.rows_used, 5);
+        assert_eq!(
+            p.spans,
+            vec![
+                BatchSpan { index: 0, row0: 0, rows: 2 },
+                BatchSpan { index: 1, row0: 2, rows: 3 },
+            ]
+        );
+        assert!(p.x[..6].iter().all(|&v| v == 1.5));
+        assert!(p.x[6..15].iter().all(|&v| v == 2.5));
+        assert!(p.x[15..].iter().all(|&v| v == 0.0), "padding rows are zero");
+        assert_eq!(span_rows(&p.x, 3, &p.spans[1]).len(), 9);
+    }
+
+    #[test]
+    fn packed_rowwise_model_matches_single_executes() {
+        // N requests through one padded execute == N one-request executes,
+        // for any row-wise model (here: f(row) = [sum, max] per row).
+        let b = AdaptiveBatcher::new(16, 0.0, 3);
+        let rowwise = |x: &[f32], rows: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(rows * 2);
+            for r in 0..rows {
+                let row = &x[r * 3..(r + 1) * 3];
+                out.push(row.iter().sum());
+                out.push(row.iter().cloned().fold(f32::NEG_INFINITY, f32::max));
+            }
+            out
+        };
+        let reqs: Vec<QueuedRequest> = (0..4)
+            .map(|i| {
+                let rows = i + 1;
+                QueuedRequest {
+                    arrival_t: i as f64,
+                    deadline_t: i as f64 + 1.0,
+                    scenario: 3,
+                    stale_batches: 0,
+                    x: (0..rows * 3).map(|k| (i * 7 + k) as f32 * 0.5).collect(),
+                    y: vec![0; rows],
+                    rows,
+                }
+            })
+            .collect();
+
+        let packed = b.pack(&reqs);
+        let batched_out = rowwise(&packed.x, packed.capacity_rows);
+        for (req, span) in reqs.iter().zip(&packed.spans) {
+            let single = b.pack(std::slice::from_ref(req));
+            let single_out = rowwise(&single.x, single.capacity_rows);
+            let got = span_rows(&batched_out, 2, span);
+            let want = &single_out[..req.rows * 2];
+            assert_eq!(got, want, "request {} diverged", span.index);
+        }
+    }
+}

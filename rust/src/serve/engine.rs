@@ -1,0 +1,374 @@
+//! The serving engine: glue between the event stream and
+//! [`ModelSession`].  Owns the request queue, the adaptive batcher, the
+//! latency/SLO ledger, the tune-vs-serve scheduler, and the cached
+//! bank-installed serving θ (moved here from `sim::run` — the serving
+//! parameters are a serving-engine concern).
+//!
+//! Three operating modes, all seed-deterministic:
+//!
+//! * **direct** (`--no-batching`): every request executes immediately on
+//!   arrival with a full `batch_infer`-row test draw — structurally the
+//!   pre-engine request path, kept as the equivalence baseline;
+//! * **window 0** (the default): requests route through the queue and
+//!   batcher but every batch degenerates to one request — reports are
+//!   bit-identical to the direct path (and to the pre-engine seed);
+//! * **window > 0**: requests draw fewer rows, wait up to the virtual-time
+//!   window, and consecutive same-scenario requests share one padded
+//!   execute; per-request latency = queueing delay + batched service time.
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::bitset::BitSet;
+use crate::cost::device::DeviceModel;
+use crate::data::benchmarks::Scenario;
+use crate::model::{Cwr, ModelSession, Params};
+use crate::runtime::artifact::ModelManifest;
+
+use super::batcher::AdaptiveBatcher;
+use super::latency::{LatencyModel, LatencySummary};
+use super::queue::{QueuedRequest, RequestQueue};
+use super::scheduler::Scheduler;
+use super::ServeConfig;
+
+/// `ETUNER_DEBUG` looked up once per process (it used to be a
+/// `std::env::var_os` call on every request in the serving hot path).
+fn debug_enabled() -> bool {
+    static DEBUG: OnceLock<bool> = OnceLock::new();
+    *DEBUG.get_or_init(|| std::env::var_os("ETUNER_DEBUG").is_some())
+}
+
+/// Cached bank-installed serving parameters + the generation snapshot they
+/// were built from.  While the snapshot matches, serving reuses the cached
+/// θ outright (no clone, no head surgery, and — via the session's literal
+/// cache — no re-marshal).
+struct ServingCache {
+    params: Option<Params>,
+    src_id: u64,
+    src_gen: u64,
+    cwr_gen: u64,
+    scenario: usize,
+    /// scratch: live-scenario classes excluded from the bank install.
+    except: BitSet,
+    rebuilds: u64,
+    hits: u64,
+}
+
+impl ServingCache {
+    fn new(classes: usize) -> ServingCache {
+        ServingCache {
+            params: None,
+            src_id: 0,
+            src_gen: 0,
+            cwr_gen: 0,
+            scenario: usize::MAX,
+            except: BitSet::new(classes),
+            rebuilds: 0,
+            hits: 0,
+        }
+    }
+
+    fn is_valid(&self, src: &Params, cwr: &Cwr, scenario: usize) -> bool {
+        self.params.is_some()
+            && self.src_id == src.id()
+            && self.src_gen == src.generation()
+            && self.cwr_gen == cwr.generation()
+            && self.scenario == scenario
+    }
+}
+
+/// One completed request, in service order.
+#[derive(Clone, Copy, Debug)]
+pub struct ServedRequest {
+    pub arrival_t: f64,
+    pub scenario: usize,
+    pub accuracy: f32,
+    /// Mean energy score `-logsumexp` over the request's rows (feeds the
+    /// scenario-change detector in service order).
+    pub energy_score: f64,
+    pub stale_batches: usize,
+    /// End-to-end latency: queueing delay + batched service time.
+    pub latency_s: f64,
+    /// Requests sharing this request's execute (1 = unbatched).
+    pub batch_requests: usize,
+    /// Requests still queued when this one was served.
+    pub queue_depth: usize,
+}
+
+/// Serving engine state (one per simulation).
+pub struct ServeEngine {
+    batching: bool,
+    rows_per_request: usize,
+    slo_s: f64,
+    batcher: AdaptiveBatcher,
+    queue: RequestQueue,
+    latency: LatencyModel,
+    scheduler: Scheduler,
+    serving: ServingCache,
+    disable_serving_cache: bool,
+    scratch: Vec<f32>,
+    executes: u64,
+    served: u64,
+}
+
+impl ServeEngine {
+    pub fn new(
+        m: &ModelManifest,
+        device: &DeviceModel,
+        cfg: &ServeConfig,
+        direct: bool,
+        disable_serving_cache: bool,
+    ) -> ServeEngine {
+        // `direct` is the only bypass: window 0 still routes through the
+        // queue + batcher (each full-draw request fills the batch exactly,
+        // so it flushes inside `submit` — bit-identical to direct serving,
+        // but exercising the real pack/scatter machinery).
+        let batching = !direct;
+        let rows_per_request = if direct {
+            m.batch_infer
+        } else {
+            cfg.rows_per_request(m.batch_infer)
+        };
+        let latency = LatencyModel::new(device, m, cfg.slo_s());
+        // never coalesce past the point where the oldest request's SLO
+        // deadline could still be met after one execute
+        let batcher = AdaptiveBatcher::new(m.batch_infer, cfg.batch_window_s, m.d)
+            .with_deadline_slack(latency.exec_s());
+        ServeEngine {
+            batching,
+            rows_per_request,
+            slo_s: cfg.slo_s(),
+            batcher,
+            queue: RequestQueue::new(),
+            latency,
+            scheduler: Scheduler::new(cfg.defer_backlog, cfg.max_defers),
+            serving: ServingCache::new(m.classes),
+            disable_serving_cache,
+            scratch: Vec::new(),
+            executes: 0,
+            served: 0,
+        }
+    }
+
+    /// Rows the simulation must draw per inference request.
+    pub fn rows_per_request(&self) -> usize {
+        self.rows_per_request
+    }
+
+    /// Latency deadline for a request arriving at `t`.
+    pub fn deadline(&self, t: f64) -> f64 {
+        t + self.slo_s
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn peak_queue_depth(&self) -> usize {
+        self.queue.peak_depth()
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut Scheduler {
+        &mut self.scheduler
+    }
+
+    pub fn latency_summary(&self) -> LatencySummary {
+        self.latency.summary()
+    }
+
+    pub fn serving_rebuilds(&self) -> u64 {
+        self.serving.rebuilds
+    }
+
+    pub fn serving_hits(&self) -> u64 {
+        self.serving.hits
+    }
+
+    /// Padded artifact executions performed so far.
+    pub fn executes(&self) -> u64 {
+        self.executes
+    }
+
+    /// Mean requests per execute: 1.0 when batching never engaged,
+    /// including request-free runs (matches the `Report` field contract).
+    pub fn avg_batch_requests(&self) -> f64 {
+        if self.executes == 0 {
+            1.0
+        } else {
+            self.served as f64 / self.executes as f64
+        }
+    }
+
+    /// Flush every batch whose window expired by `now` (called before each
+    /// event so service order follows virtual time).
+    pub fn pump(
+        &mut self,
+        now: f64,
+        sess: &ModelSession,
+        params: &Params,
+        cwr: &Cwr,
+        scenarios: &[Scenario],
+    ) -> Result<Vec<ServedRequest>> {
+        let mut out = Vec::new();
+        while self.batcher.due(&self.queue, now) {
+            let due = self.batcher.due_t(&self.queue).unwrap();
+            let batch = self.batcher.take_batch(&mut self.queue);
+            out.extend(self.serve_batch(batch, due, sess, params, cwr, scenarios)?);
+        }
+        Ok(out)
+    }
+
+    /// Accept one arriving request; returns any requests served as a
+    /// consequence (immediately in direct/window-0 mode, on capacity or
+    /// scenario boundaries otherwise).
+    pub fn submit(
+        &mut self,
+        req: QueuedRequest,
+        sess: &ModelSession,
+        params: &Params,
+        cwr: &Cwr,
+        scenarios: &[Scenario],
+    ) -> Result<Vec<ServedRequest>> {
+        let arrival_t = req.arrival_t;
+        if !self.batching {
+            return self.serve_batch(vec![req], arrival_t, sess, params, cwr, scenarios);
+        }
+        let mut out = Vec::new();
+        if self.batcher.must_flush_before(&self.queue, req.scenario, req.rows) {
+            let batch = self.batcher.take_batch(&mut self.queue);
+            out.extend(self.serve_batch(batch, arrival_t, sess, params, cwr, scenarios)?);
+        }
+        self.queue.push(req);
+        if self.queue.rows_pending() >= self.batcher.capacity_rows {
+            let batch = self.batcher.take_batch(&mut self.queue);
+            out.extend(self.serve_batch(batch, arrival_t, sess, params, cwr, scenarios)?);
+        }
+        Ok(out)
+    }
+
+    /// Serve everything still queued at `now` (end of stream, or a
+    /// fine-tuning round is about to occupy the device).
+    pub fn drain(
+        &mut self,
+        now: f64,
+        sess: &ModelSession,
+        params: &Params,
+        cwr: &Cwr,
+        scenarios: &[Scenario],
+    ) -> Result<Vec<ServedRequest>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let batch = self.batcher.take_batch(&mut self.queue);
+            out.extend(self.serve_batch(batch, now, sess, params, cwr, scenarios)?);
+        }
+        Ok(out)
+    }
+
+    /// Execute one batch due at `due`: ensure the bank-installed serving θ,
+    /// pack + pad, run the artifact once, scatter predictions and energy
+    /// scores back per request, and charge latency.
+    fn serve_batch(
+        &mut self,
+        batch: Vec<QueuedRequest>,
+        due: f64,
+        sess: &ModelSession,
+        params: &Params,
+        cwr: &Cwr,
+        scenarios: &[Scenario],
+    ) -> Result<Vec<ServedRequest>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let scenario = batch[0].scenario;
+        debug_assert!(batch.iter().all(|r| r.scenario == scenario));
+        self.ensure_serving(scenario, sess, params, cwr, scenarios);
+        let packed = self.batcher.pack_into(&batch, &mut self.scratch);
+        let serving = self.serving.params.as_ref().unwrap();
+        // ONE artifact execution serves every coalesced request's
+        // prediction and OOD energy score.
+        let logits = sess.infer(serving, &packed.x)?;
+        self.scratch = packed.x;
+        let pred = logits.argmax_rows();
+        let lse = logits.logsumexp_rows();
+
+        let exec_s = self.latency.exec_s();
+        let service_start = self.scheduler.admit_serve(due, exec_s);
+        self.latency.charge_execute(exec_s);
+        self.executes += 1;
+        let queue_depth = self.queue.len();
+        let batch_requests = batch.len();
+        let mut out = Vec::with_capacity(batch_requests);
+        for (req, span) in batch.iter().zip(&packed.spans) {
+            let rows = span.row0..span.row0 + span.rows;
+            let correct = pred[rows.clone()]
+                .iter()
+                .zip(&req.y)
+                .filter(|(p, t)| **p == **t as usize)
+                .count();
+            let acc = correct as f32 / req.y.len() as f32;
+            let row_lse = &lse[rows];
+            let score = row_lse.iter().map(|&s| -s as f64).sum::<f64>()
+                / row_lse.len() as f64;
+            let latency_s =
+                self.latency.observe(service_start - req.arrival_t, exec_s);
+            if debug_enabled() {
+                let (t, scenario, acc, mean_score) =
+                    (req.arrival_t, req.scenario, acc, score);
+                eprintln!(
+                    "[dbg] t={t:.0} scen={scenario} acc={acc:.3} energy={mean_score:.3}"
+                );
+            }
+            self.served += 1;
+            out.push(ServedRequest {
+                arrival_t: req.arrival_t,
+                scenario: req.scenario,
+                accuracy: acc,
+                energy_score: score,
+                stale_batches: req.stale_batches,
+                latency_s,
+                batch_requests,
+                queue_depth,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Serve with the consolidated head for past classes, keeping the live
+    /// training rows for classes of the current scenario.  The
+    /// bank-installed θ is cached: flushes between parameter/bank changes
+    /// reuse it with zero copies.
+    fn ensure_serving(
+        &mut self,
+        scenario: usize,
+        sess: &ModelSession,
+        params: &Params,
+        cwr: &Cwr,
+        scenarios: &[Scenario],
+    ) {
+        let cache_ok = !self.disable_serving_cache
+            && self.serving.is_valid(params, cwr, scenario);
+        if cache_ok {
+            self.serving.hits += 1;
+            return;
+        }
+        self.serving.rebuilds += 1;
+        if self.serving.params.is_none() {
+            // first request: allocate the slot (keeps its id for good)
+            self.serving.params = Some(params.clone());
+        } else {
+            self.serving.params.as_mut().unwrap().copy_from(params);
+        }
+        self.serving.except.assign(&scenarios[scenario].classes);
+        let p = self.serving.params.as_mut().unwrap();
+        cwr.install_except(&sess.m, p, &self.serving.except);
+        self.serving.src_id = params.id();
+        self.serving.src_gen = params.generation();
+        self.serving.cwr_gen = cwr.generation();
+        self.serving.scenario = scenario;
+    }
+}

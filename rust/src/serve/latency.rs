@@ -1,0 +1,186 @@
+//! Per-request latency and SLO accounting for the serving engine.
+//!
+//! The simulation's [`crate::cost::energy::CostBook`] deliberately charges
+//! only *fine-tuning* costs (the paper's Fig. 3/8/9 metrics never include
+//! the inference pass), so serving keeps its own ledger: queueing delay in
+//! virtual time plus the batched service time of one fixed-shape execute,
+//! priced through the same [`DeviceModel`] the training ledger uses.
+//! Latencies are recorded in service order; percentiles are nearest-rank
+//! over the full sample set (request counts are small enough that a digest
+//! approximation would only add noise).
+
+use crate::cost::device::DeviceModel;
+use crate::cost::flops;
+use crate::runtime::artifact::ModelManifest;
+
+/// End-of-run latency/SLO digest (all times in milliseconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    pub violations: u64,
+    /// Fraction of requests served within the SLO (1.0 when none missed).
+    pub attainment: f64,
+}
+
+/// Serving-side cost model + latency ledger.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// Service time of one padded execute: the artifact always computes
+    /// all `batch_infer` rows, occupied or padding.
+    exec_s: f64,
+    slo_s: f64,
+    latencies_s: Vec<f64>,
+    violations: u64,
+    queue_delay_total_s: f64,
+    service_total_s: f64,
+}
+
+impl LatencyModel {
+    pub fn new(device: &DeviceModel, m: &ModelManifest, slo_s: f64) -> LatencyModel {
+        LatencyModel {
+            exec_s: device.compute_s(flops::infer_flops(m, m.batch_infer)),
+            slo_s,
+            latencies_s: Vec::new(),
+            violations: 0,
+            queue_delay_total_s: 0.0,
+            service_total_s: 0.0,
+        }
+    }
+
+    /// Virtual service time of one padded artifact execution.
+    pub fn exec_s(&self) -> f64 {
+        self.exec_s
+    }
+
+    pub fn slo_s(&self) -> f64 {
+        self.slo_s
+    }
+
+    /// Record one padded execute's device occupancy (once per execute —
+    /// requests sharing a batch share its service time).
+    pub fn charge_execute(&mut self, service_s: f64) {
+        self.service_total_s += service_s;
+    }
+
+    /// Record one served request; returns its end-to-end latency (s).
+    pub fn observe(&mut self, queue_delay_s: f64, service_s: f64) -> f64 {
+        debug_assert!(queue_delay_s >= 0.0, "negative queue delay");
+        let latency = queue_delay_s + service_s;
+        self.latencies_s.push(latency);
+        self.queue_delay_total_s += queue_delay_s;
+        if latency > self.slo_s {
+            self.violations += 1;
+        }
+        latency
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_s.len()
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Total virtual time requests spent waiting for the device.
+    pub fn queue_delay_total_s(&self) -> f64 {
+        self.queue_delay_total_s
+    }
+
+    /// Total virtual device occupancy across executes (via
+    /// [`Self::charge_execute`], once per padded execute).
+    pub fn service_total_s(&self) -> f64 {
+        self.service_total_s
+    }
+
+    /// Nearest-rank index for percentile `p` over `n` samples.
+    fn rank(p: f64, n: usize) -> usize {
+        let r = ((p / 100.0) * n as f64).ceil() as usize;
+        r.clamp(1, n) - 1
+    }
+
+    /// Nearest-rank percentile of recorded latencies, in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[Self::rank(p, sorted.len())] * 1e3
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let n = self.latencies_s.len();
+        if n == 0 {
+            return LatencySummary { attainment: 1.0, ..LatencySummary::default() };
+        }
+        // one sorted copy serves all three percentile ranks
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        LatencySummary {
+            p50_ms: sorted[Self::rank(50.0, n)] * 1e3,
+            p95_ms: sorted[Self::rank(95.0, n)] * 1e3,
+            p99_ms: sorted[Self::rank(99.0, n)] * 1e3,
+            mean_ms: mean * 1e3,
+            max_ms: sorted[n - 1] * 1e3,
+            violations: self.violations,
+            attainment: 1.0 - self.violations as f64 / n as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(slo_s: f64) -> LatencyModel {
+        LatencyModel {
+            exec_s: 0.010,
+            slo_s,
+            latencies_s: Vec::new(),
+            violations: 0,
+            queue_delay_total_s: 0.0,
+            service_total_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let mut lm = model(1.0);
+        for i in 1..=100 {
+            lm.observe(i as f64 * 1e-3, 0.0);
+        }
+        assert!((lm.percentile_ms(50.0) - 50.0).abs() < 1e-9);
+        assert!((lm.percentile_ms(95.0) - 95.0).abs() < 1e-9);
+        assert!((lm.percentile_ms(99.0) - 99.0).abs() < 1e-9);
+        let s = lm.summary();
+        assert!((s.max_ms - 100.0).abs() < 1e-9);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_violations_counted_strictly_above() {
+        let mut lm = model(0.050);
+        lm.observe(0.049, 0.0);
+        lm.observe(0.050, 0.0); // exactly at SLO: not a violation
+        lm.observe(0.051, 0.0);
+        lm.observe(0.200, 0.0);
+        assert_eq!(lm.violations(), 2);
+        let s = lm.summary();
+        assert!((s.attainment - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_benign() {
+        let lm = model(1.0);
+        let s = lm.summary();
+        assert_eq!(s.violations, 0);
+        assert_eq!(s.p99_ms, 0.0);
+        assert!((s.attainment - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,116 @@
+//! # The serving engine (cross-request batching + latency/SLO accounting)
+//!
+//! EdgeOL's deployment premise is *in-situ online learning*: one edge
+//! accelerator both serves streaming inference requests and fine-tunes the
+//! deployed model.  The seed implementation executed one fixed-shape
+//! artifact per request with no notion of queueing, latency, or contention
+//! with fine-tuning rounds.  This module is the subsystem between the
+//! event stream and [`crate::model::ModelSession`]:
+//!
+//! * [`queue`] — pending requests with arrival times, deadlines, and their
+//!   already-drawn test rows (sampling at arrival keeps the world RNG
+//!   stream in event order);
+//! * [`batcher`] — coalesces consecutive same-scenario requests into one
+//!   padded `[batch_infer, d]` execute within a virtual-time window, and
+//!   scatters per-request predictions/energy scores back out;
+//! * [`latency`] — queueing delay + batched service time priced through
+//!   [`crate::cost::device::DeviceModel`]; p50/p95/p99 digests and
+//!   SLO-violation counts;
+//! * [`scheduler`] — arbitrates the single device between fine-tuning
+//!   rounds and inference bursts: requests arriving mid-round pay the
+//!   delay, and a triggered round can be deferred under backlog (bounded
+//!   by a starvation cap), feeding LazyTune's request-pressure term a real
+//!   queue depth;
+//! * [`engine`] — the glue object the simulation drives (`submit`/`pump`/
+//!   `drain`), which also owns the cached bank-installed serving θ.
+//!
+//! **Determinism contract:** everything here runs in virtual time off the
+//! seeded event stream.  With `batch_window_s == 0` every batch holds
+//! exactly one full-draw request and reports are bit-identical to the
+//! pre-engine serving path (enforced by `tests/serving_engine.rs`); the
+//! latency/batch fields are serving-side instrumentation, excluded from
+//! [`crate::metrics::Report::fingerprint`] like the other perf counters.
+
+pub mod batcher;
+pub mod engine;
+pub mod latency;
+pub mod queue;
+pub mod scheduler;
+
+pub use batcher::{AdaptiveBatcher, BatchSpan, PaddedBatch};
+pub use engine::{ServeEngine, ServedRequest};
+pub use latency::{LatencyModel, LatencySummary};
+pub use queue::{QueuedRequest, RequestQueue};
+pub use scheduler::{RoundDecision, Scheduler};
+
+/// Serving-engine knobs (part of [`crate::sim::RunConfig`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Virtual-time coalescing window, seconds.  `0.0` (the default)
+    /// degenerates to one-request batches: bit-identical reports to the
+    /// pre-engine serving path.
+    pub batch_window_s: f64,
+    /// Latency SLO in milliseconds (violation accounting only; no request
+    /// is ever dropped).
+    pub slo_ms: f64,
+    /// Rows drawn per request.  `None` (the default) keeps the seed's
+    /// full `batch_infer` draw when the window is 0 and picks
+    /// `batch_infer / 8` (≥ 1) when a real window is set; `Some(r)`
+    /// forces `r` (clamped to the batch capacity).  Ignored entirely in
+    /// `--no-batching` mode, which always uses the full draw.
+    pub rows_per_request: Option<usize>,
+    /// Queue depth at which the scheduler defers a triggered round
+    /// (`0` = never defer).
+    pub defer_backlog: usize,
+    /// Starvation guard: max consecutive round deferrals.
+    pub max_defers: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            batch_window_s: 0.0,
+            slo_ms: 250.0,
+            rows_per_request: None,
+            defer_backlog: 4,
+            max_defers: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn slo_s(&self) -> f64 {
+        self.slo_ms / 1e3
+    }
+
+    /// Resolve the per-request row draw for an artifact batch capacity.
+    pub fn rows_per_request(&self, batch_infer: usize) -> usize {
+        match self.rows_per_request {
+            Some(r) => r.clamp(1, batch_infer),
+            None if self.batch_window_s > 0.0 => (batch_infer / 8).max(1),
+            None => batch_infer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_the_degenerate_identity_mode() {
+        let c = ServeConfig::default();
+        assert_eq!(c.batch_window_s, 0.0);
+        assert_eq!(c.rows_per_request(64), 64, "unbatched keeps the full draw");
+    }
+
+    #[test]
+    fn batched_rows_default_to_an_eighth_of_capacity() {
+        let mut c =
+            ServeConfig { batch_window_s: 10.0, ..ServeConfig::default() };
+        assert_eq!(c.rows_per_request(64), 8);
+        assert_eq!(c.rows_per_request(4), 1);
+        c.rows_per_request = Some(999);
+        assert_eq!(c.rows_per_request(64), 64, "clamped to capacity");
+    }
+}

@@ -1,0 +1,116 @@
+//! The serving request queue: inference requests that have arrived (their
+//! test draw is already materialized — sampling happens at arrival time so
+//! the world RNG stream is consumed in event order) but have not yet been
+//! executed.  The [`crate::serve::AdaptiveBatcher`] decides when a prefix
+//! of this queue becomes one padded artifact execution.
+
+use std::collections::VecDeque;
+
+/// One pending inference request.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    /// Virtual arrival time (the event-stream timestamp).
+    pub arrival_t: f64,
+    /// Latency deadline: `arrival_t + SLO`.
+    pub deadline_t: f64,
+    /// Scenario active when the request arrived (fixes the serving head:
+    /// requests of different scenarios never share an execute).
+    pub scenario: usize,
+    /// Training batches buffered but not yet trained on at arrival (the
+    /// model-staleness proxy recorded per request since the seed).
+    pub stale_batches: usize,
+    /// Test draw, row-major `[rows, d]`.
+    pub x: Vec<f32>,
+    /// Ground-truth labels, `rows` long.
+    pub y: Vec<i32>,
+    /// Rows this request contributes to a padded batch.
+    pub rows: usize,
+}
+
+/// FIFO of pending requests with depth instrumentation.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    q: VecDeque<QueuedRequest>,
+    peak_depth: usize,
+    total_enqueued: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    pub fn push(&mut self, req: QueuedRequest) {
+        self.q.push_back(req);
+        self.total_enqueued += 1;
+        self.peak_depth = self.peak_depth.max(self.q.len());
+    }
+
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.q.pop_front()
+    }
+
+    /// Oldest pending request (the batching window anchors on it).
+    pub fn front(&self) -> Option<&QueuedRequest> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Rows pending across all queued requests.
+    pub fn rows_pending(&self) -> usize {
+        self.q.iter().map(|r| r.rows).sum()
+    }
+
+    /// Deepest the queue has ever been (backlog instrumentation).
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+
+    pub fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t: f64, scenario: usize, rows: usize) -> QueuedRequest {
+        QueuedRequest {
+            arrival_t: t,
+            deadline_t: t + 0.25,
+            scenario,
+            stale_batches: 0,
+            x: vec![0.0; rows * 4],
+            y: vec![0; rows],
+            rows,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_depth_tracking() {
+        let mut q = RequestQueue::new();
+        assert!(q.is_empty());
+        q.push(req(1.0, 1, 2));
+        q.push(req(2.0, 1, 3));
+        q.push(req(3.0, 2, 1));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.rows_pending(), 6);
+        assert_eq!(q.peak_depth(), 3);
+        assert_eq!(q.front().unwrap().arrival_t, 1.0);
+        assert_eq!(q.pop().unwrap().arrival_t, 1.0);
+        assert_eq!(q.pop().unwrap().arrival_t, 2.0);
+        q.push(req(4.0, 2, 1));
+        // peak depth is historical, not current
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_depth(), 3);
+        assert_eq!(q.total_enqueued(), 4);
+    }
+}

@@ -1,0 +1,122 @@
+//! Tune-vs-serve arbitration for the single edge accelerator.
+//!
+//! The device executes one artifact at a time: a fine-tuning round and an
+//! inference batch contend for it.  The scheduler keeps the device-busy
+//! horizon in virtual time — requests flushed while a round runs start
+//! after it and pay the delay — and may *defer* a triggered round when the
+//! serving backlog is deep (bounded by a consecutive-defer cap so training
+//! never starves).  With batching disabled the queue is always empty at
+//! trigger time, so the scheduler never changes the seed behaviour.
+
+/// Outcome of a round-trigger arbitration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundDecision {
+    /// Run the round now (after draining pending requests).
+    Proceed,
+    /// Serve the backlog first; re-evaluate at the next trigger.
+    Defer,
+}
+
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    /// Virtual time at which the device finishes its current work.
+    device_free_at: f64,
+    /// Queue depth at which a triggered round is deferred (0 = never).
+    defer_backlog: usize,
+    /// Starvation guard: max rounds deferred back-to-back.
+    max_defers: u32,
+    consecutive_defers: u32,
+    rounds_deferred: u64,
+}
+
+impl Scheduler {
+    pub fn new(defer_backlog: usize, max_defers: u32) -> Scheduler {
+        Scheduler {
+            device_free_at: 0.0,
+            defer_backlog,
+            max_defers,
+            consecutive_defers: 0,
+            rounds_deferred: 0,
+        }
+    }
+
+    pub fn device_free_at(&self) -> f64 {
+        self.device_free_at
+    }
+
+    pub fn rounds_deferred(&self) -> u64 {
+        self.rounds_deferred
+    }
+
+    /// Admit one serving execute due at `due_t`; returns its service start
+    /// (the later of the deadline and the device-busy horizon) and extends
+    /// the horizon by `service_s`.
+    pub fn admit_serve(&mut self, due_t: f64, service_s: f64) -> f64 {
+        let start = due_t.max(self.device_free_at);
+        self.device_free_at = start + service_s;
+        start
+    }
+
+    /// Arbitrate a triggered fine-tuning round against `backlog` pending
+    /// requests.
+    pub fn consider_round(&mut self, backlog: usize) -> RoundDecision {
+        let defer = self.defer_backlog > 0
+            && backlog >= self.defer_backlog
+            && self.consecutive_defers < self.max_defers;
+        if defer {
+            self.consecutive_defers += 1;
+            self.rounds_deferred += 1;
+            RoundDecision::Defer
+        } else {
+            self.consecutive_defers = 0;
+            RoundDecision::Proceed
+        }
+    }
+
+    /// A round started at `t` and occupies the device for `duration_s`
+    /// (virtual seconds from the cost ledger).
+    pub fn on_round(&mut self, t: f64, duration_s: f64) {
+        let start = t.max(self.device_free_at);
+        self.device_free_at = start + duration_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_after_round_pays_the_delay() {
+        let mut s = Scheduler::new(4, 2);
+        s.on_round(100.0, 30.0);
+        assert_eq!(s.device_free_at(), 130.0);
+        // a batch due mid-round starts when the round ends
+        let start = s.admit_serve(110.0, 2.0);
+        assert_eq!(start, 130.0);
+        assert_eq!(s.device_free_at(), 132.0);
+        // an idle-device batch starts at its deadline
+        let start = s.admit_serve(200.0, 2.0);
+        assert_eq!(start, 200.0);
+    }
+
+    #[test]
+    fn defers_under_backlog_with_starvation_cap() {
+        let mut s = Scheduler::new(4, 2);
+        assert_eq!(s.consider_round(0), RoundDecision::Proceed);
+        assert_eq!(s.consider_round(3), RoundDecision::Proceed);
+        assert_eq!(s.consider_round(4), RoundDecision::Defer);
+        assert_eq!(s.consider_round(9), RoundDecision::Defer);
+        // third consecutive trigger under backlog: cap forces the round
+        assert_eq!(s.consider_round(9), RoundDecision::Proceed);
+        // cap resets after a round proceeds
+        assert_eq!(s.consider_round(5), RoundDecision::Defer);
+        assert_eq!(s.rounds_deferred(), 3);
+    }
+
+    #[test]
+    fn zero_threshold_never_defers() {
+        let mut s = Scheduler::new(0, 2);
+        assert_eq!(s.consider_round(1000), RoundDecision::Proceed);
+        assert_eq!(s.rounds_deferred(), 0);
+    }
+}

@@ -6,15 +6,22 @@
 //! per the intra-tuning policy, detects scenario changes from inference
 //! energy scores, and maintains CWR head consolidation across scenarios.
 //!
-//! # Request-path costs
+//! # Request path
 //!
-//! The serving path is cache-structured so a request whose inputs did not
-//! change performs **zero full-θ copies**: the bank-installed serving θ is
-//! kept in a [`ServingCache`] and invalidated by generation counters
-//! ([`Params::generation`] moves on every train step / head surgery,
-//! [`Cwr::generation`] on every consolidation), and the session's literal
-//! cache (see [`crate::model::ModelSession`]) skips θ re-marshalling while
-//! the serving parameters are unchanged.
+//! All inference requests route through the serving engine
+//! ([`crate::serve::ServeEngine`]): requests are drawn at arrival (so the
+//! world RNG stream stays in event order), queued, coalesced into padded
+//! executes by the adaptive batcher, and charged queueing delay + batched
+//! service time against the device model, while the scheduler arbitrates
+//! the device between fine-tuning rounds and inference bursts.  With
+//! `serve.batch_window_s == 0` (the default) every batch degenerates to
+//! one full-draw request and reports are bit-identical to the pre-engine
+//! path.  The engine also owns the cached bank-installed serving θ,
+//! invalidated by generation counters ([`Params::generation`] moves on
+//! every train step / head surgery, [`Cwr::generation`] on every
+//! consolidation), so a request whose inputs did not change performs
+//! **zero full-θ copies** and — via the session's literal cache (see
+//! [`crate::model::ModelSession`]) — no θ re-marshal.
 
 use std::time::Instant;
 
@@ -39,6 +46,9 @@ use crate::metrics::{Report, RequestRecord, RoundRecord};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
 use crate::runtime::Runtime;
+use crate::serve::{
+    QueuedRequest, RoundDecision, ServeConfig, ServeEngine, ServedRequest,
+};
 
 use super::valpool::ValPool;
 
@@ -75,6 +85,13 @@ pub struct RunConfig {
     /// Debug/regression knob: rebuild the serving θ on every request (the
     /// seed behaviour).  Reports must be bit-identical either way.
     pub disable_serving_cache: bool,
+    /// Serving-engine knobs (batching window, SLO, scheduler thresholds).
+    pub serve: ServeConfig,
+    /// `--no-batching`: serve each request immediately through the
+    /// engine's direct path (no queue/batcher) with a full-batch draw —
+    /// the pre-engine behaviour.  Reports must be bit-identical to
+    /// `serve.batch_window_s == 0`.
+    pub serve_direct: bool,
 }
 
 impl RunConfig {
@@ -99,6 +116,8 @@ impl RunConfig {
             decay: DecayKind::Logarithmic,
             oracle_change_detection: false,
             disable_serving_cache: false,
+            serve: ServeConfig::default(),
+            serve_direct: false,
         }
     }
 
@@ -111,45 +130,6 @@ impl RunConfig {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
-    }
-}
-
-/// Cached bank-installed serving parameters + the generation snapshot they
-/// were built from.  While the snapshot matches, `serve_request` reuses the
-/// cached θ outright (no clone, no head surgery, and — via the session's
-/// literal cache — no re-marshal).
-struct ServingCache {
-    params: Option<Params>,
-    src_id: u64,
-    src_gen: u64,
-    cwr_gen: u64,
-    scenario: usize,
-    /// scratch: live-scenario classes excluded from the bank install.
-    except: BitSet,
-    rebuilds: u64,
-    hits: u64,
-}
-
-impl ServingCache {
-    fn new(classes: usize) -> ServingCache {
-        ServingCache {
-            params: None,
-            src_id: 0,
-            src_gen: 0,
-            cwr_gen: 0,
-            scenario: usize::MAX,
-            except: BitSet::new(classes),
-            rebuilds: 0,
-            hits: 0,
-        }
-    }
-
-    fn is_valid(&self, src: &Params, cwr: &Cwr, scenario: usize) -> bool {
-        self.params.is_some()
-            && self.src_id == src.id()
-            && self.src_gen == src.generation()
-            && self.cwr_gen == cwr.generation()
-            && self.scenario == scenario
     }
 }
 
@@ -170,7 +150,7 @@ pub struct Simulation<'rt> {
     val_pool: ValPool,
     val_x: Vec<f32>,
     val_y: Vec<i32>,
-    serving: ServingCache,
+    engine: ServeEngine,
     aug_a: Vec<f32>,
     aug_b: Vec<f32>,
     last_energy_score: Option<f64>,
@@ -258,7 +238,13 @@ impl<'rt> Simulation<'rt> {
         report.seed = cfg.seed;
 
         let val_pool = ValPool::new(sess.m.d, VAL_KEEP);
-        let serving = ServingCache::new(sess.m.classes);
+        let engine = ServeEngine::new(
+            &sess.m,
+            &cfg.device,
+            &cfg.serve,
+            cfg.serve_direct,
+            cfg.disable_serving_cache,
+        );
         Ok(Simulation {
             cfg,
             sess,
@@ -275,7 +261,7 @@ impl<'rt> Simulation<'rt> {
             val_pool,
             val_x: Vec::new(),
             val_y: Vec::new(),
-            serving,
+            engine,
             aug_a: Vec::new(),
             aug_b: Vec::new(),
             last_energy_score: None,
@@ -296,6 +282,23 @@ impl<'rt> Simulation<'rt> {
 
         let events = std::mem::take(&mut self.stream.events);
         for ev in &events {
+            // serve any batch whose coalescing window expired before this
+            // event (keeps service order aligned with virtual time).
+            let served = self.engine.pump(
+                ev.t,
+                &self.sess,
+                &self.params,
+                &self.cwr,
+                &self.schedule.scenarios,
+            )?;
+            if !served.is_empty() {
+                self.absorb_served(
+                    served,
+                    &mut trained_classes,
+                    &mut reinit_done,
+                    &mut probe_pending,
+                )?;
+            }
             match ev.kind {
                 EventKind::TrainBatch => {
                     // oracle ablation: take scenario boundaries from the
@@ -359,34 +362,111 @@ impl<'rt> Simulation<'rt> {
                     buffer.push((x, y, ev.scenario));
 
                     if self.tune.should_trigger(buffer.len()) {
-                        self.run_round(
-                            ev.t,
-                            ev.scenario,
-                            &mut buffer,
-                            &mut trained_classes,
-                            &mut total_iters,
-                            &mut first_round,
-                        )?;
+                        // tune-vs-serve arbitration: under deep serving
+                        // backlog the scheduler defers the round (bounded
+                        // by its starvation cap) and feeds LazyTune the
+                        // real queue depth.
+                        let backlog = self.engine.queue_depth();
+                        match self.engine.scheduler_mut().consider_round(backlog) {
+                            RoundDecision::Defer => {
+                                self.tune.on_queue_depth(backlog);
+                            }
+                            RoundDecision::Proceed => {
+                                // pending requests were admitted before the
+                                // round: serve them first, then occupy the
+                                // device for the round's ledger time.
+                                let served = self.engine.drain(
+                                    ev.t,
+                                    &self.sess,
+                                    &self.params,
+                                    &self.cwr,
+                                    &self.schedule.scenarios,
+                                )?;
+                                if !served.is_empty() {
+                                    self.absorb_served(
+                                        served,
+                                        &mut trained_classes,
+                                        &mut reinit_done,
+                                        &mut probe_pending,
+                                    )?;
+                                }
+                                let ledger_s = self.book.breakdown.total_s();
+                                self.run_round(
+                                    ev.t,
+                                    ev.scenario,
+                                    &mut buffer,
+                                    &mut trained_classes,
+                                    &mut total_iters,
+                                    &mut first_round,
+                                )?;
+                                let round_s =
+                                    self.book.breakdown.total_s() - ledger_s;
+                                self.engine
+                                    .scheduler_mut()
+                                    .on_round(ev.t, round_s);
+                            }
+                        }
                     }
                 }
                 EventKind::Inference => {
-                    self.serve_request(ev.t, ev.scenario, buffer.len())?;
+                    // draw the request's test rows at arrival (world RNG
+                    // stays in event order) and hand it to the engine.
+                    let rows = self.engine.rows_per_request();
+                    let (x, y) = self.schedule.world.batch(
+                        rows,
+                        ev.scenario,
+                        &self.schedule.scenarios[ev.scenario].seen,
+                    );
+                    let req = QueuedRequest {
+                        arrival_t: ev.t,
+                        deadline_t: self.engine.deadline(ev.t),
+                        scenario: ev.scenario,
+                        stale_batches: buffer.len(),
+                        x,
+                        y,
+                        rows,
+                    };
+                    let served = self.engine.submit(
+                        req,
+                        &self.sess,
+                        &self.params,
+                        &self.cwr,
+                        &self.schedule.scenarios,
+                    )?;
                     self.tune.on_inference();
-                    // scenario-change detection from the request stream
-                    if !self.cfg.oracle_change_detection && self.detect_change()? {
-                        self.report.scenario_changes_detected += 1;
-                        self.tune.on_scenario_change();
-                        self.cwr.consolidate_set(
-                            &self.sess.m,
-                            &self.params,
-                            &trained_classes,
-                        );
-                        trained_classes.clear();
-                        reinit_done.iter_mut().for_each(|r| *r = false);
-                        probe_pending = true;
-                    }
+                    self.absorb_served(
+                        served,
+                        &mut trained_classes,
+                        &mut reinit_done,
+                        &mut probe_pending,
+                    )?;
                 }
             }
+        }
+        // serve everything still queued at the end of the stream: batches
+        // already past their window flush at their due time, the rest at
+        // the horizon.
+        let mut served = self.engine.pump(
+            self.stream.horizon,
+            &self.sess,
+            &self.params,
+            &self.cwr,
+            &self.schedule.scenarios,
+        )?;
+        served.extend(self.engine.drain(
+            self.stream.horizon,
+            &self.sess,
+            &self.params,
+            &self.cwr,
+            &self.schedule.scenarios,
+        )?);
+        if !served.is_empty() {
+            self.absorb_served(
+                served,
+                &mut trained_classes,
+                &mut reinit_done,
+                &mut probe_pending,
+            )?;
         }
         // flush any remaining buffered data as a final round
         if !buffer.is_empty() {
@@ -418,8 +498,20 @@ impl<'rt> Simulation<'rt> {
         self.report.wall_exec_s = wall.elapsed().as_secs_f64();
         self.report.theta_marshals = self.sess.theta_marshal_count();
         self.report.theta_cache_hits = self.sess.theta_cache_hit_count();
-        self.report.serving_rebuilds = self.serving.rebuilds;
-        self.report.serving_hits = self.serving.hits;
+        self.report.serving_rebuilds = self.engine.serving_rebuilds();
+        self.report.serving_hits = self.engine.serving_hits();
+        let lat = self.engine.latency_summary();
+        self.report.latency_p50_ms = lat.p50_ms;
+        self.report.latency_p95_ms = lat.p95_ms;
+        self.report.latency_p99_ms = lat.p99_ms;
+        self.report.latency_mean_ms = lat.mean_ms;
+        self.report.latency_max_ms = lat.max_ms;
+        self.report.slo_ms = self.cfg.serve.slo_ms;
+        self.report.slo_violations = lat.violations;
+        self.report.serve_executes = self.engine.executes();
+        self.report.avg_batch_requests = self.engine.avg_batch_requests();
+        self.report.peak_queue_depth = self.engine.peak_queue_depth() as u64;
+        self.report.rounds_deferred = self.engine.scheduler().rounds_deferred();
         self.report.finish();
         Ok(self.report)
     }
@@ -544,67 +636,40 @@ impl<'rt> Simulation<'rt> {
         }
     }
 
-    /// Serve one inference request: a test draw over the classes present in
-    /// the deployment environment so far (the CORe50 protocol evaluates on
-    /// encountered objects), under the active scenario's transform.
-    fn serve_request(&mut self, t: f64, scenario: usize, stale: usize) -> Result<()> {
-        let (x, y) = self.schedule.world.batch(
-            self.sess.m.batch_infer,
-            scenario,
-            &self.schedule.scenarios[scenario].seen,
-        );
-        // serve with the consolidated head for past classes, keeping the
-        // live training rows for classes of the current scenario.  The
-        // bank-installed θ is cached: requests between parameter/bank
-        // changes reuse it with zero copies.
-        let cache_ok = !self.cfg.disable_serving_cache
-            && self.serving.is_valid(&self.params, &self.cwr, scenario);
-        if cache_ok {
-            self.serving.hits += 1;
-        } else {
-            self.serving.rebuilds += 1;
-            if self.serving.params.is_none() {
-                // first request: allocate the slot (keeps its id for good)
-                self.serving.params = Some(self.params.clone());
-            } else {
-                self.serving.params.as_mut().unwrap().copy_from(&self.params);
+    /// Absorb requests the serving engine completed, in service order:
+    /// record them and run scenario-change detection on their energy
+    /// scores (the request stream is the detector's only signal).
+    fn absorb_served(
+        &mut self,
+        served: Vec<ServedRequest>,
+        trained_classes: &mut BitSet,
+        reinit_done: &mut [bool],
+        probe_pending: &mut bool,
+    ) -> Result<()> {
+        for s in served {
+            self.report.requests.push(RequestRecord {
+                t: s.arrival_t,
+                scenario: s.scenario,
+                accuracy: s.accuracy,
+                stale_batches: s.stale_batches,
+                latency_s: s.latency_s,
+                batch_requests: s.batch_requests,
+                queue_depth: s.queue_depth,
+            });
+            self.last_energy_score = Some(s.energy_score);
+            if !self.cfg.oracle_change_detection && self.detect_change()? {
+                self.report.scenario_changes_detected += 1;
+                self.tune.on_scenario_change();
+                self.cwr.consolidate_set(
+                    &self.sess.m,
+                    &self.params,
+                    trained_classes,
+                );
+                trained_classes.clear();
+                reinit_done.iter_mut().for_each(|r| *r = false);
+                *probe_pending = true;
             }
-            self.serving
-                .except
-                .assign(&self.schedule.scenarios[scenario].classes);
-            let p = self.serving.params.as_mut().unwrap();
-            self.cwr.install_except(&self.sess.m, p, &self.serving.except);
-            self.serving.src_id = self.params.id();
-            self.serving.src_gen = self.params.generation();
-            self.serving.cwr_gen = self.cwr.generation();
-            self.serving.scenario = scenario;
         }
-        let serving = self.serving.params.as_ref().unwrap();
-        // ONE artifact execution serves both the prediction and the OOD
-        // energy score (§Perf L3: halves the request-path cost).
-        let logits = self.sess.infer(serving, &x)?;
-        let pred = logits.argmax_rows();
-        let correct = pred
-            .iter()
-            .zip(&y)
-            .filter(|(p, t)| **p == **t as usize)
-            .count();
-        let acc = correct as f32 / y.len() as f32;
-        let lse = logits.logsumexp_rows();
-        let mean_score =
-            lse.iter().map(|&s| -s as f64).sum::<f64>() / lse.len() as f64;
-        self.last_energy_score = Some(mean_score);
-        if std::env::var_os("ETUNER_DEBUG").is_some() {
-            eprintln!(
-                "[dbg] t={t:.0} scen={scenario} acc={acc:.3} energy={mean_score:.3}"
-            );
-        }
-        self.report.requests.push(RequestRecord {
-            t,
-            scenario,
-            accuracy: acc,
-            stale_batches: stale,
-        });
         Ok(())
     }
 

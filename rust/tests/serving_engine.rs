@@ -1,0 +1,217 @@
+//! Serving-engine regression tests: the batcher's pad/scatter round-trip,
+//! and the determinism contract — with a zero batch window the engine's
+//! reports are bit-identical to the direct (pre-engine) request path,
+//! while a real window actually coalesces requests.  Host-side tests run
+//! everywhere; artifact tests need `make artifacts`.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::model::ModelSession;
+use etuner::runtime::Runtime;
+use etuner::serve::{batcher::span_rows, AdaptiveBatcher, QueuedRequest};
+use etuner::sim::{RunConfig, Simulation};
+use etuner::testkit;
+
+macro_rules! require {
+    () => {
+        if !testkit::artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 80;
+    c
+}
+
+// ---------------------------------------------------------------------------
+// host-side: pad/scatter round-trip (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// A deterministic row-wise "model": logits[c] = sum_i x[i] * ((i + c) % 5).
+fn fake_logits(x: &[f32], rows: usize, d: usize, classes: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * classes];
+    for r in 0..rows {
+        for c in 0..classes {
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += x[r * d + i] * ((i + c) % 5) as f32;
+            }
+            out[r * classes + c] = acc;
+        }
+    }
+    out
+}
+
+fn argmax_rows(logits: &[f32], rows: usize, classes: usize) -> Vec<usize> {
+    (0..rows)
+        .map(|r| {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[test]
+fn padded_batch_predictions_match_single_executes() {
+    let (d, classes, capacity) = (16, 7, 32);
+    let b = AdaptiveBatcher::new(capacity, 10.0, d);
+    let reqs: Vec<QueuedRequest> = (0..5)
+        .map(|i| {
+            let rows = 2 * i + 1; // 1+3+5+7+9 = 25 rows < 32
+            QueuedRequest {
+                arrival_t: i as f64,
+                deadline_t: i as f64 + 1.0,
+                scenario: 2,
+                stale_batches: 0,
+                x: (0..rows * d)
+                    .map(|k| ((i * 31 + k * 17) % 13) as f32 - 6.0)
+                    .collect(),
+                y: vec![0; rows],
+                rows,
+            }
+        })
+        .collect();
+
+    // one padded execute over all five requests
+    let packed = b.pack(&reqs);
+    assert_eq!(packed.rows_used, 25);
+    let logits = fake_logits(&packed.x, capacity, d, classes);
+    let preds = argmax_rows(&logits, capacity, classes);
+
+    // vs. each request executed alone in its own padded batch
+    for (req, span) in reqs.iter().zip(&packed.spans) {
+        let alone = b.pack(std::slice::from_ref(req));
+        let alone_logits = fake_logits(&alone.x, capacity, d, classes);
+        let alone_preds = argmax_rows(&alone_logits, capacity, classes);
+        assert_eq!(
+            &preds[span.row0..span.row0 + span.rows],
+            &alone_preds[..req.rows],
+            "request {} predictions diverged in the shared batch",
+            span.index
+        );
+        // scatter returns exactly the request's logit rows
+        let got = span_rows(&logits, classes, span);
+        let want = &alone_logits[..req.rows * classes];
+        assert_eq!(got, want);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: end-to-end determinism + real coalescing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn window_zero_is_bit_identical_to_direct_path() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+
+    // engine path with a degenerate window (the default config)
+    let mut engine_cfg = quick(21);
+    engine_cfg.serve.batch_window_s = 0.0;
+    let engine = Simulation::new(&rt, engine_cfg).unwrap().run().unwrap();
+
+    // direct path: the pre-engine per-request serve, no queue/batcher
+    let mut direct_cfg = quick(21);
+    direct_cfg.serve_direct = true;
+    let direct = Simulation::new(&rt, direct_cfg).unwrap().run().unwrap();
+
+    assert_eq!(
+        engine.fingerprint(),
+        direct.fingerprint(),
+        "batch-window-0 diverged from the unbatched path:\n  engine: {}\n  direct: {}",
+        engine.summary(),
+        direct.summary()
+    );
+    // both modes execute once per request and never coalesce
+    for r in [&engine, &direct] {
+        assert_eq!(r.serve_executes, r.requests.len() as u64);
+        assert!((r.avg_batch_requests - 1.0).abs() < 1e-12);
+        assert_eq!(r.rounds_deferred, 0, "empty queue must never defer");
+        assert!(r.latency_p99_ms >= r.latency_p50_ms);
+        assert!(r.requests.iter().all(|q| q.batch_requests == 1));
+    }
+}
+
+#[test]
+fn real_window_coalesces_requests_deterministically() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let mut cfg = quick(5);
+    cfg.serve.batch_window_s = 120.0;
+    // SLO far beyond the window so the coalescing window (not the
+    // deadline-aware early flush) decides when batches close
+    cfg.serve.slo_ms = 300_000.0;
+
+    let a = Simulation::new(&rt, cfg.clone()).unwrap().run().unwrap();
+    let b = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(
+        a.fingerprint(),
+        b.fingerprint(),
+        "batched serving is not seed-deterministic"
+    );
+
+    // every request is served exactly once, in fewer executes
+    assert_eq!(a.requests.len(), 80);
+    assert!(
+        a.serve_executes < a.requests.len() as u64,
+        "no batching happened: {} executes for {} requests",
+        a.serve_executes,
+        a.requests.len()
+    );
+    assert!(a.avg_batch_requests > 1.0);
+    assert!(a.requests.iter().any(|q| q.batch_requests > 1));
+    // waiting for the window shows up as latency
+    assert!(a.latency_p99_ms > 0.0);
+    assert!(a.latency_max_ms >= a.latency_p99_ms);
+}
+
+#[test]
+fn engine_batch_matches_single_requests_through_real_session() {
+    require!();
+    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let p = sess.theta0().unwrap();
+    let d = sess.m.d;
+    let rows = sess.m.batch_infer / 4;
+    let b = AdaptiveBatcher::new(sess.m.batch_infer, 10.0, d);
+
+    let reqs: Vec<QueuedRequest> = (0..3)
+        .map(|i| QueuedRequest {
+            arrival_t: i as f64,
+            deadline_t: i as f64 + 1.0,
+            scenario: 1,
+            stale_batches: 0,
+            x: (0..rows * d).map(|k| ((i + k) % 9) as f32 * 0.1 - 0.4).collect(),
+            y: vec![0; rows],
+            rows,
+        })
+        .collect();
+
+    let packed = b.pack(&reqs);
+    let logits = sess.infer(&p, &packed.x).unwrap();
+    let preds = logits.argmax_rows();
+
+    for (req, span) in reqs.iter().zip(&packed.spans) {
+        let alone = b.pack(std::slice::from_ref(req));
+        let alone_logits = sess.infer(&p, &alone.x).unwrap();
+        let alone_preds = alone_logits.argmax_rows();
+        assert_eq!(
+            &preds[span.row0..span.row0 + span.rows],
+            &alone_preds[..req.rows],
+            "request {} predictions changed when batched through the artifact",
+            span.index
+        );
+    }
+}
