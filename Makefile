@@ -24,8 +24,12 @@ build:
 test:
 	cd rust && cargo build --release && cargo test -q
 
-# CI gate on the stub backend (no artifacts, no xla toolchain needed):
-# everything must build, unit-test, stay rustfmt-clean and clippy-clean.
+# CI gate (no artifacts, no xla toolchain needed): everything must build,
+# unit-test, stay rustfmt-clean and clippy-clean.  Since the Backend
+# refactor `cargo test` includes the refcpu END-TO-END suite — full
+# simulations that really execute models (tests/backend_parity.rs,
+# tests/refcpu_kernels.rs, the un-gated integration suites) — so CI
+# verifies learning semantics, not just marshalling and caching.
 ci:
 	cd rust && cargo build && cargo test -q
 	cd rust && cargo fmt --check
@@ -37,6 +41,9 @@ bench:
 
 # Archive the current bench run as this PR's snapshot so the perf
 # trajectory is tracked mechanically (see bench_history/README.md).
+# The snapshot now includes the refcpu serving-throughput and model
+# series, which execute real models on any machine — so cross-PR numbers
+# are comparable even in artifact-less environments.
 bench-snapshot:
 	@test -f BENCH_hotpath.json || { echo "run \`make bench\` first"; exit 1; }
 	cp BENCH_hotpath.json bench_history/PR$(PR)_hotpath.json

@@ -10,7 +10,7 @@
 use etuner::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+    let be = BackendSpec::auto(etuner::testkit::artifacts_dir()).create()?;
     let methods = [
         ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
         ("LazyTune", TunePolicyKind::LazyTune, FreezePolicyKind::None),
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
             .with_policies(tune, freeze);
         cfg.n_requests = 300;
         println!("=== {name} ===");
-        let r = Simulation::new(&rt, cfg)?.run()?;
+        let r = Simulation::new(be.as_ref(), cfg)?.run()?;
         // loss/accuracy curve: one line per fine-tuning round
         println!("round  t        scen  merged  frozen  val_acc");
         for (i, rr) in r.round_log.iter().enumerate() {

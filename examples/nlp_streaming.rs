@@ -8,7 +8,7 @@
 use etuner::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+    let be = BackendSpec::auto(etuner::testkit::artifacts_dir()).create()?;
 
     println!("-- fully supervised (Table IV shape) --");
     for (name, tune, freeze) in [
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = RunConfig::quickstart("bert", Benchmark::News20)
             .with_policies(tune, freeze);
         cfg.n_requests = 200;
-        let r = Simulation::new(&rt, cfg)?.run()?;
+        let r = Simulation::new(be.as_ref(), cfg)?.run()?;
         println!(
             "  {name:<10} acc {:.2}%  time {:.1}min  energy {:.2}Wh",
             r.avg_inference_accuracy * 100.0,
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             .with_policies(tune, freeze);
         cfg.labeled_fraction = Some(0.1);
         cfg.n_requests = 200;
-        let r = Simulation::new(&rt, cfg)?.run()?;
+        let r = Simulation::new(be.as_ref(), cfg)?.run()?;
         println!(
             "  {name:<10} acc {:.2}%  energy {:.2}Wh",
             r.avg_inference_accuracy * 100.0,

@@ -2,17 +2,19 @@
 //! ETuner (LazyTune + SimFreeze), and compare against immediate
 //! fine-tuning.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
 //! This exercises the full stack: the rust coordinator triggers fine-tuning
-//! rounds, every train/infer/CKA step executes an AOT-compiled JAX/Pallas
-//! artifact through PJRT, and costs are charged to the Jetson-scale device
-//! model.
+//! rounds, every train/infer/CKA step executes through the auto-selected
+//! backend (the AOT-compiled JAX/Pallas artifacts over PJRT after `make
+//! artifacts` + `--features xla`; the pure-rust reference executor
+//! otherwise — no build-time dependencies at all), and costs are charged
+//! to the Jetson-scale device model.
 
 use etuner::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+    let be = BackendSpec::auto(etuner::testkit::artifacts_dir()).create()?;
 
     // Immediate fine-tuning baseline: a round per arriving batch.
     let immediate = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
@@ -22,11 +24,11 @@ fn main() -> anyhow::Result<()> {
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
 
     println!("running immediate fine-tuning baseline ...");
-    let base = Simulation::new(&rt, immediate)?.run()?;
+    let base = Simulation::new(be.as_ref(), immediate)?.run()?;
     println!("  {}", base.summary());
 
     println!("running ETuner ...");
-    let ours = Simulation::new(&rt, etuner)?.run()?;
+    let ours = Simulation::new(be.as_ref(), etuner)?.run()?;
     println!("  {}", ours.summary());
 
     let dt = 1.0 - ours.energy.total_s() / base.energy.total_s();

@@ -12,7 +12,7 @@
 use etuner::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(etuner::testkit::artifacts_dir())?;
+    let be = BackendSpec::auto(etuner::testkit::artifacts_dir()).create()?;
     for (name, tune, freeze) in [
         ("Immed.", TunePolicyKind::Immediate, FreezePolicyKind::None),
         ("ETuner", TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
             .with_policies(tune, freeze);
         cfg.infer_arrival = ArrivalKind::Trace; // bursty interaction sessions
         cfg.n_requests = 300;
-        let r = Simulation::new(&rt, cfg)?.run()?;
+        let r = Simulation::new(be.as_ref(), cfg)?.run()?;
         let stale: usize = r.requests.iter().map(|q| q.stale_batches).sum();
         let burst_acc: f64 = {
             // accuracy inside bursts (requests < 30 virtual seconds apart)

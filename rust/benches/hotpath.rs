@@ -1,23 +1,26 @@
 //! Hot-path microbenchmarks (dependency-free harness; criterion is not
 //! available offline).  These are the §Perf L3 numbers in EXPERIMENTS.md:
 //!
-//!   * train-step latency          (PJRT execute + θ marshalling)
+//!   * train-step latency          (execute + θ marshalling)
 //!   * inference latency           (the request-path cost), with the
-//!     session θ-literal cache warm vs force-invalidated
+//!     session θ-buffer cache warm vs force-invalidated
 //!   * CKA probe                   (SimFreeze's periodic overhead)
-//!   * θ literal marshalling alone (host-side copy cost)
+//!   * θ marshal round-trip        (host-side copy cost)
 //!   * serving-engine throughput   (cross-request batching vs one execute
-//!     per request — stub-safe: a host-side row-wise executor stands in
-//!     for the fixed-shape artifact, so this series runs without
-//!     artifacts and tracks the batcher's amortization win)
+//!     per request), twice: a host-side row-wise stand-in executor (the
+//!     pre-backend series, kept for cross-PR continuity) and the **really
+//!     executing** refcpu backend
 //!   * coordinator-only components (NNLS fit, OOD observe, stream gen)
 //!
-//! Run: `make bench` / `cargo bench --bench hotpath`.  The serving and
-//! coordinator series run everywhere; the artifact-dependent series
-//! self-skip until `make artifacts`.  Results are also written as JSON
-//! (mean/min/max per benchmark) to `$ETUNER_BENCH_OUT` (default
-//! `BENCH_hotpath.json`) so the perf trajectory is trackable across PRs
-//! (`make bench-snapshot` archives the per-PR copy under `bench_history/`).
+//! Run: `make bench` / `cargo bench --bench hotpath`.  The refcpu series
+//! run on every machine — no artifacts, no XLA toolchain — so CI
+//! environments regenerate *executing* bench numbers, not just host-side
+//! pack/scatter timings.  When artifacts are built, the same model series
+//! additionally run through the PJRT backend under their original labels.
+//! Results are also written as JSON (mean/min/max per benchmark) to
+//! `$ETUNER_BENCH_OUT` (default `BENCH_hotpath.json`) so the perf
+//! trajectory is trackable across PRs (`make bench-snapshot` archives the
+//! per-PR copy under `bench_history/`).
 
 use std::collections::BTreeMap;
 
@@ -29,9 +32,113 @@ use etuner::data::stream::Stream;
 use etuner::json::Json;
 use etuner::model::ModelSession;
 use etuner::rng::Pcg32;
-use etuner::runtime::{Runtime, TensorF32};
+use etuner::runtime::Backend;
 use etuner::serve::{batcher::span_rows, AdaptiveBatcher, QueuedRequest, RequestQueue};
 use etuner::testkit::{self, bench};
+
+/// Train/infer/probe series for one backend; `tag` prefixes the labels
+/// ("" keeps the historical pjrt label namespace).
+fn model_series(
+    be: &dyn Backend,
+    tag: &str,
+    rng: &mut Pcg32,
+    report: &mut dyn FnMut(&str, (f64, f64, f64)),
+) -> anyhow::Result<()> {
+    for model in ["res50", "mbv2", "deit", "bert"] {
+        let sess = ModelSession::new(be, model)?;
+        let mut p = sess.theta0()?;
+        let d = sess.m.d;
+        let x: Vec<f32> =
+            (0..sess.m.batch_train * d).map(|_| rng.normal()).collect();
+        let y: Vec<i32> =
+            (0..sess.m.batch_train).map(|_| (rng.next_u32() % 4) as i32).collect();
+        let fs = FreezeState::none(sess.m.units);
+        report(
+            &format!("{tag}{model}: train_step (k=0)"),
+            bench(3, 20, || {
+                sess.train_step(&mut p, &x, &y, &fs).unwrap();
+            }),
+        );
+        // prefix-truncated variant: the backprop saving under freezing
+        let mut fs_k = FreezeState::none(sess.m.units);
+        for u in 0..sess.m.units - 2 {
+            fs_k.frozen[u] = true;
+        }
+        report(
+            &format!("{tag}{model}: train_step (k=max)"),
+            bench(3, 20, || {
+                sess.train_step(&mut p, &x, &y, &fs_k).unwrap();
+            }),
+        );
+        let xi: Vec<f32> =
+            (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
+        // θ unchanged between calls: after the first marshal every infer
+        // reuses the session's cached θ buffer (the serving hot path).
+        report(
+            &format!("{tag}{model}: infer warm θ-cache (b {})", sess.m.batch_infer),
+            bench(3, 20, || {
+                sess.infer(&p, &xi).unwrap();
+            }),
+        );
+        // force-invalidated: bump the parameter generation each call so θ
+        // is re-marshalled every time (the seed's per-request cost).
+        report(
+            &format!("{tag}{model}: infer cold θ-cache (b {})", sess.m.batch_infer),
+            bench(3, 20, || {
+                p.theta_mut();
+                sess.infer(&p, &xi).unwrap();
+            }),
+        );
+        eprintln!(
+            "  [{tag}{model}] θ marshals {} / cache hits {}",
+            sess.theta_marshal_count(),
+            sess.theta_cache_hit_count()
+        );
+    }
+
+    // SimFreeze probe: features + per-layer CKA
+    let sess = ModelSession::new(be, "res50")?;
+    let p = sess.theta0()?;
+    let probe: Vec<f32> = (0..sess.m.batch_probe * sess.m.d)
+        .map(|_| rng.normal())
+        .collect();
+    let feats = sess.features(&p, &probe)?;
+    report(
+        &format!("{tag}res50: features probe"),
+        bench(3, 20, || {
+            sess.features(&p, &probe).unwrap();
+        }),
+    );
+    // the unprefixed (pjrt) series keeps its exact historical JSON keys
+    // so bench_history cross-PR diffs keep tracking it.
+    let cka_label = if tag.is_empty() {
+        "res50: cka one layer (pallas)".to_string()
+    } else {
+        format!("{tag}res50: cka one layer")
+    };
+    report(
+        &cka_label,
+        bench(3, 20, || {
+            sess.cka_layer(&feats, &feats, 4).unwrap();
+        }),
+    );
+
+    // θ marshalling alone (no execute): host -> backend buffer -> host
+    let theta = p.theta().to_vec();
+    let marshal_label = if tag.is_empty() {
+        "theta literal roundtrip (res50)".to_string()
+    } else {
+        format!("{tag}theta marshal roundtrip (res50)")
+    };
+    report(
+        &marshal_label,
+        bench(3, 50, || {
+            let v = be.marshal_f32(&theta, &[theta.len()]).unwrap();
+            let _ = v.read_f32().unwrap();
+        }),
+    );
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     println!("{:<38} {:>9} {:>9} {:>9}", "benchmark", "mean_ms", "min_ms", "max_ms");
@@ -43,7 +150,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Pcg32::new(42, 1);
 
-    // ---- serving engine: cross-request batching throughput (stub-safe) ----
+    // ---- serving engine: cross-request batching throughput (host-side) ----
     // A fixed-shape execute computes all `CAPACITY` rows whether they hold
     // one 8-row request or eight, so batched serving amortizes the
     // full-batch cost; the unbatched series pays it once per request.
@@ -138,99 +245,78 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(sink);
     }
 
-    // ---- artifact-dependent series (skip until `make artifacts`) ----
-    if testkit::artifacts_available() {
-        let rt = Runtime::load(testkit::artifacts_dir())?;
-        for model in ["res50", "mbv2", "deit", "bert"] {
-            let sess = ModelSession::new(&rt, model)?;
-            let mut p = sess.theta0()?;
-            let d = sess.m.d;
-            let x: Vec<f32> =
-                (0..sess.m.batch_train * d).map(|_| rng.normal()).collect();
-            let y: Vec<i32> =
-                (0..sess.m.batch_train).map(|_| (rng.next_u32() % 4) as i32).collect();
-            let fs = FreezeState::none(sess.m.units);
-            report(
-                &format!("{model}: train_step (k=0)"),
-                bench(3, 20, || {
-                    sess.train_step(&mut p, &x, &y, &fs).unwrap();
-                }),
-            );
-            // prefix-truncated variant: real backprop saving in the artifact
-            let mut fs_k = FreezeState::none(sess.m.units);
-            for u in 0..sess.m.units - 2 {
-                fs_k.frozen[u] = true;
-            }
-            report(
-                &format!("{model}: train_step (k=max)"),
-                bench(3, 20, || {
-                    sess.train_step(&mut p, &x, &y, &fs_k).unwrap();
-                }),
-            );
-            let xi: Vec<f32> =
-                (0..sess.m.batch_infer * d).map(|_| rng.normal()).collect();
-            // θ unchanged between calls: after the first marshal every infer
-            // reuses the session's cached θ literal (the serving hot path).
-            report(
-                &format!("{model}: infer warm θ-cache (b {})", sess.m.batch_infer),
-                bench(3, 20, || {
-                    sess.infer(&p, &xi).unwrap();
-                }),
-            );
-            // force-invalidated: bump the parameter generation each call so θ
-            // is re-marshalled every time (the seed's per-request cost).
-            report(
-                &format!("{model}: infer cold θ-cache (b {})", sess.m.batch_infer),
-                bench(3, 20, || {
-                    p.theta_mut();
-                    sess.infer(&p, &xi).unwrap();
-                }),
-            );
-            eprintln!(
-                "  [{model}] θ marshals {} / cache hits {}",
-                sess.theta_marshal_count(),
-                sess.theta_cache_hit_count()
-            );
-        }
-
-        // SimFreeze probe: features + per-layer CKA
-        let sess = ModelSession::new(&rt, "res50")?;
+    // ---- refcpu: REAL executing serving throughput ------------------------
+    // Same batched-vs-unbatched shape, but every execute is a real model
+    // forward through the reference backend — the cross-PR-comparable
+    // serving series CI can regenerate (`make bench-snapshot`).
+    let refcpu = testkit::refcpu_spec().create()?;
+    {
+        let sess = ModelSession::new(refcpu.as_ref(), "mbv2")?;
         let p = sess.theta0()?;
-        let probe: Vec<f32> = (0..sess.m.batch_probe * sess.m.d)
-            .map(|_| rng.normal())
+        let d = sess.m.d;
+        let cap = sess.m.batch_infer;
+        let rows = cap / 8;
+        const N_REQ: usize = 64;
+        let reqs: Vec<QueuedRequest> = (0..N_REQ)
+            .map(|i| QueuedRequest {
+                arrival_t: i as f64,
+                deadline_t: i as f64 + 0.25,
+                scenario: 1,
+                stale_batches: 0,
+                x: (0..rows * d).map(|_| rng.normal()).collect(),
+                y: vec![0; rows],
+                rows,
+            })
             .collect();
-        let feats = sess.features(&p, &probe)?;
+        let mut sink = 0usize;
+        let unbatched = AdaptiveBatcher::new(cap, 0.0, d);
         report(
-            "res50: features probe",
-            bench(3, 20, || {
-                sess.features(&p, &probe).unwrap();
+            &format!("serving: refcpu 1 req/exec ({N_REQ} reqs)"),
+            bench(1, 5, || {
+                let mut q = RequestQueue::new();
+                for r in &reqs {
+                    q.push(r.clone());
+                }
+                while let Some(r) = q.pop() {
+                    let packed = unbatched.pack(std::slice::from_ref(&r));
+                    let logits = sess.infer(&p, &packed.x).unwrap();
+                    sink += logits.argmax_rows().len();
+                }
             }),
         );
+        let batched = AdaptiveBatcher::new(cap, 30.0, d);
         report(
-            "res50: cka one layer (pallas)",
-            bench(3, 20, || {
-                sess.cka_layer(&feats, &feats, 4).unwrap();
+            &format!("serving: refcpu batched 8 req/exec ({N_REQ} reqs)"),
+            bench(1, 5, || {
+                let mut q = RequestQueue::new();
+                for r in &reqs {
+                    q.push(r.clone());
+                }
+                while !q.is_empty() {
+                    let batch = batched.take_batch(&mut q);
+                    let packed = batched.pack(&batch);
+                    let logits = sess.infer(&p, &packed.x).unwrap();
+                    sink += logits.argmax_rows().len();
+                }
             }),
         );
+        std::hint::black_box(sink);
+    }
 
-        // θ marshalling alone (no execute): host->literal->host
-        let theta = p.theta().to_vec();
-        report(
-            "theta literal roundtrip (res50)",
-            bench(3, 50, || {
-                let t = TensorF32::new(vec![theta.len()], theta.clone());
-                let lit = t.to_literal().unwrap();
-                let _ = TensorF32::from_literal(lit).unwrap();
-            }),
-        );
+    // ---- refcpu model series (executes everywhere, CI included) -----------
+    model_series(refcpu.as_ref(), "refcpu ", &mut rng, &mut report)?;
+
+    // ---- pjrt series under the historical labels (needs artifacts) --------
+    if let Some(pjrt) = testkit::pjrt_backend_if_available() {
+        model_series(pjrt.as_ref(), "", &mut rng, &mut report)?;
     } else {
         eprintln!(
-            "artifacts not built; skipping artifact-dependent series \
-             (run `make artifacts`)"
+            "pjrt backend unavailable (artifacts not built or no xla \
+             feature); skipping the pjrt series"
         );
     }
 
-    // ---- coordinator-only components (stub-safe) ----
+    // ---- coordinator-only components (backend-free) ----
     let pts: Vec<(f64, f64)> =
         (1..40).map(|k| (k as f64, 0.8 - 0.5 / k as f64)).collect();
     report(

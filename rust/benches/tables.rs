@@ -8,15 +8,11 @@
 //! `ETUNER_JOBS=N` to bound the sweep worker count (default: all cores).
 
 use etuner::repro::experiments::{self, ReproOpts};
-use etuner::runtime::Runtime;
+use etuner::runtime::Backend;
 use etuner::sim::ParallelSweeper;
 use etuner::testkit;
 
 fn main() -> anyhow::Result<()> {
-    if !testkit::artifacts_available() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        return Ok(());
-    }
     let full = std::env::var_os("ETUNER_BENCH_FULL").is_some();
     let opts = ReproOpts {
         seeds: if full { vec![1, 2] } else { vec![1] },
@@ -27,8 +23,10 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|j| j.parse().ok())
         .unwrap_or_else(ParallelSweeper::default_jobs);
-    let rt = Runtime::load(testkit::artifacts_dir())?;
-    let sw = ParallelSweeper::new(rt, jobs);
+    // auto backend: pjrt over the artifacts when executable here, else
+    // the pure-rust reference executor (tables regenerate on any machine).
+    let sw = ParallelSweeper::from_dir(testkit::artifacts_dir(), jobs)?;
+    eprintln!("[tables] backend: {}", sw.backend().name());
     let t0 = std::time::Instant::now();
     for (id, desc) in experiments::list() {
         if id == "fig9" || id == "tab2" || id == "fig10" {

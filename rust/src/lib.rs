@@ -13,16 +13,19 @@
 //!   self-representational similarity has stabilized, and selectively
 //!   unfreezes them on scenario changes.
 //!
-//! Compute (model fwd/bwd, CKA probes) is **never** implemented in rust:
-//! the python build step (`make artifacts`) AOT-lowers JAX + Pallas programs
-//! to HLO text, and [`runtime`] executes them through the PJRT C API.
-//! After artifacts are built the binary is self-contained.
+//! Compute flows through the object-safe [`runtime::Backend`] trait with
+//! two interchangeable executors: the python build step (`make artifacts`)
+//! AOT-lowers JAX + Pallas programs to HLO text which
+//! [`runtime::PjrtBackend`] executes through the PJRT C API, while
+//! [`runtime::RefCpuBackend`] implements the same segment semantics in
+//! pure rust — so full end-to-end runs (and CI) work on machines with no
+//! XLA toolchain and no artifacts at all.
 //!
 //! ```no_run
 //! use etuner::prelude::*;
-//! let rt = Runtime::load("artifacts").unwrap();
+//! let be = BackendSpec::auto("artifacts").create().unwrap();
 //! let cfg = RunConfig::quickstart("res50", Benchmark::Nc);
-//! let report = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+//! let report = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
 //! println!("avg accuracy {:.2}%  energy {:.1} Wh",
 //!          report.avg_inference_accuracy * 100.0,
 //!          report.energy.total_wh());
@@ -51,7 +54,7 @@ pub mod prelude {
     pub use crate::data::arrival::ArrivalKind;
     pub use crate::data::benchmarks::Benchmark;
     pub use crate::metrics::Report;
-    pub use crate::runtime::Runtime;
+    pub use crate::runtime::{Backend, BackendKind, BackendSpec, PjrtBackend, RefCpuBackend};
     pub use crate::serve::ServeConfig;
     pub use crate::sim::{ParallelSweeper, RunConfig, Simulation};
 }

@@ -4,9 +4,17 @@
 //! etuner list                           # experiments + models
 //! etuner run --model res50 --benchmark nc [--tune lazytune]
 //!            [--freeze simfreeze] [--requests 200] [--seed 1]
+//!            [--backend pjrt|refcpu|auto]
 //! etuner repro <id|all> [--seeds 1,2] [--requests 200] [--out results]
 //!              [--jobs N]               # N sweep worker threads
+//!              [--backend pjrt|refcpu|auto]
 //! ```
+//!
+//! `--backend` selects the execution backend: `pjrt` runs the AOT HLO
+//! artifacts (needs `make artifacts` + the `xla` cargo feature), `refcpu`
+//! runs the pure-Rust reference executor (works on any machine, with or
+//! without artifacts), and `auto` (the default) prefers pjrt when it can
+//! actually execute here.
 
 use anyhow::{bail, Context, Result};
 
@@ -14,9 +22,18 @@ use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
-use etuner::runtime::Runtime;
+use etuner::runtime::{Backend, BackendKind, BackendSpec};
 use etuner::sim::{ParallelSweeper, RunConfig, Simulation};
 use etuner::testkit;
+
+/// `--backend` → construction spec over the artifact directory.
+fn backend_spec(args: &[String]) -> Result<BackendSpec> {
+    let kind = match opt(args, "--backend") {
+        Some(s) => BackendKind::parse(s)?,
+        None => BackendKind::Auto,
+    };
+    Ok(BackendSpec::new(kind, testkit::artifacts_dir()))
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -42,12 +59,19 @@ fn main() -> Result<()> {
                        [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
                        [--quant] [--labeled FRAC] [--cka-th TH]\n\
                        [--batch-window S] [--slo-ms MS] [--no-batching]\n\
+                       [--backend pjrt|refcpu|auto]\n\
                        --batch-window S coalesces requests for up to S virtual\n\
                        seconds per padded execute (0 = off); --slo-ms sets the\n\
                        latency SLO; --no-batching forces the direct per-request\n\
                        path (bit-identical reports to --batch-window 0)\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
-                       --jobs N runs N seed-sweep workers (default: all cores)"
+                       [--backend pjrt|refcpu|auto]\n\
+                       --jobs N runs N seed-sweep workers (default: all cores)\n\
+                 --backend: pjrt executes the AOT artifacts (make artifacts +\n\
+                       --features xla); refcpu is the pure-rust reference\n\
+                       executor (no artifacts needed — uses the built-in model\n\
+                       family, bit-deterministic across --jobs); auto (default)\n\
+                       prefers pjrt when it can execute here"
             );
             Ok(())
         }
@@ -139,8 +163,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         };
     }
 
-    let rt = Runtime::load(testkit::artifacts_dir())?;
-    let report = Simulation::new(&rt, cfg)?.run()?;
+    let be = backend_spec(args)?.create()?;
+    eprintln!("[etuner] backend: {}", be.name());
+    let report = Simulation::new(be.as_ref(), cfg)?.run()?;
     println!("{}", report.summary());
     println!(
         "  breakdown: init {:.1}s / loadsave {:.1}s / compute {:.1}s; \
@@ -192,7 +217,7 @@ fn cmd_repro(args: &[String]) -> Result<()> {
         Some(j) => j.parse().context("bad --jobs")?,
         None => ParallelSweeper::default_jobs(),
     };
-    let rt = Runtime::load(testkit::artifacts_dir())?;
-    let sw = ParallelSweeper::new(rt, jobs);
+    let sw = ParallelSweeper::new(backend_spec(args)?, jobs)?;
+    eprintln!("[etuner] backend: {}", sw.backend().name());
     experiments::run_experiment(&sw, id, &opts)
 }

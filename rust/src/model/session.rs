@@ -1,19 +1,24 @@
-//! Typed session over one deployed model: binds the runtime artifacts to
-//! the flat parameter vector and exposes the operations the coordinator
-//! needs (train step, inference, CKA probe, SimSiam step).
+//! Typed session over one deployed model: binds a [`Backend`] to the flat
+//! parameter vector and exposes the operations the coordinator needs
+//! (train step, inference, CKA probe, SimSiam step).
 //!
-//! # Zero-copy θ boundary
+//! The session is backend-agnostic: it talks only to the object-safe
+//! [`Backend`] trait, so the same coordinator code drives PJRT artifacts
+//! and the pure-Rust reference executor.
+//!
+//! # Zero-copy θ boundary (adopt/donate)
 //!
 //! θ is by far the largest tensor crossing the execute boundary; the seed
 //! implementation cloned it into a fresh `Vec` *and* re-marshalled it into
-//! a PJRT literal on every call.  The session now keeps a literal cache
+//! a backend buffer on every call.  The session keeps a [`Value`] cache
 //! keyed by [`Params::id`]`/`[`Params::generation`]: θ is re-marshalled
 //! only when the parameter generation changed, input batches are
 //! marshalled straight from the caller's slice (no intermediate `Vec`),
-//! and a train step's *output* θ literal is put back into the cache so
-//! consecutive train steps never round-trip θ through the host at all.
-//! `theta_marshals`/`theta_cache_hits` counters expose the behaviour to
-//! benches and regression tests.
+//! and a train step's *output* θ buffer is **adopted** back into the cache
+//! and **donated** (by reference) to the next call — consecutive train
+//! steps never round-trip θ through a re-marshal.  `theta_marshals`/
+//! `theta_cache_hits` counters expose the behaviour to benches and
+//! regression tests.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -21,37 +26,34 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::cost::flops::FreezeState;
-use crate::runtime::exec::{f32_literal, i32_literal, TensorF32};
-use crate::runtime::{ModelManifest, Runtime};
-
-#[cfg(not(feature = "xla"))]
-use crate::runtime::stub as xla;
+use crate::runtime::exec::TensorF32;
+use crate::runtime::{Backend, ModelManifest, Value};
 
 use super::params::Params;
 
-/// Soft bound on distinct `Params` instances tracked by the literal cache.
+/// Soft bound on distinct `Params` instances tracked by the value cache.
 /// A simulation touches a handful (live θ, serving θ, policy references);
 /// the cap only guards against pathological callers churning instances.
 const THETA_CACHE_CAP: usize = 16;
 
-/// A bound (runtime, model) pair.
-pub struct ModelSession<'rt> {
-    pub rt: &'rt Runtime,
+/// A bound (backend, model) pair.
+pub struct ModelSession<'b> {
+    pub be: &'b dyn Backend,
     pub m: ModelManifest,
     /// Use the 8-bit QAT train artifacts (Table VIII).
     pub quant: bool,
     pub lr: f32,
-    /// (params id) -> (generation, marshalled θ literal).
-    theta_cache: RefCell<HashMap<u64, (u64, xla::Literal)>>,
+    /// (params id) -> (generation, marshalled θ buffer).
+    theta_cache: RefCell<HashMap<u64, (u64, Value)>>,
     theta_marshals: Cell<u64>,
     theta_cache_hits: Cell<u64>,
 }
 
-impl<'rt> ModelSession<'rt> {
-    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
-        let m = rt.manifest.model(model)?.clone();
+impl<'b> ModelSession<'b> {
+    pub fn new(be: &'b dyn Backend, model: &str) -> Result<Self> {
+        let m = be.manifest().model(model)?.clone();
         Ok(ModelSession {
-            rt,
+            be,
             m,
             quant: false,
             lr: 0.05,
@@ -61,23 +63,23 @@ impl<'rt> ModelSession<'rt> {
         })
     }
 
-    /// Initial (pre-deployment) parameters from the artifact directory.
+    /// Initial (pre-deployment) parameters from the backend's θ0 source.
     pub fn theta0(&self) -> Result<Params> {
-        Params::new(self.rt.theta0(&self.m.name)?, &self.m)
+        Params::new(self.be.theta0(&self.m.name)?, &self.m)
     }
 
-    /// Times θ was serialized host → literal since session creation.
+    /// Times θ was serialized host → backend buffer since session creation.
     pub fn theta_marshal_count(&self) -> u64 {
         self.theta_marshals.get()
     }
 
-    /// Times a call reused a cached θ literal instead of re-marshalling.
+    /// Times a call reused a cached θ buffer instead of re-marshalling.
     pub fn theta_cache_hit_count(&self) -> u64 {
         self.theta_cache_hits.get()
     }
 
-    /// Make sure the cache holds a literal for `params`' current content.
-    fn ensure_theta_literal(&self, params: &Params) -> Result<()> {
+    /// Make sure the cache holds a buffer for `params`' current content.
+    fn ensure_theta_value(&self, params: &Params) -> Result<()> {
         let mut cache = self.theta_cache.borrow_mut();
         if let Some((gen, _)) = cache.get(&params.id()) {
             if *gen == params.generation() {
@@ -89,19 +91,19 @@ impl<'rt> ModelSession<'rt> {
             cache.clear();
         }
         self.theta_marshals.set(self.theta_marshals.get() + 1);
-        let lit = f32_literal(params.theta(), &[self.m.theta_len])?;
-        cache.insert(params.id(), (params.generation(), lit));
+        let v = self.be.marshal_f32(params.theta(), &[self.m.theta_len])?;
+        cache.insert(params.id(), (params.generation(), v));
         Ok(())
     }
 
-    /// Store an execute-produced θ literal for `params`' current content
+    /// Adopt an execute-produced θ buffer for `params`' current content
     /// (train/ssl output reuse: the next step's input marshal is free).
-    fn adopt_theta_literal(&self, params: &Params, lit: xla::Literal) {
+    fn adopt_theta_value(&self, params: &Params, v: Value) {
         let mut cache = self.theta_cache.borrow_mut();
         if cache.len() >= THETA_CACHE_CAP {
             cache.clear();
         }
-        cache.insert(params.id(), (params.generation(), lit));
+        cache.insert(params.id(), (params.generation(), v));
     }
 
     /// One SGD step on a batch.  Chooses the `train_k` artifact matching
@@ -119,43 +121,45 @@ impl<'rt> ModelSession<'rt> {
         anyhow::ensure!(y.len() == b, "bad y len {}", y.len());
         let k = fs.frozen_prefix().min(self.m.units - 1);
         let name = self.m.train_artifact(k, self.quant)?;
-        self.ensure_theta_literal(params)?;
-        let x_lit = f32_literal(x, &[b, self.m.d])?;
-        let y_lit = i32_literal(y, &[b])?;
-        let mask_lit = f32_literal(&fs.lr_mask(), &[fs.units()])?;
-        let lr_lit = f32_literal(&[self.lr], &[])?;
+        self.ensure_theta_value(params)?;
+        let x_v = self.be.marshal_f32(x, &[b, self.m.d])?;
+        let y_v = self.be.marshal_i32(y, &[b])?;
+        let mask_v = self.be.marshal_f32(&fs.lr_mask(), &[fs.units()])?;
+        let lr_v = self.be.marshal_f32(&[self.lr], &[])?;
         let mut out = {
             let cache = self.theta_cache.borrow();
-            let theta_lit = &cache.get(&params.id()).unwrap().1;
-            let inputs = [theta_lit, &x_lit, &y_lit, &mask_lit, &lr_lit];
-            self.rt.exec_lits(name, &inputs)?
+            let theta_v = &cache.get(&params.id()).unwrap().1;
+            let inputs = [theta_v, &x_v, &y_v, &mask_v, &lr_v];
+            self.be.execute(name, &inputs)?
         };
         anyhow::ensure!(out.len() == 2, "train artifact returned {}", out.len());
-        let loss = TensorF32::from_literal(out.pop().unwrap())?.data[0];
-        let theta_lit = out.pop().unwrap();
-        let theta = theta_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("θ to_vec: {e:?}"))?;
+        let loss = out.pop().unwrap().to_tensor()?.data[0];
+        let theta_v = out.pop().unwrap();
+        let theta = theta_v.read_f32()?;
         anyhow::ensure!(theta.len() == self.m.theta_len, "train returned bad θ len");
         params.set_theta(theta);
-        self.adopt_theta_literal(params, theta_lit);
+        self.adopt_theta_value(params, theta_v);
         Ok(loss)
     }
 
-    /// Execute a (θ, x)-shaped artifact through the θ literal cache.
-    fn exec_theta_x(&self, name: &str, params: &Params, x_lit: &xla::Literal) -> Result<Vec<TensorF32>> {
-        self.ensure_theta_literal(params)?;
+    /// Execute a (θ, x)-shaped artifact through the θ value cache.
+    fn exec_theta_x(&self, name: &str, params: &Params, x_v: &Value) -> Result<Vec<TensorF32>> {
+        self.ensure_theta_value(params)?;
         let cache = self.theta_cache.borrow();
-        let theta_lit = &cache.get(&params.id()).unwrap().1;
-        self.rt.exec_refs(name, &[theta_lit, x_lit])
+        let theta_v = &cache.get(&params.id()).unwrap().1;
+        self.be
+            .execute(name, &[theta_v, x_v])?
+            .iter()
+            .map(Value::to_tensor)
+            .collect()
     }
 
     /// Forward pass at the inference batch size; returns logits [B, C].
     pub fn infer(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
         let b = self.m.batch_infer;
         anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
-        let x_lit = f32_literal(x, &[b, self.m.d])?;
-        let mut out = self.exec_theta_x(&self.m.artifacts.infer, params, &x_lit)?;
+        let x_v = self.be.marshal_f32(x, &[b, self.m.d])?;
+        let mut out = self.exec_theta_x(&self.m.artifacts.infer, params, &x_v)?;
         Ok(out.pop().unwrap())
     }
 
@@ -182,22 +186,22 @@ impl<'rt> ModelSession<'rt> {
     pub fn features(&self, params: &Params, x: &[f32]) -> Result<TensorF32> {
         let b = self.m.batch_probe;
         anyhow::ensure!(x.len() == b * self.m.d, "bad probe len {}", x.len());
-        let x_lit = f32_literal(x, &[b, self.m.d])?;
-        let mut out = self.exec_theta_x(&self.m.artifacts.features, params, &x_lit)?;
+        let x_v = self.be.marshal_f32(x, &[b, self.m.d])?;
+        let mut out = self.exec_theta_x(&self.m.artifacts.features, params, &x_v)?;
         Ok(out.pop().unwrap())
     }
 
-    /// CKA between two (B, H) feature maps via the Pallas Gram artifact.
+    /// CKA between two (B, H) feature maps via the Gram artifact.
     pub fn cka(&self, fx: &[f32], fy: &[f32]) -> Result<f32> {
         let b = self.m.batch_probe;
         let h = self.m.h;
         anyhow::ensure!(fx.len() == b * h && fy.len() == b * h, "bad feature len");
-        let name = self.rt.manifest.cka_artifact(h)?;
+        let name = self.be.manifest().cka_artifact(h)?;
         // marshal straight from the stacked-feature slices: no `to_vec`.
-        let fx_lit = f32_literal(fx, &[b, h])?;
-        let fy_lit = f32_literal(fy, &[b, h])?;
-        let out = self.rt.exec_refs(name, &[&fx_lit, &fy_lit])?;
-        Ok(out[0].data[0])
+        let fx_v = self.be.marshal_f32(fx, &[b, h])?;
+        let fy_v = self.be.marshal_f32(fy, &[b, h])?;
+        let out = self.be.execute(name, &[&fx_v, &fy_v])?;
+        Ok(out[0].to_tensor()?.data[0])
     }
 
     /// CKA of layer `l` between two stacked feature tensors [L, B, H].
@@ -224,28 +228,26 @@ impl<'rt> ModelSession<'rt> {
             .ssl
             .as_deref()
             .ok_or_else(|| anyhow::anyhow!("{} has no ssl artifact", self.m.name))?;
-        self.ensure_theta_literal(params)?;
-        let phi_lit = f32_literal(phi, &[phi.len()])?;
-        let x1_lit = f32_literal(x1, &[b, self.m.d])?;
-        let x2_lit = f32_literal(x2, &[b, self.m.d])?;
-        let mask_lit = f32_literal(&fs.lr_mask(), &[fs.units()])?;
-        let lr_lit = f32_literal(&[self.lr], &[])?;
+        self.ensure_theta_value(params)?;
+        let phi_v = self.be.marshal_f32(phi, &[phi.len()])?;
+        let x1_v = self.be.marshal_f32(x1, &[b, self.m.d])?;
+        let x2_v = self.be.marshal_f32(x2, &[b, self.m.d])?;
+        let mask_v = self.be.marshal_f32(&fs.lr_mask(), &[fs.units()])?;
+        let lr_v = self.be.marshal_f32(&[self.lr], &[])?;
         let mut out = {
             let cache = self.theta_cache.borrow();
-            let theta_lit = &cache.get(&params.id()).unwrap().1;
-            let inputs = [theta_lit, &phi_lit, &x1_lit, &x2_lit, &mask_lit, &lr_lit];
-            self.rt.exec_lits(name, &inputs)?
+            let theta_v = &cache.get(&params.id()).unwrap().1;
+            let inputs = [theta_v, &phi_v, &x1_v, &x2_v, &mask_v, &lr_v];
+            self.be.execute(name, &inputs)?
         };
         anyhow::ensure!(out.len() == 3, "ssl artifact returned {}", out.len());
-        let loss = TensorF32::from_literal(out.pop().unwrap())?.data[0];
-        *phi = TensorF32::from_literal(out.pop().unwrap())?.data;
-        let theta_lit = out.pop().unwrap();
-        let theta = theta_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("θ to_vec: {e:?}"))?;
+        let loss = out.pop().unwrap().to_tensor()?.data[0];
+        *phi = out.pop().unwrap().read_f32()?;
+        let theta_v = out.pop().unwrap();
+        let theta = theta_v.read_f32()?;
         anyhow::ensure!(theta.len() == self.m.theta_len, "ssl returned bad θ len");
         params.set_theta(theta);
-        self.adopt_theta_literal(params, theta_lit);
+        self.adopt_theta_value(params, theta_v);
         Ok(loss)
     }
 }

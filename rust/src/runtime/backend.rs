@@ -1,0 +1,260 @@
+//! The execute-boundary abstraction: an object-safe [`Backend`] trait with
+//! two runtime-selectable implementations.
+//!
+//! * [`PjrtBackend`](super::client::PjrtBackend) — compiles the AOT HLO
+//!   artifacts and executes them through the PJRT C API (real execution
+//!   needs the `xla` cargo feature; without it construction fails with a
+//!   clear error).
+//! * [`RefCpuBackend`](super::refcpu::RefCpuBackend) — a pure-Rust
+//!   reference executor implementing the artifact segments' actual
+//!   semantics (forward pass, SGD train step, SimSiam step, CKA probe)
+//!   for the linear/CWR-head model family, on the same flat-θ layout the
+//!   manifest describes.  Runs everywhere, bit-deterministically — CI
+//!   executes full simulations with it.
+//!
+//! Everything above `runtime/` (model/, sim/, serve/) depends only on this
+//! trait; no `cfg(feature = "xla")` branching escapes the runtime layer.
+//!
+//! # Buffer ownership (adopt/donate)
+//!
+//! [`Value`] is a backend-owned buffer handle.  Callers *adopt* output
+//! values (e.g. [`crate::model::ModelSession`] keeps a train step's output
+//! θ value as the next step's input) and *donate* them back by reference
+//! through [`Backend::execute`] — the backend never requires a host
+//! round-trip between consecutive executes.  This is what lets θ become
+//! device-resident later: a `Value` may wrap a device buffer without any
+//! caller changing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::exec::TensorF32;
+use super::hostlit::HostLiteral;
+
+/// A backend-owned buffer handle crossing the execute boundary.
+pub enum Value {
+    /// Host literal (reference executor, and the PJRT path built without
+    /// the `xla` feature, where the stub literal is the host literal).
+    Host(HostLiteral),
+    /// Real PJRT literal (only with the `xla` feature).
+    #[cfg(feature = "xla")]
+    Xla(xla::Literal),
+}
+
+impl Value {
+    /// Borrow the host literal; errors for device-side values.
+    pub fn as_host(&self) -> Result<&HostLiteral> {
+        match self {
+            Value::Host(l) => Ok(l),
+            #[cfg(feature = "xla")]
+            Value::Xla(_) => Err(anyhow::anyhow!(
+                "value is a PJRT literal, not a host literal"
+            )),
+        }
+    }
+
+    /// Read back as a host tensor (shape + f32 data).
+    pub fn to_tensor(&self) -> Result<TensorF32> {
+        match self {
+            Value::Host(l) => {
+                let shape = l
+                    .shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let data = l
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                Ok(TensorF32::new(shape, data))
+            }
+            #[cfg(feature = "xla")]
+            Value::Xla(l) => {
+                let shape = l
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data = l
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                Ok(TensorF32::new(dims, data))
+            }
+        }
+    }
+
+    /// Read back the raw f32 data (no shape; the flat-θ fast path).
+    pub fn read_f32(&self) -> Result<Vec<f32>> {
+        match self {
+            Value::Host(l) => l
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}")),
+            #[cfg(feature = "xla")]
+            Value::Xla(l) => l
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}")),
+        }
+    }
+}
+
+/// Object-safe execute boundary: load/marshal/execute/read-back.
+///
+/// A backend binds an artifact *source* (directory or built-in) and
+/// executes named segments on [`Value`] buffers.  All methods take `&self`
+/// — backends use interior mutability for caches/counters and are driven
+/// from a single thread each ([`crate::sim::ParallelSweeper`] constructs
+/// one backend per worker).
+pub trait Backend {
+    /// Short identifier (`"pjrt"` / `"refcpu"`) for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// The manifest describing models, flat-θ layout, and segment names.
+    fn manifest(&self) -> &Manifest;
+
+    /// Number of segment executions so far (metrics/tests).
+    fn executions(&self) -> u64;
+
+    /// Marshal host f32 data into a backend buffer (`[]` = rank-0 scalar).
+    fn marshal_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value>;
+
+    /// Marshal host i32 data (labels input of the train segments).
+    fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value>;
+
+    /// Execute a named segment; returns the flattened output tuple.
+    /// Inputs are donated by reference — the caller keeps ownership and
+    /// no buffer is rebuilt for the call.
+    fn execute(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>>;
+
+    /// Initial (pre-deployment) parameters for a model.
+    fn theta0(&self, model: &str) -> Result<Vec<f32>>;
+
+    /// Initial SimSiam projector/predictor parameters.
+    fn phi0(&self, model: &str) -> Result<Vec<f32>>;
+}
+
+/// Which backend to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT over the AOT artifacts (needs `make artifacts`; real execution
+    /// needs the `xla` cargo feature).
+    Pjrt,
+    /// Pure-Rust reference executor (runs everywhere).
+    RefCpu,
+    /// Prefer PJRT when it can actually execute here, else refcpu.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            "refcpu" | "ref" | "cpu" => BackendKind::RefCpu,
+            "auto" => BackendKind::Auto,
+            other => anyhow::bail!(
+                "unknown backend {other:?} (expected pjrt|refcpu|auto)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::RefCpu => "refcpu",
+            BackendKind::Auto => "auto",
+        }
+    }
+}
+
+/// Recipe for constructing a backend: kind + artifact directory.
+///
+/// Cheap, `Sync`, and cloneable — the sweep engine hands one to every
+/// worker thread so each constructs its own backend (backends themselves
+/// are deliberately single-threaded).
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub dir: PathBuf,
+}
+
+impl BackendSpec {
+    pub fn new<P: AsRef<Path>>(kind: BackendKind, dir: P) -> BackendSpec {
+        BackendSpec { kind, dir: dir.as_ref().to_path_buf() }
+    }
+
+    /// Auto-selecting spec over an artifact directory.
+    pub fn auto<P: AsRef<Path>>(dir: P) -> BackendSpec {
+        BackendSpec::new(BackendKind::Auto, dir)
+    }
+
+    /// Reference-executor spec (uses the directory's manifest/θ0 when
+    /// present, the built-in model family otherwise).
+    pub fn refcpu<P: AsRef<Path>>(dir: P) -> BackendSpec {
+        BackendSpec::new(BackendKind::RefCpu, dir)
+    }
+
+    /// Construct the backend this spec describes.
+    pub fn create(&self) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Pjrt => Ok(Box::new(
+                super::client::PjrtBackend::load(&self.dir)?,
+            )),
+            BackendKind::RefCpu => Ok(Box::new(
+                super::refcpu::RefCpuBackend::load(&self.dir)?,
+            )),
+            BackendKind::Auto => {
+                // PJRT wins when it can actually execute here: the
+                // artifacts exist AND the PJRT client comes up.  The only
+                // *silent* fallback is the expected no-`xla`-feature stub
+                // refusal; artifacts that are present but unloadable for a
+                // real reason (broken XLA install, corrupt artifacts) must
+                // surface the error, not quietly degrade to fp-divergent
+                // refcpu numbers.
+                if self.dir.join("manifest.json").exists() {
+                    match super::client::PjrtBackend::load(&self.dir) {
+                        Ok(be) => return Ok(Box::new(be)),
+                        Err(e)
+                            if format!("{e:?}")
+                                .contains("without the `xla` feature") => {}
+                        Err(e) => {
+                            return Err(e.context(
+                                "artifacts present but the pjrt backend \
+                                 failed to load (force the reference \
+                                 executor with --backend refcpu)",
+                            ))
+                        }
+                    }
+                }
+                Ok(Box::new(super::refcpu::RefCpuBackend::load(&self.dir)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_rejects() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("refcpu").unwrap(), BackendKind::RefCpu);
+        assert_eq!(BackendKind::parse("AUTO").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn host_value_reads_back() {
+        let v = Value::Host(HostLiteral::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap());
+        let t = v.to_tensor().unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(v.read_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(v.as_host().is_ok());
+    }
+
+    #[test]
+    fn auto_spec_falls_back_to_refcpu_without_artifacts() {
+        let spec = BackendSpec::auto("/nonexistent/artifacts");
+        let be = spec.create().unwrap();
+        assert_eq!(be.name(), "refcpu");
+        assert!(be.manifest().model("mbv2").is_ok());
+    }
+}

@@ -1,10 +1,14 @@
-//! The PJRT client wrapper: compile-on-demand executable cache over the
-//! artifact directory.  One compiled executable per artifact, reused for
-//! the whole process lifetime (the paper's per-round "system initialization"
-//! cost is *charged* by the cost model, not re-paid for real — see
+//! The PJRT backend: compile-on-demand executable cache over the artifact
+//! directory.  One compiled executable per artifact, reused for the whole
+//! process lifetime (the paper's per-round "system initialization" cost is
+//! *charged* by the cost model, not re-paid for real — see
 //! [`crate::cost::device`]).
+//!
+//! This file is the only place that touches the `xla` crate (or, without
+//! the `xla` cargo feature, its API-identical inert stand-in
+//! [`super::stub`]); everything above sees only the [`Backend`] trait.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -12,52 +16,71 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use super::artifact::Manifest;
-use super::exec::TensorF32;
+use super::backend::{Backend, Value};
 
 #[cfg(not(feature = "xla"))]
 use crate::runtime::stub as xla;
 
-/// Loaded runtime: PJRT CPU client + manifest + executable cache.
-///
-/// Not `Sync`: PJRT executables are cached behind a `RefCell`.  Run one
-/// `Runtime` per thread (the simulator is single-threaded per run;
-/// [`crate::sim::ParallelSweeper`] parallelizes across runs by constructing
-/// one runtime per worker thread).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    exec_count: RefCell<u64>,
+/// Wrap a PJRT-path literal as a [`Value`].  With the `xla` feature this
+/// is a real PJRT literal; without it the stub literal *is* the host
+/// literal, so the two variants coincide.
+#[cfg(feature = "xla")]
+fn wrap(lit: xla::Literal) -> Value {
+    Value::Xla(lit)
 }
 
-impl Runtime {
+#[cfg(not(feature = "xla"))]
+fn wrap(lit: xla::Literal) -> Value {
+    Value::Host(lit)
+}
+
+#[cfg(feature = "xla")]
+fn unwrap(v: &Value) -> Result<&xla::Literal> {
+    match v {
+        Value::Xla(l) => Ok(l),
+        Value::Host(_) => Err(anyhow::anyhow!(
+            "pjrt backend received a host value from another backend"
+        )),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn unwrap(v: &Value) -> Result<&xla::Literal> {
+    v.as_host()
+}
+
+/// PJRT execution backend: CPU client + manifest + executable cache.
+///
+/// Not `Sync`: PJRT executables are cached behind a `RefCell`.  Run one
+/// backend per thread (the simulator is single-threaded per run;
+/// [`crate::sim::ParallelSweeper`] parallelizes across runs by constructing
+/// one backend per worker thread).
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exec_count: Cell<u64>,
+}
+
+impl PjrtBackend {
     /// Load the manifest and create the PJRT CPU client.
-    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<PjrtBackend> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime {
+        Ok(PjrtBackend {
             client,
             dir,
             manifest,
             cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(0),
+            exec_count: Cell::new(0),
         })
     }
 
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Number of artifact executions so far (metrics/tests).
-    pub fn executions(&self) -> u64 {
-        *self.exec_count.borrow()
-    }
-
     /// Fetch (compiling on first use) the executable for an artifact name.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
@@ -74,45 +97,17 @@ impl Runtime {
         Ok(exe)
     }
 
-    /// Execute an artifact on f32 host tensors; returns the flattened
-    /// output tuple as host tensors.  Integer inputs go through
-    /// [`Self::exec_raw`].
-    pub fn exec(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(TensorF32::to_literal).collect::<Result<_>>()?;
-        self.exec_raw(name, &lits)
-    }
-
-    /// Execute with pre-built literals (callers with i32 inputs or reused
-    /// buffers).  Output tuple is decomposed into individual tensors.
-    pub fn exec_raw(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<TensorF32>> {
-        let refs: Vec<&xla::Literal> = inputs.iter().collect();
-        self.exec_refs(name, &refs)
-    }
-
-    /// Execute with borrowed literals — the zero-copy entry: callers keep
-    /// ownership of cached literals (e.g. the session's θ literal) and no
-    /// literal is rebuilt or cloned for the call.
-    pub fn exec_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<TensorF32>> {
-        self.exec_lits(name, inputs)?
-            .into_iter()
-            .map(TensorF32::from_literal)
-            .collect()
-    }
-
-    /// Like [`Self::exec_refs`] but returns the raw output literals, so a
-    /// caller can keep one (e.g. the updated θ of a train step) as the next
-    /// call's input without a host round-trip re-marshal.
-    pub fn exec_lits(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+    /// Execute with borrowed literals; returns the output tuple's element
+    /// literals (aot.py lowers with `return_tuple=True`).
+    fn exec_lits(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let exe = self.executable(name)?;
-        *self.exec_count.borrow_mut() += 1;
+        self.exec_count.set(self.exec_count.get() + 1);
         let out = exe
             .execute::<&xla::Literal>(inputs)
             .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
         let lit = out[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
         lit.to_tuple()
             .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
     }
@@ -120,23 +115,65 @@ impl Runtime {
     /// Read a raw little-endian f32 binary (the `<model>_theta0.bin`
     /// initial parameters written by aot.py).
     pub fn load_f32_bin(&self, file: &str) -> Result<Vec<f32>> {
-        let path = self.dir.join(file);
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        anyhow::ensure!(bytes.len() % 4 == 0, "{file}: not a multiple of 4 bytes");
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        read_f32_bin(&self.dir, file)
+    }
+}
+
+/// Read `<dir>/<file>` as raw little-endian f32 (shared with the refcpu
+/// backend, which loads the same θ0 binaries for artifact parity).
+pub(crate) fn read_f32_bin(dir: &Path, file: &str) -> Result<Vec<f32>> {
+    let path = dir.join(file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{file}: not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
-    /// Initial parameters for a model.
-    pub fn theta0(&self, model: &str) -> Result<Vec<f32>> {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executions(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    fn marshal_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        let lit = xla::Literal::vec1(data);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = lit
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))?;
+        Ok(wrap(lit))
+    }
+
+    fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        let lit = xla::Literal::vec1(data);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = lit
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("reshape i32 {shape:?}: {e:?}"))?;
+        Ok(wrap(lit))
+    }
+
+    fn execute(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let lits: Vec<&xla::Literal> =
+            inputs.iter().map(|v| unwrap(v)).collect::<Result<_>>()?;
+        Ok(self.exec_lits(name, &lits)?.into_iter().map(wrap).collect())
+    }
+
+    fn theta0(&self, model: &str) -> Result<Vec<f32>> {
         self.load_f32_bin(&format!("{model}_theta0.bin"))
     }
 
-    /// Initial SimSiam projector/predictor parameters.
-    pub fn phi0(&self, model: &str) -> Result<Vec<f32>> {
+    fn phi0(&self, model: &str) -> Result<Vec<f32>> {
         self.load_f32_bin(&format!("{model}_phi0.bin"))
     }
 }

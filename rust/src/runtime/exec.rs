@@ -1,13 +1,10 @@
-//! Host-side tensor type and literal conversion helpers.
+//! Host-side tensor type.
 //!
 //! Everything above the runtime deals in `TensorF32` (shape + contiguous
-//! row-major data).  Conversions to/from `xla::Literal` happen only at the
-//! execute boundary.
-
-use anyhow::Result;
-
-#[cfg(not(feature = "xla"))]
-use crate::runtime::stub as xla;
+//! row-major data).  Conversions to backend buffers happen only at the
+//! execute boundary, through [`crate::runtime::Backend::marshal_f32`] and
+//! [`crate::runtime::Value::to_tensor`] — this module has no backend
+//! dependency at all.
 
 /// A host f32 tensor: row-major contiguous.
 #[derive(Clone, Debug, PartialEq)]
@@ -50,21 +47,6 @@ impl TensorF32 {
         &self.data[i * w..(i + 1) * w]
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        f32_literal(&self.data, &self.shape)
-    }
-
-    pub fn from_literal(lit: xla::Literal) -> Result<TensorF32> {
-        let shape = lit
-            .array_shape()
-            .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-        Ok(TensorF32::new(dims, data))
-    }
-
     /// argmax over the last axis of a rank-2 tensor, per row.
     pub fn argmax_rows(&self) -> Vec<usize> {
         debug_assert_eq!(self.shape.len(), 2);
@@ -97,30 +79,6 @@ impl TensorF32 {
     }
 }
 
-/// Build an f32 literal straight from a host slice — the zero-copy-side
-/// marshalling entry: no intermediate `Vec` / `TensorF32` is materialized,
-/// the slice goes directly into the literal.  An empty `shape` produces a
-/// rank-0 scalar.
-pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    if shape.is_empty() {
-        return lit
-            .reshape(&[])
-            .map_err(|e| anyhow::anyhow!("reshape scalar: {e:?}"));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
-}
-
-/// Build an i32 literal (labels input of the train artifacts).
-pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshape i32 {shape:?}: {e:?}"))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,18 +102,6 @@ mod tests {
         let v = t.logsumexp_rows()[0];
         assert!((v - (1000.0 + 2f32.ln())).abs() < 1e-3);
         assert!(v.is_finite());
-    }
-
-    #[test]
-    fn literal_roundtrip_preserves_shape_and_data() {
-        let t = TensorF32::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let back = TensorF32::from_literal(t.to_literal().unwrap()).unwrap();
-        assert_eq!(back, t);
-        let s = TensorF32::scalar(7.5);
-        let lit = f32_literal(&s.data, &s.shape).unwrap();
-        let back = TensorF32::from_literal(lit).unwrap();
-        assert_eq!(back.shape, Vec::<usize>::new());
-        assert_eq!(back.data, vec![7.5]);
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Host-side literal: shape + typed data, including a real **tuple**
+//! representation.
+//!
+//! This is the interchange value of the backend-neutral execute boundary:
+//! [`crate::runtime::RefCpuBackend`] consumes and produces `HostLiteral`s
+//! directly, and builds without the `xla` cargo feature alias the inert
+//! PJRT stub's `Literal` to this exact type — so the marshalling layer,
+//! its caches, and multi-output (tuple) segment plumbing are testable on
+//! any machine.
+//!
+//! Historically the stub's `Literal::to_tuple` returned a flat
+//! `Err(NO_XLA)`, which made multi-output segments unrepresentable on the
+//! host.  `HostLiteral` fixes that: [`HostLiteral::tuple`] builds a tuple
+//! literal and [`HostLiteral::to_tuple`] decomposes one (and *only* one —
+//! calling it on an array literal is still an error, mirroring XLA).
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` on the host; only `Debug` is
+/// needed by the `map_err(|e| anyhow!("..: {e:?}"))` call sites.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+/// Element storage of one host literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    /// Multi-output segments (train/ssl steps) return tuples.
+    Tuple(Vec<HostLiteral>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Conversion glue so `HostLiteral::vec1` / `to_vec` stay generic like the
+/// real xla crate's `NativeType`-bounded methods.
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: &[Self]) -> Data;
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::F32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
+        match data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Data {
+        Data::I32(data.to_vec())
+    }
+    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
+        match data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error::new("literal is not i32")),
+        }
+    }
+}
+
+/// Host literal: shape + typed data (arrays and tuples).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostLiteral {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Shape view matching `xla::ArrayShape`'s `dims()` accessor.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl HostLiteral {
+    /// Rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> HostLiteral {
+        HostLiteral { dims: vec![data.len() as i64], data: T::wrap(data) }
+    }
+
+    /// f32 literal with an explicit shape (`[]` = rank-0 scalar).
+    pub fn f32(data: &[f32], shape: &[usize]) -> Result<HostLiteral, Error> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        HostLiteral::vec1(data).reshape(&dims)
+    }
+
+    /// i32 literal with an explicit shape.
+    pub fn i32(data: &[i32], shape: &[usize]) -> Result<HostLiteral, Error> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        HostLiteral::vec1(data).reshape(&dims)
+    }
+
+    /// Tuple literal over already-built elements (the host representation
+    /// of a multi-output segment's return value).
+    pub fn tuple(elems: Vec<HostLiteral>) -> HostLiteral {
+        HostLiteral {
+            dims: vec![elems.len() as i64],
+            data: Data::Tuple(elems),
+        }
+    }
+
+    pub fn is_tuple(&self) -> bool {
+        matches!(self.data, Data::Tuple(_))
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<HostLiteral, Error> {
+        if self.is_tuple() {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(HostLiteral { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        if self.is_tuple() {
+            return Err(Error::new("tuple literal has no array shape"));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data)
+    }
+
+    /// Borrowed f32 view (zero-copy read for the reference executor).
+    pub fn f32_slice(&self) -> Result<&[f32], Error> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+
+    /// Borrowed i32 view.
+    pub fn i32_slice(&self) -> Result<&[i32], Error> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error::new("literal is not i32")),
+        }
+    }
+
+    /// Shape as `usize` dims (arrays only).
+    pub fn shape(&self) -> Result<Vec<usize>, Error> {
+        if self.is_tuple() {
+            return Err(Error::new("tuple literal has no array shape"));
+        }
+        Ok(self.dims.iter().map(|&d| d as usize).collect())
+    }
+
+    /// Decompose a tuple literal into its elements.  Errors on array
+    /// literals (mirroring XLA, where `DecomposeTuple` requires a tuple).
+    pub fn to_tuple(&self) -> Result<Vec<HostLiteral>, Error> {
+        match &self.data {
+            Data::Tuple(elems) => Ok(elems.clone()),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_shape_and_data() {
+        let l = HostLiteral::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_literal_has_empty_dims() {
+        let s = HostLiteral::f32(&[7.5], &[]).unwrap();
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn tuple_roundtrips_elements() {
+        let a = HostLiteral::f32(&[1.0, 2.0], &[2]).unwrap();
+        let b = HostLiteral::i32(&[3, 4, 5], &[3]).unwrap();
+        let t = HostLiteral::tuple(vec![a.clone(), b.clone()]);
+        assert!(t.is_tuple());
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[0].to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(elems[1].to_vec::<i32>().unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn tuple_of_tuples_nests() {
+        let inner = HostLiteral::tuple(vec![HostLiteral::vec1(&[1.0f32])]);
+        let outer =
+            HostLiteral::tuple(vec![inner, HostLiteral::vec1(&[2i32])]);
+        let elems = outer.to_tuple().unwrap();
+        assert!(elems[0].is_tuple());
+        assert_eq!(elems[0].to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn array_literal_is_not_a_tuple() {
+        let l = HostLiteral::vec1(&[1.0f32]);
+        assert!(l.to_tuple().is_err());
+        let t = HostLiteral::tuple(vec![l]);
+        assert!(t.array_shape().is_err());
+        assert!(t.reshape(&[1]).is_err());
+        assert!(t.shape().is_err());
+    }
+}

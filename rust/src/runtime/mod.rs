@@ -1,22 +1,38 @@
-//! PJRT runtime: loads the AOT artifacts emitted by `make artifacts` and
-//! executes them on the request path.  This is the only module that talks
-//! to XLA; everything above it deals in `Vec<f32>`.
+//! Runtime layer: the [`Backend`] execute boundary and its two
+//! implementations.  Everything above this module deals in `Vec<f32>`,
+//! [`TensorF32`], and opaque [`Value`] buffer handles — no XLA types, no
+//! `cfg(feature = "xla")` branching, escape upward.
 //!
-//! Interchange is **HLO text** (see DESIGN.md / aot.py): jax ≥ 0.5 protos
-//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
-//! text parser reassigns ids and round-trips cleanly.
+//! * [`PjrtBackend`] loads the AOT artifacts emitted by `make artifacts`
+//!   (HLO **text** interchange — jax ≥ 0.5 protos carry 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects, while the text parser reassigns
+//!   ids and round-trips cleanly; see DESIGN.md / aot.py) and executes
+//!   them through the PJRT C API.  Real execution needs the `xla` cargo
+//!   feature; without it the API-identical [`stub`] makes everything
+//!   compile and constructing the backend fails with a clear error.
+//! * [`RefCpuBackend`] is a pure-Rust reference executor implementing the
+//!   segments' actual semantics (forward, SGD train step, SimSiam step,
+//!   CKA) on the manifest's flat-θ layout.  It runs *everywhere* — CI
+//!   executes full end-to-end simulations with it ([`refcpu::builtin`]
+//!   synthesizes the model family when no artifact directory exists), and
+//!   its runs are bit-deterministic across sweep worker counts.
 //!
-//! Builds without the `xla` cargo feature swap the real bindings for
-//! [`stub`], an API-identical inert backend: literals still marshal on the
-//! host (so the zero-copy caches are testable), but artifact execution
-//! reports a clear error.
+//! Select at runtime with [`BackendSpec`] (`--backend {pjrt,refcpu,auto}`
+//! on the CLI; `auto` prefers PJRT when it can actually execute here and
+//! falls back to refcpu).
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod exec;
+pub mod hostlit;
+pub mod refcpu;
 #[cfg(not(feature = "xla"))]
 pub mod stub;
 
 pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
-pub use client::Runtime;
+pub use backend::{Backend, BackendKind, BackendSpec, Value};
+pub use client::PjrtBackend;
 pub use exec::TensorF32;
+pub use hostlit::HostLiteral;
+pub use refcpu::RefCpuBackend;

@@ -1,0 +1,301 @@
+//! Built-in model family: the manifest aot.py would emit, synthesized in
+//! pure Rust so the reference backend runs with **no artifact directory at
+//! all** (the CI case).
+//!
+//! Mirrors `python/compile/model.py` exactly: the four deployed proxies
+//! (res50 / mbv2 / deit / bert), the flat-θ layout
+//! `[embed, block_1..L, head]` with per-block `(ln_s, ln_b,) w1, b1, w2,
+//! b2` tensors, the paper-scale per-unit cost anchors (embed 7%, head 2%,
+//! blocks splitting the rest with later blocks heavier), and the artifact
+//! segment names (`<model>_infer`, `<model>_train_<k>`, …).
+//!
+//! θ0 follows the same init rules as `init_theta`: biases and `ln_b` zero,
+//! `ln_s` one, residual-exit `w2` zero (ReZero — the fresh model is
+//! numerically tame at any depth), every other weight He-style
+//! `N(0, 2/fan_in)`.  Draws come from a [`Pcg32`] seeded by the model
+//! name, so θ0 is deterministic per model across processes and worker
+//! threads.  (With an artifact directory present the reference backend
+//! loads aot.py's manifest + θ0 binaries instead, for cross-backend
+//! parity.)
+
+use std::collections::BTreeMap;
+
+use crate::rng::Pcg32;
+use crate::runtime::artifact::{
+    ArtifactNames, HeadInfo, Manifest, ModelManifest, PaperUnit, Segment,
+    TensorInfo,
+};
+
+const BATCH_TRAIN: usize = 16;
+const BATCH_INFER: usize = 64;
+const BATCH_PROBE: usize = 16;
+
+struct Spec {
+    name: &'static str,
+    d: usize,
+    h: usize,
+    blocks: usize,
+    classes: usize,
+    kind: &'static str,
+    expansion: usize,
+    paper_fwd_gflops: f64,
+    paper_params_mb: f64,
+    quant: bool,
+    ssl: bool,
+}
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec {
+            name: "res50", d: 128, h: 64, blocks: 8, classes: 50,
+            kind: "relu_res", expansion: 1,
+            paper_fwd_gflops: 4.1, paper_params_mb: 97.8,
+            quant: true, ssl: true,
+        },
+        Spec {
+            name: "mbv2", d: 128, h: 48, blocks: 6, classes: 50,
+            kind: "bottleneck", expansion: 2,
+            paper_fwd_gflops: 0.31, paper_params_mb: 13.4,
+            quant: false, ssl: true,
+        },
+        Spec {
+            name: "deit", d: 128, h: 56, blocks: 6, classes: 50,
+            kind: "preln_gelu", expansion: 2,
+            paper_fwd_gflops: 1.26, paper_params_mb: 21.8,
+            quant: false, ssl: true,
+        },
+        Spec {
+            name: "bert", d: 128, h: 64, blocks: 4, classes: 20,
+            kind: "preln_gelu", expansion: 2,
+            paper_fwd_gflops: 22.4, paper_params_mb: 419.0,
+            quant: false, ssl: false,
+        },
+    ]
+}
+
+/// Flat-θ layout of one spec (mirrors `layout()` in model.py).
+fn layout(s: &Spec) -> Vec<TensorInfo> {
+    let e = s.h * s.expansion;
+    let mut tensors = Vec::new();
+    let mut off = 0usize;
+    let mut add = |name: String, shape: Vec<usize>, unit: usize, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        tensors.push(TensorInfo { name, shape, unit, offset: *off });
+        *off += size;
+    };
+    add("embed.w".into(), vec![s.d, s.h], 0, &mut off);
+    add("embed.b".into(), vec![s.h], 0, &mut off);
+    for i in 1..=s.blocks {
+        if s.kind == "preln_gelu" {
+            add(format!("block{i}.ln_s"), vec![s.h], i, &mut off);
+            add(format!("block{i}.ln_b"), vec![s.h], i, &mut off);
+        }
+        add(format!("block{i}.w1"), vec![s.h, e], i, &mut off);
+        add(format!("block{i}.b1"), vec![e], i, &mut off);
+        add(format!("block{i}.w2"), vec![e, s.h], i, &mut off);
+        add(format!("block{i}.b2"), vec![s.h], i, &mut off);
+    }
+    let head_unit = s.blocks + 1;
+    add("head.w".into(), vec![s.h, s.classes], head_unit, &mut off);
+    add("head.b".into(), vec![s.classes], head_unit, &mut off);
+    tensors
+}
+
+fn unit_segments(tensors: &[TensorInfo], units: usize) -> Vec<Segment> {
+    (0..units)
+        .map(|u| {
+            let ts: Vec<&TensorInfo> =
+                tensors.iter().filter(|t| t.unit == u).collect();
+            let lo = ts.iter().map(|t| t.offset).min().unwrap();
+            let hi = ts.iter().map(|t| t.offset + t.size()).max().unwrap();
+            Segment { offset: lo, len: hi - lo }
+        })
+        .collect()
+}
+
+/// Paper-scale per-unit cost anchors (embed 7%, head 2%, blocks split the
+/// rest with weight `1 + i/L`).
+fn paper_units(s: &Spec) -> Vec<PaperUnit> {
+    let l = s.blocks;
+    let fwd_total = s.paper_fwd_gflops * 1e9;
+    let bytes_total = s.paper_params_mb * 1e6;
+    let (embed_frac, head_frac) = (0.07, 0.02);
+    let rest = 1.0 - embed_frac - head_frac;
+    let ws: Vec<f64> = (1..=l).map(|i| 1.0 + i as f64 / l as f64).collect();
+    let wsum: f64 = ws.iter().sum();
+    let mut fracs = vec![embed_frac];
+    fracs.extend(ws.iter().map(|w| rest * w / wsum));
+    fracs.push(head_frac);
+    fracs
+        .iter()
+        .map(|f| PaperUnit { fwd_flops: fwd_total * f, param_bytes: bytes_total * f })
+        .collect()
+}
+
+fn model_manifest(s: &Spec) -> ModelManifest {
+    let tensors = layout(s);
+    let units = s.blocks + 2;
+    let theta_len = tensors.iter().map(|t| t.size()).sum();
+    let head_w = tensors.iter().find(|t| t.name == "head.w").unwrap();
+    let head_b = tensors.iter().find(|t| t.name == "head.b").unwrap();
+    let head = HeadInfo {
+        w_offset: head_w.offset,
+        w_shape: [s.h, s.classes],
+        b_offset: head_b.offset,
+        classes: s.classes,
+    };
+    let train: Vec<String> =
+        (0..units).map(|k| format!("{}_train_{k}", s.name)).collect();
+    let train_q: Vec<String> = if s.quant {
+        (0..units).map(|k| format!("{}_train_q_{k}", s.name)).collect()
+    } else {
+        vec![]
+    };
+    let artifacts = ArtifactNames {
+        infer: format!("{}_infer", s.name),
+        features: format!("{}_features", s.name),
+        train,
+        train_q,
+        ssl: s.ssl.then(|| format!("{}_ssl", s.name)),
+        ssl_phi_len: if s.ssl { 2 * s.h * s.h + 2 * s.h } else { 0 },
+    };
+    ModelManifest {
+        name: s.name.to_string(),
+        d: s.d,
+        h: s.h,
+        blocks: s.blocks,
+        classes: s.classes,
+        units,
+        kind: s.kind.to_string(),
+        theta_len,
+        batch_train: BATCH_TRAIN,
+        batch_infer: BATCH_INFER,
+        batch_probe: BATCH_PROBE,
+        unit_segments: unit_segments(&tensors, units),
+        head,
+        paper_units: paper_units(s),
+        tensors,
+        artifacts,
+    }
+}
+
+/// The full built-in manifest (models + cka segments per feature width).
+pub fn manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    let mut cka = BTreeMap::new();
+    for s in specs() {
+        cka.insert(s.h, format!("cka_{}", s.h));
+        models.insert(s.name.to_string(), model_manifest(&s));
+    }
+    Manifest { models, cka }
+}
+
+fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// He/ReZero init over a tensor list (the init_theta rules).
+fn init_over(tensors: &[(String, Vec<usize>)], seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 0x7E7A);
+    let mut out = Vec::new();
+    for (name, shape) in tensors {
+        let size: usize = shape.iter().product();
+        if name.ends_with(".b")
+            || name.ends_with(".b1")
+            || name.ends_with(".b2")
+            || name.ends_with(".ln_b")
+        {
+            out.extend(std::iter::repeat(0.0f32).take(size));
+        } else if name.ends_with(".ln_s") {
+            out.extend(std::iter::repeat(1.0f32).take(size));
+        } else if name.ends_with(".w2") {
+            // ReZero: residual branches start as identity.
+            out.extend(std::iter::repeat(0.0f32).take(size));
+        } else {
+            let fan_in = shape[0] as f32;
+            let std = (2.0 / fan_in).sqrt();
+            out.extend((0..size).map(|_| std * rng.normal()));
+        }
+    }
+    out
+}
+
+/// Deterministic θ0 for a built-in model.
+pub fn theta0(m: &ModelManifest) -> Vec<f32> {
+    let tensors: Vec<(String, Vec<usize>)> = m
+        .tensors
+        .iter()
+        .map(|t| (t.name.clone(), t.shape.clone()))
+        .collect();
+    init_over(&tensors, fnv1a(&m.name) ^ 0x17)
+}
+
+/// Deterministic φ0 (SimSiam projector/predictor) for a built-in model.
+pub fn phi0(m: &ModelManifest) -> Vec<f32> {
+    let h = m.h;
+    let tensors = vec![
+        ("proj.w".to_string(), vec![h, h]),
+        ("proj.b".to_string(), vec![h]),
+        ("pred.w".to_string(), vec![h, h]),
+        ("pred.b".to_string(), vec![h]),
+    ];
+    init_over(&tensors, fnv1a(&m.name) ^ 0x18)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_is_consistent() {
+        let m = manifest();
+        assert_eq!(m.models.len(), 4);
+        for (name, mm) in &m.models {
+            assert_eq!(mm.units, mm.blocks + 2);
+            assert_eq!(mm.artifacts.train.len(), mm.units);
+            assert_eq!(mm.unit_segments.len(), mm.units);
+            // segments tile θ contiguously
+            let mut off = 0;
+            for s in &mm.unit_segments {
+                assert_eq!(s.offset, off, "{name}: segment gap");
+                off += s.len;
+            }
+            assert_eq!(off, mm.theta_len, "{name}: segments != theta_len");
+            assert_eq!(theta0(mm).len(), mm.theta_len);
+            assert!(m.cka.contains_key(&mm.h));
+            if mm.artifacts.ssl.is_some() {
+                assert_eq!(phi0(mm).len(), mm.artifacts.ssl_phi_len);
+            }
+        }
+        // paper-unit fractions reassemble the headline totals
+        assert!((m.models["res50"].paper_fwd_flops() / 4.1e9 - 1.0).abs() < 1e-6);
+        assert!((m.models["mbv2"].paper_param_bytes() / 13.4e6 - 1.0).abs() < 1e-6);
+        // quant artifacts are res50-only, ssl excludes bert (aot.py rules)
+        assert!(!m.models["res50"].artifacts.train_q.is_empty());
+        assert!(m.models["mbv2"].artifacts.train_q.is_empty());
+        assert!(m.models["bert"].artifacts.ssl.is_none());
+        assert!(m.models["deit"].artifacts.ssl.is_some());
+    }
+
+    #[test]
+    fn theta0_is_deterministic_and_rezero() {
+        let m = manifest();
+        let mm = m.models.get("mbv2").unwrap();
+        let a = theta0(mm);
+        let b = theta0(mm);
+        assert_eq!(a, b);
+        // w2 tensors (residual exits) start at zero; embed.w does not
+        let w2 = mm.tensors.iter().find(|t| t.name == "block1.w2").unwrap();
+        assert!(a[w2.offset..w2.offset + w2.size()].iter().all(|&v| v == 0.0));
+        let ew = mm.tensors.iter().find(|t| t.name == "embed.w").unwrap();
+        assert!(a[ew.offset..ew.offset + ew.size()].iter().any(|&v| v != 0.0));
+        // different models draw different θ0
+        let other = theta0(m.models.get("res50").unwrap());
+        assert_ne!(a[0], other[0]);
+    }
+}

@@ -1,0 +1,1156 @@
+//! Pure-Rust forward/backward kernels for the deployed model family.
+//!
+//! Implements, in plain f32 loops, the exact semantics the python side
+//! lowers to HLO (see `python/compile/model.py` + `kernels/matmul.py`):
+//! `act(x @ w + b)` dense layers with ReLU/tanh-GELU epilogues, the three
+//! block kinds (`relu_res`, `bottleneck`, `preln_gelu`), LayerNorm, the
+//! mean-CE loss with log-softmax, per-tensor symmetric fake-quantization
+//! with a straight-through gradient, global-norm clipping at 5.0, the
+//! SimSiam cosine loss, and the linear-CKA Gram statistic.
+//!
+//! Backward passes mirror the JAX `custom_vjp` rules one-to-one:
+//! * dense ReLU uses the saved *output* mask (`dout * (out > 0)`);
+//! * dense GELU pushes the cotangent through the tanh-approximation
+//!   derivative at the saved pre-activation;
+//! * the `relu_res` blocks' *outer* residual ReLU is `jnp.maximum`, whose
+//!   tie case routes half the cotangent (`lax.max` JVP) — reproduced here
+//!   so zero-initialized residual paths differentiate identically;
+//! * fake-quant is a straight-through estimator: forward uses quantized
+//!   values, backward treats the quantizer as identity, and downstream
+//!   VJPs contract against the saved *quantized* tensors.
+//!
+//! Everything is sequential and allocation-order deterministic, so runs
+//! are bit-identical across sweep worker counts.
+
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use crate::runtime::artifact::ModelManifest;
+
+pub const MAX_GRAD_NORM: f32 = 5.0;
+const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// elementwise pieces
+// ---------------------------------------------------------------------------
+
+/// tanh-approximation GELU (`jax.nn.gelu` with `approximate=True`).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    let u = C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d gelu / dx at pre-activation `x`.
+pub fn gelu_prime(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Round half to even (numpy/jnp.round semantics, vs Rust's half-away).
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            x.ceil()
+        }
+    } else {
+        r
+    }
+}
+
+/// Per-tensor symmetric 8-bit fake-quantization (forward values only; the
+/// caller implements the straight-through gradient by saving the output).
+pub fn fake_quant(v: &[f32]) -> Vec<f32> {
+    let qmax = 127.0f32; // 2^(8-1) - 1
+    let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = amax.max(1e-8) / qmax;
+    v.iter()
+        .map(|&x| round_ties_even(x / scale).clamp(-qmax, qmax) * scale)
+        .collect()
+}
+
+/// In-place clip-by-global-norm (matches `_clip_global` in model.py).
+pub fn clip_global(g: &mut [f32], max_norm: f32) {
+    let norm = g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32;
+    let scale = (max_norm / norm.max(1e-12)).min(1.0);
+    if scale < 1.0 {
+        for v in g.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense layer (act(x @ w + b)) with tape
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Gelu,
+}
+
+/// Saved residuals of one dense layer for its VJP: the input and weights
+/// *as used* (quantized under QAT — that is what makes the backward a
+/// straight-through estimator), plus the activation residual (`out` for
+/// ReLU's mask, pre-activation `z` for GELU).
+pub struct DenseTape {
+    x: Vec<f32>,
+    w: Vec<f32>,
+    post: Vec<f32>,
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+}
+
+pub struct DenseGrads {
+    pub dx: Vec<f32>,
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x[i * k..(i + 1) * k];
+        let dst = &mut out[i * n..(i + 1) * n];
+        dst.copy_from_slice(b);
+        for (t, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[t * n..(t + 1) * n];
+            for (o, &wv) in dst.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Inference-only dense: no tape, no quantization.
+pub fn dense_infer(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, act: Act) -> Vec<f32> {
+    let mut out = matmul_bias(x, w, b, m, k, n);
+    match act {
+        Act::None => {}
+        Act::Relu => out.iter_mut().for_each(|v| *v = v.max(0.0)),
+        Act::Gelu => out.iter_mut().for_each(|v| *v = gelu(*v)),
+    }
+    out
+}
+
+/// Training dense: returns the activation output and the VJP tape.
+pub fn dense_train(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    quant: bool,
+) -> (Vec<f32>, DenseTape) {
+    let (xq, wq) = if quant {
+        (fake_quant(x), fake_quant(w))
+    } else {
+        (x.to_vec(), w.to_vec())
+    };
+    let z = matmul_bias(&xq, &wq, b, m, k, n);
+    let (out, post) = match act {
+        Act::None => (z, Vec::new()),
+        Act::Relu => {
+            let out: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+            (out.clone(), out)
+        }
+        Act::Gelu => {
+            let out: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
+            (out, z)
+        }
+    };
+    (out, DenseTape { x: xq, w: wq, post, m, k, n, act })
+}
+
+/// Dense VJP: `dz` from the activation rule, then `dx = dz @ wᵀ`,
+/// `dw = xᵀ @ dz`, `db = Σ_rows dz`.
+pub fn dense_bwd(t: &DenseTape, dout: &[f32]) -> DenseGrads {
+    let (m, k, n) = (t.m, t.k, t.n);
+    debug_assert_eq!(dout.len(), m * n);
+    let dz: Vec<f32> = match t.act {
+        Act::None => dout.to_vec(),
+        Act::Relu => dout
+            .iter()
+            .zip(&t.post)
+            .map(|(&g, &o)| if o > 0.0 { g } else { 0.0 })
+            .collect(),
+        Act::Gelu => dout
+            .iter()
+            .zip(&t.post)
+            .map(|(&g, &z)| g * gelu_prime(z))
+            .collect(),
+    };
+    // dx[i,t] = Σ_j dz[i,j] * w[t,j]
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let dzr = &dz[i * n..(i + 1) * n];
+        let dst = &mut dx[i * k..(i + 1) * k];
+        for tt in 0..k {
+            let wrow = &t.w[tt * n..(tt + 1) * n];
+            let mut acc = 0.0f32;
+            for (g, wv) in dzr.iter().zip(wrow) {
+                acc += g * wv;
+            }
+            dst[tt] = acc;
+        }
+    }
+    // dw[t,j] = Σ_i x[i,t] * dz[i,j]
+    let mut dw = vec![0.0f32; k * n];
+    for i in 0..m {
+        let xr = &t.x[i * k..(i + 1) * k];
+        let dzr = &dz[i * n..(i + 1) * n];
+        for (tt, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let dst = &mut dw[tt * n..(tt + 1) * n];
+            for (o, &g) in dst.iter_mut().zip(dzr) {
+                *o += xv * g;
+            }
+        }
+    }
+    let mut db = vec![0.0f32; n];
+    for i in 0..m {
+        for (o, &g) in db.iter_mut().zip(&dz[i * n..(i + 1) * n]) {
+            *o += g;
+        }
+    }
+    DenseGrads { dx, dw, db }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
+
+pub struct LnTape {
+    normed: Vec<f32>,
+    inv_std: Vec<f32>,
+    m: usize,
+    h: usize,
+}
+
+/// `out = normed(x) * s + b` per row; var is the biased mean of squares
+/// (jnp.var), eps = 1e-5.
+pub fn layernorm_fwd(x: &[f32], s: &[f32], b: &[f32], m: usize, h: usize) -> (Vec<f32>, LnTape) {
+    let mut out = vec![0.0f32; m * h];
+    let mut normed = vec![0.0f32; m * h];
+    let mut inv_std = vec![0.0f32; m];
+    for i in 0..m {
+        let row = &x[i * h..(i + 1) * h];
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[i] = is;
+        for j in 0..h {
+            let nv = (row[j] - mu) * is;
+            normed[i * h + j] = nv;
+            out[i * h + j] = nv * s[j] + b[j];
+        }
+    }
+    (out, LnTape { normed, inv_std, m, h })
+}
+
+/// LayerNorm VJP: returns (dx, ds, db).
+pub fn layernorm_bwd(t: &LnTape, s: &[f32], dout: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (m, h) = (t.m, t.h);
+    let mut dx = vec![0.0f32; m * h];
+    let mut ds = vec![0.0f32; h];
+    let mut db = vec![0.0f32; h];
+    for i in 0..m {
+        let nrm = &t.normed[i * h..(i + 1) * h];
+        let dor = &dout[i * h..(i + 1) * h];
+        let mut mean_dn = 0.0f32;
+        let mut mean_dn_n = 0.0f32;
+        for j in 0..h {
+            ds[j] += dor[j] * nrm[j];
+            db[j] += dor[j];
+            let dn = dor[j] * s[j];
+            mean_dn += dn;
+            mean_dn_n += dn * nrm[j];
+        }
+        mean_dn /= h as f32;
+        mean_dn_n /= h as f32;
+        let is = t.inv_std[i];
+        for j in 0..h {
+            let dn = dor[j] * s[j];
+            dx[i * h + j] = is * (dn - mean_dn - nrm[j] * mean_dn_n);
+        }
+    }
+    (dx, ds, db)
+}
+
+// ---------------------------------------------------------------------------
+// losses
+// ---------------------------------------------------------------------------
+
+/// Mean cross-entropy over log-softmax rows; returns (loss, dlogits).
+pub fn ce_loss_and_grad(logits: &[f32], y: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), b * c);
+    debug_assert_eq!(y.len(), b);
+    let mut loss = 0.0f32;
+    let mut dl = vec![0.0f32; b * c];
+    let inv_b = 1.0 / b as f32;
+    for i in 0..b {
+        let row = &logits[i * c..(i + 1) * c];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let lse = mx + sum.ln();
+        let yi = y[i] as usize;
+        loss += lse - row[yi];
+        let drow = &mut dl[i * c..(i + 1) * c];
+        for j in 0..c {
+            let p = (row[j] - lse).exp();
+            drow[j] = (p - if j == yi { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    (loss * inv_b, dl)
+}
+
+/// Batch-mean row cosine `mean_i cos(a_i, t_i)` with the target rows
+/// treated as constants (SimSiam's stop-gradient); returns (cos, da).
+/// Row norms are floored at 1e-8 like the python side.
+pub fn cosine_mean_sg(a: &[f32], target: &[f32], b: usize, h: usize) -> (f32, Vec<f32>) {
+    let mut total = 0.0f32;
+    let mut da = vec![0.0f32; b * h];
+    let inv_b = 1.0 / b as f32;
+    for i in 0..b {
+        let ar = &a[i * h..(i + 1) * h];
+        let tr = &target[i * h..(i + 1) * h];
+        let na_raw = ar.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let nt_raw = tr.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let na = na_raw.max(1e-8);
+        let nt = nt_raw.max(1e-8);
+        let mut dot = 0.0f32;
+        for j in 0..h {
+            dot += (ar[j] / na) * (tr[j] / nt);
+        }
+        total += dot;
+        let dst = &mut da[i * h..(i + 1) * h];
+        if na_raw > 1e-8 {
+            // d/da of (â · t̂) = (t̂ - dot · â) / ||a||
+            for j in 0..h {
+                dst[j] = inv_b * (tr[j] / nt - dot * ar[j] / na) / na;
+            }
+        } else {
+            // the norm floor is active: â = a / 1e-8, derivative is linear
+            for j in 0..h {
+                dst[j] = inv_b * (tr[j] / nt) / na;
+            }
+        }
+    }
+    (total * inv_b, da)
+}
+
+/// Linear CKA between (B, H) feature maps: `||YᵀX||_F² / (||XᵀX||_F ||YᵀY||_F)`.
+pub fn cka(x: &[f32], y: &[f32], b: usize, h: usize) -> f32 {
+    debug_assert_eq!(x.len(), b * h);
+    debug_assert_eq!(y.len(), b * h);
+    // gram(aᵀc) entries accumulated column-by-column; h×h is tiny here.
+    let mut cross2 = 0.0f32;
+    let mut selfx2 = 0.0f32;
+    let mut selfy2 = 0.0f32;
+    for p in 0..h {
+        for q in 0..h {
+            let mut yx = 0.0f32;
+            let mut xx = 0.0f32;
+            let mut yy = 0.0f32;
+            for i in 0..b {
+                let xv_p = x[i * h + p];
+                let xv_q = x[i * h + q];
+                let yv_p = y[i * h + p];
+                let yv_q = y[i * h + q];
+                yx += yv_p * xv_q;
+                xx += xv_p * xv_q;
+                yy += yv_p * yv_q;
+            }
+            cross2 += yx * yx;
+            selfx2 += xx * xx;
+            selfy2 += yy * yy;
+        }
+    }
+    let denom = selfx2.sqrt() * selfy2.sqrt();
+    cross2 / denom.max(1e-12)
+}
+
+// ---------------------------------------------------------------------------
+// the model family
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    ReluRes,
+    Bottleneck,
+    PrelnGelu,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "relu_res" => Kind::ReluRes,
+            "bottleneck" => Kind::Bottleneck,
+            "preln_gelu" => Kind::PrelnGelu,
+            other => anyhow::bail!("unknown model kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct BlockOff {
+    ln_s: usize,
+    ln_b: usize,
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+}
+
+/// Manifest-bound executor for one model: flat-θ offsets + dimensions.
+pub struct RefModel {
+    pub kind: Kind,
+    pub d: usize,
+    pub h: usize,
+    pub e: usize,
+    pub blocks: usize,
+    pub classes: usize,
+    pub theta_len: usize,
+    embed_w: usize,
+    embed_b: usize,
+    block_off: Vec<BlockOff>,
+    head_w: usize,
+    head_b: usize,
+    /// (offset, len, unit) per tensor — lr-mask expansion.
+    mask_segments: Vec<(usize, usize, usize)>,
+}
+
+enum BlockTape {
+    ReluRes { d1: DenseTape, d2: DenseTape, h_out: Vec<f32> },
+    Bottleneck { d1: DenseTape, d2: DenseTape },
+    Preln { ln: LnTape, d1: DenseTape, d2: DenseTape },
+}
+
+struct ModelTape {
+    embed: DenseTape,
+    blocks: Vec<BlockTape>,
+    head: Option<DenseTape>,
+}
+
+impl RefModel {
+    pub fn from_manifest(m: &ModelManifest) -> Result<RefModel> {
+        let kind = Kind::parse(&m.kind)?;
+        let find = |name: &str| -> Result<(usize, Vec<usize>)> {
+            m.tensors
+                .iter()
+                .find(|t| t.name == name)
+                .map(|t| (t.offset, t.shape.clone()))
+                .ok_or_else(|| anyhow::anyhow!("{}: manifest lacks tensor {name:?}", m.name))
+        };
+        let (embed_w, ew_shape) = find("embed.w")?;
+        anyhow::ensure!(
+            ew_shape == vec![m.d, m.h],
+            "{}: embed.w shape {ew_shape:?} != [{}, {}]",
+            m.name,
+            m.d,
+            m.h
+        );
+        let (embed_b, _) = find("embed.b")?;
+        let mut e = m.h;
+        let mut block_off = Vec::with_capacity(m.blocks);
+        for i in 1..=m.blocks {
+            let p = format!("block{i}.");
+            let (w1, w1_shape) = find(&format!("{p}w1"))?;
+            anyhow::ensure!(w1_shape.len() == 2 && w1_shape[0] == m.h, "{}: bad w1 shape", m.name);
+            e = w1_shape[1];
+            let (b1, _) = find(&format!("{p}b1"))?;
+            let (w2, _) = find(&format!("{p}w2"))?;
+            let (b2, _) = find(&format!("{p}b2"))?;
+            let (ln_s, ln_b) = if kind == Kind::PrelnGelu {
+                (find(&format!("{p}ln_s"))?.0, find(&format!("{p}ln_b"))?.0)
+            } else {
+                (0, 0)
+            };
+            block_off.push(BlockOff { ln_s, ln_b, w1, b1, w2, b2 });
+        }
+        let (head_w, _) = find("head.w")?;
+        let (head_b, _) = find("head.b")?;
+        let mask_segments = m
+            .tensors
+            .iter()
+            .map(|t| (t.offset, t.size(), t.unit))
+            .collect();
+        Ok(RefModel {
+            kind,
+            d: m.d,
+            h: m.h,
+            e,
+            blocks: m.blocks,
+            classes: m.classes,
+            theta_len: m.theta_len,
+            embed_w,
+            embed_b,
+            block_off,
+            head_w,
+            head_b,
+            mask_segments,
+        })
+    }
+
+    fn slice<'a>(&self, theta: &'a [f32], off: usize, len: usize) -> &'a [f32] {
+        &theta[off..off + len]
+    }
+
+    // -- inference-mode forward (no tape, no quant) -------------------------
+
+    fn block_infer(&self, theta: &[f32], o: &BlockOff, hcur: &[f32], b: usize) -> Vec<f32> {
+        let (h, e) = (self.h, self.e);
+        match self.kind {
+            Kind::ReluRes | Kind::Bottleneck => {
+                let mid = dense_infer(
+                    hcur,
+                    self.slice(theta, o.w1, h * e),
+                    self.slice(theta, o.b1, e),
+                    b,
+                    h,
+                    e,
+                    Act::Relu,
+                );
+                let out = dense_infer(
+                    &mid,
+                    self.slice(theta, o.w2, e * h),
+                    self.slice(theta, o.b2, h),
+                    b,
+                    e,
+                    h,
+                    Act::None,
+                );
+                if self.kind == Kind::ReluRes {
+                    hcur.iter().zip(&out).map(|(&a, &v)| (a + v).max(0.0)).collect()
+                } else {
+                    hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect()
+                }
+            }
+            Kind::PrelnGelu => {
+                let (ln, _) = layernorm_fwd(
+                    hcur,
+                    self.slice(theta, o.ln_s, h),
+                    self.slice(theta, o.ln_b, h),
+                    b,
+                    h,
+                );
+                let mid = dense_infer(
+                    &ln,
+                    self.slice(theta, o.w1, h * e),
+                    self.slice(theta, o.b1, e),
+                    b,
+                    h,
+                    e,
+                    Act::Gelu,
+                );
+                let out = dense_infer(
+                    &mid,
+                    self.slice(theta, o.w2, e * h),
+                    self.slice(theta, o.b2, h),
+                    b,
+                    e,
+                    h,
+                    Act::None,
+                );
+                hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect()
+            }
+        }
+    }
+
+    /// Forward pass: logits `[b, classes]`.
+    pub fn infer(&self, theta: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+        let (d, h) = (self.d, self.h);
+        let mut hcur = dense_infer(
+            x,
+            self.slice(theta, self.embed_w, d * h),
+            self.slice(theta, self.embed_b, h),
+            b,
+            d,
+            h,
+            Act::Relu,
+        );
+        for o in &self.block_off {
+            hcur = self.block_infer(theta, o, &hcur, b);
+        }
+        dense_infer(
+            &hcur,
+            self.slice(theta, self.head_w, h * self.classes),
+            self.slice(theta, self.head_b, self.classes),
+            b,
+            h,
+            self.classes,
+            Act::None,
+        )
+    }
+
+    /// Per-unit feature maps `[blocks+1, b, h]` (embed output + each block
+    /// output; the head has no feature map).
+    pub fn features(&self, theta: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+        let (d, h) = (self.d, self.h);
+        let mut out = Vec::with_capacity((self.blocks + 1) * b * h);
+        let mut hcur = dense_infer(
+            x,
+            self.slice(theta, self.embed_w, d * h),
+            self.slice(theta, self.embed_b, h),
+            b,
+            d,
+            h,
+            Act::Relu,
+        );
+        out.extend_from_slice(&hcur);
+        for o in &self.block_off {
+            hcur = self.block_infer(theta, o, &hcur, b);
+            out.extend_from_slice(&hcur);
+        }
+        out
+    }
+
+    // -- training-mode forward/backward -------------------------------------
+
+    fn forward_train(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        b: usize,
+        quant: bool,
+        with_head: bool,
+    ) -> (Vec<f32>, ModelTape) {
+        let (d, h, e) = (self.d, self.h, self.e);
+        let (mut hcur, embed) = dense_train(
+            x,
+            self.slice(theta, self.embed_w, d * h),
+            self.slice(theta, self.embed_b, h),
+            b,
+            d,
+            h,
+            Act::Relu,
+            quant,
+        );
+        let mut blocks = Vec::with_capacity(self.blocks);
+        for o in &self.block_off {
+            match self.kind {
+                Kind::ReluRes | Kind::Bottleneck => {
+                    let (mid, d1) = dense_train(
+                        &hcur,
+                        self.slice(theta, o.w1, h * e),
+                        self.slice(theta, o.b1, e),
+                        b,
+                        h,
+                        e,
+                        Act::Relu,
+                        quant,
+                    );
+                    let (out, d2) = dense_train(
+                        &mid,
+                        self.slice(theta, o.w2, e * h),
+                        self.slice(theta, o.b2, h),
+                        b,
+                        e,
+                        h,
+                        Act::None,
+                        quant,
+                    );
+                    if self.kind == Kind::ReluRes {
+                        let h_out: Vec<f32> = hcur
+                            .iter()
+                            .zip(&out)
+                            .map(|(&a, &v)| (a + v).max(0.0))
+                            .collect();
+                        hcur = h_out.clone();
+                        blocks.push(BlockTape::ReluRes { d1, d2, h_out });
+                    } else {
+                        hcur = hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect();
+                        blocks.push(BlockTape::Bottleneck { d1, d2 });
+                    }
+                }
+                Kind::PrelnGelu => {
+                    let (ln_out, ln) = layernorm_fwd(
+                        &hcur,
+                        self.slice(theta, o.ln_s, h),
+                        self.slice(theta, o.ln_b, h),
+                        b,
+                        h,
+                    );
+                    let (mid, d1) = dense_train(
+                        &ln_out,
+                        self.slice(theta, o.w1, h * e),
+                        self.slice(theta, o.b1, e),
+                        b,
+                        h,
+                        e,
+                        Act::Gelu,
+                        quant,
+                    );
+                    let (out, d2) = dense_train(
+                        &mid,
+                        self.slice(theta, o.w2, e * h),
+                        self.slice(theta, o.b2, h),
+                        b,
+                        e,
+                        h,
+                        Act::None,
+                        quant,
+                    );
+                    hcur = hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect();
+                    blocks.push(BlockTape::Preln { ln, d1, d2 });
+                }
+            }
+        }
+        if with_head {
+            let (logits, head) = dense_train(
+                &hcur,
+                self.slice(theta, self.head_w, h * self.classes),
+                self.slice(theta, self.head_b, self.classes),
+                b,
+                h,
+                self.classes,
+                Act::None,
+                quant,
+            );
+            (logits, ModelTape { embed, blocks, head: Some(head) })
+        } else {
+            (hcur, ModelTape { embed, blocks, head: None })
+        }
+    }
+
+    /// Reverse pass: accumulate ∂loss/∂θ into `dtheta` given the cotangent
+    /// of the tape's output (`dout` = dlogits with a head, d_backbone
+    /// features without).
+    fn backward(&self, theta: &[f32], tape: &ModelTape, dout: &[f32], dtheta: &mut [f32]) {
+        let h = self.h;
+        let mut dh: Vec<f32>;
+        if let Some(head) = &tape.head {
+            let g = dense_bwd(head, dout);
+            accumulate(dtheta, self.head_w, &g.dw);
+            accumulate(dtheta, self.head_b, &g.db);
+            dh = g.dx;
+        } else {
+            dh = dout.to_vec();
+        }
+        for (o, bt) in self.block_off.iter().zip(&tape.blocks).rev() {
+            match bt {
+                BlockTape::ReluRes { d1, d2, h_out } => {
+                    // outer relu is jnp.maximum(sum, 0): ties route half.
+                    let dsum: Vec<f32> = dh
+                        .iter()
+                        .zip(h_out)
+                        .map(|(&g, &o)| {
+                            if o > 0.0 {
+                                g
+                            } else if o == 0.0 {
+                                0.5 * g
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect();
+                    let g2 = dense_bwd(d2, &dsum);
+                    accumulate(dtheta, o.w2, &g2.dw);
+                    accumulate(dtheta, o.b2, &g2.db);
+                    let g1 = dense_bwd(d1, &g2.dx);
+                    accumulate(dtheta, o.w1, &g1.dw);
+                    accumulate(dtheta, o.b1, &g1.db);
+                    dh = dsum.iter().zip(&g1.dx).map(|(&a, &b)| a + b).collect();
+                }
+                BlockTape::Bottleneck { d1, d2 } => {
+                    let g2 = dense_bwd(d2, &dh);
+                    accumulate(dtheta, o.w2, &g2.dw);
+                    accumulate(dtheta, o.b2, &g2.db);
+                    let g1 = dense_bwd(d1, &g2.dx);
+                    accumulate(dtheta, o.w1, &g1.dw);
+                    accumulate(dtheta, o.b1, &g1.db);
+                    dh = dh.iter().zip(&g1.dx).map(|(&a, &b)| a + b).collect();
+                }
+                BlockTape::Preln { ln, d1, d2 } => {
+                    let g2 = dense_bwd(d2, &dh);
+                    accumulate(dtheta, o.w2, &g2.dw);
+                    accumulate(dtheta, o.b2, &g2.db);
+                    let g1 = dense_bwd(d1, &g2.dx);
+                    accumulate(dtheta, o.w1, &g1.dw);
+                    accumulate(dtheta, o.b1, &g1.db);
+                    let (dx_ln, ds, db) =
+                        layernorm_bwd(ln, self.slice(theta, o.ln_s, h), &g1.dx);
+                    accumulate(dtheta, o.ln_s, &ds);
+                    accumulate(dtheta, o.ln_b, &db);
+                    dh = dh.iter().zip(&dx_ln).map(|(&a, &b)| a + b).collect();
+                }
+            }
+        }
+        let ge = dense_bwd(&tape.embed, &dh);
+        accumulate(dtheta, self.embed_w, &ge.dw);
+        accumulate(dtheta, self.embed_b, &ge.db);
+    }
+
+    /// Expand the per-unit lr mask over the flat gradient (mask *before*
+    /// clip, exactly like `train_fn` in model.py — this is also what makes
+    /// prefix truncation and lr-mask freezing produce identical surviving
+    /// updates, so the `k` of a `train_k` segment never changes the math).
+    fn apply_mask(&self, g: &mut [f32], lr_mask: &[f32]) {
+        for &(off, len, unit) in &self.mask_segments {
+            let mv = lr_mask[unit];
+            if mv == 1.0 {
+                continue;
+            }
+            for v in &mut g[off..off + len] {
+                *v *= mv;
+            }
+        }
+    }
+
+    /// One SGD step (the `train_k` / `train_q_k` segments); returns
+    /// `(θ', loss)`.
+    pub fn train_step(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        y: &[i32],
+        b: usize,
+        lr_mask: &[f32],
+        lr: f32,
+        quant: bool,
+    ) -> (Vec<f32>, f32) {
+        let (logits, tape) = self.forward_train(theta, x, b, quant, true);
+        let (loss, dlogits) = ce_loss_and_grad(&logits, y, b, self.classes);
+        let mut g = vec![0.0f32; self.theta_len];
+        self.backward(theta, &tape, &dlogits, &mut g);
+        self.apply_mask(&mut g, lr_mask);
+        clip_global(&mut g, MAX_GRAD_NORM);
+        let theta_new: Vec<f32> =
+            theta.iter().zip(&g).map(|(&t, &gv)| t - lr * gv).collect();
+        (theta_new, loss)
+    }
+
+    /// One SimSiam step (the `ssl` segment); φ layout is
+    /// `[proj.w (h,h), proj.b (h), pred.w (h,h), pred.b (h)]`.
+    /// Returns `(θ', φ', loss)`.
+    pub fn ssl_step(
+        &self,
+        theta: &[f32],
+        phi: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        b: usize,
+        lr_mask: &[f32],
+        lr: f32,
+    ) -> (Vec<f32>, Vec<f32>, f32) {
+        let h = self.h;
+        let (proj_w, proj_b) = (0, h * h);
+        let (pred_w, pred_b) = (h * h + h, 2 * h * h + h);
+        debug_assert_eq!(phi.len(), 2 * h * h + 2 * h);
+
+        let (bb1, tape1) = self.forward_train(theta, x1, b, false, false);
+        let (bb2, tape2) = self.forward_train(theta, x2, b, false, false);
+        let (z1, pj1) = dense_train(
+            &bb1, &phi[proj_w..proj_w + h * h], &phi[proj_b..proj_b + h],
+            b, h, h, Act::None, false,
+        );
+        let (z2, pj2) = dense_train(
+            &bb2, &phi[proj_w..proj_w + h * h], &phi[proj_b..proj_b + h],
+            b, h, h, Act::None, false,
+        );
+        let (p1, pd1) = dense_train(
+            &z1, &phi[pred_w..pred_w + h * h], &phi[pred_b..pred_b + h],
+            b, h, h, Act::None, false,
+        );
+        let (p2, pd2) = dense_train(
+            &z2, &phi[pred_w..pred_w + h * h], &phi[pred_b..pred_b + h],
+            b, h, h, Act::None, false,
+        );
+
+        // loss = -(cos(p1, sg(z2)) + cos(p2, sg(z1))) / 2
+        let (c1, dp1_cos) = cosine_mean_sg(&p1, &z2, b, h);
+        let (c2, dp2_cos) = cosine_mean_sg(&p2, &z1, b, h);
+        let loss = -(c1 + c2) / 2.0;
+        let dp1: Vec<f32> = dp1_cos.iter().map(|&v| -0.5 * v).collect();
+        let dp2: Vec<f32> = dp2_cos.iter().map(|&v| -0.5 * v).collect();
+
+        let mut gphi = vec![0.0f32; phi.len()];
+        let mut gtheta = vec![0.0f32; self.theta_len];
+        // branch 1: p1 <- pred(z1) <- proj(bb1) <- backbone(x1)
+        let g_pd1 = dense_bwd(&pd1, &dp1);
+        accumulate(&mut gphi, pred_w, &g_pd1.dw);
+        accumulate(&mut gphi, pred_b, &g_pd1.db);
+        let g_pj1 = dense_bwd(&pj1, &g_pd1.dx);
+        accumulate(&mut gphi, proj_w, &g_pj1.dw);
+        accumulate(&mut gphi, proj_b, &g_pj1.db);
+        self.backward(theta, &tape1, &g_pj1.dx, &mut gtheta);
+        // branch 2: p2 <- pred(z2) <- proj(bb2) <- backbone(x2)
+        let g_pd2 = dense_bwd(&pd2, &dp2);
+        accumulate(&mut gphi, pred_w, &g_pd2.dw);
+        accumulate(&mut gphi, pred_b, &g_pd2.db);
+        let g_pj2 = dense_bwd(&pj2, &g_pd2.dx);
+        accumulate(&mut gphi, proj_w, &g_pj2.dw);
+        accumulate(&mut gphi, proj_b, &g_pj2.db);
+        self.backward(theta, &tape2, &g_pj2.dx, &mut gtheta);
+
+        self.apply_mask(&mut gtheta, lr_mask);
+        clip_global(&mut gtheta, MAX_GRAD_NORM);
+        clip_global(&mut gphi, MAX_GRAD_NORM);
+        let theta_new: Vec<f32> =
+            theta.iter().zip(&gtheta).map(|(&t, &g)| t - lr * g).collect();
+        let phi_new: Vec<f32> =
+            phi.iter().zip(&gphi).map(|(&p, &g)| p - lr * g).collect();
+        (theta_new, phi_new, loss)
+    }
+}
+
+fn accumulate(dst: &mut [f32], off: usize, src: &[f32]) {
+    for (o, &s) in dst[off..off + src.len()].iter_mut().zip(src) {
+        *o += s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tests — hand-derived VJPs checked against central finite differences
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Scalar objective: sum of `weights * dense_out` (a fixed linear
+    /// functional so the cotangent is the weight vector).
+    fn dense_obj(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, act: Act, cot: &[f32]) -> f32 {
+        dense_infer(x, w, b, m, k, n, act)
+            .iter()
+            .zip(cot)
+            .map(|(&o, &c)| o * c)
+            .sum()
+    }
+
+    #[test]
+    fn dense_relu_bwd_equals_masked_linear_bwd() {
+        // exact identity (no finite differences across the kink): the ReLU
+        // VJP is the linear VJP with the cotangent masked by `out > 0`.
+        let (m, k, n) = (3, 4, 5);
+        let mut rng = Pcg32::new(13, 3);
+        let x = randv(&mut rng, m * k, 1.0);
+        let w = randv(&mut rng, k * n, 0.5);
+        let b = randv(&mut rng, n, 0.2);
+        let cot = randv(&mut rng, m * n, 1.0);
+        let (out, tape_r) = dense_train(&x, &w, &b, m, k, n, Act::Relu, false);
+        let (z, tape_n) = dense_train(&x, &w, &b, m, k, n, Act::None, false);
+        assert!(out.iter().zip(&z).all(|(&o, &zv)| o == zv.max(0.0)));
+        let masked: Vec<f32> = cot
+            .iter()
+            .zip(&z)
+            .map(|(&c, &zv)| if zv > 0.0 { c } else { 0.0 })
+            .collect();
+        let gr = dense_bwd(&tape_r, &cot);
+        let gn = dense_bwd(&tape_n, &masked);
+        assert_eq!(gr.dx, gn.dx);
+        assert_eq!(gr.dw, gn.dw);
+        assert_eq!(gr.db, gn.db);
+    }
+
+    #[test]
+    fn dense_bwd_matches_finite_differences() {
+        for act in [Act::None, Act::Gelu] {
+            let (m, k, n) = (3, 4, 5);
+            let mut rng = Pcg32::new(11, 3);
+            let x = randv(&mut rng, m * k, 1.0);
+            let w = randv(&mut rng, k * n, 0.5);
+            let b = randv(&mut rng, n, 0.2);
+            let cot = randv(&mut rng, m * n, 1.0);
+            let (_, tape) = dense_train(&x, &w, &b, m, k, n, act, false);
+            let g = dense_bwd(&tape, &cot);
+            let eps = 1e-3f32;
+            for idx in 0..k * n {
+                let mut wp = w.clone();
+                let mut wm = w.clone();
+                wp[idx] += eps;
+                wm[idx] -= eps;
+                let fd = (dense_obj(&x, &wp, &b, m, k, n, act, &cot)
+                    - dense_obj(&x, &wm, &b, m, k, n, act, &cot))
+                    / (2.0 * eps);
+                assert!(
+                    (fd - g.dw[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{act:?} dw[{idx}]: fd {fd} vs {g}",
+                    g = g.dw[idx]
+                );
+            }
+            for idx in 0..m * k {
+                let mut xp = x.clone();
+                let mut xm = x.clone();
+                xp[idx] += eps;
+                xm[idx] -= eps;
+                let fd = (dense_obj(&xp, &w, &b, m, k, n, act, &cot)
+                    - dense_obj(&xm, &w, &b, m, k, n, act, &cot))
+                    / (2.0 * eps);
+                assert!(
+                    (fd - g.dx[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{act:?} dx[{idx}]: fd {fd} vs {g}",
+                    g = g.dx[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_finite_differences() {
+        let (m, h) = (2, 6);
+        let mut rng = Pcg32::new(21, 5);
+        let x = randv(&mut rng, m * h, 1.0);
+        let s = randv(&mut rng, h, 0.5);
+        let bb = randv(&mut rng, h, 0.3);
+        let cot = randv(&mut rng, m * h, 1.0);
+        let obj = |xv: &[f32]| -> f32 {
+            let (out, _) = layernorm_fwd(xv, &s, &bb, m, h);
+            out.iter().zip(&cot).map(|(&o, &c)| o * c).sum()
+        };
+        let (_, tape) = layernorm_fwd(&x, &s, &bb, m, h);
+        let (dx, ds, db) = layernorm_bwd(&tape, &s, &cot);
+        let eps = 1e-3f32;
+        for idx in 0..m * h {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[idx] += eps;
+            xm[idx] -= eps;
+            let fd = (obj(&xp) - obj(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dx[{idx}]: fd {fd} vs {}",
+                dx[idx]
+            );
+        }
+        // affine params: ds = Σ cot*normed, db = Σ cot (checked directly)
+        for j in 0..h {
+            let want_db: f32 = (0..m).map(|i| cot[i * h + j]).sum();
+            assert!((db[j] - want_db).abs() < 1e-5);
+        }
+        assert_eq!(ds.len(), h);
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_differences() {
+        let (b, c) = (4, 5);
+        let mut rng = Pcg32::new(31, 7);
+        let logits = randv(&mut rng, b * c, 2.0);
+        let y: Vec<i32> = (0..b).map(|i| (i % c) as i32).collect();
+        let (loss, dl) = ce_loss_and_grad(&logits, &y, b, c);
+        assert!(loss > 0.0 && loss.is_finite());
+        let eps = 1e-3f32;
+        for idx in 0..b * c {
+            let mut lp = logits.clone();
+            let mut lm = logits.clone();
+            lp[idx] += eps;
+            lm[idx] -= eps;
+            let fd = (ce_loss_and_grad(&lp, &y, b, c).0
+                - ce_loss_and_grad(&lm, &y, b, c).0)
+                / (2.0 * eps);
+            assert!(
+                (fd - dl[idx]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "dl[{idx}]: fd {fd} vs {}",
+                dl[idx]
+            );
+        }
+        // softmax-grad rows sum to ~0
+        for i in 0..b {
+            let s: f32 = dl[i * c..(i + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cosine_grad_matches_finite_differences() {
+        let (b, h) = (3, 6);
+        let mut rng = Pcg32::new(41, 9);
+        let a = randv(&mut rng, b * h, 1.0);
+        let t = randv(&mut rng, b * h, 1.0);
+        let (cos, da) = cosine_mean_sg(&a, &t, b, h);
+        assert!(cos.abs() <= 1.0 + 1e-5);
+        let eps = 1e-3f32;
+        for idx in 0..b * h {
+            let mut ap = a.clone();
+            let mut am = a.clone();
+            ap[idx] += eps;
+            am[idx] -= eps;
+            let fd = (cosine_mean_sg(&ap, &t, b, h).0
+                - cosine_mean_sg(&am, &t, b, h).0)
+                / (2.0 * eps);
+            assert!(
+                (fd - da[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "da[{idx}]: fd {fd} vs {}",
+                da[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_prime_matches_finite_differences() {
+        for &x in &[-3.0f32, -1.0, -0.1, 0.0, 0.1, 1.0, 3.0] {
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!(
+                (fd - gelu_prime(x)).abs() < 1e-3,
+                "gelu'({x}): fd {fd} vs {}",
+                gelu_prime(x)
+            );
+        }
+    }
+
+    #[test]
+    fn clip_global_caps_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5 — exactly at the cap
+        clip_global(&mut g, MAX_GRAD_NORM);
+        assert_eq!(g, vec![3.0, 4.0]);
+        let mut g = vec![30.0f32, 40.0]; // norm 50 -> scaled to 5
+        clip_global(&mut g, MAX_GRAD_NORM);
+        let norm = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((norm - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fake_quant_is_idempotent_and_bounded() {
+        let v = vec![-1.3f32, 0.0, 0.4, 2.7];
+        let q = fake_quant(&v);
+        let qq = fake_quant(&q);
+        for (a, b) in q.iter().zip(&qq) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let amax = 2.7f32;
+        for (&orig, &quant) in v.iter().zip(&q) {
+            assert!((orig - quant).abs() <= amax / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn cka_is_one_on_identical_features() {
+        let mut rng = Pcg32::new(51, 2);
+        let x = randv(&mut rng, 16 * 8, 1.0);
+        let v = cka(&x, &x, 16, 8);
+        assert!((v - 1.0).abs() < 1e-4, "cka(x,x) = {v}");
+        let y = randv(&mut rng, 16 * 8, 1.0);
+        let w = cka(&x, &y, 16, 8);
+        assert!(w.is_finite() && w >= 0.0 && w < 1.0, "cka(x,y) = {w}");
+    }
+}

@@ -1,0 +1,344 @@
+//! The pure-Rust reference backend: executes the artifact segments'
+//! *semantics* (forward pass, SGD train step, SimSiam step, feature probe,
+//! CKA Gram statistic) on the host, with no XLA toolchain, for the
+//! linear/CWR-head model family described by the [`Manifest`].
+//!
+//! Two artifact sources:
+//! * **directory** — when `<dir>/manifest.json` exists, the backend loads
+//!   aot.py's manifest and θ0/φ0 binaries, so a refcpu run and a PJRT run
+//!   start from the *same* parameters and must agree on predictions to
+//!   within fp tolerance (`tests/backend_parity.rs`);
+//! * **built-in** — otherwise the [`builtin`] model family is synthesized
+//!   in-process, which is what lets CI machines execute full end-to-end
+//!   simulations with zero build-time dependencies (the portability
+//!   argument TinyOL makes for dependency-free on-device kernels).
+//!
+//! Execution is sequential and deterministic: a simulation produces
+//! bit-identical reports for any `--jobs` worker count.
+
+pub mod builtin;
+pub mod kernels;
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::backend::{Backend, Value};
+use super::hostlit::HostLiteral;
+use self::kernels::RefModel;
+
+/// Where θ0/φ0 come from.
+enum Source {
+    /// aot.py artifact directory (manifest + `<model>_theta0.bin`).
+    Dir(PathBuf),
+    /// Built-in family: deterministic in-process init.
+    Builtin {
+        theta0: HashMap<String, Vec<f32>>,
+        phi0: HashMap<String, Vec<f32>>,
+    },
+}
+
+/// What one artifact segment computes.
+enum Op {
+    Infer,
+    Features,
+    Train { quant: bool },
+    Ssl,
+    Cka,
+}
+
+struct OpSpec {
+    model: String,
+    op: Op,
+}
+
+/// Pure-Rust reference executor (see module docs).
+pub struct RefCpuBackend {
+    manifest: Manifest,
+    source: Source,
+    models: HashMap<String, RefModel>,
+    ops: HashMap<String, OpSpec>,
+    exec_count: Cell<u64>,
+}
+
+impl RefCpuBackend {
+    /// Bind an artifact directory when its manifest exists, else the
+    /// built-in model family.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<RefCpuBackend> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(&dir)?;
+            Self::new(manifest, Source::Dir(dir))
+        } else {
+            Self::builtin()
+        }
+    }
+
+    /// The built-in model family, ignoring any artifact directory.
+    pub fn builtin() -> Result<RefCpuBackend> {
+        let manifest = builtin::manifest();
+        let mut theta0 = HashMap::new();
+        let mut phi0 = HashMap::new();
+        for (name, mm) in &manifest.models {
+            theta0.insert(name.clone(), builtin::theta0(mm));
+            if mm.artifacts.ssl.is_some() {
+                phi0.insert(name.clone(), builtin::phi0(mm));
+            }
+        }
+        Self::new(manifest, Source::Builtin { theta0, phi0 })
+    }
+
+    fn new(manifest: Manifest, source: Source) -> Result<RefCpuBackend> {
+        let mut models = HashMap::new();
+        let mut ops = HashMap::new();
+        for (name, mm) in &manifest.models {
+            models.insert(name.clone(), RefModel::from_manifest(mm)?);
+            let mut add = |art: &str, op: Op| {
+                ops.insert(art.to_string(), OpSpec { model: name.clone(), op });
+            };
+            add(&mm.artifacts.infer, Op::Infer);
+            add(&mm.artifacts.features, Op::Features);
+            for t in &mm.artifacts.train {
+                add(t, Op::Train { quant: false });
+            }
+            for t in &mm.artifacts.train_q {
+                add(t, Op::Train { quant: true });
+            }
+            if let Some(ssl) = &mm.artifacts.ssl {
+                add(ssl, Op::Ssl);
+            }
+        }
+        for cka_name in manifest.cka.values() {
+            ops.insert(
+                cka_name.clone(),
+                OpSpec { model: String::new(), op: Op::Cka },
+            );
+        }
+        Ok(RefCpuBackend {
+            manifest,
+            source,
+            models,
+            ops,
+            exec_count: Cell::new(0),
+        })
+    }
+
+    fn model(&self, name: &str) -> Result<&RefModel> {
+        self.models
+            .get(name)
+            .with_context(|| format!("refcpu: unknown model {name:?}"))
+    }
+
+    /// Borrow input `idx` as an f32 host literal slice + shape.
+    fn f32_in<'a>(inputs: &'a [&Value], idx: usize) -> Result<(&'a [f32], Vec<usize>)> {
+        let lit = inputs
+            .get(idx)
+            .with_context(|| format!("refcpu: missing input {idx}"))?
+            .as_host()?;
+        let data = lit
+            .f32_slice()
+            .map_err(|e| anyhow::anyhow!("input {idx}: {e:?}"))?;
+        let shape = lit
+            .shape()
+            .map_err(|e| anyhow::anyhow!("input {idx}: {e:?}"))?;
+        Ok((data, shape))
+    }
+
+    fn i32_in<'a>(inputs: &'a [&Value], idx: usize) -> Result<&'a [i32]> {
+        inputs
+            .get(idx)
+            .with_context(|| format!("refcpu: missing input {idx}"))?
+            .as_host()?
+            .i32_slice()
+            .map_err(|e| anyhow::anyhow!("input {idx}: {e:?}"))
+    }
+
+    /// Rows of a `[b, width]` input (validating the row width).
+    fn rows(shape: &[usize], data_len: usize, width: usize, what: &str) -> Result<usize> {
+        anyhow::ensure!(
+            shape.len() == 2 && shape[1] == width && shape[0] * width == data_len,
+            "refcpu: bad {what} shape {shape:?} (want [b, {width}])"
+        );
+        Ok(shape[0])
+    }
+}
+
+fn out_f32(data: &[f32], shape: &[usize]) -> Result<Value> {
+    Ok(Value::Host(
+        HostLiteral::f32(data, shape).map_err(|e| anyhow::anyhow!("{e:?}"))?,
+    ))
+}
+
+impl Backend for RefCpuBackend {
+    fn name(&self) -> &'static str {
+        "refcpu"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executions(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    fn marshal_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        out_f32(data, shape)
+    }
+
+    fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        Ok(Value::Host(
+            HostLiteral::i32(data, shape).map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        ))
+    }
+
+    fn execute(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let spec = self
+            .ops
+            .get(name)
+            .with_context(|| format!("refcpu: unknown segment {name:?}"))?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        match &spec.op {
+            Op::Infer => {
+                let model = self.model(&spec.model)?;
+                let (theta, _) = Self::f32_in(inputs, 0)?;
+                anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
+                let (x, xs) = Self::f32_in(inputs, 1)?;
+                let b = Self::rows(&xs, x.len(), model.d, "x")?;
+                let logits = model.infer(theta, x, b);
+                Ok(vec![out_f32(&logits, &[b, model.classes])?])
+            }
+            Op::Features => {
+                let model = self.model(&spec.model)?;
+                let (theta, _) = Self::f32_in(inputs, 0)?;
+                anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
+                let (x, xs) = Self::f32_in(inputs, 1)?;
+                let b = Self::rows(&xs, x.len(), model.d, "x")?;
+                let feats = model.features(theta, x, b);
+                Ok(vec![out_f32(&feats, &[model.blocks + 1, b, model.h])?])
+            }
+            Op::Train { quant } => {
+                let model = self.model(&spec.model)?;
+                let (theta, _) = Self::f32_in(inputs, 0)?;
+                anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
+                let (x, xs) = Self::f32_in(inputs, 1)?;
+                let b = Self::rows(&xs, x.len(), model.d, "x")?;
+                let y = Self::i32_in(inputs, 2)?;
+                anyhow::ensure!(y.len() == b, "refcpu: bad y len {}", y.len());
+                anyhow::ensure!(
+                    y.iter().all(|&c| (c as usize) < model.classes && c >= 0),
+                    "refcpu: label out of range"
+                );
+                let (mask, _) = Self::f32_in(inputs, 3)?;
+                anyhow::ensure!(mask.len() == model.blocks + 2, "refcpu: bad mask len");
+                let (lr, _) = Self::f32_in(inputs, 4)?;
+                anyhow::ensure!(!lr.is_empty(), "refcpu: empty lr input");
+                let (theta_new, loss) =
+                    model.train_step(theta, x, y, b, mask, lr[0], *quant);
+                Ok(vec![
+                    out_f32(&theta_new, &[model.theta_len])?,
+                    out_f32(&[loss], &[])?,
+                ])
+            }
+            Op::Ssl => {
+                let model = self.model(&spec.model)?;
+                let (theta, _) = Self::f32_in(inputs, 0)?;
+                anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
+                let (phi, _) = Self::f32_in(inputs, 1)?;
+                let (x1, x1s) = Self::f32_in(inputs, 2)?;
+                let (x2, x2s) = Self::f32_in(inputs, 3)?;
+                let b = Self::rows(&x1s, x1.len(), model.d, "x1")?;
+                let b2 = Self::rows(&x2s, x2.len(), model.d, "x2")?;
+                anyhow::ensure!(b == b2, "refcpu: ssl view batch mismatch");
+                let (mask, _) = Self::f32_in(inputs, 4)?;
+                anyhow::ensure!(mask.len() == model.blocks + 2, "refcpu: bad mask len");
+                let (lr, _) = Self::f32_in(inputs, 5)?;
+                anyhow::ensure!(!lr.is_empty(), "refcpu: empty lr input");
+                anyhow::ensure!(
+                    phi.len() == 2 * model.h * model.h + 2 * model.h,
+                    "refcpu: bad φ len {}",
+                    phi.len()
+                );
+                let (theta_new, phi_new, loss) =
+                    model.ssl_step(theta, phi, x1, x2, b, mask, lr[0]);
+                Ok(vec![
+                    out_f32(&theta_new, &[model.theta_len])?,
+                    out_f32(&phi_new, &[phi_new.len()])?,
+                    out_f32(&[loss], &[])?,
+                ])
+            }
+            Op::Cka => {
+                let (fx, fxs) = Self::f32_in(inputs, 0)?;
+                let (fy, fys) = Self::f32_in(inputs, 1)?;
+                anyhow::ensure!(
+                    fxs.len() == 2 && fxs == fys,
+                    "refcpu: cka shapes {fxs:?} vs {fys:?}"
+                );
+                let v = kernels::cka(fx, fy, fxs[0], fxs[1]);
+                Ok(vec![out_f32(&[v], &[])?])
+            }
+        }
+    }
+
+    fn theta0(&self, model: &str) -> Result<Vec<f32>> {
+        match &self.source {
+            Source::Dir(dir) => {
+                super::client::read_f32_bin(dir, &format!("{model}_theta0.bin"))
+            }
+            Source::Builtin { theta0, .. } => theta0
+                .get(model)
+                .cloned()
+                .with_context(|| format!("refcpu: no θ0 for model {model:?}")),
+        }
+    }
+
+    fn phi0(&self, model: &str) -> Result<Vec<f32>> {
+        match &self.source {
+            Source::Dir(dir) => {
+                super::client::read_f32_bin(dir, &format!("{model}_phi0.bin"))
+            }
+            Source::Builtin { phi0, .. } => phi0
+                .get(model)
+                .cloned()
+                .with_context(|| format!("refcpu: no φ0 for model {model:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_backend_executes_infer() {
+        let be = RefCpuBackend::builtin().unwrap();
+        let mm = be.manifest().model("mbv2").unwrap().clone();
+        let theta = be.theta0("mbv2").unwrap();
+        let tv = be.marshal_f32(&theta, &[mm.theta_len]).unwrap();
+        let x = vec![0.1f32; 4 * mm.d];
+        let xv = be.marshal_f32(&x, &[4, mm.d]).unwrap();
+        let out = be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        assert_eq!(out.len(), 1);
+        let t = out[0].to_tensor().unwrap();
+        assert_eq!(t.shape, vec![4, mm.classes]);
+        assert!(t.data.iter().all(|v| v.is_finite()));
+        assert_eq!(be.executions(), 1);
+    }
+
+    #[test]
+    fn unknown_segment_is_an_error() {
+        let be = RefCpuBackend::builtin().unwrap();
+        assert!(be.execute("nope_infer", &[]).is_err());
+    }
+
+    #[test]
+    fn theta_marshal_roundtrip_is_lossless() {
+        let be = RefCpuBackend::builtin().unwrap();
+        let theta = be.theta0("res50").unwrap();
+        let v = be.marshal_f32(&theta, &[theta.len()]).unwrap();
+        assert_eq!(v.read_f32().unwrap(), theta);
+    }
+}

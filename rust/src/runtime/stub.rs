@@ -1,119 +1,31 @@
 //! Inert stand-in for the `xla` crate when the `xla` cargo feature is off.
 //!
-//! Mirrors exactly the API surface the runtime layer uses so the whole
-//! crate (coordinator, policies, simulator data structures, CLI) compiles
-//! and unit-tests on machines without the XLA toolchain.  Host-side
-//! literals are *functional* (shape + data round-trips work, so the
-//! marshalling layer and its caches can be exercised); anything that would
-//! need a real PJRT client fails with a clear error at runtime.
+//! Mirrors exactly the API surface [`super::client::PjrtBackend`] uses so
+//! the whole crate (coordinator, policies, simulator data structures, CLI)
+//! compiles and unit-tests on machines without the XLA toolchain.  The
+//! literal type is the shared [`HostLiteral`](crate::runtime::hostlit) —
+//! fully functional, including tuple literals — so the marshalling layer
+//! and its caches are exercised for real; anything that would need an
+//! actual PJRT client fails with a clear error at runtime (machines
+//! without the toolchain run models through
+//! [`crate::runtime::RefCpuBackend`] instead).
 
 use std::path::Path;
 
-/// Error type standing in for `xla::Error`; only `Debug` is needed by the
-/// `map_err(|e| anyhow!("..: {e:?}"))` call sites.
-#[derive(Debug)]
-pub struct Error(pub &'static str);
+pub use super::hostlit::{ArrayShape, Error, NativeType};
+
+/// The stub's literal IS the host literal (tuple support included).
+pub type Literal = super::hostlit::HostLiteral;
 
 const NO_XLA: &str = "etuner was built without the `xla` feature; \
-                      rebuild with `--features xla` to execute artifacts";
-
-/// Element types a stub literal can hold.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Data {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl Data {
-    fn len(&self) -> usize {
-        match self {
-            Data::F32(v) => v.len(),
-            Data::I32(v) => v.len(),
-        }
-    }
-}
-
-/// Conversion glue so `Literal::vec1` / `Literal::to_vec` stay generic like
-/// the real crate's.
-pub trait NativeType: Sized + Copy {
-    fn wrap(data: &[Self]) -> Data;
-    fn unwrap(data: &Data) -> Result<Vec<Self>, Error>;
-}
-
-impl NativeType for f32 {
-    fn wrap(data: &[Self]) -> Data {
-        Data::F32(data.to_vec())
-    }
-    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
-        match data {
-            Data::F32(v) => Ok(v.clone()),
-            _ => Err(Error("literal is not f32")),
-        }
-    }
-}
-
-impl NativeType for i32 {
-    fn wrap(data: &[Self]) -> Data {
-        Data::I32(data.to_vec())
-    }
-    fn unwrap(data: &Data) -> Result<Vec<Self>, Error> {
-        match data {
-            Data::I32(v) => Ok(v.clone()),
-            _ => Err(Error("literal is not i32")),
-        }
-    }
-}
-
-/// Host literal: shape + typed data (enough for marshal/unmarshal tests).
-#[derive(Clone, Debug)]
-pub struct Literal {
-    dims: Vec<i64>,
-    data: Data,
-}
-
-/// Shape view matching `xla::ArrayShape`'s `dims()` accessor.
-#[derive(Clone, Debug)]
-pub struct ArrayShape {
-    dims: Vec<i64>,
-}
-
-impl ArrayShape {
-    pub fn dims(&self) -> &[i64] {
-        &self.dims
-    }
-}
-
-impl Literal {
-    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
-        Literal { dims: vec![data.len() as i64], data: T::wrap(data) }
-    }
-
-    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
-        let n: i64 = dims.iter().product();
-        if n as usize != self.data.len() {
-            return Err(Error("reshape: element count mismatch"));
-        }
-        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
-    }
-
-    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
-        Ok(ArrayShape { dims: self.dims.clone() })
-    }
-
-    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
-        T::unwrap(&self.data)
-    }
-
-    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
-        Err(Error(NO_XLA))
-    }
-}
+                      rebuild with `--features xla` for PJRT execution \
+                      or select the refcpu backend";
 
 pub struct HloModuleProto;
 
 impl HloModuleProto {
     pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
-        Err(Error(NO_XLA))
+        Err(Error::new(NO_XLA))
     }
 }
 
@@ -129,11 +41,11 @@ pub struct PjRtClient;
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient, Error> {
-        Err(Error(NO_XLA))
+        Err(Error::new(NO_XLA))
     }
 
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
-        Err(Error(NO_XLA))
+        Err(Error::new(NO_XLA))
     }
 }
 
@@ -144,7 +56,7 @@ impl PjRtLoadedExecutable {
         &self,
         _args: &[L],
     ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
-        Err(Error(NO_XLA))
+        Err(Error::new(NO_XLA))
     }
 }
 
@@ -152,7 +64,7 @@ pub struct PjRtBuffer;
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
-        Err(Error(NO_XLA))
+        Err(Error::new(NO_XLA))
     }
 }
 
@@ -168,6 +80,19 @@ mod tests {
         assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(l.reshape(&[3]).is_err());
         assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn stub_literals_carry_real_tuples() {
+        // the old stub returned Err(NO_XLA) here; multi-output segments
+        // now have a working host representation.
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32, 2.0]),
+            Literal::vec1(&[3.0f32]),
+        ]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[1].to_vec::<f32>().unwrap(), vec![3.0]);
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! bank-installed serving θ (moved here from `sim::run` — the serving
 //! parameters are a serving-engine concern).
 //!
+//! The engine is backend-agnostic: every execute goes through the
+//! session's [`crate::runtime::Backend`], so the same batched serving path
+//! runs on PJRT artifacts and on the pure-Rust reference executor
+//! (`tests/serving_engine.rs` asserts batch-composition independence on a
+//! *really executing* backend in CI).
+//!
 //! Three operating modes, all seed-deterministic:
 //!
 //! * **direct** (`--no-batching`): every request executes immediately on

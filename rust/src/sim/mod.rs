@@ -1,8 +1,9 @@
 //! The continual-learning simulation: one deployed model serving a
 //! benchmark's event stream under a (tune, freeze) policy pair, with all
-//! compute flowing through the PJRT artifacts and all costs charged to the
+//! compute flowing through a [`crate::runtime::Backend`] (PJRT artifacts
+//! or the pure-Rust reference executor) and all costs charged to the
 //! Jetson-scale ledger.  Seed sweeps scale across cores through
-//! [`ParallelSweeper`] (one runtime per worker thread).
+//! [`ParallelSweeper`] (one backend per worker thread).
 
 pub mod run;
 pub mod sweep;

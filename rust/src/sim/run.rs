@@ -45,7 +45,7 @@ use crate::data::stream::{EventKind, Stream};
 use crate::metrics::{Report, RequestRecord, RoundRecord};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::serve::{
     QueuedRequest, RoundDecision, ServeConfig, ServeEngine, ServedRequest,
 };
@@ -134,9 +134,9 @@ impl RunConfig {
 }
 
 /// Ready-to-run simulation state.
-pub struct Simulation<'rt> {
+pub struct Simulation<'b> {
     cfg: RunConfig,
-    sess: ModelSession<'rt>,
+    sess: ModelSession<'b>,
     schedule: Schedule,
     stream: Stream,
     params: Params,
@@ -159,9 +159,9 @@ pub struct Simulation<'rt> {
 
 const VAL_KEEP: usize = 64; // rolling validation window (≈5% of stream)
 
-impl<'rt> Simulation<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Simulation<'rt>> {
-        let mut sess = ModelSession::new(rt, &cfg.model)?;
+impl<'b> Simulation<'b> {
+    pub fn new(be: &'b dyn Backend, cfg: RunConfig) -> Result<Simulation<'b>> {
+        let mut sess = ModelSession::new(be, &cfg.model)?;
         sess.quant = cfg.quant;
         sess.lr = cfg.lr;
         let mut schedule = benchmarks::build(cfg.benchmark, cfg.seed);
@@ -187,7 +187,7 @@ impl<'rt> Simulation<'rt> {
         cwr.consolidate(&sess.m, &params, &warm_classes);
 
         let phi = if cfg.labeled_fraction.is_some() {
-            rt.phi0(&cfg.model)?
+            be.phi0(&cfg.model)?
         } else {
             vec![]
         };

@@ -3,29 +3,32 @@
 //!
 //! # Parallel sweep engine
 //!
-//! [`Runtime`] is deliberately `!Sync` (PJRT executables live behind
-//! `Rc`/`RefCell`), so a *single* runtime can't be shared across threads.
-//! [`ParallelSweeper`] instead gives each worker thread its **own**
-//! runtime over the same artifact directory: workers pull `(index,
-//! RunConfig)` jobs from a shared queue and write results into their
-//! reserved slot, so the output order — and, because every simulation is
-//! seed-deterministic, every byte of every report except wall-clock
-//! timings — is identical no matter how many workers run.
+//! Backends are deliberately single-threaded (`!Sync`: PJRT executables
+//! live behind `Rc`/`RefCell`, and the reference executor keeps interior
+//! counters), so a *single* backend can't be shared across threads.
+//! [`ParallelSweeper`] instead carries a [`BackendSpec`] and gives each
+//! worker thread its **own** backend constructed from it: workers pull
+//! `(index, RunConfig)` jobs from a shared queue and write results into
+//! their reserved slot, so the output order — and, because every
+//! simulation is seed-deterministic, every byte of every report except
+//! wall-clock timings — is identical no matter how many workers run (on
+//! the reference backend this determinism is *bit-exact*, enforced by
+//! `tests/backend_parity.rs`).
 
 use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::metrics::{average, Report};
-use crate::runtime::Runtime;
+use crate::runtime::{Backend, BackendKind, BackendSpec};
 
 use super::run::{RunConfig, Simulation};
 
-/// Run `cfg` under `seeds` sequentially on a borrowed runtime and return
+/// Run `cfg` under `seeds` sequentially on a borrowed backend and return
 /// (mean report, per-seed reports).  The compatibility entry point —
 /// sweeps that should use every core go through [`ParallelSweeper`].
 pub fn run_averaged(
-    rt: &Runtime,
+    be: &dyn Backend,
     cfg: &RunConfig,
     seeds: &[u64],
 ) -> Result<(Report, Vec<Report>)> {
@@ -33,29 +36,43 @@ pub fn run_averaged(
     let mut reports = Vec::with_capacity(seeds.len());
     for &s in seeds {
         let c = cfg.clone().with_seed(s);
-        reports.push(Simulation::new(rt, c)?.run()?);
+        reports.push(Simulation::new(be, c)?.run()?);
     }
     Ok((average(&reports), reports))
 }
 
-/// Multi-core sweep engine: owns a runtime for main-thread work and spawns
-/// `jobs` scoped worker threads (each constructing its own runtime) for
-/// batched runs.
+/// Multi-core sweep engine: owns a backend for main-thread work and spawns
+/// `jobs` scoped worker threads (each constructing its own backend from
+/// the spec) for batched runs.
 pub struct ParallelSweeper {
-    rt: Runtime,
+    be: Box<dyn Backend>,
+    spec: BackendSpec,
     jobs: usize,
 }
 
 impl ParallelSweeper {
-    /// Wrap an already-loaded runtime.  `jobs` is clamped to ≥ 1;
-    /// `jobs == 1` means fully sequential (no threads spawned).
-    pub fn new(rt: Runtime, jobs: usize) -> ParallelSweeper {
-        ParallelSweeper { rt, jobs: jobs.max(1) }
+    /// Construct the main-thread backend from `spec`.  `jobs` is clamped
+    /// to ≥ 1; `jobs == 1` means fully sequential (no threads spawned).
+    ///
+    /// An `Auto` spec is resolved to the *concrete* kind the main backend
+    /// landed on before it is handed to workers: every worker must
+    /// construct the same executor (a worker whose PJRT client fails must
+    /// surface that error, not silently fall back to refcpu and mix
+    /// fp-close-but-different numbers into one sweep).
+    pub fn new(spec: BackendSpec, jobs: usize) -> Result<ParallelSweeper> {
+        let be = spec.create()?;
+        let resolved = match be.name() {
+            "pjrt" => BackendKind::Pjrt,
+            _ => BackendKind::RefCpu,
+        };
+        let spec = BackendSpec::new(resolved, &spec.dir);
+        Ok(ParallelSweeper { be, spec, jobs: jobs.max(1) })
     }
 
-    /// Load the runtime from an artifact directory.
+    /// Auto-select the backend over an artifact directory (PJRT when it
+    /// can execute here, the reference executor otherwise).
     pub fn from_dir<P: AsRef<std::path::Path>>(dir: P, jobs: usize) -> Result<ParallelSweeper> {
-        Ok(ParallelSweeper::new(Runtime::load(dir)?, jobs))
+        ParallelSweeper::new(BackendSpec::auto(dir), jobs)
     }
 
     pub fn jobs(&self) -> usize {
@@ -67,9 +84,9 @@ impl ParallelSweeper {
         std::thread::available_parallelism().map_or(1, |n| n.get())
     }
 
-    /// The main-thread runtime (single runs, probes, direct simulations).
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// The main-thread backend (single runs, probes, direct simulations).
+    pub fn backend(&self) -> &dyn Backend {
+        self.be.as_ref()
     }
 
     /// Run every config, in deterministic input order, across up to
@@ -79,10 +96,10 @@ impl ParallelSweeper {
         if workers <= 1 {
             return cfgs
                 .iter()
-                .map(|c| Simulation::new(&self.rt, c.clone())?.run())
+                .map(|c| Simulation::new(self.be.as_ref(), c.clone())?.run())
                 .collect();
         }
-        let dir = self.rt.artifact_dir().to_path_buf();
+        let spec = &self.spec;
         let next = Mutex::new(0usize);
         let slots: Mutex<Vec<Option<Result<Report>>>> =
             Mutex::new((0..cfgs.len()).map(|_| None).collect());
@@ -93,9 +110,9 @@ impl ParallelSweeper {
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| {
-                    // each worker owns its runtime: `Runtime` is !Sync.
-                    let rt = match Runtime::load(&dir) {
-                        Ok(rt) => rt,
+                    // each worker owns its backend: backends are !Sync.
+                    let be = match spec.create() {
+                        Ok(be) => be,
                         Err(e) => {
                             *failed.lock().unwrap() = true;
                             init_err.lock().unwrap().get_or_insert(e);
@@ -112,7 +129,7 @@ impl ParallelSweeper {
                             *n += 1;
                             i
                         };
-                        let res = Simulation::new(&rt, cfgs[i].clone())
+                        let res = Simulation::new(be.as_ref(), cfgs[i].clone())
                             .and_then(|s| s.run());
                         if res.is_err() {
                             *failed.lock().unwrap() = true;
@@ -123,7 +140,7 @@ impl ParallelSweeper {
             }
         });
         if let Some(e) = init_err.into_inner().unwrap() {
-            return Err(e.context("sweep worker failed to load its runtime"));
+            return Err(e.context("sweep worker failed to construct its backend"));
         }
         let slots = slots.into_inner().unwrap();
         let mut out = Vec::with_capacity(cfgs.len());

@@ -16,6 +16,75 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
 }
 
+/// Reference-backend spec over the artifact directory: uses aot.py's
+/// manifest + θ0 when present, the built-in model family otherwise.
+/// Either way it *executes* — this is what CI tests run models on.
+pub fn refcpu_spec() -> crate::runtime::BackendSpec {
+    crate::runtime::BackendSpec::refcpu(artifacts_dir())
+}
+
+/// Construct the reference backend (never fails to execute).
+pub fn refcpu_backend() -> Box<dyn crate::runtime::Backend> {
+    refcpu_spec().create().expect("refcpu backend")
+}
+
+/// The preferred *executing* backend for whole-system tests: PJRT over
+/// the artifacts when it works here, the reference executor otherwise.
+/// Unlike the pre-backend era, this never skips — every environment runs
+/// models.
+pub fn execution_backend() -> Box<dyn crate::runtime::Backend> {
+    pjrt_backend_if_available().unwrap_or_else(refcpu_backend)
+}
+
+/// The PJRT backend when it can actually execute here (artifacts built
+/// AND compiled with the `xla` feature); `None` otherwise.
+///
+/// Only two outcomes are a legitimate skip: no artifact directory, or a
+/// build without the `xla` feature (the stub client refuses to come up).
+/// Artifacts that are *present but unloadable* (truncated θ0 binaries,
+/// malformed manifest) are a broken `make artifacts` output and must
+/// fail tests loudly, not silently skip the whole PJRT suite.
+pub fn pjrt_backend_if_available() -> Option<Box<dyn crate::runtime::Backend>> {
+    if !artifacts_available() {
+        return None;
+    }
+    match crate::runtime::BackendSpec::new(
+        crate::runtime::BackendKind::Pjrt,
+        artifacts_dir(),
+    )
+    .create()
+    {
+        Ok(be) => Some(be),
+        Err(e) if format!("{e:?}").contains("without the `xla` feature") => None,
+        Err(e) => panic!(
+            "artifacts are present but the pjrt backend failed to load \
+             (corrupt `make artifacts` output?): {e:?}"
+        ),
+    }
+}
+
+/// Two linearly separable synthetic classes — the shared data generator
+/// of the executing integration suites (PJRT and refcpu must train on
+/// the *same* recipe, so it lives here rather than per test file).
+pub fn two_class_batch(
+    rng: &mut crate::rng::Pcg32,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0.0f32; n * d];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = (rng.next_u32() % 2) as i32;
+        y.push(c);
+        for j in 0..d {
+            let mu = if c == 0 { 1.0 } else { -1.0 };
+            let sign = if j % 2 == 0 { mu } else { -mu };
+            x[i * d + j] = 0.8 * sign + 0.5 * rng.normal();
+        }
+    }
+    (x, y)
+}
+
 /// Simple timing helper for the dependency-free bench harness.
 pub struct Timer {
     start: std::time::Instant,

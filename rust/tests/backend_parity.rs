@@ -1,0 +1,202 @@
+//! End-to-end tests that **actually execute models in CI**: full
+//! continual-learning simulations on the pure-Rust reference backend —
+//! no artifacts, no XLA toolchain — plus the refcpu↔pjrt parity contract
+//! when the artifacts are available.
+//!
+//! Determinism ladder:
+//! 1. a run is reproducible in-process (same seed → identical
+//!    fingerprint);
+//! 2. sweeps are **bit-identical** for any `--jobs` worker count;
+//! 3. on the built-in model family the fingerprint is stable across
+//!    processes *on the same platform* — pinned by a per-architecture
+//!    golden file that the first toolchain-equipped run seals into
+//!    `tests/golden/` (committed, then asserted against forever after).
+//!    Goldens are scoped per target arch because the kernels use libm
+//!    transcendentals (tanh/exp/ln) whose f32 results may differ in the
+//!    last ulp across platforms.
+
+use std::path::PathBuf;
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::runtime::{Backend, RefCpuBackend};
+use etuner::sim::{ParallelSweeper, RunConfig, Simulation};
+use etuner::testkit;
+
+fn quick(model: &str, b: Benchmark, seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart(model, b).with_seed(seed);
+    c.n_requests = 80;
+    c
+}
+
+// ---------------------------------------------------------------------------
+// the model learns, end to end, on a machine with nothing installed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refcpu_end_to_end_simulation_learns() {
+    // Immediate + no freezing = maximum training signal: the strongest
+    // form of "the executor implements real learning semantics".
+    let be = RefCpuBackend::builtin().unwrap();
+    let cfg = quick("mbv2", Benchmark::SCifar10, 1)
+        .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
+    let r = Simulation::new(&be, cfg).unwrap().run().unwrap();
+    assert_eq!(r.requests.len(), 80, "requests were dropped");
+    assert!(r.serve_executes > 0, "nothing executed");
+    assert!(be.executions() > 0, "backend never executed a segment");
+    let batches = Benchmark::SCifar10.batches_per_scenario()
+        * (Benchmark::SCifar10.scenario_count() - 1);
+    assert_eq!(r.train_iterations as usize, batches);
+    // the synth stream is linearly separable (nearest-proto acc > 85%);
+    // a *learning* model must clear this floor comfortably.
+    assert!(
+        r.avg_inference_accuracy > 0.2,
+        "model did not learn: {}",
+        r.summary()
+    );
+    assert!(r.round_log.iter().any(|rr| rr.val_acc > 0.3),
+        "validation accuracy never rose");
+}
+
+#[test]
+fn refcpu_run_is_reproducible_in_process() {
+    let be = RefCpuBackend::builtin().unwrap();
+    let mk = || {
+        quick("mbv2", Benchmark::SCifar10, 33)
+            .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+    };
+    let a = Simulation::new(&be, mk()).unwrap().run().unwrap();
+    let b = Simulation::new(&be, mk()).unwrap().run().unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint(), "refcpu is nondeterministic");
+}
+
+// ---------------------------------------------------------------------------
+// sweep bit-identity: N=1 vs N=4 workers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refcpu_sweep_is_bit_identical_across_worker_counts() {
+    let seeds = [1u64, 2, 3, 4];
+    let cfg = quick("mbv2", Benchmark::SCifar10, 0)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+
+    let one = ParallelSweeper::new(testkit::refcpu_spec(), 1).unwrap();
+    let four = ParallelSweeper::new(testkit::refcpu_spec(), 4).unwrap();
+    assert_eq!(four.jobs(), 4);
+    let (mean1, all1) = one.run_averaged(&cfg, &seeds).unwrap();
+    let (mean4, all4) = four.run_averaged(&cfg, &seeds).unwrap();
+
+    assert_eq!(all1.len(), all4.len());
+    for (i, (s, p)) in all1.iter().zip(&all4).enumerate() {
+        assert_eq!(s.seed, p.seed, "result order not deterministic");
+        assert_eq!(
+            s.fingerprint(),
+            p.fingerprint(),
+            "seed {} diverged across worker counts",
+            seeds[i]
+        );
+    }
+    assert_eq!(mean1.fingerprint(), mean4.fingerprint());
+}
+
+// ---------------------------------------------------------------------------
+// golden fingerprint (built-in family: stable across processes/machines)
+// ---------------------------------------------------------------------------
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+#[test]
+fn refcpu_builtin_fingerprint_matches_golden() {
+    let be = RefCpuBackend::builtin().unwrap();
+    let cfg = quick("mbv2", Benchmark::SCifar10, 1)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+    let r = Simulation::new(&be, cfg).unwrap().run().unwrap();
+    let got = format!("{:016x}", r.fingerprint());
+
+    let path = golden_path(&format!(
+        "refcpu_mbv2_scifar10_seed1.{}.fingerprint",
+        std::env::consts::ARCH
+    ));
+    match std::fs::read_to_string(&path) {
+        Ok(want) => {
+            assert_eq!(
+                got,
+                want.trim(),
+                "refcpu builtin fingerprint drifted from the sealed golden \
+                 ({}); if the semantics change was intentional, re-seal with \
+                 ETUNER_SEAL_GOLDEN=1 after deleting the stale file",
+                path.display()
+            );
+        }
+        Err(_) if std::env::var_os("ETUNER_SEAL_GOLDEN").is_some() => {
+            // explicit sealing run (a maintainer commits the result; see
+            // tests/golden/README.md).  Never seals implicitly: an
+            // ephemeral CI runner without the committed golden must not
+            // write-and-pass vacuously.
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, format!("{got}\n")).unwrap();
+            eprintln!("sealed golden fingerprint {got} -> {}", path.display());
+        }
+        Err(_) => {
+            eprintln!(
+                "golden fingerprint for arch {} not sealed yet (observed \
+                 {got}); run ETUNER_SEAL_GOLDEN=1 cargo test and commit {}",
+                std::env::consts::ARCH,
+                path.display()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// refcpu ↔ pjrt parity (needs artifacts + a working PJRT client)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refcpu_matches_pjrt_predictions_on_shared_theta0() {
+    let Some(pjrt) = testkit::pjrt_backend_if_available() else {
+        eprintln!("skipping: pjrt backend unavailable (make artifacts + --features xla)");
+        return;
+    };
+    // the refcpu backend binds the SAME artifact dir -> same manifest, θ0
+    let refcpu = testkit::refcpu_spec().create().unwrap();
+
+    use etuner::model::ModelSession;
+    for model in ["mbv2", "res50"] {
+        let sp = ModelSession::new(pjrt.as_ref(), model).unwrap();
+        let sr = ModelSession::new(refcpu.as_ref(), model).unwrap();
+        let p0p = sp.theta0().unwrap();
+        let p0r = sr.theta0().unwrap();
+        assert_eq!(p0p.theta(), p0r.theta(), "{model}: θ0 sources differ");
+
+        let d = sp.m.d;
+        let b = sp.m.batch_infer;
+        let x: Vec<f32> = (0..b * d)
+            .map(|k| ((k * 37 + 11) % 17) as f32 * 0.11 - 0.9)
+            .collect();
+        let lp = sp.infer(&p0p, &x).unwrap();
+        let lr = sr.infer(&p0r, &x).unwrap();
+        assert_eq!(lp.shape, lr.shape);
+        // fp tolerance: identical math, different accumulation order
+        let max_abs = lp
+            .data
+            .iter()
+            .zip(&lr.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_abs < 1e-3, "{model}: logits diverge by {max_abs}");
+        // predictions must agree exactly wherever the margin is real
+        let pp = lp.argmax_rows();
+        let pr = lr.argmax_rows();
+        let agree = pp.iter().zip(&pr).filter(|(a, b)| a == b).count();
+        assert!(
+            agree * 100 >= pp.len() * 95,
+            "{model}: only {agree}/{} predictions agree",
+            pp.len()
+        );
+    }
+}

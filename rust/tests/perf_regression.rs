@@ -1,24 +1,20 @@
 //! Regression tests for the zero-copy execute boundary and the parallel
 //! sweep engine: the caches and the worker pool are pure plumbing, so every
 //! scientific output must be bit-identical with them on, off, or sharded
-//! across threads.  All tests need `make artifacts`.
+//! across threads.
+//!
+//! These run on the reference backend, so they *execute real models in
+//! every environment* — no artifacts or XLA toolchain required.  (When
+//! artifacts are present the refcpu backend binds the same manifest/θ0,
+//! so the numbers additionally line up with the PJRT path — see
+//! `tests/backend_parity.rs`.)
 
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::cost::flops::FreezeState;
 use etuner::data::benchmarks::Benchmark;
 use etuner::model::ModelSession;
-use etuner::runtime::Runtime;
 use etuner::sim::{run_averaged, ParallelSweeper, RunConfig, Simulation};
 use etuner::testkit;
-
-macro_rules! require {
-    () => {
-        if !testkit::artifacts_available() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 fn quick(seed: u64) -> RunConfig {
     let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
@@ -30,9 +26,8 @@ fn quick(seed: u64) -> RunConfig {
 
 #[test]
 fn infer_skips_theta_marshal_while_generation_unchanged() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let be = testkit::refcpu_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
     let mut p = sess.theta0().unwrap();
     let x = vec![0.1f32; sess.m.batch_infer * sess.m.d];
 
@@ -47,7 +42,7 @@ fn infer_skips_theta_marshal_while_generation_unchanged() {
     assert_eq!(a, b, "cache-hit logits differ from cold logits");
     assert_eq!(a, c);
 
-    // any mutable touch bumps the generation and invalidates the literal
+    // any mutable touch bumps the generation and invalidates the buffer
     p.theta_mut();
     let d = sess.infer(&p, &x).unwrap();
     assert_eq!(sess.theta_marshal_count(), 2);
@@ -55,10 +50,9 @@ fn infer_skips_theta_marshal_while_generation_unchanged() {
 }
 
 #[test]
-fn train_step_reuses_output_literal_without_remarshal() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+fn train_step_reuses_output_buffer_without_remarshal() {
+    let be = testkit::refcpu_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
     let mut p = sess.theta0().unwrap();
     let fs = FreezeState::none(sess.m.units);
     let x = vec![0.05f32; sess.m.batch_train * sess.m.d];
@@ -66,18 +60,18 @@ fn train_step_reuses_output_literal_without_remarshal() {
 
     sess.train_step(&mut p, &x, &y, &fs).unwrap();
     assert_eq!(sess.theta_marshal_count(), 1);
-    // consecutive steps feed the previous step's *output* literal back in:
-    // θ never crosses host → literal again.
+    // consecutive steps feed the previous step's *output* buffer back in:
+    // θ never crosses host → backend buffer again.
     for _ in 0..4 {
         sess.train_step(&mut p, &x, &y, &fs).unwrap();
     }
     assert_eq!(
         sess.theta_marshal_count(),
         1,
-        "train chain re-marshalled θ despite output-literal reuse"
+        "train chain re-marshalled θ despite output-buffer adoption"
     );
     assert_eq!(sess.theta_cache_hit_count(), 4);
-    // inference right after training reuses the adopted literal too
+    // inference right after training reuses the adopted buffer too
     let xi = vec![0.1f32; sess.m.batch_infer * sess.m.d];
     sess.infer(&p, &xi).unwrap();
     assert_eq!(sess.theta_marshal_count(), 1);
@@ -85,13 +79,12 @@ fn train_step_reuses_output_literal_without_remarshal() {
 
 #[test]
 fn serving_cache_is_bit_identical_to_forced_invalidation() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::refcpu_backend();
 
-    let cached = Simulation::new(&rt, quick(33)).unwrap().run().unwrap();
+    let cached = Simulation::new(be.as_ref(), quick(33)).unwrap().run().unwrap();
     let mut cfg = quick(33);
     cfg.disable_serving_cache = true;
-    let forced = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let forced = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
 
     assert_eq!(
         cached.fingerprint(),
@@ -125,15 +118,13 @@ fn serving_cache_is_bit_identical_to_forced_invalidation() {
 
 #[test]
 fn parallel_sweep_matches_sequential_bit_for_bit() {
-    require!();
-    let dir = testkit::artifacts_dir();
     let seeds = [1u64, 2, 3, 4];
     let cfg = quick(0);
 
-    let rt = Runtime::load(&dir).unwrap();
-    let (seq_mean, seq_all) = run_averaged(&rt, &cfg, &seeds).unwrap();
+    let be = testkit::refcpu_backend();
+    let (seq_mean, seq_all) = run_averaged(be.as_ref(), &cfg, &seeds).unwrap();
 
-    let sw = ParallelSweeper::from_dir(&dir, 4).unwrap();
+    let sw = ParallelSweeper::new(testkit::refcpu_spec(), 4).unwrap();
     assert_eq!(sw.jobs(), 4);
     let (par_mean, par_all) = sw.run_averaged(&cfg, &seeds).unwrap();
 
@@ -152,16 +143,14 @@ fn parallel_sweep_matches_sequential_bit_for_bit() {
 
 #[test]
 fn run_averaged_many_preserves_config_order() {
-    require!();
-    let dir = testkit::artifacts_dir();
     let seeds = [5u64, 6];
     let cfgs = vec![
         quick(0).with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
         quick(0).with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze),
     ];
 
-    let one = ParallelSweeper::from_dir(&dir, 1).unwrap();
-    let four = ParallelSweeper::from_dir(&dir, 4).unwrap();
+    let one = ParallelSweeper::new(testkit::refcpu_spec(), 1).unwrap();
+    let four = ParallelSweeper::new(testkit::refcpu_spec(), 4).unwrap();
     let a = one.run_averaged_many(&cfgs, &seeds).unwrap();
     let b = four.run_averaged_many(&cfgs, &seeds).unwrap();
     assert_eq!(a.len(), 2);

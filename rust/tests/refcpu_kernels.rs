@@ -1,0 +1,264 @@
+//! Property tests for the reference executor, driven through the public
+//! `Backend`/`ModelSession` surface (hand-rolled generators — proptest is
+//! not available offline).  These are the behavioural contracts the PJRT
+//! artifacts satisfy, now asserted on every machine:
+//!
+//! * a train step decreases loss on a fixed batch (the model learns);
+//! * inference is permutation-equivariant over batch rows (row
+//!   independence — the property batched serving relies on);
+//! * θ round-trip through marshal/read-back is bit-lossless;
+//! * prefix-frozen and lr-masked units do not move, trainable ones do;
+//! * CKA(x, x) = 1 and drifts below 1 after training;
+//! * the SimSiam step is finite and in the cosine-loss range.
+
+use etuner::cost::flops::FreezeState;
+use etuner::model::ModelSession;
+use etuner::rng::Pcg32;
+use etuner::runtime::{Backend, RefCpuBackend};
+use etuner::testkit::two_class_batch;
+
+fn backend() -> RefCpuBackend {
+    RefCpuBackend::builtin().unwrap()
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    for model in ["res50", "mbv2", "deit", "bert"] {
+        let be = backend();
+        let mut sess = ModelSession::new(&be, model).unwrap();
+        sess.lr = 0.05;
+        let mut p = sess.theta0().unwrap();
+        let fs = FreezeState::none(sess.m.units);
+        let mut rng = Pcg32::new(7, 7);
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        let first = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+            assert!(last.is_finite(), "{model}: loss diverged");
+        }
+        assert!(
+            last < first * 0.5,
+            "{model}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn training_generalizes_to_fresh_draws() {
+    let be = backend();
+    let mut sess = ModelSession::new(&be, "mbv2").unwrap();
+    sess.lr = 0.05;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(17, 3);
+    for _ in 0..40 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    }
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
+    let acc = sess.accuracy(&p, &x, &y).unwrap();
+    assert!(acc > 0.8, "held-out accuracy {acc}");
+}
+
+#[test]
+fn infer_is_permutation_equivariant_over_rows() {
+    let be = backend();
+    let sess = ModelSession::new(&be, "deit").unwrap();
+    let p = sess.theta0().unwrap();
+    let (b, d, c) = (sess.m.batch_infer, sess.m.d, sess.m.classes);
+    let mut rng = Pcg32::new(23, 5);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+    let logits = sess.infer(&p, &x).unwrap();
+
+    // reverse the rows: logits must reverse identically (bit-exact — row
+    // computations are independent in every kernel).
+    let mut xr = vec![0.0f32; b * d];
+    for i in 0..b {
+        xr[i * d..(i + 1) * d].copy_from_slice(&x[(b - 1 - i) * d..(b - i) * d]);
+    }
+    let logits_r = sess.infer(&p, &xr).unwrap();
+    for i in 0..b {
+        assert_eq!(
+            &logits.data[i * c..(i + 1) * c],
+            &logits_r.data[(b - 1 - i) * c..(b - i) * c],
+            "row {i} changed under permutation"
+        );
+    }
+}
+
+#[test]
+fn theta_roundtrip_through_marshal_is_lossless() {
+    let be = backend();
+    for model in ["res50", "bert"] {
+        let theta = be.theta0(model).unwrap();
+        let v = be.marshal_f32(&theta, &[theta.len()]).unwrap();
+        let back = v.read_f32().unwrap();
+        assert_eq!(theta.len(), back.len());
+        for (i, (a, b)) in theta.iter().zip(&back).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{model}: θ[{i}] changed bits in the marshal round-trip"
+            );
+        }
+    }
+}
+
+#[test]
+fn prefix_frozen_units_do_not_move() {
+    let be = backend();
+    let sess = ModelSession::new(&be, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let mut fs = FreezeState::none(sess.m.units);
+    fs.frozen[0] = true;
+    fs.frozen[1] = true;
+    let mut rng = Pcg32::new(8, 8);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    for u in 0..sess.m.units {
+        let moved = p
+            .unit(&sess.m, u)
+            .iter()
+            .zip(p0.unit(&sess.m, u))
+            .any(|(a, b)| a != b);
+        if u < 2 {
+            assert!(!moved, "frozen unit {u} moved");
+        } else {
+            assert!(moved, "trainable unit {u} did not move");
+        }
+    }
+}
+
+#[test]
+fn interior_lr_mask_freezes_unit() {
+    let be = backend();
+    let sess = ModelSession::new(&be, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let mut fs = FreezeState::none(sess.m.units);
+    fs.frozen[3] = true; // interior unit: lr-mask path (Case 2)
+    let mut rng = Pcg32::new(9, 9);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    let moved3 = p
+        .unit(&sess.m, 3)
+        .iter()
+        .zip(p0.unit(&sess.m, 3))
+        .any(|(a, b)| a != b);
+    assert!(!moved3, "masked unit moved");
+    let moved2 = p
+        .unit(&sess.m, 2)
+        .iter()
+        .zip(p0.unit(&sess.m, 2))
+        .any(|(a, b)| a != b);
+    assert!(moved2);
+}
+
+#[test]
+fn features_and_cka_probe_work() {
+    let be = backend();
+    let sess = ModelSession::new(&be, "res50").unwrap();
+    let p = sess.theta0().unwrap();
+    let x = {
+        let mut rng = Pcg32::new(10, 10);
+        (0..sess.m.batch_probe * sess.m.d)
+            .map(|_| rng.normal())
+            .collect::<Vec<f32>>()
+    };
+    let f = sess.features(&p, &x).unwrap();
+    assert_eq!(f.shape, vec![sess.m.blocks + 1, sess.m.batch_probe, sess.m.h]);
+    // identical models -> CKA == 1 for every layer
+    for l in 0..sess.m.blocks + 1 {
+        let cka = sess.cka_layer(&f, &f, l).unwrap();
+        assert!((cka - 1.0).abs() < 1e-4, "layer {l}: {cka}");
+    }
+}
+
+#[test]
+fn cka_drifts_after_training() {
+    let be = backend();
+    let mut sess = ModelSession::new(&be, "mbv2").unwrap();
+    sess.lr = 0.1;
+    let mut p = sess.theta0().unwrap();
+    let p0 = p.clone();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(11, 11);
+    let (probe, _) = two_class_batch(&mut rng, sess.m.batch_probe, sess.m.d);
+    for _ in 0..20 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    }
+    let f0 = sess.features(&p0, &probe).unwrap();
+    let f1 = sess.features(&p, &probe).unwrap();
+    let mut min_cka = f32::INFINITY;
+    for l in 0..sess.m.blocks + 1 {
+        min_cka = min_cka.min(sess.cka_layer(&f1, &f0, l).unwrap());
+    }
+    assert!(min_cka < 0.9999, "nothing drifted: {min_cka}");
+}
+
+#[test]
+fn ssl_step_runs_and_is_in_cosine_range() {
+    let be = backend();
+    let sess = ModelSession::new(&be, "mbv2").unwrap();
+    let mut p = sess.theta0().unwrap();
+    let mut phi = be.phi0("mbv2").unwrap();
+    assert_eq!(phi.len(), sess.m.artifacts.ssl_phi_len);
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(12, 12);
+    let (x, _) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    let x2: Vec<f32> = x.iter().map(|v| v * 1.05).collect();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..5 {
+        last = sess.ssl_step(&mut p, &mut phi, &x, &x2, &fs).unwrap();
+        assert!(last.is_finite());
+        assert!((-1.0 - 1e-5..=1.0 + 1e-5).contains(&last), "cosine loss {last}");
+        first.get_or_insert(last);
+    }
+    // full-batch descent on a fixed view pair must not move away from
+    // alignment
+    assert!(
+        last <= first.unwrap() + 1e-4,
+        "ssl loss rose: {:?} -> {last}",
+        first
+    );
+}
+
+#[test]
+fn quant_train_step_runs_and_learns() {
+    let be = backend();
+    let mut sess = ModelSession::new(&be, "res50").unwrap();
+    sess.quant = true;
+    sess.lr = 0.05;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(13, 13);
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+    let first = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+    let mut last = first;
+    for _ in 0..20 {
+        last = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+        assert!(last.is_finite());
+    }
+    assert!(last < first, "QAT loss did not decrease ({first} -> {last})");
+}
+
+#[test]
+fn energy_scores_are_finite_after_training() {
+    let be = backend();
+    let mut sess = ModelSession::new(&be, "mbv2").unwrap();
+    sess.lr = 0.05;
+    let mut p = sess.theta0().unwrap();
+    let fs = FreezeState::none(sess.m.units);
+    let mut rng = Pcg32::new(14, 14);
+    for _ in 0..60 {
+        let (x, y) = two_class_batch(&mut rng, sess.m.batch_train, sess.m.d);
+        let loss = sess.train_step(&mut p, &x, &y, &fs).unwrap();
+        assert!(loss.is_finite(), "warmup diverged");
+    }
+    let (x, _) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
+    let scores = sess.energy_scores(&p, &x).unwrap();
+    assert!(scores.iter().all(|s| s.is_finite()), "{scores:?}");
+}

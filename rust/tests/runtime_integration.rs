@@ -1,54 +1,40 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
-//! Skipped (with a notice) when `make artifacts` has not run.
+//! Integration tests over the real AOT artifacts + PJRT backend.
+//! Skipped (with a notice) when `make artifacts` has not run or the crate
+//! was built without the `xla` feature — the same behavioural contracts
+//! are asserted unconditionally on the reference backend in
+//! `tests/refcpu_kernels.rs`, so CI always executes them somewhere.
 //!
-//! NOTE: each test builds its own `Runtime` (PJRT CPU client); they are
-//! cheap.  Tests requiring artifacts call `require!()` first.
+//! NOTE: each test builds its own `PjrtBackend` (PJRT CPU client); they
+//! are cheap.
 
 use etuner::cost::flops::FreezeState;
 use etuner::model::ModelSession;
 use etuner::rng::Pcg32;
-use etuner::runtime::Runtime;
+use etuner::runtime::Backend;
 use etuner::testkit;
 
-macro_rules! require {
+macro_rules! require_pjrt {
     () => {
-        if !testkit::artifacts_available() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
+        match testkit::pjrt_backend_if_available() {
+            Some(be) => be,
+            None => {
+                eprintln!(
+                    "skipping: pjrt backend unavailable \
+                     (run `make artifacts` and build with --features xla)"
+                );
+                return;
+            }
         }
     };
 }
 
-fn runtime() -> Runtime {
-    Runtime::load(testkit::artifacts_dir()).expect("runtime")
-}
-
-/// Two linearly separable synthetic classes.
-fn two_class_batch(
-    rng: &mut Pcg32,
-    n: usize,
-    d: usize,
-) -> (Vec<f32>, Vec<i32>) {
-    let mut x = vec![0.0f32; n * d];
-    let mut y = Vec::with_capacity(n);
-    for i in 0..n {
-        let c = (rng.next_u32() % 2) as i32;
-        y.push(c);
-        for j in 0..d {
-            let mu = if c == 0 { 1.0 } else { -1.0 };
-            let sign = if j % 2 == 0 { mu } else { -mu };
-            x[i * d + j] = 0.8 * sign + 0.5 * rng.normal();
-        }
-    }
-    (x, y)
-}
+use etuner::testkit::two_class_batch;
 
 #[test]
 fn manifest_lists_all_models() {
-    require!();
-    let rt = runtime();
+    let rt = require_pjrt!();
     for m in ["res50", "mbv2", "deit", "bert"] {
-        let mm = rt.manifest.model(m).unwrap();
+        let mm = rt.manifest().model(m).unwrap();
         assert_eq!(mm.artifacts.train.len(), mm.units);
         assert!(rt.theta0(m).unwrap().len() == mm.theta_len);
     }
@@ -56,9 +42,8 @@ fn manifest_lists_all_models() {
 
 #[test]
 fn infer_runs_and_is_deterministic() {
-    require!();
-    let rt = runtime();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     let p = sess.theta0().unwrap();
     let x = vec![0.1f32; sess.m.batch_infer * sess.m.d];
     let a = sess.infer(&p, &x).unwrap();
@@ -70,9 +55,8 @@ fn infer_runs_and_is_deterministic() {
 
 #[test]
 fn training_learns_two_classes() {
-    require!();
-    let rt = runtime();
-    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let mut sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     sess.lr = 0.05;
     let mut p = sess.theta0().unwrap();
     let fs = FreezeState::none(sess.m.units);
@@ -91,23 +75,15 @@ fn training_learns_two_classes() {
         "loss {first_loss:?} -> {last_loss}"
     );
     // accuracy on a fresh draw
-    let (x, y) = {
-        let mut x = vec![0.0f32; sess.m.batch_infer * sess.m.d];
-        let mut y = Vec::new();
-        let (bx, by) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
-        x.copy_from_slice(&bx);
-        y.extend(by);
-        (x, y)
-    };
+    let (x, y) = two_class_batch(&mut rng, sess.m.batch_infer, sess.m.d);
     let acc = sess.accuracy(&p, &x, &y).unwrap();
     assert!(acc > 0.8, "accuracy {acc}");
 }
 
 #[test]
 fn prefix_frozen_units_do_not_move() {
-    require!();
-    let rt = runtime();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     let mut p = sess.theta0().unwrap();
     let p0 = p.clone();
     let mut fs = FreezeState::none(sess.m.units);
@@ -132,9 +108,8 @@ fn prefix_frozen_units_do_not_move() {
 
 #[test]
 fn interior_lr_mask_freezes_unit() {
-    require!();
-    let rt = runtime();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     let mut p = sess.theta0().unwrap();
     let p0 = p.clone();
     let mut fs = FreezeState::none(sess.m.units);
@@ -158,9 +133,8 @@ fn interior_lr_mask_freezes_unit() {
 
 #[test]
 fn features_and_cka_probe_work() {
-    require!();
-    let rt = runtime();
-    let sess = ModelSession::new(&rt, "res50").unwrap();
+    let rt = require_pjrt!();
+    let sess = ModelSession::new(rt.as_ref(), "res50").unwrap();
     let p = sess.theta0().unwrap();
     let x = {
         let mut rng = Pcg32::new(10, 10);
@@ -182,9 +156,8 @@ fn features_and_cka_probe_work() {
 
 #[test]
 fn cka_differs_after_training() {
-    require!();
-    let rt = runtime();
-    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let mut sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     sess.lr = 0.1;
     let mut p = sess.theta0().unwrap();
     let p0 = p.clone();
@@ -207,9 +180,8 @@ fn cka_differs_after_training() {
 
 #[test]
 fn ssl_step_runs_and_is_finite() {
-    require!();
-    let rt = runtime();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     let mut p = sess.theta0().unwrap();
     let mut phi = rt.phi0("mbv2").unwrap();
     let fs = FreezeState::none(sess.m.units);
@@ -226,9 +198,8 @@ fn ssl_step_runs_and_is_finite() {
 
 #[test]
 fn quant_train_artifact_runs() {
-    require!();
-    let rt = runtime();
-    let mut sess = ModelSession::new(&rt, "res50").unwrap();
+    let rt = require_pjrt!();
+    let mut sess = ModelSession::new(rt.as_ref(), "res50").unwrap();
     sess.quant = true;
     let mut p = sess.theta0().unwrap();
     let fs = FreezeState::none(sess.m.units);
@@ -240,9 +211,8 @@ fn quant_train_artifact_runs() {
 
 #[test]
 fn energy_scores_are_finite_after_warmup_training() {
-    require!();
-    let rt = runtime();
-    let mut sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let rt = require_pjrt!();
+    let mut sess = ModelSession::new(rt.as_ref(), "mbv2").unwrap();
     sess.lr = 0.05;
     let mut p = sess.theta0().unwrap();
     let fs = FreezeState::none(sess.m.units);

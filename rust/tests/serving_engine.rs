@@ -1,25 +1,21 @@
 //! Serving-engine regression tests: the batcher's pad/scatter round-trip,
 //! and the determinism contract — with a zero batch window the engine's
 //! reports are bit-identical to the direct (pre-engine) request path,
-//! while a real window actually coalesces requests.  Host-side tests run
-//! everywhere; artifact tests need `make artifacts`.
+//! while a real window actually coalesces requests.
+//!
+//! Since the Backend refactor every test here runs everywhere: the
+//! end-to-end tests execute through
+//! [`etuner::testkit::execution_backend`] (PJRT when available, the
+//! reference executor otherwise), so batching correctness is asserted
+//! against a *really executing* model in CI — not just host-side
+//! literals.
 
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::benchmarks::Benchmark;
 use etuner::model::ModelSession;
-use etuner::runtime::Runtime;
 use etuner::serve::{batcher::span_rows, AdaptiveBatcher, QueuedRequest};
 use etuner::sim::{RunConfig, Simulation};
 use etuner::testkit;
-
-macro_rules! require {
-    () => {
-        if !testkit::artifacts_available() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 fn quick(seed: u64) -> RunConfig {
     let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
@@ -109,23 +105,22 @@ fn padded_batch_predictions_match_single_executes() {
 }
 
 // ---------------------------------------------------------------------------
-// artifact-gated: end-to-end determinism + real coalescing
+// end-to-end (executing backend): determinism + real coalescing
 // ---------------------------------------------------------------------------
 
 #[test]
 fn window_zero_is_bit_identical_to_direct_path() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
 
     // engine path with a degenerate window (the default config)
     let mut engine_cfg = quick(21);
     engine_cfg.serve.batch_window_s = 0.0;
-    let engine = Simulation::new(&rt, engine_cfg).unwrap().run().unwrap();
+    let engine = Simulation::new(be.as_ref(), engine_cfg).unwrap().run().unwrap();
 
     // direct path: the pre-engine per-request serve, no queue/batcher
     let mut direct_cfg = quick(21);
     direct_cfg.serve_direct = true;
-    let direct = Simulation::new(&rt, direct_cfg).unwrap().run().unwrap();
+    let direct = Simulation::new(be.as_ref(), direct_cfg).unwrap().run().unwrap();
 
     assert_eq!(
         engine.fingerprint(),
@@ -146,16 +141,15 @@ fn window_zero_is_bit_identical_to_direct_path() {
 
 #[test]
 fn real_window_coalesces_requests_deterministically() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let mut cfg = quick(5);
     cfg.serve.batch_window_s = 120.0;
     // SLO far beyond the window so the coalescing window (not the
     // deadline-aware early flush) decides when batches close
     cfg.serve.slo_ms = 300_000.0;
 
-    let a = Simulation::new(&rt, cfg.clone()).unwrap().run().unwrap();
-    let b = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let a = Simulation::new(be.as_ref(), cfg.clone()).unwrap().run().unwrap();
+    let b = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     assert_eq!(
         a.fingerprint(),
         b.fingerprint(),
@@ -179,9 +173,8 @@ fn real_window_coalesces_requests_deterministically() {
 
 #[test]
 fn engine_batch_matches_single_requests_through_real_session() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
-    let sess = ModelSession::new(&rt, "mbv2").unwrap();
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
     let p = sess.theta0().unwrap();
     let d = sess.m.d;
     let rows = sess.m.batch_infer / 4;
@@ -210,8 +203,97 @@ fn engine_batch_matches_single_requests_through_real_session() {
         assert_eq!(
             &preds[span.row0..span.row0 + span.rows],
             &alone_preds[..req.rows],
-            "request {} predictions changed when batched through the artifact",
+            "request {} predictions changed when batched through the model",
             span.index
         );
     }
+}
+
+/// Per-request predictions must not depend on *which* other requests
+/// share the padded execute: every way of splitting the same request set
+/// into batches yields identical per-request logits rows.
+#[test]
+fn predictions_are_independent_of_batch_composition() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let p = sess.theta0().unwrap();
+    let d = sess.m.d;
+    let c = sess.m.classes;
+    let rows = sess.m.batch_infer / 8;
+    let b = AdaptiveBatcher::new(sess.m.batch_infer, 10.0, d);
+
+    let reqs: Vec<QueuedRequest> = (0..6)
+        .map(|i| QueuedRequest {
+            arrival_t: i as f64,
+            deadline_t: i as f64 + 1.0,
+            scenario: 2,
+            stale_batches: 0,
+            x: (0..rows * d)
+                .map(|k| ((i * 13 + k * 7) % 11) as f32 * 0.15 - 0.7)
+                .collect(),
+            y: vec![0; rows],
+            rows,
+        })
+        .collect();
+
+    // reference: every request alone in its own padded batch
+    let alone: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|r| {
+            let packed = b.pack(std::slice::from_ref(r));
+            let logits = sess.infer(&p, &packed.x).unwrap();
+            logits.data[..r.rows * c].to_vec()
+        })
+        .collect();
+
+    // three different compositions of the same six requests
+    let groupings: [&[usize]; 3] = [&[6], &[2, 4], &[3, 1, 2]];
+    for sizes in groupings {
+        let mut i0 = 0;
+        for &n in sizes {
+            let group = &reqs[i0..i0 + n];
+            let packed = b.pack(group);
+            let logits = sess.infer(&p, &packed.x).unwrap();
+            for (req, span) in group.iter().zip(&packed.spans) {
+                let got = span_rows(&logits.data, c, span);
+                assert_eq!(
+                    got,
+                    &alone[i0 + span.index][..],
+                    "request {} logits changed in grouping {sizes:?}",
+                    i0 + span.index
+                );
+            }
+            i0 += n;
+        }
+    }
+}
+
+/// `--batch-window` sweep through a really executing backend: every
+/// window serves all requests, is seed-deterministic, and wider windows
+/// never reduce coalescing.
+#[test]
+fn batch_window_sweep_serves_everything_deterministically() {
+    let be = testkit::execution_backend();
+    let mut prev_avg = 0.0f64;
+    for window in [0.0f64, 30.0, 120.0] {
+        let mut cfg = quick(9);
+        cfg.serve.batch_window_s = window;
+        cfg.serve.slo_ms = 300_000.0;
+        let a = Simulation::new(be.as_ref(), cfg.clone()).unwrap().run().unwrap();
+        let b = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "window {window}: nondeterministic"
+        );
+        assert_eq!(a.requests.len(), 80, "window {window}: dropped requests");
+        assert!(a.serve_executes > 0);
+        assert!(
+            a.avg_batch_requests >= prev_avg - 1e-9,
+            "window {window}: coalescing regressed ({} < {prev_avg})",
+            a.avg_batch_requests
+        );
+        prev_avg = a.avg_batch_requests;
+    }
+    assert!(prev_avg > 1.0, "the widest window never coalesced");
 }

@@ -1,22 +1,18 @@
-//! Whole-system integration tests: full continual-learning runs through the
-//! real artifacts, checking the paper's qualitative claims hold on this
-//! testbed.  Heavier than unit tests; all require `make artifacts`.
+//! Whole-system integration tests: full continual-learning runs checking
+//! the paper's qualitative claims hold on this testbed.
+//!
+//! Since the Backend refactor these are **no longer artifact-gated**:
+//! every environment executes real models through
+//! [`etuner::testkit::execution_backend`] (PJRT over the AOT artifacts
+//! when available, the pure-Rust reference executor otherwise — same
+//! segment semantics either way).  Accuracy floors are set modestly below
+//! the observed PJRT values so both θ0 sources clear them.
 
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
-use etuner::runtime::Runtime;
 use etuner::sim::{RunConfig, Simulation};
 use etuner::testkit;
-
-macro_rules! require {
-    () => {
-        if !testkit::artifacts_available() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 fn quick(model: &str, b: Benchmark) -> RunConfig {
     let mut c = RunConfig::quickstart(model, b);
@@ -26,11 +22,10 @@ fn quick(model: &str, b: Benchmark) -> RunConfig {
 
 #[test]
 fn immediate_run_fires_one_round_per_batch() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let cfg = quick("mbv2", Benchmark::SCifar10)
         .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     let batches = Benchmark::SCifar10.batches_per_scenario()
         * (Benchmark::SCifar10.scenario_count() - 1);
     assert_eq!(r.rounds as usize, batches);
@@ -41,11 +36,10 @@ fn immediate_run_fires_one_round_per_batch() {
 
 #[test]
 fn lazytune_merges_rounds_without_losing_data() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let cfg = quick("mbv2", Benchmark::SCifar10)
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None);
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     let batches = Benchmark::SCifar10.batches_per_scenario()
         * (Benchmark::SCifar10.scenario_count() - 1);
     // no batch dropped (the paper: "we do not drop any training data")
@@ -60,10 +54,9 @@ fn lazytune_merges_rounds_without_losing_data() {
 
 #[test]
 fn lazytune_cuts_time_and_energy_vs_immediate() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let imm = Simulation::new(
-        &rt,
+        be.as_ref(),
         quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
     )
@@ -71,7 +64,7 @@ fn lazytune_cuts_time_and_energy_vs_immediate() {
     .run()
     .unwrap();
     let lazy = Simulation::new(
-        &rt,
+        be.as_ref(),
         quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None),
     )
@@ -91,10 +84,9 @@ fn lazytune_cuts_time_and_energy_vs_immediate() {
 
 #[test]
 fn simfreeze_freezes_layers_and_cuts_compute() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let imm = Simulation::new(
-        &rt,
+        be.as_ref(),
         quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None),
     )
@@ -102,7 +94,7 @@ fn simfreeze_freezes_layers_and_cuts_compute() {
     .run()
     .unwrap();
     let sf = Simulation::new(
-        &rt,
+        be.as_ref(),
         quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze),
     )
@@ -129,12 +121,11 @@ fn simfreeze_freezes_layers_and_cuts_compute() {
 
 #[test]
 fn scenario_changes_are_detected_and_reset_lazytune() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let mut cfg = quick("mbv2", Benchmark::SCifar10)
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::None);
     cfg.n_requests = 150; // enough requests for the detector to see jumps
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     assert!(
         r.scenario_changes_detected >= 2,
         "detected {} of 3 changes",
@@ -151,12 +142,11 @@ fn scenario_changes_are_detected_and_reset_lazytune() {
 
 #[test]
 fn semi_supervised_run_completes_with_ssl_steps() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let mut cfg = quick("mbv2", Benchmark::SCifar10)
         .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::None);
     cfg.labeled_fraction = Some(0.1);
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     assert_eq!(
         r.train_iterations as usize,
         Benchmark::SCifar10.batches_per_scenario() * 4
@@ -166,19 +156,17 @@ fn semi_supervised_run_completes_with_ssl_steps() {
 
 #[test]
 fn quant_run_completes_and_learns() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let mut cfg = quick("res50", Benchmark::SCifar10)
         .with_policies(TunePolicyKind::Immediate, FreezePolicyKind::SimFreeze);
     cfg.quant = true;
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
     assert!(r.avg_inference_accuracy > 0.2, "{}", r.summary());
 }
 
 #[test]
 fn all_baselines_run_on_small_benchmark() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     for freeze in [
         FreezePolicyKind::Egeria,
         FreezePolicyKind::SlimFit,
@@ -187,7 +175,7 @@ fn all_baselines_run_on_small_benchmark() {
     ] {
         let cfg = quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::LazyTune, freeze);
-        let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+        let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
         assert!(
             r.avg_inference_accuracy > 0.15,
             "{:?}: {}",
@@ -200,15 +188,14 @@ fn all_baselines_run_on_small_benchmark() {
 
 #[test]
 fn runs_are_reproducible_per_seed() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let mk = || {
         quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
             .with_seed(33)
     };
-    let a = Simulation::new(&rt, mk()).unwrap().run().unwrap();
-    let b = Simulation::new(&rt, mk()).unwrap().run().unwrap();
+    let a = Simulation::new(be.as_ref(), mk()).unwrap().run().unwrap();
+    let b = Simulation::new(be.as_ref(), mk()).unwrap().run().unwrap();
     assert_eq!(a.avg_inference_accuracy, b.avg_inference_accuracy);
     assert_eq!(a.rounds, b.rounds);
     assert_eq!(a.energy.total_j(), b.energy.total_j());
@@ -216,24 +203,22 @@ fn runs_are_reproducible_per_seed() {
 
 #[test]
 fn different_arrival_kinds_complete() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     for kind in [ArrivalKind::Uniform, ArrivalKind::Normal, ArrivalKind::Trace] {
         let mut cfg = quick("mbv2", Benchmark::SCifar10)
             .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
         cfg.train_arrival = kind;
         cfg.infer_arrival = kind;
-        let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
+        let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
         assert!(r.avg_inference_accuracy > 0.15, "{kind:?}");
     }
 }
 
 #[test]
 fn nlp_benchmark_runs_on_bert() {
-    require!();
-    let rt = Runtime::load(testkit::artifacts_dir()).unwrap();
+    let be = testkit::execution_backend();
     let cfg = quick("bert", Benchmark::News20)
         .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
-    let r = Simulation::new(&rt, cfg).unwrap().run().unwrap();
-    assert!(r.avg_inference_accuracy > 0.3, "{}", r.summary());
+    let r = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
+    assert!(r.avg_inference_accuracy > 0.25, "{}", r.summary());
 }
