@@ -6,6 +6,7 @@
 #   make ci          stub-feature gate: build + tests + fmt + clippy -D warnings
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
+#   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
 #   make bench-snapshot PR=N   archive BENCH_hotpath.json under bench_history/
 #   make repro       regenerate every paper table/figure, all cores
 
@@ -13,7 +14,7 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci bench bench-snapshot repro
+.PHONY: artifacts build test ci bench bench-gemm bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -28,15 +29,26 @@ test:
 # unit-test, stay rustfmt-clean and clippy-clean.  Since the Backend
 # refactor `cargo test` includes the refcpu END-TO-END suite — full
 # simulations that really execute models (tests/backend_parity.rs,
-# tests/refcpu_kernels.rs, the un-gated integration suites) — so CI
-# verifies learning semantics, not just marshalling and caching.
+# tests/refcpu_kernels.rs, tests/refcpu_gemm.rs, the un-gated integration
+# suites) — so CI verifies learning semantics, not just marshalling and
+# caching.  The execution core is the repo's hot path, so the clippy
+# `perf` lint group is explicitly warn-as-error (it is warn-by-default,
+# which `-D warnings` already promotes; the explicit `-D clippy::perf`
+# keeps it fatal even if the blanket deny is ever relaxed).
 ci:
 	cd rust && cargo build && cargo test -q
 	cd rust && cargo fmt --check
-	cd rust && cargo clippy --all-targets -- -D warnings
+	cd rust && cargo clippy --all-targets -- -D warnings -D clippy::perf
 
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \
+		cargo bench --bench hotpath
+
+# Only the packed-vs-naive kernel series (fast; separate output file so a
+# partial run never clobbers the full hotpath trajectory).
+bench-gemm:
+	cd rust && ETUNER_BENCH_FILTER=gemm \
+		ETUNER_BENCH_OUT=$(CURDIR)/BENCH_gemm.json \
 		cargo bench --bench hotpath
 
 # Archive the current bench run as this PR's snapshot so the perf

@@ -10,7 +10,15 @@
 //!     per request), twice: a host-side row-wise stand-in executor (the
 //!     pre-backend series, kept for cross-PR continuity) and the **really
 //!     executing** refcpu backend
+//!   * gemm kernel series          (PR 4): packed execution core vs the
+//!     naive oracle — fwd/bwd at builtin-family infer and train shapes,
+//!     steady-state (cached panels) and pack-inclusive, plus the QAT
+//!     fused-quantize pack vs per-call full-tensor fake-quant
 //!   * coordinator-only components (NNLS fit, OOD observe, stream gen)
+//!
+//! `ETUNER_BENCH_FILTER=<key>` runs only matching sections (keys:
+//! serving, gemm, refcpu, pjrt, coordinator) — `make bench-gemm` uses it
+//! for the isolated kernel series.
 //!
 //! Run: `make bench` / `cargo bench --bench hotpath`.  The refcpu series
 //! run on every machine — no artifacts, no XLA toolchain — so CI
@@ -148,13 +156,19 @@ fn main() -> anyhow::Result<()> {
         results.push((name.to_string(), (mean, min, max)));
     };
 
+    // `ETUNER_BENCH_FILTER=gemm` (etc.) runs only matching sections —
+    // `make bench-gemm` uses it for the isolated kernel series.
+    let filter = std::env::var("ETUNER_BENCH_FILTER").ok();
+    let section =
+        |key: &str| -> bool { filter.as_deref().map_or(true, |f| key.contains(f)) };
+
     let mut rng = Pcg32::new(42, 1);
 
     // ---- serving engine: cross-request batching throughput (host-side) ----
     // A fixed-shape execute computes all `CAPACITY` rows whether they hold
     // one 8-row request or eight, so batched serving amortizes the
     // full-batch cost; the unbatched series pays it once per request.
-    {
+    if section("serving") {
         const D: usize = 128;
         const CLASSES: usize = 50;
         const CAPACITY: usize = 64;
@@ -245,12 +259,113 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(sink);
     }
 
+    // ---- gemm: packed execution core vs the naive oracle ------------------
+    // Shapes from the builtin family (res50: d=128, h=e=64) at the infer
+    // and train batch sizes.  `packed` runs on cached panels (the steady
+    // state); `packed+pack` includes the per-generation pack cost.
+    if section("gemm") {
+        use etuner::runtime::refcpu::gemm::{self, Act};
+        use etuner::runtime::refcpu::naive;
+
+        let mut sink = 0.0f32;
+        let shapes = [
+            ("infer embed m64 k128 n64", 64usize, 128usize, 64usize),
+            ("train embed m16 k128 n64", 16, 128, 64),
+            ("train block m16 k64 n64", 16, 64, 64),
+        ];
+        for (label, m, k, n) in shapes {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            let dout: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut out = vec![0.0f32; m * n];
+            report(
+                &format!("gemm fwd naive ({label})"),
+                bench(3, 30, || {
+                    out = naive::dense_fwd(&x, &w, &bias, m, k, n, Act::Relu, false);
+                    sink += out[0];
+                }),
+            );
+            let pan = gemm::pack_w(&w, k, n, false);
+            report(
+                &format!("gemm fwd packed ({label})"),
+                bench(3, 30, || {
+                    gemm::gemm_fwd(&x, &pan, &bias, m, Act::Relu, &mut out);
+                    sink += out[0];
+                }),
+            );
+            report(
+                &format!("gemm fwd packed+pack ({label})"),
+                bench(3, 30, || {
+                    let p = gemm::pack_w(&w, k, n, false);
+                    gemm::gemm_fwd(&x, &p, &bias, m, Act::Relu, &mut out);
+                    sink += out[0];
+                }),
+            );
+            let mut dx = vec![0.0f32; m * k];
+            let mut dw = vec![0.0f32; k * n];
+            let mut db = vec![0.0f32; n];
+            // like-for-like: both sides run only the dx/dw/db kernels on a
+            // precomputed dz (= dout for Act::None) — no forward recompute
+            // or tape copies on either side.
+            report(
+                &format!("gemm bwd naive ({label})"),
+                bench(3, 30, || {
+                    let a = naive::dx_naive(&dout, &w, m, k, n);
+                    let b2 = naive::dw_naive(&x, &dout, m, k, n);
+                    let c = naive::db_naive(&dout, m, n);
+                    sink += a[0] + b2[0] + c[0];
+                }),
+            );
+            let pt = gemm::pack_wt(&w, k, n, false);
+            report(
+                &format!("gemm bwd packed ({label})"),
+                bench(3, 30, || {
+                    gemm::gemm_dx(&dout, &pt, m, &mut dx);
+                    dw.iter_mut().for_each(|v| *v = 0.0);
+                    db.iter_mut().for_each(|v| *v = 0.0);
+                    gemm::gemm_dw_acc(&x, &dout, m, k, n, &mut dw);
+                    gemm::db_acc(&dout, m, n, &mut db);
+                    sink += dx[0] + dw[0] + db[0];
+                }),
+            );
+        }
+        // QAT: per-call full-tensor fake-quant of x and w (naive) vs the
+        // fused pack — weights quantized once per generation, x into a
+        // reused buffer.
+        {
+            let (m, k, n) = (16usize, 64usize, 64usize);
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            let mut out = vec![0.0f32; m * n];
+            report(
+                "gemm qat naive (m16 k64 n64)",
+                bench(3, 30, || {
+                    out = naive::dense_fwd(&x, &w, &bias, m, k, n, Act::Relu, true);
+                    sink += out[0];
+                }),
+            );
+            let panq = gemm::pack_w(&w, k, n, true);
+            let mut xq = vec![0.0f32; m * k];
+            report(
+                "gemm qat packed (m16 k64 n64)",
+                bench(3, 30, || {
+                    gemm::quantize_into(&x, &mut xq);
+                    gemm::gemm_fwd(&xq, &panq, &bias, m, Act::Relu, &mut out);
+                    sink += out[0];
+                }),
+            );
+        }
+        std::hint::black_box(sink);
+    }
+
     // ---- refcpu: REAL executing serving throughput ------------------------
     // Same batched-vs-unbatched shape, but every execute is a real model
     // forward through the reference backend — the cross-PR-comparable
     // serving series CI can regenerate (`make bench-snapshot`).
     let refcpu = testkit::refcpu_spec().create()?;
-    {
+    if section("serving") {
         let sess = ModelSession::new(refcpu.as_ref(), "mbv2")?;
         let p = sess.theta0()?;
         let d = sess.m.d;
@@ -304,54 +419,64 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- refcpu model series (executes everywhere, CI included) -----------
-    model_series(refcpu.as_ref(), "refcpu ", &mut rng, &mut report)?;
+    if section("refcpu") {
+        model_series(refcpu.as_ref(), "refcpu ", &mut rng, &mut report)?;
+    }
 
     // ---- pjrt series under the historical labels (needs artifacts) --------
-    if let Some(pjrt) = testkit::pjrt_backend_if_available() {
-        model_series(pjrt.as_ref(), "", &mut rng, &mut report)?;
-    } else {
-        eprintln!(
-            "pjrt backend unavailable (artifacts not built or no xla \
-             feature); skipping the pjrt series"
-        );
+    if section("pjrt") {
+        if let Some(pjrt) = testkit::pjrt_backend_if_available() {
+            model_series(pjrt.as_ref(), "", &mut rng, &mut report)?;
+        } else {
+            eprintln!(
+                "pjrt backend unavailable (artifacts not built or no xla \
+                 feature); skipping the pjrt series"
+            );
+        }
     }
 
     // ---- coordinator-only components (backend-free) ----
-    let pts: Vec<(f64, f64)> =
-        (1..40).map(|k| (k as f64, 0.8 - 0.5 / k as f64)).collect();
-    report(
-        "nnls curve fit (40 points)",
-        bench(10, 200, || {
-            let _ = curve::fit(&pts);
-        }),
-    );
-    let mut ood = EnergyOod::new();
-    let mut i = 0u64;
-    report(
-        "ood observe",
-        bench(10, 200, || {
-            for _ in 0..100 {
-                i += 1;
-                ood.observe(-8.0 + (i % 7) as f64 * 0.05);
-            }
-        }),
-    );
-    report(
-        "stream generate (NIC391, 500 reqs)",
-        bench(2, 10, || {
-            let _ = Stream::generate(
-                Benchmark::Nic391,
-                500,
-                ArrivalKind::Poisson,
-                ArrivalKind::Poisson,
-                7,
-            );
-        }),
-    );
+    if section("coordinator") {
+        let pts: Vec<(f64, f64)> =
+            (1..40).map(|k| (k as f64, 0.8 - 0.5 / k as f64)).collect();
+        report(
+            "nnls curve fit (40 points)",
+            bench(10, 200, || {
+                let _ = curve::fit(&pts);
+            }),
+        );
+        let mut ood = EnergyOod::new();
+        let mut i = 0u64;
+        report(
+            "ood observe",
+            bench(10, 200, || {
+                for _ in 0..100 {
+                    i += 1;
+                    ood.observe(-8.0 + (i % 7) as f64 * 0.05);
+                }
+            }),
+        );
+        report(
+            "stream generate (NIC391, 500 reqs)",
+            bench(2, 10, || {
+                let _ = Stream::generate(
+                    Benchmark::Nic391,
+                    500,
+                    ArrivalKind::Poisson,
+                    ArrivalKind::Poisson,
+                    7,
+                );
+            }),
+        );
+    }
 
-    // machine-readable trajectory file (tracked across PRs by `make bench`)
+    write_results(&results)
+}
+
+/// Machine-readable trajectory file (tracked across PRs by `make bench`).
+fn write_results(results: &[(String, (f64, f64, f64))]) -> anyhow::Result<()> {
     let mut obj = BTreeMap::new();
-    for (name, (mean, min, max)) in &results {
+    for (name, (mean, min, max)) in results {
         let mut entry = BTreeMap::new();
         entry.insert("mean_ms".to_string(), Json::Num(*mean));
         entry.insert("min_ms".to_string(), Json::Num(*min));

@@ -70,6 +70,19 @@ pub struct Report {
     pub serving_rebuilds: u64,
     /// requests served straight from the cached serving θ.
     pub serving_hits: u64,
+    /// execution-core counters from [`crate::runtime::Backend::perf`]
+    /// (packed-weight cache + scratch arena; like the counters above,
+    /// excluded from [`Report::fingerprint`]):
+    /// weight panels packed by the backend.
+    pub gemm_packs: u64,
+    /// GEMM calls that reused an already-packed panel.
+    pub gemm_pack_hits: u64,
+    /// scratch buffers allocated fresh (arena misses).
+    pub scratch_allocs: u64,
+    /// scratch buffers served from the arena free list.
+    pub scratch_reuses: u64,
+    /// bytes handed out from recycled scratch buffers.
+    pub scratch_bytes_reused: u64,
     /// serving-engine accounting (like the zero-copy counters above, this
     /// block is excluded from [`Report::fingerprint`]: the engine is
     /// plumbing around the scientific output, and with `batch_window_s ==
@@ -314,6 +327,11 @@ mod tests {
         b.theta_cache_hits = 3;
         b.serving_rebuilds = 1;
         b.serving_hits = 40;
+        b.gemm_packs = 14;
+        b.gemm_pack_hits = 900;
+        b.scratch_allocs = 30;
+        b.scratch_reuses = 5000;
+        b.scratch_bytes_reused = 1 << 20;
         // serving-engine accounting is plumbing, not scientific output
         b.latency_p50_ms = 12.0;
         b.latency_p99_ms = 80.0;

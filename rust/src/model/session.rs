@@ -19,6 +19,14 @@
 //! steps never round-trip θ through a re-marshal.  `theta_marshals`/
 //! `theta_cache_hits` counters expose the behaviour to benches and
 //! regression tests.
+//!
+//! The cache is also the **generation-keyed invalidation hook** for
+//! backend state derived from θ (the reference executor's packed weight
+//! panels): every eviction or stale-generation replacement calls
+//! [`Backend::release`] with the dropped value's buf id, and
+//! [`ModelSession::warm_infer`] asks the backend to pre-build per-θ
+//! serving state ([`Backend::warm`]) when the serving engine installs a
+//! CWR-bank θ.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -47,6 +55,17 @@ pub struct ModelSession<'b> {
     theta_cache: RefCell<HashMap<u64, (u64, Value)>>,
     theta_marshals: Cell<u64>,
     theta_cache_hits: Cell<u64>,
+}
+
+impl<'b> Drop for ModelSession<'b> {
+    /// Backends outlive sessions (one backend serves many runs in a
+    /// sweep), so tell it to free pack state keyed on this session's
+    /// cached θ buf ids — otherwise dead srcs accumulate until the
+    /// backend's src cap flushes live packs along with them.
+    fn drop(&mut self) {
+        let mut cache = self.theta_cache.borrow_mut();
+        self.clear_theta_cache(&mut cache);
+    }
 }
 
 impl<'b> ModelSession<'b> {
@@ -78,7 +97,20 @@ impl<'b> ModelSession<'b> {
         self.theta_cache_hits.get()
     }
 
+    /// Drop every cached θ value, telling the backend to free any derived
+    /// state (packed weight panels) keyed on the evicted buf ids.
+    fn clear_theta_cache(&self, cache: &mut HashMap<u64, (u64, Value)>) {
+        for (_, (_, v)) in cache.drain() {
+            self.be.release(v.buf_id());
+        }
+    }
+
     /// Make sure the cache holds a buffer for `params`' current content.
+    ///
+    /// This is the generation-keyed invalidation hook for *all* per-θ
+    /// backend state: replacing a stale entry (the generation moved)
+    /// releases the old value's buf id, so the backend's weight-pack
+    /// cache invalidates in lockstep with the θ-literal cache.
     fn ensure_theta_value(&self, params: &Params) -> Result<()> {
         let mut cache = self.theta_cache.borrow_mut();
         if let Some((gen, _)) = cache.get(&params.id()) {
@@ -88,11 +120,13 @@ impl<'b> ModelSession<'b> {
             }
         }
         if cache.len() >= THETA_CACHE_CAP {
-            cache.clear();
+            self.clear_theta_cache(&mut cache);
         }
         self.theta_marshals.set(self.theta_marshals.get() + 1);
         let v = self.be.marshal_f32(params.theta(), &[self.m.theta_len])?;
-        cache.insert(params.id(), (params.generation(), v));
+        if let Some((_, old)) = cache.insert(params.id(), (params.generation(), v)) {
+            self.be.release(old.buf_id());
+        }
         Ok(())
     }
 
@@ -101,9 +135,22 @@ impl<'b> ModelSession<'b> {
     fn adopt_theta_value(&self, params: &Params, v: Value) {
         let mut cache = self.theta_cache.borrow_mut();
         if cache.len() >= THETA_CACHE_CAP {
-            cache.clear();
+            self.clear_theta_cache(&mut cache);
         }
-        cache.insert(params.id(), (params.generation(), v));
+        if let Some((_, old)) = cache.insert(params.id(), (params.generation(), v)) {
+            self.be.release(old.buf_id());
+        }
+    }
+
+    /// Pre-build the backend's per-θ serving state (marshalled literal +
+    /// packed forward panels) for `params`.  The serving engine calls
+    /// this when it installs a CWR-bank θ, so pack work happens at
+    /// install time and steady-state inference never packs.
+    pub fn warm_infer(&self, params: &Params) -> Result<()> {
+        self.ensure_theta_value(params)?;
+        let cache = self.theta_cache.borrow();
+        let theta_v = &cache.get(&params.id()).unwrap().1;
+        self.be.warm(&self.m.artifacts.infer, theta_v)
     }
 
     /// One SGD step on a batch.  Chooses the `train_k` artifact matching

@@ -26,6 +26,7 @@
 //! caller changing.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
@@ -33,8 +34,23 @@ use super::artifact::Manifest;
 use super::exec::TensorF32;
 use super::hostlit::HostLiteral;
 
+static NEXT_BUF_ID: AtomicU64 = AtomicU64::new(1);
+
 /// A backend-owned buffer handle crossing the execute boundary.
-pub enum Value {
+///
+/// Every value carries a process-unique `buf_id` assigned at construction.
+/// Because [`crate::model::ModelSession`] keeps θ values alive per
+/// `(Params::id, Params::generation)` and adopts train-step *output*
+/// values, a buf id is a stable proxy for "this exact θ content": any
+/// generation bump produces a new value and therefore a new id.  The
+/// reference executor keys its packed-weight cache on it, so packs
+/// invalidate exactly when the session's θ-literal cache does.
+pub struct Value {
+    repr: Repr,
+    id: u64,
+}
+
+enum Repr {
     /// Host literal (reference executor, and the PJRT path built without
     /// the `xla` feature, where the stub literal is the host literal).
     Host(HostLiteral),
@@ -44,21 +60,54 @@ pub enum Value {
 }
 
 impl Value {
+    /// Wrap a host literal (fresh buf id).
+    pub fn host(lit: HostLiteral) -> Value {
+        Value {
+            repr: Repr::Host(lit),
+            id: NEXT_BUF_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Wrap a PJRT literal (fresh buf id).
+    #[cfg(feature = "xla")]
+    pub fn xla(lit: xla::Literal) -> Value {
+        Value {
+            repr: Repr::Xla(lit),
+            id: NEXT_BUF_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Process-unique buffer id (never reused; see the type docs).
+    pub fn buf_id(&self) -> u64 {
+        self.id
+    }
+
     /// Borrow the host literal; errors for device-side values.
     pub fn as_host(&self) -> Result<&HostLiteral> {
-        match self {
-            Value::Host(l) => Ok(l),
+        match &self.repr {
+            Repr::Host(l) => Ok(l),
             #[cfg(feature = "xla")]
-            Value::Xla(_) => Err(anyhow::anyhow!(
+            Repr::Xla(_) => Err(anyhow::anyhow!(
                 "value is a PJRT literal, not a host literal"
+            )),
+        }
+    }
+
+    /// Borrow the PJRT literal; errors for host values.
+    #[cfg(feature = "xla")]
+    pub fn as_xla(&self) -> Result<&xla::Literal> {
+        match &self.repr {
+            Repr::Xla(l) => Ok(l),
+            Repr::Host(_) => Err(anyhow::anyhow!(
+                "value is a host literal, not a PJRT literal"
             )),
         }
     }
 
     /// Read back as a host tensor (shape + f32 data).
     pub fn to_tensor(&self) -> Result<TensorF32> {
-        match self {
-            Value::Host(l) => {
+        match &self.repr {
+            Repr::Host(l) => {
                 let shape = l
                     .shape()
                     .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
@@ -68,7 +117,7 @@ impl Value {
                 Ok(TensorF32::new(shape, data))
             }
             #[cfg(feature = "xla")]
-            Value::Xla(l) => {
+            Repr::Xla(l) => {
                 let shape = l
                     .array_shape()
                     .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
@@ -84,16 +133,33 @@ impl Value {
 
     /// Read back the raw f32 data (no shape; the flat-θ fast path).
     pub fn read_f32(&self) -> Result<Vec<f32>> {
-        match self {
-            Value::Host(l) => l
+        match &self.repr {
+            Repr::Host(l) => l
                 .to_vec::<f32>()
                 .map_err(|e| anyhow::anyhow!("to_vec: {e:?}")),
             #[cfg(feature = "xla")]
-            Value::Xla(l) => l
+            Repr::Xla(l) => l
                 .to_vec::<f32>()
                 .map_err(|e| anyhow::anyhow!("to_vec: {e:?}")),
         }
     }
+}
+
+/// Backend-internal performance counters (execution-core plumbing, *not*
+/// scientific output — excluded from [`crate::metrics::Report::fingerprint`]
+/// like the session's marshal counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendPerf {
+    /// Weight panels packed (per layer × direction × quantization).
+    pub gemm_packs: u64,
+    /// GEMM calls that reused an already-packed panel.
+    pub gemm_pack_hits: u64,
+    /// Scratch buffers allocated fresh (arena misses).
+    pub scratch_allocs: u64,
+    /// Scratch buffers served from the arena free list.
+    pub scratch_reuses: u64,
+    /// Bytes handed out from recycled scratch buffers.
+    pub scratch_bytes_reused: u64,
 }
 
 /// Object-safe execute boundary: load/marshal/execute/read-back.
@@ -129,6 +195,26 @@ pub trait Backend {
 
     /// Initial SimSiam projector/predictor parameters.
     fn phi0(&self, model: &str) -> Result<Vec<f32>>;
+
+    /// Execution-core counters (packed-weight cache, scratch arena).
+    /// Backends without those caches report zeros.
+    fn perf(&self) -> BackendPerf {
+        BackendPerf::default()
+    }
+
+    /// Pre-build any per-θ derived state (packed weight panels) for the
+    /// given segment, so the *next* `execute` on this θ value pays no
+    /// preparation cost.  The serving engine calls this when it installs
+    /// a fresh CWR-bank θ, moving pack work off the request path.
+    fn warm(&self, _segment: &str, _theta: &Value) -> Result<()> {
+        Ok(())
+    }
+
+    /// A value previously produced by this backend is being dropped by a
+    /// caller-side cache; derived state keyed on its buf id can be freed.
+    /// ([`crate::model::ModelSession`] calls this whenever its
+    /// generation-keyed θ cache evicts or replaces an entry.)
+    fn release(&self, _buf_id: u64) {}
 }
 
 /// Which backend to construct.
@@ -243,11 +329,19 @@ mod tests {
 
     #[test]
     fn host_value_reads_back() {
-        let v = Value::Host(HostLiteral::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap());
+        let v = Value::host(HostLiteral::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap());
         let t = v.to_tensor().unwrap();
         assert_eq!(t.shape, vec![2, 2]);
         assert_eq!(v.read_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(v.as_host().is_ok());
+    }
+
+    #[test]
+    fn buf_ids_are_process_unique() {
+        let a = Value::host(HostLiteral::f32(&[1.0], &[1]).unwrap());
+        let b = Value::host(HostLiteral::f32(&[1.0], &[1]).unwrap());
+        assert_ne!(a.buf_id(), b.buf_id(), "identical content, distinct ids");
+        assert_ne!(a.buf_id(), 0, "0 is reserved as 'no buffer'");
     }
 
     #[test]

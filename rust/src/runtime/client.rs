@@ -26,22 +26,19 @@ use crate::runtime::stub as xla;
 /// literal, so the two variants coincide.
 #[cfg(feature = "xla")]
 fn wrap(lit: xla::Literal) -> Value {
-    Value::Xla(lit)
+    Value::xla(lit)
 }
 
 #[cfg(not(feature = "xla"))]
 fn wrap(lit: xla::Literal) -> Value {
-    Value::Host(lit)
+    Value::host(lit)
 }
 
 #[cfg(feature = "xla")]
 fn unwrap(v: &Value) -> Result<&xla::Literal> {
-    match v {
-        Value::Xla(l) => Ok(l),
-        Value::Host(_) => Err(anyhow::anyhow!(
-            "pjrt backend received a host value from another backend"
-        )),
-    }
+    v.as_xla().map_err(|_| {
+        anyhow::anyhow!("pjrt backend received a host value from another backend")
+    })
 }
 
 #[cfg(not(feature = "xla"))]

@@ -113,6 +113,21 @@ impl HostLiteral {
         HostLiteral::vec1(data).reshape(&dims)
     }
 
+    /// f32 literal taking ownership of the buffer (no copy) — the
+    /// reference executor moves large outputs (θ′) straight into the
+    /// literal instead of round-tripping them through a fresh `Vec`.
+    pub fn f32_owned(data: Vec<f32>, shape: &[usize]) -> Result<HostLiteral, Error> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            return Err(Error::new(format!(
+                "shape {shape:?} does not hold {} elements",
+                data.len()
+            )));
+        }
+        Ok(HostLiteral { dims, data: Data::F32(data) })
+    }
+
     /// i32 literal with an explicit shape.
     pub fn i32(data: &[i32], shape: &[usize]) -> Result<HostLiteral, Error> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
@@ -203,6 +218,14 @@ mod tests {
         assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
         assert!(l.reshape(&[3]).is_err());
         assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn owned_literal_moves_without_copy_and_checks_shape() {
+        let l = HostLiteral::f32_owned(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(HostLiteral::f32_owned(vec![1.0; 3], &[2, 2]).is_err());
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod refcpu;
 pub mod stub;
 
 pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
-pub use backend::{Backend, BackendKind, BackendSpec, Value};
+pub use backend::{Backend, BackendKind, BackendPerf, BackendSpec, Value};
 pub use client::PjrtBackend;
 pub use exec::TensorF32;
 pub use hostlit::HostLiteral;

@@ -1,0 +1,131 @@
+//! Scratch arena for the reference execution core.
+//!
+//! Every intermediate buffer of a forward/backward/train call —
+//! activations, tapes, cotangents, quantized copies, the flat gradient —
+//! used to be a fresh `Vec` per call.  The arena recycles them: buffers
+//! are bucketed by exact length, `take` pops a recycled buffer (or
+//! allocates once, on first use of that size), `give` returns it.  Since
+//! each segment executes the same take/give sequence every call, the
+//! steady state after one warm-up execute is **zero fresh allocations**
+//! per call — asserted by `tests/perf_regression.rs` through the
+//! [`crate::runtime::BackendPerf`] counter surface.
+//!
+//! Bit-identity note: recycling changes *where* a kernel writes, never
+//! *what* it computes — buffers from [`Arena::take`] carry stale contents
+//! under a fully-overwritten contract, and accumulation targets use
+//! [`Arena::take_zeroed`], which matches the `vec![0.0; n]` the naive
+//! kernels started from.
+
+use std::collections::HashMap;
+
+/// Length-bucketed free list of `f32` scratch buffers + counters.
+#[derive(Default)]
+pub struct Arena {
+    buckets: HashMap<usize, Vec<Vec<f32>>>,
+    fresh: u64,
+    reuses: u64,
+    bytes_reused: u64,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**.
+    /// Callers must fully overwrite it (use [`Arena::take_zeroed`] for
+    /// accumulation targets).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if let Some(v) = self.buckets.get_mut(&len).and_then(|b| b.pop()) {
+            debug_assert_eq!(v.len(), len);
+            self.reuses += 1;
+            self.bytes_reused += 4 * len as u64;
+            v
+        } else {
+            self.fresh += 1;
+            vec![0.0; len]
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take(len);
+        v.iter_mut().for_each(|x| *x = 0.0);
+        v
+    }
+
+    /// Return a buffer to its length bucket for reuse.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.buckets.entry(v.len()).or_default().push(v);
+    }
+
+    /// Fresh allocations performed (arena misses).
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh
+    }
+
+    /// Buffers served from the free list.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// Bytes handed out from recycled buffers.
+    pub fn bytes_reused(&self) -> u64 {
+        self.bytes_reused
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_take_of_a_size_reuses() {
+        let mut a = Arena::new();
+        let v = a.take(64);
+        assert_eq!(v.len(), 64);
+        assert_eq!(a.fresh_allocs(), 1);
+        a.give(v);
+        let w = a.take(64);
+        assert_eq!(w.len(), 64);
+        assert_eq!(a.fresh_allocs(), 1, "recycled buffer not reused");
+        assert_eq!(a.reuses(), 1);
+        assert_eq!(a.bytes_reused(), 256);
+    }
+
+    #[test]
+    fn sizes_bucket_independently() {
+        let mut a = Arena::new();
+        let v = a.take(8);
+        a.give(v);
+        let w = a.take(16); // different size: fresh
+        assert_eq!(a.fresh_allocs(), 2);
+        a.give(w);
+        let _ = a.take(8);
+        let _ = a.take(16);
+        assert_eq!(a.fresh_allocs(), 2);
+        assert_eq!(a.reuses(), 2);
+    }
+
+    #[test]
+    fn take_zeroed_clears_stale_contents() {
+        let mut a = Arena::new();
+        let mut v = a.take(4);
+        v.fill(7.0);
+        a.give(v);
+        let z = a.take_zeroed(4);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn empty_buffers_are_not_pooled() {
+        let mut a = Arena::new();
+        a.give(Vec::new());
+        let v = a.take(0);
+        assert_eq!(a.fresh_allocs(), 1);
+        assert!(v.is_empty());
+    }
+}

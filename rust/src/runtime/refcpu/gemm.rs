@@ -1,0 +1,575 @@
+//! Packed, register-blocked GEMM kernels for the reference execution
+//! core — **bit-identical** to the naive triple loops in
+//! [`super::naive`], which stay in-tree as the oracle the property suite
+//! (`tests/refcpu_gemm.rs`) checks against.
+//!
+//! # The bit-identity contract
+//!
+//! Every kernel keeps the reduction over the serial (k) dimension
+//! **in-order per output element** and tiles only over the m/n output
+//! dimensions, so each output element sees exactly the same sequence of
+//! f32 additions as the naive loop:
+//!
+//! * `gemm_fwd` — `out = act(x·w + b)`: the accumulator starts at the
+//!   bias (the naive `copy_from_slice(b)`), k-terms are added in
+//!   ascending t order, and the naive loop's `xv == 0.0` skip is kept
+//!   (skipping vs adding a signed-zero product can flip a result's zero
+//!   sign, so the skip is part of the contract).  The bias load and the
+//!   ReLU/GELU epilogue run inside the tile loop — no separate
+//!   activation pass over the output.
+//! * `gemm_dx` — `dx = dz·wᵀ`: j-serial per element, **no** zero skip
+//!   (the naive dx loop has none).
+//! * `gemm_dw_acc` — `dw += xᵀ·dz`: i-serial per element with the naive
+//!   `x == 0.0` skip; the per-element sum is formed from 0.0 in
+//!   registers and added to the destination once, matching the naive
+//!   "fill a fresh buffer, then accumulate" order.
+//!
+//! Panels are padded to the register width [`NR`]; padded lanes compute
+//! garbage that is never stored.
+//!
+//! # Packing and the generation-keyed cache
+//!
+//! Weights are packed once per *θ buffer* into row-panels (`pack_w`) and
+//! transposed row-panels (`pack_wt`, for the dx kernel), cached in
+//! [`PackCache`] keyed by `(Value::buf_id, tensor offset, direction,
+//! quantized)`.  Buf ids change exactly when [`crate::model::Params`]'
+//! generation does (the session re-marshals θ then), so packs invalidate
+//! with the θ-literal cache and steady-state serving never re-packs.
+//! For QAT, fake-quantization is fused into the pack (`quant = true`):
+//! the panel stores quantized weights directly and `train_q` never
+//! materializes a full `wq` copy.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::HashMap;
+
+/// Register-block width (f32 lanes per panel column tile).
+pub const NR: usize = 8;
+
+#[inline]
+fn panels_of(width: usize) -> usize {
+    width.div_ceil(NR)
+}
+
+// ---------------------------------------------------------------------------
+// elementwise primitives (epilogues + fake-quant, shared with the oracle)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Gelu,
+}
+
+/// tanh-approximation GELU (`jax.nn.gelu` with `approximate=True`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    let u = C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d gelu / dx at pre-activation `x`.
+#[inline]
+pub fn gelu_prime(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Round half to even (numpy/jnp.round semantics, vs Rust's half-away).
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            x.ceil()
+        }
+    } else {
+        r
+    }
+}
+
+const QMAX: f32 = 127.0; // 2^(8-1) - 1
+
+/// Per-tensor symmetric 8-bit scale (`amax / 127`, floored like jnp).
+pub fn quant_scale(v: &[f32]) -> f32 {
+    let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    amax.max(1e-8) / QMAX
+}
+
+/// One fake-quantized element at a precomputed scale.
+#[inline]
+pub fn quant_elem(x: f32, scale: f32) -> f32 {
+    round_ties_even(x / scale).clamp(-QMAX, QMAX) * scale
+}
+
+/// Fake-quantize `src` into a reusable buffer (the activation side of
+/// QAT; the weight side is fused into the pack step).
+pub fn quantize_into(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let scale = quant_scale(src);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = quant_elem(s, scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panel packing
+// ---------------------------------------------------------------------------
+
+/// A weight matrix repacked into contiguous `NR`-wide column panels.
+///
+/// `depth` is the serial (reduction) dimension, `width` the output
+/// dimension the panels tile.  Panel `p` stores, row-major over the
+/// depth index, the `NR` output columns `[p*NR, p*NR + NR)`, zero-padded
+/// past `width`.
+#[derive(Clone, Debug)]
+pub struct Panels {
+    data: Vec<f32>,
+    depth: usize,
+    width: usize,
+}
+
+impl Panels {
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Packed bytes (capacity accounting for the cache).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Fill a (possibly recycled) buffer with panels; `buf` is cleared and
+/// zero-resized so padded lanes are always zero.
+fn pack_into(
+    mut buf: Vec<f32>,
+    depth: usize,
+    width: usize,
+    elem: impl Fn(usize, usize) -> f32, // (depth index, width index) -> value
+) -> Panels {
+    let np = panels_of(width);
+    buf.clear();
+    buf.resize(np * depth * NR, 0.0);
+    for p in 0..np {
+        let base = p * NR;
+        let valid = NR.min(width - base);
+        let pd = &mut buf[p * depth * NR..(p + 1) * depth * NR];
+        for t in 0..depth {
+            for r in 0..valid {
+                pd[t * NR + r] = elem(t, base + r);
+            }
+        }
+    }
+    Panels { data: buf, depth, width }
+}
+
+/// Pack into `buf` (recycled pack storage or `Vec::new()`): forward
+/// panels, or transposed (dx-kernel) panels, optionally with per-tensor
+/// fake-quantization fused in.  Quantized transposed packs use the
+/// *same* scale and values as the forward pack — the straight-through
+/// backward contracts against exactly the quantized weights the forward
+/// used.
+fn pack_with(buf: Vec<f32>, w: &[f32], k: usize, n: usize, transposed: bool, quant: bool) -> Panels {
+    debug_assert_eq!(w.len(), k * n);
+    match (transposed, quant) {
+        (false, false) => pack_into(buf, k, n, |t, j| w[t * n + j]),
+        (false, true) => {
+            let s = quant_scale(w);
+            pack_into(buf, k, n, move |t, j| quant_elem(w[t * n + j], s))
+        }
+        (true, false) => pack_into(buf, n, k, |j, t| w[t * n + j]),
+        (true, true) => {
+            let s = quant_scale(w);
+            pack_into(buf, n, k, move |j, t| quant_elem(w[t * n + j], s))
+        }
+    }
+}
+
+/// Pack `w` (k×n row-major) for the forward kernel; `quant` fuses
+/// per-tensor fake-quantization into the pack.
+pub fn pack_w(w: &[f32], k: usize, n: usize, quant: bool) -> Panels {
+    pack_with(Vec::new(), w, k, n, false, quant)
+}
+
+/// Pack `wᵀ` (the dx kernel's operand) from `w` (k×n row-major): depth
+/// becomes n, width becomes k.
+pub fn pack_wt(w: &[f32], k: usize, n: usize, quant: bool) -> Panels {
+    pack_with(Vec::new(), w, k, n, true, quant)
+}
+
+// ---------------------------------------------------------------------------
+// kernels
+// ---------------------------------------------------------------------------
+
+/// `out[m×n] = act(x[m×k] · w + b)` over forward panels, bias and
+/// activation fused into the tile loop.  Bit-identical to
+/// `naive::matmul_bias` + a separate activation pass.
+pub fn gemm_fwd(x: &[f32], pan: &Panels, b: &[f32], m: usize, act: Act, out: &mut [f32]) {
+    let (k, n) = (pan.depth, pan.width);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let np = panels_of(n);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..np {
+            let base = p * NR;
+            let valid = NR.min(n - base);
+            let pd = &pan.data[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0.0f32; NR];
+            acc[..valid].copy_from_slice(&b[base..base + valid]);
+            for (t, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let w8 = &pd[t * NR..t * NR + NR];
+                for r in 0..NR {
+                    acc[r] += xv * w8[r];
+                }
+            }
+            let dst = &mut orow[base..base + valid];
+            match act {
+                Act::None => dst.copy_from_slice(&acc[..valid]),
+                Act::Relu => {
+                    for (d, a) in dst.iter_mut().zip(&acc) {
+                        *d = a.max(0.0);
+                    }
+                }
+                Act::Gelu => {
+                    for (d, a) in dst.iter_mut().zip(&acc) {
+                        *d = gelu(*a);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `dx[m×k] = dz[m×n] · wᵀ` over transposed panels (`pack_wt`); j-serial
+/// per element, no zero skip — bit-identical to the naive dx loop.
+pub fn gemm_dx(dz: &[f32], pan: &Panels, m: usize, dx: &mut [f32]) {
+    let (n, k) = (pan.depth, pan.width);
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let np = panels_of(k);
+    for i in 0..m {
+        let dzr = &dz[i * n..(i + 1) * n];
+        let orow = &mut dx[i * k..(i + 1) * k];
+        for p in 0..np {
+            let base = p * NR;
+            let valid = NR.min(k - base);
+            let pd = &pan.data[p * n * NR..(p + 1) * n * NR];
+            let mut acc = [0.0f32; NR];
+            for (j, &g) in dzr.iter().enumerate() {
+                let w8 = &pd[j * NR..j * NR + NR];
+                for r in 0..NR {
+                    acc[r] += g * w8[r];
+                }
+            }
+            orow[base..base + valid].copy_from_slice(&acc[..valid]);
+        }
+    }
+}
+
+/// `dw[k×n] += xᵀ[k×m] · dz[m×n]`: i-serial per element with the naive
+/// `x == 0.0` skip.  The per-element sum is formed in registers from 0.0
+/// and added to `dw` once — the naive "fresh dw buffer, then
+/// `accumulate`" float order.
+pub fn gemm_dw_acc(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    let np = panels_of(n);
+    for t in 0..k {
+        for p in 0..np {
+            let base = p * NR;
+            let valid = NR.min(n - base);
+            if valid == NR {
+                let mut acc = [0.0f32; NR];
+                for i in 0..m {
+                    let xv = x[i * k + t];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let dzr = &dz[i * n + base..i * n + base + NR];
+                    for r in 0..NR {
+                        acc[r] += xv * dzr[r];
+                    }
+                }
+                let dst = &mut dw[t * n + base..t * n + base + NR];
+                for r in 0..NR {
+                    dst[r] += acc[r];
+                }
+            } else {
+                let mut acc = [0.0f32; NR];
+                for i in 0..m {
+                    let xv = x[i * k + t];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let dzr = &dz[i * n + base..i * n + base + valid];
+                    for (a, &g) in acc.iter_mut().zip(dzr) {
+                        *a += xv * g;
+                    }
+                }
+                let dst = &mut dw[t * n + base..t * n + base + valid];
+                for (d, a) in dst.iter_mut().zip(&acc) {
+                    *d += a;
+                }
+            }
+        }
+    }
+}
+
+/// `db[n] += Σ_rows dz`: i-serial per element, register-accumulated.
+pub fn db_acc(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(db.len(), n);
+    let np = panels_of(n);
+    for p in 0..np {
+        let base = p * NR;
+        let valid = NR.min(n - base);
+        let mut acc = [0.0f32; NR];
+        for i in 0..m {
+            let dzr = &dz[i * n + base..i * n + base + valid];
+            for (a, &g) in acc.iter_mut().zip(dzr) {
+                *a += g;
+            }
+        }
+        let dst = &mut db[base..base + valid];
+        for (d, a) in dst.iter_mut().zip(&acc) {
+            *d += a;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generation-keyed pack cache
+// ---------------------------------------------------------------------------
+
+/// Distinct θ/φ source buffers tracked before the cache resets.  A run
+/// touches a handful (live θ, serving θ, SimSiam φ, policy snapshots);
+/// the cap only guards against pathological buf-id churn.
+const PACK_SRC_CAP: usize = 12;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PackKey {
+    /// `Value::buf_id` of the buffer holding the weights (θ or φ).
+    src: u64,
+    /// Tensor offset of `w` within that buffer.
+    off: usize,
+    /// Transposed (dx-kernel) pack?
+    transposed: bool,
+    /// Fake-quant fused into the pack (QAT)?
+    quant: bool,
+}
+
+/// Released pack buffers kept for reuse (per-generation re-packs in a
+/// train loop recycle the previous generation's storage, so steady-state
+/// training allocates no pack memory either).
+const SPARE_CAP: usize = 64;
+
+/// Packed-panel cache keyed by `(buf id, offset, direction, quant)`.
+/// See the module docs for the invalidation contract.
+#[derive(Default)]
+pub struct PackCache {
+    map: HashMap<PackKey, Panels>,
+    /// entries per src buf id, maintained incrementally (the src cap
+    /// check must not rescan the map on every per-generation pack miss).
+    src_counts: HashMap<u64, usize>,
+    spare: Vec<Vec<f32>>,
+    built: u64,
+    hits: u64,
+}
+
+impl PackCache {
+    pub fn new() -> PackCache {
+        PackCache::default()
+    }
+
+    fn get(
+        &mut self,
+        key: PackKey,
+        w: &[f32],
+        k: usize,
+        n: usize,
+    ) -> &Panels {
+        if self.map.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            if !self.src_counts.contains_key(&key.src)
+                && self.src_counts.len() >= PACK_SRC_CAP
+            {
+                let spare = &mut self.spare;
+                for (_, p) in self.map.drain() {
+                    if spare.len() < SPARE_CAP {
+                        spare.push(p.data);
+                    }
+                }
+                self.src_counts.clear();
+            }
+            let buf = self.spare.pop().unwrap_or_default();
+            let pan = pack_with(buf, w, k, n, key.transposed, key.quant);
+            self.built += 1;
+            self.map.insert(key, pan);
+            *self.src_counts.entry(key.src).or_insert(0) += 1;
+        }
+        self.map.get(&key).unwrap()
+    }
+
+    /// Forward panels for `w = buf[off .. off + k*n]`.
+    pub fn fwd(&mut self, src: u64, off: usize, w: &[f32], k: usize, n: usize, quant: bool) -> &Panels {
+        self.get(PackKey { src, off, transposed: false, quant }, w, k, n)
+    }
+
+    /// Transposed panels (dx kernel) for the same weights.
+    pub fn bwd(&mut self, src: u64, off: usize, w: &[f32], k: usize, n: usize, quant: bool) -> &Panels {
+        self.get(PackKey { src, off, transposed: true, quant }, w, k, n)
+    }
+
+    /// Drop every pack derived from buffer `src` (the session's
+    /// generation-keyed invalidation hook calls this via
+    /// [`crate::runtime::Backend::release`]), keeping the storage for the
+    /// next generation's packs.
+    pub fn release(&mut self, src: u64) {
+        if self.src_counts.remove(&src).is_none() {
+            return; // nothing packed from this buffer
+        }
+        let keys: Vec<PackKey> = self.map.keys().filter(|k| k.src == src).copied().collect();
+        for key in keys {
+            if let Some(p) = self.map.remove(&key) {
+                if self.spare.len() < SPARE_CAP {
+                    self.spare.push(p.data);
+                }
+            }
+        }
+    }
+
+    /// Layer packs built since creation.
+    pub fn built(&self) -> u64 {
+        self.built
+    }
+
+    /// GEMM calls that found their panels already packed.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn pack_roundtrips_oddly_shaped_weights() {
+        let (k, n) = (5, 11); // n not a multiple of NR
+        let mut rng = Pcg32::new(3, 1);
+        let w = randv(&mut rng, k * n);
+        let pan = pack_w(&w, k, n, false);
+        assert_eq!((pan.depth(), pan.width()), (k, n));
+        let zeros = vec![0.0f32; n];
+        // identity probe: x = e_t row picks out w row t exactly
+        for t in 0..k {
+            let mut x = vec![0.0f32; k];
+            x[t] = 1.0;
+            let mut out = vec![0.0f32; n];
+            gemm_fwd(&x, &pan, &zeros, 1, Act::None, &mut out);
+            assert_eq!(out, w[t * n..(t + 1) * n].to_vec(), "row {t}");
+        }
+    }
+
+    #[test]
+    fn transposed_pack_matches_forward_pack() {
+        let (k, n) = (7, 9);
+        let mut rng = Pcg32::new(4, 2);
+        let w = randv(&mut rng, k * n);
+        let pt = pack_wt(&w, k, n, false);
+        assert_eq!((pt.depth(), pt.width()), (n, k));
+        // dz = e_j row: dx must be w column j (= wᵀ row j)
+        for j in 0..n {
+            let mut dz = vec![0.0f32; n];
+            dz[j] = 1.0;
+            let mut dx = vec![0.0f32; k];
+            gemm_dx(&dz, &pt, 1, &mut dx);
+            let want: Vec<f32> = (0..k).map(|t| w[t * n + j]).collect();
+            assert_eq!(dx, want, "col {j}");
+        }
+    }
+
+    #[test]
+    fn quant_pack_equals_elementwise_fake_quant() {
+        let (k, n) = (6, 10);
+        let mut rng = Pcg32::new(5, 3);
+        let w = randv(&mut rng, k * n);
+        let s = quant_scale(&w);
+        let pan = pack_w(&w, k, n, true);
+        let zeros = vec![0.0f32; n];
+        for t in 0..k {
+            let mut x = vec![0.0f32; k];
+            x[t] = 1.0;
+            let mut out = vec![0.0f32; n];
+            gemm_fwd(&x, &pan, &zeros, 1, Act::None, &mut out);
+            for j in 0..n {
+                assert_eq!(
+                    out[j].to_bits(),
+                    quant_elem(w[t * n + j], s).to_bits(),
+                    "({t},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_cache_hits_same_source_and_releases() {
+        let mut c = PackCache::new();
+        let w = vec![1.0f32; 4 * 4];
+        c.fwd(10, 0, &w, 4, 4, false);
+        assert_eq!((c.built(), c.hits()), (1, 0));
+        c.fwd(10, 0, &w, 4, 4, false);
+        assert_eq!((c.built(), c.hits()), (1, 1));
+        // different direction and quant are distinct packs
+        c.bwd(10, 0, &w, 4, 4, false);
+        c.fwd(10, 0, &w, 4, 4, true);
+        assert_eq!(c.built(), 3);
+        // a new source (new θ generation) re-packs
+        c.fwd(11, 0, &w, 4, 4, false);
+        assert_eq!(c.built(), 4);
+        c.release(10);
+        c.fwd(10, 0, &w, 4, 4, false);
+        assert_eq!(c.built(), 5, "released packs must rebuild");
+    }
+
+    #[test]
+    fn quantize_into_matches_scale_and_is_idempotent() {
+        let v = vec![-1.3f32, 0.0, 0.4, 2.7];
+        let mut q = vec![0.0f32; 4];
+        quantize_into(&v, &mut q);
+        let mut qq = vec![0.0f32; 4];
+        quantize_into(&q, &mut qq);
+        for (a, b) in q.iter().zip(&qq) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        for (&orig, &quant) in v.iter().zip(&q) {
+            assert!((orig - quant).abs() <= 2.7 / 127.0 + 1e-6);
+        }
+    }
+}

@@ -1,15 +1,19 @@
-//! Pure-Rust forward/backward kernels for the deployed model family.
+//! Pure-Rust forward/backward kernels for the deployed model family,
+//! running on the packed GEMM core in [`super::gemm`].
 //!
-//! Implements, in plain f32 loops, the exact semantics the python side
-//! lowers to HLO (see `python/compile/model.py` + `kernels/matmul.py`):
-//! `act(x @ w + b)` dense layers with ReLU/tanh-GELU epilogues, the three
-//! block kinds (`relu_res`, `bottleneck`, `preln_gelu`), LayerNorm, the
-//! mean-CE loss with log-softmax, per-tensor symmetric fake-quantization
-//! with a straight-through gradient, global-norm clipping at 5.0, the
-//! SimSiam cosine loss, and the linear-CKA Gram statistic.
+//! Implements, in f32 with bit-stable operation order, the exact
+//! semantics the python side lowers to HLO (see `python/compile/model.py`
+//! + `kernels/matmul.py`): `act(x @ w + b)` dense layers with
+//! ReLU/tanh-GELU epilogues, the three block kinds (`relu_res`,
+//! `bottleneck`, `preln_gelu`), LayerNorm, the mean-CE loss with
+//! log-softmax, per-tensor symmetric fake-quantization with a
+//! straight-through gradient, global-norm clipping at 5.0, the SimSiam
+//! cosine loss, and the linear-CKA Gram statistic.
 //!
 //! Backward passes mirror the JAX `custom_vjp` rules one-to-one:
-//! * dense ReLU uses the saved *output* mask (`dout * (out > 0)`);
+//! * dense ReLU uses the *output* mask (`dout * (out > 0)`) — the output
+//!   is not copied into the tape; the VJP reads it from where it already
+//!   lives (the next layer's input, or the residual operand);
 //! * dense GELU pushes the cotangent through the tanh-approximation
 //!   derivative at the saved pre-activation;
 //! * the `relu_res` blocks' *outer* residual ReLU is `jnp.maximum`, whose
@@ -17,10 +21,16 @@
 //!   so zero-initialized residual paths differentiate identically;
 //! * fake-quant is a straight-through estimator: forward uses quantized
 //!   values, backward treats the quantizer as identity, and downstream
-//!   VJPs contract against the saved *quantized* tensors.
+//!   VJPs contract against the saved *quantized* tensors.  The weight
+//!   side of the quantizer is fused into the pack step (one quantized
+//!   panel per θ generation), so `train_q` never materializes `wq`.
 //!
 //! Everything is sequential and allocation-order deterministic, so runs
-//! are bit-identical across sweep worker counts.
+//! are bit-identical across sweep worker counts.  All intermediates come
+//! from the per-backend scratch [`Arena`]; weight panels come from the
+//! generation-keyed [`PackCache`].  The pre-PR-4 naive loops survive in
+//! [`super::naive`] as the oracle `tests/refcpu_gemm.rs` checks
+//! bit-equality against.
 
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
@@ -29,54 +39,24 @@ use anyhow::Result;
 
 use crate::runtime::artifact::ModelManifest;
 
+use super::arena::Arena;
+use super::gemm::{self, PackCache};
+
+pub use super::gemm::{gelu, gelu_prime, Act};
+
 pub const MAX_GRAD_NORM: f32 = 5.0;
 const LN_EPS: f32 = 1e-5;
+
+/// Execution context threaded through every kernel call: the backend's
+/// scratch arena and its generation-keyed weight-pack cache.
+pub struct Ctx<'c> {
+    pub pool: &'c mut Arena,
+    pub packs: &'c mut PackCache,
+}
 
 // ---------------------------------------------------------------------------
 // elementwise pieces
 // ---------------------------------------------------------------------------
-
-/// tanh-approximation GELU (`jax.nn.gelu` with `approximate=True`).
-pub fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_56; // sqrt(2/pi)
-    let u = C * (x + 0.044715 * x * x * x);
-    0.5 * x * (1.0 + u.tanh())
-}
-
-/// d gelu / dx at pre-activation `x`.
-pub fn gelu_prime(x: f32) -> f32 {
-    const C: f32 = 0.797_884_56;
-    let u = C * (x + 0.044715 * x * x * x);
-    let t = u.tanh();
-    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
-}
-
-/// Round half to even (numpy/jnp.round semantics, vs Rust's half-away).
-fn round_ties_even(x: f32) -> f32 {
-    let r = x.round();
-    if (x - x.trunc()).abs() == 0.5 {
-        let f = x.floor();
-        if (f as i64) % 2 == 0 {
-            f
-        } else {
-            x.ceil()
-        }
-    } else {
-        r
-    }
-}
-
-/// Per-tensor symmetric 8-bit fake-quantization (forward values only; the
-/// caller implements the straight-through gradient by saving the output).
-pub fn fake_quant(v: &[f32]) -> Vec<f32> {
-    let qmax = 127.0f32; // 2^(8-1) - 1
-    let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-    let scale = amax.max(1e-8) / qmax;
-    v.iter()
-        .map(|&x| round_ties_even(x / scale).clamp(-qmax, qmax) * scale)
-        .collect()
-}
 
 /// In-place clip-by-global-norm (matches `_clip_global` in model.py).
 pub fn clip_global(g: &mut [f32], max_norm: f32) {
@@ -93,69 +73,85 @@ pub fn clip_global(g: &mut [f32], max_norm: f32) {
 // dense layer (act(x @ w + b)) with tape
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Act {
-    None,
-    Relu,
-    Gelu,
+/// An input buffer as threaded through the tape: the caller's batch is
+/// borrowed (zero copy), every interior activation is *moved* in from
+/// the arena (zero copy), and QAT's quantized copies are arena buffers.
+pub enum XBuf<'a> {
+    Borrowed(&'a [f32]),
+    Pooled(Vec<f32>),
 }
 
-/// Saved residuals of one dense layer for its VJP: the input and weights
-/// *as used* (quantized under QAT — that is what makes the backward a
-/// straight-through estimator), plus the activation residual (`out` for
-/// ReLU's mask, pre-activation `z` for GELU).
-pub struct DenseTape {
-    x: Vec<f32>,
-    w: Vec<f32>,
-    post: Vec<f32>,
+impl<'a> XBuf<'a> {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            XBuf::Borrowed(s) => s,
+            XBuf::Pooled(v) => v,
+        }
+    }
+
+    fn recycle(self, pool: &mut Arena) {
+        if let XBuf::Pooled(v) = self {
+            pool.give(v);
+        }
+    }
+}
+
+/// Pack-cache addressing for one dense layer's weights: the buf id of
+/// the flat parameter buffer (θ or φ) and the tensor offset within it.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseKey {
+    pub src: u64,
+    pub w_off: usize,
+}
+
+/// Saved residuals of one dense layer for its VJP.
+///
+/// Unlike the seed tape this owns **no weight copy** (the VJP contracts
+/// against the cached transposed panels) and **no activation-output
+/// copy** (the ReLU mask is read from wherever the output already
+/// lives).  `x_orig` is the input as given — moved, not copied; `xq` is
+/// the arena-allocated quantized copy under QAT (what the STE backward
+/// contracts against); `z` holds GELU pre-activations.
+pub struct DenseTape<'a> {
+    x_orig: XBuf<'a>,
+    xq: Vec<f32>,
+    z: Vec<f32>,
     m: usize,
     k: usize,
     n: usize,
     act: Act,
+    quant: bool,
+    key: DenseKey,
 }
 
-pub struct DenseGrads {
-    pub dx: Vec<f32>,
-    pub dw: Vec<f32>,
-    pub db: Vec<f32>,
-}
-
-fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(b.len(), n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let row = &x[i * k..(i + 1) * k];
-        let dst = &mut out[i * n..(i + 1) * n];
-        dst.copy_from_slice(b);
-        for (t, &xv) in row.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[t * n..(t + 1) * n];
-            for (o, &wv) in dst.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
+impl<'a> DenseTape<'a> {
+    /// The layer input *as used* by the matmul (quantized under QAT).
+    fn x_used(&self) -> &[f32] {
+        if self.quant {
+            &self.xq
+        } else {
+            self.x_orig.as_slice()
         }
     }
-    out
-}
 
-/// Inference-only dense: no tape, no quantization.
-pub fn dense_infer(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, act: Act) -> Vec<f32> {
-    let mut out = matmul_bias(x, w, b, m, k, n);
-    match act {
-        Act::None => {}
-        Act::Relu => out.iter_mut().for_each(|v| *v = v.max(0.0)),
-        Act::Gelu => out.iter_mut().for_each(|v| *v = gelu(*v)),
+    /// The layer input as given (pre-quantization) — residual adds and
+    /// downstream ReLU masks read this.
+    pub fn x_orig(&self) -> &[f32] {
+        self.x_orig.as_slice()
     }
-    out
+
+    fn recycle(self, pool: &mut Arena) {
+        self.x_orig.recycle(pool);
+        pool.give(self.xq);
+        pool.give(self.z);
+    }
 }
 
-/// Training dense: returns the activation output and the VJP tape.
-pub fn dense_train(
-    x: &[f32],
+/// Training dense: returns the activation output (arena buffer) and the
+/// VJP tape.  Bias and ReLU run fused inside the GEMM tile loop; GELU
+/// training keeps the pre-activation like the seed (the tape needs it).
+pub fn dense_train<'a>(
+    x: XBuf<'a>,
     w: &[f32],
     b: &[f32],
     m: usize,
@@ -163,81 +159,91 @@ pub fn dense_train(
     n: usize,
     act: Act,
     quant: bool,
-) -> (Vec<f32>, DenseTape) {
-    let (xq, wq) = if quant {
-        (fake_quant(x), fake_quant(w))
+    key: DenseKey,
+    ctx: &mut Ctx,
+) -> (Vec<f32>, DenseTape<'a>) {
+    let xq = if quant {
+        let mut q = ctx.pool.take(m * k);
+        gemm::quantize_into(x.as_slice(), &mut q);
+        q
     } else {
-        (x.to_vec(), w.to_vec())
+        Vec::new()
     };
-    let z = matmul_bias(&xq, &wq, b, m, k, n);
-    let (out, post) = match act {
-        Act::None => (z, Vec::new()),
-        Act::Relu => {
-            let out: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
-            (out.clone(), out)
+    let xs = if quant { &xq[..] } else { x.as_slice() };
+    let mut out = ctx.pool.take(m * n);
+    let pan = ctx.packs.fwd(key.src, key.w_off, w, k, n, quant);
+    let z = match act {
+        Act::None | Act::Relu => {
+            gemm::gemm_fwd(xs, pan, b, m, act, &mut out);
+            Vec::new()
         }
         Act::Gelu => {
-            let out: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
-            (out, z)
+            let mut zb = ctx.pool.take(m * n);
+            gemm::gemm_fwd(xs, pan, b, m, Act::None, &mut zb);
+            for (o, &zv) in out.iter_mut().zip(&zb) {
+                *o = gelu(zv);
+            }
+            zb
         }
     };
-    (out, DenseTape { x: xq, w: wq, post, m, k, n, act })
+    (out, DenseTape { x_orig: x, xq, z, m, k, n, act, quant, key })
 }
 
-/// Dense VJP: `dz` from the activation rule, then `dx = dz @ wᵀ`,
-/// `dw = xᵀ @ dz`, `db = Σ_rows dz`.
-pub fn dense_bwd(t: &DenseTape, dout: &[f32]) -> DenseGrads {
+/// Dense VJP: activation rule into `dz`, then `dx = dz @ wᵀ` (packed
+/// transpose), `dw += xᵀ @ dz` and `db += Σ_rows dz` accumulated
+/// straight into `dparams` at `w_off`/`b_off` (register-summed from 0.0
+/// per element, added once — the seed's fresh-buffer-then-accumulate
+/// float order).  `relu_out` must be the layer's output when
+/// `act == Relu`.  With `need_dx == false` the dx GEMM (and its
+/// transposed pack) is skipped entirely — the seed computed and
+/// discarded it for the embed layer.
+pub fn dense_bwd(
+    t: &DenseTape,
+    dout: &[f32],
+    relu_out: Option<&[f32]>,
+    w: &[f32],
+    dparams: &mut [f32],
+    w_off: usize,
+    b_off: usize,
+    need_dx: bool,
+    ctx: &mut Ctx,
+) -> Vec<f32> {
     let (m, k, n) = (t.m, t.k, t.n);
     debug_assert_eq!(dout.len(), m * n);
-    let dz: Vec<f32> = match t.act {
-        Act::None => dout.to_vec(),
-        Act::Relu => dout
-            .iter()
-            .zip(&t.post)
-            .map(|(&g, &o)| if o > 0.0 { g } else { 0.0 })
-            .collect(),
-        Act::Gelu => dout
-            .iter()
-            .zip(&t.post)
-            .map(|(&g, &z)| g * gelu_prime(z))
-            .collect(),
+    let mut dz_buf: Option<Vec<f32>> = match t.act {
+        Act::None => None,
+        Act::Relu => {
+            let out = relu_out.expect("relu VJP needs the layer output");
+            debug_assert_eq!(out.len(), m * n);
+            let mut dz = ctx.pool.take(m * n);
+            for ((d, &g), &o) in dz.iter_mut().zip(dout).zip(out) {
+                *d = if o > 0.0 { g } else { 0.0 };
+            }
+            Some(dz)
+        }
+        Act::Gelu => {
+            let mut dz = ctx.pool.take(m * n);
+            for ((d, &g), &z) in dz.iter_mut().zip(dout).zip(&t.z) {
+                *d = g * gelu_prime(z);
+            }
+            Some(dz)
+        }
     };
-    // dx[i,t] = Σ_j dz[i,j] * w[t,j]
-    let mut dx = vec![0.0f32; m * k];
-    for i in 0..m {
-        let dzr = &dz[i * n..(i + 1) * n];
-        let dst = &mut dx[i * k..(i + 1) * k];
-        for tt in 0..k {
-            let wrow = &t.w[tt * n..(tt + 1) * n];
-            let mut acc = 0.0f32;
-            for (g, wv) in dzr.iter().zip(wrow) {
-                acc += g * wv;
-            }
-            dst[tt] = acc;
-        }
+    let dzs: &[f32] = dz_buf.as_deref().unwrap_or(dout);
+    let dx = if need_dx {
+        let pan = ctx.packs.bwd(t.key.src, t.key.w_off, w, k, n, t.quant);
+        let mut dx = ctx.pool.take(m * k);
+        gemm::gemm_dx(dzs, pan, m, &mut dx);
+        dx
+    } else {
+        Vec::new()
+    };
+    gemm::gemm_dw_acc(t.x_used(), dzs, m, k, n, &mut dparams[w_off..w_off + k * n]);
+    gemm::db_acc(dzs, m, n, &mut dparams[b_off..b_off + n]);
+    if let Some(v) = dz_buf.take() {
+        ctx.pool.give(v);
     }
-    // dw[t,j] = Σ_i x[i,t] * dz[i,j]
-    let mut dw = vec![0.0f32; k * n];
-    for i in 0..m {
-        let xr = &t.x[i * k..(i + 1) * k];
-        let dzr = &dz[i * n..(i + 1) * n];
-        for (tt, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dst = &mut dw[tt * n..(tt + 1) * n];
-            for (o, &g) in dst.iter_mut().zip(dzr) {
-                *o += xv * g;
-            }
-        }
-    }
-    let mut db = vec![0.0f32; n];
-    for i in 0..m {
-        for (o, &g) in db.iter_mut().zip(&dz[i * n..(i + 1) * n]) {
-            *o += g;
-        }
-    }
-    DenseGrads { dx, dw, db }
+    dx
 }
 
 // ---------------------------------------------------------------------------
@@ -251,12 +257,23 @@ pub struct LnTape {
     h: usize,
 }
 
-/// `out = normed(x) * s + b` per row; var is the biased mean of squares
-/// (jnp.var), eps = 1e-5.
-pub fn layernorm_fwd(x: &[f32], s: &[f32], b: &[f32], m: usize, h: usize) -> (Vec<f32>, LnTape) {
-    let mut out = vec![0.0f32; m * h];
-    let mut normed = vec![0.0f32; m * h];
-    let mut inv_std = vec![0.0f32; m];
+impl LnTape {
+    fn recycle(self, pool: &mut Arena) {
+        pool.give(self.normed);
+        pool.give(self.inv_std);
+    }
+}
+
+fn layernorm_core(
+    x: &[f32],
+    s: &[f32],
+    b: &[f32],
+    m: usize,
+    h: usize,
+    out: &mut [f32],
+    normed: &mut [f32],
+    inv_std: &mut [f32],
+) {
     for i in 0..m {
         let row = &x[i * h..(i + 1) * h];
         let mu = row.iter().sum::<f32>() / h as f32;
@@ -269,15 +286,56 @@ pub fn layernorm_fwd(x: &[f32], s: &[f32], b: &[f32], m: usize, h: usize) -> (Ve
             out[i * h + j] = nv * s[j] + b[j];
         }
     }
+}
+
+/// `out = normed(x) * s + b` per row; var is the biased mean of squares
+/// (jnp.var), eps = 1e-5.  Allocating wrapper (tests); the model path
+/// uses [`layernorm_fwd_pooled`].
+pub fn layernorm_fwd(x: &[f32], s: &[f32], b: &[f32], m: usize, h: usize) -> (Vec<f32>, LnTape) {
+    let mut out = vec![0.0f32; m * h];
+    let mut normed = vec![0.0f32; m * h];
+    let mut inv_std = vec![0.0f32; m];
+    layernorm_core(x, s, b, m, h, &mut out, &mut normed, &mut inv_std);
     (out, LnTape { normed, inv_std, m, h })
 }
 
-/// LayerNorm VJP: returns (dx, ds, db).
-pub fn layernorm_bwd(t: &LnTape, s: &[f32], dout: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+fn layernorm_fwd_pooled(
+    x: &[f32],
+    s: &[f32],
+    b: &[f32],
+    m: usize,
+    h: usize,
+    pool: &mut Arena,
+) -> (Vec<f32>, LnTape) {
+    let mut out = pool.take(m * h);
+    let mut normed = pool.take(m * h);
+    let mut inv_std = pool.take(m);
+    layernorm_core(x, s, b, m, h, &mut out, &mut normed, &mut inv_std);
+    (out, LnTape { normed, inv_std, m, h })
+}
+
+/// Inference-only LayerNorm into a caller buffer: no tape.
+fn layernorm_infer(x: &[f32], s: &[f32], b: &[f32], m: usize, h: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let row = &x[i * h..(i + 1) * h];
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..h {
+            out[i * h + j] = (row[j] - mu) * is * s[j] + b[j];
+        }
+    }
+}
+
+fn layernorm_bwd_core(
+    t: &LnTape,
+    s: &[f32],
+    dout: &[f32],
+    dx: &mut [f32],
+    ds: &mut [f32],
+    db: &mut [f32],
+) {
     let (m, h) = (t.m, t.h);
-    let mut dx = vec![0.0f32; m * h];
-    let mut ds = vec![0.0f32; h];
-    let mut db = vec![0.0f32; h];
     for i in 0..m {
         let nrm = &t.normed[i * h..(i + 1) * h];
         let dor = &dout[i * h..(i + 1) * h];
@@ -298,6 +356,15 @@ pub fn layernorm_bwd(t: &LnTape, s: &[f32], dout: &[f32]) -> (Vec<f32>, Vec<f32>
             dx[i * h + j] = is * (dn - mean_dn - nrm[j] * mean_dn_n);
         }
     }
+}
+
+/// LayerNorm VJP: returns (dx, ds, db).  Allocating wrapper (tests).
+pub fn layernorm_bwd(t: &LnTape, s: &[f32], dout: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (m, h) = (t.m, t.h);
+    let mut dx = vec![0.0f32; m * h];
+    let mut ds = vec![0.0f32; h];
+    let mut db = vec![0.0f32; h];
+    layernorm_bwd_core(t, s, dout, &mut dx, &mut ds, &mut db);
     (dx, ds, db)
 }
 
@@ -305,12 +372,10 @@ pub fn layernorm_bwd(t: &LnTape, s: &[f32], dout: &[f32]) -> (Vec<f32>, Vec<f32>
 // losses
 // ---------------------------------------------------------------------------
 
-/// Mean cross-entropy over log-softmax rows; returns (loss, dlogits).
-pub fn ce_loss_and_grad(logits: &[f32], y: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+fn ce_core(logits: &[f32], y: &[i32], b: usize, c: usize, dl: &mut [f32]) -> f32 {
     debug_assert_eq!(logits.len(), b * c);
     debug_assert_eq!(y.len(), b);
     let mut loss = 0.0f32;
-    let mut dl = vec![0.0f32; b * c];
     let inv_b = 1.0 / b as f32;
     for i in 0..b {
         let row = &logits[i * c..(i + 1) * c];
@@ -325,15 +390,18 @@ pub fn ce_loss_and_grad(logits: &[f32], y: &[i32], b: usize, c: usize) -> (f32, 
             drow[j] = (p - if j == yi { 1.0 } else { 0.0 }) * inv_b;
         }
     }
-    (loss * inv_b, dl)
+    loss * inv_b
 }
 
-/// Batch-mean row cosine `mean_i cos(a_i, t_i)` with the target rows
-/// treated as constants (SimSiam's stop-gradient); returns (cos, da).
-/// Row norms are floored at 1e-8 like the python side.
-pub fn cosine_mean_sg(a: &[f32], target: &[f32], b: usize, h: usize) -> (f32, Vec<f32>) {
+/// Mean cross-entropy over log-softmax rows; returns (loss, dlogits).
+pub fn ce_loss_and_grad(logits: &[f32], y: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+    let mut dl = vec![0.0f32; b * c];
+    let loss = ce_core(logits, y, b, c, &mut dl);
+    (loss, dl)
+}
+
+fn cosine_core(a: &[f32], target: &[f32], b: usize, h: usize, da: &mut [f32]) -> f32 {
     let mut total = 0.0f32;
-    let mut da = vec![0.0f32; b * h];
     let inv_b = 1.0 / b as f32;
     for i in 0..b {
         let ar = &a[i * h..(i + 1) * h];
@@ -360,7 +428,16 @@ pub fn cosine_mean_sg(a: &[f32], target: &[f32], b: usize, h: usize) -> (f32, Ve
             }
         }
     }
-    (total * inv_b, da)
+    total * inv_b
+}
+
+/// Batch-mean row cosine `mean_i cos(a_i, t_i)` with the target rows
+/// treated as constants (SimSiam's stop-gradient); returns (cos, da).
+/// Row norms are floored at 1e-8 like the python side.
+pub fn cosine_mean_sg(a: &[f32], target: &[f32], b: usize, h: usize) -> (f32, Vec<f32>) {
+    let mut da = vec![0.0f32; b * h];
+    let cos = cosine_core(a, target, b, h, &mut da);
+    (cos, da)
 }
 
 /// Linear CKA between (B, H) feature maps: `||YᵀX||_F² / (||XᵀX||_F ||YᵀY||_F)`.
@@ -444,16 +521,54 @@ pub struct RefModel {
     mask_segments: Vec<(usize, usize, usize)>,
 }
 
-enum BlockTape {
-    ReluRes { d1: DenseTape, d2: DenseTape, h_out: Vec<f32> },
-    Bottleneck { d1: DenseTape, d2: DenseTape },
-    Preln { ln: LnTape, d1: DenseTape, d2: DenseTape },
+enum BlockTape<'a> {
+    ReluRes { d1: DenseTape<'a>, d2: DenseTape<'a> },
+    Bottleneck { d1: DenseTape<'a>, d2: DenseTape<'a> },
+    Preln { x_in: XBuf<'a>, ln: LnTape, d1: DenseTape<'a>, d2: DenseTape<'a> },
 }
 
-struct ModelTape {
-    embed: DenseTape,
-    blocks: Vec<BlockTape>,
-    head: Option<DenseTape>,
+impl<'a> BlockTape<'a> {
+    /// The block's *input* activation (= previous unit's output), which
+    /// doubles as the previous unit's ReLU mask / residual operand.
+    fn first_x(&self) -> &[f32] {
+        match self {
+            BlockTape::ReluRes { d1, .. } | BlockTape::Bottleneck { d1, .. } => d1.x_orig(),
+            BlockTape::Preln { x_in, .. } => x_in.as_slice(),
+        }
+    }
+
+    fn recycle(self, pool: &mut Arena) {
+        match self {
+            BlockTape::ReluRes { d1, d2 } | BlockTape::Bottleneck { d1, d2 } => {
+                d1.recycle(pool);
+                d2.recycle(pool);
+            }
+            BlockTape::Preln { x_in, ln, d1, d2 } => {
+                x_in.recycle(pool);
+                ln.recycle(pool);
+                d1.recycle(pool);
+                d2.recycle(pool);
+            }
+        }
+    }
+}
+
+struct ModelTape<'a> {
+    embed: DenseTape<'a>,
+    blocks: Vec<BlockTape<'a>>,
+    head: Option<DenseTape<'a>>,
+}
+
+impl<'a> ModelTape<'a> {
+    fn recycle(self, pool: &mut Arena) {
+        self.embed.recycle(pool);
+        for b in self.blocks {
+            b.recycle(pool);
+        }
+        if let Some(h) = self.head {
+            h.recycle(pool);
+        }
+    }
 }
 
 impl RefModel {
@@ -516,132 +631,168 @@ impl RefModel {
         })
     }
 
-    fn slice<'a>(&self, theta: &'a [f32], off: usize, len: usize) -> &'a [f32] {
+    fn slice<'t>(&self, theta: &'t [f32], off: usize, len: usize) -> &'t [f32] {
         &theta[off..off + len]
+    }
+
+    fn key(&self, src: u64, w_off: usize) -> DenseKey {
+        DenseKey { src, w_off }
     }
 
     // -- inference-mode forward (no tape, no quant) -------------------------
 
-    fn block_infer(&self, theta: &[f32], o: &BlockOff, hcur: &[f32], b: usize) -> Vec<f32> {
+    /// One block forward; consumes `hcur` (arena) and returns the block
+    /// output (arena).
+    fn block_infer(
+        &self,
+        theta: &[f32],
+        o: &BlockOff,
+        hcur: Vec<f32>,
+        b: usize,
+        src: u64,
+        ctx: &mut Ctx,
+    ) -> Vec<f32> {
         let (h, e) = (self.h, self.e);
         match self.kind {
             Kind::ReluRes | Kind::Bottleneck => {
-                let mid = dense_infer(
-                    hcur,
-                    self.slice(theta, o.w1, h * e),
-                    self.slice(theta, o.b1, e),
-                    b,
-                    h,
-                    e,
-                    Act::Relu,
-                );
-                let out = dense_infer(
-                    &mid,
-                    self.slice(theta, o.w2, e * h),
-                    self.slice(theta, o.b2, h),
-                    b,
-                    e,
-                    h,
-                    Act::None,
-                );
+                let mut mid = ctx.pool.take(b * e);
+                let pan1 = ctx.packs.fwd(src, o.w1, self.slice(theta, o.w1, h * e), h, e, false);
+                gemm::gemm_fwd(&hcur, pan1, self.slice(theta, o.b1, e), b, Act::Relu, &mut mid);
+                let mut out = ctx.pool.take(b * h);
+                let pan2 = ctx.packs.fwd(src, o.w2, self.slice(theta, o.w2, e * h), e, h, false);
+                gemm::gemm_fwd(&mid, pan2, self.slice(theta, o.b2, h), b, Act::None, &mut out);
+                ctx.pool.give(mid);
                 if self.kind == Kind::ReluRes {
-                    hcur.iter().zip(&out).map(|(&a, &v)| (a + v).max(0.0)).collect()
+                    for (ov, &a) in out.iter_mut().zip(&hcur) {
+                        *ov = (a + *ov).max(0.0);
+                    }
                 } else {
-                    hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect()
+                    for (ov, &a) in out.iter_mut().zip(&hcur) {
+                        *ov = a + *ov;
+                    }
                 }
+                ctx.pool.give(hcur);
+                out
             }
             Kind::PrelnGelu => {
-                let (ln, _) = layernorm_fwd(
-                    hcur,
+                let mut ln = ctx.pool.take(b * h);
+                layernorm_infer(
+                    &hcur,
                     self.slice(theta, o.ln_s, h),
                     self.slice(theta, o.ln_b, h),
                     b,
                     h,
+                    &mut ln,
                 );
-                let mid = dense_infer(
-                    &ln,
-                    self.slice(theta, o.w1, h * e),
-                    self.slice(theta, o.b1, e),
-                    b,
-                    h,
-                    e,
-                    Act::Gelu,
-                );
-                let out = dense_infer(
-                    &mid,
-                    self.slice(theta, o.w2, e * h),
-                    self.slice(theta, o.b2, h),
-                    b,
-                    e,
-                    h,
-                    Act::None,
-                );
-                hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect()
+                let mut mid = ctx.pool.take(b * e);
+                let pan1 = ctx.packs.fwd(src, o.w1, self.slice(theta, o.w1, h * e), h, e, false);
+                gemm::gemm_fwd(&ln, pan1, self.slice(theta, o.b1, e), b, Act::Gelu, &mut mid);
+                ctx.pool.give(ln);
+                let mut out = ctx.pool.take(b * h);
+                let pan2 = ctx.packs.fwd(src, o.w2, self.slice(theta, o.w2, e * h), e, h, false);
+                gemm::gemm_fwd(&mid, pan2, self.slice(theta, o.b2, h), b, Act::None, &mut out);
+                ctx.pool.give(mid);
+                for (ov, &a) in out.iter_mut().zip(&hcur) {
+                    *ov = a + *ov;
+                }
+                ctx.pool.give(hcur);
+                out
             }
         }
     }
 
-    /// Forward pass: logits `[b, classes]`.
-    pub fn infer(&self, theta: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+    /// Embed forward into an arena buffer.
+    fn embed_infer(&self, theta: &[f32], x: &[f32], b: usize, src: u64, ctx: &mut Ctx) -> Vec<f32> {
         let (d, h) = (self.d, self.h);
-        let mut hcur = dense_infer(
-            x,
-            self.slice(theta, self.embed_w, d * h),
-            self.slice(theta, self.embed_b, h),
-            b,
-            d,
-            h,
-            Act::Relu,
-        );
+        let mut hcur = ctx.pool.take(b * h);
+        let pan = ctx
+            .packs
+            .fwd(src, self.embed_w, self.slice(theta, self.embed_w, d * h), d, h, false);
+        gemm::gemm_fwd(x, pan, self.slice(theta, self.embed_b, h), b, Act::Relu, &mut hcur);
+        hcur
+    }
+
+    /// Forward pass: logits `[b, classes]` (escaping buffer — moved into
+    /// the output literal by the backend).
+    pub fn infer(&self, theta: &[f32], x: &[f32], b: usize, src: u64, ctx: &mut Ctx) -> Vec<f32> {
+        let h = self.h;
+        let mut hcur = self.embed_infer(theta, x, b, src, ctx);
         for o in &self.block_off {
-            hcur = self.block_infer(theta, o, &hcur, b);
+            hcur = self.block_infer(theta, o, hcur, b, src, ctx);
         }
-        dense_infer(
-            &hcur,
+        let mut logits = vec![0.0f32; b * self.classes];
+        let pan = ctx.packs.fwd(
+            src,
+            self.head_w,
             self.slice(theta, self.head_w, h * self.classes),
-            self.slice(theta, self.head_b, self.classes),
-            b,
             h,
             self.classes,
+            false,
+        );
+        gemm::gemm_fwd(
+            &hcur,
+            pan,
+            self.slice(theta, self.head_b, self.classes),
+            b,
             Act::None,
-        )
+            &mut logits,
+        );
+        ctx.pool.give(hcur);
+        logits
+    }
+
+    /// Pre-pack the forward panels of every dense layer for this θ
+    /// buffer (the serving-side "install packs with the CWR bank" hook):
+    /// after a warm call, steady-state inference on the same buf id
+    /// never packs.
+    pub fn warm_infer(&self, theta: &[f32], src: u64, ctx: &mut Ctx) {
+        let (d, h, e) = (self.d, self.h, self.e);
+        ctx.packs
+            .fwd(src, self.embed_w, self.slice(theta, self.embed_w, d * h), d, h, false);
+        for o in &self.block_off {
+            ctx.packs.fwd(src, o.w1, self.slice(theta, o.w1, h * e), h, e, false);
+            ctx.packs.fwd(src, o.w2, self.slice(theta, o.w2, e * h), e, h, false);
+        }
+        ctx.packs.fwd(
+            src,
+            self.head_w,
+            self.slice(theta, self.head_w, h * self.classes),
+            h,
+            self.classes,
+            false,
+        );
     }
 
     /// Per-unit feature maps `[blocks+1, b, h]` (embed output + each block
-    /// output; the head has no feature map).
-    pub fn features(&self, theta: &[f32], x: &[f32], b: usize) -> Vec<f32> {
-        let (d, h) = (self.d, self.h);
+    /// output; the head has no feature map).  Escaping buffer.
+    pub fn features(&self, theta: &[f32], x: &[f32], b: usize, src: u64, ctx: &mut Ctx) -> Vec<f32> {
+        let h = self.h;
         let mut out = Vec::with_capacity((self.blocks + 1) * b * h);
-        let mut hcur = dense_infer(
-            x,
-            self.slice(theta, self.embed_w, d * h),
-            self.slice(theta, self.embed_b, h),
-            b,
-            d,
-            h,
-            Act::Relu,
-        );
+        let mut hcur = self.embed_infer(theta, x, b, src, ctx);
         out.extend_from_slice(&hcur);
         for o in &self.block_off {
-            hcur = self.block_infer(theta, o, &hcur, b);
+            hcur = self.block_infer(theta, o, hcur, b, src, ctx);
             out.extend_from_slice(&hcur);
         }
+        ctx.pool.give(hcur);
         out
     }
 
     // -- training-mode forward/backward -------------------------------------
 
-    fn forward_train(
+    fn forward_train<'a>(
         &self,
         theta: &[f32],
-        x: &[f32],
+        x: &'a [f32],
         b: usize,
         quant: bool,
         with_head: bool,
-    ) -> (Vec<f32>, ModelTape) {
+        src: u64,
+        ctx: &mut Ctx,
+    ) -> (Vec<f32>, ModelTape<'a>) {
         let (d, h, e) = (self.d, self.h, self.e);
         let (mut hcur, embed) = dense_train(
-            x,
+            XBuf::Borrowed(x),
             self.slice(theta, self.embed_w, d * h),
             self.slice(theta, self.embed_b, h),
             b,
@@ -649,13 +800,15 @@ impl RefModel {
             h,
             Act::Relu,
             quant,
+            self.key(src, self.embed_w),
+            ctx,
         );
         let mut blocks = Vec::with_capacity(self.blocks);
         for o in &self.block_off {
             match self.kind {
                 Kind::ReluRes | Kind::Bottleneck => {
                     let (mid, d1) = dense_train(
-                        &hcur,
+                        XBuf::Pooled(hcur),
                         self.slice(theta, o.w1, h * e),
                         self.slice(theta, o.b1, e),
                         b,
@@ -663,9 +816,11 @@ impl RefModel {
                         e,
                         Act::Relu,
                         quant,
+                        self.key(src, o.w1),
+                        ctx,
                     );
                     let (out, d2) = dense_train(
-                        &mid,
+                        XBuf::Pooled(mid),
                         self.slice(theta, o.w2, e * h),
                         self.slice(theta, o.b2, h),
                         b,
@@ -673,30 +828,38 @@ impl RefModel {
                         h,
                         Act::None,
                         quant,
+                        self.key(src, o.w2),
+                        ctx,
                     );
+                    // residual add reads the block input from the tape
+                    // (moved, not copied): h' = hcur + out (+ outer relu).
+                    let mut hnew = ctx.pool.take(b * h);
+                    let prev = d1.x_orig();
                     if self.kind == Kind::ReluRes {
-                        let h_out: Vec<f32> = hcur
-                            .iter()
-                            .zip(&out)
-                            .map(|(&a, &v)| (a + v).max(0.0))
-                            .collect();
-                        hcur = h_out.clone();
-                        blocks.push(BlockTape::ReluRes { d1, d2, h_out });
+                        for ((nv, &a), &v) in hnew.iter_mut().zip(prev).zip(&out) {
+                            *nv = (a + v).max(0.0);
+                        }
+                        blocks.push(BlockTape::ReluRes { d1, d2 });
                     } else {
-                        hcur = hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect();
+                        for ((nv, &a), &v) in hnew.iter_mut().zip(prev).zip(&out) {
+                            *nv = a + v;
+                        }
                         blocks.push(BlockTape::Bottleneck { d1, d2 });
                     }
+                    ctx.pool.give(out);
+                    hcur = hnew;
                 }
                 Kind::PrelnGelu => {
-                    let (ln_out, ln) = layernorm_fwd(
+                    let (ln_out, ln) = layernorm_fwd_pooled(
                         &hcur,
                         self.slice(theta, o.ln_s, h),
                         self.slice(theta, o.ln_b, h),
                         b,
                         h,
+                        ctx.pool,
                     );
                     let (mid, d1) = dense_train(
-                        &ln_out,
+                        XBuf::Pooled(ln_out),
                         self.slice(theta, o.w1, h * e),
                         self.slice(theta, o.b1, e),
                         b,
@@ -704,9 +867,11 @@ impl RefModel {
                         e,
                         Act::Gelu,
                         quant,
+                        self.key(src, o.w1),
+                        ctx,
                     );
                     let (out, d2) = dense_train(
-                        &mid,
+                        XBuf::Pooled(mid),
                         self.slice(theta, o.w2, e * h),
                         self.slice(theta, o.b2, h),
                         b,
@@ -714,15 +879,23 @@ impl RefModel {
                         h,
                         Act::None,
                         quant,
+                        self.key(src, o.w2),
+                        ctx,
                     );
-                    hcur = hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect();
-                    blocks.push(BlockTape::Preln { ln, d1, d2 });
+                    let mut hnew = ctx.pool.take(b * h);
+                    for ((nv, &a), &v) in hnew.iter_mut().zip(&hcur).zip(&out) {
+                        *nv = a + v;
+                    }
+                    ctx.pool.give(out);
+                    let x_in = XBuf::Pooled(hcur);
+                    hcur = hnew;
+                    blocks.push(BlockTape::Preln { x_in, ln, d1, d2 });
                 }
             }
         }
         if with_head {
             let (logits, head) = dense_train(
-                &hcur,
+                XBuf::Pooled(hcur),
                 self.slice(theta, self.head_w, h * self.classes),
                 self.slice(theta, self.head_b, self.classes),
                 b,
@@ -730,6 +903,8 @@ impl RefModel {
                 self.classes,
                 Act::None,
                 quant,
+                self.key(src, self.head_w),
+                ctx,
             );
             (logits, ModelTape { embed, blocks, head: Some(head) })
         } else {
@@ -739,70 +914,183 @@ impl RefModel {
 
     /// Reverse pass: accumulate ∂loss/∂θ into `dtheta` given the cotangent
     /// of the tape's output (`dout` = dlogits with a head, d_backbone
-    /// features without).
-    fn backward(&self, theta: &[f32], tape: &ModelTape, dout: &[f32], dtheta: &mut [f32]) {
+    /// features without) and `last_out`, the final backbone activation
+    /// (the head's input, or the ssl projector's input) — needed because
+    /// ReLU masks are read from downstream inputs, never copied.
+    fn backward(
+        &self,
+        theta: &[f32],
+        tape: &ModelTape,
+        dout: &[f32],
+        last_out: &[f32],
+        dtheta: &mut [f32],
+        ctx: &mut Ctx,
+    ) {
         let h = self.h;
         let mut dh: Vec<f32>;
         if let Some(head) = &tape.head {
-            let g = dense_bwd(head, dout);
-            accumulate(dtheta, self.head_w, &g.dw);
-            accumulate(dtheta, self.head_b, &g.db);
-            dh = g.dx;
+            dh = dense_bwd(
+                head,
+                dout,
+                None,
+                self.slice(theta, self.head_w, h * self.classes),
+                dtheta,
+                self.head_w,
+                self.head_b,
+                true,
+                ctx,
+            );
         } else {
-            dh = dout.to_vec();
+            dh = ctx.pool.take(dout.len());
+            dh.copy_from_slice(dout);
         }
-        for (o, bt) in self.block_off.iter().zip(&tape.blocks).rev() {
+        let nblocks = tape.blocks.len();
+        for (bi, (o, bt)) in self.block_off.iter().zip(&tape.blocks).enumerate().rev() {
+            // this block's *output* = the next unit's input
+            let block_out: &[f32] = if bi + 1 < nblocks {
+                tape.blocks[bi + 1].first_x()
+            } else {
+                last_out
+            };
             match bt {
-                BlockTape::ReluRes { d1, d2, h_out } => {
+                BlockTape::ReluRes { d1, d2 } => {
                     // outer relu is jnp.maximum(sum, 0): ties route half.
-                    let dsum: Vec<f32> = dh
-                        .iter()
-                        .zip(h_out)
-                        .map(|(&g, &o)| {
-                            if o > 0.0 {
-                                g
-                            } else if o == 0.0 {
-                                0.5 * g
-                            } else {
-                                0.0
-                            }
-                        })
-                        .collect();
-                    let g2 = dense_bwd(d2, &dsum);
-                    accumulate(dtheta, o.w2, &g2.dw);
-                    accumulate(dtheta, o.b2, &g2.db);
-                    let g1 = dense_bwd(d1, &g2.dx);
-                    accumulate(dtheta, o.w1, &g1.dw);
-                    accumulate(dtheta, o.b1, &g1.db);
-                    dh = dsum.iter().zip(&g1.dx).map(|(&a, &b)| a + b).collect();
+                    let mut dsum = ctx.pool.take(dh.len());
+                    for ((s, &g), &ov) in dsum.iter_mut().zip(&dh).zip(block_out) {
+                        *s = if ov > 0.0 {
+                            g
+                        } else if ov == 0.0 {
+                            0.5 * g
+                        } else {
+                            0.0
+                        };
+                    }
+                    ctx.pool.give(std::mem::take(&mut dh));
+                    let g2dx = dense_bwd(
+                        d2,
+                        &dsum,
+                        None,
+                        self.slice(theta, o.w2, self.e * h),
+                        dtheta,
+                        o.w2,
+                        o.b2,
+                        true,
+                        ctx,
+                    );
+                    let g1dx = dense_bwd(
+                        d1,
+                        &g2dx,
+                        Some(d2.x_orig()),
+                        self.slice(theta, o.w1, h * self.e),
+                        dtheta,
+                        o.w1,
+                        o.b1,
+                        true,
+                        ctx,
+                    );
+                    ctx.pool.give(g2dx);
+                    for (s, &g) in dsum.iter_mut().zip(&g1dx) {
+                        *s += g;
+                    }
+                    ctx.pool.give(g1dx);
+                    dh = dsum;
                 }
                 BlockTape::Bottleneck { d1, d2 } => {
-                    let g2 = dense_bwd(d2, &dh);
-                    accumulate(dtheta, o.w2, &g2.dw);
-                    accumulate(dtheta, o.b2, &g2.db);
-                    let g1 = dense_bwd(d1, &g2.dx);
-                    accumulate(dtheta, o.w1, &g1.dw);
-                    accumulate(dtheta, o.b1, &g1.db);
-                    dh = dh.iter().zip(&g1.dx).map(|(&a, &b)| a + b).collect();
+                    let g2dx = dense_bwd(
+                        d2,
+                        &dh,
+                        None,
+                        self.slice(theta, o.w2, self.e * h),
+                        dtheta,
+                        o.w2,
+                        o.b2,
+                        true,
+                        ctx,
+                    );
+                    let g1dx = dense_bwd(
+                        d1,
+                        &g2dx,
+                        Some(d2.x_orig()),
+                        self.slice(theta, o.w1, h * self.e),
+                        dtheta,
+                        o.w1,
+                        o.b1,
+                        true,
+                        ctx,
+                    );
+                    ctx.pool.give(g2dx);
+                    for (s, &g) in dh.iter_mut().zip(&g1dx) {
+                        *s += g;
+                    }
+                    ctx.pool.give(g1dx);
                 }
-                BlockTape::Preln { ln, d1, d2 } => {
-                    let g2 = dense_bwd(d2, &dh);
-                    accumulate(dtheta, o.w2, &g2.dw);
-                    accumulate(dtheta, o.b2, &g2.db);
-                    let g1 = dense_bwd(d1, &g2.dx);
-                    accumulate(dtheta, o.w1, &g1.dw);
-                    accumulate(dtheta, o.b1, &g1.db);
-                    let (dx_ln, ds, db) =
-                        layernorm_bwd(ln, self.slice(theta, o.ln_s, h), &g1.dx);
+                BlockTape::Preln { ln, d1, d2, .. } => {
+                    let g2dx = dense_bwd(
+                        d2,
+                        &dh,
+                        None,
+                        self.slice(theta, o.w2, self.e * h),
+                        dtheta,
+                        o.w2,
+                        o.b2,
+                        true,
+                        ctx,
+                    );
+                    let g1dx = dense_bwd(
+                        d1,
+                        &g2dx,
+                        None,
+                        self.slice(theta, o.w1, h * self.e),
+                        dtheta,
+                        o.w1,
+                        o.b1,
+                        true,
+                        ctx,
+                    );
+                    ctx.pool.give(g2dx);
+                    let mut dx_ln = ctx.pool.take(dh.len());
+                    let mut ds = ctx.pool.take_zeroed(h);
+                    let mut db = ctx.pool.take_zeroed(h);
+                    layernorm_bwd_core(
+                        ln,
+                        self.slice(theta, o.ln_s, h),
+                        &g1dx,
+                        &mut dx_ln,
+                        &mut ds,
+                        &mut db,
+                    );
+                    ctx.pool.give(g1dx);
                     accumulate(dtheta, o.ln_s, &ds);
                     accumulate(dtheta, o.ln_b, &db);
-                    dh = dh.iter().zip(&dx_ln).map(|(&a, &b)| a + b).collect();
+                    ctx.pool.give(ds);
+                    ctx.pool.give(db);
+                    for (s, &g) in dh.iter_mut().zip(&dx_ln) {
+                        *s += g;
+                    }
+                    ctx.pool.give(dx_ln);
                 }
             }
         }
-        let ge = dense_bwd(&tape.embed, &dh);
-        accumulate(dtheta, self.embed_w, &ge.dw);
-        accumulate(dtheta, self.embed_b, &ge.db);
+        // embed: dw/db only — the seed computed dx here and threw it away.
+        let embed_out: &[f32] = tape
+            .blocks
+            .first()
+            .map(BlockTape::first_x)
+            .unwrap_or(last_out);
+        let gdx = dense_bwd(
+            &tape.embed,
+            &dh,
+            Some(embed_out),
+            self.slice(theta, self.embed_w, self.d * h),
+            dtheta,
+            self.embed_w,
+            self.embed_b,
+            false,
+            ctx,
+        );
+        debug_assert!(gdx.is_empty());
+        drop(gdx);
+        ctx.pool.give(dh);
     }
 
     /// Expand the per-unit lr mask over the flat gradient (mask *before*
@@ -822,7 +1110,8 @@ impl RefModel {
     }
 
     /// One SGD step (the `train_k` / `train_q_k` segments); returns
-    /// `(θ', loss)`.
+    /// `(θ', loss)` — θ' is an escaping buffer the backend moves into the
+    /// output literal.
     pub fn train_step(
         &self,
         theta: &[f32],
@@ -832,15 +1121,23 @@ impl RefModel {
         lr_mask: &[f32],
         lr: f32,
         quant: bool,
+        src: u64,
+        ctx: &mut Ctx,
     ) -> (Vec<f32>, f32) {
-        let (logits, tape) = self.forward_train(theta, x, b, quant, true);
-        let (loss, dlogits) = ce_loss_and_grad(&logits, y, b, self.classes);
-        let mut g = vec![0.0f32; self.theta_len];
-        self.backward(theta, &tape, &dlogits, &mut g);
+        let (logits, tape) = self.forward_train(theta, x, b, quant, true, src, ctx);
+        let mut dlogits = ctx.pool.take(b * self.classes);
+        let loss = ce_core(&logits, y, b, self.classes, &mut dlogits);
+        let mut g = ctx.pool.take_zeroed(self.theta_len);
+        let last_out = tape.head.as_ref().unwrap().x_orig();
+        self.backward(theta, &tape, &dlogits, last_out, &mut g, ctx);
         self.apply_mask(&mut g, lr_mask);
         clip_global(&mut g, MAX_GRAD_NORM);
         let theta_new: Vec<f32> =
             theta.iter().zip(&g).map(|(&t, &gv)| t - lr * gv).collect();
+        ctx.pool.give(logits);
+        ctx.pool.give(dlogits);
+        ctx.pool.give(g);
+        tape.recycle(ctx.pool);
         (theta_new, loss)
     }
 
@@ -856,56 +1153,133 @@ impl RefModel {
         b: usize,
         lr_mask: &[f32],
         lr: f32,
+        theta_src: u64,
+        phi_src: u64,
+        ctx: &mut Ctx,
     ) -> (Vec<f32>, Vec<f32>, f32) {
         let h = self.h;
         let (proj_w, proj_b) = (0, h * h);
         let (pred_w, pred_b) = (h * h + h, 2 * h * h + h);
         debug_assert_eq!(phi.len(), 2 * h * h + 2 * h);
 
-        let (bb1, tape1) = self.forward_train(theta, x1, b, false, false);
-        let (bb2, tape2) = self.forward_train(theta, x2, b, false, false);
+        let (bb1, tape1) = self.forward_train(theta, x1, b, false, false, theta_src, ctx);
+        let (bb2, tape2) = self.forward_train(theta, x2, b, false, false, theta_src, ctx);
         let (z1, pj1) = dense_train(
-            &bb1, &phi[proj_w..proj_w + h * h], &phi[proj_b..proj_b + h],
-            b, h, h, Act::None, false,
+            XBuf::Pooled(bb1),
+            &phi[proj_w..proj_w + h * h],
+            &phi[proj_b..proj_b + h],
+            b,
+            h,
+            h,
+            Act::None,
+            false,
+            DenseKey { src: phi_src, w_off: proj_w },
+            ctx,
         );
         let (z2, pj2) = dense_train(
-            &bb2, &phi[proj_w..proj_w + h * h], &phi[proj_b..proj_b + h],
-            b, h, h, Act::None, false,
+            XBuf::Pooled(bb2),
+            &phi[proj_w..proj_w + h * h],
+            &phi[proj_b..proj_b + h],
+            b,
+            h,
+            h,
+            Act::None,
+            false,
+            DenseKey { src: phi_src, w_off: proj_w },
+            ctx,
         );
         let (p1, pd1) = dense_train(
-            &z1, &phi[pred_w..pred_w + h * h], &phi[pred_b..pred_b + h],
-            b, h, h, Act::None, false,
+            XBuf::Pooled(z1),
+            &phi[pred_w..pred_w + h * h],
+            &phi[pred_b..pred_b + h],
+            b,
+            h,
+            h,
+            Act::None,
+            false,
+            DenseKey { src: phi_src, w_off: pred_w },
+            ctx,
         );
         let (p2, pd2) = dense_train(
-            &z2, &phi[pred_w..pred_w + h * h], &phi[pred_b..pred_b + h],
-            b, h, h, Act::None, false,
+            XBuf::Pooled(z2),
+            &phi[pred_w..pred_w + h * h],
+            &phi[pred_b..pred_b + h],
+            b,
+            h,
+            h,
+            Act::None,
+            false,
+            DenseKey { src: phi_src, w_off: pred_w },
+            ctx,
         );
 
         // loss = -(cos(p1, sg(z2)) + cos(p2, sg(z1))) / 2
-        let (c1, dp1_cos) = cosine_mean_sg(&p1, &z2, b, h);
-        let (c2, dp2_cos) = cosine_mean_sg(&p2, &z1, b, h);
+        let mut dp1 = ctx.pool.take(b * h);
+        let mut dp2 = ctx.pool.take(b * h);
+        let c1 = cosine_core(&p1, pd2.x_orig(), b, h, &mut dp1);
+        let c2 = cosine_core(&p2, pd1.x_orig(), b, h, &mut dp2);
         let loss = -(c1 + c2) / 2.0;
-        let dp1: Vec<f32> = dp1_cos.iter().map(|&v| -0.5 * v).collect();
-        let dp2: Vec<f32> = dp2_cos.iter().map(|&v| -0.5 * v).collect();
+        dp1.iter_mut().for_each(|v| *v *= -0.5);
+        dp2.iter_mut().for_each(|v| *v *= -0.5);
+        ctx.pool.give(p1);
+        ctx.pool.give(p2);
 
-        let mut gphi = vec![0.0f32; phi.len()];
-        let mut gtheta = vec![0.0f32; self.theta_len];
+        let mut gphi = ctx.pool.take_zeroed(phi.len());
+        let mut gtheta = ctx.pool.take_zeroed(self.theta_len);
         // branch 1: p1 <- pred(z1) <- proj(bb1) <- backbone(x1)
-        let g_pd1 = dense_bwd(&pd1, &dp1);
-        accumulate(&mut gphi, pred_w, &g_pd1.dw);
-        accumulate(&mut gphi, pred_b, &g_pd1.db);
-        let g_pj1 = dense_bwd(&pj1, &g_pd1.dx);
-        accumulate(&mut gphi, proj_w, &g_pj1.dw);
-        accumulate(&mut gphi, proj_b, &g_pj1.db);
-        self.backward(theta, &tape1, &g_pj1.dx, &mut gtheta);
+        let g_pd1 = dense_bwd(
+            &pd1,
+            &dp1,
+            None,
+            &phi[pred_w..pred_w + h * h],
+            &mut gphi,
+            pred_w,
+            pred_b,
+            true,
+            ctx,
+        );
+        let g_pj1 = dense_bwd(
+            &pj1,
+            &g_pd1,
+            None,
+            &phi[proj_w..proj_w + h * h],
+            &mut gphi,
+            proj_w,
+            proj_b,
+            true,
+            ctx,
+        );
+        ctx.pool.give(g_pd1);
+        self.backward(theta, &tape1, &g_pj1, pj1.x_orig(), &mut gtheta, ctx);
+        ctx.pool.give(g_pj1);
         // branch 2: p2 <- pred(z2) <- proj(bb2) <- backbone(x2)
-        let g_pd2 = dense_bwd(&pd2, &dp2);
-        accumulate(&mut gphi, pred_w, &g_pd2.dw);
-        accumulate(&mut gphi, pred_b, &g_pd2.db);
-        let g_pj2 = dense_bwd(&pj2, &g_pd2.dx);
-        accumulate(&mut gphi, proj_w, &g_pj2.dw);
-        accumulate(&mut gphi, proj_b, &g_pj2.db);
-        self.backward(theta, &tape2, &g_pj2.dx, &mut gtheta);
+        let g_pd2 = dense_bwd(
+            &pd2,
+            &dp2,
+            None,
+            &phi[pred_w..pred_w + h * h],
+            &mut gphi,
+            pred_w,
+            pred_b,
+            true,
+            ctx,
+        );
+        let g_pj2 = dense_bwd(
+            &pj2,
+            &g_pd2,
+            None,
+            &phi[proj_w..proj_w + h * h],
+            &mut gphi,
+            proj_w,
+            proj_b,
+            true,
+            ctx,
+        );
+        ctx.pool.give(g_pd2);
+        self.backward(theta, &tape2, &g_pj2, pj2.x_orig(), &mut gtheta, ctx);
+        ctx.pool.give(g_pj2);
+        ctx.pool.give(dp1);
+        ctx.pool.give(dp2);
 
         self.apply_mask(&mut gtheta, lr_mask);
         clip_global(&mut gtheta, MAX_GRAD_NORM);
@@ -914,6 +1288,14 @@ impl RefModel {
             theta.iter().zip(&gtheta).map(|(&t, &g)| t - lr * g).collect();
         let phi_new: Vec<f32> =
             phi.iter().zip(&gphi).map(|(&p, &g)| p - lr * g).collect();
+        ctx.pool.give(gtheta);
+        ctx.pool.give(gphi);
+        pd1.recycle(ctx.pool);
+        pd2.recycle(ctx.pool);
+        pj1.recycle(ctx.pool);
+        pj2.recycle(ctx.pool);
+        tape1.recycle(ctx.pool);
+        tape2.recycle(ctx.pool);
         (theta_new, phi_new, loss)
     }
 }
@@ -925,7 +1307,8 @@ fn accumulate(dst: &mut [f32], off: usize, src: &[f32]) {
 }
 
 // ---------------------------------------------------------------------------
-// tests — hand-derived VJPs checked against central finite differences
+// tests — hand-derived VJPs checked against central finite differences,
+// plus exact identities the packed tape path must satisfy
 // ---------------------------------------------------------------------------
 
 #[cfg(test)]
@@ -933,18 +1316,74 @@ mod tests {
     use super::*;
     use crate::rng::Pcg32;
 
+    /// Fresh arena + pack cache for one kernel invocation.
+    struct Rig {
+        pool: Arena,
+        packs: PackCache,
+    }
+
+    impl Rig {
+        fn new() -> Rig {
+            Rig { pool: Arena::new(), packs: PackCache::new() }
+        }
+
+        fn ctx(&mut self) -> Ctx<'_> {
+            Ctx { pool: &mut self.pool, packs: &mut self.packs }
+        }
+    }
+
     fn randv(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
         (0..n).map(|_| rng.normal() * scale).collect()
     }
 
-    /// Scalar objective: sum of `weights * dense_out` (a fixed linear
+    /// Dense forward through the packed path (no tape).
+    fn dense_out(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, act: Act) -> Vec<f32> {
+        let pan = gemm::pack_w(w, k, n, false);
+        let mut out = vec![0.0f32; m * n];
+        gemm::gemm_fwd(x, &pan, b, m, act, &mut out);
+        out
+    }
+
+    /// Scalar objective: sum of `cot * dense_out` (a fixed linear
     /// functional so the cotangent is the weight vector).
     fn dense_obj(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize, act: Act, cot: &[f32]) -> f32 {
-        dense_infer(x, w, b, m, k, n, act)
+        dense_out(x, w, b, m, k, n, act)
             .iter()
             .zip(cot)
             .map(|(&o, &c)| o * c)
             .sum()
+    }
+
+    /// Full dense VJP through the tape path; returns (dx, dw, db).
+    fn dense_grads(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        act: Act,
+        cot: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rig = Rig::new();
+        let mut ctx = rig.ctx();
+        let (out, tape) = dense_train(
+            XBuf::Borrowed(x),
+            w,
+            b,
+            m,
+            k,
+            n,
+            act,
+            false,
+            DenseKey { src: 1, w_off: 0 },
+            &mut ctx,
+        );
+        let mut dparams = vec![0.0f32; k * n + n];
+        let dx = dense_bwd(&tape, cot, Some(&out), w, &mut dparams, 0, k * n, true, &mut ctx);
+        let dw = dparams[..k * n].to_vec();
+        let db = dparams[k * n..].to_vec();
+        (dx, dw, db)
     }
 
     #[test]
@@ -957,19 +1396,17 @@ mod tests {
         let w = randv(&mut rng, k * n, 0.5);
         let b = randv(&mut rng, n, 0.2);
         let cot = randv(&mut rng, m * n, 1.0);
-        let (out, tape_r) = dense_train(&x, &w, &b, m, k, n, Act::Relu, false);
-        let (z, tape_n) = dense_train(&x, &w, &b, m, k, n, Act::None, false);
+        let out = dense_out(&x, &w, &b, m, k, n, Act::Relu);
+        let z = dense_out(&x, &w, &b, m, k, n, Act::None);
         assert!(out.iter().zip(&z).all(|(&o, &zv)| o == zv.max(0.0)));
         let masked: Vec<f32> = cot
             .iter()
             .zip(&z)
             .map(|(&c, &zv)| if zv > 0.0 { c } else { 0.0 })
             .collect();
-        let gr = dense_bwd(&tape_r, &cot);
-        let gn = dense_bwd(&tape_n, &masked);
-        assert_eq!(gr.dx, gn.dx);
-        assert_eq!(gr.dw, gn.dw);
-        assert_eq!(gr.db, gn.db);
+        let gr = dense_grads(&x, &w, &b, m, k, n, Act::Relu, &cot);
+        let gn = dense_grads(&x, &w, &b, m, k, n, Act::None, &masked);
+        assert_eq!(gr, gn);
     }
 
     #[test]
@@ -981,8 +1418,7 @@ mod tests {
             let w = randv(&mut rng, k * n, 0.5);
             let b = randv(&mut rng, n, 0.2);
             let cot = randv(&mut rng, m * n, 1.0);
-            let (_, tape) = dense_train(&x, &w, &b, m, k, n, act, false);
-            let g = dense_bwd(&tape, &cot);
+            let (dx, dw, _db) = dense_grads(&x, &w, &b, m, k, n, act, &cot);
             let eps = 1e-3f32;
             for idx in 0..k * n {
                 let mut wp = w.clone();
@@ -993,9 +1429,9 @@ mod tests {
                     - dense_obj(&x, &wm, &b, m, k, n, act, &cot))
                     / (2.0 * eps);
                 assert!(
-                    (fd - g.dw[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    (fd - dw[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
                     "{act:?} dw[{idx}]: fd {fd} vs {g}",
-                    g = g.dw[idx]
+                    g = dw[idx]
                 );
             }
             for idx in 0..m * k {
@@ -1007,9 +1443,9 @@ mod tests {
                     - dense_obj(&xm, &w, &b, m, k, n, act, &cot))
                     / (2.0 * eps);
                 assert!(
-                    (fd - g.dx[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    (fd - dx[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
                     "{act:?} dx[{idx}]: fd {fd} vs {g}",
-                    g = g.dx[idx]
+                    g = dx[idx]
                 );
             }
         }
@@ -1048,6 +1484,19 @@ mod tests {
             assert!((db[j] - want_db).abs() < 1e-5);
         }
         assert_eq!(ds.len(), h);
+    }
+
+    #[test]
+    fn layernorm_infer_matches_tape_forward() {
+        let (m, h) = (3, 8);
+        let mut rng = Pcg32::new(22, 6);
+        let x = randv(&mut rng, m * h, 1.0);
+        let s = randv(&mut rng, h, 0.5);
+        let bb = randv(&mut rng, h, 0.3);
+        let (want, _) = layernorm_fwd(&x, &s, &bb, m, h);
+        let mut got = vec![0.0f32; m * h];
+        layernorm_infer(&x, &s, &bb, m, h, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]
@@ -1130,20 +1579,6 @@ mod tests {
     }
 
     #[test]
-    fn fake_quant_is_idempotent_and_bounded() {
-        let v = vec![-1.3f32, 0.0, 0.4, 2.7];
-        let q = fake_quant(&v);
-        let qq = fake_quant(&q);
-        for (a, b) in q.iter().zip(&qq) {
-            assert!((a - b).abs() < 1e-6);
-        }
-        let amax = 2.7f32;
-        for (&orig, &quant) in v.iter().zip(&q) {
-            assert!((orig - quant).abs() <= amax / 127.0 + 1e-6);
-        }
-    }
-
-    #[test]
     fn cka_is_one_on_identical_features() {
         let mut rng = Pcg32::new(51, 2);
         let x = randv(&mut rng, 16 * 8, 1.0);
@@ -1152,5 +1587,55 @@ mod tests {
         let y = randv(&mut rng, 16 * 8, 1.0);
         let w = cka(&x, &y, 16, 8);
         assert!(w.is_finite() && w >= 0.0 && w < 1.0, "cka(x,y) = {w}");
+    }
+
+    #[test]
+    fn qat_tape_contracts_against_quantized_tensors() {
+        // STE: under quant, dw must equal xqᵀ·dz — i.e. the no-quant VJP
+        // evaluated at the quantized tensors (bias untouched).
+        let (m, k, n) = (4, 6, 7);
+        let mut rng = Pcg32::new(61, 4);
+        let x = randv(&mut rng, m * k, 1.0);
+        let w = randv(&mut rng, k * n, 0.5);
+        let b = randv(&mut rng, n, 0.2);
+        let cot = randv(&mut rng, m * n, 1.0);
+        let xq = super::super::naive::fake_quant(&x);
+        let wq = super::super::naive::fake_quant(&w);
+
+        let mut rig = Rig::new();
+        let mut ctx = rig.ctx();
+        let (out_q, tape_q) = dense_train(
+            XBuf::Borrowed(&x),
+            &w,
+            &b,
+            m,
+            k,
+            n,
+            Act::None,
+            true,
+            DenseKey { src: 1, w_off: 0 },
+            &mut ctx,
+        );
+        let mut dp_q = vec![0.0f32; k * n + n];
+        let dx_q = dense_bwd(&tape_q, &cot, None, &w, &mut dp_q, 0, k * n, true, &mut ctx);
+
+        let (out_r, tape_r) = dense_train(
+            XBuf::Borrowed(&xq),
+            &wq,
+            &b,
+            m,
+            k,
+            n,
+            Act::None,
+            false,
+            DenseKey { src: 2, w_off: 0 },
+            &mut ctx,
+        );
+        let mut dp_r = vec![0.0f32; k * n + n];
+        let dx_r = dense_bwd(&tape_r, &cot, None, &wq, &mut dp_r, 0, k * n, true, &mut ctx);
+
+        assert_eq!(out_q, out_r, "QAT forward != forward at quantized tensors");
+        assert_eq!(dx_q, dx_r);
+        assert_eq!(dp_q, dp_r);
     }
 }

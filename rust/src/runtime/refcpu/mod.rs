@@ -3,7 +3,41 @@
 //! CKA Gram statistic) on the host, with no XLA toolchain, for the
 //! linear/CWR-head model family described by the [`Manifest`].
 //!
-//! Two artifact sources:
+//! # Execution core
+//!
+//! Since PR 3 every CI test, bench series, sweep worker, and serving run
+//! executes through this backend, so its kernels are the hot path of the
+//! whole repo.  The core is built from three pieces:
+//!
+//! * **Packed GEMM family** ([`gemm`]) — register-blocked kernels for
+//!   `out = act(x·w + b)`, `dx = dz·wᵀ`, and `dw += xᵀ·dz` with the bias
+//!   and ReLU/GELU epilogues fused into the tile loop.  The k-reduction
+//!   stays serial and in-order per output element (tiling is over m/n
+//!   only), so results are **bit-identical** to the seed's naive triple
+//!   loops — which survive in [`naive`] as the oracle that
+//!   `tests/refcpu_gemm.rs` checks equality against.
+//! * **Weight-pack cache** ([`gemm::PackCache`]) — weights are packed
+//!   into padded row panels (and transposed panels for the backward dx
+//!   kernel) once per θ *buffer*, keyed by [`Value::buf_id`].  Buf ids
+//!   change exactly when a [`crate::model::Params`] generation does, so
+//!   packs invalidate in lockstep with the session's θ-literal cache:
+//!   one pack per train-step generation bump, zero packs in steady-state
+//!   serving (the serving engine [`Backend::warm`]s the pack when it
+//!   installs a CWR-bank θ).  [`Backend::release`] drops packs when the
+//!   session evicts the matching θ value.  Under QAT the fake-quantizer
+//!   is fused into the pack, so `train_q` never materializes `wq`.
+//! * **Scratch arena** ([`arena::Arena`]) — every intermediate buffer
+//!   (activations, tapes, cotangents, the flat gradient) is recycled
+//!   through a length-bucketed pool; after one warm-up execute the
+//!   steady state is zero fresh allocations per call.  Escaping outputs
+//!   (θ′, logits) move into their output literal without a copy
+//!   (`HostLiteral::f32_owned`).
+//!
+//! Counters for all three (packs built/hit, scratch allocs/reuses/bytes)
+//! surface through [`Backend::perf`] into `Report`.
+//!
+//! # Artifact sources
+//!
 //! * **directory** — when `<dir>/manifest.json` exists, the backend loads
 //!   aot.py's manifest and θ0/φ0 binaries, so a refcpu run and a PJRT run
 //!   start from the *same* parameters and must agree on predictions to
@@ -14,21 +48,28 @@
 //!   argument TinyOL makes for dependency-free on-device kernels).
 //!
 //! Execution is sequential and deterministic: a simulation produces
-//! bit-identical reports for any `--jobs` worker count.
+//! bit-identical reports for any `--jobs` worker count, and none of the
+//! caches above change a single output bit (asserted by the fingerprint
+//! suites in `tests/`).
 
+pub mod arena;
 pub mod builtin;
+pub mod gemm;
 pub mod kernels;
+pub mod naive;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use super::artifact::Manifest;
-use super::backend::{Backend, Value};
+use super::backend::{Backend, BackendPerf, Value};
 use super::hostlit::HostLiteral;
-use self::kernels::RefModel;
+use self::arena::Arena;
+use self::gemm::PackCache;
+use self::kernels::{Ctx, RefModel};
 
 /// Where θ0/φ0 come from.
 enum Source {
@@ -62,6 +103,10 @@ pub struct RefCpuBackend {
     models: HashMap<String, RefModel>,
     ops: HashMap<String, OpSpec>,
     exec_count: Cell<u64>,
+    /// Scratch arena shared by every kernel call on this backend.
+    scratch: RefCell<Arena>,
+    /// Generation-keyed packed-weight cache (see module docs).
+    packs: RefCell<PackCache>,
 }
 
 impl RefCpuBackend {
@@ -123,6 +168,8 @@ impl RefCpuBackend {
             models,
             ops,
             exec_count: Cell::new(0),
+            scratch: RefCell::new(Arena::new()),
+            packs: RefCell::new(PackCache::new()),
         })
     }
 
@@ -156,6 +203,11 @@ impl RefCpuBackend {
             .map_err(|e| anyhow::anyhow!("input {idx}: {e:?}"))
     }
 
+    /// Buf id of input `idx` — the weight-pack cache key for θ/φ inputs.
+    fn src_of(inputs: &[&Value], idx: usize) -> u64 {
+        inputs.get(idx).map(|v| v.buf_id()).unwrap_or(0)
+    }
+
     /// Rows of a `[b, width]` input (validating the row width).
     fn rows(shape: &[usize], data_len: usize, width: usize, what: &str) -> Result<usize> {
         anyhow::ensure!(
@@ -167,8 +219,15 @@ impl RefCpuBackend {
 }
 
 fn out_f32(data: &[f32], shape: &[usize]) -> Result<Value> {
-    Ok(Value::Host(
+    Ok(Value::host(
         HostLiteral::f32(data, shape).map_err(|e| anyhow::anyhow!("{e:?}"))?,
+    ))
+}
+
+/// Move an escaping kernel output into its literal without a copy.
+fn out_f32_owned(data: Vec<f32>, shape: &[usize]) -> Result<Value> {
+    Ok(Value::host(
+        HostLiteral::f32_owned(data, shape).map_err(|e| anyhow::anyhow!("{e:?}"))?,
     ))
 }
 
@@ -190,7 +249,7 @@ impl Backend for RefCpuBackend {
     }
 
     fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
-        Ok(Value::Host(
+        Ok(Value::host(
             HostLiteral::i32(data, shape).map_err(|e| anyhow::anyhow!("{e:?}"))?,
         ))
     }
@@ -201,6 +260,9 @@ impl Backend for RefCpuBackend {
             .get(name)
             .with_context(|| format!("refcpu: unknown segment {name:?}"))?;
         self.exec_count.set(self.exec_count.get() + 1);
+        let mut pool = self.scratch.borrow_mut();
+        let mut packs = self.packs.borrow_mut();
+        let mut ctx = Ctx { pool: &mut pool, packs: &mut packs };
         match &spec.op {
             Op::Infer => {
                 let model = self.model(&spec.model)?;
@@ -208,8 +270,8 @@ impl Backend for RefCpuBackend {
                 anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
                 let (x, xs) = Self::f32_in(inputs, 1)?;
                 let b = Self::rows(&xs, x.len(), model.d, "x")?;
-                let logits = model.infer(theta, x, b);
-                Ok(vec![out_f32(&logits, &[b, model.classes])?])
+                let logits = model.infer(theta, x, b, Self::src_of(inputs, 0), &mut ctx);
+                Ok(vec![out_f32_owned(logits, &[b, model.classes])?])
             }
             Op::Features => {
                 let model = self.model(&spec.model)?;
@@ -217,8 +279,8 @@ impl Backend for RefCpuBackend {
                 anyhow::ensure!(theta.len() == model.theta_len, "refcpu: bad θ len");
                 let (x, xs) = Self::f32_in(inputs, 1)?;
                 let b = Self::rows(&xs, x.len(), model.d, "x")?;
-                let feats = model.features(theta, x, b);
-                Ok(vec![out_f32(&feats, &[model.blocks + 1, b, model.h])?])
+                let feats = model.features(theta, x, b, Self::src_of(inputs, 0), &mut ctx);
+                Ok(vec![out_f32_owned(feats, &[model.blocks + 1, b, model.h])?])
             }
             Op::Train { quant } => {
                 let model = self.model(&spec.model)?;
@@ -236,10 +298,19 @@ impl Backend for RefCpuBackend {
                 anyhow::ensure!(mask.len() == model.blocks + 2, "refcpu: bad mask len");
                 let (lr, _) = Self::f32_in(inputs, 4)?;
                 anyhow::ensure!(!lr.is_empty(), "refcpu: empty lr input");
-                let (theta_new, loss) =
-                    model.train_step(theta, x, y, b, mask, lr[0], *quant);
+                let (theta_new, loss) = model.train_step(
+                    theta,
+                    x,
+                    y,
+                    b,
+                    mask,
+                    lr[0],
+                    *quant,
+                    Self::src_of(inputs, 0),
+                    &mut ctx,
+                );
                 Ok(vec![
-                    out_f32(&theta_new, &[model.theta_len])?,
+                    out_f32_owned(theta_new, &[model.theta_len])?,
                     out_f32(&[loss], &[])?,
                 ])
             }
@@ -262,11 +333,28 @@ impl Backend for RefCpuBackend {
                     "refcpu: bad φ len {}",
                     phi.len()
                 );
-                let (theta_new, phi_new, loss) =
-                    model.ssl_step(theta, phi, x1, x2, b, mask, lr[0]);
+                let phi_src = Self::src_of(inputs, 1);
+                let (theta_new, phi_new, loss) = model.ssl_step(
+                    theta,
+                    phi,
+                    x1,
+                    x2,
+                    b,
+                    mask,
+                    lr[0],
+                    Self::src_of(inputs, 0),
+                    phi_src,
+                    &mut ctx,
+                );
+                // φ is marshalled fresh per ssl call (the session does not
+                // cache it), so its packs are single-use: release them now
+                // — their storage recycles into the next call's packs and
+                // the src cap never churns on ssl loops.
+                ctx.packs.release(phi_src);
+                let phi_len = phi_new.len();
                 Ok(vec![
-                    out_f32(&theta_new, &[model.theta_len])?,
-                    out_f32(&phi_new, &[phi_new.len()])?,
+                    out_f32_owned(theta_new, &[model.theta_len])?,
+                    out_f32_owned(phi_new, &[phi_len])?,
                     out_f32(&[loss], &[])?,
                 ])
             }
@@ -306,6 +394,45 @@ impl Backend for RefCpuBackend {
                 .with_context(|| format!("refcpu: no φ0 for model {model:?}")),
         }
     }
+
+    fn perf(&self) -> BackendPerf {
+        let pool = self.scratch.borrow();
+        let packs = self.packs.borrow();
+        BackendPerf {
+            gemm_packs: packs.built(),
+            gemm_pack_hits: packs.hits(),
+            scratch_allocs: pool.fresh_allocs(),
+            scratch_reuses: pool.reuses(),
+            scratch_bytes_reused: pool.bytes_reused(),
+        }
+    }
+
+    fn warm(&self, segment: &str, theta: &Value) -> Result<()> {
+        let Some(spec) = self.ops.get(segment) else {
+            anyhow::bail!("refcpu: cannot warm unknown segment {segment:?}");
+        };
+        // only the forward-panel segments have per-θ state worth
+        // pre-building; warming a train segment is a no-op (its packs are
+        // per-generation anyway).
+        if !matches!(spec.op, Op::Infer | Op::Features) {
+            return Ok(());
+        }
+        let model = self.model(&spec.model)?;
+        let lit = theta.as_host()?;
+        let data = lit
+            .f32_slice()
+            .map_err(|e| anyhow::anyhow!("warm {segment}: {e:?}"))?;
+        anyhow::ensure!(data.len() == model.theta_len, "refcpu: warm bad θ len");
+        let mut pool = self.scratch.borrow_mut();
+        let mut packs = self.packs.borrow_mut();
+        let mut ctx = Ctx { pool: &mut pool, packs: &mut packs };
+        model.warm_infer(data, theta.buf_id(), &mut ctx);
+        Ok(())
+    }
+
+    fn release(&self, buf_id: u64) {
+        self.packs.borrow_mut().release(buf_id);
+    }
 }
 
 #[cfg(test)]
@@ -340,5 +467,51 @@ mod tests {
         let theta = be.theta0("res50").unwrap();
         let v = be.marshal_f32(&theta, &[theta.len()]).unwrap();
         assert_eq!(v.read_f32().unwrap(), theta);
+    }
+
+    #[test]
+    fn same_theta_value_executes_without_repacking() {
+        let be = RefCpuBackend::builtin().unwrap();
+        let mm = be.manifest().model("mbv2").unwrap().clone();
+        let theta = be.theta0("mbv2").unwrap();
+        let tv = be.marshal_f32(&theta, &[mm.theta_len]).unwrap();
+        let x = vec![0.1f32; 4 * mm.d];
+        let xv = be.marshal_f32(&x, &[4, mm.d]).unwrap();
+        be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        let after_first = be.perf();
+        assert!(after_first.gemm_packs > 0, "first execute must pack");
+        let a = be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        let b = be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        let after = be.perf();
+        assert_eq!(
+            after.gemm_packs, after_first.gemm_packs,
+            "same θ buffer re-packed"
+        );
+        assert!(after.gemm_pack_hits > after_first.gemm_pack_hits);
+        assert!(after.scratch_reuses > 0, "scratch never recycled");
+        assert_eq!(a[0].read_f32().unwrap(), b[0].read_f32().unwrap());
+    }
+
+    #[test]
+    fn warm_prepacks_and_release_drops() {
+        let be = RefCpuBackend::builtin().unwrap();
+        let mm = be.manifest().model("mbv2").unwrap().clone();
+        let theta = be.theta0("mbv2").unwrap();
+        let tv = be.marshal_f32(&theta, &[mm.theta_len]).unwrap();
+        be.warm(&mm.artifacts.infer, &tv).unwrap();
+        let warmed = be.perf().gemm_packs;
+        assert!(warmed > 0);
+        // the execute after a warm finds every panel packed
+        let x = vec![0.1f32; 4 * mm.d];
+        let xv = be.marshal_f32(&x, &[4, mm.d]).unwrap();
+        be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        assert_eq!(be.perf().gemm_packs, warmed, "execute packed after warm");
+        // release invalidates: the next execute packs again
+        be.release(tv.buf_id());
+        be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        assert!(be.perf().gemm_packs > warmed);
+        // warming a train segment is a no-op, unknown segments error
+        assert!(be.warm(&mm.artifacts.train[0], &tv).is_ok());
+        assert!(be.warm("nope_infer", &tv).is_err());
     }
 }

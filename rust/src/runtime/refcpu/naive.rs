@@ -1,0 +1,159 @@
+//! The pre-PR-4 triple-loop dense kernels, kept verbatim as the **oracle**
+//! the packed kernels in [`super::gemm`] are checked against
+//! (`tests/refcpu_gemm.rs` asserts bit-equality over odd/degenerate
+//! shapes, and `benches/hotpath.rs` reports the naive-vs-packed gap).
+//!
+//! Production code must not call into this module — the execution core
+//! runs on the packed kernels; this is a test/bench reference only.
+
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
+use super::gemm::{gelu, gelu_prime, quant_elem, quant_scale, Act};
+
+/// `out = x·w + b` — the seed implementation: per row, bias copy then
+/// in-order k accumulation with the `xv == 0.0` skip.
+pub fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x[i * k..(i + 1) * k];
+        let dst = &mut out[i * n..(i + 1) * n];
+        dst.copy_from_slice(b);
+        for (t, &xv) in row.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[t * n..(t + 1) * n];
+            for (o, &wv) in dst.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Per-tensor symmetric 8-bit fake-quantization (the seed `fake_quant`).
+pub fn fake_quant(v: &[f32]) -> Vec<f32> {
+    let scale = quant_scale(v);
+    v.iter().map(|&x| quant_elem(x, scale)).collect()
+}
+
+/// Forward dense `act(x·w + b)`, optionally through fake-quantized
+/// x and w (the seed `dense_train` forward with its separate activation
+/// pass).
+pub fn dense_fwd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    quant: bool,
+) -> Vec<f32> {
+    let (xq, wq) = if quant {
+        (fake_quant(x), fake_quant(w))
+    } else {
+        (x.to_vec(), w.to_vec())
+    };
+    let mut out = matmul_bias(&xq, &wq, b, m, k, n);
+    match act {
+        Act::None => {}
+        Act::Relu => out.iter_mut().for_each(|v| *v = v.max(0.0)),
+        Act::Gelu => out.iter_mut().for_each(|v| *v = gelu(*v)),
+    }
+    out
+}
+
+/// Full dense VJP at `(x, w, b)` with cotangent `dout`: the seed
+/// `dense_train` + `dense_bwd` composition (activation rule, then
+/// `dx = dz·wᵀ`, `dw = xᵀ·dz`, `db = Σ_rows dz`, contracting against the
+/// quantized tensors under QAT).
+pub fn dense_vjp(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    quant: bool,
+    dout: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dout.len(), m * n);
+    let (xq, wq) = if quant {
+        (fake_quant(x), fake_quant(w))
+    } else {
+        (x.to_vec(), w.to_vec())
+    };
+    let z = matmul_bias(&xq, &wq, b, m, k, n);
+    let dz: Vec<f32> = match act {
+        Act::None => dout.to_vec(),
+        Act::Relu => dout
+            .iter()
+            .zip(&z)
+            .map(|(&g, &zv)| if zv.max(0.0) > 0.0 { g } else { 0.0 })
+            .collect(),
+        Act::Gelu => dout
+            .iter()
+            .zip(&z)
+            .map(|(&g, &zv)| g * gelu_prime(zv))
+            .collect(),
+    };
+    let dx = dx_naive(&dz, &wq, m, k, n);
+    let dw = dw_naive(&xq, &dz, m, k, n);
+    let db = db_naive(&dz, m, n);
+    (dx, dw, db)
+}
+
+/// `dx[i,t] = Σ_j dz[i,j] * w[t,j]` — the seed dx loop, standalone (the
+/// like-for-like naive counterpart of `gemm::gemm_dx` for the benches).
+pub fn dx_naive(dz: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * k];
+    for i in 0..m {
+        let dzr = &dz[i * n..(i + 1) * n];
+        let dst = &mut dx[i * k..(i + 1) * k];
+        for tt in 0..k {
+            let wrow = &w[tt * n..(tt + 1) * n];
+            let mut acc = 0.0f32;
+            for (g, wv) in dzr.iter().zip(wrow) {
+                acc += g * wv;
+            }
+            dst[tt] = acc;
+        }
+    }
+    dx
+}
+
+/// `dw[t,j] = Σ_i x[i,t] * dz[i,j]` — the seed dw loop, standalone.
+pub fn dw_naive(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; k * n];
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        let dzr = &dz[i * n..(i + 1) * n];
+        for (tt, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let dst = &mut dw[tt * n..(tt + 1) * n];
+            for (o, &g) in dst.iter_mut().zip(dzr) {
+                *o += xv * g;
+            }
+        }
+    }
+    dw
+}
+
+/// `db[j] = Σ_i dz[i,j]` — the seed db loop, standalone.
+pub fn db_naive(dz: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; n];
+    for i in 0..m {
+        for (o, &g) in db.iter_mut().zip(&dz[i * n..(i + 1) * n]) {
+            *o += g;
+        }
+    }
+    db
+}

@@ -292,7 +292,7 @@ impl ServeEngine {
         }
         let scenario = batch[0].scenario;
         debug_assert!(batch.iter().all(|r| r.scenario == scenario));
-        self.ensure_serving(scenario, sess, params, cwr, scenarios);
+        self.ensure_serving(scenario, sess, params, cwr, scenarios)?;
         let packed = self.batcher.pack_into(&batch, &mut self.scratch);
         let serving = self.serving.params.as_ref().unwrap();
         // ONE artifact execution serves every coalesced request's
@@ -348,6 +348,11 @@ impl ServeEngine {
     /// training rows for classes of the current scenario.  The
     /// bank-installed θ is cached: flushes between parameter/bank changes
     /// reuse it with zero copies.
+    ///
+    /// Every rebuild ends with [`ModelSession::warm_infer`], which
+    /// marshals the serving θ *and* pre-builds the backend's packed
+    /// forward panels for it — packs install together with the CWR bank,
+    /// so steady-state request serving never marshals and never packs.
     fn ensure_serving(
         &mut self,
         scenario: usize,
@@ -355,12 +360,12 @@ impl ServeEngine {
         params: &Params,
         cwr: &Cwr,
         scenarios: &[Scenario],
-    ) {
+    ) -> Result<()> {
         let cache_ok = !self.disable_serving_cache
             && self.serving.is_valid(params, cwr, scenario);
         if cache_ok {
             self.serving.hits += 1;
-            return;
+            return Ok(());
         }
         self.serving.rebuilds += 1;
         if self.serving.params.is_none() {
@@ -376,5 +381,6 @@ impl ServeEngine {
         self.serving.src_gen = params.generation();
         self.serving.cwr_gen = cwr.generation();
         self.serving.scenario = scenario;
+        sess.warm_infer(self.serving.params.as_ref().unwrap())
     }
 }

@@ -272,6 +272,10 @@ impl<'b> Simulation<'b> {
     /// Run the whole event stream; consumes the simulation.
     pub fn run(mut self) -> Result<Report> {
         let wall = Instant::now();
+        // backends are reused across runs (one per sweep worker), so the
+        // execution-core counters are cumulative per backend — report the
+        // per-run delta, like the per-session marshal counters.
+        let perf0 = self.sess.be.perf();
         let mut buffer: Vec<(Vec<f32>, Vec<i32>, usize)> = Vec::new();
         let mut trained_classes = BitSet::new(self.sess.m.classes);
         let mut reinit_done: Vec<bool> = vec![false; self.sess.m.classes];
@@ -500,6 +504,13 @@ impl<'b> Simulation<'b> {
         self.report.theta_cache_hits = self.sess.theta_cache_hit_count();
         self.report.serving_rebuilds = self.engine.serving_rebuilds();
         self.report.serving_hits = self.engine.serving_hits();
+        let perf = self.sess.be.perf();
+        self.report.gemm_packs = perf.gemm_packs - perf0.gemm_packs;
+        self.report.gemm_pack_hits = perf.gemm_pack_hits - perf0.gemm_pack_hits;
+        self.report.scratch_allocs = perf.scratch_allocs - perf0.scratch_allocs;
+        self.report.scratch_reuses = perf.scratch_reuses - perf0.scratch_reuses;
+        self.report.scratch_bytes_reused =
+            perf.scratch_bytes_reused - perf0.scratch_bytes_reused;
         let lat = self.engine.latency_summary();
         self.report.latency_p50_ms = lat.p50_ms;
         self.report.latency_p95_ms = lat.p95_ms;

@@ -1,0 +1,275 @@
+//! Property tests for the packed GEMM execution core: **bit-equality**
+//! against the naive triple-loop oracle (`runtime::refcpu::naive`, the
+//! seed kernels kept verbatim) over odd and degenerate shapes —
+//! m, k, n ∈ {1, 3, 8, 17, 64} (non-multiples of the panel width, width
+//! 1, and full panels), zeroed rows (exercising the `x == 0.0` skip
+//! whose absence would flip zero signs), and all-zero inputs — for the
+//! forward, dx, dw and QAT paths, at the kernel level, through the tape
+//! path, and end-to-end through the backend for all three block kinds.
+//!
+//! "Bit-equality" is literal: every f32 is compared by `to_bits()`, so a
+//! `-0.0` vs `+0.0` divergence fails.
+
+use etuner::rng::Pcg32;
+use etuner::runtime::refcpu::arena::Arena;
+use etuner::runtime::refcpu::gemm::{self, Act};
+use etuner::runtime::refcpu::kernels::{dense_bwd, dense_train, Ctx, DenseKey};
+use etuner::runtime::refcpu::naive;
+use etuner::runtime::{Backend, RefCpuBackend};
+
+const DIMS: [usize; 5] = [1, 3, 8, 17, 64];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}[{i}]: packed {x:?} ({:#010x}) != naive {y:?} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+fn randv(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// The x variants every shape is tested under: dense random, a zeroed
+/// row (skip path), and all-zero.
+fn x_variants(rng: &mut Pcg32, m: usize, k: usize) -> Vec<Vec<f32>> {
+    let dense = randv(rng, m * k, 1.0);
+    let mut zero_row = dense.clone();
+    zero_row[..k].iter_mut().for_each(|v| *v = 0.0);
+    // sprinkle interior zeros too, so the skip fires mid-reduction
+    let mut sparse = dense.clone();
+    for (i, v) in sparse.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0;
+        }
+    }
+    vec![dense, zero_row, sparse, vec![0.0; m * k]]
+}
+
+#[test]
+fn packed_fwd_bit_equals_naive_over_shape_grid() {
+    let mut rng = Pcg32::new(71, 1);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let w = randv(&mut rng, k * n, 0.5);
+                let b = randv(&mut rng, n, 0.2);
+                let pan = gemm::pack_w(&w, k, n, false);
+                for x in x_variants(&mut rng, m, k) {
+                    for act in [Act::None, Act::Relu, Act::Gelu] {
+                        let want = naive::dense_fwd(&x, &w, &b, m, k, n, act, false);
+                        let mut got = vec![0.0f32; m * n];
+                        gemm::gemm_fwd(&x, &pan, &b, m, act, &mut got);
+                        assert_bits_eq(&got, &want, &format!("fwd {act:?} m{m} k{k} n{n}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_vjp_kernels_bit_equal_naive_over_shape_grid() {
+    let mut rng = Pcg32::new(72, 2);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let w = randv(&mut rng, k * n, 0.5);
+                let b = randv(&mut rng, n, 0.2);
+                let dout = randv(&mut rng, m * n, 1.0);
+                let pt = gemm::pack_wt(&w, k, n, false);
+                for x in x_variants(&mut rng, m, k) {
+                    let (want_dx, want_dw, want_db) =
+                        naive::dense_vjp(&x, &w, &b, m, k, n, Act::None, false, &dout);
+                    let mut dx = vec![0.0f32; m * k];
+                    gemm::gemm_dx(&dout, &pt, m, &mut dx);
+                    let mut dw = vec![0.0f32; k * n];
+                    gemm::gemm_dw_acc(&x, &dout, m, k, n, &mut dw);
+                    let mut db = vec![0.0f32; n];
+                    gemm::db_acc(&dout, m, n, &mut db);
+                    let tag = format!("m{m} k{k} n{n}");
+                    assert_bits_eq(&dx, &want_dx, &format!("dx {tag}"));
+                    assert_bits_eq(&dw, &want_dw, &format!("dw {tag}"));
+                    assert_bits_eq(&db, &want_db, &format!("db {tag}"));
+                }
+            }
+        }
+    }
+}
+
+/// Tape-path VJP (dense_train + dense_bwd: activation rules, pack cache,
+/// arena buffers) against the oracle, for every activation and QAT.
+#[test]
+fn tape_path_bit_equals_naive_for_all_acts_and_qat() {
+    let mut rng = Pcg32::new(73, 3);
+    let shapes = [(1, 1, 1), (3, 8, 17), (17, 3, 8), (8, 17, 3), (16, 64, 64)];
+    for &(m, k, n) in &shapes {
+        for quant in [false, true] {
+            for act in [Act::None, Act::Relu, Act::Gelu] {
+                let x = randv(&mut rng, m * k, 1.0);
+                let w = randv(&mut rng, k * n, 0.5);
+                let b = randv(&mut rng, n, 0.2);
+                let dout = randv(&mut rng, m * n, 1.0);
+                let tag = format!("{act:?} quant={quant} m{m} k{k} n{n}");
+
+                let want_out = naive::dense_fwd(&x, &w, &b, m, k, n, act, quant);
+                let (want_dx, want_dw, want_db) =
+                    naive::dense_vjp(&x, &w, &b, m, k, n, act, quant, &dout);
+
+                let mut pool = Arena::new();
+                let mut packs = gemm::PackCache::new();
+                let mut ctx = Ctx { pool: &mut pool, packs: &mut packs };
+                let (out, tape) = dense_train(
+                    etuner::runtime::refcpu::kernels::XBuf::Borrowed(&x),
+                    &w,
+                    &b,
+                    m,
+                    k,
+                    n,
+                    act,
+                    quant,
+                    DenseKey { src: 1, w_off: 0 },
+                    &mut ctx,
+                );
+                assert_bits_eq(&out, &want_out, &format!("out {tag}"));
+                let mut dparams = vec![0.0f32; k * n + n];
+                let dx =
+                    dense_bwd(&tape, &dout, Some(&out), &w, &mut dparams, 0, k * n, true, &mut ctx);
+                assert_bits_eq(&dx, &want_dx, &format!("dx {tag}"));
+                assert_bits_eq(&dparams[..k * n], &want_dw, &format!("dw {tag}"));
+                assert_bits_eq(&dparams[k * n..], &want_db, &format!("db {tag}"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: backend infer vs a naive full-model forward per block kind
+// ---------------------------------------------------------------------------
+
+/// Slice a named tensor out of flat θ by manifest offsets.
+fn tensor_slice<'a>(
+    theta: &'a [f32],
+    mm: &etuner::runtime::ModelManifest,
+    name: &str,
+) -> &'a [f32] {
+    let ti = mm
+        .tensors
+        .iter()
+        .find(|t| t.name == name)
+        .unwrap_or_else(|| panic!("no tensor {name}"));
+    &theta[ti.offset..ti.offset + ti.size()]
+}
+
+/// Naive full-model forward written against the manifest layout, using
+/// only oracle kernels — catches orchestration-level divergence (wrong
+/// residual operand, stale buffer reuse) the kernel grid can't see.
+fn naive_model_infer(
+    be: &RefCpuBackend,
+    model: &str,
+    theta: &[f32],
+    x: &[f32],
+    b: usize,
+) -> Vec<f32> {
+    let mm = be.manifest().model(model).unwrap().clone();
+    let sl = |name: &str| tensor_slice(theta, &mm, name);
+    let (d, h) = (mm.d, mm.h);
+    let mut hcur = naive::dense_fwd(x, sl("embed.w"), sl("embed.b"), b, d, h, Act::Relu, false);
+    for i in 1..=mm.blocks {
+        let w1 = sl(&format!("block{i}.w1"));
+        let e = w1.len() / h;
+        let b1 = sl(&format!("block{i}.b1"));
+        let w2 = sl(&format!("block{i}.w2"));
+        let b2 = sl(&format!("block{i}.b2"));
+        match mm.kind.as_str() {
+            "relu_res" | "bottleneck" => {
+                let mid = naive::dense_fwd(&hcur, w1, b1, b, h, e, Act::Relu, false);
+                let out = naive::dense_fwd(&mid, w2, b2, b, e, h, Act::None, false);
+                hcur = if mm.kind == "relu_res" {
+                    hcur.iter().zip(&out).map(|(&a, &v)| (a + v).max(0.0)).collect()
+                } else {
+                    hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect()
+                };
+            }
+            "preln_gelu" => {
+                let s = sl(&format!("block{i}.ln_s"));
+                let bb = sl(&format!("block{i}.ln_b"));
+                let mut ln = vec![0.0f32; b * h];
+                for r in 0..b {
+                    let row = &hcur[r * h..(r + 1) * h];
+                    let mu = row.iter().sum::<f32>() / h as f32;
+                    let var =
+                        row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / h as f32;
+                    let is = 1.0 / (var + 1e-5).sqrt();
+                    for j in 0..h {
+                        ln[r * h + j] = (row[j] - mu) * is * s[j] + bb[j];
+                    }
+                }
+                let mid = naive::dense_fwd(&ln, w1, b1, b, h, e, Act::Gelu, false);
+                let out = naive::dense_fwd(&mid, w2, b2, b, e, h, Act::None, false);
+                hcur = hcur.iter().zip(&out).map(|(&a, &v)| a + v).collect();
+            }
+            other => panic!("unknown kind {other}"),
+        }
+    }
+    naive::dense_fwd(
+        &hcur,
+        sl("head.w"),
+        sl("head.b"),
+        b,
+        h,
+        mm.classes,
+        Act::None,
+        false,
+    )
+}
+
+#[test]
+fn backend_infer_bit_equals_naive_model_forward() {
+    // one model per block kind: relu_res (tie-prone ReZero residuals),
+    // bottleneck, preln_gelu (LayerNorm + GELU epilogue)
+    for model in ["res50", "mbv2", "deit"] {
+        let be = RefCpuBackend::builtin().unwrap();
+        let mm = be.manifest().model(model).unwrap().clone();
+        let theta = be.theta0(model).unwrap();
+        let b = 5; // not a full panel multiple
+        let mut rng = Pcg32::new(74, 4);
+        let mut x = randv(&mut rng, b * mm.d, 1.0);
+        // zero a row so the skip path runs end-to-end
+        x[..mm.d].iter_mut().for_each(|v| *v = 0.0);
+
+        let want = naive_model_infer(&be, model, &theta, &x, b);
+
+        let tv = be.marshal_f32(&theta, &[mm.theta_len]).unwrap();
+        let xv = be.marshal_f32(&x, &[b, mm.d]).unwrap();
+        let out = be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        let got = out[0].read_f32().unwrap();
+        assert_bits_eq(&got, &want, &format!("{model} logits"));
+
+        // a second execute (warm packs, recycled scratch) must not move a bit
+        let out2 = be.execute(&mm.artifacts.infer, &[&tv, &xv]).unwrap();
+        assert_bits_eq(&out2[0].read_f32().unwrap(), &want, &format!("{model} warm logits"));
+    }
+}
+
+#[test]
+fn qat_pack_fusion_bit_equals_naive_qat() {
+    // the fused quantize-while-packing path vs naive fake_quant + matmul
+    let mut rng = Pcg32::new(75, 5);
+    for &(m, k, n) in &[(4, 7, 9), (16, 64, 64), (1, 17, 3)] {
+        let x = randv(&mut rng, m * k, 1.0);
+        let w = randv(&mut rng, k * n, 0.5);
+        let b = randv(&mut rng, n, 0.2);
+        let want = naive::dense_fwd(&x, &w, &b, m, k, n, Act::Relu, true);
+        let pan = gemm::pack_w(&w, k, n, true);
+        let xq = naive::fake_quant(&x);
+        let mut got = vec![0.0f32; m * n];
+        gemm::gemm_fwd(&xq, &pan, &b, m, Act::Relu, &mut got);
+        assert_bits_eq(&got, &want, &format!("qat m{m} k{k} n{n}"));
+    }
+}
