@@ -41,7 +41,10 @@ use etuner::json::Json;
 use etuner::model::ModelSession;
 use etuner::rng::Pcg32;
 use etuner::runtime::Backend;
-use etuner::serve::{batcher::span_rows, AdaptiveBatcher, QueuedRequest, RequestQueue};
+use etuner::serve::{
+    batcher::span_rows, admission::Fifo, AdaptiveBatcher, QueuedRequest,
+    RequestQueue,
+};
 use etuner::testkit::{self, bench};
 
 /// Train/infer/probe series for one backend; `tag` prefixes the labels
@@ -229,7 +232,7 @@ fn main() -> anyhow::Result<()> {
                     q.push(r.clone());
                 }
                 while !q.is_empty() {
-                    let batch = batched.take_batch(&mut q);
+                    let batch = batched.take_batch(&mut q, &Fifo);
                     let p = batched.pack(&batch);
                     execute(&p.x, &mut logits);
                     for s in &p.spans {
@@ -248,7 +251,7 @@ fn main() -> anyhow::Result<()> {
                     q.push(r.clone());
                 }
                 while !q.is_empty() {
-                    let batch = batched.take_batch(&mut q);
+                    let batch = batched.take_batch(&mut q, &Fifo);
                     let p = batched.pack(&batch);
                     for s in &p.spans {
                         sink += span_rows(&p.x, D, s).len();
@@ -408,13 +411,92 @@ fn main() -> anyhow::Result<()> {
                     q.push(r.clone());
                 }
                 while !q.is_empty() {
-                    let batch = batched.take_batch(&mut q);
+                    let batch = batched.take_batch(&mut q, &Fifo);
                     let packed = batched.pack(&batch);
                     let logits = sess.infer(&p, &packed.x).unwrap();
                     sink += logits.argmax_rows().len();
                 }
             }),
         );
+        std::hint::black_box(sink);
+    }
+
+    // ---- mixed-scenario burst through the full control plane --------------
+    // A scenario-interleaved trace (s0,s1,s0,s1,…) driven through the real
+    // ServeEngine on the executing refcpu backend.  `bank cap 1` forces the
+    // pre-PR-5 economics — a single resident serving θ, so every scenario
+    // alternation rebuilds (full-θ copy + head install + marshal + re-pack)
+    // — while `bank cap 4` keeps both scenarios' banks resident: after the
+    // first iteration's warm-up the BankSet path pays zero rebuilds.
+    if section("serving") {
+        use etuner::cost::device::DeviceModel;
+        use etuner::data::benchmarks::Scenario;
+        use etuner::model::Cwr;
+        use etuner::serve::{ServeConfig, ServeCtx, ServeEngine};
+
+        let sess = ModelSession::new(refcpu.as_ref(), "mbv2")?;
+        let params = sess.theta0()?;
+        let mut cwr = Cwr::new(&sess.m);
+        cwr.consolidate(&sess.m, &params, &[0, 1]);
+        let scenarios = vec![
+            Scenario { id: 0, classes: vec![0], seen: vec![0], new_pattern: false },
+            Scenario {
+                id: 1,
+                classes: vec![1],
+                seen: vec![0, 1],
+                new_pattern: false,
+            },
+        ];
+        let ctx = ServeCtx {
+            sess: &sess,
+            params: &params,
+            cwr: &cwr,
+            scenarios: &scenarios,
+        };
+        let d = sess.m.d;
+        let rows = sess.m.batch_infer / 4;
+        const N_REQ: usize = 64;
+        let reqs: Vec<QueuedRequest> = (0..N_REQ)
+            .map(|i| QueuedRequest {
+                arrival_t: i as f64,
+                deadline_t: i as f64 + 1e9,
+                scenario: i % 2,
+                stale_batches: 0,
+                x: (0..rows * d).map(|_| rng.normal()).collect(),
+                y: vec![(i % 2) as i32; rows],
+                rows,
+            })
+            .collect();
+        let device = DeviceModel::jetson_nx_15w();
+        let mut sink = 0usize;
+        for (label, bank_cap) in
+            [("single-bank rebuild", 1usize), ("bankset resident", 4)]
+        {
+            let cfg = ServeConfig {
+                batch_window_s: 1e6,
+                slo_ms: 1e15,
+                rows_per_request: Some(rows),
+                bank_capacity: bank_cap,
+                ..ServeConfig::default()
+            };
+            let mut eng = ServeEngine::new(&sess.m, &device, &cfg, false, false);
+            report(
+                &format!("serving: mixed burst {label} ({N_REQ} reqs)"),
+                bench(1, 5, || {
+                    for r in &reqs {
+                        eng.on_arrival(r.clone());
+                    }
+                    let events = eng.drain(1e7, &ctx).unwrap();
+                    sink += events.len();
+                }),
+            );
+            eprintln!(
+                "  [mixed burst {label}] rebuilds {} / hits {} / evictions {}",
+                eng.serving_rebuilds(),
+                eng.serving_hits(),
+                eng.bank_evictions()
+            );
+        }
         std::hint::black_box(sink);
     }
 

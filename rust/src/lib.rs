@@ -55,6 +55,9 @@ pub mod prelude {
     pub use crate::data::benchmarks::Benchmark;
     pub use crate::metrics::Report;
     pub use crate::runtime::{Backend, BackendKind, BackendSpec, PjrtBackend, RefCpuBackend};
-    pub use crate::serve::ServeConfig;
+    pub use crate::serve::{
+        Admission, QueuePolicyKind, ServeConfig, ServeCtx, ServeEngine,
+        ServeEvent,
+    };
     pub use crate::sim::{ParallelSweeper, RunConfig, Simulation};
 }

@@ -23,6 +23,7 @@ use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::{Backend, BackendKind, BackendSpec};
+use etuner::serve::{QueuePolicyKind, MAX_BANK_CAPACITY};
 use etuner::sim::{ParallelSweeper, RunConfig, Simulation};
 use etuner::testkit;
 
@@ -59,11 +60,21 @@ fn main() -> Result<()> {
                        [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
                        [--quant] [--labeled FRAC] [--cka-th TH]\n\
                        [--batch-window S] [--slo-ms MS] [--no-batching]\n\
+                       [--queue-policy fifo|edf] [--max-queue N]\n\
+                       [--shed-infeasible] [--bank-capacity N]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --batch-window S coalesces requests for up to S virtual\n\
                        seconds per padded execute (0 = off); --slo-ms sets the\n\
                        latency SLO; --no-batching forces the direct per-request\n\
                        path (bit-identical reports to --batch-window 0)\n\
+                       --queue-policy orders the serving queue: fifo (default)\n\
+                       or edf (earliest-deadline-first across scenarios);\n\
+                       --max-queue N drops arrivals beyond N queued (0 = no\n\
+                       cap); --shed-infeasible drops arrivals whose deadline\n\
+                       cannot be met even on an idle device; --bank-capacity N\n\
+                       bounds the resident per-scenario serving-theta banks\n\
+                       (LRU-evicted beyond N; default 4, ceiling 8 so banks\n\
+                       fit the session theta-cache)\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --jobs N runs N seed-sweep workers (default: all cores)\n\
@@ -152,6 +163,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(s) = opt(args, "--slo-ms") {
         cfg.serve.slo_ms = s.parse().context("bad --slo-ms")?;
     }
+    if let Some(p) = opt(args, "--queue-policy") {
+        cfg.serve.queue_policy =
+            QueuePolicyKind::parse(p).context("bad --queue-policy")?;
+    }
+    if let Some(q) = opt(args, "--max-queue") {
+        cfg.serve.max_queue = q.parse().context("bad --max-queue")?;
+    }
+    if let Some(b) = opt(args, "--bank-capacity") {
+        let n: usize = b.parse().context("bad --bank-capacity")?;
+        let clamped = n.clamp(1, MAX_BANK_CAPACITY);
+        if clamped != n {
+            eprintln!(
+                "[etuner] --bank-capacity {n} is outside 1..={MAX_BANK_CAPACITY} \
+                 (banks must fit the session theta-cache alongside the live \
+                 parameters); clamping to {clamped}"
+            );
+        }
+        cfg.serve.bank_capacity = clamped;
+    }
+    cfg.serve.shed_infeasible = flag(args, "--shed-infeasible");
     cfg.serve_direct = flag(args, "--no-batching");
     if let Some(d) = opt(args, "--decay") {
         use etuner::coordinator::lazytune::DecayKind;
@@ -191,6 +222,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
         report.avg_batch_requests,
         report.rounds_deferred,
     );
+    println!(
+        "  control plane: {} queue; {} dropped ({} queue-full, {} infeasible); \
+         {} deadline misses; {} banks peak resident ({} evictions)",
+        report.queue_policy,
+        report.requests_dropped,
+        report.drops_queue_full,
+        report.drops_slo_infeasible,
+        report.deadline_misses,
+        report.banks_peak_resident,
+        report.bank_evictions,
+    );
+    for s in &report.per_scenario_latency {
+        println!(
+            "    scen {}: {} reqs, mean {:.1}ms / p95 {:.1}ms / max {:.1}ms, \
+             {} deadline misses",
+            s.scenario, s.requests, s.mean_ms, s.p95_ms, s.max_ms,
+            s.deadline_misses,
+        );
+    }
     Ok(())
 }
 

@@ -23,6 +23,20 @@ pub struct RequestRecord {
     pub queue_depth: usize,
 }
 
+/// Per-scenario latency digest (serving-engine accounting, excluded from
+/// [`Report::fingerprint`]): mixed-scenario load means one scenario's
+/// burst can starve another's tail, which the global percentiles hide.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ScenarioLatency {
+    pub scenario: usize,
+    pub requests: u64,
+    pub mean_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+    /// served requests whose completion passed their own deadline.
+    pub deadline_misses: u64,
+}
+
 /// One fine-tuning round.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundRecord {
@@ -105,6 +119,28 @@ pub struct Report {
     pub peak_queue_depth: u64,
     /// fine-tuning rounds the scheduler deferred under serving backlog.
     pub rounds_deferred: u64,
+    /// control-plane accounting (PR 5; like every serving field above,
+    /// excluded from [`Report::fingerprint`] — the default configuration
+    /// never sheds a request, so the drop counters are zero there and
+    /// the scientific fields stay bit-identical to the seed; the policy
+    /// name, per-scenario digests, and deadline misses are populated in
+    /// every run):
+    /// the queue ordering the run used (`"fifo"` / `"edf"`).
+    pub queue_policy: String,
+    /// requests shed at arrival, all reasons.
+    pub requests_dropped: u64,
+    /// ... because the queue held `--max-queue` requests.
+    pub drops_queue_full: u64,
+    /// ... because the deadline was infeasible even on an idle device.
+    pub drops_slo_infeasible: u64,
+    /// served requests whose completion passed their own deadline.
+    pub deadline_misses: u64,
+    /// resident serving-θ banks LRU-evicted (`--bank-capacity` pressure).
+    pub bank_evictions: u64,
+    /// most serving-θ banks ever resident at once.
+    pub banks_peak_resident: u64,
+    /// per-scenario latency digests (ascending scenario order).
+    pub per_scenario_latency: Vec<ScenarioLatency>,
 }
 
 impl Report {
@@ -260,18 +296,60 @@ pub fn average(reports: &[Report]) -> Report {
     out.latency_mean_ms =
         reports.iter().map(|r| r.latency_mean_ms).sum::<f64>() / n;
     out.latency_max_ms = reports.iter().map(|r| r.latency_max_ms).sum::<f64>() / n;
-    out.slo_violations =
-        (reports.iter().map(|r| r.slo_violations).sum::<u64>() as f64 / n) as u64;
-    out.serve_executes =
-        (reports.iter().map(|r| r.serve_executes).sum::<u64>() as f64 / n) as u64;
+    let mean_u64 = |f: fn(&Report) -> u64| -> u64 {
+        (reports.iter().map(f).sum::<u64>() as f64 / n) as u64
+    };
+    out.slo_violations = mean_u64(|r| r.slo_violations);
+    out.serve_executes = mean_u64(|r| r.serve_executes);
     out.avg_batch_requests =
         reports.iter().map(|r| r.avg_batch_requests).sum::<f64>() / n;
-    out.rounds_deferred =
-        (reports.iter().map(|r| r.rounds_deferred).sum::<u64>() as f64 / n) as u64;
-    out.peak_queue_depth =
-        (reports.iter().map(|r| r.peak_queue_depth).sum::<u64>() as f64 / n) as u64;
+    out.rounds_deferred = mean_u64(|r| r.rounds_deferred);
+    out.peak_queue_depth = mean_u64(|r| r.peak_queue_depth);
+    out.requests_dropped = mean_u64(|r| r.requests_dropped);
+    out.drops_queue_full = mean_u64(|r| r.drops_queue_full);
+    out.drops_slo_infeasible = mean_u64(|r| r.drops_slo_infeasible);
+    out.deadline_misses = mean_u64(|r| r.deadline_misses);
+    out.bank_evictions = mean_u64(|r| r.bank_evictions);
+    out.banks_peak_resident = mean_u64(|r| r.banks_peak_resident);
+    out.per_scenario_latency = average_scenario_latency(reports);
     out.seed = u64::MAX; // marker: averaged
     out
+}
+
+/// Merge per-scenario latency digests across seeds: each scenario's entry
+/// averages over the reports that observed it.
+fn average_scenario_latency(reports: &[Report]) -> Vec<ScenarioLatency> {
+    let mut scenarios: Vec<usize> = reports
+        .iter()
+        .flat_map(|r| r.per_scenario_latency.iter().map(|s| s.scenario))
+        .collect();
+    scenarios.sort_unstable();
+    scenarios.dedup();
+    scenarios
+        .into_iter()
+        .map(|scenario| {
+            let entries: Vec<&ScenarioLatency> = reports
+                .iter()
+                .filter_map(|r| {
+                    r.per_scenario_latency.iter().find(|s| s.scenario == scenario)
+                })
+                .collect();
+            let k = entries.len() as f64;
+            ScenarioLatency {
+                scenario,
+                requests: (entries.iter().map(|e| e.requests).sum::<u64>() as f64
+                    / k) as u64,
+                mean_ms: entries.iter().map(|e| e.mean_ms).sum::<f64>() / k,
+                p95_ms: entries.iter().map(|e| e.p95_ms).sum::<f64>() / k,
+                max_ms: entries.iter().map(|e| e.max_ms).sum::<f64>() / k,
+                deadline_misses: (entries
+                    .iter()
+                    .map(|e| e.deadline_misses)
+                    .sum::<u64>() as f64
+                    / k) as u64,
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -317,6 +395,33 @@ mod tests {
     }
 
     #[test]
+    fn average_merges_per_scenario_latency_by_scenario() {
+        let mut a = Report::default();
+        a.requests_dropped = 4;
+        a.per_scenario_latency = vec![
+            ScenarioLatency { scenario: 0, requests: 10, mean_ms: 2.0, ..Default::default() },
+            ScenarioLatency { scenario: 2, requests: 6, mean_ms: 8.0, ..Default::default() },
+        ];
+        let mut b = Report::default();
+        b.requests_dropped = 2;
+        b.per_scenario_latency = vec![ScenarioLatency {
+            scenario: 0,
+            requests: 20,
+            mean_ms: 4.0,
+            ..Default::default()
+        }];
+        let m = average(&[a, b]);
+        assert_eq!(m.requests_dropped, 3);
+        assert_eq!(m.per_scenario_latency.len(), 2);
+        assert_eq!(m.per_scenario_latency[0].scenario, 0);
+        assert_eq!(m.per_scenario_latency[0].requests, 15);
+        assert!((m.per_scenario_latency[0].mean_ms - 3.0).abs() < 1e-9);
+        // scenario 2 only appeared in one report: averaged over presence
+        assert_eq!(m.per_scenario_latency[1].requests, 6);
+        assert!((m.per_scenario_latency[1].mean_ms - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn fingerprint_ignores_wall_clock_and_perf_counters() {
         let mut a = Report::default();
         a.avg_inference_accuracy = 0.5;
@@ -344,6 +449,22 @@ mod tests {
         b.requests[0].latency_s = 0.125;
         b.requests[0].batch_requests = 4;
         b.requests[0].queue_depth = 3;
+        // control-plane accounting (PR 5) is likewise excluded
+        b.queue_policy = "edf".into();
+        b.requests_dropped = 6;
+        b.drops_queue_full = 4;
+        b.drops_slo_infeasible = 2;
+        b.deadline_misses = 3;
+        b.bank_evictions = 7;
+        b.banks_peak_resident = 4;
+        b.per_scenario_latency.push(ScenarioLatency {
+            scenario: 1,
+            requests: 10,
+            mean_ms: 5.0,
+            p95_ms: 9.0,
+            max_ms: 12.0,
+            deadline_misses: 1,
+        });
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;

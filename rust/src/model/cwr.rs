@@ -116,6 +116,26 @@ impl Cwr {
         }
     }
 
+    /// Build one scenario's serving θ into `dst`: copy the live `src`
+    /// parameters (reusing `dst`'s allocation and identity) and install
+    /// the consolidated bank for every seen class not in `except` — the
+    /// live scenario's classes keep their training rows.  This is the
+    /// primitive behind the serving engine's multi-head residency
+    /// ([`crate::serve::BankSet`] keeps one such θ per active scenario);
+    /// the two-step recipe is deliberately identical to what the old
+    /// single-slot serving cache did, so bank contents are bit-identical
+    /// to the pre-BankSet path.
+    pub fn build_serving(
+        &self,
+        m: &ModelManifest,
+        src: &Params,
+        dst: &mut Params,
+        except: &BitSet,
+    ) {
+        dst.copy_from(src);
+        self.install_except(m, dst, except);
+    }
+
     /// Write one class's consolidated row into θ.
     pub fn install_class(&self, m: &ModelManifest, p: &mut Params, c: usize) {
         self.write_class(m, p.theta_mut(), c);
@@ -229,6 +249,28 @@ mod tests {
         // class 3 was never consolidated: untouched
         let (w3, _) = Params::head_class_indices(&m, 3);
         assert!(w3.iter().all(|&i| p.theta()[i] == -7.0));
+    }
+
+    #[test]
+    fn build_serving_equals_copy_plus_install_except() {
+        let m = toy_manifest();
+        let mut live = Params::new((0..22).map(|x| x as f32).collect(), &m).unwrap();
+        let mut cwr = Cwr::new(&m);
+        cwr.consolidate(&m, &live, &[0, 1, 2]);
+        live.theta_mut()[7] = -3.0; // diverge live θ from the bank
+
+        let mut except = BitSet::new(m.classes);
+        except.insert(1); // class 1 is "live": keeps its training row
+
+        // reference: the old serving-cache recipe, step by step
+        let mut want = live.clone();
+        cwr.install_except(&m, &mut want, &except);
+
+        let mut got = Params::new(vec![9.9; 22], &m).unwrap();
+        let id = got.id();
+        cwr.build_serving(&m, &live, &mut got, &except);
+        assert_eq!(got.theta(), want.theta());
+        assert_eq!(got.id(), id, "dst keeps its identity (in-place rebuild)");
     }
 
     #[test]

@@ -23,10 +23,13 @@
 //! The cache is also the **generation-keyed invalidation hook** for
 //! backend state derived from θ (the reference executor's packed weight
 //! panels): every eviction or stale-generation replacement calls
-//! [`Backend::release`] with the dropped value's buf id, and
-//! [`ModelSession::warm_infer`] asks the backend to pre-build per-θ
-//! serving state ([`Backend::warm`]) when the serving engine installs a
-//! CWR-bank θ.
+//! [`Backend::release`] with the dropped value's buf id.  The serving
+//! engine's [`crate::serve::BankSet`] keeps *multiple* serving θs warm at
+//! once — one bank-installed `Params` per active scenario, each a
+//! distinct cache entry beside the live training θ:
+//! [`ModelSession::warm_infer`] pre-builds a bank's backend state
+//! ([`Backend::warm`]) at install time, and
+//! [`ModelSession::release_params`] frees it when the bank is evicted.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -40,9 +43,15 @@ use crate::runtime::{Backend, ModelManifest, Value};
 use super::params::Params;
 
 /// Soft bound on distinct `Params` instances tracked by the value cache.
-/// A simulation touches a handful (live θ, serving θ, policy references);
-/// the cap only guards against pathological callers churning instances.
-const THETA_CACHE_CAP: usize = 16;
+/// A simulation touches a handful (live θ, resident serving banks, policy
+/// references); the cap only guards against pathological callers churning
+/// instances.  Crate-visible so the serving engine's `BankSet` can bound
+/// its residency *below* this: if banks alone could reach the cap, every
+/// overflow would drain the whole cache — live θ and all warm banks —
+/// while the banks' generation snapshots still read as valid, silently
+/// reintroducing the per-request marshal+pack cost residency exists to
+/// avoid.
+pub(crate) const THETA_CACHE_CAP: usize = 16;
 
 /// A bound (backend, model) pair.
 pub struct ModelSession<'b> {
@@ -144,13 +153,27 @@ impl<'b> ModelSession<'b> {
 
     /// Pre-build the backend's per-θ serving state (marshalled literal +
     /// packed forward panels) for `params`.  The serving engine calls
-    /// this when it installs a CWR-bank θ, so pack work happens at
-    /// install time and steady-state inference never packs.
+    /// this whenever it installs a CWR-bank θ — since the BankSet there
+    /// may be *several* serving θs warm at once (one per active
+    /// scenario), each under its own `Params` id, coexisting with the
+    /// live training θ in this cache.
     pub fn warm_infer(&self, params: &Params) -> Result<()> {
         self.ensure_theta_value(params)?;
         let cache = self.theta_cache.borrow();
         let theta_v = &cache.get(&params.id()).unwrap().1;
         self.be.warm(&self.m.artifacts.infer, theta_v)
+    }
+
+    /// Drop the cached θ value for one `Params` instance, releasing the
+    /// backend state (packed panels) keyed on its buf id.  The serving
+    /// engine calls this when the BankSet LRU-evicts a scenario's bank,
+    /// so inactive serving θs free their literal + packs immediately
+    /// instead of lingering until a generation collision or session drop.
+    /// A no-op for ids this session never marshalled.
+    pub fn release_params(&self, params_id: u64) {
+        if let Some((_, v)) = self.theta_cache.borrow_mut().remove(&params_id) {
+            self.be.release(v.buf_id());
+        }
     }
 
     /// One SGD step on a batch.  Chooses the `train_k` artifact matching

@@ -53,6 +53,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("abl-interval", "ablation: SimFreeze probe interval"),
         ("abl-oracle", "ablation: energy-score detector vs oracle boundaries"),
         ("serve", "serving engine: latency percentiles & SLO vs batch window"),
+        ("serve-policy", "serving control plane: fifo vs edf x queue caps"),
     ]
 }
 
@@ -127,6 +128,7 @@ fn plan(id: &str, opts: &ReproOpts) -> Result<Plan> {
         "abl-interval" => abl_interval(opts),
         "abl-oracle" => abl_oracle(opts),
         "serve" => serve_table(opts),
+        "serve-policy" => serve_policy_table(opts),
         other => anyhow::bail!("unknown experiment {other:?} (try `list`)"),
     })
 }
@@ -1009,6 +1011,72 @@ fn serve_table(opts: &ReproOpts) -> Plan {
                 ]);
             }
             t.emit(&dir, "serve")
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving control plane — admission policy × queue cap
+// ---------------------------------------------------------------------------
+
+fn serve_policy_table(opts: &ReproOpts) -> Plan {
+    use crate::serve::QueuePolicyKind;
+    // A real coalescing window so arrivals actually queue (caps can bind)
+    // and a 30s SLO like the `serve` table.  The simulator derives every
+    // deadline as arrival + SLO, so EDF must order exactly like FIFO here
+    // — the table doubles as a visible regression check of that
+    // degeneracy (crafted deadline-inverted traces live in
+    // tests/serving_engine.rs).
+    let policies = [QueuePolicyKind::Fifo, QueuePolicyKind::Edf];
+    let caps = [0usize, 8, 2];
+    let n_requests = opts.n_requests;
+    let mut cells = Vec::new();
+    for policy in policies {
+        for cap in caps {
+            let mut c = cfg("res50", Benchmark::Nc, opts)
+                .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze);
+            c.serve.batch_window_s = 20.0;
+            c.serve.slo_ms = 30_000.0;
+            c.serve.queue_policy = policy;
+            c.serve.max_queue = cap;
+            cells.push(Cell::Avg(c));
+        }
+    }
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Serving control plane: policy x queue cap (res50, NC, ETuner)",
+                &["policy", "max_queue", "served", "dropped", "p95_ms",
+                  "attain%", "req/exec", "miss", "accuracy%"],
+            );
+            let mut it = reports.iter();
+            for policy in policies {
+                for cap in caps {
+                    let r = it.next().expect("grid cell");
+                    // served + dropped == n_requests holds per seed, so
+                    // the cross-seed mean of served is derivable from the
+                    // mean drop count (average() keeps only seed #1's
+                    // request list, whose length would be inconsistent
+                    // with the averaged drop/miss columns).
+                    let served = n_requests as u64 - r.requests_dropped;
+                    let attain = 1.0
+                        - r.slo_violations as f64 / (served.max(1)) as f64;
+                    t.row(vec![
+                        policy.name().into(),
+                        if cap == 0 { "inf".into() } else { format!("{cap}") },
+                        format!("{served}"),
+                        format!("{}", r.requests_dropped),
+                        f1(r.latency_p95_ms),
+                        pct(attain),
+                        f2(r.avg_batch_requests),
+                        format!("{}", r.deadline_misses),
+                        pct(r.avg_inference_accuracy),
+                    ]);
+                }
+            }
+            t.emit(&dir, "serve_policy")
         }),
     }
 }

@@ -206,6 +206,13 @@ pub trait Backend {
     /// given segment, so the *next* `execute` on this θ value pays no
     /// preparation cost.  The serving engine calls this when it installs
     /// a fresh CWR-bank θ, moving pack work off the request path.
+    ///
+    /// **Multi-θ contract:** warm state is keyed per `Value::buf_id`, and
+    /// callers may hold *many* values warm simultaneously — the serving
+    /// engine's `BankSet` keeps one bank-installed serving θ resident per
+    /// active scenario beside the live training θ.  Warming one value
+    /// must never invalidate another's state; each stays warm until its
+    /// own `release` (or the backend's internal cap evicts it).
     fn warm(&self, _segment: &str, _theta: &Value) -> Result<()> {
         Ok(())
     }
@@ -213,7 +220,11 @@ pub trait Backend {
     /// A value previously produced by this backend is being dropped by a
     /// caller-side cache; derived state keyed on its buf id can be freed.
     /// ([`crate::model::ModelSession`] calls this whenever its
-    /// generation-keyed θ cache evicts or replaces an entry.)
+    /// generation-keyed θ cache evicts or replaces an entry, and — via
+    /// `ModelSession::release_params` — when the serving engine's
+    /// `BankSet` LRU-evicts a scenario's resident bank.)  Buf ids are
+    /// process-unique and never reused, so releasing one warmed θ leaves
+    /// every other resident bank's state intact.
     fn release(&self, _buf_id: u64) {}
 }
 

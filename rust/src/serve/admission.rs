@@ -1,0 +1,239 @@
+//! Admission control for the serving plane: whether an arriving request
+//! enters the queue at all, and in what order queued requests are taken
+//! into batches.
+//!
+//! The seed engine admitted everything and served strictly FIFO; under
+//! overload that turns every queued request into an SLO miss.  The control
+//! plane splits the decision into a [`ShedPolicy`] (load shedding: a hard
+//! `--max-queue` depth cap and an optional SLO-infeasibility test — a
+//! request whose deadline cannot be met even if served ahead of everything
+//! queued is dropped at arrival instead of wasting an execute) and an
+//! [`AdmissionPolicy`] ordering (`--queue-policy fifo|edf`).
+//!
+//! **Determinism contract:** both policies are pure functions of the queue
+//! contents and virtual time.  FIFO picks the front; EDF picks the
+//! earliest `deadline_t` with ties broken by queue position (so with a
+//! uniform SLO — every deadline `arrival + slo` — EDF orders exactly like
+//! FIFO, and the default configuration stays bit-identical to the seed).
+
+use super::queue::{QueuedRequest, RequestQueue};
+
+/// Outcome of [`crate::serve::ServeEngine::on_arrival`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// The request entered the queue and will be served by a later poll.
+    Accepted,
+    /// The request was shed at arrival; no execute will ever run for it.
+    Dropped { reason: DropReason },
+}
+
+/// Why a request was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// The queue already holds `max_queue` requests.
+    QueueFull,
+    /// Even served ahead of everything queued, the request could not
+    /// finish by its deadline (`earliest completion > deadline_t`).
+    SloInfeasible,
+}
+
+impl DropReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropReason::QueueFull => "queue-full",
+            DropReason::SloInfeasible => "slo-infeasible",
+        }
+    }
+}
+
+/// Load-shedding knobs shared by every ordering policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShedPolicy {
+    /// Drop arrivals once the queue holds this many requests (0 = never,
+    /// the default: the seed's unbounded queue).
+    pub max_queue: usize,
+    /// Drop arrivals whose deadline is already infeasible (off by
+    /// default).
+    pub shed_infeasible: bool,
+}
+
+/// Ordering + admission policy of the serving queue.
+///
+/// Object-safe so the engine can hold `Box<dyn AdmissionPolicy>` selected
+/// at runtime from [`QueuePolicyKind`]; implementations must be pure
+/// (no interior state) so replaying the same arrival trace reproduces the
+/// same decisions.
+pub trait AdmissionPolicy {
+    /// Short identifier (`"fifo"` / `"edf"`) for reports and flags.
+    fn name(&self) -> &'static str;
+
+    /// Index (into the queue, position order) of the next request to pop
+    /// into a batch; `None` on an empty queue.
+    fn next_index(&self, queue: &RequestQueue) -> Option<usize>;
+
+    /// Admission decision for `req` arriving with `queue_len` requests
+    /// already pending.  `earliest_done_t` is the soonest virtual time
+    /// one execute could complete for this request if it were served
+    /// ahead of everything queued (the optimistic bound — see
+    /// [`crate::serve::Scheduler::earliest_completion`]).  The default
+    /// shedding logic is shared by every ordering.
+    fn admit(
+        &self,
+        req: &QueuedRequest,
+        queue_len: usize,
+        shed: &ShedPolicy,
+        earliest_done_t: f64,
+    ) -> Admission {
+        if shed.max_queue > 0 && queue_len >= shed.max_queue {
+            return Admission::Dropped { reason: DropReason::QueueFull };
+        }
+        if shed.shed_infeasible && earliest_done_t > req.deadline_t {
+            return Admission::Dropped { reason: DropReason::SloInfeasible };
+        }
+        Admission::Accepted
+    }
+}
+
+/// First-in-first-out: the seed ordering (and the default).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fifo;
+
+impl AdmissionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn next_index(&self, queue: &RequestQueue) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+}
+
+/// Earliest-deadline-first across scenarios: the next request popped is
+/// the one whose `deadline_t` is smallest (ties: queue position, so a
+/// uniform SLO degenerates to FIFO).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Edf;
+
+impl AdmissionPolicy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn next_index(&self, queue: &RequestQueue) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in queue.iter().enumerate() {
+            if best.is_none_or(|(_, d)| r.deadline_t < d) {
+                best = Some((i, r.deadline_t));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// Which ordering policy to construct (`--queue-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicyKind {
+    Fifo,
+    Edf,
+}
+
+impl QueuePolicyKind {
+    pub fn parse(s: &str) -> anyhow::Result<QueuePolicyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fifo" => QueuePolicyKind::Fifo,
+            "edf" => QueuePolicyKind::Edf,
+            other => {
+                anyhow::bail!("unknown queue policy {other:?} (expected fifo|edf)")
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicyKind::Fifo => "fifo",
+            QueuePolicyKind::Edf => "edf",
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            QueuePolicyKind::Fifo => Box::new(Fifo),
+            QueuePolicyKind::Edf => Box::new(Edf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(t: f64, deadline_t: f64) -> QueuedRequest {
+        QueuedRequest {
+            arrival_t: t,
+            deadline_t,
+            scenario: 0,
+            stale_batches: 0,
+            x: vec![0.0; 4],
+            y: vec![0],
+            rows: 1,
+        }
+    }
+
+    #[test]
+    fn fifo_always_picks_the_front() {
+        let mut q = RequestQueue::new();
+        assert_eq!(Fifo.next_index(&q), None);
+        q.push(req(1.0, 9.0));
+        q.push(req(2.0, 3.0));
+        assert_eq!(Fifo.next_index(&q), Some(0));
+    }
+
+    #[test]
+    fn edf_picks_the_earliest_deadline_with_stable_ties() {
+        let mut q = RequestQueue::new();
+        assert_eq!(Edf.next_index(&q), None);
+        q.push(req(1.0, 9.0));
+        q.push(req(2.0, 3.0)); // deadline-inverted: later arrival, earlier due
+        q.push(req(3.0, 3.0)); // tie with index 1: position wins
+        assert_eq!(Edf.next_index(&q), Some(1));
+        // uniform SLO (deadline = arrival + const) degenerates to FIFO
+        let mut u = RequestQueue::new();
+        for t in [1.0, 2.0, 3.0] {
+            u.push(req(t, t + 0.25));
+        }
+        assert_eq!(Edf.next_index(&u), Fifo.next_index(&u));
+    }
+
+    #[test]
+    fn shedding_caps_the_queue_and_tests_feasibility() {
+        let shed = ShedPolicy { max_queue: 2, shed_infeasible: true };
+        let r = req(10.0, 10.5);
+        // depth cap binds first
+        assert_eq!(
+            Fifo.admit(&r, 2, &shed, 10.2),
+            Admission::Dropped { reason: DropReason::QueueFull }
+        );
+        // feasible: earliest completion inside the deadline
+        assert_eq!(Fifo.admit(&r, 1, &shed, 10.4), Admission::Accepted);
+        // infeasible: the device cannot finish in time even if idle
+        assert_eq!(
+            Fifo.admit(&r, 1, &shed, 10.6),
+            Admission::Dropped { reason: DropReason::SloInfeasible }
+        );
+        // defaults shed nothing
+        let open = ShedPolicy::default();
+        assert_eq!(Fifo.admit(&r, 10_000, &open, 99.0), Admission::Accepted);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(QueuePolicyKind::parse("EDF").unwrap(), QueuePolicyKind::Edf);
+        assert_eq!(QueuePolicyKind::parse("fifo").unwrap(), QueuePolicyKind::Fifo);
+        assert!(QueuePolicyKind::parse("lifo").is_err());
+        assert_eq!(QueuePolicyKind::Edf.build().name(), "edf");
+    }
+}

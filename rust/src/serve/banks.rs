@@ -1,0 +1,281 @@
+//! Multi-head serving-θ residency: one bank-installed serving parameter
+//! vector per *active scenario*, kept warm across requests.
+//!
+//! The seed engine kept a single cached serving θ keyed on
+//! `(params, cwr, scenario)` — correct, but every scenario change in a
+//! mixed burst invalidated it, so interleaved traffic paid a full-θ copy,
+//! a head install, a marshal, and a weight re-pack *per alternation*.
+//! The [`BankSet`] shards that cache by scenario: each resident bank is a
+//! [`Params`] holding the live θ with the consolidated CWR rows installed
+//! for every seen class *except* the bank's own scenario
+//! ([`crate::model::Cwr::build_serving`]), warm-packed at install time via
+//! [`crate::model::ModelSession::warm_infer`] → `Backend::warm`, and
+//! invalidated only by the live `(Params, Cwr)` generation counters — so a
+//! scenario-interleaved burst runs entirely on resident banks with zero
+//! rebuilds after warm-up.
+//!
+//! Residency is LRU-bounded (`--bank-capacity`, default 4): evicting a
+//! bank releases its marshalled θ literal and packed panels through
+//! [`crate::model::ModelSession::release_params`] → `Backend::release`,
+//! so inactive scenarios stop holding backend memory.
+
+use anyhow::Result;
+
+use crate::bitset::BitSet;
+use crate::model::session::THETA_CACHE_CAP;
+use crate::model::Params;
+
+use super::engine::ServeCtx;
+
+/// Hard ceiling on residency: banks plus the live θ and a couple of
+/// policy-held references must fit the session's θ-value cache
+/// ([`THETA_CACHE_CAP`]) with room to spare — if resident banks alone
+/// could fill it, every overflow would drain the whole cache (live θ
+/// included) while the banks' generation snapshots still read as valid,
+/// so `ensure` would report hits whose literals and packs are gone.
+pub const MAX_BANK_CAPACITY: usize = THETA_CACHE_CAP / 2;
+
+/// Outcome of [`BankSet::ensure`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BankInstall {
+    /// The scenario's bank was resident and current — zero copies.
+    Hit,
+    /// The bank was (re)built and warm-packed; `evicted` names the
+    /// scenario whose bank was LRU-evicted to make room, if any.
+    Installed { evicted: Option<usize> },
+}
+
+/// One resident serving θ.
+struct Bank {
+    scenario: usize,
+    params: Params,
+    /// Live-θ snapshot the bank was built from.
+    src_id: u64,
+    src_gen: u64,
+    cwr_gen: u64,
+    /// LRU tick of the last `ensure` that touched this bank.
+    last_used: u64,
+}
+
+/// LRU-bounded map of scenario → resident bank-installed serving θ.
+pub struct BankSet {
+    banks: Vec<Bank>,
+    capacity: usize,
+    clock: u64,
+    /// scratch: live-scenario classes excluded from the bank install.
+    except: BitSet,
+    rebuilds: u64,
+    hits: u64,
+    evictions: u64,
+    peak_resident: usize,
+}
+
+impl BankSet {
+    /// `classes` sizes the install-exclusion scratch; `capacity` bounds
+    /// residency (clamped to `1..=`[`MAX_BANK_CAPACITY`]).
+    pub fn new(classes: usize, capacity: usize) -> BankSet {
+        BankSet {
+            banks: Vec::new(),
+            capacity: capacity.clamp(1, MAX_BANK_CAPACITY),
+            clock: 0,
+            except: BitSet::new(classes),
+            rebuilds: 0,
+            hits: 0,
+            evictions: 0,
+            peak_resident: 0,
+        }
+    }
+
+    /// Make `scenario`'s bank resident and current.  A valid resident
+    /// bank is a pure cache hit; otherwise the bank is rebuilt from the
+    /// live θ (evicting the LRU bank when at capacity) and warm-packed.
+    /// `force_rebuild` is the `--disable-serving-cache` debug knob:
+    /// reports must be bit-identical either way.
+    pub fn ensure(
+        &mut self,
+        scenario: usize,
+        ctx: &ServeCtx,
+        force_rebuild: bool,
+    ) -> Result<BankInstall> {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(bank) = self.banks.iter_mut().find(|b| b.scenario == scenario) {
+            bank.last_used = clock;
+            let valid = !force_rebuild
+                && bank.src_id == ctx.params.id()
+                && bank.src_gen == ctx.params.generation()
+                && bank.cwr_gen == ctx.cwr.generation();
+            if valid {
+                self.hits += 1;
+                return Ok(BankInstall::Hit);
+            }
+            self.rebuilds += 1;
+            Self::build(bank, scenario, ctx, &mut self.except)?;
+            return Ok(BankInstall::Installed { evicted: None });
+        }
+        self.rebuilds += 1;
+        if self.banks.len() >= self.capacity {
+            // evict the least-recently-used bank and reuse its θ slot
+            // (the Params id persists; its stale cached literal + packs
+            // are released eagerly so the backend frees them now rather
+            // than at the next generation collision).
+            let idx = self
+                .banks
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.last_used)
+                .map(|(i, _)| i)
+                .unwrap();
+            let bank = &mut self.banks[idx];
+            let evicted = bank.scenario;
+            self.evictions += 1;
+            ctx.sess.release_params(bank.params.id());
+            bank.scenario = scenario;
+            bank.last_used = clock;
+            Self::build(bank, scenario, ctx, &mut self.except)?;
+            return Ok(BankInstall::Installed { evicted: Some(evicted) });
+        }
+        let mut bank = Bank {
+            scenario,
+            params: ctx.params.clone(),
+            src_id: 0,
+            src_gen: 0,
+            cwr_gen: 0,
+            last_used: clock,
+        };
+        Self::build(&mut bank, scenario, ctx, &mut self.except)?;
+        self.banks.push(bank);
+        self.peak_resident = self.peak_resident.max(self.banks.len());
+        Ok(BankInstall::Installed { evicted: None })
+    }
+
+    /// (Re)build `bank`'s serving θ from the live parameters and warm the
+    /// backend (marshal + pre-pack), recording the generation snapshot.
+    fn build(
+        bank: &mut Bank,
+        scenario: usize,
+        ctx: &ServeCtx,
+        except: &mut BitSet,
+    ) -> Result<()> {
+        except.assign(&ctx.scenarios[scenario].classes);
+        ctx.cwr.build_serving(&ctx.sess.m, ctx.params, &mut bank.params, except);
+        bank.src_id = ctx.params.id();
+        bank.src_gen = ctx.params.generation();
+        bank.cwr_gen = ctx.cwr.generation();
+        ctx.sess.warm_infer(&bank.params)
+    }
+
+    /// The resident serving θ for `scenario` (must follow a successful
+    /// [`BankSet::ensure`] for it).
+    pub fn params(&self, scenario: usize) -> &Params {
+        &self
+            .banks
+            .iter()
+            .find(|b| b.scenario == scenario)
+            .expect("bank not resident; call ensure first")
+            .params
+    }
+
+    /// Banks (re)built: every miss, invalidation, or forced rebuild.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Ensures served by a resident, current bank (zero copies).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Banks LRU-evicted to respect the residency bound.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Banks currently resident.
+    pub fn resident(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Most banks ever resident at once.
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::benchmarks::Scenario;
+    use crate::model::{Cwr, ModelSession};
+    use crate::testkit;
+
+    fn scenarios(n: usize) -> Vec<Scenario> {
+        (0..n)
+            .map(|id| Scenario {
+                id,
+                classes: vec![id],
+                seen: (0..=id).collect(),
+                new_pattern: false,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn residency_invalidation_and_lru_eviction() {
+        let be = testkit::refcpu_backend();
+        let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+        let mut params = sess.theta0().unwrap();
+        let cwr = Cwr::new(&sess.m);
+        let scens = scenarios(3);
+        let mut banks = BankSet::new(sess.m.classes, 2);
+
+        let ctx = ServeCtx {
+            sess: &sess,
+            params: &params,
+            cwr: &cwr,
+            scenarios: &scens,
+        };
+        assert_eq!(
+            banks.ensure(0, &ctx, false).unwrap(),
+            BankInstall::Installed { evicted: None }
+        );
+        assert_eq!(banks.ensure(0, &ctx, false).unwrap(), BankInstall::Hit);
+        assert_eq!(
+            banks.ensure(1, &ctx, false).unwrap(),
+            BankInstall::Installed { evicted: None }
+        );
+        assert_eq!(banks.resident(), 2);
+        // scenario 2 exceeds capacity: the LRU bank (scenario 0) goes
+        assert_eq!(
+            banks.ensure(2, &ctx, false).unwrap(),
+            BankInstall::Installed { evicted: Some(0) }
+        );
+        assert_eq!(banks.resident(), 2);
+        assert_eq!(banks.evictions(), 1);
+        assert_eq!(banks.peak_resident(), 2);
+        // resident + unchanged generations: hits, zero rebuilds
+        assert_eq!(banks.ensure(1, &ctx, false).unwrap(), BankInstall::Hit);
+        assert_eq!(banks.ensure(2, &ctx, false).unwrap(), BankInstall::Hit);
+        let rebuilds_before = banks.rebuilds();
+        // the debug knob forces a rebuild without changing content
+        assert_eq!(
+            banks.ensure(2, &ctx, true).unwrap(),
+            BankInstall::Installed { evicted: None }
+        );
+        assert_eq!(banks.rebuilds(), rebuilds_before + 1);
+
+        // a live-θ mutation invalidates every resident bank
+        params.theta_mut()[0] += 1.0;
+        let ctx = ServeCtx {
+            sess: &sess,
+            params: &params,
+            cwr: &cwr,
+            scenarios: &scens,
+        };
+        assert_eq!(
+            banks.ensure(1, &ctx, false).unwrap(),
+            BankInstall::Installed { evicted: None }
+        );
+        assert_eq!(banks.params(1).theta()[0], params.theta()[0]);
+    }
+}

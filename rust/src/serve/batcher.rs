@@ -4,25 +4,38 @@
 //! The infer artifacts are AOT-lowered at a fixed `[batch_infer, d]` shape,
 //! so the seed implementation paid one full-batch execute per request no
 //! matter how few rows the request actually needed.  The batcher packs up
-//! to `capacity_rows` rows from consecutive same-scenario requests into one
-//! execute (remaining rows are zero-padded; the models are row-wise, so
-//! padding rows cannot perturb real rows) and the per-request outputs are
-//! recovered by row spans.
+//! to `capacity_rows` rows into one execute (remaining rows are
+//! zero-padded; the models are row-wise, so padding rows cannot perturb
+//! real rows) and the per-request outputs are recovered by row spans.
+//!
+//! Since the scenario-sharded control plane (PR 5) the batcher no longer
+//! cuts batches at scenario boundaries: the engine keeps one resident
+//! serving θ per active scenario (see [`crate::serve::BankSet`]), so a
+//! batch may hold *mixed-scenario* requests — the engine groups them by
+//! scenario at execute time and scatters each request's predictions
+//! through the right head.  Pop order is delegated to the engine's
+//! [`AdmissionPolicy`] (FIFO or EDF), and the one remaining cut predicate
+//! — row capacity — lives in a single shared function
+//! ([`AdaptiveBatcher::fits`]; the seed duplicated it between its
+//! admission-time `must_flush_before` check and the pop loop).
 //!
 //! Flush rules (checked in virtual time, so they are seed-deterministic):
-//! * the batch is full (`rows_pending == capacity_rows`), or a request
-//!   would overflow it;
-//! * the oldest queued request has waited `window_s` (window 0 degenerates
-//!   to one-request batches — bit-identical to unbatched serving);
+//! * the queue holds at least one full execute's worth of rows
+//!   ([`AdaptiveBatcher::capacity_reached`] — covers both the seed's
+//!   exact-fill and would-overflow triggers);
+//! * *some* queued request has waited `window_s` — the due anchor is the
+//!   queue-wide minimum, not the policy-next request, so EDF's
+//!   re-anchoring on ever-more-urgent arrivals can never starve an old
+//!   request's expired window (window 0 degenerates to one-request
+//!   batches — bit-identical to unbatched serving);
 //! * deadline-aware flush (opt-in via [`AdaptiveBatcher::with_deadline_slack`]):
-//!   the oldest request's SLO deadline minus the service time is about to
-//!   pass — waiting any longer would guarantee a violation, so the window
-//!   is cut short;
-//! * an arriving request belongs to a different scenario than the queued
-//!   ones (serving θ is scenario-dependent);
+//!   some queued request's SLO deadline minus the service time is about
+//!   to pass — waiting any longer would guarantee a violation, so the
+//!   window is cut short;
 //! * the simulation drains the queue (end of stream, or a fine-tuning
 //!   round is about to occupy the device).
 
+use super::admission::AdmissionPolicy;
 use super::queue::{QueuedRequest, RequestQueue};
 
 /// Rows `row0 .. row0 + rows` of the padded batch belong to request
@@ -53,8 +66,8 @@ pub struct AdaptiveBatcher {
     pub window_s: f64,
     /// Feature dimension.
     pub d: usize,
-    /// `Some(service_s)`: cut the window short so the oldest request can
-    /// still meet its `deadline_t` after a `service_s`-long execute.
+    /// `Some(service_s)`: cut the window short so the policy-next request
+    /// can still meet its `deadline_t` after a `service_s`-long execute.
     deadline_slack_s: Option<f64>,
 }
 
@@ -63,64 +76,86 @@ impl AdaptiveBatcher {
         AdaptiveBatcher { capacity_rows, window_s, d, deadline_slack_s: None }
     }
 
-    /// Enable deadline-aware flushing: a batch never waits past the oldest
-    /// request's `deadline_t - slack_s` (but also never flushes before the
-    /// request arrived).
+    /// Enable deadline-aware flushing: a batch never waits past the
+    /// policy-next request's `deadline_t - slack_s` (but also never
+    /// flushes before the request arrived).
     pub fn with_deadline_slack(mut self, slack_s: f64) -> AdaptiveBatcher {
         self.deadline_slack_s = Some(slack_s);
         self
     }
 
-    /// True when the oldest queued request's window (or SLO slack) has
-    /// expired at `now` (its batch must be flushed at `due_t`, `<= now`).
+    /// THE batch-cut predicate: can a `req_rows`-row request join a batch
+    /// already holding `rows` rows?  Shared by the pop loop and the
+    /// capacity flush trigger — the seed duplicated this logic between
+    /// `must_flush_before` and `take_batch`, which is exactly where the
+    /// two paths would have drifted when the redesign dropped the
+    /// scenario-boundary half of the old condition.
+    pub fn fits(&self, rows: usize, req_rows: usize) -> bool {
+        rows + req_rows <= self.capacity_rows
+    }
+
+    /// True when the queue holds at least one full execute of rows: the
+    /// capacity flush trigger (equivalent to the seed's exact-fill and
+    /// would-overflow checks combined, since an arriving request is now
+    /// enqueued *before* the flush decision).
+    pub fn capacity_reached(&self, rows_pending: usize) -> bool {
+        !self.fits(rows_pending, 1)
+    }
+
+    /// True when some queued request's window (or SLO slack) has expired
+    /// at `now` (a batch must be flushed at `due_t`, `<= now`).
     pub fn due(&self, queue: &RequestQueue, now: f64) -> bool {
         self.due_t(queue).is_some_and(|due| due <= now)
     }
 
-    /// Flush deadline of the current batch: the oldest request's arrival +
-    /// window, pulled forward to its SLO deadline minus the service slack
-    /// when deadline-aware flushing is on.
-    pub fn due_t(&self, queue: &RequestQueue) -> Option<f64> {
-        queue.front().map(|r| {
-            let mut due = r.arrival_t + self.window_s;
-            if let Some(slack) = self.deadline_slack_s {
-                due = due.min(r.deadline_t - slack).max(r.arrival_t);
-            }
-            due
-        })
-    }
-
-    /// True when the queue must flush *before* accepting a request of
-    /// `scenario`/`rows` (scenario boundary or row-capacity overflow).
-    pub fn must_flush_before(
-        &self,
-        queue: &RequestQueue,
-        scenario: usize,
-        rows: usize,
-    ) -> bool {
-        match queue.front() {
-            None => false,
-            Some(front) => {
-                front.scenario != scenario
-                    || queue.rows_pending() + rows > self.capacity_rows
-            }
+    /// One request's flush deadline: its arrival + window, pulled forward
+    /// to its SLO deadline minus the service slack when deadline-aware
+    /// flushing is on (but never before the request arrived).
+    fn request_due(&self, r: &QueuedRequest) -> f64 {
+        let mut due = r.arrival_t + self.window_s;
+        if let Some(slack) = self.deadline_slack_s {
+            due = due.min(r.deadline_t - slack).max(r.arrival_t);
         }
+        due
     }
 
-    /// Pop one batch worth of requests: consecutive same-scenario requests
-    /// until row capacity.  Returns an empty vec on an empty queue.
-    pub fn take_batch(&self, queue: &mut RequestQueue) -> Vec<QueuedRequest> {
+    /// Flush deadline of the queue: the *minimum* per-request due time
+    /// over everything queued.  Anchoring on the minimum — not on the
+    /// policy-next request — is what keeps the window guarantee under
+    /// EDF: a stream of ever-more-urgent arrivals re-anchors the policy
+    /// head forever, but the oldest request's expired window still
+    /// forces a flush.  Under FIFO with a uniform SLO the minimum IS the
+    /// front request, so the seed behaviour is unchanged.
+    ///
+    /// The scan is O(queue depth) per call — deliberate: every flush
+    /// already does O(depth · rows · d) pack/execute work, so a few f64
+    /// compares per queued request cannot dominate; a running-min
+    /// structure would only pay off if deadlines stopped being per-pop
+    /// removable (revisit if profiles ever disagree).
+    pub fn due_t(&self, queue: &RequestQueue) -> Option<f64> {
+        queue
+            .iter()
+            .map(|r| self.request_due(r))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Pop one batch worth of requests in policy order until row capacity.
+    /// Scenarios may mix — the engine re-groups them per execute.  Returns
+    /// an empty vec on an empty queue.
+    pub fn take_batch(
+        &self,
+        queue: &mut RequestQueue,
+        policy: &dyn AdmissionPolicy,
+    ) -> Vec<QueuedRequest> {
         let mut batch: Vec<QueuedRequest> = Vec::new();
         let mut rows = 0usize;
-        while let Some(front) = queue.front() {
-            if !batch.is_empty()
-                && (front.scenario != batch[0].scenario
-                    || rows + front.rows > self.capacity_rows)
-            {
+        while let Some(i) = policy.next_index(queue) {
+            let next_rows = queue.get(i).unwrap().rows;
+            if !batch.is_empty() && !self.fits(rows, next_rows) {
                 break;
             }
-            rows += front.rows;
-            batch.push(queue.pop().unwrap());
+            rows += next_rows;
+            batch.push(queue.remove(i).unwrap());
             if rows >= self.capacity_rows {
                 break;
             }
@@ -129,7 +164,8 @@ impl AdaptiveBatcher {
     }
 
     /// Pack `batch` into a zero-padded `[capacity_rows, d]` input, reusing
-    /// `scratch` as the output allocation.
+    /// `scratch` as the output allocation.  All requests must share one
+    /// scenario (the engine packs per scenario group).
     pub fn pack_into(&self, batch: &[QueuedRequest], scratch: &mut Vec<f32>) -> PaddedBatch {
         let mut x = std::mem::take(scratch);
         x.clear();
@@ -139,6 +175,7 @@ impl AdaptiveBatcher {
         for (index, req) in batch.iter().enumerate() {
             debug_assert_eq!(req.x.len(), req.rows * self.d);
             debug_assert!(row + req.rows <= self.capacity_rows, "batch overflow");
+            debug_assert_eq!(req.scenario, batch[0].scenario, "mixed-scenario pack");
             x[row * self.d..(row + req.rows) * self.d].copy_from_slice(&req.x);
             spans.push(BatchSpan { index, row0: row, rows: req.rows });
             row += req.rows;
@@ -162,6 +199,7 @@ pub fn span_rows<'a>(flat: &'a [f32], width: usize, span: &BatchSpan) -> &'a [f3
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::admission::{Edf, Fifo};
 
     fn req(t: f64, scenario: usize, rows: usize, fill: f32) -> QueuedRequest {
         QueuedRequest {
@@ -180,7 +218,7 @@ mod tests {
     }
 
     #[test]
-    fn window_due_anchors_on_oldest() {
+    fn window_due_anchors_on_the_earliest_due_in_the_queue() {
         let b = batcher();
         let mut q = RequestQueue::new();
         assert!(!b.due(&q, 100.0));
@@ -189,6 +227,15 @@ mod tests {
         assert!(!b.due(&q, 14.9));
         assert!(b.due(&q, 15.0));
         assert_eq!(b.due_t(&q), Some(15.0));
+        // the anchor is the queue-wide minimum, independent of pop
+        // policy: an urgent late arrival must not defer the oldest
+        // request's expired window (EDF starvation guard)
+        let mut q = RequestQueue::new();
+        q.push(req(10.0, 1, 2, 0.0)); // due 15.0
+        let mut urgent = req(12.0, 1, 2, 0.0);
+        urgent.deadline_t = 10.5; // inverted: later arrival, earlier due
+        q.push(urgent); // due 17.0
+        assert_eq!(b.due_t(&q), Some(15.0), "oldest window still anchors");
     }
 
     #[test]
@@ -204,25 +251,61 @@ mod tests {
         // slack larger than the whole SLO never flushes before arrival
         let b = batcher().with_deadline_slack(5.0);
         assert_eq!(b.due_t(&q), Some(10.0));
+        // a deadline-tight LATER arrival pulls the queue-wide due below
+        // the front's: the minimum anchor honours it
+        let b = batcher().with_deadline_slack(0.4);
+        let mut q = RequestQueue::new();
+        q.push(req(10.0, 1, 2, 0.0)); // due 10.6
+        let mut tight = req(10.2, 1, 2, 0.0);
+        tight.deadline_t = 10.5; // due = max(10.2, 10.5 - 0.4) = 10.2
+        q.push(tight);
+        assert_eq!(b.due_t(&q), Some(10.2));
     }
 
     #[test]
-    fn scenario_and_capacity_cut_batches() {
+    fn capacity_cuts_batches_but_scenarios_mix() {
         let b = batcher();
+        assert!(b.fits(4, 4), "exactly fills capacity");
+        assert!(!b.fits(4, 5), "overflow");
+        assert!(!b.capacity_reached(7));
+        assert!(b.capacity_reached(8));
+        assert!(b.capacity_reached(9));
+
         let mut q = RequestQueue::new();
         q.push(req(1.0, 1, 4, 0.0));
-        assert!(b.must_flush_before(&q, 2, 1), "scenario boundary");
-        assert!(!b.must_flush_before(&q, 1, 4), "exactly fills capacity");
-        assert!(b.must_flush_before(&q, 1, 5), "overflow");
-
-        q.push(req(2.0, 1, 4, 0.0));
-        q.push(req(3.0, 2, 2, 0.0));
-        let first = b.take_batch(&mut q);
-        assert_eq!(first.len(), 2, "same-scenario requests coalesce");
-        let second = b.take_batch(&mut q);
+        q.push(req(2.0, 2, 2, 0.0)); // different scenario: no longer a cut
+        q.push(req(3.0, 1, 4, 0.0)); // would overflow (4+2+4 > 8)
+        let first = b.take_batch(&mut q, &Fifo);
+        assert_eq!(first.len(), 2, "mixed-scenario requests coalesce");
+        assert_eq!(first[0].scenario, 1);
+        assert_eq!(first[1].scenario, 2);
+        let second = b.take_batch(&mut q, &Fifo);
         assert_eq!(second.len(), 1);
-        assert_eq!(second[0].scenario, 2);
-        assert!(b.take_batch(&mut q).is_empty());
+        assert!(b.take_batch(&mut q, &Fifo).is_empty());
+    }
+
+    #[test]
+    fn edf_pops_deadline_order_without_backfill() {
+        let b = batcher();
+        let mut q = RequestQueue::new();
+        let mut a = req(1.0, 1, 4, 0.0);
+        a.deadline_t = 9.0;
+        let mut c = req(2.0, 2, 6, 0.0);
+        c.deadline_t = 3.0; // most urgent but 6 rows
+        let mut d = req(3.0, 1, 2, 0.0);
+        d.deadline_t = 5.0;
+        q.push(a);
+        q.push(c);
+        q.push(d);
+        // EDF: c (6 rows) then d (2 rows) exactly fill; a waits — strict
+        // deadline order, no backfilling around the capacity cut.
+        let batch = b.take_batch(&mut q, &Edf);
+        assert_eq!(
+            batch.iter().map(|r| r.arrival_t).collect::<Vec<_>>(),
+            vec![2.0, 3.0]
+        );
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.front().unwrap().arrival_t, 1.0);
     }
 
     #[test]

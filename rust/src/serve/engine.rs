@@ -1,37 +1,58 @@
-//! The serving engine: glue between the event stream and
-//! [`ModelSession`].  Owns the request queue, the adaptive batcher, the
-//! latency/SLO ledger, the tune-vs-serve scheduler, and the cached
-//! bank-installed serving θ (moved here from `sim::run` — the serving
-//! parameters are a serving-engine concern).
+//! The event-driven serving control plane.
 //!
-//! The engine is backend-agnostic: every execute goes through the
-//! session's [`crate::runtime::Backend`], so the same batched serving path
-//! runs on PJRT artifacts and on the pure-Rust reference executor
-//! (`tests/serving_engine.rs` asserts batch-composition independence on a
-//! *really executing* backend in CI).
+//! The seed engine was simulation-shaped: `submit`/`pump`/`drain` returned
+//! flat `Vec<ServedRequest>`s, admission was implicit (everything entered
+//! an unbounded FIFO), and one private single-slot `ServingCache` meant
+//! every scenario change rebuilt the serving θ.  PR 5 redesigns the public
+//! API around two verbs:
+//!
+//! * [`ServeEngine::on_arrival`]`(req) -> `[`Admission`] — the admission
+//!   decision at the arrival instant: `Accepted` (queued) or
+//!   `Dropped{reason}` under the shedding policy (`--max-queue` depth cap,
+//!   optional SLO-infeasibility test);
+//! * [`ServeEngine::poll`]`(now, ctx) -> Vec<`[`ServeEvent`]`>` — advance
+//!   virtual time: flush every batch that is due or at capacity and
+//!   report what happened (`RequestServed`, `RequestDropped`,
+//!   `BatchExecuted`, `BankInstalled`).  [`ServeEngine::drain`] is the
+//!   same loop unconditioned on due times (end of stream, or a
+//!   fine-tuning round is about to occupy the device).
+//!
+//! Queue order comes from the [`AdmissionPolicy`] (`--queue-policy
+//! fifo|edf`); serving θ comes from the [`BankSet`] — one resident
+//! bank-installed θ per active scenario — so the batcher composes
+//! *mixed-scenario* batches and the engine groups them by scenario at
+//! execute time, scattering per-request predictions through the right
+//! head with zero rebuilds once the banks are warm.
+//!
+//! The engine stays backend-agnostic: every execute goes through the
+//! session's [`crate::runtime::Backend`], so the same control plane runs
+//! on PJRT artifacts and the pure-Rust reference executor
+//! (`tests/serving_engine.rs` drives it against a *really executing*
+//! backend in CI).
 //!
 //! Three operating modes, all seed-deterministic:
 //!
-//! * **direct** (`--no-batching`): every request executes immediately on
-//!   arrival with a full `batch_infer`-row test draw — structurally the
-//!   pre-engine request path, kept as the equivalence baseline;
-//! * **window 0** (the default): requests route through the queue and
-//!   batcher but every batch degenerates to one request — reports are
-//!   bit-identical to the direct path (and to the pre-engine seed);
-//! * **window > 0**: requests draw fewer rows, wait up to the virtual-time
-//!   window, and consecutive same-scenario requests share one padded
-//!   execute; per-request latency = queueing delay + batched service time.
+//! * **direct** (`--no-batching`): full `batch_infer`-row draws; every
+//!   request fills an execute, so each poll after an arrival serves it
+//!   immediately — structurally the pre-engine request path;
+//! * **window 0** (the default): same row economics through the queue +
+//!   batcher; with FIFO and no shedding, reports are bit-identical to the
+//!   direct path (and to the pre-redesign engine);
+//! * **window > 0**: requests draw fewer rows, wait up to the
+//!   virtual-time window, and share padded executes per scenario group;
+//!   per-request latency = queueing delay + batched service time.
 
 use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::bitset::BitSet;
 use crate::cost::device::DeviceModel;
 use crate::data::benchmarks::Scenario;
 use crate::model::{Cwr, ModelSession, Params};
 use crate::runtime::artifact::ModelManifest;
 
+use super::admission::{Admission, AdmissionPolicy, DropReason, ShedPolicy};
+use super::banks::{BankInstall, BankSet};
 use super::batcher::AdaptiveBatcher;
 use super::latency::{LatencyModel, LatencySummary};
 use super::queue::{QueuedRequest, RequestQueue};
@@ -45,43 +66,16 @@ fn debug_enabled() -> bool {
     *DEBUG.get_or_init(|| std::env::var_os("ETUNER_DEBUG").is_some())
 }
 
-/// Cached bank-installed serving parameters + the generation snapshot they
-/// were built from.  While the snapshot matches, serving reuses the cached
-/// θ outright (no clone, no head surgery, and — via the session's literal
-/// cache — no re-marshal).
-struct ServingCache {
-    params: Option<Params>,
-    src_id: u64,
-    src_gen: u64,
-    cwr_gen: u64,
-    scenario: usize,
-    /// scratch: live-scenario classes excluded from the bank install.
-    except: BitSet,
-    rebuilds: u64,
-    hits: u64,
-}
-
-impl ServingCache {
-    fn new(classes: usize) -> ServingCache {
-        ServingCache {
-            params: None,
-            src_id: 0,
-            src_gen: 0,
-            cwr_gen: 0,
-            scenario: usize::MAX,
-            except: BitSet::new(classes),
-            rebuilds: 0,
-            hits: 0,
-        }
-    }
-
-    fn is_valid(&self, src: &Params, cwr: &Cwr, scenario: usize) -> bool {
-        self.params.is_some()
-            && self.src_id == src.id()
-            && self.src_gen == src.generation()
-            && self.cwr_gen == cwr.generation()
-            && self.scenario == scenario
-    }
+/// Everything the control plane needs to execute a batch, borrowed from
+/// the simulation for the duration of one `poll`/`drain` call.  Bundling
+/// the borrows keeps the public API two-argument and lets library users
+/// drive the engine without a [`crate::sim::Simulation`].
+pub struct ServeCtx<'a, 'b> {
+    pub sess: &'a ModelSession<'b>,
+    /// The live (training) parameters banks are built from.
+    pub params: &'a Params,
+    pub cwr: &'a Cwr,
+    pub scenarios: &'a [Scenario],
 }
 
 /// One completed request, in service order.
@@ -98,24 +92,55 @@ pub struct ServedRequest {
     pub latency_s: f64,
     /// Requests sharing this request's execute (1 = unbatched).
     pub batch_requests: usize,
-    /// Requests still queued when this one was served.
+    /// Requests still waiting when this one was served: queued, plus
+    /// flush-mates in later scenario groups of the same mixed flush.
     pub queue_depth: usize,
+    /// Completion passed the request's own `deadline_t`.
+    pub deadline_miss: bool,
 }
 
-/// Serving engine state (one per simulation).
+/// What a [`ServeEngine::poll`]/[`ServeEngine::drain`] call observed.
+#[derive(Clone, Debug)]
+pub enum ServeEvent {
+    /// A request completed (the only event the simulation consumes —
+    /// accuracies and energy scores flow to the report and the
+    /// scenario-change detector in service order).
+    RequestServed(ServedRequest),
+    /// A request was shed at arrival; reported by the next poll so the
+    /// event stream is complete.
+    RequestDropped {
+        arrival_t: f64,
+        scenario: usize,
+        deadline_t: f64,
+        reason: DropReason,
+    },
+    /// One padded artifact execution ran at `t` for `requests` requests
+    /// (`rows` real rows) of `scenario`.
+    BatchExecuted { t: f64, scenario: usize, requests: usize, rows: usize },
+    /// A scenario's serving θ was (re)built and warm-packed; `evicted`
+    /// names the scenario whose bank was LRU-evicted, if any.
+    BankInstalled { scenario: usize, evicted: Option<usize> },
+}
+
+/// Serving control-plane state (one per simulation).
 pub struct ServeEngine {
-    batching: bool,
     rows_per_request: usize,
     slo_s: f64,
     batcher: AdaptiveBatcher,
     queue: RequestQueue,
+    policy: Box<dyn AdmissionPolicy>,
+    shed: ShedPolicy,
     latency: LatencyModel,
     scheduler: Scheduler,
-    serving: ServingCache,
+    banks: BankSet,
     disable_serving_cache: bool,
     scratch: Vec<f32>,
+    /// Events recorded between polls (drops at arrival time).
+    pending: Vec<ServeEvent>,
     executes: u64,
     served: u64,
+    drops_queue_full: u64,
+    drops_slo_infeasible: u64,
 }
 
 impl ServeEngine {
@@ -126,43 +151,49 @@ impl ServeEngine {
         direct: bool,
         disable_serving_cache: bool,
     ) -> ServeEngine {
-        // `direct` is the only bypass: window 0 still routes through the
-        // queue + batcher (each full-draw request fills the batch exactly,
-        // so it flushes inside `submit` — bit-identical to direct serving,
-        // but exercising the real pack/scatter machinery).
-        let batching = !direct;
-        let rows_per_request = if direct {
-            m.batch_infer
+        // `direct` forces the degenerate economics: full-draw requests
+        // with a zero window fill and flush their own execute at the
+        // arrival instant — bit-identical to the pre-engine request path,
+        // but exercising the real admission/pack/scatter machinery.
+        let (rows_per_request, window_s) = if direct {
+            (m.batch_infer, 0.0)
         } else {
-            cfg.rows_per_request(m.batch_infer)
+            (cfg.rows_per_request(m.batch_infer), cfg.batch_window_s)
         };
         let latency = LatencyModel::new(device, m, cfg.slo_s());
-        // never coalesce past the point where the oldest request's SLO
-        // deadline could still be met after one execute
-        let batcher = AdaptiveBatcher::new(m.batch_infer, cfg.batch_window_s, m.d)
+        // never coalesce past the point where the policy-next request's
+        // SLO deadline could still be met after one execute
+        let batcher = AdaptiveBatcher::new(m.batch_infer, window_s, m.d)
             .with_deadline_slack(latency.exec_s());
         ServeEngine {
-            batching,
             rows_per_request,
             slo_s: cfg.slo_s(),
             batcher,
             queue: RequestQueue::new(),
+            policy: cfg.queue_policy.build(),
+            shed: ShedPolicy {
+                max_queue: cfg.max_queue,
+                shed_infeasible: cfg.shed_infeasible,
+            },
             latency,
             scheduler: Scheduler::new(cfg.defer_backlog, cfg.max_defers),
-            serving: ServingCache::new(m.classes),
+            banks: BankSet::new(m.classes, cfg.bank_capacity),
             disable_serving_cache,
             scratch: Vec::new(),
+            pending: Vec::new(),
             executes: 0,
             served: 0,
+            drops_queue_full: 0,
+            drops_slo_infeasible: 0,
         }
     }
 
-    /// Rows the simulation must draw per inference request.
+    /// Rows the caller must draw per inference request.
     pub fn rows_per_request(&self) -> usize {
         self.rows_per_request
     }
 
-    /// Latency deadline for a request arriving at `t`.
+    /// Latency deadline for a request arriving at `t` under the SLO.
     pub fn deadline(&self, t: f64) -> f64 {
         t + self.slo_s
     }
@@ -187,12 +218,55 @@ impl ServeEngine {
         self.latency.summary()
     }
 
-    pub fn serving_rebuilds(&self) -> u64 {
-        self.serving.rebuilds
+    /// Per-scenario latency digests (ascending scenario order).
+    pub fn per_scenario_latency(&self) -> Vec<crate::metrics::ScenarioLatency> {
+        self.latency.per_scenario()
     }
 
+    /// Served requests whose completion passed their own deadline.
+    pub fn deadline_misses(&self) -> u64 {
+        self.latency.deadline_misses()
+    }
+
+    /// Bank (re)builds — the old single-slot cache's "rebuilds" counter,
+    /// now summed over every resident bank.
+    pub fn serving_rebuilds(&self) -> u64 {
+        self.banks.rebuilds()
+    }
+
+    /// Ensures served by a resident, current bank.
     pub fn serving_hits(&self) -> u64 {
-        self.serving.hits
+        self.banks.hits()
+    }
+
+    pub fn bank_evictions(&self) -> u64 {
+        self.banks.evictions()
+    }
+
+    pub fn banks_resident(&self) -> usize {
+        self.banks.resident()
+    }
+
+    pub fn banks_peak_resident(&self) -> usize {
+        self.banks.peak_resident()
+    }
+
+    /// The ordering policy's name (`"fifo"` / `"edf"`).
+    pub fn queue_policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn drops_queue_full(&self) -> u64 {
+        self.drops_queue_full
+    }
+
+    pub fn drops_slo_infeasible(&self) -> u64 {
+        self.drops_slo_infeasible
+    }
+
+    /// Requests shed at arrival, all reasons.
+    pub fn requests_dropped(&self) -> u64 {
+        self.drops_queue_full + self.drops_slo_infeasible
     }
 
     /// Padded artifact executions performed so far.
@@ -210,94 +284,186 @@ impl ServeEngine {
         }
     }
 
-    /// Flush every batch whose window expired by `now` (called before each
-    /// event so service order follows virtual time).
-    pub fn pump(
+    /// Admission decision for one arriving request.  Accepted requests
+    /// enter the queue (their test rows are already drawn — sampling at
+    /// arrival keeps the world RNG stream in event order); dropped
+    /// requests never execute, and the drop is reported by the next
+    /// [`ServeEngine::poll`] as a [`ServeEvent::RequestDropped`].
+    pub fn on_arrival(&mut self, req: QueuedRequest) -> Admission {
+        let earliest_done = self
+            .scheduler
+            .earliest_completion(req.arrival_t, self.latency.exec_s());
+        let verdict =
+            self.policy.admit(&req, self.queue.len(), &self.shed, earliest_done);
+        match verdict {
+            Admission::Accepted => self.queue.push(req),
+            Admission::Dropped { reason } => {
+                match reason {
+                    DropReason::QueueFull => self.drops_queue_full += 1,
+                    DropReason::SloInfeasible => self.drops_slo_infeasible += 1,
+                }
+                if debug_enabled() {
+                    eprintln!(
+                        "[dbg] t={:.0} scen={} DROP {}",
+                        req.arrival_t,
+                        req.scenario,
+                        reason.name()
+                    );
+                }
+                self.pending.push(ServeEvent::RequestDropped {
+                    arrival_t: req.arrival_t,
+                    scenario: req.scenario,
+                    deadline_t: req.deadline_t,
+                    reason,
+                });
+            }
+        }
+        verdict
+    }
+
+    /// Advance virtual time to `now`: flush every batch whose window (or
+    /// SLO slack) expired, and every full batch, in policy order.  Call
+    /// before consuming each event-stream entry and after each arrival so
+    /// service order follows virtual time.
+    pub fn poll(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        let mut out = std::mem::take(&mut self.pending);
+        let result = self.poll_inner(now, ctx, &mut out);
+        self.finish_events(out, result)
+    }
+
+    fn poll_inner(
         &mut self,
         now: f64,
-        sess: &ModelSession,
-        params: &Params,
-        cwr: &Cwr,
-        scenarios: &[Scenario],
-    ) -> Result<Vec<ServedRequest>> {
-        let mut out = Vec::new();
-        while self.batcher.due(&self.queue, now) {
-            let due = self.batcher.due_t(&self.queue).unwrap();
-            let batch = self.batcher.take_batch(&mut self.queue);
-            out.extend(self.serve_batch(batch, due, sess, params, cwr, scenarios)?);
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        loop {
+            let due_t = self.batcher.due_t(&self.queue);
+            let t = match due_t {
+                Some(d) if d <= now => d,
+                _ if self.batcher.capacity_reached(self.queue.rows_pending()) => now,
+                _ => return Ok(()),
+            };
+            let batch = self.batcher.take_batch(&mut self.queue, self.policy.as_ref());
+            if batch.is_empty() {
+                return Ok(());
+            }
+            self.serve_flush(batch, t, ctx, out)?;
         }
-        Ok(out)
     }
 
-    /// Accept one arriving request; returns any requests served as a
-    /// consequence (immediately in direct/window-0 mode, on capacity or
-    /// scenario boundaries otherwise).
-    pub fn submit(
+    /// Serve everything still queued at `now` regardless of windows (end
+    /// of stream, or a fine-tuning round is about to occupy the device).
+    pub fn drain(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        let mut out = std::mem::take(&mut self.pending);
+        let result = (|| -> Result<()> {
+            while !self.queue.is_empty() {
+                let batch =
+                    self.batcher.take_batch(&mut self.queue, self.policy.as_ref());
+                if batch.is_empty() {
+                    // a custom policy may decline to pick (next_index
+                    // None on a non-empty queue): stop rather than spin
+                    return Ok(());
+                }
+                self.serve_flush(batch, now, ctx, &mut out)?;
+            }
+            Ok(())
+        })();
+        self.finish_events(out, result)
+    }
+
+    /// On success hand the events to the caller; on failure re-stash them
+    /// so the stream stays complete — their side effects (latency charges,
+    /// served/executed counters) already persist in engine state, and a
+    /// mid-flush backend error must not silently swallow the events of
+    /// groups that did serve (or buffered drops) before it.
+    fn finish_events(
         &mut self,
-        req: QueuedRequest,
-        sess: &ModelSession,
-        params: &Params,
-        cwr: &Cwr,
-        scenarios: &[Scenario],
-    ) -> Result<Vec<ServedRequest>> {
-        let arrival_t = req.arrival_t;
-        if !self.batching {
-            return self.serve_batch(vec![req], arrival_t, sess, params, cwr, scenarios);
+        out: Vec<ServeEvent>,
+        result: Result<()>,
+    ) -> Result<Vec<ServeEvent>> {
+        match result {
+            Ok(()) => Ok(out),
+            Err(e) => {
+                self.pending = out;
+                Err(e)
+            }
         }
-        let mut out = Vec::new();
-        if self.batcher.must_flush_before(&self.queue, req.scenario, req.rows) {
-            let batch = self.batcher.take_batch(&mut self.queue);
-            out.extend(self.serve_batch(batch, arrival_t, sess, params, cwr, scenarios)?);
-        }
-        self.queue.push(req);
-        if self.queue.rows_pending() >= self.batcher.capacity_rows {
-            let batch = self.batcher.take_batch(&mut self.queue);
-            out.extend(self.serve_batch(batch, arrival_t, sess, params, cwr, scenarios)?);
-        }
-        Ok(out)
     }
 
-    /// Serve everything still queued at `now` (end of stream, or a
-    /// fine-tuning round is about to occupy the device).
-    pub fn drain(
-        &mut self,
-        now: f64,
-        sess: &ModelSession,
-        params: &Params,
-        cwr: &Cwr,
-        scenarios: &[Scenario],
-    ) -> Result<Vec<ServedRequest>> {
-        let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let batch = self.batcher.take_batch(&mut self.queue);
-            out.extend(self.serve_batch(batch, now, sess, params, cwr, scenarios)?);
-        }
-        Ok(out)
-    }
-
-    /// Execute one batch due at `due`: ensure the bank-installed serving θ,
-    /// pack + pad, run the artifact once, scatter predictions and energy
-    /// scores back per request, and charge latency.
-    fn serve_batch(
+    /// Execute one flushed batch due at `due`: group by scenario (first
+    /// appearance order — the service order within the flush) and run one
+    /// padded execute per group against that scenario's resident bank θ.
+    fn serve_flush(
         &mut self,
         batch: Vec<QueuedRequest>,
         due: f64,
-        sess: &ModelSession,
-        params: &Params,
-        cwr: &Cwr,
-        scenarios: &[Scenario],
-    ) -> Result<Vec<ServedRequest>> {
-        if batch.is_empty() {
-            return Ok(Vec::new());
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        let mut groups: Vec<(usize, Vec<QueuedRequest>)> = Vec::new();
+        for req in batch {
+            match groups.iter_mut().find(|(s, _)| *s == req.scenario) {
+                Some((_, g)) => g.push(req),
+                None => groups.push((req.scenario, vec![req])),
+            }
         }
-        let scenario = batch[0].scenario;
-        debug_assert!(batch.iter().all(|r| r.scenario == scenario));
-        self.ensure_serving(scenario, sess, params, cwr, scenarios)?;
-        let packed = self.batcher.pack_into(&batch, &mut self.scratch);
-        let serving = self.serving.params.as_ref().unwrap();
+        // flush-mates in later scenario groups were popped from the queue
+        // but serve strictly after this group's execute — count them as
+        // still waiting so `queue_depth` keeps its pre-PR5 meaning
+        // (requests pending when this one was served).
+        let mut waiting: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        let mut idx = 0;
+        while idx < groups.len() {
+            let (scenario, group) = &groups[idx];
+            waiting -= group.len();
+            // A standalone caller may poll() long after arrivals, so a
+            // window-due flush time can predate batch members that
+            // arrived after the anchor's window opened; service cannot
+            // start before a request exists.  Clamp per scenario group
+            // so a late arrival in one group never inflates another
+            // group's service start.  (The simulator polls at every
+            // arrival, so there this is a no-op and flush times are
+            // unchanged.)
+            let t = group.iter().fold(due, |d, r| d.max(r.arrival_t));
+            if let Err(e) = self.serve_group(*scenario, group, t, waiting, ctx, out)
+            {
+                // serve_group is all-or-nothing (the fallible execute
+                // precedes every per-request record), so the failing and
+                // later groups are entirely unserved: put them back so a
+                // recovering caller can retry — no request is ever lost.
+                let unserved: Vec<QueuedRequest> =
+                    groups.drain(idx..).flat_map(|(_, g)| g).collect();
+                self.queue.requeue_front(unserved);
+                return Err(e);
+            }
+            idx += 1;
+        }
+        Ok(())
+    }
+
+    /// One padded execute for a same-scenario group: ensure the resident
+    /// bank θ, pack + pad, run the artifact once, scatter predictions and
+    /// energy scores back per request, and charge latency.
+    fn serve_group(
+        &mut self,
+        scenario: usize,
+        group: &[QueuedRequest],
+        due: f64,
+        flush_waiting: usize,
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        match self.banks.ensure(scenario, ctx, self.disable_serving_cache)? {
+            BankInstall::Hit => {}
+            BankInstall::Installed { evicted } => {
+                out.push(ServeEvent::BankInstalled { scenario, evicted });
+            }
+        }
+        let packed = self.batcher.pack_into(group, &mut self.scratch);
         // ONE artifact execution serves every coalesced request's
-        // prediction and OOD energy score.
-        let logits = sess.infer(serving, &packed.x)?;
+        // prediction and OOD energy score, through this scenario's head.
+        let logits = ctx.sess.infer(self.banks.params(scenario), &packed.x)?;
         self.scratch = packed.x;
         let pred = logits.argmax_rows();
         let lse = logits.logsumexp_rows();
@@ -306,10 +472,16 @@ impl ServeEngine {
         let service_start = self.scheduler.admit_serve(due, exec_s);
         self.latency.charge_execute(exec_s);
         self.executes += 1;
-        let queue_depth = self.queue.len();
-        let batch_requests = batch.len();
-        let mut out = Vec::with_capacity(batch_requests);
-        for (req, span) in batch.iter().zip(&packed.spans) {
+        out.push(ServeEvent::BatchExecuted {
+            t: service_start,
+            scenario,
+            requests: group.len(),
+            rows: packed.rows_used,
+        });
+        let queue_depth = self.queue.len() + flush_waiting;
+        let batch_requests = group.len();
+        let completion = service_start + exec_s;
+        for (req, span) in group.iter().zip(&packed.spans) {
             let rows = span.row0..span.row0 + span.rows;
             let correct = pred[rows.clone()]
                 .iter()
@@ -320,8 +492,13 @@ impl ServeEngine {
             let row_lse = &lse[rows];
             let score = row_lse.iter().map(|&s| -s as f64).sum::<f64>()
                 / row_lse.len() as f64;
-            let latency_s =
-                self.latency.observe(service_start - req.arrival_t, exec_s);
+            let deadline_miss = completion > req.deadline_t;
+            let latency_s = self.latency.observe(
+                scenario,
+                service_start - req.arrival_t,
+                exec_s,
+                deadline_miss,
+            );
             if debug_enabled() {
                 let (t, scenario, acc, mean_score) =
                     (req.arrival_t, req.scenario, acc, score);
@@ -330,7 +507,7 @@ impl ServeEngine {
                 );
             }
             self.served += 1;
-            out.push(ServedRequest {
+            out.push(ServeEvent::RequestServed(ServedRequest {
                 arrival_t: req.arrival_t,
                 scenario: req.scenario,
                 accuracy: acc,
@@ -339,48 +516,9 @@ impl ServeEngine {
                 latency_s,
                 batch_requests,
                 queue_depth,
-            });
+                deadline_miss,
+            }));
         }
-        Ok(out)
-    }
-
-    /// Serve with the consolidated head for past classes, keeping the live
-    /// training rows for classes of the current scenario.  The
-    /// bank-installed θ is cached: flushes between parameter/bank changes
-    /// reuse it with zero copies.
-    ///
-    /// Every rebuild ends with [`ModelSession::warm_infer`], which
-    /// marshals the serving θ *and* pre-builds the backend's packed
-    /// forward panels for it — packs install together with the CWR bank,
-    /// so steady-state request serving never marshals and never packs.
-    fn ensure_serving(
-        &mut self,
-        scenario: usize,
-        sess: &ModelSession,
-        params: &Params,
-        cwr: &Cwr,
-        scenarios: &[Scenario],
-    ) -> Result<()> {
-        let cache_ok = !self.disable_serving_cache
-            && self.serving.is_valid(params, cwr, scenario);
-        if cache_ok {
-            self.serving.hits += 1;
-            return Ok(());
-        }
-        self.serving.rebuilds += 1;
-        if self.serving.params.is_none() {
-            // first request: allocate the slot (keeps its id for good)
-            self.serving.params = Some(params.clone());
-        } else {
-            self.serving.params.as_mut().unwrap().copy_from(params);
-        }
-        self.serving.except.assign(&scenarios[scenario].classes);
-        let p = self.serving.params.as_mut().unwrap();
-        cwr.install_except(&sess.m, p, &self.serving.except);
-        self.serving.src_id = params.id();
-        self.serving.src_gen = params.generation();
-        self.serving.cwr_gen = cwr.generation();
-        self.serving.scenario = scenario;
-        sess.warm_infer(self.serving.params.as_ref().unwrap())
+        Ok(())
     }
 }

@@ -8,9 +8,19 @@
 //! Latencies are recorded in service order; percentiles are nearest-rank
 //! over the full sample set (request counts are small enough that a digest
 //! approximation would only add noise).
+//!
+//! Since the scenario-sharded control plane (PR 5) the ledger also keys
+//! every observation by scenario — mixed-scenario load means one
+//! scenario's burst can starve another's tail, which a global percentile
+//! hides — and tracks *deadline misses* separately from SLO violations:
+//! with crafted per-request deadlines (the EDF path) a request can miss
+//! its own deadline while staying under the global SLO, and vice versa.
+
+use std::collections::BTreeMap;
 
 use crate::cost::device::DeviceModel;
 use crate::cost::flops;
+use crate::metrics::ScenarioLatency;
 use crate::runtime::artifact::ModelManifest;
 
 /// End-of-run latency/SLO digest (all times in milliseconds).
@@ -26,6 +36,13 @@ pub struct LatencySummary {
     pub attainment: f64,
 }
 
+/// Per-scenario slice of the ledger.
+#[derive(Clone, Debug, Default)]
+struct ScenarioLedger {
+    latencies_s: Vec<f64>,
+    deadline_misses: u64,
+}
+
 /// Serving-side cost model + latency ledger.
 #[derive(Clone, Debug)]
 pub struct LatencyModel {
@@ -35,8 +52,12 @@ pub struct LatencyModel {
     slo_s: f64,
     latencies_s: Vec<f64>,
     violations: u64,
+    deadline_misses: u64,
     queue_delay_total_s: f64,
     service_total_s: f64,
+    /// scenario -> its own latency samples + miss count (BTreeMap keeps
+    /// report emission deterministic).
+    per_scenario: BTreeMap<usize, ScenarioLedger>,
 }
 
 impl LatencyModel {
@@ -46,8 +67,10 @@ impl LatencyModel {
             slo_s,
             latencies_s: Vec::new(),
             violations: 0,
+            deadline_misses: 0,
             queue_delay_total_s: 0.0,
             service_total_s: 0.0,
+            per_scenario: BTreeMap::new(),
         }
     }
 
@@ -66,14 +89,28 @@ impl LatencyModel {
         self.service_total_s += service_s;
     }
 
-    /// Record one served request; returns its end-to-end latency (s).
-    pub fn observe(&mut self, queue_delay_s: f64, service_s: f64) -> f64 {
+    /// Record one served request of `scenario`; returns its end-to-end
+    /// latency (s).  `deadline_missed` is computed by the engine from the
+    /// request's own `deadline_t` (which need not be `arrival + SLO`).
+    pub fn observe(
+        &mut self,
+        scenario: usize,
+        queue_delay_s: f64,
+        service_s: f64,
+        deadline_missed: bool,
+    ) -> f64 {
         debug_assert!(queue_delay_s >= 0.0, "negative queue delay");
         let latency = queue_delay_s + service_s;
         self.latencies_s.push(latency);
         self.queue_delay_total_s += queue_delay_s;
         if latency > self.slo_s {
             self.violations += 1;
+        }
+        let led = self.per_scenario.entry(scenario).or_default();
+        led.latencies_s.push(latency);
+        if deadline_missed {
+            led.deadline_misses += 1;
+            self.deadline_misses += 1;
         }
         latency
     }
@@ -84,6 +121,11 @@ impl LatencyModel {
 
     pub fn violations(&self) -> u64 {
         self.violations
+    }
+
+    /// Served requests whose completion passed their own `deadline_t`.
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses
     }
 
     /// Total virtual time requests spent waiting for the device.
@@ -111,6 +153,28 @@ impl LatencyModel {
         let mut sorted = self.latencies_s.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         sorted[Self::rank(p, sorted.len())] * 1e3
+    }
+
+    /// Per-scenario latency digests in ascending scenario order
+    /// ([`crate::metrics::Report::per_scenario_latency`]).
+    pub fn per_scenario(&self) -> Vec<ScenarioLatency> {
+        self.per_scenario
+            .iter()
+            .map(|(&scenario, led)| {
+                let n = led.latencies_s.len();
+                let mut sorted = led.latencies_s.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let mean = sorted.iter().sum::<f64>() / n.max(1) as f64;
+                ScenarioLatency {
+                    scenario,
+                    requests: n as u64,
+                    mean_ms: mean * 1e3,
+                    p95_ms: sorted[Self::rank(95.0, n)] * 1e3,
+                    max_ms: sorted.last().copied().unwrap_or(0.0) * 1e3,
+                    deadline_misses: led.deadline_misses,
+                }
+            })
+            .collect()
     }
 
     pub fn summary(&self) -> LatencySummary {
@@ -144,8 +208,10 @@ mod tests {
             slo_s,
             latencies_s: Vec::new(),
             violations: 0,
+            deadline_misses: 0,
             queue_delay_total_s: 0.0,
             service_total_s: 0.0,
+            per_scenario: BTreeMap::new(),
         }
     }
 
@@ -153,7 +219,7 @@ mod tests {
     fn percentiles_are_nearest_rank() {
         let mut lm = model(1.0);
         for i in 1..=100 {
-            lm.observe(i as f64 * 1e-3, 0.0);
+            lm.observe(0, i as f64 * 1e-3, 0.0, false);
         }
         assert!((lm.percentile_ms(50.0) - 50.0).abs() < 1e-9);
         assert!((lm.percentile_ms(95.0) - 95.0).abs() < 1e-9);
@@ -166,13 +232,33 @@ mod tests {
     #[test]
     fn slo_violations_counted_strictly_above() {
         let mut lm = model(0.050);
-        lm.observe(0.049, 0.0);
-        lm.observe(0.050, 0.0); // exactly at SLO: not a violation
-        lm.observe(0.051, 0.0);
-        lm.observe(0.200, 0.0);
+        lm.observe(1, 0.049, 0.0, false);
+        lm.observe(1, 0.050, 0.0, false); // exactly at SLO: not a violation
+        lm.observe(1, 0.051, 0.0, true);
+        lm.observe(2, 0.200, 0.0, true);
         assert_eq!(lm.violations(), 2);
+        assert_eq!(lm.deadline_misses(), 2);
         let s = lm.summary();
         assert!((s.attainment - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_scenario_ledgers_split_the_samples() {
+        let mut lm = model(0.100);
+        lm.observe(3, 0.010, 0.0, false);
+        lm.observe(1, 0.020, 0.0, true);
+        lm.observe(3, 0.030, 0.0, false);
+        let per = lm.per_scenario();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].scenario, 1, "ascending scenario order");
+        assert_eq!(per[0].requests, 1);
+        assert_eq!(per[0].deadline_misses, 1);
+        assert!((per[0].mean_ms - 20.0).abs() < 1e-9);
+        assert_eq!(per[1].scenario, 3);
+        assert_eq!(per[1].requests, 2);
+        assert!((per[1].mean_ms - 20.0).abs() < 1e-9);
+        assert!((per[1].max_ms - 30.0).abs() < 1e-9);
+        assert_eq!(per[1].deadline_misses, 0);
     }
 
     #[test]

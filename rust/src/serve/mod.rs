@@ -1,44 +1,64 @@
-//! # The serving engine (cross-request batching + latency/SLO accounting)
+//! # The serving control plane (scenario-sharded batching, admission,
+//! latency/SLO accounting)
 //!
 //! EdgeOL's deployment premise is *in-situ online learning*: one edge
 //! accelerator both serves streaming inference requests and fine-tunes the
 //! deployed model.  The seed implementation executed one fixed-shape
 //! artifact per request with no notion of queueing, latency, or contention
 //! with fine-tuning rounds.  This module is the subsystem between the
-//! event stream and [`crate::model::ModelSession`]:
+//! event stream and [`crate::model::ModelSession`] — since PR 5 an
+//! *event-driven control plane* (`on_arrival`/`poll` instead of the old
+//! push-based `submit`/`pump`/`drain`), reusable as a library API:
 //!
+//! * [`admission`] — [`Admission`] verdicts under a shedding policy
+//!   (`--max-queue` depth cap, optional SLO-infeasibility drop) and the
+//!   [`AdmissionPolicy`] queue ordering (`--queue-policy fifo|edf`:
+//!   earliest-deadline-first across scenarios);
 //! * [`queue`] — pending requests with arrival times, deadlines, and their
 //!   already-drawn test rows (sampling at arrival keeps the world RNG
-//!   stream in event order);
-//! * [`batcher`] — coalesces consecutive same-scenario requests into one
+//!   stream in event order), with positional access for policy pops;
+//! * [`batcher`] — coalesces queued requests (scenarios may mix) into one
 //!   padded `[batch_infer, d]` execute within a virtual-time window, and
 //!   scatters per-request predictions/energy scores back out;
+//! * [`banks`] — the [`BankSet`]: an LRU-bounded map of scenario →
+//!   resident bank-installed serving θ (warm-packed on install, released
+//!   on eviction), so mixed-scenario bursts share executes with zero
+//!   serving rebuilds after warm-up;
 //! * [`latency`] — queueing delay + batched service time priced through
-//!   [`crate::cost::device::DeviceModel`]; p50/p95/p99 digests and
-//!   SLO-violation counts;
+//!   [`crate::cost::device::DeviceModel`]; global and per-scenario
+//!   p50/p95/p99 digests, SLO-violation and deadline-miss counts;
 //! * [`scheduler`] — arbitrates the single device between fine-tuning
 //!   rounds and inference bursts: requests arriving mid-round pay the
 //!   delay, and a triggered round can be deferred under backlog (bounded
 //!   by a starvation cap), feeding LazyTune's request-pressure term a real
 //!   queue depth;
-//! * [`engine`] — the glue object the simulation drives (`submit`/`pump`/
-//!   `drain`), which also owns the cached bank-installed serving θ.
+//! * [`engine`] — the control plane itself: [`ServeEngine::on_arrival`]
+//!   admits or sheds, [`ServeEngine::poll`] advances virtual time and
+//!   returns [`ServeEvent`]s.
 //!
 //! **Determinism contract:** everything here runs in virtual time off the
-//! seeded event stream.  With `batch_window_s == 0` every batch holds
-//! exactly one full-draw request and reports are bit-identical to the
-//! pre-engine serving path (enforced by `tests/serving_engine.rs`); the
-//! latency/batch fields are serving-side instrumentation, excluded from
-//! [`crate::metrics::Report::fingerprint`] like the other perf counters.
+//! seeded event stream.  The default configuration — FIFO, no queue cap,
+//! `batch_window_s == 0` — serves every request alone in arrival order
+//! with a full-draw batch, so reports are bit-identical to the
+//! pre-control-plane serving path (enforced by `tests/serving_engine.rs`);
+//! the latency/batch/drop fields are serving-side instrumentation,
+//! excluded from [`crate::metrics::Report::fingerprint`] like the other
+//! perf counters.
 
+pub mod admission;
+pub mod banks;
 pub mod batcher;
 pub mod engine;
 pub mod latency;
 pub mod queue;
 pub mod scheduler;
 
+pub use admission::{
+    Admission, AdmissionPolicy, DropReason, QueuePolicyKind, ShedPolicy,
+};
+pub use banks::{BankInstall, BankSet, MAX_BANK_CAPACITY};
 pub use batcher::{AdaptiveBatcher, BatchSpan, PaddedBatch};
-pub use engine::{ServeEngine, ServedRequest};
+pub use engine::{ServeCtx, ServeEngine, ServeEvent, ServedRequest};
 pub use latency::{LatencyModel, LatencySummary};
 pub use queue::{QueuedRequest, RequestQueue};
 pub use scheduler::{RoundDecision, Scheduler};
@@ -50,8 +70,8 @@ pub struct ServeConfig {
     /// degenerates to one-request batches: bit-identical reports to the
     /// pre-engine serving path.
     pub batch_window_s: f64,
-    /// Latency SLO in milliseconds (violation accounting only; no request
-    /// is ever dropped).
+    /// Latency SLO in milliseconds.  Always accounted; requests are only
+    /// ever dropped under the explicit shedding knobs below.
     pub slo_ms: f64,
     /// Rows drawn per request.  `None` (the default) keeps the seed's
     /// full `batch_infer` draw when the window is 0 and picks
@@ -64,6 +84,22 @@ pub struct ServeConfig {
     pub defer_backlog: usize,
     /// Starvation guard: max consecutive round deferrals.
     pub max_defers: u32,
+    /// Queue ordering: FIFO (the default, the seed order) or EDF
+    /// (earliest-deadline-first across scenarios).
+    pub queue_policy: QueuePolicyKind,
+    /// Drop arrivals once the queue holds this many requests
+    /// (`--max-queue`; 0 = unbounded, the default).
+    pub max_queue: usize,
+    /// Drop arrivals whose deadline cannot be met even if served ahead of
+    /// everything queued (`--shed-infeasible`; off by default).
+    pub shed_infeasible: bool,
+    /// Resident serving-θ banks (`--bank-capacity`, LRU-evicted beyond
+    /// this; clamped to ≥ 1 and to a ceiling that keeps all banks plus
+    /// the live θ inside the session's θ-value cache — see
+    /// `serve::banks::MAX_BANK_CAPACITY`).  With capacity ≥ active
+    /// scenarios a mixed-scenario burst never rebuilds serving θ after
+    /// warm-up.
+    pub bank_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +110,10 @@ impl Default for ServeConfig {
             rows_per_request: None,
             defer_backlog: 4,
             max_defers: 2,
+            queue_policy: QueuePolicyKind::Fifo,
+            max_queue: 0,
+            shed_infeasible: false,
+            bank_capacity: 4,
         }
     }
 }
@@ -102,6 +142,9 @@ mod tests {
         let c = ServeConfig::default();
         assert_eq!(c.batch_window_s, 0.0);
         assert_eq!(c.rows_per_request(64), 64, "unbatched keeps the full draw");
+        assert_eq!(c.queue_policy, QueuePolicyKind::Fifo);
+        assert_eq!(c.max_queue, 0, "unbounded queue by default");
+        assert!(!c.shed_infeasible, "no shedding by default");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The serving request queue: inference requests that have arrived (their
 //! test draw is already materialized — sampling happens at arrival time so
 //! the world RNG stream is consumed in event order) but have not yet been
-//! executed.  The [`crate::serve::AdaptiveBatcher`] decides when a prefix
-//! of this queue becomes one padded artifact execution.
+//! executed.  The queue itself is ordering-agnostic: the
+//! [`crate::serve::AdaptiveBatcher`] pops requests at positions chosen by
+//! the engine's [`crate::serve::AdmissionPolicy`] (FIFO front, or EDF's
+//! earliest deadline) and decides when they become one padded artifact
+//! execution.
 
 use std::collections::VecDeque;
 
@@ -11,7 +14,11 @@ use std::collections::VecDeque;
 pub struct QueuedRequest {
     /// Virtual arrival time (the event-stream timestamp).
     pub arrival_t: f64,
-    /// Latency deadline: `arrival_t + SLO`.
+    /// Latency deadline in virtual time.  The simulator derives it as
+    /// `arrival_t + SLO`, but the control plane treats it as the
+    /// request's own contract: EDF orders by it and deadline-miss
+    /// accounting tests against it, so library callers may set any
+    /// per-request value (it need not be uniform across requests).
     pub deadline_t: f64,
     /// Scenario active when the request arrived (fixes the serving head:
     /// requests of different scenarios never share an execute).
@@ -27,12 +34,16 @@ pub struct QueuedRequest {
     pub rows: usize,
 }
 
-/// FIFO of pending requests with depth instrumentation.
+/// Arrival-ordered pending requests with depth instrumentation.
 #[derive(Debug, Default)]
 pub struct RequestQueue {
     q: VecDeque<QueuedRequest>,
     peak_depth: usize,
     total_enqueued: u64,
+    /// Running sum of queued rows, maintained on push/pop/remove so the
+    /// per-poll capacity check is O(1) even on deep backlogs (the queue
+    /// is unbounded unless `--max-queue` is set).
+    rows_pending: usize,
 }
 
 impl RequestQueue {
@@ -41,18 +52,56 @@ impl RequestQueue {
     }
 
     pub fn push(&mut self, req: QueuedRequest) {
+        self.rows_pending += req.rows;
         self.q.push_back(req);
         self.total_enqueued += 1;
         self.peak_depth = self.peak_depth.max(self.q.len());
     }
 
     pub fn pop(&mut self) -> Option<QueuedRequest> {
-        self.q.pop_front()
+        let r = self.q.pop_front();
+        if let Some(r) = &r {
+            self.rows_pending -= r.rows;
+        }
+        r
     }
 
-    /// Oldest pending request (the batching window anchors on it).
+    /// Oldest pending request (what FIFO anchors the window on).
     pub fn front(&self) -> Option<&QueuedRequest> {
         self.q.front()
+    }
+
+    /// Pending request at queue position `i` (0 = oldest).
+    pub fn get(&self, i: usize) -> Option<&QueuedRequest> {
+        self.q.get(i)
+    }
+
+    /// Remove and return the request at position `i` (the EDF pop path;
+    /// the element shift is O(n) per pop, which is fine at edge queue
+    /// depths — the O(n) *row summation* per poll is what the cached
+    /// counter avoids).
+    pub fn remove(&mut self, i: usize) -> Option<QueuedRequest> {
+        let r = self.q.remove(i);
+        if let Some(r) = &r {
+            self.rows_pending -= r.rows;
+        }
+        r
+    }
+
+    /// Iterate pending requests in position (arrival) order.
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
+        self.q.iter()
+    }
+
+    /// Reinsert requests at the queue front, preserving their order
+    /// (error recovery: a failed flush puts its unserved requests back).
+    /// Not counted as new arrivals — `total_enqueued` and `peak_depth`
+    /// stay put (the depth can only return to a level already peaked).
+    pub fn requeue_front(&mut self, reqs: Vec<QueuedRequest>) {
+        for req in reqs.into_iter().rev() {
+            self.rows_pending += req.rows;
+            self.q.push_front(req);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -63,9 +112,10 @@ impl RequestQueue {
         self.q.is_empty()
     }
 
-    /// Rows pending across all queued requests.
+    /// Rows pending across all queued requests (O(1): maintained on
+    /// push/pop/remove).
     pub fn rows_pending(&self) -> usize {
-        self.q.iter().map(|r| r.rows).sum()
+        self.rows_pending
     }
 
     /// Deepest the queue has ever been (backlog instrumentation).
@@ -112,5 +162,25 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.peak_depth(), 3);
         assert_eq!(q.total_enqueued(), 4);
+    }
+
+    #[test]
+    fn positional_access_supports_policy_pops() {
+        let mut q = RequestQueue::new();
+        q.push(req(1.0, 1, 2));
+        q.push(req(2.0, 1, 3));
+        q.push(req(3.0, 2, 1));
+        assert_eq!(q.get(1).unwrap().arrival_t, 2.0);
+        assert!(q.get(3).is_none());
+        assert_eq!(
+            q.iter().map(|r| r.arrival_t).collect::<Vec<_>>(),
+            vec![1.0, 2.0, 3.0]
+        );
+        // out-of-order removal (what EDF does) keeps the rest in order
+        assert_eq!(q.remove(1).unwrap().arrival_t, 2.0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.rows_pending(), 3);
+        assert_eq!(q.front().unwrap().arrival_t, 1.0);
+        assert_eq!(q.get(1).unwrap().arrival_t, 3.0);
     }
 }

@@ -57,6 +57,15 @@ impl Scheduler {
         start
     }
 
+    /// Soonest virtual time one `service_s`-long execute could complete
+    /// for work arriving at `t`, if it were served ahead of everything
+    /// queued.  This is the optimistic bound the control plane's
+    /// SLO-infeasibility shedder tests: a request whose deadline precedes
+    /// even this can never be met, so admitting it only wastes an execute.
+    pub fn earliest_completion(&self, t: f64, service_s: f64) -> f64 {
+        t.max(self.device_free_at) + service_s
+    }
+
     /// Arbitrate a triggered fine-tuning round against `backlog` pending
     /// requests.
     pub fn consider_round(&mut self, backlog: usize) -> RoundDecision {
@@ -111,6 +120,16 @@ mod tests {
         // cap resets after a round proceeds
         assert_eq!(s.consider_round(5), RoundDecision::Defer);
         assert_eq!(s.rounds_deferred(), 3);
+    }
+
+    #[test]
+    fn earliest_completion_is_the_idle_or_busy_bound() {
+        let mut s = Scheduler::new(0, 0);
+        // idle device: arrival + service
+        assert_eq!(s.earliest_completion(10.0, 2.0), 12.0);
+        s.on_round(10.0, 30.0); // busy until 40.0
+        assert_eq!(s.earliest_completion(10.0, 2.0), 42.0);
+        assert_eq!(s.earliest_completion(50.0, 2.0), 52.0);
     }
 
     #[test]

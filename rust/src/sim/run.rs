@@ -8,20 +8,25 @@
 //!
 //! # Request path
 //!
-//! All inference requests route through the serving engine
+//! All inference requests route through the serving control plane
 //! ([`crate::serve::ServeEngine`]): requests are drawn at arrival (so the
-//! world RNG stream stays in event order), queued, coalesced into padded
-//! executes by the adaptive batcher, and charged queueing delay + batched
-//! service time against the device model, while the scheduler arbitrates
-//! the device between fine-tuning rounds and inference bursts.  With
-//! `serve.batch_window_s == 0` (the default) every batch degenerates to
-//! one full-draw request and reports are bit-identical to the pre-engine
-//! path.  The engine also owns the cached bank-installed serving θ,
-//! invalidated by generation counters ([`Params::generation`] moves on
-//! every train step / head surgery, [`Cwr::generation`] on every
-//! consolidation), so a request whose inputs did not change performs
-//! **zero full-θ copies** and — via the session's literal cache (see
-//! [`crate::model::ModelSession`]) — no θ re-marshal.
+//! world RNG stream stays in event order) and handed to
+//! `ServeEngine::on_arrival`, which admits or sheds them
+//! (`--max-queue`/`--shed-infeasible`); the simulation then *polls* the
+//! engine at every virtual-time step and absorbs the resulting
+//! [`ServeEvent`]s — served requests (accuracy + energy score, in service
+//! order, feeding the scenario-change detector), drops, executes, and
+//! bank installs.  Queue order is the `--queue-policy` (FIFO or EDF
+//! across scenarios); batches may mix scenarios because the engine keeps
+//! one resident bank-installed serving θ per active scenario
+//! ([`crate::serve::BankSet`]), invalidated by generation counters
+//! ([`Params::generation`] moves on every train step / head surgery,
+//! [`Cwr::generation`] on every consolidation) — a request whose inputs
+//! did not change performs **zero full-θ copies** and — via the session's
+//! literal cache (see [`crate::model::ModelSession`]) — no θ re-marshal.
+//! With the default configuration (FIFO, no shedding,
+//! `serve.batch_window_s == 0`) every batch degenerates to one full-draw
+//! request and reports are bit-identical to the pre-control-plane path.
 
 use std::time::Instant;
 
@@ -47,7 +52,7 @@ use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
 use crate::runtime::Backend;
 use crate::serve::{
-    QueuedRequest, RoundDecision, ServeConfig, ServeEngine, ServedRequest,
+    QueuedRequest, RoundDecision, ServeConfig, ServeCtx, ServeEngine, ServeEvent,
 };
 
 use super::valpool::ValPool;
@@ -87,9 +92,9 @@ pub struct RunConfig {
     pub disable_serving_cache: bool,
     /// Serving-engine knobs (batching window, SLO, scheduler thresholds).
     pub serve: ServeConfig,
-    /// `--no-batching`: serve each request immediately through the
-    /// engine's direct path (no queue/batcher) with a full-batch draw —
-    /// the pre-engine behaviour.  Reports must be bit-identical to
+    /// `--no-batching`: every request draws a full batch, so each one
+    /// fills and flushes its own execute at the arrival instant — the
+    /// pre-engine behaviour.  Reports must be bit-identical to
     /// `serve.batch_window_s == 0`.
     pub serve_direct: bool,
 }
@@ -286,17 +291,12 @@ impl<'b> Simulation<'b> {
 
         let events = std::mem::take(&mut self.stream.events);
         for ev in &events {
-            // serve any batch whose coalescing window expired before this
-            // event (keeps service order aligned with virtual time).
-            let served = self.engine.pump(
-                ev.t,
-                &self.sess,
-                &self.params,
-                &self.cwr,
-                &self.schedule.scenarios,
-            )?;
+            // poll the control plane up to this event's time: serves any
+            // batch whose coalescing window expired (keeps service order
+            // aligned with virtual time) and surfaces pending drops.
+            let served = self.poll_engine(ev.t)?;
             if !served.is_empty() {
-                self.absorb_served(
+                self.absorb_events(
                     served,
                     &mut trained_classes,
                     &mut reinit_done,
@@ -379,15 +379,9 @@ impl<'b> Simulation<'b> {
                                 // pending requests were admitted before the
                                 // round: serve them first, then occupy the
                                 // device for the round's ledger time.
-                                let served = self.engine.drain(
-                                    ev.t,
-                                    &self.sess,
-                                    &self.params,
-                                    &self.cwr,
-                                    &self.schedule.scenarios,
-                                )?;
+                                let served = self.drain_engine(ev.t)?;
                                 if !served.is_empty() {
-                                    self.absorb_served(
+                                    self.absorb_events(
                                         served,
                                         &mut trained_classes,
                                         &mut reinit_done,
@@ -414,7 +408,10 @@ impl<'b> Simulation<'b> {
                 }
                 EventKind::Inference => {
                     // draw the request's test rows at arrival (world RNG
-                    // stays in event order) and hand it to the engine.
+                    // stays in event order — even for requests the
+                    // control plane sheds) and hand it to admission,
+                    // then poll so capacity/window-0 flushes serve at
+                    // the arrival instant exactly like the seed did.
                     let rows = self.engine.rows_per_request();
                     let (x, y) = self.schedule.world.batch(
                         rows,
@@ -430,15 +427,10 @@ impl<'b> Simulation<'b> {
                         y,
                         rows,
                     };
-                    let served = self.engine.submit(
-                        req,
-                        &self.sess,
-                        &self.params,
-                        &self.cwr,
-                        &self.schedule.scenarios,
-                    )?;
+                    self.engine.on_arrival(req);
+                    let served = self.poll_engine(ev.t)?;
                     self.tune.on_inference();
-                    self.absorb_served(
+                    self.absorb_events(
                         served,
                         &mut trained_classes,
                         &mut reinit_done,
@@ -450,22 +442,10 @@ impl<'b> Simulation<'b> {
         // serve everything still queued at the end of the stream: batches
         // already past their window flush at their due time, the rest at
         // the horizon.
-        let mut served = self.engine.pump(
-            self.stream.horizon,
-            &self.sess,
-            &self.params,
-            &self.cwr,
-            &self.schedule.scenarios,
-        )?;
-        served.extend(self.engine.drain(
-            self.stream.horizon,
-            &self.sess,
-            &self.params,
-            &self.cwr,
-            &self.schedule.scenarios,
-        )?);
+        let mut served = self.poll_engine(self.stream.horizon)?;
+        served.extend(self.drain_engine(self.stream.horizon)?);
         if !served.is_empty() {
-            self.absorb_served(
+            self.absorb_events(
                 served,
                 &mut trained_classes,
                 &mut reinit_done,
@@ -523,6 +503,14 @@ impl<'b> Simulation<'b> {
         self.report.avg_batch_requests = self.engine.avg_batch_requests();
         self.report.peak_queue_depth = self.engine.peak_queue_depth() as u64;
         self.report.rounds_deferred = self.engine.scheduler().rounds_deferred();
+        self.report.queue_policy = self.engine.queue_policy_name().to_string();
+        self.report.requests_dropped = self.engine.requests_dropped();
+        self.report.drops_queue_full = self.engine.drops_queue_full();
+        self.report.drops_slo_infeasible = self.engine.drops_slo_infeasible();
+        self.report.deadline_misses = self.engine.deadline_misses();
+        self.report.bank_evictions = self.engine.bank_evictions();
+        self.report.banks_peak_resident = self.engine.banks_peak_resident() as u64;
+        self.report.per_scenario_latency = self.engine.per_scenario_latency();
         self.report.finish();
         Ok(self.report)
     }
@@ -647,17 +635,54 @@ impl<'b> Simulation<'b> {
         }
     }
 
-    /// Absorb requests the serving engine completed, in service order:
-    /// record them and run scenario-change detection on their energy
-    /// scores (the request stream is the detector's only signal).
-    fn absorb_served(
+    /// Poll the serving control plane at `t`.  The [`ServeCtx`] is
+    /// rebuilt per call: it borrows fields disjoint from `self.engine`,
+    /// so the split borrow stays legal inside one method.
+    fn poll_engine(&mut self, t: f64) -> Result<Vec<ServeEvent>> {
+        self.engine.poll(
+            t,
+            &ServeCtx {
+                sess: &self.sess,
+                params: &self.params,
+                cwr: &self.cwr,
+                scenarios: &self.schedule.scenarios,
+            },
+        )
+    }
+
+    /// Drain the serving control plane at `t` (window-unconditioned).
+    fn drain_engine(&mut self, t: f64) -> Result<Vec<ServeEvent>> {
+        self.engine.drain(
+            t,
+            &ServeCtx {
+                sess: &self.sess,
+                params: &self.params,
+                cwr: &self.cwr,
+                scenarios: &self.schedule.scenarios,
+            },
+        )
+    }
+
+    /// Absorb control-plane events in service order: record served
+    /// requests and run scenario-change detection on their energy scores
+    /// (the request stream is the detector's only signal).  Drop,
+    /// execute, and bank-install events are engine bookkeeping — their
+    /// totals flow into the report from the engine counters at the end
+    /// of the run.
+    fn absorb_events(
         &mut self,
-        served: Vec<ServedRequest>,
+        events: Vec<ServeEvent>,
         trained_classes: &mut BitSet,
         reinit_done: &mut [bool],
         probe_pending: &mut bool,
     ) -> Result<()> {
-        for s in served {
+        for ev in events {
+            let s = match ev {
+                ServeEvent::RequestServed(s) => s,
+                ServeEvent::RequestDropped { .. }
+                | ServeEvent::BatchExecuted { .. }
+                | ServeEvent::BankInstalled { .. } => continue,
+            };
             self.report.requests.push(RequestRecord {
                 t: s.arrival_t,
                 scenario: s.scenario,
