@@ -4,6 +4,7 @@
 #   make build       release build of the rust coordinator
 #   make test        tier-1 gate: release build + full test suite
 #   make ci          stub-feature gate: build + tests + fmt + clippy -D warnings
+#   make ci-faults   tier-1 suite again under a fixed nonzero fault plan
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
 #   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
@@ -14,7 +15,7 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci bench bench-gemm bench-snapshot repro
+.PHONY: artifacts build test ci ci-faults bench bench-gemm bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -39,6 +40,17 @@ ci:
 	cd rust && cargo build && cargo test -q
 	cd rust && cargo fmt --check
 	cd rust && cargo clippy --all-targets -- -D warnings -D clippy::perf
+
+# Chaos lane (PR 6): the same tier-1 suite with ETUNER_FAULTS exporting a
+# fixed seeded fault plan.  Every `RunConfig::quickstart` run in the suite
+# then injects transient execute/marshal faults and latency spikes through
+# the FaultyBackend decorator, so invariants (arrival conservation, N=1
+# vs N=4 sweep bit-identity, theta rollback) are exercised under failure,
+# not just on the happy path.  Golden-fingerprint tests pin
+# `faults = FaultPlan::none()` explicitly and are unaffected.
+ci-faults:
+	cd rust && ETUNER_FAULTS="exec:0.05,marshal:0.01,spike:0.02x0.25,burst:2" \
+		ETUNER_FAULT_SEED=6 cargo test -q
 
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \

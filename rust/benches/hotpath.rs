@@ -497,6 +497,45 @@ fn main() -> anyhow::Result<()> {
                 eng.bank_evictions()
             );
         }
+
+        // ---- disabled fault layer: zero-overhead passthrough --------------
+        // The same resident-bank burst, but through an explicitly
+        // constructed FaultyBackend carrying the empty plan.  Compare
+        // against `bankset resident` above: the deltas are noise, proving
+        // `FaultPlan::none()` (the default) costs the serving hot path
+        // nothing.
+        {
+            use etuner::runtime::{FaultPlan, FaultyBackend};
+            let fb = FaultyBackend::new(refcpu.as_ref(), FaultPlan::none(), 0);
+            let sess_f = ModelSession::new(&fb, "mbv2")?;
+            let params_f = sess_f.theta0()?;
+            let mut cwr_f = Cwr::new(&sess_f.m);
+            cwr_f.consolidate(&sess_f.m, &params_f, &[0, 1]);
+            let ctx_f = ServeCtx {
+                sess: &sess_f,
+                params: &params_f,
+                cwr: &cwr_f,
+                scenarios: &scenarios,
+            };
+            let cfg = ServeConfig {
+                batch_window_s: 1e6,
+                slo_ms: 1e15,
+                rows_per_request: Some(rows),
+                bank_capacity: 4,
+                ..ServeConfig::default()
+            };
+            let mut eng = ServeEngine::new(&sess_f.m, &device, &cfg, false, false);
+            report(
+                &format!("serving: faults off ({N_REQ} reqs)"),
+                bench(1, 5, || {
+                    for r in &reqs {
+                        eng.on_arrival(r.clone());
+                    }
+                    let events = eng.drain(1e7, &ctx_f).unwrap();
+                    sink += events.len();
+                }),
+            );
+        }
         std::hint::black_box(sink);
     }
 

@@ -31,6 +31,13 @@
 //!          report.energy.total_wh());
 //! ```
 
+// `clippy.toml` disallows `Option::unwrap`/`Result::unwrap`/`expect` so
+// the serving hot path (serve::engine, serve::banks, model::session) can
+// opt *in* with an inner `#![deny(clippy::disallowed_methods)]` — those
+// modules must stay panic-free under injected faults.  Everywhere else
+// (tests, setup paths, lock poisoning) unwrap stays allowed.
+#![allow(clippy::disallowed_methods)]
+
 pub mod baselines;
 pub mod bitset;
 pub mod coordinator;
@@ -54,10 +61,13 @@ pub mod prelude {
     pub use crate::data::arrival::ArrivalKind;
     pub use crate::data::benchmarks::Benchmark;
     pub use crate::metrics::Report;
-    pub use crate::runtime::{Backend, BackendKind, BackendSpec, PjrtBackend, RefCpuBackend};
-    pub use crate::serve::{
-        Admission, QueuePolicyKind, ServeConfig, ServeCtx, ServeEngine,
-        ServeEvent,
+    pub use crate::runtime::{
+        Backend, BackendKind, BackendSpec, FaultPlan, FaultyBackend,
+        PjrtBackend, RefCpuBackend,
     };
-    pub use crate::sim::{ParallelSweeper, RunConfig, Simulation};
+    pub use crate::serve::{
+        Admission, QueuePolicyKind, RecoveryConfig, ServeConfig, ServeCtx,
+        ServeEngine, ServeEvent,
+    };
+    pub use crate::sim::{run_config, ParallelSweeper, RunConfig, Simulation};
 }

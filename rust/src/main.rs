@@ -22,9 +22,9 @@ use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
-use etuner::runtime::{Backend, BackendKind, BackendSpec};
+use etuner::runtime::{BackendKind, BackendSpec, FaultPlan};
 use etuner::serve::{QueuePolicyKind, MAX_BANK_CAPACITY};
-use etuner::sim::{ParallelSweeper, RunConfig, Simulation};
+use etuner::sim::{run_config, ParallelSweeper, RunConfig};
 use etuner::testkit;
 
 /// `--backend` → construction spec over the artifact directory.
@@ -62,6 +62,7 @@ fn main() -> Result<()> {
                        [--batch-window S] [--slo-ms MS] [--no-batching]\n\
                        [--queue-policy fifo|edf] [--max-queue N]\n\
                        [--shed-infeasible] [--bank-capacity N]\n\
+                       [--faults SPEC] [--fault-seed S]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --batch-window S coalesces requests for up to S virtual\n\
                        seconds per padded execute (0 = off); --slo-ms sets the\n\
@@ -75,6 +76,14 @@ fn main() -> Result<()> {
                        bounds the resident per-scenario serving-theta banks\n\
                        (LRU-evicted beyond N; default 4, ceiling 8 so banks\n\
                        fit the session theta-cache)\n\
+                       --faults injects deterministic backend faults:\n\
+                       comma-separated exec:RATE, marshal:RATE,\n\
+                       spike:RATExSECONDS, burst:N, seed:S (e.g.\n\
+                       --faults exec:0.05,spike:0.02x0.25,burst:2); the\n\
+                       serving engine retries with virtual-time backoff,\n\
+                       trips a circuit breaker, and serves stale banks\n\
+                       degraded while it is open; --fault-seed varies the\n\
+                       fault stream without changing the run seed\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --jobs N runs N seed-sweep workers (default: all cores)\n\
@@ -184,6 +193,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     cfg.serve.shed_infeasible = flag(args, "--shed-infeasible");
     cfg.serve_direct = flag(args, "--no-batching");
+    if let Some(f) = opt(args, "--faults") {
+        cfg.faults = FaultPlan::parse(f).context("bad --faults")?;
+    }
+    if let Some(s) = opt(args, "--fault-seed") {
+        cfg.faults.seed = s.parse().context("bad --fault-seed")?;
+    }
     if let Some(d) = opt(args, "--decay") {
         use etuner::coordinator::lazytune::DecayKind;
         cfg.decay = match d {
@@ -196,7 +211,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
     let be = backend_spec(args)?.create()?;
     eprintln!("[etuner] backend: {}", be.name());
-    let report = Simulation::new(be.as_ref(), cfg)?.run()?;
+    let faults_on = cfg.faults.enabled();
+    let report = run_config(be.as_ref(), cfg)?;
     println!("{}", report.summary());
     println!(
         "  breakdown: init {:.1}s / loadsave {:.1}s / compute {:.1}s; \
@@ -239,6 +255,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
              {} deadline misses",
             s.scenario, s.requests, s.mean_ms, s.p95_ms, s.max_ms,
             s.deadline_misses,
+        );
+    }
+    if faults_on {
+        println!(
+            "  recovery: {} faults injected ({} exec, {} marshal, {} spikes, \
+             +{:.2}s latency); {} retries; {} breaker trips; \
+             {} degraded serves; {} unavailable drops; {} round rollbacks",
+            report.faults_injected_exec
+                + report.faults_injected_marshal
+                + report.faults_injected_spikes,
+            report.faults_injected_exec,
+            report.faults_injected_marshal,
+            report.faults_injected_spikes,
+            report.fault_delay_injected_s,
+            report.serve_retries,
+            report.breaker_trips,
+            report.degraded_serves,
+            report.drops_backend_unavailable,
+            report.round_rollbacks,
         );
     }
     Ok(())

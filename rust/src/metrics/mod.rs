@@ -21,6 +21,10 @@ pub struct RequestRecord {
     pub batch_requests: usize,
     /// requests still queued when this one was served.
     pub queue_depth: usize,
+    /// served from a *stale* resident bank while the circuit breaker was
+    /// open (fault-recovery accounting, excluded from
+    /// [`Report::fingerprint`] like the latency fields).
+    pub degraded: bool,
 }
 
 /// Per-scenario latency digest (serving-engine accounting, excluded from
@@ -141,6 +145,34 @@ pub struct Report {
     pub banks_peak_resident: u64,
     /// per-scenario latency digests (ascending scenario order).
     pub per_scenario_latency: Vec<ScenarioLatency>,
+    /// fault-injection + recovery accounting (PR 6; excluded from
+    /// [`Report::fingerprint`] like every serving counter above — with
+    /// `FaultPlan::none()` all of these are zero and the scientific
+    /// fields stay bit-identical):
+    /// execute errors injected by the fault harness.
+    pub faults_injected_exec: u64,
+    /// marshal errors injected by the fault harness.
+    pub faults_injected_marshal: u64,
+    /// virtual-time latency spikes injected.
+    pub faults_injected_spikes: u64,
+    /// total virtual seconds of injected spike latency.
+    pub fault_delay_injected_s: f64,
+    /// batch execute retries performed by the serving engine.
+    pub serve_retries: u64,
+    /// flushes that exhausted their retries (group requeued, error
+    /// absorbed by the recovery layer).
+    pub serve_flush_failures: u64,
+    /// times the circuit breaker tripped open.
+    pub breaker_trips: u64,
+    /// requests served from a stale resident bank while the breaker was
+    /// open.
+    pub degraded_serves: u64,
+    /// requests shed at serve time because the breaker was open and no
+    /// stale bank could stand in.
+    pub drops_backend_unavailable: u64,
+    /// fine-tuning rounds rolled back to the last good θ generation after
+    /// a mid-round failure.
+    pub round_rollbacks: u64,
 }
 
 impl Report {
@@ -311,6 +343,17 @@ pub fn average(reports: &[Report]) -> Report {
     out.deadline_misses = mean_u64(|r| r.deadline_misses);
     out.bank_evictions = mean_u64(|r| r.bank_evictions);
     out.banks_peak_resident = mean_u64(|r| r.banks_peak_resident);
+    out.faults_injected_exec = mean_u64(|r| r.faults_injected_exec);
+    out.faults_injected_marshal = mean_u64(|r| r.faults_injected_marshal);
+    out.faults_injected_spikes = mean_u64(|r| r.faults_injected_spikes);
+    out.fault_delay_injected_s =
+        reports.iter().map(|r| r.fault_delay_injected_s).sum::<f64>() / n;
+    out.serve_retries = mean_u64(|r| r.serve_retries);
+    out.serve_flush_failures = mean_u64(|r| r.serve_flush_failures);
+    out.breaker_trips = mean_u64(|r| r.breaker_trips);
+    out.degraded_serves = mean_u64(|r| r.degraded_serves);
+    out.drops_backend_unavailable = mean_u64(|r| r.drops_backend_unavailable);
+    out.round_rollbacks = mean_u64(|r| r.round_rollbacks);
     out.per_scenario_latency = average_scenario_latency(reports);
     out.seed = u64::MAX; // marker: averaged
     out
@@ -365,6 +408,7 @@ mod tests {
             latency_s: 0.0,
             batch_requests: 1,
             queue_depth: 0,
+            degraded: false,
         }
     }
 
@@ -465,6 +509,18 @@ mod tests {
             max_ms: 12.0,
             deadline_misses: 1,
         });
+        // fault-injection + recovery accounting (PR 6) is also excluded
+        b.faults_injected_exec = 12;
+        b.faults_injected_marshal = 2;
+        b.faults_injected_spikes = 5;
+        b.fault_delay_injected_s = 2.5;
+        b.serve_retries = 8;
+        b.serve_flush_failures = 3;
+        b.breaker_trips = 1;
+        b.degraded_serves = 6;
+        b.drops_backend_unavailable = 2;
+        b.round_rollbacks = 1;
+        b.requests[0].degraded = true;
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;

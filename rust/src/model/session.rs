@@ -31,6 +31,10 @@
 //! ([`Backend::warm`]) at install time, and
 //! [`ModelSession::release_params`] frees it when the bank is evicted.
 
+// Serving hot path: every failure must surface as a recoverable Result
+// (reachable under injected faults), never a panic.
+#![deny(clippy::disallowed_methods)]
+
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
@@ -139,6 +143,23 @@ impl<'b> ModelSession<'b> {
         Ok(())
     }
 
+    /// The cached θ value for `params` (must follow a successful
+    /// [`ModelSession::ensure_theta_value`] in the same borrow — the
+    /// cache cannot be evicted between the two, so a miss here is an
+    /// internal sequencing bug surfaced as a recoverable error).
+    fn cached_theta<'c>(
+        &self,
+        cache: &'c HashMap<u64, (u64, Value)>,
+        params: &Params,
+    ) -> Result<&'c Value> {
+        cache.get(&params.id()).map(|(_, v)| v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "θ value for params {} missing after ensure",
+                params.id()
+            )
+        })
+    }
+
     /// Adopt an execute-produced θ buffer for `params`' current content
     /// (train/ssl output reuse: the next step's input marshal is free).
     fn adopt_theta_value(&self, params: &Params, v: Value) {
@@ -160,7 +181,7 @@ impl<'b> ModelSession<'b> {
     pub fn warm_infer(&self, params: &Params) -> Result<()> {
         self.ensure_theta_value(params)?;
         let cache = self.theta_cache.borrow();
-        let theta_v = &cache.get(&params.id()).unwrap().1;
+        let theta_v = self.cached_theta(&cache, params)?;
         self.be.warm(&self.m.artifacts.infer, theta_v)
     }
 
@@ -198,13 +219,13 @@ impl<'b> ModelSession<'b> {
         let lr_v = self.be.marshal_f32(&[self.lr], &[])?;
         let mut out = {
             let cache = self.theta_cache.borrow();
-            let theta_v = &cache.get(&params.id()).unwrap().1;
+            let theta_v = self.cached_theta(&cache, params)?;
             let inputs = [theta_v, &x_v, &y_v, &mask_v, &lr_v];
             self.be.execute(name, &inputs)?
         };
         anyhow::ensure!(out.len() == 2, "train artifact returned {}", out.len());
-        let loss = out.pop().unwrap().to_tensor()?.data[0];
-        let theta_v = out.pop().unwrap();
+        let loss = pop_output(&mut out, "loss")?.to_tensor()?.data[0];
+        let theta_v = pop_output(&mut out, "theta")?;
         let theta = theta_v.read_f32()?;
         anyhow::ensure!(theta.len() == self.m.theta_len, "train returned bad θ len");
         params.set_theta(theta);
@@ -216,7 +237,7 @@ impl<'b> ModelSession<'b> {
     fn exec_theta_x(&self, name: &str, params: &Params, x_v: &Value) -> Result<Vec<TensorF32>> {
         self.ensure_theta_value(params)?;
         let cache = self.theta_cache.borrow();
-        let theta_v = &cache.get(&params.id()).unwrap().1;
+        let theta_v = self.cached_theta(&cache, params)?;
         self.be
             .execute(name, &[theta_v, x_v])?
             .iter()
@@ -230,7 +251,8 @@ impl<'b> ModelSession<'b> {
         anyhow::ensure!(x.len() == b * self.m.d, "bad x len {}", x.len());
         let x_v = self.be.marshal_f32(x, &[b, self.m.d])?;
         let mut out = self.exec_theta_x(&self.m.artifacts.infer, params, &x_v)?;
-        Ok(out.pop().unwrap())
+        out.pop()
+            .ok_or_else(|| anyhow::anyhow!("infer artifact returned no output"))
     }
 
     /// Classification accuracy on (x, y) at the inference batch size.
@@ -258,7 +280,9 @@ impl<'b> ModelSession<'b> {
         anyhow::ensure!(x.len() == b * self.m.d, "bad probe len {}", x.len());
         let x_v = self.be.marshal_f32(x, &[b, self.m.d])?;
         let mut out = self.exec_theta_x(&self.m.artifacts.features, params, &x_v)?;
-        Ok(out.pop().unwrap())
+        out.pop().ok_or_else(|| {
+            anyhow::anyhow!("features artifact returned no output")
+        })
     }
 
     /// CKA between two (B, H) feature maps via the Gram artifact.
@@ -306,18 +330,27 @@ impl<'b> ModelSession<'b> {
         let lr_v = self.be.marshal_f32(&[self.lr], &[])?;
         let mut out = {
             let cache = self.theta_cache.borrow();
-            let theta_v = &cache.get(&params.id()).unwrap().1;
+            let theta_v = self.cached_theta(&cache, params)?;
             let inputs = [theta_v, &phi_v, &x1_v, &x2_v, &mask_v, &lr_v];
             self.be.execute(name, &inputs)?
         };
         anyhow::ensure!(out.len() == 3, "ssl artifact returned {}", out.len());
-        let loss = out.pop().unwrap().to_tensor()?.data[0];
-        *phi = out.pop().unwrap().read_f32()?;
-        let theta_v = out.pop().unwrap();
+        let loss = pop_output(&mut out, "loss")?.to_tensor()?.data[0];
+        *phi = pop_output(&mut out, "phi")?.read_f32()?;
+        let theta_v = pop_output(&mut out, "theta")?;
         let theta = theta_v.read_f32()?;
         anyhow::ensure!(theta.len() == self.m.theta_len, "ssl returned bad θ len");
         params.set_theta(theta);
         self.adopt_theta_value(params, theta_v);
         Ok(loss)
     }
+}
+
+/// Pop the next artifact output, surfacing a short tuple as a recoverable
+/// error (a length `ensure!` precedes every use, but the hot path must
+/// never panic).
+fn pop_output(out: &mut Vec<Value>, what: &str) -> Result<Value> {
+    out.pop().ok_or_else(|| {
+        anyhow::anyhow!("artifact output tuple missing {what} entry")
+    })
 }

@@ -54,6 +54,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("abl-oracle", "ablation: energy-score detector vs oracle boundaries"),
         ("serve", "serving engine: latency percentiles & SLO vs batch window"),
         ("serve-policy", "serving control plane: fifo vs edf x queue caps"),
+        ("faults", "robustness: fault rate x retry policy (accuracy, p99, drops)"),
     ]
 }
 
@@ -129,6 +130,7 @@ fn plan(id: &str, opts: &ReproOpts) -> Result<Plan> {
         "abl-oracle" => abl_oracle(opts),
         "serve" => serve_table(opts),
         "serve-policy" => serve_policy_table(opts),
+        "faults" => faults_table(opts),
         other => anyhow::bail!("unknown experiment {other:?} (try `list`)"),
     })
 }
@@ -1077,6 +1079,82 @@ fn serve_policy_table(opts: &ReproOpts) -> Plan {
                 }
             }
             t.emit(&dir, "serve_policy")
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Robustness — fault rate × retry policy
+// ---------------------------------------------------------------------------
+
+fn faults_table(opts: &ReproOpts) -> Plan {
+    use crate::runtime::FaultPlan;
+    // Fault axis: nothing injected, light transient exec faults, heavy
+    // bursty exec faults, and heavy faults plus latency spikes.  Retry
+    // axis: no retries (first failure feeds the breaker), the default
+    // policy, and an aggressive one (more attempts, hair-trigger
+    // breaker, fast cooldown).  Same coalescing window + SLO as the
+    // `serve-policy` table so queues actually form.
+    let fault_specs: [(&str, &str); 4] = [
+        ("none", "none"),
+        ("exec:2%", "exec:0.02"),
+        ("exec:5%x3", "exec:0.05,burst:3"),
+        ("5%+spikes", "exec:0.05,burst:3,spike:0.02x0.25"),
+    ];
+    let retries: [&str; 3] = ["none", "default", "aggressive"];
+    let n_requests = opts.n_requests;
+    let mut cells = Vec::new();
+    for (_, spec) in fault_specs {
+        for retry in retries {
+            let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(
+                TunePolicyKind::LazyTune,
+                FreezePolicyKind::SimFreeze,
+            );
+            c.serve.batch_window_s = 20.0;
+            c.serve.slo_ms = 30_000.0;
+            c.faults = FaultPlan::parse(spec).expect("static fault spec");
+            match retry {
+                "none" => c.serve.recovery.max_attempts = 1,
+                "default" => {}
+                _ => {
+                    c.serve.recovery.max_attempts = 5;
+                    c.serve.recovery.breaker_threshold = 2;
+                    c.serve.recovery.breaker_cooldown_s = 10.0;
+                }
+            }
+            cells.push(Cell::Avg(c));
+        }
+    }
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Robustness: fault rate x retry policy (res50, NC, ETuner)",
+                &["faults", "retry", "accuracy%", "p99_ms", "dropped",
+                  "degraded%", "retries", "trips", "rollbacks"],
+            );
+            let mut it = reports.iter();
+            for (label, _) in fault_specs {
+                for retry in retries {
+                    let r = it.next().expect("grid cell");
+                    let served = n_requests as u64 - r.requests_dropped;
+                    let degraded =
+                        r.degraded_serves as f64 / served.max(1) as f64;
+                    t.row(vec![
+                        label.into(),
+                        retry.into(),
+                        pct(r.avg_inference_accuracy),
+                        f1(r.latency_p99_ms),
+                        format!("{}", r.requests_dropped),
+                        pct(degraded),
+                        format!("{}", r.serve_retries),
+                        format!("{}", r.breaker_trips),
+                        format!("{}", r.round_rollbacks),
+                    ]);
+                }
+            }
+            t.emit(&dir, "faults")
         }),
     }
 }

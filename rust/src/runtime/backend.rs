@@ -162,6 +162,22 @@ pub struct BackendPerf {
     pub scratch_bytes_reused: u64,
 }
 
+/// Fault-injection counters reported by a fault-wrapping backend (see
+/// [`crate::runtime::faults::FaultyBackend`]).  Plain backends report
+/// zeros.  Excluded from [`crate::metrics::Report::fingerprint`] like
+/// [`BackendPerf`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Execute-segment errors injected.
+    pub exec_faults: u64,
+    /// Marshal errors injected.
+    pub marshal_faults: u64,
+    /// Virtual-time latency spikes injected.
+    pub latency_spikes: u64,
+    /// Total virtual seconds of injected spike latency.
+    pub spike_s_total: f64,
+}
+
 /// Object-safe execute boundary: load/marshal/execute/read-back.
 ///
 /// A backend binds an artifact *source* (directory or built-in) and
@@ -215,6 +231,21 @@ pub trait Backend {
     /// own `release` (or the backend's internal cap evicts it).
     fn warm(&self, _segment: &str, _theta: &Value) -> Result<()> {
         Ok(())
+    }
+
+    /// Fault-injection counters.  Only the fault-wrapping decorator
+    /// ([`crate::runtime::faults::FaultyBackend`]) reports nonzero values;
+    /// plain backends use this default.
+    fn fault_stats(&self) -> FaultStats {
+        FaultStats::default()
+    }
+
+    /// Drain injected virtual-time latency accumulated since the last
+    /// drain (seconds).  The serving engine adds this to the service time
+    /// it charges through `DeviceModel` — spikes cost *virtual* time,
+    /// never wall clock.  Plain backends always return 0.
+    fn take_injected_delay_s(&self) -> f64 {
+        0.0
     }
 
     /// A value previously produced by this backend is being dropped by a

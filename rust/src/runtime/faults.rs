@@ -1,0 +1,448 @@
+//! Deterministic fault injection at the execute boundary.
+//!
+//! [`FaultyBackend`] decorates any [`Backend`] and injects three failure
+//! modes, all drawn from a seeded [`Pcg32`] stream (same discipline as
+//! `rng.rs` — runs are exactly reproducible from `(run seed, fault
+//! seed)`, independent of sweep worker count or wall clock):
+//!
+//! * **execute errors** — `execute()` returns `Err` with probability
+//!   `exec` per call; `burst:N` makes each fault *persistent* for N
+//!   consecutive calls (a transient glitch vs a wedged executor),
+//! * **marshal errors** — same for `marshal_f32`/`marshal_i32`,
+//! * **latency spikes** — successful executes accumulate `spike_s`
+//!   virtual seconds with probability `spike`; the serving engine drains
+//!   them via [`Backend::take_injected_delay_s`] and charges them through
+//!   `DeviceModel`, so spikes cost *virtual* time, never wall clock.
+//!
+//! The spec grammar (`--faults`, `ETUNER_FAULTS`) is comma-separated
+//! `key:value` pairs: `exec:0.05,marshal:0.01,spike:0.02x0.5,burst:3`
+//! (5% execute faults, 1% marshal faults, 2% of executes spike by 0.5
+//! virtual seconds, faults wedge for 3 consecutive calls).  `none` or the
+//! empty string disables everything.
+//!
+//! [`FaultPlan::none()`] is a true zero-cost passthrough: `sim::run_config`
+//! only constructs the decorator when the plan is enabled, so the default
+//! configuration executes the exact same code as before this module
+//! existed and its `Report::fingerprint` is bit-identical.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Pcg32;
+
+use super::artifact::Manifest;
+use super::backend::{Backend, BackendPerf, FaultStats, Value};
+
+/// Salt mixed into the fault RNG seed so the fault stream never collides
+/// with the simulation's data/arrival streams for the same run seed.
+const FAULT_SEED_SALT: u64 = 0xFA17_0B5E_77ED_C0DE;
+
+/// A seeded, declarative fault schedule (see the module docs for the
+/// spec grammar).  `Default` is [`FaultPlan::none`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Per-call probability that `execute` fails.
+    pub exec_rate: f64,
+    /// Per-call probability that `marshal_f32`/`marshal_i32` fails.
+    pub marshal_rate: f64,
+    /// Per-successful-execute probability of a latency spike.
+    pub spike_rate: f64,
+    /// Virtual seconds added per spike.
+    pub spike_s: f64,
+    /// Consecutive calls each fault persists for (1 = transient).
+    pub burst: u32,
+    /// Extra seed mixed into the fault RNG (`--fault-seed`).
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing is ever injected.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            exec_rate: 0.0,
+            marshal_rate: 0.0,
+            spike_rate: 0.0,
+            spike_s: 0.0,
+            burst: 1,
+            seed: 0,
+        }
+    }
+
+    /// True if any fault mode can fire.  `sim::run_config` wraps the
+    /// backend only when this holds — a disabled plan costs nothing.
+    pub fn enabled(&self) -> bool {
+        self.exec_rate > 0.0 || self.marshal_rate > 0.0 || self.spike_rate > 0.0
+    }
+
+    /// Parse the `--faults` spec grammar (module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        let spec = spec.trim();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("none") {
+            return Ok(plan);
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (key, val) = part.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad fault spec part {part:?} (expected key:value)"
+                )
+            })?;
+            match key.to_ascii_lowercase().as_str() {
+                "exec" => plan.exec_rate = parse_rate(val, "exec")?,
+                "marshal" => plan.marshal_rate = parse_rate(val, "marshal")?,
+                "spike" => {
+                    let (rate, secs) = val.split_once('x').ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad spike spec {val:?} (expected RATExSECONDS, \
+                             e.g. spike:0.01x0.5)"
+                        )
+                    })?;
+                    plan.spike_rate = parse_rate(rate, "spike")?;
+                    plan.spike_s = secs.parse().map_err(|_| {
+                        anyhow::anyhow!("bad spike seconds {secs:?}")
+                    })?;
+                    if plan.spike_s < 0.0 {
+                        bail!("spike seconds must be >= 0, got {}", plan.spike_s);
+                    }
+                }
+                "burst" => {
+                    plan.burst = val.parse().map_err(|_| {
+                        anyhow::anyhow!("bad burst count {val:?}")
+                    })?;
+                    if plan.burst == 0 {
+                        bail!("burst must be >= 1 (1 = transient)");
+                    }
+                }
+                "seed" => {
+                    plan.seed = val.parse().map_err(|_| {
+                        anyhow::anyhow!("bad fault seed {val:?}")
+                    })?;
+                }
+                other => bail!(
+                    "unknown fault spec key {other:?} \
+                     (expected exec|marshal|spike|burst|seed)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Render back to the spec grammar (logs, tables).
+    pub fn spec(&self) -> String {
+        if !self.enabled() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if self.exec_rate > 0.0 {
+            parts.push(format!("exec:{}", self.exec_rate));
+        }
+        if self.marshal_rate > 0.0 {
+            parts.push(format!("marshal:{}", self.marshal_rate));
+        }
+        if self.spike_rate > 0.0 {
+            parts.push(format!("spike:{}x{}", self.spike_rate, self.spike_s));
+        }
+        if self.burst > 1 {
+            parts.push(format!("burst:{}", self.burst));
+        }
+        parts.join(",")
+    }
+}
+
+fn parse_rate(s: &str, key: &str) -> Result<f64> {
+    let r: f64 = s
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad {key} rate {s:?}"))?;
+    if !(0.0..=1.0).contains(&r) {
+        bail!("{key} rate must be in [0, 1], got {r}");
+    }
+    Ok(r)
+}
+
+/// The fault plan from `ETUNER_FAULTS` / `ETUNER_FAULT_SEED`, or
+/// [`FaultPlan::none`] when unset.  Cached for the process lifetime so
+/// `RunConfig::quickstart` stays cheap in sweep loops; `make ci-faults`
+/// sets these to run the whole tier-1 suite under a fixed plan.
+pub fn env_plan() -> FaultPlan {
+    static PLAN: OnceLock<FaultPlan> = OnceLock::new();
+    *PLAN.get_or_init(|| {
+        let mut plan = match std::env::var("ETUNER_FAULTS") {
+            Ok(s) => FaultPlan::parse(&s).unwrap_or_else(|e| {
+                eprintln!("[etuner] ignoring bad ETUNER_FAULTS: {e}");
+                FaultPlan::none()
+            }),
+            Err(_) => FaultPlan::none(),
+        };
+        if let Ok(s) = std::env::var("ETUNER_FAULT_SEED") {
+            match s.parse() {
+                Ok(v) => plan.seed = v,
+                Err(_) => {
+                    eprintln!("[etuner] ignoring bad ETUNER_FAULT_SEED {s:?}")
+                }
+            }
+        }
+        plan
+    })
+}
+
+struct FaultState {
+    rng: Pcg32,
+    /// Remaining calls the current execute fault persists for.
+    exec_burst_left: u32,
+    /// Remaining calls the current marshal fault persists for.
+    marshal_burst_left: u32,
+    /// Injected virtual latency not yet drained by the engine.
+    pending_delay_s: f64,
+    stats: FaultStats,
+}
+
+/// Fault-injecting decorator over any backend (see the module docs).
+///
+/// Borrows the inner backend for the duration of one simulation run —
+/// `sim::run_config` constructs it on the stack per run, seeded from
+/// `(cfg.seed, plan.seed)`, so the injected fault sequence is a pure
+/// function of the config and identical no matter which sweep worker
+/// executes the run.
+pub struct FaultyBackend<'a> {
+    inner: &'a dyn Backend,
+    plan: FaultPlan,
+    st: RefCell<FaultState>,
+}
+
+impl<'a> FaultyBackend<'a> {
+    /// Wrap `inner`, seeding the fault stream from the run seed and the
+    /// plan's own seed.
+    pub fn new(inner: &'a dyn Backend, plan: FaultPlan, run_seed: u64) -> Self {
+        let seed = run_seed
+            ^ plan.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ FAULT_SEED_SALT;
+        FaultyBackend {
+            inner,
+            plan,
+            st: RefCell::new(FaultState {
+                rng: Pcg32::new(seed, 0xFA17),
+                exec_burst_left: 0,
+                marshal_burst_left: 0,
+                pending_delay_s: 0.0,
+                stats: FaultStats::default(),
+            }),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide whether an execute call faults (burst continuation or a
+    /// fresh draw); spikes only charge on calls that will succeed.
+    fn execute_fault(&self, name: &str) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        if st.exec_burst_left > 0 {
+            st.exec_burst_left -= 1;
+            st.stats.exec_faults += 1;
+            bail!("injected fault: execute({name}) failed (burst)");
+        }
+        if self.plan.exec_rate > 0.0 && st.rng.f64() < self.plan.exec_rate {
+            st.exec_burst_left = self.plan.burst.saturating_sub(1);
+            st.stats.exec_faults += 1;
+            bail!("injected fault: execute({name}) failed (transient)");
+        }
+        if self.plan.spike_rate > 0.0 && st.rng.f64() < self.plan.spike_rate {
+            st.stats.latency_spikes += 1;
+            st.stats.spike_s_total += self.plan.spike_s;
+            st.pending_delay_s += self.plan.spike_s;
+        }
+        Ok(())
+    }
+
+    fn marshal_fault(&self, what: &str) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        if st.marshal_burst_left > 0 {
+            st.marshal_burst_left -= 1;
+            st.stats.marshal_faults += 1;
+            bail!("injected fault: marshal({what}) failed (burst)");
+        }
+        if self.plan.marshal_rate > 0.0 && st.rng.f64() < self.plan.marshal_rate
+        {
+            st.marshal_burst_left = self.plan.burst.saturating_sub(1);
+            st.stats.marshal_faults += 1;
+            bail!("injected fault: marshal({what}) failed (transient)");
+        }
+        Ok(())
+    }
+}
+
+impl Backend for FaultyBackend<'_> {
+    fn name(&self) -> &'static str {
+        // transparent: reports and logs show the real executor.
+        self.inner.name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn executions(&self) -> u64 {
+        self.inner.executions()
+    }
+
+    fn marshal_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        self.marshal_fault("f32")?;
+        self.inner.marshal_f32(data, shape)
+    }
+
+    fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        self.marshal_fault("i32")?;
+        self.inner.marshal_i32(data, shape)
+    }
+
+    fn execute(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.execute_fault(name)?;
+        self.inner.execute(name, inputs)
+    }
+
+    fn theta0(&self, model: &str) -> Result<Vec<f32>> {
+        self.inner.theta0(model)
+    }
+
+    fn phi0(&self, model: &str) -> Result<Vec<f32>> {
+        self.inner.phi0(model)
+    }
+
+    fn perf(&self) -> BackendPerf {
+        self.inner.perf()
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.st.borrow().stats
+    }
+
+    fn take_injected_delay_s(&self) -> f64 {
+        std::mem::take(&mut self.st.borrow_mut().pending_delay_s)
+    }
+
+    fn warm(&self, segment: &str, theta: &Value) -> Result<()> {
+        self.inner.warm(segment, theta)
+    }
+
+    fn release(&self, buf_id: u64) {
+        self.inner.release(buf_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let p = FaultPlan::parse("exec:0.05,marshal:0.01,spike:0.02x0.5,burst:3")
+            .unwrap();
+        assert_eq!(p.exec_rate, 0.05);
+        assert_eq!(p.marshal_rate, 0.01);
+        assert_eq!(p.spike_rate, 0.02);
+        assert_eq!(p.spike_s, 0.5);
+        assert_eq!(p.burst, 3);
+        assert!(p.enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn none_is_default_and_disabled() {
+        assert_eq!(FaultPlan::parse("none").unwrap(), FaultPlan::none());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
+        assert_eq!(FaultPlan::default(), FaultPlan::none());
+        assert!(!FaultPlan::none().enabled());
+        assert_eq!(FaultPlan::none().spec(), "none");
+    }
+
+    #[test]
+    fn spec_rejects_nonsense() {
+        assert!(FaultPlan::parse("exec:1.5").is_err());
+        assert!(FaultPlan::parse("exec:-0.1").is_err());
+        assert!(FaultPlan::parse("spike:0.1").is_err()); // missing xSECONDS
+        assert!(FaultPlan::parse("burst:0").is_err());
+        assert!(FaultPlan::parse("warp:0.1").is_err());
+        assert!(FaultPlan::parse("exec").is_err());
+    }
+
+    #[test]
+    fn injection_sequence_is_seed_deterministic() {
+        let inner = crate::testkit::refcpu_backend();
+        let plan = FaultPlan::parse("marshal:0.5").unwrap();
+        let trial = |seed: u64| -> Vec<bool> {
+            let fb = FaultyBackend::new(inner.as_ref(), plan, seed);
+            (0..64)
+                .map(|_| fb.marshal_f32(&[1.0], &[1]).is_err())
+                .collect()
+        };
+        assert_eq!(trial(7), trial(7), "same seed, same fault sequence");
+        assert_ne!(trial(7), trial(8), "different seeds diverge");
+        let faults = trial(7).iter().filter(|&&f| f).count();
+        assert!((16..=48).contains(&faults), "rate ~0.5, got {faults}/64");
+    }
+
+    #[test]
+    fn burst_faults_persist_for_n_calls() {
+        let inner = crate::testkit::refcpu_backend();
+        let mut plan = FaultPlan::parse("marshal:0.05,burst:4").unwrap();
+        plan.seed = 3;
+        let fb = FaultyBackend::new(inner.as_ref(), plan, 1);
+        let outcomes: Vec<bool> = (0..256)
+            .map(|_| fb.marshal_f32(&[1.0], &[1]).is_err())
+            .collect();
+        // every fault must open a run of exactly `burst` consecutive
+        // failures (two adjacent bursts merge into a longer run, so check
+        // run lengths are multiples of nothing — simply ≥ burst).
+        let mut i = 0;
+        let mut saw_burst = false;
+        while i < outcomes.len() {
+            if outcomes[i] {
+                let start = i;
+                while i < outcomes.len() && outcomes[i] {
+                    i += 1;
+                }
+                if i < outcomes.len() {
+                    // complete run: length must be ≥ burst (merged runs
+                    // can only be longer).
+                    assert!(
+                        i - start >= 4,
+                        "fault run of {} < burst 4 at {start}",
+                        i - start
+                    );
+                    saw_burst = true;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        assert!(saw_burst, "no complete fault burst observed in 256 calls");
+        assert!(fb.fault_stats().marshal_faults >= 4);
+    }
+
+    #[test]
+    fn spikes_accumulate_and_drain_virtual_time() {
+        let inner = crate::testkit::refcpu_backend();
+        let plan = FaultPlan::parse("spike:1x0.25").unwrap();
+        let fb = FaultyBackend::new(inner.as_ref(), plan, 1);
+        // spike draws happen on execute; use a real tiny segment via
+        // fault bookkeeping only (execute_fault is private — drive it
+        // through the trait with a bogus segment that will error *after*
+        // fault bookkeeping in the inner backend).
+        let _ = fb.execute("nonexistent-segment", &[]);
+        let _ = fb.execute("nonexistent-segment", &[]);
+        assert_eq!(fb.fault_stats().latency_spikes, 2);
+        assert!((fb.fault_stats().spike_s_total - 0.5).abs() < 1e-12);
+        assert!((fb.take_injected_delay_s() - 0.5).abs() < 1e-12);
+        assert_eq!(fb.take_injected_delay_s(), 0.0, "drain empties");
+    }
+}

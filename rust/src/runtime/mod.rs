@@ -25,13 +25,17 @@ pub mod artifact;
 pub mod backend;
 pub mod client;
 pub mod exec;
+pub mod faults;
 pub mod hostlit;
 pub mod refcpu;
 #[cfg(not(feature = "xla"))]
 pub mod stub;
 
 pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
-pub use backend::{Backend, BackendKind, BackendPerf, BackendSpec, Value};
+pub use backend::{
+    Backend, BackendKind, BackendPerf, BackendSpec, FaultStats, Value,
+};
+pub use faults::{FaultPlan, FaultyBackend};
 pub use client::PjrtBackend;
 pub use exec::TensorF32;
 pub use hostlit::HostLiteral;

@@ -35,6 +35,10 @@ pub enum DropReason {
     /// Even served ahead of everything queued, the request could not
     /// finish by its deadline (`earliest completion > deadline_t`).
     SloInfeasible,
+    /// The circuit breaker is open and no stale resident bank could serve
+    /// the request (see [`crate::serve::recovery`]).  Unlike the other
+    /// reasons this is decided at serve time, not arrival time.
+    BackendUnavailable,
 }
 
 impl DropReason {
@@ -42,6 +46,7 @@ impl DropReason {
         match self {
             DropReason::QueueFull => "queue-full",
             DropReason::SloInfeasible => "slo-infeasible",
+            DropReason::BackendUnavailable => "backend-unavailable",
         }
     }
 }

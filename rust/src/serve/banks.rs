@@ -19,6 +19,10 @@
 //! [`crate::model::ModelSession::release_params`] → `Backend::release`,
 //! so inactive scenarios stop holding backend memory.
 
+// Serving hot path: every failure must surface as a recoverable Result
+// (reachable under injected faults), never a panic.
+#![deny(clippy::disallowed_methods)]
+
 use anyhow::Result;
 
 use crate::bitset::BitSet;
@@ -125,7 +129,9 @@ impl BankSet {
                 .enumerate()
                 .min_by_key(|(_, b)| b.last_used)
                 .map(|(i, _)| i)
-                .unwrap();
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bank set at capacity but empty")
+                })?;
             let bank = &mut self.banks[idx];
             let evicted = bank.scenario;
             self.evictions += 1;
@@ -166,14 +172,24 @@ impl BankSet {
     }
 
     /// The resident serving θ for `scenario` (must follow a successful
-    /// [`BankSet::ensure`] for it).
-    pub fn params(&self, scenario: usize) -> &Params {
-        &self
-            .banks
+    /// [`BankSet::ensure`] for it — a missing bank is a recoverable
+    /// engine-sequencing error, not a panic).
+    pub fn params(&self, scenario: usize) -> Result<&Params> {
+        self.resident_params(scenario).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bank for scenario {scenario} not resident; call ensure first"
+            )
+        })
+    }
+
+    /// The resident bank for `scenario` if one exists, *without* checking
+    /// freshness or rebuilding — the degraded-serving path uses this to
+    /// serve from a stale bank while the circuit breaker is open.
+    pub fn resident_params(&self, scenario: usize) -> Option<&Params> {
+        self.banks
             .iter()
             .find(|b| b.scenario == scenario)
-            .expect("bank not resident; call ensure first")
-            .params
+            .map(|b| &b.params)
     }
 
     /// Banks (re)built: every miss, invalidation, or forced rebuild.
@@ -203,6 +219,7 @@ impl BankSet {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests may unwrap freely
 mod tests {
     use super::*;
     use crate::data::benchmarks::Scenario;
@@ -276,6 +293,9 @@ mod tests {
             banks.ensure(1, &ctx, false).unwrap(),
             BankInstall::Installed { evicted: None }
         );
-        assert_eq!(banks.params(1).theta()[0], params.theta()[0]);
+        assert_eq!(banks.params(1).unwrap().theta()[0], params.theta()[0]);
+        assert!(banks.params(0).is_err(), "evicted bank is a Result error");
+        assert!(banks.resident_params(1).is_some());
+        assert!(banks.resident_params(0).is_none());
     }
 }

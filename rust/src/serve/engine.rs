@@ -41,6 +41,21 @@
 //! * **window > 0**: requests draw fewer rows, wait up to the
 //!   virtual-time window, and share padded executes per scenario group;
 //!   per-request latency = queueing delay + batched service time.
+//!
+//! # Fault tolerance
+//!
+//! Since PR 6 every batch execute runs under the [`super::recovery`]
+//! machinery: failed executes retry with exponential virtual-time backoff;
+//! a streak of batch failures trips a circuit breaker, and while it is
+//! open the engine serves from the stale resident bank (requests marked
+//! `degraded`) or sheds with `Dropped{backend-unavailable}`; a mid-flush
+//! failure requeues the unserved groups in order, so no request is ever
+//! lost across retry/requeue/degrade.  With `recovery.enabled == false`
+//! the first error propagates out of [`ServeEngine::poll`] unchanged.
+
+// Serving hot path: every failure must surface as a recoverable Result
+// (reachable under injected faults), never a panic.
+#![deny(clippy::disallowed_methods)]
 
 use std::sync::OnceLock;
 
@@ -56,6 +71,7 @@ use super::banks::{BankInstall, BankSet};
 use super::batcher::AdaptiveBatcher;
 use super::latency::{LatencyModel, LatencySummary};
 use super::queue::{QueuedRequest, RequestQueue};
+use super::recovery::{BreakerState, CircuitBreaker, RecoveryConfig};
 use super::scheduler::Scheduler;
 use super::ServeConfig;
 
@@ -97,6 +113,9 @@ pub struct ServedRequest {
     pub queue_depth: usize,
     /// Completion passed the request's own `deadline_t`.
     pub deadline_miss: bool,
+    /// Served from a *stale* resident bank while the circuit breaker was
+    /// open (fingerprint-excluded, like the latency fields).
+    pub degraded: bool,
 }
 
 /// What a [`ServeEngine::poll`]/[`ServeEngine::drain`] call observed.
@@ -141,6 +160,12 @@ pub struct ServeEngine {
     served: u64,
     drops_queue_full: u64,
     drops_slo_infeasible: u64,
+    recovery: RecoveryConfig,
+    breaker: CircuitBreaker,
+    serve_retries: u64,
+    flush_failures: u64,
+    degraded_serves: u64,
+    drops_backend_unavailable: u64,
 }
 
 impl ServeEngine {
@@ -185,6 +210,12 @@ impl ServeEngine {
             served: 0,
             drops_queue_full: 0,
             drops_slo_infeasible: 0,
+            recovery: cfg.recovery,
+            breaker: cfg.recovery.breaker(),
+            serve_retries: 0,
+            flush_failures: 0,
+            degraded_serves: 0,
+            drops_backend_unavailable: 0,
         }
     }
 
@@ -264,9 +295,44 @@ impl ServeEngine {
         self.drops_slo_infeasible
     }
 
-    /// Requests shed at arrival, all reasons.
+    /// Requests shed at serve time because the circuit breaker was open
+    /// and no stale resident bank could stand in.
+    pub fn drops_backend_unavailable(&self) -> u64 {
+        self.drops_backend_unavailable
+    }
+
+    /// Requests shed, all reasons (arrival- and serve-time).
     pub fn requests_dropped(&self) -> u64 {
-        self.drops_queue_full + self.drops_slo_infeasible
+        self.drops_queue_full
+            + self.drops_slo_infeasible
+            + self.drops_backend_unavailable
+    }
+
+    /// Batch execute retries performed (attempts beyond the first).
+    pub fn serve_retries(&self) -> u64 {
+        self.serve_retries
+    }
+
+    /// Flushes whose batch exhausted its retries (the group was requeued
+    /// and the error absorbed by the recovery layer).
+    pub fn flush_failures(&self) -> u64 {
+        self.flush_failures
+    }
+
+    /// Times the circuit breaker tripped open.
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker.trips()
+    }
+
+    /// Requests served from a stale resident bank while the breaker was
+    /// open.
+    pub fn degraded_serves(&self) -> u64 {
+        self.degraded_serves
+    }
+
+    /// Current circuit-breaker state.
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
     }
 
     /// Padded artifact executions performed so far.
@@ -301,6 +367,11 @@ impl ServeEngine {
                 match reason {
                     DropReason::QueueFull => self.drops_queue_full += 1,
                     DropReason::SloInfeasible => self.drops_slo_infeasible += 1,
+                    // never produced at arrival time (serve-time verdict),
+                    // but account it if a custom policy ever returns it.
+                    DropReason::BackendUnavailable => {
+                        self.drops_backend_unavailable += 1
+                    }
                 }
                 if debug_enabled() {
                     eprintln!(
@@ -348,7 +419,33 @@ impl ServeEngine {
             if batch.is_empty() {
                 return Ok(());
             }
-            self.serve_flush(batch, t, ctx, out)?;
+            self.flush_absorbing(batch, t, ctx, out)?;
+        }
+    }
+
+    /// Run one flush, absorbing the failure when recovery is enabled: the
+    /// failing groups were requeued in order by `serve_flush`, the breaker
+    /// recorded the failure, and the caller's loop makes progress — each
+    /// iteration either serves (queue shrinks) or adds a breaker failure,
+    /// and an open breaker degrades/sheds, so the loop terminates.  With
+    /// recovery disabled the error propagates exactly as before PR 6.
+    fn flush_absorbing(
+        &mut self,
+        batch: Vec<QueuedRequest>,
+        t: f64,
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        match self.serve_flush(batch, t, ctx, out) {
+            Ok(()) => Ok(()),
+            Err(e) if self.recovery.enabled => {
+                self.flush_failures += 1;
+                if debug_enabled() {
+                    eprintln!("[dbg] t={t:.0} flush failed (absorbed): {e:#}");
+                }
+                Ok(())
+            }
+            Err(e) => Err(e),
         }
     }
 
@@ -365,7 +462,7 @@ impl ServeEngine {
                     // None on a non-empty queue): stop rather than spin
                     return Ok(());
                 }
-                self.serve_flush(batch, now, ctx, &mut out)?;
+                self.flush_absorbing(batch, now, ctx, &mut out)?;
             }
             Ok(())
         })();
@@ -426,7 +523,8 @@ impl ServeEngine {
             // arrival, so there this is a no-op and flush times are
             // unchanged.)
             let t = group.iter().fold(due, |d, r| d.max(r.arrival_t));
-            if let Err(e) = self.serve_group(*scenario, group, t, waiting, ctx, out)
+            if let Err(e) =
+                self.serve_group_recovered(*scenario, group, t, waiting, ctx, out)
             {
                 // serve_group is all-or-nothing (the fallible execute
                 // precedes every per-request record), so the failing and
@@ -442,10 +540,11 @@ impl ServeEngine {
         Ok(())
     }
 
-    /// One padded execute for a same-scenario group: ensure the resident
-    /// bank θ, pack + pad, run the artifact once, scatter predictions and
-    /// energy scores back per request, and charge latency.
-    fn serve_group(
+    /// [`ServeEngine::serve_group`] under the recovery policy: consult the
+    /// circuit breaker, retry with exponential virtual-time backoff, and
+    /// record the outcome.  A half-open probe gets exactly one attempt.
+    /// With recovery disabled this is a plain `serve_group` call.
+    fn serve_group_recovered(
         &mut self,
         scenario: usize,
         group: &[QueuedRequest],
@@ -454,21 +553,138 @@ impl ServeEngine {
         ctx: &ServeCtx,
         out: &mut Vec<ServeEvent>,
     ) -> Result<()> {
-        match self.banks.ensure(scenario, ctx, self.disable_serving_cache)? {
-            BankInstall::Hit => {}
-            BankInstall::Installed { evicted } => {
-                out.push(ServeEvent::BankInstalled { scenario, evicted });
+        if !self.recovery.enabled {
+            return self
+                .serve_group(scenario, group, due, flush_waiting, ctx, out, false);
+        }
+        if !self.breaker.allow(due) {
+            return self
+                .serve_degraded(scenario, group, due, flush_waiting, ctx, out);
+        }
+        let retry = self.recovery.retry();
+        let max_attempts = if self.breaker.state() == BreakerState::HalfOpen {
+            1 // the probe: one attempt decides close vs reopen
+        } else {
+            retry.max_attempts
+        };
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            // failed attempts push the batch's due time back by the
+            // cumulative backoff — charged through the virtual clock via
+            // `Scheduler::admit_serve`, never wall time.
+            let t = due + retry.total_backoff_s(attempt - 1);
+            match self
+                .serve_group(scenario, group, t, flush_waiting, ctx, out, false)
+            {
+                Ok(()) => {
+                    self.serve_retries += (attempt - 1) as u64;
+                    self.breaker.on_success();
+                    return Ok(());
+                }
+                Err(e) if attempt >= max_attempts => {
+                    self.serve_retries += (attempt - 1) as u64;
+                    self.breaker.on_failure(t);
+                    return Err(e);
+                }
+                Err(_) => {} // retry after backoff
             }
         }
+    }
+
+    /// The breaker is open: serve from the *stale* resident bank (marked
+    /// degraded) when allowed and possible, otherwise shed every request
+    /// in the group with `Dropped{backend-unavailable}`.  Either way this
+    /// returns `Ok` — the engine makes progress while degraded.
+    fn serve_degraded(
+        &mut self,
+        scenario: usize,
+        group: &[QueuedRequest],
+        due: f64,
+        flush_waiting: usize,
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        if self.recovery.degraded_serving
+            && self.banks.resident_params(scenario).is_some()
+        {
+            // the stale bank may itself fault mid-execute; fall through
+            // to shedding rather than failing the flush.
+            match self
+                .serve_group(scenario, group, due, flush_waiting, ctx, out, true)
+            {
+                Ok(()) => {
+                    self.degraded_serves += group.len() as u64;
+                    return Ok(());
+                }
+                Err(e) => {
+                    if debug_enabled() {
+                        eprintln!(
+                            "[dbg] t={due:.0} scen={scenario} degraded serve \
+                             failed, shedding: {e:#}"
+                        );
+                    }
+                }
+            }
+        }
+        for req in group {
+            self.drops_backend_unavailable += 1;
+            out.push(ServeEvent::RequestDropped {
+                arrival_t: req.arrival_t,
+                scenario: req.scenario,
+                deadline_t: req.deadline_t,
+                reason: DropReason::BackendUnavailable,
+            });
+        }
+        Ok(())
+    }
+
+    /// One padded execute for a same-scenario group: ensure the resident
+    /// bank θ, pack + pad, run the artifact once, scatter predictions and
+    /// energy scores back per request, and charge latency.  `degraded`
+    /// skips the bank freshness check and serves from the stale resident
+    /// bank (breaker-open path); the fallible calls all precede the first
+    /// per-request record, so a failure leaves no partial state.
+    #[allow(clippy::too_many_arguments)]
+    fn serve_group(
+        &mut self,
+        scenario: usize,
+        group: &[QueuedRequest],
+        due: f64,
+        flush_waiting: usize,
+        ctx: &ServeCtx,
+        out: &mut Vec<ServeEvent>,
+        degraded: bool,
+    ) -> Result<()> {
+        if !degraded {
+            match self.banks.ensure(scenario, ctx, self.disable_serving_cache)? {
+                BankInstall::Hit => {}
+                BankInstall::Installed { evicted } => {
+                    out.push(ServeEvent::BankInstalled { scenario, evicted });
+                }
+            }
+        }
+        let params = if degraded {
+            self.banks.resident_params(scenario).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no resident bank for scenario {scenario} to serve degraded"
+                )
+            })?
+        } else {
+            self.banks.params(scenario)?
+        };
         let packed = self.batcher.pack_into(group, &mut self.scratch);
         // ONE artifact execution serves every coalesced request's
         // prediction and OOD energy score, through this scenario's head.
-        let logits = ctx.sess.infer(self.banks.params(scenario), &packed.x)?;
+        let logits = ctx.sess.infer(params, &packed.x)?;
         self.scratch = packed.x;
         let pred = logits.argmax_rows();
         let lse = logits.logsumexp_rows();
 
-        let exec_s = self.latency.exec_s();
+        // injected latency spikes (fault harness) accrued on this execute
+        // are charged as extra service time — virtual clock, never wall.
+        let spike_s = ctx.sess.be.take_injected_delay_s();
+        let exec_s = self.latency.exec_s() + spike_s;
         let service_start = self.scheduler.admit_serve(due, exec_s);
         self.latency.charge_execute(exec_s);
         self.executes += 1;
@@ -517,6 +733,7 @@ impl ServeEngine {
                 batch_requests,
                 queue_depth,
                 deadline_miss,
+                degraded,
             }));
         }
         Ok(())

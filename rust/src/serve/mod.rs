@@ -51,6 +51,7 @@ pub mod batcher;
 pub mod engine;
 pub mod latency;
 pub mod queue;
+pub mod recovery;
 pub mod scheduler;
 
 pub use admission::{
@@ -61,6 +62,7 @@ pub use batcher::{AdaptiveBatcher, BatchSpan, PaddedBatch};
 pub use engine::{ServeCtx, ServeEngine, ServeEvent, ServedRequest};
 pub use latency::{LatencyModel, LatencySummary};
 pub use queue::{QueuedRequest, RequestQueue};
+pub use recovery::{BreakerState, CircuitBreaker, RecoveryConfig, RetryPolicy};
 pub use scheduler::{RoundDecision, Scheduler};
 
 /// Serving-engine knobs (part of [`crate::sim::RunConfig`]).
@@ -100,6 +102,11 @@ pub struct ServeConfig {
     /// scenarios a mixed-scenario burst never rebuilds serving θ after
     /// warm-up.
     pub bank_capacity: usize,
+    /// Fault recovery: retry/backoff, circuit breaker, degraded serving
+    /// (see [`recovery::RecoveryConfig`]).  Enabled by default — with no
+    /// faults injected the recovery state never changes, so the healthy
+    /// path and its fingerprint are untouched.
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +121,7 @@ impl Default for ServeConfig {
             max_queue: 0,
             shed_infeasible: false,
             bank_capacity: 4,
+            recovery: RecoveryConfig::default(),
         }
     }
 }

@@ -1,0 +1,264 @@
+//! Fault recovery for the serving plane: retry with exponential backoff
+//! (in *virtual* time) and a per-backend circuit breaker.
+//!
+//! Under injected faults (`runtime/faults.rs`) a batch execute can fail
+//! transiently (retry wins), persistently (retries burn attempts), or the
+//! backend can wedge outright.  The engine wires these pieces together:
+//!
+//! * [`RetryPolicy`] — up to `max_attempts` tries per batch, each retry
+//!   pushing the batch's due time back by an exponentially growing
+//!   backoff.  Backoff is charged through the virtual clock (the delayed
+//!   due time feeds `Scheduler::admit_serve`), never wall time.
+//! * [`CircuitBreaker`] — classic closed → open → half-open:
+//!   `breaker_threshold` consecutive batch failures open the circuit;
+//!   while open the engine stops attempting executes and **degrades** —
+//!   serving from the stale resident bank (marked `degraded` on the
+//!   [`crate::metrics::RequestRecord`]) or shedding with
+//!   `Dropped{backend-unavailable}` when no bank is resident; after
+//!   `breaker_cooldown_s` virtual seconds one half-open probe batch is
+//!   allowed through, and its outcome closes or re-opens the circuit.
+//!
+//! Every transition is a pure function of virtual time and the (seeded)
+//! fault sequence, so recovery behaviour is bit-reproducible across runs
+//! and sweep worker counts.  With no faults injected none of this state
+//! ever changes, and the default config's report fingerprint is identical
+//! to a build without the recovery layer.
+
+/// Recovery knobs (part of [`crate::serve::ServeConfig`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryConfig {
+    /// Master switch.  `true` (the default) absorbs batch failures into
+    /// retry/degrade/shed; `false` propagates the first execute error up
+    /// through `ServeEngine::poll` exactly as before this layer existed.
+    pub enabled: bool,
+    /// Total attempts per batch (first try + retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, in virtual milliseconds.
+    pub backoff_ms: f64,
+    /// Multiplier applied to the backoff after each failed attempt.
+    pub backoff_mult: f64,
+    /// Consecutive batch failures that trip the breaker open.
+    pub breaker_threshold: u32,
+    /// Virtual seconds the breaker stays open before a half-open probe.
+    pub breaker_cooldown_s: f64,
+    /// While the breaker is open, serve from the stale resident bank
+    /// (marked degraded) instead of shedding everything.
+    pub degraded_serving: bool,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> RecoveryConfig {
+        RecoveryConfig {
+            enabled: true,
+            max_attempts: 3,
+            backoff_ms: 10.0,
+            backoff_mult: 2.0,
+            breaker_threshold: 3,
+            breaker_cooldown_s: 30.0,
+            degraded_serving: true,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    pub fn retry(&self) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: self.max_attempts.max(1),
+            backoff_s: self.backoff_ms / 1e3,
+            mult: self.backoff_mult.max(1.0),
+        }
+    }
+
+    pub fn breaker(&self) -> CircuitBreaker {
+        CircuitBreaker::new(
+            self.breaker_threshold.max(1),
+            self.breaker_cooldown_s.max(0.0),
+        )
+    }
+}
+
+/// Bounded retry with exponential backoff in virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    backoff_s: f64,
+    mult: f64,
+}
+
+impl RetryPolicy {
+    /// Virtual-time backoff before retry number `retry` (1-based): the
+    /// first retry waits `backoff_s`, the second `backoff_s * mult`, …
+    pub fn backoff_s(&self, retry: u32) -> f64 {
+        debug_assert!(retry >= 1);
+        self.backoff_s * self.mult.powi(retry as i32 - 1)
+    }
+
+    /// Cumulative backoff charged once `retry` retries have happened.
+    pub fn total_backoff_s(&self, retries: u32) -> f64 {
+        (1..=retries).map(|r| self.backoff_s(r)).sum()
+    }
+}
+
+/// Circuit state: closed (normal), open (degrading), half-open (one
+/// probe in flight).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Per-backend circuit breaker over batch outcomes (virtual-time clocked).
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    threshold: u32,
+    cooldown_s: f64,
+    consecutive_failures: u32,
+    opened_at: f64,
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown_s: f64) -> CircuitBreaker {
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            threshold: threshold.max(1),
+            cooldown_s,
+            consecutive_failures: 0,
+            opened_at: 0.0,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Times the breaker transitioned into `Open` (including half-open
+    /// probes that failed and re-opened it).
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// May an execute be attempted at virtual time `now`?  While open,
+    /// returns `false` until the cooldown elapses, then transitions to
+    /// half-open and admits exactly one probe.
+    pub fn allow(&mut self, now: f64) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if now - self.opened_at >= self.cooldown_s {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A batch (or half-open probe) succeeded: close and reset.
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.consecutive_failures = 0;
+    }
+
+    /// A batch exhausted its retries (or the half-open probe failed) at
+    /// virtual time `now`.
+    pub fn on_failure(&mut self, now: f64) {
+        self.consecutive_failures += 1;
+        let reopen = self.state == BreakerState::HalfOpen
+            || self.consecutive_failures >= self.threshold;
+        if reopen && self.state != BreakerState::Open {
+            self.state = BreakerState::Open;
+            self.opened_at = now;
+            self.trips += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let r = RecoveryConfig::default().retry();
+        assert_eq!(r.max_attempts, 3);
+        assert!((r.backoff_s(1) - 0.010).abs() < 1e-12);
+        assert!((r.backoff_s(2) - 0.020).abs() < 1e-12);
+        assert!((r.backoff_s(3) - 0.040).abs() < 1e-12);
+        assert!((r.total_backoff_s(2) - 0.030).abs() < 1e-12);
+        assert_eq!(r.total_backoff_s(0), 0.0);
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let mut b = CircuitBreaker::new(3, 30.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(0.0));
+        b.on_failure(1.0);
+        b.on_failure(2.0);
+        assert_eq!(b.state(), BreakerState::Closed, "below threshold");
+        b.on_failure(3.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        assert!(!b.allow(10.0), "cooling down");
+        assert!(b.allow(33.0), "half-open probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens_immediately() {
+        let mut b = CircuitBreaker::new(3, 30.0);
+        for t in 0..3 {
+            b.on_failure(t as f64);
+        }
+        assert!(b.allow(31.0));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_failure(31.5);
+        assert_eq!(b.state(), BreakerState::Open, "one probe failure reopens");
+        assert_eq!(b.trips(), 2);
+        assert!(!b.allow(32.0));
+        assert!(b.allow(61.5 + 1e-9), "cooldown restarts from reopen");
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let mut b = CircuitBreaker::new(2, 5.0);
+        b.on_failure(0.0);
+        b.on_success();
+        b.on_failure(1.0);
+        assert_eq!(b.state(), BreakerState::Closed, "streak was reset");
+        b.on_failure(2.0);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn default_config_is_enabled_but_inert_without_faults() {
+        let c = RecoveryConfig::default();
+        assert!(c.enabled);
+        assert!(c.degraded_serving);
+        // with no failures ever reported, allow() is always true and no
+        // state changes — the healthy path is untouched.
+        let mut b = c.breaker();
+        for t in 0..100 {
+            assert!(b.allow(t as f64));
+        }
+        assert_eq!(b.trips(), 0);
+    }
+}

@@ -50,7 +50,7 @@ use crate::data::stream::{EventKind, Stream};
 use crate::metrics::{Report, RequestRecord, RoundRecord};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
-use crate::runtime::Backend;
+use crate::runtime::{faults, Backend, FaultPlan, FaultyBackend};
 use crate::serve::{
     QueuedRequest, RoundDecision, ServeConfig, ServeCtx, ServeEngine, ServeEvent,
 };
@@ -97,6 +97,11 @@ pub struct RunConfig {
     /// pre-engine behaviour.  Reports must be bit-identical to
     /// `serve.batch_window_s == 0`.
     pub serve_direct: bool,
+    /// Deterministic fault injection (`--faults`/`--fault-seed`; see
+    /// [`crate::runtime::faults`]).  [`FaultPlan::none()`] — the default —
+    /// is a true passthrough: [`run_config`] constructs no decorator and
+    /// reports stay bit-identical to a build without the fault layer.
+    pub faults: FaultPlan,
 }
 
 impl RunConfig {
@@ -123,6 +128,7 @@ impl RunConfig {
             disable_serving_cache: false,
             serve: ServeConfig::default(),
             serve_direct: false,
+            faults: faults::env_plan(),
         }
     }
 
@@ -159,6 +165,10 @@ pub struct Simulation<'b> {
     aug_a: Vec<f32>,
     aug_b: Vec<f32>,
     last_energy_score: Option<f64>,
+    /// Fine-tuning rounds whose θ was rolled back to the last good
+    /// generation after a mid-round fault (tentpole: a failed round must
+    /// not poison session caches with a half-updated θ).
+    round_rollbacks: u64,
     report: Report,
 }
 
@@ -186,7 +196,14 @@ impl<'b> Simulation<'b> {
         for _ in 0..cfg.benchmark.warmup_batches() {
             let (x, y) =
                 schedule.world.batch(sess.m.batch_train, 0, &warm_classes);
-            sess.train_step(&mut params, &x, &y, &warm_fs)?;
+            if let Err(e) = sess.train_step(&mut params, &x, &y, &warm_fs) {
+                // under injected faults a lost warmup batch is survivable
+                // (pre-deployment training is best-effort); without a
+                // fault plan it is a real error.
+                if !cfg.faults.enabled() {
+                    return Err(e);
+                }
+            }
         }
         let mut cwr = Cwr::new(&sess.m);
         cwr.consolidate(&sess.m, &params, &warm_classes);
@@ -270,6 +287,7 @@ impl<'b> Simulation<'b> {
             aug_a: Vec::new(),
             aug_b: Vec::new(),
             last_energy_score: None,
+            round_rollbacks: 0,
             report,
         })
     }
@@ -281,6 +299,10 @@ impl<'b> Simulation<'b> {
         // execution-core counters are cumulative per backend — report the
         // per-run delta, like the per-session marshal counters.
         let perf0 = self.sess.be.perf();
+        let faults0 = self.sess.be.fault_stats();
+        // latency spikes injected during pre-deployment warmup happened
+        // before virtual time starts — discard, don't charge.
+        let _ = self.sess.be.take_injected_delay_s();
         let mut buffer: Vec<(Vec<f32>, Vec<i32>, usize)> = Vec::new();
         let mut trained_classes = BitSet::new(self.sess.m.classes);
         let mut reinit_done: Vec<bool> = vec![false; self.sess.m.classes];
@@ -335,13 +357,21 @@ impl<'b> Simulation<'b> {
                         self.push_val(&x, &y);
                     }
                     if probe_pending {
-                        self.freeze.on_scenario_probe(
+                        match self.freeze.on_scenario_probe(
                             &self.sess,
                             &self.params,
                             &x,
                             &mut self.book,
-                        )?;
-                        probe_pending = false;
+                        ) {
+                            Ok(()) => probe_pending = false,
+                            // a faulted probe stays pending and retries on
+                            // the next batch; without a fault plan the
+                            // error is real.
+                            Err(e) if !self.cfg.faults.enabled() => {
+                                return Err(e)
+                            }
+                            Err(_) => {}
+                        }
                     }
                     // CWR: first exposure of a class since the last change
                     // reinitializes its training row.
@@ -397,8 +427,11 @@ impl<'b> Simulation<'b> {
                                     &mut total_iters,
                                     &mut first_round,
                                 )?;
-                                let round_s =
-                                    self.book.breakdown.total_s() - ledger_s;
+                                // injected latency spikes during training
+                                // steps extend the round in virtual time.
+                                let round_s = self.book.breakdown.total_s()
+                                    - ledger_s
+                                    + self.sess.be.take_injected_delay_s();
                                 self.engine
                                     .scheduler_mut()
                                     .on_round(ev.t, round_s);
@@ -511,6 +544,23 @@ impl<'b> Simulation<'b> {
         self.report.bank_evictions = self.engine.bank_evictions();
         self.report.banks_peak_resident = self.engine.banks_peak_resident() as u64;
         self.report.per_scenario_latency = self.engine.per_scenario_latency();
+        // fault / recovery counters (fingerprint-excluded observability).
+        let fstats = self.sess.be.fault_stats();
+        self.report.faults_injected_exec =
+            fstats.exec_faults - faults0.exec_faults;
+        self.report.faults_injected_marshal =
+            fstats.marshal_faults - faults0.marshal_faults;
+        self.report.faults_injected_spikes =
+            fstats.latency_spikes - faults0.latency_spikes;
+        self.report.fault_delay_injected_s =
+            fstats.spike_s_total - faults0.spike_s_total;
+        self.report.serve_retries = self.engine.serve_retries();
+        self.report.serve_flush_failures = self.engine.flush_failures();
+        self.report.breaker_trips = self.engine.breaker_trips();
+        self.report.degraded_serves = self.engine.degraded_serves();
+        self.report.drops_backend_unavailable =
+            self.engine.drops_backend_unavailable();
+        self.report.round_rollbacks = self.round_rollbacks;
         self.report.finish();
         Ok(self.report)
     }
@@ -538,7 +588,14 @@ impl<'b> Simulation<'b> {
             self.val_y.push(y);
         }
         self.book.charge_validation(&self.sess.m, b);
-        let acc = self.sess.accuracy(&self.params, &self.val_x, &self.val_y)?;
+        let acc = match self.sess.accuracy(&self.params, &self.val_x, &self.val_y)
+        {
+            Ok(a) => a,
+            // a faulted validation pass reads as zero accuracy for this
+            // round (policies treat it as a bad round, which is fair).
+            Err(_) if self.cfg.faults.enabled() => 0.0,
+            Err(e) => return Err(e),
+        };
         Ok(acc as f64)
     }
 
@@ -564,20 +621,37 @@ impl<'b> Simulation<'b> {
         }
         let batches = buffer.len();
         let mut iters_this_round = 0u64;
+        // θ snapshot for mid-round fault recovery: a step that fails
+        // partway through the round must not leave a half-updated θ in
+        // play, so the whole round rolls back to the last good generation
+        // (set_theta bumps the generation, invalidating session caches
+        // and resident serving banks built from the poisoned θ).
+        let theta_snapshot = self.params.theta().to_vec();
+        let mut failed: Option<anyhow::Error> = None;
         for (x, y, _scen) in buffer.drain(..) {
+            // keep draining so the buffer (and the world/aux RNG draws)
+            // stay in sync with the fault-free schedule, but stop
+            // stepping once a batch has failed.
             let labeled = match self.cfg.labeled_fraction {
                 None => true,
                 Some(f) => self.rng.f32() < f,
             };
+            if failed.is_some() {
+                continue;
+            }
             let scale = self.freeze.compute_inefficiency();
             self.book
                 .charge_train_scaled(&self.sess.m, self.freeze.state(), 1, scale);
-            if labeled {
-                self.sess
-                    .train_step(&mut self.params, &x, &y, self.freeze.state())?;
-                for &c in &y {
-                    trained_classes.insert(c as usize);
+            let step = if labeled {
+                let r = self
+                    .sess
+                    .train_step(&mut self.params, &x, &y, self.freeze.state());
+                if r.is_ok() {
+                    for &c in &y {
+                        trained_classes.insert(c as usize);
+                    }
                 }
+                r
             } else {
                 // SimSiam on two augmented views (noise + per-dim jitter),
                 // written into reused per-simulation buffers.
@@ -585,30 +659,59 @@ impl<'b> Simulation<'b> {
                 let mut v2 = std::mem::take(&mut self.aug_b);
                 self.augment(&x, &mut v1, &mut v2);
                 let mut phi = std::mem::take(&mut self.phi);
-                self.sess.ssl_step(
+                let r = self.sess.ssl_step(
                     &mut self.params,
                     &mut phi,
                     &v1,
                     &v2,
                     self.freeze.state(),
-                )?;
+                );
+                // restore the reused buffers before any error handling —
+                // losing φ on a fault would silently reset the SSL
+                // predictor for the rest of the run.
                 self.phi = phi;
                 self.aug_a = v1;
                 self.aug_b = v2;
+                r
+            };
+            match step.and_then(|()| {
+                self.freeze.after_iteration(
+                    &self.sess,
+                    &mut self.params,
+                    &mut self.book,
+                )
+            }) {
+                Ok(()) => {
+                    iters_this_round += 1;
+                    *total_iters += 1;
+                }
+                Err(e) => failed = Some(e),
             }
-            self.freeze
-                .after_iteration(&self.sess, &mut self.params, &mut self.book)?;
-            iters_this_round += 1;
-            *total_iters += 1;
+        }
+        if let Some(e) = failed {
+            self.params.set_theta(theta_snapshot);
+            self.round_rollbacks += 1;
+            if self.cfg.faults.enabled() {
+                // the round is abandoned: no validation, no round record,
+                // no policy adaptation on a rolled-back θ.
+                return Ok(());
+            }
+            return Err(e);
         }
         let val_acc = self.validation_accuracy()?;
         self.tune.on_round_end(*total_iters, val_acc);
-        self.freeze.on_round_end(
+        if let Err(e) = self.freeze.on_round_end(
             &self.sess,
             &mut self.params,
             val_acc,
             &mut self.book,
-        )?;
+        ) {
+            // a faulted end-of-round adaptation skips this round's freeze
+            // update; the policy re-evaluates next round.
+            if !self.cfg.faults.enabled() {
+                return Err(e);
+            }
+        }
         self.report.round_log.push(RoundRecord {
             t,
             scenario,
@@ -691,6 +794,7 @@ impl<'b> Simulation<'b> {
                 latency_s: s.latency_s,
                 batch_requests: s.batch_requests,
                 queue_depth: s.queue_depth,
+                degraded: s.degraded,
             });
             self.last_energy_score = Some(s.energy_score);
             if !self.cfg.oracle_change_detection && self.detect_change()? {
@@ -715,5 +819,20 @@ impl<'b> Simulation<'b> {
         } else {
             Ok(false)
         }
+    }
+}
+
+/// Run `cfg` against `be`, honouring `cfg.faults`: with a fault plan the
+/// backend is wrapped in a [`FaultyBackend`] seeded from
+/// `cfg.seed ^ plan.seed` (so every sweep cell has its own deterministic
+/// fault stream); with [`FaultPlan::none()`] — the default — no decorator
+/// is constructed and the run is bit-identical to calling
+/// [`Simulation::new`]`(be, cfg)?.run()` directly.
+pub fn run_config(be: &dyn Backend, cfg: RunConfig) -> Result<Report> {
+    if cfg.faults.enabled() {
+        let fb = FaultyBackend::new(be, cfg.faults, cfg.seed);
+        Simulation::new(&fb, cfg)?.run()
+    } else {
+        Simulation::new(be, cfg)?.run()
     }
 }

@@ -14,7 +14,18 @@
 //! wall-clock timings — is identical no matter how many workers run (on
 //! the reference backend this determinism is *bit-exact*, enforced by
 //! `tests/backend_parity.rs`).
+//!
+//! # Supervision
+//!
+//! Worker cells run under [`std::panic::catch_unwind`]: a cell that
+//! panics restarts the worker's backend (interior caches may be
+//! mid-update at the unwind point) and re-runs the cell; after
+//! [`QUARANTINE_AFTER`] consecutive panics the cell is quarantined and
+//! its slot reports an error.  Because every run is seed-deterministic, a
+//! deterministic panic quarantines the *same* cell with the same message
+//! regardless of worker count, preserving N=1 vs N=4 equivalence.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -22,7 +33,57 @@ use anyhow::Result;
 use crate::metrics::{average, Report};
 use crate::runtime::{Backend, BackendKind, BackendSpec};
 
-use super::run::{RunConfig, Simulation};
+use super::run::{run_config, RunConfig};
+
+/// Consecutive panics of one sweep cell before it is quarantined (the
+/// first panic restarts the backend and requeues the cell once).
+pub const QUARANTINE_AFTER: u32 = 2;
+
+/// Render a `catch_unwind` payload for the quarantine error message.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one sweep cell under supervision: a panicking attempt restarts
+/// `be` from `spec` and re-runs the cell; [`QUARANTINE_AFTER`]
+/// consecutive panics quarantine it.  `Err` results from the run itself
+/// (not panics) pass through untouched — recoverable failures are the
+/// engine's job, supervision only contains crashes.
+fn run_supervised(
+    be: &mut Box<dyn Backend>,
+    mut restart: impl FnMut() -> Result<Box<dyn Backend>>,
+    i: usize,
+    cfg: &RunConfig,
+) -> Result<Report> {
+    let mut last = String::new();
+    for _ in 0..QUARANTINE_AFTER {
+        // AssertUnwindSafe: on panic the backend is discarded and rebuilt
+        // below, and the config clone is owned by the attempt — nothing
+        // in a half-unwound state is observed again.
+        let attempt =
+            catch_unwind(AssertUnwindSafe(|| run_config(be.as_ref(), cfg.clone())));
+        match attempt {
+            Ok(res) => return res,
+            Err(p) => {
+                last = panic_msg(p.as_ref());
+                *be = restart().map_err(|e| {
+                    e.context(format!(
+                        "sweep cell {i}: backend restart after panic failed"
+                    ))
+                })?;
+            }
+        }
+    }
+    Err(anyhow::anyhow!(
+        "sweep cell {i} quarantined after {QUARANTINE_AFTER} panics (last: {last})"
+    ))
+}
 
 /// Run `cfg` under `seeds` sequentially on a borrowed backend and return
 /// (mean report, per-seed reports).  The compatibility entry point —
@@ -36,7 +97,7 @@ pub fn run_averaged(
     let mut reports = Vec::with_capacity(seeds.len());
     for &s in seeds {
         let c = cfg.clone().with_seed(s);
-        reports.push(Simulation::new(be, c)?.run()?);
+        reports.push(run_config(be, c)?);
     }
     Ok((average(&reports), reports))
 }
@@ -94,10 +155,52 @@ impl ParallelSweeper {
     pub fn run_many(&self, cfgs: &[RunConfig]) -> Result<Vec<Report>> {
         let workers = self.jobs.min(cfgs.len());
         if workers <= 1 {
-            return cfgs
-                .iter()
-                .map(|c| Simulation::new(self.be.as_ref(), c.clone())?.run())
-                .collect();
+            // sequential path, same supervision semantics as the worker
+            // path: run on the main backend until a panic forces a
+            // replacement (the main backend cannot be rebuilt in place —
+            // it is borrowed — so a fresh one takes over from the spec).
+            let mut replacement: Option<Box<dyn Backend>> = None;
+            let mut out = Vec::with_capacity(cfgs.len());
+            for (i, c) in cfgs.iter().enumerate() {
+                let mut res = None;
+                for attempt in 1..=QUARANTINE_AFTER {
+                    let be: &dyn Backend =
+                        replacement.as_deref().unwrap_or(self.be.as_ref());
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        run_config(be, c.clone())
+                    })) {
+                        Ok(r) => {
+                            res = Some(r);
+                            break;
+                        }
+                        Err(p) => {
+                            let msg = panic_msg(p.as_ref());
+                            replacement = Some(self.spec.create().map_err(
+                                |e| {
+                                    e.context(format!(
+                                        "sweep cell {i}: backend restart \
+                                         after panic failed"
+                                    ))
+                                },
+                            )?);
+                            if attempt == QUARANTINE_AFTER {
+                                res = Some(Err(anyhow::anyhow!(
+                                    "sweep cell {i} quarantined after \
+                                     {QUARANTINE_AFTER} panics (last: {msg})"
+                                )));
+                            }
+                        }
+                    }
+                }
+                match res {
+                    Some(Ok(r)) => out.push(r),
+                    Some(Err(e)) => {
+                        return Err(e.context(format!("sweep job {i}")))
+                    }
+                    None => unreachable!("supervision loop always resolves"),
+                }
+            }
+            return Ok(out);
         }
         let spec = &self.spec;
         let next = Mutex::new(0usize);
@@ -111,7 +214,7 @@ impl ParallelSweeper {
             for _ in 0..workers {
                 scope.spawn(|| {
                     // each worker owns its backend: backends are !Sync.
-                    let be = match spec.create() {
+                    let mut be = match spec.create() {
                         Ok(be) => be,
                         Err(e) => {
                             *failed.lock().unwrap() = true;
@@ -129,8 +232,12 @@ impl ParallelSweeper {
                             *n += 1;
                             i
                         };
-                        let res = Simulation::new(be.as_ref(), cfgs[i].clone())
-                            .and_then(|s| s.run());
+                        let res = run_supervised(
+                            &mut be,
+                            || spec.create(),
+                            i,
+                            &cfgs[i],
+                        );
                         if res.is_err() {
                             *failed.lock().unwrap() = true;
                         }
@@ -186,5 +293,81 @@ impl ParallelSweeper {
             .chunks(seeds.len())
             .map(average)
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::benchmarks::Benchmark;
+    use crate::runtime::{FaultPlan, Manifest, Value};
+    use crate::testkit;
+
+    /// Panics on first contact — a crashed worker backend.
+    struct PanicBackend;
+
+    impl Backend for PanicBackend {
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+        fn manifest(&self) -> &Manifest {
+            panic!("injected backend crash")
+        }
+        fn executions(&self) -> u64 {
+            panic!("injected backend crash")
+        }
+        fn marshal_f32(&self, _: &[f32], _: &[usize]) -> Result<Value> {
+            panic!("injected backend crash")
+        }
+        fn marshal_i32(&self, _: &[i32], _: &[usize]) -> Result<Value> {
+            panic!("injected backend crash")
+        }
+        fn execute(&self, _: &str, _: &[&Value]) -> Result<Vec<Value>> {
+            panic!("injected backend crash")
+        }
+        fn theta0(&self, _: &str) -> Result<Vec<f32>> {
+            panic!("injected backend crash")
+        }
+        fn phi0(&self, _: &str) -> Result<Vec<f32>> {
+            panic!("injected backend crash")
+        }
+    }
+
+    fn quick(seed: u64) -> RunConfig {
+        let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+            .with_seed(seed);
+        c.n_requests = 40;
+        c.faults = FaultPlan::none();
+        c
+    }
+
+    #[test]
+    fn panicking_cell_restarts_backend_and_requeues() {
+        let spec = testkit::refcpu_spec();
+        let mut be: Box<dyn Backend> = Box::new(PanicBackend);
+        let got =
+            run_supervised(&mut be, || spec.create(), 0, &quick(3)).unwrap();
+        // the requeued attempt ran on the restarted (real) backend to
+        // completion, bit-identical to a crash-free run…
+        let direct =
+            run_config(testkit::refcpu_backend().as_ref(), quick(3)).unwrap();
+        assert_eq!(got.fingerprint(), direct.fingerprint());
+        // …and the worker keeps the restarted backend afterwards.
+        assert_eq!(be.name(), "refcpu");
+    }
+
+    #[test]
+    fn persistent_panic_quarantines_the_cell() {
+        let mut be: Box<dyn Backend> = Box::new(PanicBackend);
+        let err = run_supervised(
+            &mut be,
+            || Ok(Box::new(PanicBackend) as Box<dyn Backend>),
+            7,
+            &quick(3),
+        )
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("quarantined"), "got: {msg}");
+        assert!(msg.contains("sweep cell 7"), "got: {msg}");
     }
 }

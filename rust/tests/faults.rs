@@ -1,0 +1,174 @@
+//! Fault-injection & recovery integration tests (PR 6).
+//!
+//! Three contracts:
+//!
+//! * **Passthrough** — `FaultPlan::none()` (the default) is invisible:
+//!   reports are bit-identical whether the fault layer is absent,
+//!   bypassed by [`etuner::sim::run_config`], or present-but-empty as an
+//!   explicitly constructed [`FaultyBackend`] decorator.
+//! * **Conservation** — under a seeded chaos plan every arrival is either
+//!   served or accounted as dropped (queue-full, SLO-infeasible, or
+//!   backend-unavailable); no request is ever lost to a fault.
+//! * **Determinism** — fault streams are seeded per run, so sweeps stay
+//!   bit-identical across worker counts even while injecting.
+//!
+//! Golden tests pin `cfg.faults = FaultPlan::none()` explicitly so
+//! `ETUNER_FAULTS` (the `make ci-faults` lane) cannot leak into them.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::runtime::{FaultPlan, FaultyBackend};
+use etuner::sim::{run_config, ParallelSweeper, RunConfig, Simulation};
+use etuner::testkit;
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 80;
+    c.faults = FaultPlan::none(); // pinned: see module docs
+    c
+}
+
+#[test]
+fn disabled_fault_layer_is_bit_identical() {
+    let be = testkit::execution_backend();
+
+    let plain = Simulation::new(be.as_ref(), quick(42)).unwrap().run().unwrap();
+    // run_config with the empty plan constructs no decorator at all
+    let bypassed = run_config(be.as_ref(), quick(42)).unwrap();
+    assert_eq!(
+        plain.fingerprint(),
+        bypassed.fingerprint(),
+        "run_config with FaultPlan::none() diverged from a plain run"
+    );
+    // even an explicitly constructed decorator with the empty plan is a
+    // pure passthrough
+    let fb = FaultyBackend::new(be.as_ref(), FaultPlan::none(), 42);
+    let wrapped = Simulation::new(&fb, quick(42)).unwrap().run().unwrap();
+    assert_eq!(
+        plain.fingerprint(),
+        wrapped.fingerprint(),
+        "an empty FaultyBackend decorator changed the report"
+    );
+
+    // nothing injected, nothing recovered
+    for r in [&plain, &bypassed, &wrapped] {
+        assert_eq!(r.faults_injected_exec, 0);
+        assert_eq!(r.faults_injected_marshal, 0);
+        assert_eq!(r.faults_injected_spikes, 0);
+        assert_eq!(r.fault_delay_injected_s, 0.0);
+        assert_eq!(r.serve_retries, 0);
+        assert_eq!(r.serve_flush_failures, 0);
+        assert_eq!(r.breaker_trips, 0);
+        assert_eq!(r.degraded_serves, 0);
+        assert_eq!(r.drops_backend_unavailable, 0);
+        assert_eq!(r.round_rollbacks, 0);
+        assert!(r.requests.iter().all(|q| !q.degraded));
+    }
+}
+
+#[test]
+fn arrival_conservation_under_chaos() {
+    let be = testkit::execution_backend();
+    let mut cfg = quick(7);
+    cfg.serve.batch_window_s = 120.0;
+    cfg.serve.slo_ms = 300_000.0;
+    cfg.faults =
+        FaultPlan::parse("exec:0.1,marshal:0.02,spike:0.05x0.5,burst:2,seed:9")
+            .unwrap();
+    let r = run_config(be.as_ref(), cfg).unwrap();
+
+    assert!(
+        r.faults_injected_exec + r.faults_injected_marshal > 0,
+        "the chaos plan injected nothing — the decorator is not in the path"
+    );
+    // every arrival is served or accounted as dropped, never lost
+    assert_eq!(
+        r.requests.len() as u64 + r.requests_dropped,
+        80,
+        "requests lost under injected faults"
+    );
+    assert_eq!(
+        r.requests_dropped,
+        r.drops_queue_full + r.drops_slo_infeasible + r.drops_backend_unavailable,
+        "drop-reason counters do not add up"
+    );
+    // injected spike latency is charged through virtual time
+    if r.faults_injected_spikes > 0 {
+        assert!(r.fault_delay_injected_s > 0.0);
+    }
+}
+
+#[test]
+fn heavy_faults_roll_rounds_back_and_still_conserve() {
+    let be = testkit::execution_backend();
+    let mut cfg = quick(3);
+    cfg.faults = FaultPlan::parse("exec:0.4,burst:3,seed:2").unwrap();
+    let r = run_config(be.as_ref(), cfg).unwrap();
+
+    assert!(
+        r.round_rollbacks > 0,
+        "a 40% bursty exec-fault rate never failed a fine-tuning round"
+    );
+    assert_eq!(
+        r.requests.len() as u64 + r.requests_dropped,
+        80,
+        "requests lost under heavy faults"
+    );
+    // recovery machinery visibly engaged
+    assert!(r.serve_retries + r.serve_flush_failures + r.breaker_trips > 0);
+}
+
+#[test]
+fn fault_sweeps_are_bit_identical_across_workers() {
+    let seeds = [11u64, 12, 13];
+    let mut cfg = quick(0);
+    cfg.faults =
+        FaultPlan::parse("exec:0.08,burst:2,spike:0.03x0.25,seed:5").unwrap();
+
+    let sw1 = ParallelSweeper::new(testkit::refcpu_spec(), 1).unwrap();
+    let (m1, all1) = sw1.run_averaged(&cfg, &seeds).unwrap();
+    let sw4 = ParallelSweeper::new(testkit::refcpu_spec(), 4).unwrap();
+    let (m4, all4) = sw4.run_averaged(&cfg, &seeds).unwrap();
+
+    assert_eq!(all1.len(), all4.len());
+    let mut injected = 0u64;
+    for (i, (a, b)) in all1.iter().zip(&all4).enumerate() {
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "seed {}: N=1 vs N=4 sweep diverged under injected faults",
+            seeds[i]
+        );
+        // fault bookkeeping is seeded per run: identical across workers
+        assert_eq!(a.faults_injected_exec, b.faults_injected_exec);
+        assert_eq!(a.faults_injected_marshal, b.faults_injected_marshal);
+        assert_eq!(a.serve_retries, b.serve_retries);
+        assert_eq!(a.round_rollbacks, b.round_rollbacks);
+        injected += a.faults_injected_exec + a.faults_injected_marshal;
+    }
+    assert!(injected > 0, "no seed injected anything — plan inert");
+    assert_eq!(m1.fingerprint(), m4.fingerprint());
+}
+
+#[test]
+fn fault_seed_varies_the_fault_stream_only() {
+    let be = testkit::execution_backend();
+    let mut a = quick(5);
+    a.faults = FaultPlan::parse("exec:0.15,seed:1").unwrap();
+    let mut b = quick(5);
+    b.faults = FaultPlan::parse("exec:0.15,seed:2").unwrap();
+    let ra = run_config(be.as_ref(), a).unwrap();
+    let rb = run_config(be.as_ref(), b).unwrap();
+    // same run seed, different fault seed: both conserve arrivals
+    for r in [&ra, &rb] {
+        assert_eq!(r.requests.len() as u64 + r.requests_dropped, 80);
+    }
+    // and with the *same* fault seed the whole run is reproducible
+    let mut c = quick(5);
+    c.faults = FaultPlan::parse("exec:0.15,seed:1").unwrap();
+    let rc = run_config(be.as_ref(), c).unwrap();
+    assert_eq!(ra.fingerprint(), rc.fingerprint());
+    assert_eq!(ra.faults_injected_exec, rc.faults_injected_exec);
+}

@@ -17,6 +17,7 @@ use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::cost::device::DeviceModel;
 use etuner::data::benchmarks::{Benchmark, Scenario};
 use etuner::model::{Cwr, ModelSession, Params};
+use etuner::runtime::{FaultPlan, FaultyBackend};
 use etuner::serve::{
     batcher::span_rows, AdaptiveBatcher, Admission, DropReason, QueuePolicyKind,
     QueuedRequest, ServeConfig, ServeCtx, ServeEngine, ServeEvent, ServedRequest,
@@ -603,6 +604,66 @@ fn bank_capacity_one_still_serves_correctly_with_evictions() {
     for (a, b) in resident.iter().zip(&thrash) {
         assert_eq!(a.accuracy, b.accuracy);
         assert_eq!(a.energy_score, b.energy_score);
+    }
+}
+
+/// PR-6 satellite: a deterministic failing backend exercises the
+/// requeue path (`serve_flush` puts unserved groups back via
+/// `RequestQueue::requeue_front`) and, once the transient faults clear,
+/// the served order — and every served outcome — matches the fault-free
+/// run exactly.  Retries are disabled and the breaker is effectively
+/// unreachable, so *every* injected fault goes through requeue; a single
+/// scenario keeps each batch a single group, so a failed batch requeues
+/// whole and recomposes identically on the next take.
+#[test]
+fn requeue_preserves_service_order_once_faults_clear() {
+    let be = testkit::execution_backend();
+    let plan = FaultPlan::parse("exec:0.3,seed:4").unwrap();
+    let faulty = FaultyBackend::new(be.as_ref(), plan, 1);
+    let rig_faulty = Rig::new(&faulty);
+    let rig_clean = Rig::new(be.as_ref());
+
+    let rows = rig_clean.sess.m.batch_infer / 4;
+    let mut cfg = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    cfg.recovery.max_attempts = 1; // no in-place retry: force requeue
+    cfg.recovery.breaker_threshold = 1_000_000; // breaker never trips
+
+    let run = |rig: &Rig| -> (Vec<ServedRequest>, u64, u64) {
+        let mut eng = rig.engine(&cfg);
+        for i in 0..12 {
+            assert_eq!(
+                eng.on_arrival(rig.request(i as f64, 0, rows, i)),
+                Admission::Accepted
+            );
+        }
+        let events = eng.drain(100.0, &rig.ctx()).unwrap();
+        (served(&events), eng.flush_failures(), eng.requests_dropped())
+    };
+
+    let (clean, clean_failures, _) = run(&rig_clean);
+    let (recovered, failures, dropped) = run(&rig_faulty);
+
+    assert_eq!(clean_failures, 0);
+    assert!(
+        failures > 0,
+        "a 30% exec-fault rate never failed a flush — requeue path untested"
+    );
+    assert_eq!(dropped, 0, "transient faults must never shed");
+    assert_eq!(recovered.len(), clean.len(), "requests lost in requeue");
+    for (a, b) in clean.iter().zip(&recovered) {
+        assert_eq!(
+            a.arrival_t, b.arrival_t,
+            "service order changed across requeue/recovery"
+        );
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.accuracy, b.accuracy, "t={}: outcome changed", a.arrival_t);
+        assert_eq!(a.energy_score, b.energy_score);
+        assert!(!b.degraded, "breaker never opened, nothing is degraded");
     }
 }
 
