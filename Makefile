@@ -5,6 +5,7 @@
 #   make test        tier-1 gate: release build + full test suite
 #   make ci          stub-feature gate: build + tests + fmt + clippy -D warnings
 #   make ci-faults   tier-1 suite again under a fixed nonzero fault plan
+#   make ci-trace    short traced run -> validated Chrome trace JSON
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
 #   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
@@ -15,7 +16,8 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci ci-faults bench bench-gemm bench-snapshot repro
+.PHONY: artifacts build test ci ci-faults ci-trace bench bench-gemm \
+	bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -51,6 +53,20 @@ ci:
 ci-faults:
 	cd rust && ETUNER_FAULTS="exec:0.05,marshal:0.01,spike:0.02x0.25,burst:2" \
 		ETUNER_FAULT_SEED=6 cargo test -q
+
+# Observability lane (PR 7): a short traced CLI run must emit a valid
+# Chrome trace-event file with at least one span on every subsystem lane
+# (serve-engine / rounds / sweep / backend).  The emitted file is then
+# validated through the repo's own JSON parser by the
+# `ci_trace_file_is_valid_chrome_json` test (tests/trace.rs), which is a
+# no-op unless ETUNER_TRACE_FILE points at a file.
+ci-trace:
+	cd rust && cargo run --release -q -- run --model mbv2 \
+		--benchmark scifar10 --tune lazytune --freeze simfreeze \
+		--requests 80 --seed 1 --trace \
+		--trace-out /tmp/etuner_trace.json --trace-summary
+	cd rust && ETUNER_TRACE_FILE=/tmp/etuner_trace.json \
+		cargo test -q --release --test trace
 
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \

@@ -536,6 +536,42 @@ fn main() -> anyhow::Result<()> {
                 }),
             );
         }
+
+        // ---- tracer: disabled vs recording -------------------------------
+        // The identical resident-bank burst through a `Tracer::disabled()`
+        // engine (the default everywhere — one inlined None check per
+        // record site, zero allocation, see the perf_regression canary)
+        // and then through a recording tracer.  The "off" row must sit in
+        // the noise band of `bankset resident` above; the "on" row prices
+        // what `--trace` costs the serving hot path.
+        {
+            use etuner::trace::{self, Tracer};
+            let cfg = ServeConfig {
+                batch_window_s: 1e6,
+                slo_ms: 1e15,
+                rows_per_request: Some(rows),
+                bank_capacity: 4,
+                ..ServeConfig::default()
+            };
+            for (label, tracer) in [
+                ("trace off", Tracer::disabled()),
+                ("trace on", Tracer::enabled(trace::DEFAULT_CAPACITY)),
+            ] {
+                let mut eng =
+                    ServeEngine::new(&sess.m, &device, &cfg, false, false);
+                eng.set_tracer(tracer);
+                report(
+                    &format!("serving: {label} ({N_REQ} reqs)"),
+                    bench(1, 5, || {
+                        for r in &reqs {
+                            eng.on_arrival(r.clone());
+                        }
+                        let events = eng.drain(1e7, &ctx).unwrap();
+                        sink += events.len();
+                    }),
+                );
+            }
+        }
         std::hint::black_box(sink);
     }
 

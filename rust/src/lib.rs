@@ -53,6 +53,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod testkit;
+pub mod trace;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
@@ -63,11 +64,14 @@ pub mod prelude {
     pub use crate::metrics::Report;
     pub use crate::runtime::{
         Backend, BackendKind, BackendSpec, FaultPlan, FaultyBackend,
-        PjrtBackend, RefCpuBackend,
+        PjrtBackend, RefCpuBackend, TracingBackend,
     };
     pub use crate::serve::{
         Admission, QueuePolicyKind, RecoveryConfig, ServeConfig, ServeCtx,
         ServeEngine, ServeEvent,
     };
-    pub use crate::sim::{run_config, ParallelSweeper, RunConfig, Simulation};
+    pub use crate::sim::{
+        run_config, run_config_traced, ParallelSweeper, RunConfig, Simulation,
+    };
+    pub use crate::trace::{Lane, Tracer};
 }

@@ -24,8 +24,9 @@ use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::{BackendKind, BackendSpec, FaultPlan};
 use etuner::serve::{QueuePolicyKind, MAX_BANK_CAPACITY};
-use etuner::sim::{run_config, ParallelSweeper, RunConfig};
+use etuner::sim::{run_config_traced, ParallelSweeper, RunConfig};
 use etuner::testkit;
+use etuner::trace::{self, Tracer};
 
 /// `--backend` → construction spec over the artifact directory.
 fn backend_spec(args: &[String]) -> Result<BackendSpec> {
@@ -63,6 +64,7 @@ fn main() -> Result<()> {
                        [--queue-policy fifo|edf] [--max-queue N]\n\
                        [--shed-infeasible] [--bank-capacity N]\n\
                        [--faults SPEC] [--fault-seed S]\n\
+                       [--trace] [--trace-out FILE] [--trace-summary]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --batch-window S coalesces requests for up to S virtual\n\
                        seconds per padded execute (0 = off); --slo-ms sets the\n\
@@ -84,6 +86,12 @@ fn main() -> Result<()> {
                        trips a circuit breaker, and serves stale banks\n\
                        degraded while it is open; --fault-seed varies the\n\
                        fault stream without changing the run seed\n\
+                       --trace records a virtual-time timeline (also enabled\n\
+                       by ETUNER_TRACE=1 or by either flag below);\n\
+                       --trace-out FILE writes it as Chrome trace-event JSON\n\
+                       (open in Perfetto / chrome://tracing);\n\
+                       --trace-summary prints the serving/tuning/idle\n\
+                       time-in-state table after the run\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --jobs N runs N seed-sweep workers (default: all cores)\n\
@@ -183,11 +191,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let n: usize = b.parse().context("bad --bank-capacity")?;
         let clamped = n.clamp(1, MAX_BANK_CAPACITY);
         if clamped != n {
-            eprintln!(
+            trace::note(format_args!(
                 "[etuner] --bank-capacity {n} is outside 1..={MAX_BANK_CAPACITY} \
                  (banks must fit the session theta-cache alongside the live \
                  parameters); clamping to {clamped}"
-            );
+            ));
         }
         cfg.serve.bank_capacity = clamped;
     }
@@ -209,10 +217,22 @@ fn cmd_run(args: &[String]) -> Result<()> {
         };
     }
 
+    let trace_out = opt(args, "--trace-out");
+    let trace_summary = flag(args, "--trace-summary");
+    let trace_on = flag(args, "--trace")
+        || trace_out.is_some()
+        || trace_summary
+        || trace::env_enabled();
+    let tracer = if trace_on {
+        Tracer::enabled(trace::DEFAULT_CAPACITY)
+    } else {
+        Tracer::disabled()
+    };
+
     let be = backend_spec(args)?.create()?;
-    eprintln!("[etuner] backend: {}", be.name());
+    trace::note(format_args!("[etuner] backend: {}", be.name()));
     let faults_on = cfg.faults.enabled();
-    let report = run_config(be.as_ref(), cfg)?;
+    let report = run_config_traced(be.as_ref(), cfg, &tracer)?;
     println!("{}", report.summary());
     println!(
         "  breakdown: init {:.1}s / loadsave {:.1}s / compute {:.1}s; \
@@ -276,6 +296,20 @@ fn cmd_run(args: &[String]) -> Result<()> {
             report.round_rollbacks,
         );
     }
+    if let Some(path) = trace_out {
+        let json = tracer.to_chrome_json().to_string();
+        std::fs::write(path, &json)
+            .with_context(|| format!("writing --trace-out {path}"))?;
+        trace::note(format_args!(
+            "[etuner] wrote {} trace events to {path} (load in Perfetto or \
+             chrome://tracing; {} dropped by the ring)",
+            tracer.events().len(),
+            tracer.dropped(),
+        ));
+    }
+    if trace_summary {
+        print!("{}", trace::summary_table(&report, &tracer));
+    }
     Ok(())
 }
 
@@ -302,7 +336,10 @@ fn cmd_repro(args: &[String]) -> Result<()> {
         Some(j) => j.parse().context("bad --jobs")?,
         None => ParallelSweeper::default_jobs(),
     };
-    let sw = ParallelSweeper::new(backend_spec(args)?, jobs)?;
-    eprintln!("[etuner] backend: {}", sw.backend().name());
+    let mut sw = ParallelSweeper::new(backend_spec(args)?, jobs)?;
+    if flag(args, "--trace") || trace::env_enabled() {
+        sw.set_tracer(Tracer::enabled(trace::DEFAULT_CAPACITY));
+    }
+    trace::note(format_args!("[etuner] backend: {}", sw.backend().name()));
     experiments::run_experiment(&sw, id, &opts)
 }

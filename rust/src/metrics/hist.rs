@@ -1,0 +1,337 @@
+//! Log-bucketed, mergeable histograms for latency / queue-depth /
+//! batch-size distributions.
+//!
+//! Two representations live side by side in one [`Histogram`]:
+//!
+//! * **log₂ buckets** — 64 power-of-two buckets keyed off the f64
+//!   exponent bits (exactly `floor(log2 v)`, no libm rounding, so bucket
+//!   assignment is bit-deterministic across platforms).  These are what
+//!   makes histograms *mergeable*: [`ParallelSweeper`] workers can record
+//!   independently and the coordinator adds counts.
+//! * **exact samples** — the full sample vector, kept because the repo's
+//!   percentile contract is *nearest-rank over the exact samples* (the
+//!   sorted-`Vec` math that used to live in `serve/latency.rs`).  Request
+//!   counts per run are small (10²–10⁴), so this costs little and keeps
+//!   p50/p95/p99 **bit-identical** to the pre-histogram values — asserted
+//!   by `serve/latency.rs` and `tests/trace.rs`.
+//!
+//! Merging concatenates samples in caller order and adds bucket counts;
+//! both are deterministic, so sweep merges are reproducible regardless of
+//! worker count (workers are joined and merged in cell order).
+//!
+//! [`ParallelSweeper`]: crate::sim::ParallelSweeper
+
+use std::collections::BTreeMap;
+
+/// Number of log₂ buckets (covers f64 exponents -32..=31 after clamping).
+pub const BUCKETS: usize = 64;
+
+/// Exponent of the smallest non-underflow bucket: values below
+/// 2^MIN_EXP land in bucket 0.
+const MIN_EXP: i64 = -32;
+
+/// Bucket index for a sample: `floor(log2 v)` via the raw exponent bits
+/// (deterministic — no transcendental calls), clamped into range.
+/// Non-positive and non-finite-small values land in bucket 0.
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        return 0;
+    }
+    let exp = ((v.to_bits() >> 52) & 0x7ff) as i64 - 1023;
+    (exp - MIN_EXP).clamp(0, BUCKETS as i64 - 1) as usize
+}
+
+/// Lower edge of bucket `i` (for rendering / debugging).
+pub fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        (2.0f64).powi((i as i64 + MIN_EXP) as i32)
+    }
+}
+
+/// A mergeable distribution: log₂ bucket counts plus the exact samples.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    samples: Vec<f64>,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        self.buckets[bucket_of(v)] += 1;
+        self.samples.push(v);
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Mean over a canonically sorted copy: summation order is then a
+    /// function of the sample *multiset*, so merged histograms produce
+    /// the same mean regardless of record interleaving — and it matches
+    /// the old ledger, which also summed its sorted copy.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.iter().sum::<f64>() / sorted.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank index for percentile `p` over `n` samples — the exact
+    /// formula the sorted-`Vec` ledger used.
+    fn rank(p: f64, n: usize) -> usize {
+        let r = ((p / 100.0) * n as f64).ceil() as usize;
+        r.clamp(1, n) - 1
+    }
+
+    /// Nearest-rank percentile over the **exact** samples (0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[Self::rank(p, sorted.len())]
+    }
+
+    /// Non-empty `(bucket_lo, count)` pairs in ascending bucket order.
+    pub fn bucket_counts(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lo(i), c))
+            .collect()
+    }
+
+    /// A rescaled copy (`v * factor` per sample, re-bucketed) — used to
+    /// publish second-resolution ledgers in milliseconds.
+    pub fn scaled(&self, factor: f64) -> Histogram {
+        let mut out = Histogram::new();
+        for &v in &self.samples {
+            out.record(v * factor);
+        }
+        out
+    }
+
+    /// Fold `other` into `self`: bucket counts add, samples concatenate in
+    /// caller order (deterministic merges require a deterministic caller
+    /// order — the sweeper merges in cell order).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.samples.is_empty() {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; BUCKETS];
+        }
+        for (b, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += c;
+        }
+        self.samples.extend_from_slice(&other.samples);
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+/// Named histogram registry carried on [`crate::metrics::Report`]
+/// (fingerprint-excluded).  Keys are slash-scoped:
+/// `serve/latency_ms`, `serve/latency_ms/s<scenario>`,
+/// `serve/queue_depth`, `serve/batch_rows`, `tune/round_s`,
+/// `tune/round_batches`.  `BTreeMap` keeps iteration — and therefore
+/// merge and render order — deterministic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistRegistry {
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl HistRegistry {
+    pub fn new() -> HistRegistry {
+        HistRegistry::default()
+    }
+
+    /// Mutable handle to the named histogram, created on first use.
+    pub fn hist(&mut self, key: &str) -> &mut Histogram {
+        self.hists.entry(key.to_string()).or_default()
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn record(&mut self, key: &str, v: f64) {
+        self.hist(key).record(v);
+    }
+
+    /// Insert (replace) a fully built histogram under `key`.
+    pub fn insert(&mut self, key: &str, h: Histogram) {
+        self.hists.insert(key.to_string(), h);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Histogram> {
+        self.hists.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.hists.keys().map(|k| k.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hists.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.hists.len()
+    }
+
+    /// Key-wise merge (union of keys, [`Histogram::merge`] on overlap).
+    pub fn merge(&mut self, other: &HistRegistry) {
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The old ledger's math, kept verbatim as the parity oracle.
+    fn sorted_vec_percentile(samples: &[f64], p: f64) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let r = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[r.clamp(1, sorted.len()) - 1]
+    }
+
+    #[test]
+    fn percentiles_match_sorted_vec_exactly() {
+        let mut h = Histogram::new();
+        let mut samples = Vec::new();
+        // deterministic ugly sequence with ties and wide dynamic range
+        let mut x = 1.0f64;
+        for i in 0..257 {
+            x = (x * 1.618 + i as f64 * 0.001) % 37.0 + 1e-4;
+            h.record(x);
+            samples.push(x);
+        }
+        for p in [50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                h.percentile(p).to_bits(),
+                sorted_vec_percentile(&samples, p).to_bits(),
+                "p{p} must be bit-identical to the sorted-Vec math"
+            );
+        }
+        assert_eq!(h.count(), 257);
+    }
+
+    #[test]
+    fn bucket_assignment_is_exact_log2() {
+        let mut h = Histogram::new();
+        h.record(1.0); // 2^0 -> bucket 32
+        h.record(1.5);
+        h.record(2.0); // 2^1 -> bucket 33
+        h.record(0.5); // 2^-1 -> bucket 31
+        h.record(0.0); // bucket 0
+        let counts = h.bucket_counts();
+        let get = |lo: f64| {
+            counts.iter().find(|&&(l, _)| l == lo).map(|&(_, c)| c)
+        };
+        assert_eq!(get(0.0), Some(1));
+        assert_eq!(get(0.5), Some(1));
+        assert_eq!(get(1.0), Some(2));
+        assert_eq!(get(2.0), Some(1));
+    }
+
+    #[test]
+    fn merge_is_order_deterministic_and_count_preserving() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Vec::new();
+        for i in 0..40 {
+            let v = (i as f64 * 0.37) % 5.0 + 0.01;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        all.extend(
+            (0..40)
+                .filter(|i| i % 2 == 0)
+                .map(|i| (i as f64 * 0.37) % 5.0 + 0.01),
+        );
+        all.extend(
+            (0..40)
+                .filter(|i| i % 2 == 1)
+                .map(|i| (i as f64 * 0.37) % 5.0 + 0.01),
+        );
+        assert_eq!(merged.count(), 40);
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(
+                merged.percentile(p).to_bits(),
+                sorted_vec_percentile(&all, p).to_bits()
+            );
+        }
+        // bucket totals add
+        let total: u64 =
+            merged.bucket_counts().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 40);
+    }
+
+    #[test]
+    fn registry_merges_key_union() {
+        let mut a = HistRegistry::new();
+        a.record("serve/latency_ms", 10.0);
+        a.record("serve/queue_depth", 3.0);
+        let mut b = HistRegistry::new();
+        b.record("serve/latency_ms", 20.0);
+        b.record("tune/round_s", 7.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get("serve/latency_ms").unwrap().count(), 2);
+        assert_eq!(a.get("tune/round_s").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn empty_histogram_is_benign() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert!(h.is_empty());
+        let mut m = Histogram::new();
+        m.merge(&h);
+        assert!(m.is_empty());
+    }
+}

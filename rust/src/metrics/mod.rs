@@ -2,8 +2,12 @@
 //! metric), cost ledger snapshots, and traces used by the figure
 //! reproductions.
 
+pub mod hist;
+
 use crate::coordinator::simfreeze::CkaSample;
 use crate::cost::energy::CostBreakdown;
+
+use hist::HistRegistry;
 
 /// One served inference request.
 #[derive(Clone, Copy, Debug)]
@@ -173,6 +177,21 @@ pub struct Report {
     /// fine-tuning rounds rolled back to the last good θ generation after
     /// a mid-round failure.
     pub round_rollbacks: u64,
+    /// time-in-state accounting (PR 7 observability; excluded from
+    /// [`Report::fingerprint`] like every serving counter above — it is a
+    /// pure readout of the device schedule): virtual seconds the device
+    /// spent executing serving batches.
+    pub time_serving_s: f64,
+    /// virtual seconds the device spent in fine-tuning rounds.
+    pub time_tuning_s: f64,
+    /// virtual seconds of the horizon spent idle (horizon − serving −
+    /// tuning, clamped at 0 when the final drain runs past the horizon).
+    pub time_idle_s: f64,
+    /// mergeable latency/queue-depth/batch-size distributions
+    /// ([`hist::HistRegistry`], PR 7).  Observability-only and excluded
+    /// from [`Report::fingerprint`]; [`average`] merges registries across
+    /// seeds in report order, which is deterministic.
+    pub hists: HistRegistry,
 }
 
 impl Report {
@@ -354,6 +373,16 @@ pub fn average(reports: &[Report]) -> Report {
     out.degraded_serves = mean_u64(|r| r.degraded_serves);
     out.drops_backend_unavailable = mean_u64(|r| r.drops_backend_unavailable);
     out.round_rollbacks = mean_u64(|r| r.round_rollbacks);
+    out.time_serving_s = reports.iter().map(|r| r.time_serving_s).sum::<f64>() / n;
+    out.time_tuning_s = reports.iter().map(|r| r.time_tuning_s).sum::<f64>() / n;
+    out.time_idle_s = reports.iter().map(|r| r.time_idle_s).sum::<f64>() / n;
+    // histograms merge (not average): the merged distribution over all
+    // seeds, folded in report order so the result is deterministic.
+    let mut hists = HistRegistry::new();
+    for r in reports {
+        hists.merge(&r.hists);
+    }
+    out.hists = hists;
     out.per_scenario_latency = average_scenario_latency(reports);
     out.seed = u64::MAX; // marker: averaged
     out
@@ -521,6 +550,11 @@ mod tests {
         b.drops_backend_unavailable = 2;
         b.round_rollbacks = 1;
         b.requests[0].degraded = true;
+        // time-in-state + histogram registry (PR 7) are also excluded
+        b.time_serving_s = 120.0;
+        b.time_tuning_s = 300.0;
+        b.time_idle_s = 600.0;
+        b.hists.record("serve/latency_ms", 12.5);
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;
@@ -528,5 +562,76 @@ mod tests {
         let mut d = a.clone();
         d.rounds += 1;
         assert_ne!(a.fingerprint(), d.fingerprint());
+    }
+
+    /// Compile-time-ish fingerprint audit: this destructuring has NO `..`
+    /// rest pattern, so adding a field to `Report` fails to compile until
+    /// this test names it.  When that happens, decide explicitly which
+    /// side of the fingerprint the new field belongs on:
+    ///
+    /// * **scientific output** → hash it in [`Report::fingerprint`] and
+    ///   add it to the INCLUDED list below;
+    /// * **observability/plumbing** (latency, counters, traces,
+    ///   histograms, time-in-state) → leave `fingerprint()` alone and
+    ///   exercise it in `fingerprint_ignores_wall_clock_and_perf_counters`
+    ///   so a future change can't silently start hashing it.
+    ///
+    /// That contract is what keeps tracing on/off runs — and sweep worker
+    /// counts, cache settings, fault layers with `none` plans —
+    /// bit-identical.
+    #[test]
+    fn report_field_census_is_exhaustive() {
+        #[rustfmt::skip]
+        let Report {
+            // INCLUDED in fingerprint() — scientific fields:
+            model: _, benchmark: _, tune_policy: _, freeze_policy: _,
+            seed: _, avg_inference_accuracy: _, energy: _, rounds: _,
+            train_iterations: _, train_tflops: _, cka_tflops: _,
+            scenario_changes_detected: _, requests, round_log: _,
+            memory_begin_bytes: _, memory_end_bytes: _, cka_trace: _,
+            // EXCLUDED — wall clock:
+            wall_exec_s: _,
+            // EXCLUDED — zero-copy instrumentation (PR 1/2):
+            theta_marshals: _, theta_cache_hits: _, serving_rebuilds: _,
+            serving_hits: _,
+            // EXCLUDED — execution-core counters (PR 4):
+            gemm_packs: _, gemm_pack_hits: _, scratch_allocs: _,
+            scratch_reuses: _, scratch_bytes_reused: _,
+            // EXCLUDED — serving-engine accounting (PR 2/5):
+            latency_p50_ms: _, latency_p95_ms: _, latency_p99_ms: _,
+            latency_mean_ms: _, latency_max_ms: _, slo_ms: _,
+            slo_violations: _, serve_executes: _, avg_batch_requests: _,
+            peak_queue_depth: _, rounds_deferred: _, queue_policy: _,
+            requests_dropped: _, drops_queue_full: _,
+            drops_slo_infeasible: _, deadline_misses: _, bank_evictions: _,
+            banks_peak_resident: _, per_scenario_latency: _,
+            // EXCLUDED — fault injection + recovery (PR 6):
+            faults_injected_exec: _, faults_injected_marshal: _,
+            faults_injected_spikes: _, fault_delay_injected_s: _,
+            serve_retries: _, serve_flush_failures: _, breaker_trips: _,
+            degraded_serves: _, drops_backend_unavailable: _,
+            round_rollbacks: _,
+            // EXCLUDED — observability (PR 7):
+            time_serving_s: _, time_tuning_s: _, time_idle_s: _, hists: _,
+        } = Report::default();
+        // Per-request records feed the fingerprint partially: t/scenario/
+        // accuracy/stale_batches hash, the serving fields don't.  Same
+        // exhaustive treatment.
+        let RequestRecord {
+            // INCLUDED:
+            t: _, scenario: _, accuracy: _, stale_batches: _,
+            // EXCLUDED (serving accounting):
+            latency_s: _, batch_requests: _, queue_depth: _, degraded: _,
+        } = RequestRecord {
+            t: 0.0,
+            scenario: 0,
+            accuracy: 0.0,
+            stale_batches: 0,
+            latency_s: 0.0,
+            batch_requests: 1,
+            queue_depth: 0,
+            degraded: false,
+        };
+        let _ = requests;
     }
 }

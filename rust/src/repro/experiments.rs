@@ -1021,6 +1021,14 @@ fn serve_table(opts: &ReproOpts) -> Plan {
 // Serving control plane — admission policy × queue cap
 // ---------------------------------------------------------------------------
 
+/// Share of the virtual horizon the device spent inside fine-tuning
+/// rounds (PR 7 time-in-state accounting) — how much tuning displaced
+/// serving in each cell.
+fn tuning_pct(r: &Report) -> String {
+    let total = r.time_serving_s + r.time_tuning_s + r.time_idle_s;
+    pct(if total > 0.0 { r.time_tuning_s / total } else { 0.0 })
+}
+
 fn serve_policy_table(opts: &ReproOpts) -> Plan {
     use crate::serve::QueuePolicyKind;
     // A real coalescing window so arrivals actually queue (caps can bind)
@@ -1051,7 +1059,7 @@ fn serve_policy_table(opts: &ReproOpts) -> Plan {
             let mut t = Table::new(
                 "Serving control plane: policy x queue cap (res50, NC, ETuner)",
                 &["policy", "max_queue", "served", "dropped", "p95_ms",
-                  "attain%", "req/exec", "miss", "accuracy%"],
+                  "attain%", "req/exec", "miss", "tuning%", "accuracy%"],
             );
             let mut it = reports.iter();
             for policy in policies {
@@ -1074,6 +1082,7 @@ fn serve_policy_table(opts: &ReproOpts) -> Plan {
                         pct(attain),
                         f2(r.avg_batch_requests),
                         format!("{}", r.deadline_misses),
+                        tuning_pct(r),
                         pct(r.avg_inference_accuracy),
                     ]);
                 }
@@ -1132,7 +1141,7 @@ fn faults_table(opts: &ReproOpts) -> Plan {
             let mut t = Table::new(
                 "Robustness: fault rate x retry policy (res50, NC, ETuner)",
                 &["faults", "retry", "accuracy%", "p99_ms", "dropped",
-                  "degraded%", "retries", "trips", "rollbacks"],
+                  "degraded%", "retries", "trips", "rollbacks", "tuning%"],
             );
             let mut it = reports.iter();
             for (label, _) in fault_specs {
@@ -1151,6 +1160,7 @@ fn faults_table(opts: &ReproOpts) -> Plan {
                         format!("{}", r.serve_retries),
                         format!("{}", r.breaker_trips),
                         format!("{}", r.round_rollbacks),
+                        tuning_pct(r),
                     ]);
                 }
             }

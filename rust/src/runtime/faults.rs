@@ -177,7 +177,9 @@ pub fn env_plan() -> FaultPlan {
     *PLAN.get_or_init(|| {
         let mut plan = match std::env::var("ETUNER_FAULTS") {
             Ok(s) => FaultPlan::parse(&s).unwrap_or_else(|e| {
-                eprintln!("[etuner] ignoring bad ETUNER_FAULTS: {e}");
+                crate::trace::note(format_args!(
+                    "[etuner] ignoring bad ETUNER_FAULTS: {e}"
+                ));
                 FaultPlan::none()
             }),
             Err(_) => FaultPlan::none(),
@@ -185,9 +187,9 @@ pub fn env_plan() -> FaultPlan {
         if let Ok(s) = std::env::var("ETUNER_FAULT_SEED") {
             match s.parse() {
                 Ok(v) => plan.seed = v,
-                Err(_) => {
-                    eprintln!("[etuner] ignoring bad ETUNER_FAULT_SEED {s:?}")
-                }
+                Err(_) => crate::trace::note(format_args!(
+                    "[etuner] ignoring bad ETUNER_FAULT_SEED {s:?}"
+                )),
             }
         }
         plan

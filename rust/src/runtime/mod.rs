@@ -30,12 +30,14 @@ pub mod hostlit;
 pub mod refcpu;
 #[cfg(not(feature = "xla"))]
 pub mod stub;
+pub mod tracing;
 
 pub use artifact::{Manifest, ModelManifest, Segment, TensorInfo};
 pub use backend::{
     Backend, BackendKind, BackendPerf, BackendSpec, FaultStats, Value,
 };
 pub use faults::{FaultPlan, FaultyBackend};
+pub use tracing::TracingBackend;
 pub use client::PjrtBackend;
 pub use exec::TensorF32;
 pub use hostlit::HostLiteral;

@@ -1,0 +1,226 @@
+//! Observability decorator for the execute boundary.
+//!
+//! [`TracingBackend`] mirrors [`FaultyBackend`](super::FaultyBackend)'s
+//! shape — a stack-constructed, single-run decorator over `&dyn Backend` —
+//! but injects nothing: it records a [`crate::trace::Lane::Backend`] span
+//! per `execute` / `marshal` / `warm` call, annotated with the
+//! [`BackendPerf`] counter *deltas* the call produced (panel packs, pack
+//! cache hits, scratch arena traffic) plus injected-fault markers.
+//!
+//! Composition order matters and is fixed by `sim::run_config`:
+//! `TracingBackend` wraps *outside* `FaultyBackend`, so an injected
+//! execute error or latency spike passes through this layer and lands in
+//! the timeline (`ok:0`, `spikes:n` annotations) exactly like a real
+//! backend failure would.
+//!
+//! Backend calls are instantaneous in *virtual* time (their cost is
+//! modeled separately by `DeviceModel`), so spans are stamped at the
+//! tracer's current virtual clock ([`crate::trace::Tracer::set_now`],
+//! advanced by the engine/scheduler layers) with zero duration — the
+//! lane shows *when* in the schedule the boundary was crossed and what
+//! each crossing did, not a wall-clock cost.
+//!
+//! With a [`Tracer::disabled`] handle the decorator is a pure
+//! passthrough; `sim::run_config` additionally skips constructing it at
+//! all unless tracing is on, so the default path is byte-for-byte the
+//! PR 6 composition.
+
+use anyhow::Result;
+
+use crate::trace::{Lane, Tracer};
+
+use super::artifact::Manifest;
+use super::backend::{Backend, BackendPerf, FaultStats, Value};
+
+/// Span-recording decorator over any backend (see the module docs).
+pub struct TracingBackend<'a> {
+    inner: &'a dyn Backend,
+    tracer: Tracer,
+}
+
+impl<'a> TracingBackend<'a> {
+    pub fn new(inner: &'a dyn Backend, tracer: Tracer) -> Self {
+        TracingBackend { inner, tracer }
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Record one boundary crossing: a zero-duration span at the current
+    /// virtual time carrying the perf/fault counter deltas of the call.
+    fn record(
+        &self,
+        name: &'static str,
+        p0: BackendPerf,
+        f0: FaultStats,
+        ok: bool,
+    ) {
+        if !self.tracer.on() {
+            return;
+        }
+        let p1 = self.inner.perf();
+        let f1 = self.inner.fault_stats();
+        let t = self.tracer.now();
+        self.tracer.span(
+            Lane::Backend,
+            name,
+            t,
+            t,
+            &[
+                ("ok", if ok { 1.0 } else { 0.0 }),
+                ("gemm_packs", (p1.gemm_packs - p0.gemm_packs) as f64),
+                (
+                    "gemm_pack_hits",
+                    (p1.gemm_pack_hits - p0.gemm_pack_hits) as f64,
+                ),
+                (
+                    "scratch_allocs",
+                    (p1.scratch_allocs - p0.scratch_allocs) as f64,
+                ),
+                (
+                    "spikes",
+                    (f1.latency_spikes - f0.latency_spikes) as f64,
+                ),
+                (
+                    "faults",
+                    ((f1.exec_faults + f1.marshal_faults)
+                        - (f0.exec_faults + f0.marshal_faults))
+                        as f64,
+                ),
+            ],
+        );
+    }
+}
+
+impl Backend for TracingBackend<'_> {
+    fn name(&self) -> &'static str {
+        // transparent: reports and logs show the real executor.
+        self.inner.name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn executions(&self) -> u64 {
+        self.inner.executions()
+    }
+
+    fn marshal_f32(&self, data: &[f32], shape: &[usize]) -> Result<Value> {
+        let (p0, f0) = (self.inner.perf(), self.inner.fault_stats());
+        let r = self.inner.marshal_f32(data, shape);
+        self.record("marshal_f32", p0, f0, r.is_ok());
+        r
+    }
+
+    fn marshal_i32(&self, data: &[i32], shape: &[usize]) -> Result<Value> {
+        let (p0, f0) = (self.inner.perf(), self.inner.fault_stats());
+        let r = self.inner.marshal_i32(data, shape);
+        self.record("marshal_i32", p0, f0, r.is_ok());
+        r
+    }
+
+    fn execute(&self, name: &str, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let (p0, f0) = (self.inner.perf(), self.inner.fault_stats());
+        let r = self.inner.execute(name, inputs);
+        self.record("execute", p0, f0, r.is_ok());
+        r
+    }
+
+    fn theta0(&self, model: &str) -> Result<Vec<f32>> {
+        self.inner.theta0(model)
+    }
+
+    fn phi0(&self, model: &str) -> Result<Vec<f32>> {
+        self.inner.phi0(model)
+    }
+
+    fn perf(&self) -> BackendPerf {
+        self.inner.perf()
+    }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.inner.fault_stats()
+    }
+
+    fn take_injected_delay_s(&self) -> f64 {
+        self.inner.take_injected_delay_s()
+    }
+
+    fn warm(&self, segment: &str, theta: &Value) -> Result<()> {
+        let (p0, f0) = (self.inner.perf(), self.inner.fault_stats());
+        let r = self.inner.warm(segment, theta);
+        self.record("pack", p0, f0, r.is_ok());
+        r
+    }
+
+    fn release(&self, buf_id: u64) {
+        self.inner.release(buf_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Kind;
+
+    #[test]
+    fn disabled_tracer_is_pure_passthrough() {
+        let inner = crate::testkit::refcpu_backend();
+        let tb = TracingBackend::new(inner.as_ref(), Tracer::disabled());
+        assert_eq!(tb.name(), "refcpu");
+        let v = tb.marshal_f32(&[1.0, 2.0], &[2]).unwrap();
+        assert_eq!(v.read_f32().unwrap(), vec![1.0, 2.0]);
+        assert!(!tb.tracer().on());
+        assert!(tb.tracer().events().is_empty());
+    }
+
+    #[test]
+    fn records_backend_lane_spans_with_deltas() {
+        let inner = crate::testkit::refcpu_backend();
+        let tracer = Tracer::enabled(64);
+        let tb = TracingBackend::new(inner.as_ref(), tracer.clone());
+        tracer.set_now(3.5);
+        tb.marshal_f32(&[1.0], &[1]).unwrap();
+        let _ = tb.execute("nonexistent-segment", &[]);
+        let evs = tracer.events();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.lane == Lane::Backend));
+        assert!(evs.iter().all(|e| e.kind == Kind::Span));
+        assert_eq!(evs[0].name, "marshal_f32");
+        assert!((evs[0].t0 - 3.5).abs() < 1e-12);
+        assert_eq!(evs[1].name, "execute");
+        let ok = |e: &crate::trace::Event| {
+            e.args()
+                .iter()
+                .find(|&&(k, _)| k == "ok")
+                .map(|&(_, v)| v)
+        };
+        assert_eq!(ok(&evs[0]), Some(1.0));
+        assert_eq!(ok(&evs[1]), Some(0.0), "failed execute marked ok:0");
+    }
+
+    #[test]
+    fn injected_faults_show_in_the_timeline() {
+        use super::super::faults::{FaultPlan, FaultyBackend};
+        let inner = crate::testkit::refcpu_backend();
+        let plan = FaultPlan::parse("marshal:1").unwrap();
+        let fb = FaultyBackend::new(inner.as_ref(), plan, 1);
+        let tracer = Tracer::enabled(64);
+        // tracing composes OUTSIDE the fault layer
+        let tb = TracingBackend::new(&fb, tracer.clone());
+        assert!(tb.marshal_f32(&[1.0], &[1]).is_err());
+        let evs = tracer.events();
+        assert_eq!(evs.len(), 1);
+        let get = |k: &str| {
+            evs[0]
+                .args()
+                .iter()
+                .find(|&&(n, _)| n == k)
+                .map(|&(_, v)| v)
+        };
+        assert_eq!(get("ok"), Some(0.0));
+        assert_eq!(get("faults"), Some(1.0), "injected fault visible");
+    }
+}

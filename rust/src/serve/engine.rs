@@ -57,14 +57,14 @@
 // (reachable under injected faults), never a panic.
 #![deny(clippy::disallowed_methods)]
 
-use std::sync::OnceLock;
-
 use anyhow::Result;
 
 use crate::cost::device::DeviceModel;
 use crate::data::benchmarks::Scenario;
+use crate::metrics::hist::{HistRegistry, Histogram};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::runtime::artifact::ModelManifest;
+use crate::trace::{Lane, Tracer};
 
 use super::admission::{Admission, AdmissionPolicy, DropReason, ShedPolicy};
 use super::banks::{BankInstall, BankSet};
@@ -75,11 +75,13 @@ use super::recovery::{BreakerState, CircuitBreaker, RecoveryConfig};
 use super::scheduler::Scheduler;
 use super::ServeConfig;
 
-/// `ETUNER_DEBUG` looked up once per process (it used to be a
-/// `std::env::var_os` call on every request in the serving hot path).
-fn debug_enabled() -> bool {
-    static DEBUG: OnceLock<bool> = OnceLock::new();
-    *DEBUG.get_or_init(|| std::env::var_os("ETUNER_DEBUG").is_some())
+/// Trace instant name for a drop reason (`&'static` for the event store).
+fn drop_name(reason: DropReason) -> &'static str {
+    match reason {
+        DropReason::QueueFull => "drop_queue_full",
+        DropReason::SloInfeasible => "drop_slo_infeasible",
+        DropReason::BackendUnavailable => "drop_backend_unavailable",
+    }
 }
 
 /// Everything the control plane needs to execute a batch, borrowed from
@@ -166,6 +168,13 @@ pub struct ServeEngine {
     flush_failures: u64,
     degraded_serves: u64,
     drops_backend_unavailable: u64,
+    /// Virtual-time event recorder ([`Tracer::disabled`] by default:
+    /// zero allocations, one inlined check per record site).
+    tracer: Tracer,
+    /// Queue depth sampled at each accepted arrival.
+    queue_hist: Histogram,
+    /// Real rows per padded execute.
+    batch_rows_hist: Histogram,
 }
 
 impl ServeEngine {
@@ -216,7 +225,31 @@ impl ServeEngine {
             flush_failures: 0,
             degraded_serves: 0,
             drops_backend_unavailable: 0,
+            tracer: Tracer::disabled(),
+            queue_hist: Histogram::new(),
+            batch_rows_hist: Histogram::new(),
         }
+    }
+
+    /// Attach a tracer (shared with the simulation / backend decorator).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Copy the engine's distributions into a report registry: end-to-end
+    /// latency (overall and per scenario), queue depth at arrival, and
+    /// real rows per execute.
+    pub fn fill_hists(&self, reg: &mut HistRegistry) {
+        reg.insert("serve/latency_ms", self.latency.hist().scaled(1e3));
+        for (scenario, h) in self.latency.scenario_hists() {
+            reg.insert(&format!("serve/latency_ms/s{scenario}"), h.scaled(1e3));
+        }
+        reg.insert("serve/queue_depth", self.queue_hist.clone());
+        reg.insert("serve/batch_rows", self.batch_rows_hist.clone());
     }
 
     /// Rows the caller must draw per inference request.
@@ -362,7 +395,19 @@ impl ServeEngine {
         let verdict =
             self.policy.admit(&req, self.queue.len(), &self.shed, earliest_done);
         match verdict {
-            Admission::Accepted => self.queue.push(req),
+            Admission::Accepted => {
+                let (t, scenario) = (req.arrival_t, req.scenario);
+                self.queue.push(req);
+                let depth = self.queue.len();
+                self.queue_hist.record(depth as f64);
+                self.tracer.instant(
+                    Lane::Engine,
+                    "arrival",
+                    t,
+                    &[("scenario", scenario as f64)],
+                );
+                self.tracer.counter(Lane::Engine, "queue_depth", t, depth as f64);
+            }
             Admission::Dropped { reason } => {
                 match reason {
                     DropReason::QueueFull => self.drops_queue_full += 1,
@@ -373,14 +418,18 @@ impl ServeEngine {
                         self.drops_backend_unavailable += 1
                     }
                 }
-                if debug_enabled() {
-                    eprintln!(
+                self.tracer.debug(
+                    Lane::Engine,
+                    drop_name(reason),
+                    req.arrival_t,
+                    &[("scenario", req.scenario as f64)],
+                    format_args!(
                         "[dbg] t={:.0} scen={} DROP {}",
                         req.arrival_t,
                         req.scenario,
                         reason.name()
-                    );
-                }
+                    ),
+                );
                 self.pending.push(ServeEvent::RequestDropped {
                     arrival_t: req.arrival_t,
                     scenario: req.scenario,
@@ -397,6 +446,7 @@ impl ServeEngine {
     /// before consuming each event-stream entry and after each arrival so
     /// service order follows virtual time.
     pub fn poll(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        self.tracer.set_now(now);
         let mut out = std::mem::take(&mut self.pending);
         let result = self.poll_inner(now, ctx, &mut out);
         self.finish_events(out, result)
@@ -440,9 +490,13 @@ impl ServeEngine {
             Ok(()) => Ok(()),
             Err(e) if self.recovery.enabled => {
                 self.flush_failures += 1;
-                if debug_enabled() {
-                    eprintln!("[dbg] t={t:.0} flush failed (absorbed): {e:#}");
-                }
+                self.tracer.debug(
+                    Lane::Engine,
+                    "flush_failed",
+                    t,
+                    &[("absorbed", 1.0)],
+                    format_args!("[dbg] t={t:.0} flush failed (absorbed): {e:#}"),
+                );
                 Ok(())
             }
             Err(e) => Err(e),
@@ -452,6 +506,7 @@ impl ServeEngine {
     /// Serve everything still queued at `now` regardless of windows (end
     /// of stream, or a fine-tuning round is about to occupy the device).
     pub fn drain(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        self.tracer.set_now(now);
         let mut out = std::mem::take(&mut self.pending);
         let result = (|| -> Result<()> {
             while !self.queue.is_empty() {
@@ -510,6 +565,8 @@ impl ServeEngine {
         // still waiting so `queue_depth` keeps its pre-PR5 meaning
         // (requests pending when this one was served).
         let mut waiting: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        let (flush_requests, flush_groups) = (waiting, groups.len());
+        self.tracer.begin(Lane::Engine, "flush", due);
         let mut idx = 0;
         while idx < groups.len() {
             let (scenario, group) = &groups[idx];
@@ -533,10 +590,27 @@ impl ServeEngine {
                 let unserved: Vec<QueuedRequest> =
                     groups.drain(idx..).flat_map(|(_, g)| g).collect();
                 self.queue.requeue_front(unserved);
+                self.tracer.end(
+                    Lane::Engine,
+                    t,
+                    &[
+                        ("groups", flush_groups as f64),
+                        ("requests", flush_requests as f64),
+                        ("err", 1.0),
+                    ],
+                );
                 return Err(e);
             }
             idx += 1;
         }
+        self.tracer.end(
+            Lane::Engine,
+            self.scheduler.device_free_at().max(due),
+            &[
+                ("groups", flush_groups as f64),
+                ("requests", flush_requests as f64),
+            ],
+        );
         Ok(())
     }
 
@@ -558,6 +632,12 @@ impl ServeEngine {
                 .serve_group(scenario, group, due, flush_waiting, ctx, out, false);
         }
         if !self.breaker.allow(due) {
+            self.tracer.instant(
+                Lane::Engine,
+                "breaker_open",
+                due,
+                &[("scenario", scenario as f64)],
+            );
             return self
                 .serve_degraded(scenario, group, due, flush_waiting, ctx, out);
         }
@@ -584,10 +664,30 @@ impl ServeEngine {
                 }
                 Err(e) if attempt >= max_attempts => {
                     self.serve_retries += (attempt - 1) as u64;
+                    let trips0 = self.breaker.trips();
                     self.breaker.on_failure(t);
+                    if self.breaker.trips() > trips0 {
+                        self.tracer.instant(
+                            Lane::Engine,
+                            "breaker_trip",
+                            t,
+                            &[("scenario", scenario as f64)],
+                        );
+                    }
                     return Err(e);
                 }
-                Err(_) => {} // retry after backoff
+                Err(_) => {
+                    // retry after backoff
+                    self.tracer.instant(
+                        Lane::Engine,
+                        "retry",
+                        t,
+                        &[
+                            ("scenario", scenario as f64),
+                            ("attempt", attempt as f64),
+                        ],
+                    );
+                }
             }
         }
     }
@@ -615,20 +715,39 @@ impl ServeEngine {
             {
                 Ok(()) => {
                     self.degraded_serves += group.len() as u64;
+                    self.tracer.instant(
+                        Lane::Engine,
+                        "degraded_serve",
+                        due,
+                        &[
+                            ("scenario", scenario as f64),
+                            ("requests", group.len() as f64),
+                        ],
+                    );
                     return Ok(());
                 }
                 Err(e) => {
-                    if debug_enabled() {
-                        eprintln!(
+                    self.tracer.debug(
+                        Lane::Engine,
+                        "degraded_serve_failed",
+                        due,
+                        &[("scenario", scenario as f64)],
+                        format_args!(
                             "[dbg] t={due:.0} scen={scenario} degraded serve \
                              failed, shedding: {e:#}"
-                        );
-                    }
+                        ),
+                    );
                 }
             }
         }
         for req in group {
             self.drops_backend_unavailable += 1;
+            self.tracer.instant(
+                Lane::Engine,
+                drop_name(DropReason::BackendUnavailable),
+                due,
+                &[("scenario", req.scenario as f64)],
+            );
             out.push(ServeEvent::RequestDropped {
                 arrival_t: req.arrival_t,
                 scenario: req.scenario,
@@ -656,10 +775,25 @@ impl ServeEngine {
         out: &mut Vec<ServeEvent>,
         degraded: bool,
     ) -> Result<()> {
+        // stamp the virtual clock so backend-boundary spans (the
+        // `TracingBackend` decorator) land at this execute's due time.
+        self.tracer.set_now(due);
         if !degraded {
             match self.banks.ensure(scenario, ctx, self.disable_serving_cache)? {
                 BankInstall::Hit => {}
                 BankInstall::Installed { evicted } => {
+                    self.tracer.instant(
+                        Lane::Engine,
+                        "bank_install",
+                        due,
+                        &[
+                            ("scenario", scenario as f64),
+                            (
+                                "evicted",
+                                evicted.map(|s| s as f64).unwrap_or(-1.0),
+                            ),
+                        ],
+                    );
                     out.push(ServeEvent::BankInstalled { scenario, evicted });
                 }
             }
@@ -688,6 +822,20 @@ impl ServeEngine {
         let service_start = self.scheduler.admit_serve(due, exec_s);
         self.latency.charge_execute(exec_s);
         self.executes += 1;
+        self.batch_rows_hist.record(packed.rows_used as f64);
+        self.tracer.span(
+            Lane::Engine,
+            "execute",
+            service_start,
+            service_start + exec_s,
+            &[
+                ("scenario", scenario as f64),
+                ("requests", group.len() as f64),
+                ("rows", packed.rows_used as f64),
+                ("spike_s", spike_s),
+                ("degraded", degraded as u64 as f64),
+            ],
+        );
         out.push(ServeEvent::BatchExecuted {
             t: service_start,
             scenario,
@@ -715,13 +863,20 @@ impl ServeEngine {
                 exec_s,
                 deadline_miss,
             );
-            if debug_enabled() {
-                let (t, scenario, acc, mean_score) =
-                    (req.arrival_t, req.scenario, acc, score);
-                eprintln!(
-                    "[dbg] t={t:.0} scen={scenario} acc={acc:.3} energy={mean_score:.3}"
-                );
-            }
+            self.tracer.debug(
+                Lane::Engine,
+                "served",
+                req.arrival_t,
+                &[
+                    ("scenario", req.scenario as f64),
+                    ("latency_s", latency_s),
+                    ("miss", deadline_miss as u64 as f64),
+                ],
+                format_args!(
+                    "[dbg] t={:.0} scen={} acc={acc:.3} energy={score:.3}",
+                    req.arrival_t, req.scenario
+                ),
+            );
             self.served += 1;
             out.push(ServeEvent::RequestServed(ServedRequest {
                 arrival_t: req.arrival_t,

@@ -5,9 +5,13 @@
 //! the inference pass), so serving keeps its own ledger: queueing delay in
 //! virtual time plus the batched service time of one fixed-shape execute,
 //! priced through the same [`DeviceModel`] the training ledger uses.
-//! Latencies are recorded in service order; percentiles are nearest-rank
-//! over the full sample set (request counts are small enough that a digest
-//! approximation would only add noise).
+//!
+//! Since PR 7 the samples live in [`Histogram`]s
+//! ([`crate::metrics::hist`]) instead of raw `Vec<f64>`s: log-bucketed
+//! counts make the distributions mergeable across sweep workers, while the
+//! exact sample set is retained so percentiles stay *nearest-rank over the
+//! exact samples* — bit-identical to the sorted-`Vec` math this module
+//! used before (asserted by `percentiles_match_legacy_sorted_vec` below).
 //!
 //! Since the scenario-sharded control plane (PR 5) the ledger also keys
 //! every observation by scenario — mixed-scenario load means one
@@ -20,6 +24,7 @@ use std::collections::BTreeMap;
 
 use crate::cost::device::DeviceModel;
 use crate::cost::flops;
+use crate::metrics::hist::Histogram;
 use crate::metrics::ScenarioLatency;
 use crate::runtime::artifact::ModelManifest;
 
@@ -39,7 +44,7 @@ pub struct LatencySummary {
 /// Per-scenario slice of the ledger.
 #[derive(Clone, Debug, Default)]
 struct ScenarioLedger {
-    latencies_s: Vec<f64>,
+    hist: Histogram,
     deadline_misses: u64,
 }
 
@@ -50,12 +55,12 @@ pub struct LatencyModel {
     /// all `batch_infer` rows, occupied or padding.
     exec_s: f64,
     slo_s: f64,
-    latencies_s: Vec<f64>,
+    hist: Histogram,
     violations: u64,
     deadline_misses: u64,
     queue_delay_total_s: f64,
     service_total_s: f64,
-    /// scenario -> its own latency samples + miss count (BTreeMap keeps
+    /// scenario -> its own latency histogram + miss count (BTreeMap keeps
     /// report emission deterministic).
     per_scenario: BTreeMap<usize, ScenarioLedger>,
 }
@@ -65,7 +70,7 @@ impl LatencyModel {
         LatencyModel {
             exec_s: device.compute_s(flops::infer_flops(m, m.batch_infer)),
             slo_s,
-            latencies_s: Vec::new(),
+            hist: Histogram::new(),
             violations: 0,
             deadline_misses: 0,
             queue_delay_total_s: 0.0,
@@ -101,13 +106,13 @@ impl LatencyModel {
     ) -> f64 {
         debug_assert!(queue_delay_s >= 0.0, "negative queue delay");
         let latency = queue_delay_s + service_s;
-        self.latencies_s.push(latency);
+        self.hist.record(latency);
         self.queue_delay_total_s += queue_delay_s;
         if latency > self.slo_s {
             self.violations += 1;
         }
         let led = self.per_scenario.entry(scenario).or_default();
-        led.latencies_s.push(latency);
+        led.hist.record(latency);
         if deadline_missed {
             led.deadline_misses += 1;
             self.deadline_misses += 1;
@@ -116,7 +121,7 @@ impl LatencyModel {
     }
 
     pub fn count(&self) -> usize {
-        self.latencies_s.len()
+        self.hist.count() as usize
     }
 
     pub fn violations(&self) -> u64 {
@@ -139,20 +144,20 @@ impl LatencyModel {
         self.service_total_s
     }
 
-    /// Nearest-rank index for percentile `p` over `n` samples.
-    fn rank(p: f64, n: usize) -> usize {
-        let r = ((p / 100.0) * n as f64).ceil() as usize;
-        r.clamp(1, n) - 1
+    /// The global end-to-end latency distribution (seconds).
+    pub fn hist(&self) -> &Histogram {
+        &self.hist
+    }
+
+    /// Per-scenario latency histograms in ascending scenario order, for
+    /// export into the report's [`crate::metrics::hist::HistRegistry`].
+    pub fn scenario_hists(&self) -> impl Iterator<Item = (usize, &Histogram)> {
+        self.per_scenario.iter().map(|(&s, led)| (s, &led.hist))
     }
 
     /// Nearest-rank percentile of recorded latencies, in milliseconds.
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.latencies_s.is_empty() {
-            return 0.0;
-        }
-        let mut sorted = self.latencies_s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        sorted[Self::rank(p, sorted.len())] * 1e3
+        self.hist.percentile(p) * 1e3
     }
 
     /// Per-scenario latency digests in ascending scenario order
@@ -160,38 +165,28 @@ impl LatencyModel {
     pub fn per_scenario(&self) -> Vec<ScenarioLatency> {
         self.per_scenario
             .iter()
-            .map(|(&scenario, led)| {
-                let n = led.latencies_s.len();
-                let mut sorted = led.latencies_s.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let mean = sorted.iter().sum::<f64>() / n.max(1) as f64;
-                ScenarioLatency {
-                    scenario,
-                    requests: n as u64,
-                    mean_ms: mean * 1e3,
-                    p95_ms: sorted[Self::rank(95.0, n)] * 1e3,
-                    max_ms: sorted.last().copied().unwrap_or(0.0) * 1e3,
-                    deadline_misses: led.deadline_misses,
-                }
+            .map(|(&scenario, led)| ScenarioLatency {
+                scenario,
+                requests: led.hist.count(),
+                mean_ms: led.hist.mean() * 1e3,
+                p95_ms: led.hist.percentile(95.0) * 1e3,
+                max_ms: led.hist.max() * 1e3,
+                deadline_misses: led.deadline_misses,
             })
             .collect()
     }
 
     pub fn summary(&self) -> LatencySummary {
-        let n = self.latencies_s.len();
+        let n = self.hist.count();
         if n == 0 {
             return LatencySummary { attainment: 1.0, ..LatencySummary::default() };
         }
-        // one sorted copy serves all three percentile ranks
-        let mut sorted = self.latencies_s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = sorted.iter().sum::<f64>() / n as f64;
         LatencySummary {
-            p50_ms: sorted[Self::rank(50.0, n)] * 1e3,
-            p95_ms: sorted[Self::rank(95.0, n)] * 1e3,
-            p99_ms: sorted[Self::rank(99.0, n)] * 1e3,
-            mean_ms: mean * 1e3,
-            max_ms: sorted[n - 1] * 1e3,
+            p50_ms: self.hist.percentile(50.0) * 1e3,
+            p95_ms: self.hist.percentile(95.0) * 1e3,
+            p99_ms: self.hist.percentile(99.0) * 1e3,
+            mean_ms: self.hist.mean() * 1e3,
+            max_ms: self.hist.max() * 1e3,
             violations: self.violations,
             attainment: 1.0 - self.violations as f64 / n as f64,
         }
@@ -206,7 +201,7 @@ mod tests {
         LatencyModel {
             exec_s: 0.010,
             slo_s,
-            latencies_s: Vec::new(),
+            hist: Histogram::new(),
             violations: 0,
             deadline_misses: 0,
             queue_delay_total_s: 0.0,
@@ -227,6 +222,38 @@ mod tests {
         let s = lm.summary();
         assert!((s.max_ms - 100.0).abs() < 1e-9);
         assert!((s.mean_ms - 50.5).abs() < 1e-9);
+    }
+
+    /// The histogram-backed percentiles must be *bit-identical* to the
+    /// sorted-`Vec` nearest-rank math this module used before PR 7.
+    #[test]
+    fn percentiles_match_legacy_sorted_vec() {
+        fn legacy(samples: &[f64], p: f64) -> f64 {
+            if samples.is_empty() {
+                return 0.0;
+            }
+            let mut sorted = samples.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let r = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+            sorted[r.clamp(1, sorted.len()) - 1] * 1e3
+        }
+        let mut lm = model(0.5);
+        let mut raw = Vec::new();
+        let mut x = 0.013f64;
+        for i in 0..313 {
+            x = (x * 3.9 * (1.0 - x)).abs().max(1e-6); // logistic-map jitter
+            let q = x * 0.8;
+            let svc = 0.002 + (i % 7) as f64 * 1e-4;
+            lm.observe(i % 3, q, svc, false);
+            raw.push(q + svc);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(
+                lm.percentile_ms(p).to_bits(),
+                legacy(&raw, p).to_bits(),
+                "p{p} drifted from the legacy sorted-Vec value"
+            );
+        }
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub struct Scheduler {
     max_defers: u32,
     consecutive_defers: u32,
     rounds_deferred: u64,
+    /// Accumulated device occupancy by serving executes (virtual s) —
+    /// the time-in-state readout behind `Report::time_serving_s`.
+    serve_busy_s: f64,
+    /// Accumulated device occupancy by fine-tuning rounds (virtual s).
+    round_busy_s: f64,
 }
 
 impl Scheduler {
@@ -37,6 +42,8 @@ impl Scheduler {
             max_defers,
             consecutive_defers: 0,
             rounds_deferred: 0,
+            serve_busy_s: 0.0,
+            round_busy_s: 0.0,
         }
     }
 
@@ -48,12 +55,23 @@ impl Scheduler {
         self.rounds_deferred
     }
 
+    /// Total virtual device time spent executing serving batches.
+    pub fn serve_busy_s(&self) -> f64 {
+        self.serve_busy_s
+    }
+
+    /// Total virtual device time spent inside fine-tuning rounds.
+    pub fn round_busy_s(&self) -> f64 {
+        self.round_busy_s
+    }
+
     /// Admit one serving execute due at `due_t`; returns its service start
     /// (the later of the deadline and the device-busy horizon) and extends
     /// the horizon by `service_s`.
     pub fn admit_serve(&mut self, due_t: f64, service_s: f64) -> f64 {
         let start = due_t.max(self.device_free_at);
         self.device_free_at = start + service_s;
+        self.serve_busy_s += service_s;
         start
     }
 
@@ -87,6 +105,7 @@ impl Scheduler {
     pub fn on_round(&mut self, t: f64, duration_s: f64) {
         let start = t.max(self.device_free_at);
         self.device_free_at = start + duration_s;
+        self.round_busy_s += duration_s;
     }
 }
 
@@ -130,6 +149,17 @@ mod tests {
         s.on_round(10.0, 30.0); // busy until 40.0
         assert_eq!(s.earliest_completion(10.0, 2.0), 42.0);
         assert_eq!(s.earliest_completion(50.0, 2.0), 52.0);
+    }
+
+    #[test]
+    fn busy_accumulators_split_serving_from_tuning() {
+        let mut s = Scheduler::new(0, 0);
+        s.on_round(0.0, 30.0);
+        s.admit_serve(10.0, 2.0);
+        s.admit_serve(40.0, 3.0);
+        s.on_round(100.0, 20.0);
+        assert!((s.round_busy_s() - 50.0).abs() < 1e-12);
+        assert!((s.serve_busy_s() - 5.0).abs() < 1e-12);
     }
 
     #[test]

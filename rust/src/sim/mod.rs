@@ -9,5 +9,5 @@ pub mod run;
 pub mod sweep;
 pub mod valpool;
 
-pub use run::{run_config, RunConfig, Simulation};
+pub use run::{run_config, run_config_traced, RunConfig, Simulation};
 pub use sweep::{run_averaged, ParallelSweeper, QUARANTINE_AFTER};

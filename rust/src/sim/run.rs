@@ -50,10 +50,11 @@ use crate::data::stream::{EventKind, Stream};
 use crate::metrics::{Report, RequestRecord, RoundRecord};
 use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
-use crate::runtime::{faults, Backend, FaultPlan, FaultyBackend};
+use crate::runtime::{faults, Backend, FaultPlan, FaultyBackend, TracingBackend};
 use crate::serve::{
     QueuedRequest, RoundDecision, ServeConfig, ServeCtx, ServeEngine, ServeEvent,
 };
+use crate::trace::{Lane, Tracer};
 
 use super::valpool::ValPool;
 
@@ -170,6 +171,10 @@ pub struct Simulation<'b> {
     /// not poison session caches with a half-updated θ).
     round_rollbacks: u64,
     report: Report,
+    /// Virtual-time event recorder (disabled by default — see
+    /// [`crate::trace`]); shared with the serving engine via
+    /// [`Simulation::set_tracer`].
+    tracer: Tracer,
 }
 
 const VAL_KEEP: usize = 64; // rolling validation window (≈5% of stream)
@@ -289,7 +294,16 @@ impl<'b> Simulation<'b> {
             last_energy_score: None,
             round_rollbacks: 0,
             report,
+            tracer: Tracer::disabled(),
         })
+    }
+
+    /// Attach a tracer; the serving engine shares the same buffer, so the
+    /// full timeline (engine + rounds + backend boundary) interleaves in
+    /// one ring.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.engine.set_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 
     /// Run the whole event stream; consumes the simulation.
@@ -401,8 +415,20 @@ impl<'b> Simulation<'b> {
                         // by its starvation cap) and feeds LazyTune the
                         // real queue depth.
                         let backlog = self.engine.queue_depth();
+                        self.tracer.instant(
+                            Lane::Rounds,
+                            "round_trigger",
+                            ev.t,
+                            &[("backlog", backlog as f64)],
+                        );
                         match self.engine.scheduler_mut().consider_round(backlog) {
                             RoundDecision::Defer => {
+                                self.tracer.instant(
+                                    Lane::Rounds,
+                                    "round_defer",
+                                    ev.t,
+                                    &[("backlog", backlog as f64)],
+                                );
                                 self.tune.on_queue_depth(backlog);
                             }
                             RoundDecision::Proceed => {
@@ -419,6 +445,10 @@ impl<'b> Simulation<'b> {
                                     )?;
                                 }
                                 let ledger_s = self.book.breakdown.total_s();
+                                let wh0 = self.book.breakdown.total_wh();
+                                let batches = buffer.len();
+                                self.tracer.set_now(ev.t);
+                                self.tracer.begin(Lane::Rounds, "round", ev.t);
                                 self.run_round(
                                     ev.t,
                                     ev.scenario,
@@ -432,6 +462,27 @@ impl<'b> Simulation<'b> {
                                 let round_s = self.book.breakdown.total_s()
                                     - ledger_s
                                     + self.sess.be.take_injected_delay_s();
+                                self.tracer.end(
+                                    Lane::Rounds,
+                                    ev.t + round_s,
+                                    &[
+                                        ("batches", batches as f64),
+                                        (
+                                            "energy_wh",
+                                            self.book.breakdown.total_wh() - wh0,
+                                        ),
+                                        (
+                                            "theta_gen",
+                                            self.params.generation() as f64,
+                                        ),
+                                    ],
+                                );
+                                self.report
+                                    .hists
+                                    .record("tune/round_s", round_s);
+                                self.report
+                                    .hists
+                                    .record("tune/round_batches", batches as f64);
                                 self.engine
                                     .scheduler_mut()
                                     .on_round(ev.t, round_s);
@@ -489,6 +540,11 @@ impl<'b> Simulation<'b> {
         if !buffer.is_empty() {
             let t = self.stream.horizon;
             let scen = buffer.last().unwrap().2;
+            let ledger_s = self.book.breakdown.total_s();
+            let wh0 = self.book.breakdown.total_wh();
+            let batches = buffer.len();
+            self.tracer.set_now(t);
+            self.tracer.begin(Lane::Rounds, "round", t);
             self.run_round(
                 t,
                 scen,
@@ -497,6 +553,23 @@ impl<'b> Simulation<'b> {
                 &mut total_iters,
                 &mut first_round,
             )?;
+            let round_s = self.book.breakdown.total_s() - ledger_s
+                + self.sess.be.take_injected_delay_s();
+            self.tracer.end(
+                Lane::Rounds,
+                t + round_s,
+                &[
+                    ("batches", batches as f64),
+                    ("energy_wh", self.book.breakdown.total_wh() - wh0),
+                    ("theta_gen", self.params.generation() as f64),
+                ],
+            );
+            self.report.hists.record("tune/round_s", round_s);
+            self.report.hists.record("tune/round_batches", batches as f64);
+            // charge the horizon round to the occupancy ledger too, so
+            // time-in-state covers every round (nothing serves after it,
+            // so the device-busy horizon move is inert).
+            self.engine.scheduler_mut().on_round(t, round_s);
         }
         self.cwr
             .consolidate_set(&self.sess.m, &self.params, &trained_classes);
@@ -561,6 +634,24 @@ impl<'b> Simulation<'b> {
         self.report.drops_backend_unavailable =
             self.engine.drops_backend_unavailable();
         self.report.round_rollbacks = self.round_rollbacks;
+        // time-in-state (fingerprint-excluded): how the virtual horizon
+        // split between serving executes, fine-tuning rounds, and idle.
+        self.report.time_serving_s = self.engine.scheduler().serve_busy_s();
+        self.report.time_tuning_s = self.engine.scheduler().round_busy_s();
+        self.report.time_idle_s = (self.stream.horizon
+            - self.report.time_serving_s
+            - self.report.time_tuning_s)
+            .max(0.0);
+        self.engine.fill_hists(&mut self.report.hists);
+        // one whole-run span in the sweep lane, so a single `etuner run`
+        // timeline still covers all four subsystems.
+        self.tracer.span(
+            Lane::Sweep,
+            "cell",
+            0.0,
+            self.stream.horizon,
+            &[("seed", self.cfg.seed as f64)],
+        );
         self.report.finish();
         Ok(self.report)
     }
@@ -834,5 +925,31 @@ pub fn run_config(be: &dyn Backend, cfg: RunConfig) -> Result<Report> {
         Simulation::new(&fb, cfg)?.run()
     } else {
         Simulation::new(be, cfg)?.run()
+    }
+}
+
+/// [`run_config`] with a tracer attached.  The [`TracingBackend`] wraps
+/// *outside* the fault layer, so injected faults appear in the timeline
+/// as failed backend spans; a disabled tracer takes the exact
+/// [`run_config`] path (no decorator, bit-identical reports).
+pub fn run_config_traced(
+    be: &dyn Backend,
+    cfg: RunConfig,
+    tracer: &Tracer,
+) -> Result<Report> {
+    if !tracer.on() {
+        return run_config(be, cfg);
+    }
+    if cfg.faults.enabled() {
+        let fb = FaultyBackend::new(be, cfg.faults, cfg.seed);
+        let tb = TracingBackend::new(&fb, tracer.clone());
+        let mut sim = Simulation::new(&tb, cfg)?;
+        sim.set_tracer(tracer.clone());
+        sim.run()
+    } else {
+        let tb = TracingBackend::new(be, tracer.clone());
+        let mut sim = Simulation::new(&tb, cfg)?;
+        sim.set_tracer(tracer.clone());
+        sim.run()
     }
 }

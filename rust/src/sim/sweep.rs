@@ -32,8 +32,9 @@ use anyhow::Result;
 
 use crate::metrics::{average, Report};
 use crate::runtime::{Backend, BackendKind, BackendSpec};
+use crate::trace::{self, Event, Lane, Tracer};
 
-use super::run::{run_config, RunConfig};
+use super::run::{run_config, run_config_traced, RunConfig};
 
 /// Consecutive panics of one sweep cell before it is quarantined (the
 /// first panic restarts the backend and requeues the cell once).
@@ -60,18 +61,28 @@ fn run_supervised(
     mut restart: impl FnMut() -> Result<Box<dyn Backend>>,
     i: usize,
     cfg: &RunConfig,
+    tracer: &Tracer,
 ) -> Result<Report> {
     let mut last = String::new();
     for _ in 0..QUARANTINE_AFTER {
         // AssertUnwindSafe: on panic the backend is discarded and rebuilt
         // below, and the config clone is owned by the attempt — nothing
-        // in a half-unwound state is observed again.
-        let attempt =
-            catch_unwind(AssertUnwindSafe(|| run_config(be.as_ref(), cfg.clone())));
+        // in a half-unwound state is observed again.  (The tracer's
+        // record methods never hold a borrow across the backend call, so
+        // an unwound attempt leaves it usable.)
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            run_config_traced(be.as_ref(), cfg.clone(), tracer)
+        }));
         match attempt {
             Ok(res) => return res,
             Err(p) => {
                 last = panic_msg(p.as_ref());
+                tracer.instant(
+                    Lane::Sweep,
+                    "backend_restart",
+                    0.0,
+                    &[("cell", i as f64)],
+                );
                 *be = restart().map_err(|e| {
                     e.context(format!(
                         "sweep cell {i}: backend restart after panic failed"
@@ -80,6 +91,7 @@ fn run_supervised(
             }
         }
     }
+    tracer.instant(Lane::Sweep, "cell_quarantined", 0.0, &[("cell", i as f64)]);
     Err(anyhow::anyhow!(
         "sweep cell {i} quarantined after {QUARANTINE_AFTER} panics (last: {last})"
     ))
@@ -109,6 +121,11 @@ pub struct ParallelSweeper {
     be: Box<dyn Backend>,
     spec: BackendSpec,
     jobs: usize,
+    /// Coordinator-side tracer (disabled by default).  Workers record
+    /// into thread-local tracers; the coordinator absorbs their event
+    /// batches in **cell order**, so the merged timeline is deterministic
+    /// for any worker count.
+    tracer: Tracer,
 }
 
 impl ParallelSweeper {
@@ -127,7 +144,22 @@ impl ParallelSweeper {
             _ => BackendKind::RefCpu,
         };
         let spec = BackendSpec::new(resolved, &spec.dir);
-        Ok(ParallelSweeper { be, spec, jobs: jobs.max(1) })
+        Ok(ParallelSweeper {
+            be,
+            spec,
+            jobs: jobs.max(1),
+            tracer: Tracer::disabled(),
+        })
+    }
+
+    /// Attach a tracer: every cell run by [`ParallelSweeper::run_many`]
+    /// records into it (worker batches merged in cell order).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Auto-select the backend over an artifact directory (PJRT when it
@@ -162,12 +194,18 @@ impl ParallelSweeper {
             let mut replacement: Option<Box<dyn Backend>> = None;
             let mut out = Vec::with_capacity(cfgs.len());
             for (i, c) in cfgs.iter().enumerate() {
+                self.tracer.instant(
+                    Lane::Sweep,
+                    "cell_claim",
+                    0.0,
+                    &[("cell", i as f64), ("worker", 0.0)],
+                );
                 let mut res = None;
                 for attempt in 1..=QUARANTINE_AFTER {
                     let be: &dyn Backend =
                         replacement.as_deref().unwrap_or(self.be.as_ref());
                     match catch_unwind(AssertUnwindSafe(|| {
-                        run_config(be, c.clone())
+                        run_config_traced(be, c.clone(), &self.tracer)
                     })) {
                         Ok(r) => {
                             res = Some(r);
@@ -175,6 +213,12 @@ impl ParallelSweeper {
                         }
                         Err(p) => {
                             let msg = panic_msg(p.as_ref());
+                            self.tracer.instant(
+                                Lane::Sweep,
+                                "backend_restart",
+                                0.0,
+                                &[("cell", i as f64)],
+                            );
                             replacement = Some(self.spec.create().map_err(
                                 |e| {
                                     e.context(format!(
@@ -184,6 +228,12 @@ impl ParallelSweeper {
                                 },
                             )?);
                             if attempt == QUARANTINE_AFTER {
+                                self.tracer.instant(
+                                    Lane::Sweep,
+                                    "cell_quarantined",
+                                    0.0,
+                                    &[("cell", i as f64)],
+                                );
                                 res = Some(Err(anyhow::anyhow!(
                                     "sweep cell {i} quarantined after \
                                      {QUARANTINE_AFTER} panics (last: {msg})"
@@ -203,16 +253,25 @@ impl ParallelSweeper {
             return Ok(out);
         }
         let spec = &self.spec;
+        let trace_on = self.tracer.on();
         let next = Mutex::new(0usize);
         let slots: Mutex<Vec<Option<Result<Report>>>> =
             Mutex::new((0..cfgs.len()).map(|_| None).collect());
+        // per-cell event batches from the workers' thread-local tracers
+        // (a `Tracer` itself is `Rc`-backed and never crosses threads);
+        // absorbed below in cell order so the merged timeline is
+        // worker-count independent.
+        let cell_events: Mutex<Vec<Vec<Event>>> =
+            Mutex::new((0..cfgs.len()).map(|_| Vec::new()).collect());
         let failed = Mutex::new(false);
         // worker-initialization failures get their own slot so a job
         // completing concurrently can never overwrite the root cause.
         let init_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| {
+            for w in 0..workers {
+                let (next, slots, failed, init_err, cell_events) =
+                    (&next, &slots, &failed, &init_err, &cell_events);
+                scope.spawn(move || {
                     // each worker owns its backend: backends are !Sync.
                     let mut be = match spec.create() {
                         Ok(be) => be,
@@ -232,12 +291,28 @@ impl ParallelSweeper {
                             *n += 1;
                             i
                         };
+                        let local = if trace_on {
+                            Tracer::enabled(trace::DEFAULT_CAPACITY)
+                        } else {
+                            Tracer::disabled()
+                        };
+                        local.instant(
+                            Lane::Sweep,
+                            "cell_claim",
+                            0.0,
+                            &[("cell", i as f64), ("worker", w as f64)],
+                        );
                         let res = run_supervised(
                             &mut be,
                             || spec.create(),
                             i,
                             &cfgs[i],
+                            &local,
                         );
+                        if trace_on {
+                            cell_events.lock().unwrap()[i] =
+                                local.take_events();
+                        }
                         if res.is_err() {
                             *failed.lock().unwrap() = true;
                         }
@@ -246,6 +321,9 @@ impl ParallelSweeper {
                 });
             }
         });
+        for evs in cell_events.into_inner().unwrap() {
+            self.tracer.absorb(&evs);
+        }
         if let Some(e) = init_err.into_inner().unwrap() {
             return Err(e.context("sweep worker failed to construct its backend"));
         }
@@ -345,8 +423,14 @@ mod tests {
     fn panicking_cell_restarts_backend_and_requeues() {
         let spec = testkit::refcpu_spec();
         let mut be: Box<dyn Backend> = Box::new(PanicBackend);
-        let got =
-            run_supervised(&mut be, || spec.create(), 0, &quick(3)).unwrap();
+        let got = run_supervised(
+            &mut be,
+            || spec.create(),
+            0,
+            &quick(3),
+            &Tracer::disabled(),
+        )
+        .unwrap();
         // the requeued attempt ran on the restarted (real) backend to
         // completion, bit-identical to a crash-free run…
         let direct =
@@ -357,6 +441,27 @@ mod tests {
     }
 
     #[test]
+    fn traced_sweep_merges_worker_events_in_cell_order() {
+        let mut sw = ParallelSweeper::new(testkit::refcpu_spec(), 2).unwrap();
+        sw.set_tracer(Tracer::enabled(1 << 14));
+        let reports = sw.run_many(&[quick(3), quick(4)]).unwrap();
+        assert_eq!(reports.len(), 2);
+        let evs = sw.tracer().events();
+        let claims: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.name == "cell_claim")
+            .map(|e| e.args()[0].1)
+            .collect();
+        // absorbed in cell order regardless of which worker ran which
+        assert_eq!(claims, vec![0.0, 1.0]);
+        assert!(evs.iter().any(|e| e.name == "cell" && e.lane == Lane::Sweep));
+        // tracing must not perturb the science
+        let direct =
+            run_config(testkit::refcpu_backend().as_ref(), quick(3)).unwrap();
+        assert_eq!(reports[0].fingerprint(), direct.fingerprint());
+    }
+
+    #[test]
     fn persistent_panic_quarantines_the_cell() {
         let mut be: Box<dyn Backend> = Box::new(PanicBackend);
         let err = run_supervised(
@@ -364,6 +469,7 @@ mod tests {
             || Ok(Box::new(PanicBackend) as Box<dyn Backend>),
             7,
             &quick(3),
+            &Tracer::disabled(),
         )
         .unwrap_err();
         let msg = format!("{err}");

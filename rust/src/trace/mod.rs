@@ -1,0 +1,650 @@
+//! Virtual-time structured tracing for the tuning/serving stack.
+//!
+//! EdgeOL's whole argument is a *schedule* — when fine-tuning rounds fire,
+//! how long they occupy the device, which batch flushes block serving —
+//! yet until this layer the only visibility was the end-of-run
+//! [`crate::metrics::Report`] plus ad-hoc `ETUNER_DEBUG` eprintlns.  The
+//! [`Tracer`] records a timeline of **virtual-time** events (the
+//! simulator's seconds, never wall clock) into a preallocated ring buffer,
+//! and exports it two ways:
+//!
+//! * [`chrome_trace`] — Chrome trace-event JSON (`--trace-out trace.json`),
+//!   loadable in Perfetto / `chrome://tracing`, one "thread" lane per
+//!   subsystem ([`Lane`]);
+//! * [`summary_table`] — a plain-text time-in-state table
+//!   (`--trace-summary`): serving vs tuning vs idle, the paper's Fig. 1
+//!   timeline reconstructed from a real run.
+//!
+//! Cost discipline mirrors [`crate::runtime::FaultPlan`]: the default
+//! [`Tracer::disabled`] holds **no allocation at all** (an empty
+//! `Option`), cloning it is free, and every record method is one inlined
+//! `is_some` check before returning.  Nothing is allocated unless
+//! `--trace` / `ETUNER_TRACE` turns tracing on, and the enabled buffer is
+//! bounded: when the ring wraps, the oldest events are overwritten and a
+//! `dropped` counter records the loss instead of growing memory.
+//!
+//! All data recorded here is observability-only: nothing feeds back into
+//! scheduling decisions and nothing enters [`Report::fingerprint`]
+//! (asserted by `tests/trace.rs`).
+//!
+//! [`Report::fingerprint`]: crate::metrics::Report::fingerprint
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+use std::sync::OnceLock;
+
+use crate::json::Json;
+use crate::metrics::Report;
+
+/// Maximum number of typed `(key, value)` annotations per event.  Fixed so
+/// [`Event`] is `Copy` and recording never allocates; callers truncate.
+pub const MAX_ARGS: usize = 6;
+
+/// Default ring capacity (events) used by the CLI.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// One timeline lane per subsystem — rendered as a Chrome trace "thread".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lane {
+    /// Serving control plane: arrivals, admission, flushes, executes.
+    Engine,
+    /// Tune-vs-serve scheduler: round trigger/defer/run.
+    Rounds,
+    /// Sweep orchestration: cell claims, restarts, quarantines.
+    Sweep,
+    /// Backend execute boundary (the `TracingBackend` decorator).
+    Backend,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 4] =
+        [Lane::Engine, Lane::Rounds, Lane::Sweep, Lane::Backend];
+
+    /// Stable lane name used for the Chrome `thread_name` metadata and the
+    /// summary table.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Engine => "serve-engine",
+            Lane::Rounds => "rounds",
+            Lane::Sweep => "sweep",
+            Lane::Backend => "backend",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Lane::Engine => 0,
+            Lane::Rounds => 1,
+            Lane::Sweep => 2,
+            Lane::Backend => 3,
+        }
+    }
+
+    /// Chrome trace `tid` (1-based so lane 0 isn't confused with the pid).
+    fn tid(self) -> u64 {
+        self.idx() as u64 + 1
+    }
+}
+
+/// Event flavor, mapped to Chrome trace phases on export.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Complete span (`ph:"X"`): `[t0, t0+dur]`.
+    Span,
+    /// Instant (`ph:"i"`).
+    Instant,
+    /// Typed counter sample (`ph:"C"`).
+    Counter,
+}
+
+/// One recorded event.  `Copy` and allocation-free by construction: names
+/// are `&'static str` and annotations live in a fixed inline array.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub lane: Lane,
+    pub kind: Kind,
+    pub name: &'static str,
+    /// Virtual-time start (seconds).
+    pub t0: f64,
+    /// Virtual-time duration (seconds; 0 for instants/counters).
+    pub dur: f64,
+    args: [(&'static str, f64); MAX_ARGS],
+    n_args: u8,
+}
+
+impl Event {
+    /// The typed annotations recorded with this event.
+    pub fn args(&self) -> &[(&'static str, f64)] {
+        &self.args[..self.n_args as usize]
+    }
+}
+
+fn pack_args(args: &[(&'static str, f64)]) -> ([(&'static str, f64); MAX_ARGS], u8) {
+    let mut a = [("", 0.0); MAX_ARGS];
+    let n = args.len().min(MAX_ARGS);
+    a[..n].copy_from_slice(&args[..n]);
+    (a, n as u8)
+}
+
+/// The enabled tracer's storage: a bounded ring of events plus per-lane
+/// open-span stacks.  Extracted ([`Tracer::take_events`]) to move event
+/// batches across threads (sweep workers record locally, the coordinator
+/// absorbs in deterministic cell order).
+#[derive(Debug)]
+struct TraceBuf {
+    events: Vec<Event>,
+    cap: usize,
+    /// Ring write cursor, valid once `events.len() == cap`.
+    next: usize,
+    /// Events overwritten after the ring wrapped.
+    dropped: u64,
+    /// Per-lane stacks of open spans: (name, t0).
+    open: [Vec<(&'static str, f64)>; 4],
+    /// Last virtual time seen (backend-boundary events are stamped with
+    /// this — backend calls are instantaneous in virtual time).
+    now: f64,
+}
+
+impl TraceBuf {
+    fn new(capacity: usize) -> TraceBuf {
+        let cap = capacity.max(16);
+        TraceBuf {
+            events: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            dropped: 0,
+            open: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            now: 0.0,
+        }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            self.events[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Cheap, cloneable handle to a (possibly absent) trace buffer.
+///
+/// `Tracer::disabled()` is the default everywhere a tracer is threaded
+/// (`ServeEngine`, `Simulation`, `ParallelSweeper`, `TracingBackend`) and
+/// holds nothing: no allocation, and every record method returns after one
+/// inlined `is_some` check.  `Tracer::enabled(cap)` preallocates the ring.
+/// Clones share the same buffer (single-threaded `Rc` — a tracer never
+/// crosses threads; sweep workers build their own and hand the events
+/// back).
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    buf: Option<Rc<RefCell<TraceBuf>>>,
+}
+
+impl Tracer {
+    /// The no-op tracer: zero allocations, zero recorded events.
+    #[inline]
+    pub fn disabled() -> Tracer {
+        Tracer { buf: None }
+    }
+
+    /// A recording tracer with a preallocated ring of `capacity` events.
+    pub fn enabled(capacity: usize) -> Tracer {
+        Tracer { buf: Some(Rc::new(RefCell::new(TraceBuf::new(capacity)))) }
+    }
+
+    /// Whether events are being recorded.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Advance the tracer's virtual clock (used to stamp backend-boundary
+    /// events, which have no virtual duration of their own).
+    #[inline]
+    pub fn set_now(&self, t: f64) {
+        if let Some(b) = &self.buf {
+            b.borrow_mut().now = t;
+        }
+    }
+
+    /// Last virtual time seen via [`Self::set_now`] (0 when disabled).
+    #[inline]
+    pub fn now(&self) -> f64 {
+        match &self.buf {
+            Some(b) => b.borrow().now,
+            None => 0.0,
+        }
+    }
+
+    /// Record a complete span `[t0, t1]`.
+    #[inline]
+    pub fn span(
+        &self,
+        lane: Lane,
+        name: &'static str,
+        t0: f64,
+        t1: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        if let Some(b) = &self.buf {
+            let (a, n) = pack_args(args);
+            b.borrow_mut().push(Event {
+                lane,
+                kind: Kind::Span,
+                name,
+                t0,
+                dur: (t1 - t0).max(0.0),
+                args: a,
+                n_args: n,
+            });
+        }
+    }
+
+    /// Open a span on `lane`; closed by the matching [`Self::end`].
+    #[inline]
+    pub fn begin(&self, lane: Lane, name: &'static str, t: f64) {
+        if let Some(b) = &self.buf {
+            b.borrow_mut().open[lane.idx()].push((name, t));
+        }
+    }
+
+    /// Close the innermost open span on `lane`, recording it as a complete
+    /// span with `args` attached.  Unbalanced `end`s are ignored.
+    #[inline]
+    pub fn end(&self, lane: Lane, t: f64, args: &[(&'static str, f64)]) {
+        if let Some(b) = &self.buf {
+            let mut b = b.borrow_mut();
+            if let Some((name, t0)) = b.open[lane.idx()].pop() {
+                let (a, n) = pack_args(args);
+                b.push(Event {
+                    lane,
+                    kind: Kind::Span,
+                    name,
+                    t0,
+                    dur: (t - t0).max(0.0),
+                    args: a,
+                    n_args: n,
+                });
+            }
+        }
+    }
+
+    /// Record an instant event.
+    #[inline]
+    pub fn instant(
+        &self,
+        lane: Lane,
+        name: &'static str,
+        t: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        if let Some(b) = &self.buf {
+            let (a, n) = pack_args(args);
+            b.borrow_mut().push(Event {
+                lane,
+                kind: Kind::Instant,
+                name,
+                t0: t,
+                dur: 0.0,
+                args: a,
+                n_args: n,
+            });
+        }
+    }
+
+    /// Record a typed counter sample (rendered as a Chrome counter track).
+    #[inline]
+    pub fn counter(&self, lane: Lane, name: &'static str, t: f64, value: f64) {
+        if let Some(b) = &self.buf {
+            let (a, n) = pack_args(&[("value", value)]);
+            b.borrow_mut().push(Event {
+                lane,
+                kind: Kind::Counter,
+                name,
+                t0: t,
+                dur: 0.0,
+                args: a,
+                n_args: n,
+            });
+        }
+    }
+
+    /// Structured replacement for the scattered `ETUNER_DEBUG` eprintln
+    /// sites: records an instant *and* keeps the legacy stderr echo when
+    /// `ETUNER_DEBUG` is set — so existing debugging workflows keep
+    /// working whether or not tracing is on.
+    #[inline]
+    pub fn debug(
+        &self,
+        lane: Lane,
+        name: &'static str,
+        t: f64,
+        args: &[(&'static str, f64)],
+        msg: fmt::Arguments<'_>,
+    ) {
+        if debug_enabled() {
+            eprintln!("{msg}");
+        }
+        self.instant(lane, name, t, args);
+    }
+
+    /// Events overwritten after the ring wrapped (0 when disabled).
+    pub fn dropped(&self) -> u64 {
+        match &self.buf {
+            Some(b) => b.borrow().dropped,
+            None => 0,
+        }
+    }
+
+    /// Snapshot of all recorded events in chronological record order.
+    pub fn events(&self) -> Vec<Event> {
+        match &self.buf {
+            Some(b) => {
+                let b = b.borrow();
+                let mut out =
+                    Vec::with_capacity(b.events.len());
+                // ring order: oldest surviving event first
+                out.extend_from_slice(&b.events[b.next..]);
+                out.extend_from_slice(&b.events[..b.next]);
+                out
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Drain the buffer, returning the events (record order) and leaving
+    /// the ring empty.  Used by sweep workers to hand their thread-local
+    /// timeline back to the coordinator.
+    pub fn take_events(&self) -> Vec<Event> {
+        match &self.buf {
+            Some(b) => {
+                let mut b = b.borrow_mut();
+                let next = b.next;
+                let mut evs = std::mem::take(&mut b.events);
+                evs.rotate_left(next.min(evs.len()));
+                b.next = 0;
+                evs
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Append a batch of events (e.g. a sweep worker's drained buffer).
+    pub fn absorb(&self, events: &[Event]) {
+        if let Some(b) = &self.buf {
+            let mut b = b.borrow_mut();
+            for &e in events {
+                b.push(e);
+            }
+        }
+    }
+
+    /// Export the recorded timeline as Chrome trace-event JSON.
+    pub fn to_chrome_json(&self) -> Json {
+        chrome_trace(&self.events())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Environment knobs
+// ---------------------------------------------------------------------------
+
+/// `ETUNER_DEBUG` gate, cached once per process (moved here from
+/// `serve::engine` so every subsystem shares one check).
+pub fn debug_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("ETUNER_DEBUG").is_ok())
+}
+
+/// `ETUNER_TRACE` gate: any value other than empty/`0` enables tracing on
+/// the CLI even without `--trace` (mirrors `ETUNER_FAULTS`' env path).
+pub fn env_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        matches!(std::env::var("ETUNER_TRACE"), Ok(v) if !v.is_empty() && v != "0")
+    })
+}
+
+/// Startup/config diagnostics that predate any tracer instance (bad env
+/// specs, backend selection).  One funnel instead of scattered eprintlns.
+pub fn note(msg: fmt::Arguments<'_>) {
+    eprintln!("{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Build Chrome trace-event JSON (the `{"traceEvents": [...]}` object
+/// format) from a recorded event batch.  Timestamps are **virtual-time
+/// microseconds** — Perfetto renders the simulated schedule, not wall
+/// clock.  One metadata `thread_name` record per [`Lane`] gives each
+/// subsystem its own track.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut evs: Vec<Json> = Vec::with_capacity(events.len() + 5);
+    evs.push(obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("process_name".into())),
+        ("pid", Json::Num(1.0)),
+        ("args", obj(vec![("name", Json::Str("etuner (virtual time)".into()))])),
+    ]));
+    for lane in Lane::ALL {
+        evs.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(lane.tid() as f64)),
+            ("args", obj(vec![("name", Json::Str(lane.name().into()))])),
+        ]));
+    }
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.t0.partial_cmp(&b.t0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.lane.cmp(&b.lane))
+    });
+    for e in sorted {
+        let ts = e.t0 * 1e6;
+        let mut args: Vec<(&str, Json)> = Vec::new();
+        match e.kind {
+            Kind::Counter => {
+                // counter tracks carry their value under the series name
+                let v = e.args().first().map(|&(_, v)| v).unwrap_or(0.0);
+                args.push((e.name, Json::Num(v)));
+            }
+            _ => {
+                for &(k, v) in e.args() {
+                    args.push((k, Json::Num(v)));
+                }
+            }
+        }
+        let mut fields = vec![
+            ("name", Json::Str(e.name.into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(e.lane.tid() as f64)),
+            ("ts", Json::Num(ts)),
+            ("args", obj(args)),
+        ];
+        match e.kind {
+            Kind::Span => {
+                fields.push(("ph", Json::Str("X".into())));
+                fields.push(("dur", Json::Num(e.dur * 1e6)));
+            }
+            Kind::Instant => {
+                fields.push(("ph", Json::Str("i".into())));
+                fields.push(("s", Json::Str("t".into())));
+            }
+            Kind::Counter => fields.push(("ph", Json::Str("C".into()))),
+        }
+        evs.push(obj(fields));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Plain-text time-in-state table (`--trace-summary`): how the run's
+/// virtual horizon split between serving executes, fine-tuning rounds, and
+/// idle — the paper's Fig. 1 timeline as numbers — plus per-lane event
+/// counts when a tracer was recording.
+pub fn summary_table(report: &Report, tracer: &Tracer) -> String {
+    let total = (report.time_serving_s
+        + report.time_tuning_s
+        + report.time_idle_s)
+        .max(1e-12);
+    let mut s = String::new();
+    s.push_str("time-in-state (virtual seconds)\n");
+    s.push_str(&format!("  {:<10} {:>12} {:>8}\n", "state", "time_s", "share"));
+    for (name, v) in [
+        ("serving", report.time_serving_s),
+        ("tuning", report.time_tuning_s),
+        ("idle", report.time_idle_s),
+    ] {
+        s.push_str(&format!(
+            "  {:<10} {:>12.3} {:>7.1}%\n",
+            name,
+            v,
+            100.0 * v / total
+        ));
+    }
+    if tracer.on() {
+        let mut spans: BTreeMap<Lane, (u64, u64, u64)> = BTreeMap::new();
+        for e in tracer.events() {
+            let c = spans.entry(e.lane).or_default();
+            match e.kind {
+                Kind::Span => c.0 += 1,
+                Kind::Instant => c.1 += 1,
+                Kind::Counter => c.2 += 1,
+            }
+        }
+        s.push_str(&format!(
+            "trace lanes ({} events dropped by ring)\n",
+            tracer.dropped()
+        ));
+        s.push_str(&format!(
+            "  {:<14} {:>8} {:>9} {:>9}\n",
+            "lane", "spans", "instants", "counters"
+        ));
+        for lane in Lane::ALL {
+            let (sp, i, c) = spans.get(&lane).copied().unwrap_or_default();
+            s.push_str(&format!(
+                "  {:<14} {:>8} {:>9} {:>9}\n",
+                lane.name(),
+                sp,
+                i,
+                c
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.set_now(5.0);
+        t.begin(Lane::Engine, "flush", 1.0);
+        t.end(Lane::Engine, 2.0, &[]);
+        t.instant(Lane::Rounds, "trigger", 3.0, &[("backlog", 4.0)]);
+        t.counter(Lane::Engine, "queue_depth", 3.0, 7.0);
+        assert!(!t.on());
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.now(), 0.0);
+    }
+
+    #[test]
+    fn begin_end_pairs_into_spans() {
+        let t = Tracer::enabled(64);
+        t.begin(Lane::Rounds, "round", 10.0);
+        t.begin(Lane::Rounds, "inner", 11.0);
+        t.end(Lane::Rounds, 12.0, &[("x", 1.0)]);
+        t.end(Lane::Rounds, 15.0, &[]);
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "inner");
+        assert!((evs[0].dur - 1.0).abs() < 1e-12);
+        assert_eq!(evs[0].args(), &[("x", 1.0)]);
+        assert_eq!(evs[1].name, "round");
+        assert!((evs[1].dur - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let t = Tracer::enabled(16);
+        for i in 0..20 {
+            t.instant(Lane::Engine, "e", i as f64, &[]);
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 16);
+        assert_eq!(t.dropped(), 4);
+        // oldest surviving first
+        assert!((evs[0].t0 - 4.0).abs() < 1e-12);
+        assert!((evs[15].t0 - 19.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_names_lanes() {
+        let t = Tracer::enabled(64);
+        t.span(Lane::Engine, "execute", 1.0, 2.5, &[("scenario", 0.0)]);
+        t.instant(Lane::Sweep, "cell_claim", 0.0, &[("cell", 0.0)]);
+        t.counter(Lane::Engine, "queue_depth", 1.0, 3.0);
+        let text = t.to_chrome_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().arr().unwrap();
+        // 1 process + 4 thread metadata + 3 events
+        assert_eq!(evs.len(), 8);
+        let span = evs
+            .iter()
+            .find(|e| {
+                e.opt("ph").and_then(|p| p.str().ok()) == Some("X")
+            })
+            .unwrap();
+        assert_eq!(span.get("name").unwrap().str().unwrap(), "execute");
+        assert!((span.get("ts").unwrap().num().unwrap() - 1e6).abs() < 1e-6);
+        assert!((span.get("dur").unwrap().num().unwrap() - 1.5e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn take_and_absorb_move_events_between_tracers() {
+        let worker = Tracer::enabled(32);
+        worker.instant(Lane::Sweep, "cell_claim", 0.0, &[("worker", 1.0)]);
+        worker.span(Lane::Sweep, "cell", 0.0, 9.0, &[("cell", 2.0)]);
+        let batch = worker.take_events();
+        assert_eq!(batch.len(), 2);
+        assert!(worker.events().is_empty());
+        let main = Tracer::enabled(32);
+        main.absorb(&batch);
+        assert_eq!(main.events().len(), 2);
+    }
+
+    #[test]
+    fn summary_table_reports_time_in_state() {
+        let r = Report {
+            time_serving_s: 25.0,
+            time_tuning_s: 50.0,
+            time_idle_s: 25.0,
+            ..Report::default()
+        };
+        let t = Tracer::enabled(8);
+        t.span(Lane::Rounds, "round", 0.0, 50.0, &[]);
+        let s = summary_table(&r, &t);
+        assert!(s.contains("tuning"));
+        assert!(s.contains("50.0%"));
+        assert!(s.contains("rounds"));
+    }
+}

@@ -19,6 +19,7 @@ use etuner::model::ModelSession;
 use etuner::runtime::Backend;
 use etuner::sim::{run_averaged, ParallelSweeper, RunConfig, Simulation};
 use etuner::testkit;
+use etuner::trace::{Lane, Tracer};
 
 // ---------------------------------------------------------------------------
 // per-thread allocation counter: the regression canary for hidden copies
@@ -281,6 +282,54 @@ fn train_step_makes_no_hidden_copies() {
         "steady-state train step performed {min} allocations \
          (windows: {per_step:?}) — did a hidden copy sneak back into \
          the execution core?"
+    );
+}
+
+#[test]
+fn disabled_tracer_is_allocation_free() {
+    // The default `Tracer::disabled()` is threaded through every serving
+    // hot-path record site (arrival, queue counter, flush begin/end,
+    // execute span, backend boundary).  This canary drives exactly that
+    // per-request call mix for a steady-state burst and demands ZERO
+    // allocations — one reintroduced `Vec`/`Rc` in a disabled path shows
+    // up immediately.  The counter is thread-local, so the window is
+    // exact regardless of parallel test threads.
+    let t = Tracer::disabled();
+    // warm-up: initialize the process-wide ETUNER_DEBUG OnceLock outside
+    // the measured window (its env lookup is one-time setup cost).
+    t.instant(Lane::Engine, "arrival", 0.0, &[("scenario", 0.0)]);
+    t.debug(Lane::Engine, "warmup", 0.0, &[], format_args!("[dbg] warmup"));
+    let before = thread_allocs();
+    for i in 0..4096u32 {
+        let now = i as f64;
+        t.set_now(now);
+        t.instant(Lane::Engine, "arrival", now, &[("scenario", 1.0)]);
+        t.counter(Lane::Engine, "queue_depth", now, 3.0);
+        t.begin(Lane::Engine, "flush", now);
+        t.span(
+            Lane::Engine,
+            "execute",
+            now,
+            now + 0.5,
+            &[("scenario", 1.0), ("requests", 4.0), ("rows", 64.0)],
+        );
+        t.span(Lane::Backend, "execute", now, now, &[("ok", 1.0)]);
+        t.end(Lane::Engine, now + 0.5, &[("groups", 1.0)]);
+        t.debug(
+            Lane::Engine,
+            "served",
+            now,
+            &[("scenario", 1.0)],
+            format_args!("[dbg] t={now:.0}"),
+        );
+        let clone = t.clone(); // engines/backends clone the handle freely
+        std::hint::black_box(&clone);
+    }
+    let grew = thread_allocs() - before;
+    assert_eq!(
+        grew, 0,
+        "Tracer::disabled() allocated {grew} times across a 4096-request \
+         serving burst — the disabled path must be free"
     );
 }
 

@@ -1,0 +1,173 @@
+//! Observability-layer integration tests (PR 7).
+//!
+//! Contracts:
+//!
+//! * **Fingerprint audit** — tracing is pure observation: the same config
+//!   run with a recording tracer (and the `TracingBackend` decorator in
+//!   the stack) produces a bit-identical `Report::fingerprint` to the
+//!   untraced run, and a disabled tracer adds no decorator at all.
+//! * **Lane coverage** — a default-config traced run records at least one
+//!   span in every subsystem lane (serve-engine, rounds, sweep, backend),
+//!   and the Chrome export round-trips through the repo's own JSON
+//!   parser with those lanes present.
+//! * **Histogram parity** — the registry's latency histogram reproduces
+//!   the report's nearest-rank percentiles bit-for-bit.
+//!
+//! The `ci_trace_file_is_valid_chrome_json` test additionally validates a
+//! CLI-emitted `--trace-out` file when `ETUNER_TRACE_FILE` points at one
+//! (the `make ci-trace` lane).
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::json::Json;
+use etuner::runtime::{FaultPlan, TracingBackend};
+use etuner::sim::{run_config, run_config_traced, RunConfig, Simulation};
+use etuner::testkit;
+use etuner::trace::{self, Kind, Lane, Tracer};
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 80;
+    c.faults = FaultPlan::none(); // pinned: ETUNER_FAULTS must not leak in
+    c
+}
+
+/// Count Chrome-trace events per `(tid, ph)` in a parsed export.
+fn count_spans_per_tid(v: &Json) -> Vec<(u64, usize)> {
+    let evs = v.get("traceEvents").unwrap().arr().unwrap();
+    let mut out: Vec<(u64, usize)> = (1..=4).map(|t| (t, 0)).collect();
+    for e in evs {
+        let ph = e.get("ph").unwrap().str().unwrap();
+        if ph != "X" {
+            continue;
+        }
+        let tid = e.get("tid").unwrap().num().unwrap() as u64;
+        if let Some(slot) = out.iter_mut().find(|(t, _)| *t == tid) {
+            slot.1 += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn traced_run_is_fingerprint_identical_and_covers_every_lane() {
+    let be = testkit::refcpu_backend();
+    let plain = run_config(be.as_ref(), quick(42)).unwrap();
+
+    let tracer = Tracer::enabled(trace::DEFAULT_CAPACITY);
+    let traced = run_config_traced(be.as_ref(), quick(42), &tracer).unwrap();
+
+    assert_eq!(
+        plain.fingerprint(),
+        traced.fingerprint(),
+        "recording a trace changed the scientific output"
+    );
+
+    // every subsystem lane recorded at least one span
+    let evs = tracer.events();
+    assert!(!evs.is_empty(), "traced run recorded nothing");
+    for lane in Lane::ALL {
+        assert!(
+            evs.iter()
+                .any(|e| e.lane == lane && matches!(e.kind, Kind::Span)),
+            "no span in lane {:?} ({})",
+            lane,
+            lane.name()
+        );
+    }
+
+    // ... and the Chrome export round-trips through the repo JSON parser
+    // with one populated track per lane.
+    let text = tracer.to_chrome_json().to_string();
+    let v = Json::parse(&text).expect("chrome export must parse");
+    for (tid, n) in count_spans_per_tid(&v) {
+        assert!(n > 0, "chrome export has no spans on tid {tid}");
+    }
+
+    // time-in-state accounting is populated and consistent
+    assert!(traced.time_tuning_s > 0.0, "no tuning time recorded");
+    assert!(traced.time_serving_s > 0.0, "no serving time recorded");
+    assert!(traced.time_idle_s >= 0.0);
+    // ... and identical with tracing off (it comes from the scheduler
+    // occupancy ledger, not the tracer).
+    assert_eq!(plain.time_tuning_s.to_bits(), traced.time_tuning_s.to_bits());
+    assert_eq!(
+        plain.time_serving_s.to_bits(),
+        traced.time_serving_s.to_bits()
+    );
+}
+
+#[test]
+fn disabled_tracer_constructs_no_decorator_and_passthrough_decorator_is_inert()
+{
+    let be = testkit::refcpu_backend();
+    let plain = run_config(be.as_ref(), quick(7)).unwrap();
+
+    // run_config_traced with a disabled tracer takes the exact
+    // run_config path
+    let off = run_config_traced(be.as_ref(), quick(7), &Tracer::disabled())
+        .unwrap();
+    assert_eq!(plain.fingerprint(), off.fingerprint());
+
+    // even an explicitly constructed TracingBackend with a disabled
+    // tracer is a pure passthrough
+    let tb = TracingBackend::new(be.as_ref(), Tracer::disabled());
+    let wrapped = Simulation::new(&tb, quick(7)).unwrap().run().unwrap();
+    assert_eq!(
+        plain.fingerprint(),
+        wrapped.fingerprint(),
+        "a disabled TracingBackend decorator changed the report"
+    );
+}
+
+#[test]
+fn report_histograms_reproduce_legacy_percentiles_bit_for_bit() {
+    let be = testkit::refcpu_backend();
+    // a real coalescing window so latencies are non-trivial
+    let mut cfg = quick(11);
+    cfg.serve.batch_window_s = 20.0;
+    cfg.serve.slo_ms = 30_000.0;
+    let r = run_config(be.as_ref(), cfg).unwrap();
+
+    let h = r.hists.get("serve/latency_ms").expect("latency histogram");
+    assert_eq!(h.count(), r.requests.len() as u64);
+    for (p, legacy) in [
+        (50.0, r.latency_p50_ms),
+        (95.0, r.latency_p95_ms),
+        (99.0, r.latency_p99_ms),
+    ] {
+        assert_eq!(
+            h.percentile(p).to_bits(),
+            legacy.to_bits(),
+            "histogram p{p} diverged from the sorted-Vec report value"
+        );
+    }
+    assert!(r.hists.get("serve/queue_depth").is_some());
+    assert!(r.hists.get("serve/batch_rows").is_some());
+    let rounds = r.hists.get("tune/round_s").expect("round histogram");
+    assert_eq!(rounds.count(), r.rounds);
+}
+
+#[test]
+fn ci_trace_file_is_valid_chrome_json() {
+    // `make ci-trace` runs the CLI with --trace-out and points this test
+    // at the emitted file; without the env var the test is a no-op so the
+    // plain suite stays hermetic.
+    let Ok(path) = std::env::var("ETUNER_TRACE_FILE") else {
+        return;
+    };
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    let v = Json::parse(&text).expect("CLI trace file must be valid JSON");
+    assert_eq!(
+        v.get("displayTimeUnit").unwrap().str().unwrap(),
+        "ms",
+        "not a Chrome trace-event export"
+    );
+    for (tid, n) in count_spans_per_tid(&v) {
+        assert!(n > 0, "CLI trace has no spans on tid {tid} — a subsystem \
+                 lane went silent");
+    }
+}
