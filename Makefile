@@ -6,6 +6,7 @@
 #   make ci          stub-feature gate: build + tests + fmt + clippy -D warnings
 #   make ci-faults   tier-1 suite again under a fixed nonzero fault plan
 #   make ci-trace    short traced run -> validated Chrome trace JSON
+#   make ci-fleet    fleet lane: --fleet 4 CLI smoke + the fleet test battery
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
 #   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
@@ -16,8 +17,8 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci ci-faults ci-trace bench bench-gemm \
-	bench-snapshot repro
+.PHONY: artifacts build test ci ci-faults ci-trace ci-fleet bench \
+	bench-gemm bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -67,6 +68,19 @@ ci-trace:
 		--trace-out /tmp/etuner_trace.json --trace-summary
 	cd rust && ETUNER_TRACE_FILE=/tmp/etuner_trace.json \
 		cargo test -q --release --test trace
+
+# Fleet lane (PR 8): a --fleet 4 CLI smoke run (scenario-affinity routing
+# across four engines must keep the default-config scientific fingerprint,
+# see tests/fleet.rs) followed by the fleet determinism battery — the
+# fleet-of-1 transparency pin, sequential-vs-threaded pool bit-identity,
+# arrival conservation with one engine's breaker open, and the merged
+# per-(engine, lane) trace tracks.
+ci-fleet:
+	cd rust && cargo run --release -q -- run --model mbv2 \
+		--benchmark scifar10 --tune lazytune --freeze simfreeze \
+		--requests 80 --seed 1 --fleet 4
+	cd rust && cargo test -q --release --test fleet --test trace \
+		--test serving_engine
 
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \

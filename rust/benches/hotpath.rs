@@ -572,6 +572,71 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+
+        // ---- fleet burst: N engines behind the affinity router (PR 8) -----
+        // The same interleaved burst through `run_pool` (sequential mode,
+        // the pool behind `repro fleet`) at fleet sizes 1/2/4.  Stub-safe:
+        // the refcpu spec builds one executing backend per engine, no
+        // artifacts needed, so the series regenerates in any CI box.
+        {
+            use etuner::runtime::FaultPlan;
+            use etuner::serve::{run_pool, FleetConfig, FleetPoolSpec};
+            for n in [1usize, 2, 4] {
+                let spec = FleetPoolSpec {
+                    backend: testkit::refcpu_spec(),
+                    model: "mbv2".into(),
+                    device: DeviceModel::jetson_nx_15w(),
+                    scenarios: scenarios.clone(),
+                    serve: ServeConfig {
+                        batch_window_s: 1e6,
+                        slo_ms: 1e15,
+                        rows_per_request: Some(rows),
+                        bank_capacity: 4,
+                        ..ServeConfig::default()
+                    },
+                    fleet: FleetConfig { engines: n, ..FleetConfig::default() },
+                    trace: false,
+                    faults: FaultPlan::none(),
+                    fault_seed: 0,
+                };
+                report(
+                    &format!("serving: fleet N={n} ({N_REQ} reqs)"),
+                    bench(1, 3, || {
+                        let y = run_pool(&spec, &reqs, 1e7, false).unwrap();
+                        sink += y.events.len();
+                    }),
+                );
+            }
+        }
+
+        // ---- EDF deep backlog: amortized side-index pop loop (PR 8) -------
+        // A deep scrambled-deadline backlog fully drained by repeated
+        // earliest-deadline selection.  The naive rescan this replaced was
+        // O(n^2) in backlog depth; queue.rs pins the side index
+        // bit-identical to the reference scan, this series prices it.
+        {
+            const DEPTH: usize = 4096;
+            report(
+                &format!("serving: edf deep backlog ({DEPTH} reqs)"),
+                bench(1, 5, || {
+                    let mut q = RequestQueue::new();
+                    for i in 0..DEPTH {
+                        q.push(QueuedRequest {
+                            arrival_t: i as f64,
+                            deadline_t: ((i * 2654435761) % DEPTH) as f64,
+                            scenario: 0,
+                            stale_batches: 0,
+                            x: vec![0.0],
+                            y: vec![0],
+                            rows: 1,
+                        });
+                    }
+                    while let Some(i) = q.edf_next_index() {
+                        sink += q.remove(i).map_or(0, |r| r.rows);
+                    }
+                }),
+            );
+        }
         std::hint::black_box(sink);
     }
 

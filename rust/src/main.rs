@@ -63,6 +63,7 @@ fn main() -> Result<()> {
                        [--batch-window S] [--slo-ms MS] [--no-batching]\n\
                        [--queue-policy fifo|edf] [--max-queue N]\n\
                        [--shed-infeasible] [--bank-capacity N]\n\
+                       [--fleet N] [--no-affinity] [--rebalance-threshold X]\n\
                        [--faults SPEC] [--fault-seed S]\n\
                        [--trace] [--trace-out FILE] [--trace-summary]\n\
                        [--backend pjrt|refcpu|auto]\n\
@@ -78,6 +79,13 @@ fn main() -> Result<()> {
                        bounds the resident per-scenario serving-theta banks\n\
                        (LRU-evicted beyond N; default 4, ceiling 8 so banks\n\
                        fit the session theta-cache)\n\
+                       --fleet N serves through N independent engines behind\n\
+                       a scenario-affinity router (default 1: the bare\n\
+                       engine, bit-identical reports); --no-affinity routes\n\
+                       purely least-loaded; --rebalance-threshold X installs\n\
+                       a second bank for a scenario once one engine holds\n\
+                       more than X of its fleet-wide queued requests\n\
+                       (default 0.5; 0 disables rebalancing)\n\
                        --faults injects deterministic backend faults:\n\
                        comma-separated exec:RATE, marshal:RATE,\n\
                        spike:RATExSECONDS, burst:N, seed:S (e.g.\n\
@@ -201,6 +209,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     cfg.serve.shed_infeasible = flag(args, "--shed-infeasible");
     cfg.serve_direct = flag(args, "--no-batching");
+    if let Some(n) = opt(args, "--fleet") {
+        let n: usize = n.parse().context("bad --fleet")?;
+        cfg.fleet.engines = n.max(1);
+    }
+    if let Some(th) = opt(args, "--rebalance-threshold") {
+        cfg.fleet.rebalance_threshold =
+            th.parse().context("bad --rebalance-threshold")?;
+    }
+    if flag(args, "--no-affinity") {
+        cfg.fleet.affinity = false;
+    }
     if let Some(f) = opt(args, "--faults") {
         cfg.faults = FaultPlan::parse(f).context("bad --faults")?;
     }
@@ -269,6 +288,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
         report.banks_peak_resident,
         report.bank_evictions,
     );
+    if report.fleet_engines > 1 {
+        println!(
+            "  fleet: {} engines; {} routed by affinity / {} least-loaded; \
+             {} cross-engine retries; {} rebalances",
+            report.fleet_engines,
+            report.fleet_routed_affinity,
+            report.fleet_routed_least_loaded,
+            report.fleet_cross_engine_retries,
+            report.fleet_rebalances,
+        );
+    }
     for s in &report.per_scenario_latency {
         println!(
             "    scen {}: {} reqs, mean {:.1}ms / p95 {:.1}ms / max {:.1}ms, \

@@ -177,6 +177,20 @@ pub struct Report {
     /// fine-tuning rounds rolled back to the last good θ generation after
     /// a mid-round failure.
     pub round_rollbacks: u64,
+    /// fleet routing accounting (PR 8; excluded from
+    /// [`Report::fingerprint`] like every serving counter above — a fleet
+    /// of one routes everything to engine 0 and the scientific fields
+    /// stay bit-identical to the engine-only control plane):
+    /// serving engines in the fleet (`--fleet`; 1 = no fleet).
+    pub fleet_engines: u64,
+    /// requests routed to an engine whose bank mirror held their scenario.
+    pub fleet_routed_affinity: u64,
+    /// requests routed least-loaded (no affinity holder, or affinity off).
+    pub fleet_routed_least_loaded: u64,
+    /// queue-full verdicts converted into a retry on another engine.
+    pub fleet_cross_engine_retries: u64,
+    /// hot-scenario rebalances (second bank warm-installed elsewhere).
+    pub fleet_rebalances: u64,
     /// time-in-state accounting (PR 7 observability; excluded from
     /// [`Report::fingerprint`] like every serving counter above — it is a
     /// pure readout of the device schedule): virtual seconds the device
@@ -373,6 +387,13 @@ pub fn average(reports: &[Report]) -> Report {
     out.degraded_serves = mean_u64(|r| r.degraded_serves);
     out.drops_backend_unavailable = mean_u64(|r| r.drops_backend_unavailable);
     out.round_rollbacks = mean_u64(|r| r.round_rollbacks);
+    // fleet_engines is configuration, not an outcome: carried over from
+    // reports[0] by the clone above, like queue_policy.
+    out.fleet_routed_affinity = mean_u64(|r| r.fleet_routed_affinity);
+    out.fleet_routed_least_loaded = mean_u64(|r| r.fleet_routed_least_loaded);
+    out.fleet_cross_engine_retries =
+        mean_u64(|r| r.fleet_cross_engine_retries);
+    out.fleet_rebalances = mean_u64(|r| r.fleet_rebalances);
     out.time_serving_s = reports.iter().map(|r| r.time_serving_s).sum::<f64>() / n;
     out.time_tuning_s = reports.iter().map(|r| r.time_tuning_s).sum::<f64>() / n;
     out.time_idle_s = reports.iter().map(|r| r.time_idle_s).sum::<f64>() / n;
@@ -555,6 +576,12 @@ mod tests {
         b.time_tuning_s = 300.0;
         b.time_idle_s = 600.0;
         b.hists.record("serve/latency_ms", 12.5);
+        // fleet routing accounting (PR 8) is also excluded
+        b.fleet_engines = 4;
+        b.fleet_routed_affinity = 120;
+        b.fleet_routed_least_loaded = 30;
+        b.fleet_cross_engine_retries = 5;
+        b.fleet_rebalances = 2;
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;
@@ -613,6 +640,10 @@ mod tests {
             round_rollbacks: _,
             // EXCLUDED — observability (PR 7):
             time_serving_s: _, time_tuning_s: _, time_idle_s: _, hists: _,
+            // EXCLUDED — fleet routing (PR 8):
+            fleet_engines: _, fleet_routed_affinity: _,
+            fleet_routed_least_loaded: _, fleet_cross_engine_retries: _,
+            fleet_rebalances: _,
         } = Report::default();
         // Per-request records feed the fingerprint partially: t/scenario/
         // accuracy/stale_batches hash, the serving fields don't.  Same

@@ -55,6 +55,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("serve", "serving engine: latency percentiles & SLO vs batch window"),
         ("serve-policy", "serving control plane: fifo vs edf x queue caps"),
         ("faults", "robustness: fault rate x retry policy (accuracy, p99, drops)"),
+        ("fleet", "fleet router: engines x affinity (p99, drops, rebuilds)"),
     ]
 }
 
@@ -131,6 +132,7 @@ fn plan(id: &str, opts: &ReproOpts) -> Result<Plan> {
         "serve" => serve_table(opts),
         "serve-policy" => serve_policy_table(opts),
         "faults" => faults_table(opts),
+        "fleet" => fleet_table(opts),
         other => anyhow::bail!("unknown experiment {other:?} (try `list`)"),
     })
 }
@@ -1165,6 +1167,67 @@ fn faults_table(opts: &ReproOpts) -> Plan {
                 }
             }
             t.emit(&dir, "faults")
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet router — engines × affinity
+// ---------------------------------------------------------------------------
+
+fn fleet_table(opts: &ReproOpts) -> Plan {
+    // Same coalescing window + SLO as the `serve-policy` table so queues
+    // actually form, plus a tight per-engine queue cap so the affinity
+    // target can fill up and the queue-full → cross-engine retry path
+    // actually fires.  The affinity-off arm (pure least-loaded) is the
+    // ablation: it spreads scenarios across engines, so expect more
+    // serving rebuilds for the same workload.
+    let engine_counts = [1usize, 2, 4, 8];
+    let affinities = [true, false];
+    let n_requests = opts.n_requests;
+    let mut cells = Vec::new();
+    for n in engine_counts {
+        for affinity in affinities {
+            let mut c = cfg("res50", Benchmark::Nc, opts).with_policies(
+                TunePolicyKind::LazyTune,
+                FreezePolicyKind::SimFreeze,
+            );
+            c.serve.batch_window_s = 20.0;
+            c.serve.slo_ms = 30_000.0;
+            c.serve.max_queue = 2;
+            c.fleet.engines = n;
+            c.fleet.affinity = affinity;
+            cells.push(Cell::Avg(c));
+        }
+    }
+    let dir = opts.results_dir.clone();
+    Plan {
+        cells,
+        render: Box::new(move |reports| {
+            let mut t = Table::new(
+                "Fleet router: engines x affinity (res50, NC, ETuner)",
+                &["engines", "affinity", "p99_ms", "dropped", "retries",
+                  "rebalances", "rebuilds", "served", "tuning%"],
+            );
+            let mut it = reports.iter();
+            for n in engine_counts {
+                for affinity in affinities {
+                    let r = it.next().expect("grid cell");
+                    let served = n_requests as u64 - r.requests_dropped;
+                    t.row(vec![
+                        format!("{n}"),
+                        if affinity { "on".into() } else { "off".into() },
+                        f1(r.latency_p99_ms),
+                        format!("{}", r.requests_dropped),
+                        format!("{}", r.fleet_cross_engine_retries),
+                        format!("{}", r.fleet_rebalances),
+                        format!("{}", r.serving_rebuilds),
+                        format!("{served}"),
+                        tuning_pct(r),
+                    ]);
+                }
+            }
+            t.emit(&dir, "fleet")
         }),
     }
 }

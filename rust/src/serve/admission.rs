@@ -120,6 +120,14 @@ impl AdmissionPolicy for Fifo {
 /// Earliest-deadline-first across scenarios: the next request popped is
 /// the one whose `deadline_t` is smallest (ties: queue position, so a
 /// uniform SLO degenerates to FIFO).
+///
+/// Selection delegates to the queue's lazy heap side-index
+/// ([`RequestQueue::edf_next_index`]) so a deep-backlog flush is
+/// amortized O(log n) per pop instead of the old full rescan's O(n) —
+/// with decisions bit-identical to that naive scan (same strict-`<`
+/// stable-tie order), pinned by `edf_matches_the_naive_scan` below.
+/// The policy itself stays pure: the amortization state lives in the
+/// queue, keyed off its own mutations.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Edf;
 
@@ -129,13 +137,7 @@ impl AdmissionPolicy for Edf {
     }
 
     fn next_index(&self, queue: &RequestQueue) -> Option<usize> {
-        let mut best: Option<(usize, f64)> = None;
-        for (i, r) in queue.iter().enumerate() {
-            if best.is_none_or(|(_, d)| r.deadline_t < d) {
-                best = Some((i, r.deadline_t));
-            }
-        }
-        best.map(|(i, _)| i)
+        queue.edf_next_index()
     }
 }
 
@@ -211,6 +213,32 @@ mod tests {
             u.push(req(t, t + 0.25));
         }
         assert_eq!(Edf.next_index(&u), Fifo.next_index(&u));
+    }
+
+    #[test]
+    fn edf_matches_the_naive_scan() {
+        // The pre-side-index implementation, kept verbatim as the oracle.
+        fn naive(queue: &RequestQueue) -> Option<usize> {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, r) in queue.iter().enumerate() {
+                if best.is_none_or(|(_, d)| r.deadline_t < d) {
+                    best = Some((i, r.deadline_t));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        let mut q = RequestQueue::new();
+        let mut x = 11u64;
+        for _ in 0..48 {
+            x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+            q.push(req(0.0, 1.0 + ((x >> 40) % 8) as f64));
+        }
+        // full EDF drain, exactly like AdaptiveBatcher::take_batch pops
+        while let Some(i) = Edf.next_index(&q) {
+            assert_eq!(Some(i), naive(&q));
+            q.remove(i);
+        }
+        assert_eq!(Edf.next_index(&q), None);
     }
 
     #[test]

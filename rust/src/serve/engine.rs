@@ -373,6 +373,48 @@ impl ServeEngine {
         self.executes
     }
 
+    /// Requests served so far (the fleet layer aggregates this across
+    /// engines to recompute the mean batch occupancy).
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// The serving-side latency ledger (read-only).  The fleet layer
+    /// merges these across engines in engine-id order so fleet
+    /// percentiles are nearest-rank over the union of exact samples.
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.latency
+    }
+
+    /// Proactively install `scenario`'s serving bank at virtual time `t`
+    /// (the fleet router's rebalancing path: a hot scenario gets a second
+    /// resident bank so later affinity routes land warm).  Exactly the
+    /// ensure path a serve would take; an install is reported through the
+    /// next poll's events like any other [`ServeEvent::BankInstalled`].
+    pub fn warm_bank(
+        &mut self,
+        scenario: usize,
+        t: f64,
+        ctx: &ServeCtx,
+    ) -> Result<()> {
+        match self.banks.ensure(scenario, ctx, self.disable_serving_cache)? {
+            BankInstall::Hit => {}
+            BankInstall::Installed { evicted } => {
+                self.tracer.instant(
+                    Lane::Engine,
+                    "bank_install",
+                    t,
+                    &[
+                        ("scenario", scenario as f64),
+                        ("evicted", evicted.map(|s| s as f64).unwrap_or(-1.0)),
+                    ],
+                );
+                self.pending.push(ServeEvent::BankInstalled { scenario, evicted });
+            }
+        }
+        Ok(())
+    }
+
     /// Mean requests per execute: 1.0 when batching never engaged,
     /// including request-free runs (matches the `Report` field contract).
     pub fn avg_batch_requests(&self) -> f64 {
@@ -381,6 +423,20 @@ impl ServeEngine {
         } else {
             self.served as f64 / self.executes as f64
         }
+    }
+
+    /// The verdict [`ServeEngine::on_arrival`] would return for `req`
+    /// *right now*, without recording anything — the fleet router probes
+    /// an affinity target with this so a `Dropped{queue-full}` hint can
+    /// redirect the request to another engine before the drop is real.
+    /// Pure: admission policies are stateless and the queue is untouched,
+    /// so a matching `on_arrival` immediately after returns the same
+    /// verdict.
+    pub fn would_admit(&self, req: &QueuedRequest) -> Admission {
+        let earliest_done = self
+            .scheduler
+            .earliest_completion(req.arrival_t, self.latency.exec_s());
+        self.policy.admit(req, self.queue.len(), &self.shed, earliest_done)
     }
 
     /// Admission decision for one arriving request.  Accepted requests

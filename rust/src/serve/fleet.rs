@@ -1,0 +1,992 @@
+//! A fleet of serving engines behind one scenario-affinity router.
+//!
+//! The control plane so far ran ONE [`ServeEngine`] per simulation.  This
+//! module scales it sideways: [`Fleet`] fronts `N` independent engines —
+//! each with its own [`super::BankSet`], queue, scheduler, and breaker —
+//! behind the pure [`FleetRouter`] ([`super::router`]):
+//!
+//! * arrivals route by **scenario affinity** (an engine whose bank mirror
+//!   already holds the scenario keeps getting it, so residency is reused
+//!   instead of rebuilt), falling back to least-loaded by queue depth;
+//! * a `Dropped{queue-full}` verdict from the affinity target is consumed
+//!   as a **cross-engine shedding hint**: the router probes the target
+//!   with [`ServeEngine::would_admit`] (pure — nothing is recorded) and
+//!   redirects to the least-loaded other engine before the drop is real;
+//! * when one engine's share of the fleet-wide queued requests for a
+//!   single scenario crosses the rebalance threshold, the router names a
+//!   second engine to **warm-install** that scenario's bank on
+//!   ([`ServeEngine::warm_bank`]), spreading subsequent affinity routes.
+//!
+//! Two drivers share that routing logic:
+//!
+//! * [`Fleet`] — single-threaded, embedded in [`crate::sim::Simulation`]
+//!   (`--fleet N`): all engines share the simulation's session/θ through
+//!   the per-call [`ServeCtx`], and every engine shares the simulation's
+//!   tracer so one timeline covers the whole fleet.  A fleet of one is a
+//!   transparent wrapper: same engine calls in the same order, so reports
+//!   are bit-identical to a bare [`ServeEngine`] (pinned by
+//!   `tests/fleet.rs`).
+//! * [`FleetPool`]-style workers via [`run_pool`] — the
+//!   [`crate::sim::sweep::ParallelSweeper`] worker-per-backend pattern:
+//!   each engine lives on its own thread with its own
+//!   [`crate::runtime::Backend`], session, and θ, driven over
+//!   command/reply channels.  The coordinator issues polls to every
+//!   engine and merges replies in **engine-id order**, so the merged
+//!   event stream, histograms, and per-engine trace batches are
+//!   bit-identical whether the pool is threaded or sequential
+//!   (worker-count independence, pinned by `tests/fleet.rs`).
+//!
+//! **Determinism contract:** the router is pure and every merge happens
+//! in engine-id order; no wall clock, no thread scheduling, no map
+//! iteration order ever reaches a decision or an output.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::cost::device::DeviceModel;
+use crate::data::benchmarks::Scenario;
+use crate::metrics::hist::{HistRegistry, Histogram};
+use crate::metrics::ScenarioLatency;
+use crate::model::{Cwr, ModelSession, Params};
+use crate::runtime::artifact::ModelManifest;
+use crate::runtime::{Backend, BackendSpec, FaultPlan, FaultyBackend};
+use crate::trace::{self, Event, Tracer};
+
+use super::admission::{Admission, DropReason};
+use super::banks::MAX_BANK_CAPACITY;
+use super::engine::{ServeCtx, ServeEngine, ServeEvent};
+use super::latency::LatencySummary;
+use super::queue::QueuedRequest;
+use super::router::{FleetRouter, RouterConfig, RouterCounters};
+use super::scheduler::Scheduler;
+use super::ServeConfig;
+
+/// Fleet knobs (part of [`crate::sim::RunConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Engines in the fleet (`--fleet`; clamped to ≥ 1).  `1` — the
+    /// default — routes everything to engine 0 and is bit-identical to
+    /// the engine-only control plane.
+    pub engines: usize,
+    /// Scenario-affinity routing (`--no-affinity` turns it off: pure
+    /// least-loaded, the ablation arm of the `repro fleet` table).
+    pub affinity: bool,
+    /// Hot-scenario share that triggers a second bank install
+    /// (`--rebalance-threshold`; `0` disables rebalancing).
+    pub rebalance_threshold: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig { engines: 1, affinity: true, rebalance_threshold: 0.5 }
+    }
+}
+
+impl FleetConfig {
+    fn router(&self) -> RouterConfig {
+        RouterConfig {
+            affinity: self.affinity,
+            rebalance_threshold: self.rebalance_threshold,
+        }
+    }
+}
+
+/// N serving engines behind one router, driven inline by the simulation.
+pub struct Fleet {
+    engines: Vec<ServeEngine>,
+    router: FleetRouter,
+    /// Rebalance installs decided at arrival time, executed at the next
+    /// poll/drain (where a [`ServeCtx`] exists to build the bank from),
+    /// as `(engine, scenario)`.
+    pending_installs: Vec<(usize, usize)>,
+    /// Mirror of `serve.recovery.enabled`: a failed warm install is
+    /// absorbed like a failed flush when recovery is on.
+    recovery_enabled: bool,
+}
+
+impl Fleet {
+    pub fn new(
+        m: &ModelManifest,
+        device: &DeviceModel,
+        cfg: &ServeConfig,
+        direct: bool,
+        disable_serving_cache: bool,
+        fleet: &FleetConfig,
+    ) -> Fleet {
+        let n = fleet.engines.max(1);
+        let engines = (0..n)
+            .map(|_| {
+                ServeEngine::new(m, device, cfg, direct, disable_serving_cache)
+            })
+            .collect();
+        Fleet {
+            engines,
+            router: FleetRouter::new(
+                n,
+                cfg.bank_capacity.clamp(1, MAX_BANK_CAPACITY),
+                fleet.router(),
+            ),
+            pending_installs: Vec::new(),
+            recovery_enabled: cfg.recovery.enabled,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The engines, id order (read-only; tests inspect per-engine state).
+    pub fn engines(&self) -> &[ServeEngine] {
+        &self.engines
+    }
+
+    pub fn router_counters(&self) -> RouterCounters {
+        self.router.counters()
+    }
+
+    /// Share `tracer` with every engine: the whole fleet records into one
+    /// ring, so a single timeline covers all engines (the per-engine
+    /// track split is the pool's domain — see [`run_pool`]).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        for e in &mut self.engines {
+            e.set_tracer(tracer.clone());
+        }
+    }
+
+    /// Route one arriving request and hand it to the chosen engine.
+    /// Only the final target's [`ServeEngine::on_arrival`] runs — the
+    /// affinity target is consulted with the pure
+    /// [`ServeEngine::would_admit`] probe first, so a queue-full redirect
+    /// never double-counts the drop.
+    pub fn on_arrival(&mut self, req: QueuedRequest) -> Admission {
+        let scenario = req.scenario;
+        let dec = self.router.route(scenario);
+        let mut target = dec.engine;
+        if self.engines.len() > 1 && dec.by_affinity {
+            let hint = self.engines[target].would_admit(&req);
+            if let Some(alt) = self.router.retry_target(scenario, hint, target)
+            {
+                target = alt;
+            }
+        }
+        let verdict = self.engines[target].on_arrival(req);
+        self.router.note_depth(target, self.engines[target].queue_depth());
+        if verdict == Admission::Accepted {
+            self.router.on_accept(target, scenario);
+            if let Some(install) = self.router.maybe_rebalance() {
+                let (s, e) = install;
+                self.pending_installs.push((e, s));
+            }
+        }
+        verdict
+    }
+
+    /// Poll every engine at `now` in id order (windows/capacity only).
+    pub fn poll(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        self.step(now, ctx, false)
+    }
+
+    /// Drain every engine at `now` in id order (window-unconditioned).
+    pub fn drain(&mut self, now: f64, ctx: &ServeCtx) -> Result<Vec<ServeEvent>> {
+        self.step(now, ctx, true)
+    }
+
+    fn step(
+        &mut self,
+        now: f64,
+        ctx: &ServeCtx,
+        drain: bool,
+    ) -> Result<Vec<ServeEvent>> {
+        let mut out = Vec::new();
+        for e in 0..self.engines.len() {
+            // rebalance installs decided since the last step run first,
+            // so the warm bank exists before this step's flushes.
+            let mut i = 0;
+            while i < self.pending_installs.len() {
+                if self.pending_installs[i].0 != e {
+                    i += 1;
+                    continue;
+                }
+                let (_, s) = self.pending_installs.remove(i);
+                match self.engines[e].warm_bank(s, now, ctx) {
+                    Ok(()) => {}
+                    // a faulted install costs a cold serve later, never
+                    // the run — mirrors the engine's absorbed flushes.
+                    Err(_) if self.recovery_enabled => {}
+                    Err(err) => return Err(err),
+                }
+            }
+            let events = if drain {
+                self.engines[e].drain(now, ctx)?
+            } else {
+                self.engines[e].poll(now, ctx)?
+            };
+            for ev in &events {
+                match ev {
+                    ServeEvent::RequestServed(s) => {
+                        self.router.on_departure(e, s.scenario)
+                    }
+                    // queue-full / slo-infeasible drops happen at arrival
+                    // and were never counted as queued; only the
+                    // serve-time breaker shed departs a queued request.
+                    ServeEvent::RequestDropped {
+                        scenario,
+                        reason: DropReason::BackendUnavailable,
+                        ..
+                    } => self.router.on_departure(e, *scenario),
+                    _ => {}
+                }
+            }
+            self.router.note_depth(e, self.engines[e].queue_depth());
+            out.extend(events);
+        }
+        Ok(out)
+    }
+
+    // -- aggregated views (engine-id order everywhere) -------------------
+
+    pub fn rows_per_request(&self) -> usize {
+        self.engines[0].rows_per_request()
+    }
+
+    pub fn deadline(&self, t: f64) -> f64 {
+        self.engines[0].deadline(t)
+    }
+
+    /// Fleet-wide queued requests right now.
+    pub fn queue_depth(&self) -> usize {
+        self.engines.iter().map(|e| e.queue_depth()).sum()
+    }
+
+    /// Sum of per-engine peaks — an upper bound on the true simultaneous
+    /// fleet backlog (each engine peaks at its own instant).
+    pub fn peak_queue_depth(&self) -> usize {
+        self.engines.iter().map(|e| e.peak_queue_depth()).sum()
+    }
+
+    /// The primary's scheduler.  Fine-tuning rounds arbitrate against
+    /// engine 0 only: the simulation tunes one θ on one device, and the
+    /// other engines model extra serving devices that never tune.
+    pub fn scheduler(&self) -> &Scheduler {
+        self.engines[0].scheduler()
+    }
+
+    pub fn scheduler_mut(&mut self) -> &mut Scheduler {
+        self.engines[0].scheduler_mut()
+    }
+
+    /// Device time spent serving, summed across engines.
+    pub fn serve_busy_s(&self) -> f64 {
+        self.engines.iter().map(|e| e.scheduler().serve_busy_s()).sum()
+    }
+
+    /// Device time spent in fine-tuning rounds (primary only — see
+    /// [`Fleet::scheduler`]).
+    pub fn round_busy_s(&self) -> f64 {
+        self.engines[0].scheduler().round_busy_s()
+    }
+
+    pub fn rounds_deferred(&self) -> u64 {
+        self.engines[0].scheduler().rounds_deferred()
+    }
+
+    pub fn queue_policy_name(&self) -> &'static str {
+        self.engines[0].queue_policy_name()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.engines.iter().map(|e| e.served()).sum()
+    }
+
+    pub fn executes(&self) -> u64 {
+        self.engines.iter().map(|e| e.executes()).sum()
+    }
+
+    pub fn serving_rebuilds(&self) -> u64 {
+        self.engines.iter().map(|e| e.serving_rebuilds()).sum()
+    }
+
+    pub fn serving_hits(&self) -> u64 {
+        self.engines.iter().map(|e| e.serving_hits()).sum()
+    }
+
+    pub fn bank_evictions(&self) -> u64 {
+        self.engines.iter().map(|e| e.bank_evictions()).sum()
+    }
+
+    pub fn banks_peak_resident(&self) -> usize {
+        self.engines.iter().map(|e| e.banks_peak_resident()).sum()
+    }
+
+    pub fn drops_queue_full(&self) -> u64 {
+        self.engines.iter().map(|e| e.drops_queue_full()).sum()
+    }
+
+    pub fn drops_slo_infeasible(&self) -> u64 {
+        self.engines.iter().map(|e| e.drops_slo_infeasible()).sum()
+    }
+
+    pub fn drops_backend_unavailable(&self) -> u64 {
+        self.engines.iter().map(|e| e.drops_backend_unavailable()).sum()
+    }
+
+    pub fn requests_dropped(&self) -> u64 {
+        self.engines.iter().map(|e| e.requests_dropped()).sum()
+    }
+
+    pub fn serve_retries(&self) -> u64 {
+        self.engines.iter().map(|e| e.serve_retries()).sum()
+    }
+
+    pub fn flush_failures(&self) -> u64 {
+        self.engines.iter().map(|e| e.flush_failures()).sum()
+    }
+
+    pub fn breaker_trips(&self) -> u64 {
+        self.engines.iter().map(|e| e.breaker_trips()).sum()
+    }
+
+    pub fn degraded_serves(&self) -> u64 {
+        self.engines.iter().map(|e| e.degraded_serves()).sum()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.engines.iter().map(|e| e.deadline_misses()).sum()
+    }
+
+    /// Fleet-wide mean requests per execute (1.0 when nothing executed).
+    pub fn avg_batch_requests(&self) -> f64 {
+        let ex = self.executes();
+        if ex == 0 {
+            1.0
+        } else {
+            self.served() as f64 / ex as f64
+        }
+    }
+
+    /// Fleet-wide latency digest: engines' exact sample sets merged in id
+    /// order, percentiles recomputed nearest-rank over the union — the
+    /// same math [`super::LatencyModel::summary`] applies to one engine,
+    /// so a fleet of one is bit-identical to the bare engine's digest.
+    pub fn latency_summary(&self) -> LatencySummary {
+        let mut hist = Histogram::new();
+        let mut violations = 0u64;
+        for e in &self.engines {
+            hist.merge(e.latency_model().hist());
+            violations += e.latency_model().violations();
+        }
+        let n = hist.count();
+        if n == 0 {
+            return LatencySummary { attainment: 1.0, ..LatencySummary::default() };
+        }
+        LatencySummary {
+            p50_ms: hist.percentile(50.0) * 1e3,
+            p95_ms: hist.percentile(95.0) * 1e3,
+            p99_ms: hist.percentile(99.0) * 1e3,
+            mean_ms: hist.mean() * 1e3,
+            max_ms: hist.max() * 1e3,
+            violations,
+            attainment: 1.0 - violations as f64 / n as f64,
+        }
+    }
+
+    /// Per-scenario digests over the merged ledgers (ascending scenario
+    /// order; deadline misses summed across engines).
+    pub fn per_scenario_latency(&self) -> Vec<ScenarioLatency> {
+        let mut merged: BTreeMap<usize, (Histogram, u64)> = BTreeMap::new();
+        for e in &self.engines {
+            for (s, h, misses) in e.latency_model().scenario_ledgers() {
+                let slot =
+                    merged.entry(s).or_insert_with(|| (Histogram::new(), 0));
+                slot.0.merge(h);
+                slot.1 += misses;
+            }
+        }
+        merged
+            .into_iter()
+            .map(|(scenario, (h, deadline_misses))| ScenarioLatency {
+                scenario,
+                requests: h.count(),
+                mean_ms: h.mean() * 1e3,
+                p95_ms: h.percentile(95.0) * 1e3,
+                max_ms: h.max() * 1e3,
+                deadline_misses,
+            })
+            .collect()
+    }
+
+    /// Merge every engine's distributions into `reg`, engine-id order —
+    /// same-key histograms concatenate their exact samples, so the result
+    /// is independent of how requests were spread across engines only in
+    /// *keys*, and worker-count independent for a fixed routing.
+    pub fn fill_hists(&self, reg: &mut HistRegistry) {
+        for e in &self.engines {
+            let mut tmp = HistRegistry::new();
+            e.fill_hists(&mut tmp);
+            reg.merge(&tmp);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine pool: one engine per worker, each with its own backend.
+// ---------------------------------------------------------------------------
+
+/// Everything a pool worker needs to build its engine stack.  `Sync` —
+/// shared by reference into the worker scope, exactly like
+/// [`crate::runtime::BackendSpec`] in the parallel sweeper.
+pub struct FleetPoolSpec {
+    pub backend: BackendSpec,
+    pub model: String,
+    pub device: DeviceModel,
+    /// Scenario table the engines serve from (cloned per worker).
+    pub scenarios: Vec<Scenario>,
+    pub serve: ServeConfig,
+    pub fleet: FleetConfig,
+    /// Give every engine its own enabled tracer; the yield carries the
+    /// per-engine event batches for [`crate::trace::chrome_trace_fleet`].
+    pub trace: bool,
+    /// Fault plan for **engine 0's** backend only ([`FaultPlan::none()`]
+    /// = no decorator anywhere) — one degraded engine in an otherwise
+    /// healthy fleet.
+    pub faults: FaultPlan,
+    pub fault_seed: u64,
+}
+
+/// Fleet-wide counters a pool run yields (fingerprint-excluded
+/// observability; `PartialEq` so the sequential-vs-threaded battery can
+/// compare them wholesale).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetCounters {
+    pub served: u64,
+    pub executes: u64,
+    pub drops_queue_full: u64,
+    pub drops_slo_infeasible: u64,
+    pub drops_backend_unavailable: u64,
+    pub serve_retries: u64,
+    pub flush_failures: u64,
+    pub breaker_trips: u64,
+    pub degraded_serves: u64,
+    pub serving_rebuilds: u64,
+    pub serving_hits: u64,
+    pub bank_evictions: u64,
+    pub deadline_misses: u64,
+    pub router: RouterCounters,
+}
+
+impl FleetCounters {
+    fn add(&mut self, other: &FleetCounters) {
+        self.served += other.served;
+        self.executes += other.executes;
+        self.drops_queue_full += other.drops_queue_full;
+        self.drops_slo_infeasible += other.drops_slo_infeasible;
+        self.drops_backend_unavailable += other.drops_backend_unavailable;
+        self.serve_retries += other.serve_retries;
+        self.flush_failures += other.flush_failures;
+        self.breaker_trips += other.breaker_trips;
+        self.degraded_serves += other.degraded_serves;
+        self.serving_rebuilds += other.serving_rebuilds;
+        self.serving_hits += other.serving_hits;
+        self.bank_evictions += other.bank_evictions;
+        self.deadline_misses += other.deadline_misses;
+        self.router.routed_by_affinity += other.router.routed_by_affinity;
+        self.router.routed_least_loaded += other.router.routed_least_loaded;
+        self.router.cross_engine_retries += other.router.cross_engine_retries;
+        self.router.rebalances += other.router.rebalances;
+    }
+
+    pub fn requests_dropped(&self) -> u64 {
+        self.drops_queue_full
+            + self.drops_slo_infeasible
+            + self.drops_backend_unavailable
+    }
+}
+
+/// What one pool run produced, merged in engine-id order.
+pub struct FleetYield {
+    /// Every [`ServeEvent`] tagged with its engine, in the coordinator's
+    /// deterministic observation order.
+    pub events: Vec<(usize, ServeEvent)>,
+    /// Per-engine registries merged key-wise in engine-id order.
+    pub hists: HistRegistry,
+    pub counters: FleetCounters,
+    /// Per-engine trace batches (empty `Vec`s when `spec.trace` is off),
+    /// ready for [`crate::trace::chrome_trace_fleet`].
+    pub trace: Vec<Vec<Event>>,
+}
+
+/// One engine's end-of-run yield, sent back over the reply channel.
+struct EngineYield {
+    hists: HistRegistry,
+    counters: FleetCounters,
+    trace: Vec<Event>,
+}
+
+/// One worker's engine stack: its own session, θ, CWR, and engine over a
+/// borrowed backend.  All methods use field-disjoint borrows so the
+/// per-call [`ServeCtx`] can reference `sess`/`params`/`cwr` while the
+/// engine is borrowed mutably.
+struct EngineHost<'b> {
+    sess: ModelSession<'b>,
+    params: Params,
+    cwr: Cwr,
+    scenarios: Vec<Scenario>,
+    engine: ServeEngine,
+    /// Absorb warm-install faults (mirrors `serve.recovery.enabled`).
+    absorb_faults: bool,
+}
+
+impl<'b> EngineHost<'b> {
+    fn new(be: &'b dyn Backend, spec: &FleetPoolSpec) -> Result<EngineHost<'b>> {
+        let sess = ModelSession::new(be, &spec.model)?;
+        let params = sess.theta0()?;
+        let cwr = Cwr::new(&sess.m);
+        let mut engine =
+            ServeEngine::new(&sess.m, &spec.device, &spec.serve, false, false);
+        if spec.trace {
+            engine.set_tracer(Tracer::enabled(trace::DEFAULT_CAPACITY));
+        }
+        Ok(EngineHost {
+            sess,
+            params,
+            cwr,
+            scenarios: spec.scenarios.clone(),
+            engine,
+            absorb_faults: spec.serve.recovery.enabled,
+        })
+    }
+
+    fn step(&mut self, t: f64, drain: bool) -> Result<Vec<ServeEvent>> {
+        let ctx = ServeCtx {
+            sess: &self.sess,
+            params: &self.params,
+            cwr: &self.cwr,
+            scenarios: &self.scenarios,
+        };
+        if drain {
+            self.engine.drain(t, &ctx)
+        } else {
+            self.engine.poll(t, &ctx)
+        }
+    }
+
+    fn warm(&mut self, t: f64, scenario: usize) -> Result<()> {
+        let r = self.engine.warm_bank(
+            scenario,
+            t,
+            &ServeCtx {
+                sess: &self.sess,
+                params: &self.params,
+                cwr: &self.cwr,
+                scenarios: &self.scenarios,
+            },
+        );
+        match r {
+            Ok(()) => Ok(()),
+            Err(_) if self.absorb_faults => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn finish(&mut self) -> EngineYield {
+        let mut hists = HistRegistry::new();
+        self.engine.fill_hists(&mut hists);
+        let e = &self.engine;
+        EngineYield {
+            hists,
+            counters: FleetCounters {
+                served: e.served(),
+                executes: e.executes(),
+                drops_queue_full: e.drops_queue_full(),
+                drops_slo_infeasible: e.drops_slo_infeasible(),
+                drops_backend_unavailable: e.drops_backend_unavailable(),
+                serve_retries: e.serve_retries(),
+                flush_failures: e.flush_failures(),
+                breaker_trips: e.breaker_trips(),
+                degraded_serves: e.degraded_serves(),
+                serving_rebuilds: e.serving_rebuilds(),
+                serving_hits: e.serving_hits(),
+                bank_evictions: e.bank_evictions(),
+                deadline_misses: e.deadline_misses(),
+                router: RouterCounters::default(),
+            },
+            trace: e.tracer().take_events(),
+        }
+    }
+}
+
+/// The driver's view of one engine, local or behind channels.  `send_step`
+/// / `recv_step` are split so the threaded pool overlaps every engine's
+/// poll; the coordinator always collects replies in engine-id order, which
+/// is what makes the merged outputs worker-count independent.
+trait EnginePort {
+    fn probe(&mut self, req: &QueuedRequest) -> Result<Admission>;
+    fn arrive(&mut self, req: QueuedRequest) -> Result<(Admission, usize)>;
+    fn warm(&mut self, t: f64, scenario: usize) -> Result<()>;
+    fn send_step(&mut self, t: f64, drain: bool) -> Result<()>;
+    fn recv_step(&mut self) -> Result<(Vec<ServeEvent>, usize)>;
+    fn finish(&mut self) -> Result<EngineYield>;
+}
+
+/// Sequential port: the host runs inline; `send_step` just parks the
+/// request so the recv keeps the exact call order of the threaded pool.
+struct LocalPort<'b> {
+    host: EngineHost<'b>,
+    parked: Option<(f64, bool)>,
+}
+
+impl EnginePort for LocalPort<'_> {
+    fn probe(&mut self, req: &QueuedRequest) -> Result<Admission> {
+        Ok(self.host.engine.would_admit(req))
+    }
+
+    fn arrive(&mut self, req: QueuedRequest) -> Result<(Admission, usize)> {
+        let verdict = self.host.engine.on_arrival(req);
+        Ok((verdict, self.host.engine.queue_depth()))
+    }
+
+    fn warm(&mut self, t: f64, scenario: usize) -> Result<()> {
+        self.host.warm(t, scenario)
+    }
+
+    fn send_step(&mut self, t: f64, drain: bool) -> Result<()> {
+        self.parked = Some((t, drain));
+        Ok(())
+    }
+
+    fn recv_step(&mut self) -> Result<(Vec<ServeEvent>, usize)> {
+        let Some((t, drain)) = self.parked.take() else {
+            return Err(anyhow!("recv_step without a pending send_step"));
+        };
+        let events = self.host.step(t, drain)?;
+        Ok((events, self.host.engine.queue_depth()))
+    }
+
+    fn finish(&mut self) -> Result<EngineYield> {
+        Ok(self.host.finish())
+    }
+}
+
+enum Cmd {
+    Probe(QueuedRequest),
+    Arrive(QueuedRequest),
+    Warm { t: f64, scenario: usize },
+    Step { t: f64, drain: bool },
+    Finish,
+}
+
+enum Reply {
+    Verdict(Admission),
+    Arrived(Admission, usize),
+    Warmed,
+    Stepped(Vec<ServeEvent>, usize),
+    Finished(Box<EngineYield>),
+    Failed(String),
+}
+
+/// Threaded port: commands go to the worker, replies come back.  Every
+/// method is a strict request/reply pair except the split step.
+struct ChanPort {
+    tx: mpsc::Sender<Cmd>,
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl ChanPort {
+    fn send(&mut self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| anyhow!("fleet worker hung up"))
+    }
+
+    fn recv(&mut self) -> Result<Reply> {
+        match self.rx.recv() {
+            Ok(Reply::Failed(msg)) => Err(anyhow!("fleet worker failed: {msg}")),
+            Ok(reply) => Ok(reply),
+            Err(_) => Err(anyhow!("fleet worker died")),
+        }
+    }
+}
+
+impl EnginePort for ChanPort {
+    fn probe(&mut self, req: &QueuedRequest) -> Result<Admission> {
+        self.send(Cmd::Probe(req.clone()))?;
+        match self.recv()? {
+            Reply::Verdict(v) => Ok(v),
+            _ => Err(anyhow!("fleet worker protocol error (probe)")),
+        }
+    }
+
+    fn arrive(&mut self, req: QueuedRequest) -> Result<(Admission, usize)> {
+        self.send(Cmd::Arrive(req))?;
+        match self.recv()? {
+            Reply::Arrived(v, depth) => Ok((v, depth)),
+            _ => Err(anyhow!("fleet worker protocol error (arrive)")),
+        }
+    }
+
+    fn warm(&mut self, t: f64, scenario: usize) -> Result<()> {
+        self.send(Cmd::Warm { t, scenario })?;
+        match self.recv()? {
+            Reply::Warmed => Ok(()),
+            _ => Err(anyhow!("fleet worker protocol error (warm)")),
+        }
+    }
+
+    fn send_step(&mut self, t: f64, drain: bool) -> Result<()> {
+        self.send(Cmd::Step { t, drain })
+    }
+
+    fn recv_step(&mut self) -> Result<(Vec<ServeEvent>, usize)> {
+        match self.recv()? {
+            Reply::Stepped(events, depth) => Ok((events, depth)),
+            _ => Err(anyhow!("fleet worker protocol error (step)")),
+        }
+    }
+
+    fn finish(&mut self) -> Result<EngineYield> {
+        self.send(Cmd::Finish)?;
+        match self.recv()? {
+            Reply::Finished(y) => Ok(*y),
+            _ => Err(anyhow!("fleet worker protocol error (finish)")),
+        }
+    }
+}
+
+/// Worker body: build the engine stack over this worker's own backend
+/// (engine 0 optionally behind the fault decorator) and answer commands
+/// until the coordinator says finish or hangs up.
+fn worker(
+    spec: &FleetPoolSpec,
+    engine_id: usize,
+    rx: mpsc::Receiver<Cmd>,
+    tx: mpsc::Sender<Reply>,
+) {
+    let result = (|| -> Result<()> {
+        let be = spec.backend.create()?;
+        if engine_id == 0 && spec.faults.enabled() {
+            let fb = FaultyBackend::new(be.as_ref(), spec.faults, spec.fault_seed);
+            serve_commands(&fb, spec, rx, &tx)
+        } else {
+            serve_commands(be.as_ref(), spec, rx, &tx)
+        }
+    })();
+    if let Err(e) = result {
+        let _ = tx.send(Reply::Failed(format!("{e:#}")));
+    }
+}
+
+fn serve_commands(
+    be: &dyn Backend,
+    spec: &FleetPoolSpec,
+    rx: mpsc::Receiver<Cmd>,
+    tx: &mpsc::Sender<Reply>,
+) -> Result<()> {
+    let mut host = EngineHost::new(be, spec)?;
+    for cmd in rx {
+        let reply = match cmd {
+            Cmd::Probe(req) => Reply::Verdict(host.engine.would_admit(&req)),
+            Cmd::Arrive(req) => {
+                let verdict = host.engine.on_arrival(req);
+                Reply::Arrived(verdict, host.engine.queue_depth())
+            }
+            Cmd::Warm { t, scenario } => {
+                host.warm(t, scenario)?;
+                Reply::Warmed
+            }
+            Cmd::Step { t, drain } => {
+                let events = host.step(t, drain)?;
+                Reply::Stepped(events, host.engine.queue_depth())
+            }
+            Cmd::Finish => {
+                let _ = tx.send(Reply::Finished(Box::new(host.finish())));
+                return Ok(());
+            }
+        };
+        tx.send(reply).map_err(|_| anyhow!("fleet coordinator hung up"))?;
+    }
+    Ok(())
+}
+
+/// The routing loop both pool modes share: per arrival, route (with the
+/// affinity probe + queue-full retry), deliver, rebalance, then step every
+/// engine at the arrival instant — sends fanned out, replies merged in
+/// engine-id order.
+fn drive<P: EnginePort>(
+    ports: &mut [P],
+    spec: &FleetPoolSpec,
+    workload: &[QueuedRequest],
+    drain_t: f64,
+) -> Result<FleetYield> {
+    let n = ports.len();
+    let mut router = FleetRouter::new(
+        n,
+        spec.serve.bank_capacity.clamp(1, MAX_BANK_CAPACITY),
+        spec.fleet.router(),
+    );
+    let mut events: Vec<(usize, ServeEvent)> = Vec::new();
+    for req in workload {
+        let t = req.arrival_t;
+        let scenario = req.scenario;
+        let dec = router.route(scenario);
+        let mut target = dec.engine;
+        if n > 1 && dec.by_affinity {
+            let hint = ports[target].probe(req)?;
+            if let Some(alt) = router.retry_target(scenario, hint, target) {
+                target = alt;
+            }
+        }
+        let (verdict, depth) = ports[target].arrive(req.clone())?;
+        router.note_depth(target, depth);
+        if verdict == Admission::Accepted {
+            router.on_accept(target, scenario);
+            if let Some((s, e)) = router.maybe_rebalance() {
+                ports[e].warm(t, s)?;
+            }
+        }
+        step_all(ports, &mut router, &mut events, t, false)?;
+    }
+    step_all(ports, &mut router, &mut events, drain_t, true)?;
+
+    let mut hists = HistRegistry::new();
+    let mut counters = FleetCounters::default();
+    let mut trace_batches = Vec::with_capacity(n);
+    for port in ports.iter_mut() {
+        let y = port.finish()?;
+        hists.merge(&y.hists);
+        counters.add(&y.counters);
+        trace_batches.push(y.trace);
+    }
+    counters.router = router.counters();
+    Ok(FleetYield { events, hists, counters, trace: trace_batches })
+}
+
+fn step_all<P: EnginePort>(
+    ports: &mut [P],
+    router: &mut FleetRouter,
+    out: &mut Vec<(usize, ServeEvent)>,
+    t: f64,
+    drain: bool,
+) -> Result<()> {
+    for port in ports.iter_mut() {
+        port.send_step(t, drain)?;
+    }
+    for (e, port) in ports.iter_mut().enumerate() {
+        let (events, depth) = port.recv_step()?;
+        for ev in &events {
+            match ev {
+                ServeEvent::RequestServed(s) => {
+                    router.on_departure(e, s.scenario)
+                }
+                ServeEvent::RequestDropped {
+                    scenario,
+                    reason: DropReason::BackendUnavailable,
+                    ..
+                } => router.on_departure(e, *scenario),
+                _ => {}
+            }
+        }
+        router.note_depth(e, depth);
+        out.extend(events.into_iter().map(|ev| (e, ev)));
+    }
+    Ok(())
+}
+
+/// Run `workload` (arrival order, ascending `arrival_t`) through a pool
+/// of `spec.fleet.engines` engines, then drain at `drain_t`.
+///
+/// `threaded == false` drives every engine inline; `threaded == true`
+/// gives each engine its own worker thread and backend (the parallel
+/// sweeper's worker-per-backend pattern).  Both modes produce
+/// bit-identical [`FleetYield`]s: the routing is a pure function of the
+/// workload, and every merge happens in engine-id order.
+pub fn run_pool(
+    spec: &FleetPoolSpec,
+    workload: &[QueuedRequest],
+    drain_t: f64,
+    threaded: bool,
+) -> Result<FleetYield> {
+    let n = spec.fleet.engines.max(1);
+    if threaded {
+        return std::thread::scope(|scope| {
+            let mut ports = Vec::with_capacity(n);
+            for e in 0..n {
+                let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+                let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+                scope.spawn(move || worker(spec, e, cmd_rx, reply_tx));
+                ports.push(ChanPort { tx: cmd_tx, rx: reply_rx });
+            }
+            let result = drive(&mut ports, spec, workload, drain_t);
+            // hang up the command channels so every worker's loop ends
+            // (on success they already got Finish; on error this unblocks
+            // them) and the scope can join.
+            drop(ports);
+            result
+        });
+    }
+    let backends: Vec<Box<dyn Backend>> =
+        (0..n).map(|_| spec.backend.create()).collect::<Result<_>>()?;
+    // engine 0's fault decoration must match the threaded pool exactly.
+    let faulty: Option<FaultyBackend> = if spec.faults.enabled() {
+        Some(FaultyBackend::new(
+            backends[0].as_ref(),
+            spec.faults,
+            spec.fault_seed,
+        ))
+    } else {
+        None
+    };
+    let mut ports: Vec<LocalPort> = Vec::with_capacity(n);
+    for (i, be) in backends.iter().enumerate() {
+        let be_ref: &dyn Backend = match (&faulty, i) {
+            (Some(f), 0) => f,
+            _ => be.as_ref(),
+        };
+        ports.push(LocalPort { host: EngineHost::new(be_ref, spec)?, parked: None });
+    }
+    drive(&mut ports, spec, workload, drain_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_config_defaults_to_a_transparent_fleet_of_one() {
+        let cfg = FleetConfig::default();
+        assert_eq!(cfg.engines, 1);
+        assert!(cfg.affinity);
+        assert!((cfg.rebalance_threshold - 0.5).abs() < 1e-12);
+        let r = cfg.router();
+        assert!(r.affinity);
+        assert!((r.rebalance_threshold - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_counters_sum_component_wise() {
+        let mut a = FleetCounters {
+            served: 3,
+            executes: 2,
+            drops_queue_full: 1,
+            ..FleetCounters::default()
+        };
+        let b = FleetCounters {
+            served: 4,
+            deadline_misses: 5,
+            router: RouterCounters {
+                routed_by_affinity: 7,
+                routed_least_loaded: 1,
+                cross_engine_retries: 2,
+                rebalances: 1,
+            },
+            ..FleetCounters::default()
+        };
+        a.add(&b);
+        assert_eq!(a.served, 7);
+        assert_eq!(a.executes, 2);
+        assert_eq!(a.drops_queue_full, 1);
+        assert_eq!(a.deadline_misses, 5);
+        assert_eq!(a.router.routed_by_affinity, 7);
+        assert_eq!(a.router.cross_engine_retries, 2);
+        assert_eq!(a.requests_dropped(), 1);
+    }
+}

@@ -155,6 +155,17 @@ impl LatencyModel {
         self.per_scenario.iter().map(|(&s, led)| (s, &led.hist))
     }
 
+    /// Per-scenario `(scenario, histogram, deadline_misses)` triples in
+    /// ascending scenario order — the raw ledgers the fleet layer merges
+    /// across engines before recomputing scenario digests.
+    pub fn scenario_ledgers(
+        &self,
+    ) -> impl Iterator<Item = (usize, &Histogram, u64)> {
+        self.per_scenario
+            .iter()
+            .map(|(&s, led)| (s, &led.hist, led.deadline_misses))
+    }
+
     /// Nearest-rank percentile of recorded latencies, in milliseconds.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         self.hist.percentile(p) * 1e3

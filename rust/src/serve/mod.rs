@@ -34,7 +34,13 @@
 //!   queue depth;
 //! * [`engine`] — the control plane itself: [`ServeEngine::on_arrival`]
 //!   admits or sheds, [`ServeEngine::poll`] advances virtual time and
-//!   returns [`ServeEvent`]s.
+//!   returns [`ServeEvent`]s;
+//! * [`router`] + [`fleet`] — since PR 8, a [`FleetRouter`] fronting N
+//!   independent engines: scenario-affinity routing with least-loaded
+//!   fallback, queue-full verdicts consumed as cross-engine shedding
+//!   hints, and hot-scenario rebalancing via proactive bank installs
+//!   (`--fleet N`); outputs merge in engine-id order, so fleet reports
+//!   and timelines are worker-count independent.
 //!
 //! **Determinism contract:** everything here runs in virtual time off the
 //! seeded event stream.  The default configuration — FIFO, no queue cap,
@@ -49,9 +55,11 @@ pub mod admission;
 pub mod banks;
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod latency;
 pub mod queue;
 pub mod recovery;
+pub mod router;
 pub mod scheduler;
 
 pub use admission::{
@@ -60,9 +68,15 @@ pub use admission::{
 pub use banks::{BankInstall, BankSet, MAX_BANK_CAPACITY};
 pub use batcher::{AdaptiveBatcher, BatchSpan, PaddedBatch};
 pub use engine::{ServeCtx, ServeEngine, ServeEvent, ServedRequest};
+pub use fleet::{
+    run_pool, Fleet, FleetConfig, FleetCounters, FleetPoolSpec, FleetYield,
+};
 pub use latency::{LatencyModel, LatencySummary};
 pub use queue::{QueuedRequest, RequestQueue};
 pub use recovery::{BreakerState, CircuitBreaker, RecoveryConfig, RetryPolicy};
+pub use router::{
+    FleetRouter, RouteDecision, RouterConfig, RouterCounters,
+};
 pub use scheduler::{RoundDecision, Scheduler};
 
 /// Serving-engine knobs (part of [`crate::sim::RunConfig`]).

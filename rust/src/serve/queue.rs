@@ -7,7 +7,23 @@
 //! earliest deadline) and decides when they become one padded artifact
 //! execution.
 
-use std::collections::VecDeque;
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Monotone order-preserving `u64` key for a (non-NaN) `f64` deadline:
+/// the sign-flip bit trick, with `-0.0` normalized to `+0.0` so
+/// numerically equal deadlines compare equal — exactly the naive scan's
+/// `<` semantics, which the EDF side-index must reproduce bit-for-bit.
+fn deadline_key(v: f64) -> u64 {
+    let v = if v == 0.0 { 0.0 } else { v };
+    let b = v.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
 
 /// One pending inference request.
 #[derive(Clone, Debug)]
@@ -38,6 +54,21 @@ pub struct QueuedRequest {
 #[derive(Debug, Default)]
 pub struct RequestQueue {
     q: VecDeque<QueuedRequest>,
+    /// Arrival sequence numbers parallel to `q`, strictly ascending in
+    /// position order (requeue renumbers to restore the invariant).
+    /// They double as the EDF tie-break key: ascending seq == ascending
+    /// queue position, so the heap's `(deadline, seq)` min is exactly
+    /// the naive scan's first-lowest-index-among-earliest-deadlines.
+    seqs: VecDeque<u64>,
+    next_seq: u64,
+    /// Lazy EDF side-index: a min-heap of `(deadline_key, seq)` built on
+    /// the first [`RequestQueue::edf_next_index`] call and maintained on
+    /// push.  Pops and removals leave stale entries behind (lazy
+    /// deletion: a peeked seq no longer in `seqs` is discarded), so an
+    /// EDF flush is amortized O(log n) per pop instead of the naive
+    /// scan's O(n).  `None` = not built yet, or invalidated by
+    /// [`RequestQueue::requeue_front`]'s renumbering.
+    edf: RefCell<Option<BinaryHeap<Reverse<(u64, u64)>>>>,
     peak_depth: usize,
     total_enqueued: u64,
     /// Running sum of queued rows, maintained on push/pop/remove so the
@@ -52,6 +83,11 @@ impl RequestQueue {
     }
 
     pub fn push(&mut self, req: QueuedRequest) {
+        if let Some(heap) = self.edf.get_mut().as_mut() {
+            heap.push(Reverse((deadline_key(req.deadline_t), self.next_seq)));
+        }
+        self.seqs.push_back(self.next_seq);
+        self.next_seq += 1;
         self.rows_pending += req.rows;
         self.q.push_back(req);
         self.total_enqueued += 1;
@@ -61,6 +97,7 @@ impl RequestQueue {
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         let r = self.q.pop_front();
         if let Some(r) = &r {
+            self.seqs.pop_front();
             self.rows_pending -= r.rows;
         }
         r
@@ -83,6 +120,7 @@ impl RequestQueue {
     pub fn remove(&mut self, i: usize) -> Option<QueuedRequest> {
         let r = self.q.remove(i);
         if let Some(r) = &r {
+            self.seqs.remove(i);
             self.rows_pending -= r.rows;
         }
         r
@@ -102,6 +140,14 @@ impl RequestQueue {
             self.rows_pending += req.rows;
             self.q.push_front(req);
         }
+        // Prepending would need seqs below the current front; renumber
+        // every position instead and drop the heap (rebuilt on the next
+        // EDF pop).  O(n), but requeues only happen on the rare flush-
+        // failure recovery path.
+        self.seqs.clear();
+        self.seqs.extend(0..self.q.len() as u64);
+        self.next_seq = self.q.len() as u64;
+        *self.edf.get_mut() = None;
     }
 
     pub fn len(&self) -> usize {
@@ -125,6 +171,43 @@ impl RequestQueue {
 
     pub fn total_enqueued(&self) -> u64 {
         self.total_enqueued
+    }
+
+    /// Queue position of the earliest-deadline request (ties: lowest
+    /// position), or `None` when empty — the amortized backend of
+    /// [`crate::serve::admission::Edf::next_index`], bit-identical to a
+    /// naive full scan with strict-`<` comparison (pinned by tests here
+    /// and in `serve/admission.rs`).  Deadlines must not be NaN (they
+    /// never are: every producer derives them from finite virtual time).
+    ///
+    /// Amortized O(log n) per pop: the side-index min-heap is built once
+    /// per backlog (and after a requeue), maintained on push, and stale
+    /// entries from pops/removals are discarded lazily on peek.
+    pub fn edf_next_index(&self) -> Option<usize> {
+        if self.q.is_empty() {
+            return None;
+        }
+        let mut slot = self.edf.borrow_mut();
+        let heap = slot.get_or_insert_with(|| {
+            self.q
+                .iter()
+                .zip(self.seqs.iter())
+                .map(|(r, &s)| Reverse((deadline_key(r.deadline_t), s)))
+                .collect()
+        });
+        loop {
+            // Every live seq has a heap entry (built from the live queue,
+            // maintained on push, only invalidated wholesale), so a
+            // non-empty queue guarantees a live peek eventually.
+            let Reverse((_, seq)) =
+                *heap.peek().expect("heap covers all live requests");
+            match self.seqs.binary_search(&seq) {
+                Ok(i) => return Some(i),
+                Err(_) => {
+                    heap.pop();
+                }
+            }
+        }
     }
 }
 
@@ -182,5 +265,96 @@ mod tests {
         assert_eq!(q.rows_pending(), 3);
         assert_eq!(q.front().unwrap().arrival_t, 1.0);
         assert_eq!(q.get(1).unwrap().arrival_t, 3.0);
+    }
+
+    /// The naive scan `Edf::next_index` used before the side-index: the
+    /// parity oracle, kept verbatim.
+    fn naive_edf(q: &RequestQueue) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, r) in q.iter().enumerate() {
+            if best.is_none_or(|(_, d)| r.deadline_t < d) {
+                best = Some((i, r.deadline_t));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn req_d(deadline_t: f64) -> QueuedRequest {
+        QueuedRequest { deadline_t, ..req(0.0, 0, 1) }
+    }
+
+    #[test]
+    fn deadline_key_is_monotone_over_ugly_floats() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1e9,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-300,
+            0.25,
+            1.0,
+            1e9,
+            1e15,
+            f64::INFINITY,
+        ];
+        for w in vals.windows(2) {
+            if w[0] == w[1] {
+                assert_eq!(deadline_key(w[0]), deadline_key(w[1]));
+            } else {
+                assert!(deadline_key(w[0]) < deadline_key(w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn edf_side_index_matches_naive_scan_with_ties() {
+        let mut q = RequestQueue::new();
+        // deterministic pseudo-random deadlines with deliberate ties
+        let mut x = 7u64;
+        for i in 0..64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let d = ((x >> 33) % 16) as f64 * 0.5; // few distinct values -> many ties
+            q.push(req_d(d));
+            if i % 3 == 0 {
+                // interleave pops so the heap carries stale entries
+                let want = naive_edf(&q);
+                assert_eq!(q.edf_next_index(), want);
+                q.remove(want.unwrap());
+            }
+        }
+        // drain in EDF order: every pop must agree with the naive scan
+        while !q.is_empty() {
+            let want = naive_edf(&q);
+            assert_eq!(q.edf_next_index(), want, "depth {}", q.len());
+            q.remove(want.unwrap());
+        }
+        assert_eq!(q.edf_next_index(), None);
+    }
+
+    #[test]
+    fn edf_side_index_survives_requeue_and_front_pops() {
+        let mut q = RequestQueue::new();
+        for d in [9.0, 3.0, 3.0, 7.0, 1.0, 3.0] {
+            q.push(req_d(d));
+        }
+        assert_eq!(q.edf_next_index(), Some(4)); // the lone 1.0
+        // FIFO-style front pop invalidates nothing (lazy deletion)
+        q.pop();
+        assert_eq!(q.edf_next_index(), naive_edf(&q));
+        // recovery requeue renumbers positions and rebuilds the heap
+        let a = q.remove(q.edf_next_index().unwrap()).unwrap();
+        let b = q.remove(q.edf_next_index().unwrap()).unwrap();
+        q.requeue_front(vec![a, b]);
+        assert_eq!(q.edf_next_index(), naive_edf(&q));
+        assert_eq!(q.edf_next_index(), Some(0), "requeued 1.0 leads again");
+        // pushes after a rebuild keep extending the live heap
+        q.push(req_d(0.5));
+        assert_eq!(q.edf_next_index(), naive_edf(&q));
+        assert_eq!(q.edf_next_index(), Some(q.len() - 1));
+        while let Some(i) = q.edf_next_index() {
+            assert_eq!(Some(i), naive_edf(&q));
+            q.remove(i);
+        }
     }
 }

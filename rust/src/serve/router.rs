@@ -1,0 +1,361 @@
+//! Scenario-affinity routing across a fleet of serving engines.
+//!
+//! The [`FleetRouter`] is the pure decision core of the fleet layer
+//! ([`super::fleet`]): given only its own bookkeeping — a per-engine
+//! residency mirror, last-known queue depths, and per-engine per-scenario
+//! queued counts — it picks the engine for each arriving request.  Pure
+//! and deterministic by construction (no clocks, no randomness, every
+//! tie broken by lowest engine id), so a replayed arrival trace
+//! reproduces the same routing byte-for-byte regardless of whether the
+//! engines behind it run inline or on worker threads.
+//!
+//! Three decisions live here:
+//!
+//! * **affinity** — send a request to an engine whose bank mirror already
+//!   holds its scenario (among holders: least-loaded, then lowest id), so
+//!   warm [`super::BankSet`] residency is reused instead of rebuilt;
+//!   fall back to the least-loaded engine when no mirror holds it;
+//! * **cross-engine shedding hints** — an [`Admission`] verdict of
+//!   `Dropped{queue-full}` from the affinity target is a hint, not a
+//!   drop: [`FleetRouter::retry_target`] names the least-loaded *other*
+//!   engine to try before the request is truly shed;
+//! * **rebalancing** — when one engine's share of the fleet-wide queued
+//!   requests for a single scenario crosses
+//!   [`RouterConfig::rebalance_threshold`], that scenario is hot:
+//!   [`FleetRouter::maybe_rebalance`] names a second engine to install
+//!   its bank on, spreading subsequent affinity routes.
+//!
+//! The residency mirror is the *router's* view, updated on routing
+//! decisions and rebalance installs with the same LRU capacity the
+//! engines use — like a real fleet's control plane it may lag the
+//! engines' true `BankSet`s (an engine-side eviction is invisible here),
+//! which only ever costs a cold-bank serve, never correctness.
+
+use std::collections::BTreeMap;
+
+use super::admission::{Admission, DropReason};
+
+/// Fleet-routing knobs (carried by [`super::fleet::FleetConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Scenario-affinity routing on (the default).  Off = every request
+    /// goes least-loaded, the ablation arm of the `repro fleet` table.
+    pub affinity: bool,
+    /// One engine's share of fleet-wide queued requests for a single
+    /// scenario that marks the scenario hot (`--rebalance-threshold`;
+    /// `0` disables rebalancing).
+    pub rebalance_threshold: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig { affinity: true, rebalance_threshold: 0.5 }
+    }
+}
+
+/// Where [`FleetRouter::route`] sent a request, and why.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub engine: usize,
+    /// Chosen because the engine's bank mirror holds the scenario (the
+    /// queue-full retry hint only applies to affinity routes).
+    pub by_affinity: bool,
+}
+
+/// Fleet routing counters, exported into the report
+/// (fingerprint-excluded, like every serving-side counter).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterCounters {
+    pub routed_by_affinity: u64,
+    pub routed_least_loaded: u64,
+    pub cross_engine_retries: u64,
+    pub rebalances: u64,
+}
+
+/// Deterministic scenario-affinity router over `n` engines.
+#[derive(Debug)]
+pub struct FleetRouter {
+    cfg: RouterConfig,
+    /// Mirror LRU capacity — matches the engines' `--bank-capacity`.
+    bank_capacity: usize,
+    /// Per-engine residency mirror in LRU order (index 0 = coldest).
+    residency: Vec<Vec<usize>>,
+    /// Last-known queue depth per engine ([`FleetRouter::note_depth`]).
+    depths: Vec<usize>,
+    /// Per-engine queued-request count per scenario: +1 on accept, -1 on
+    /// departure (served, or shed at serve time).
+    queued: Vec<BTreeMap<usize, usize>>,
+    counters: RouterCounters,
+}
+
+impl FleetRouter {
+    pub fn new(n: usize, bank_capacity: usize, cfg: RouterConfig) -> FleetRouter {
+        let n = n.max(1);
+        FleetRouter {
+            cfg,
+            bank_capacity: bank_capacity.max(1),
+            residency: vec![Vec::new(); n],
+            depths: vec![0; n],
+            queued: vec![BTreeMap::new(); n],
+            counters: RouterCounters::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.depths.len()
+    }
+
+    pub fn counters(&self) -> RouterCounters {
+        self.counters
+    }
+
+    /// Least-loaded engine by last-known depth, lowest id on ties,
+    /// optionally excluding one engine.  `None` only when every engine
+    /// is excluded (n == 1 with an exclusion).
+    fn least_loaded(&self, exclude: Option<usize>) -> Option<usize> {
+        self.depths
+            .iter()
+            .enumerate()
+            .filter(|&(e, _)| Some(e) != exclude)
+            .min_by_key(|&(e, &d)| (d, e))
+            .map(|(e, _)| e)
+    }
+
+    /// Touch `scenario` in `engine`'s mirror: move it to most-recent,
+    /// inserting (and evicting the coldest entry) if absent.
+    fn touch(&mut self, engine: usize, scenario: usize) {
+        let lru = &mut self.residency[engine];
+        if let Some(i) = lru.iter().position(|&s| s == scenario) {
+            lru.remove(i);
+        } else if lru.len() >= self.bank_capacity {
+            lru.remove(0);
+        }
+        lru.push(scenario);
+    }
+
+    /// Pick the engine for an arriving request of `scenario`.
+    pub fn route(&mut self, scenario: usize) -> RouteDecision {
+        if self.cfg.affinity {
+            let holder = self
+                .residency
+                .iter()
+                .enumerate()
+                .filter(|(_, lru)| lru.contains(&scenario))
+                .min_by_key(|&(e, _)| (self.depths[e], e))
+                .map(|(e, _)| e);
+            if let Some(engine) = holder {
+                self.counters.routed_by_affinity += 1;
+                self.touch(engine, scenario);
+                return RouteDecision { engine, by_affinity: true };
+            }
+        }
+        let engine = self.least_loaded(None).unwrap_or(0);
+        self.counters.routed_least_loaded += 1;
+        self.touch(engine, scenario);
+        RouteDecision { engine, by_affinity: false }
+    }
+
+    /// Consume a `Dropped{queue-full}` verdict from the affinity target
+    /// as a shedding hint: the least-loaded *other* engine to retry on
+    /// (`None` when there is no other engine).  Any other verdict is
+    /// final and must not be passed here.
+    pub fn retry_target(
+        &mut self,
+        scenario: usize,
+        verdict: Admission,
+        from: usize,
+    ) -> Option<usize> {
+        if verdict != (Admission::Dropped { reason: DropReason::QueueFull }) {
+            return None;
+        }
+        let alt = self.least_loaded(Some(from))?;
+        self.counters.cross_engine_retries += 1;
+        self.touch(alt, scenario);
+        Some(alt)
+    }
+
+    /// A request of `scenario` was accepted by `engine`.
+    pub fn on_accept(&mut self, engine: usize, scenario: usize) {
+        self.depths[engine] += 1;
+        *self.queued[engine].entry(scenario).or_insert(0) += 1;
+    }
+
+    /// A queued request of `scenario` left `engine`'s queue (served, or
+    /// shed at serve time while the breaker was open).
+    pub fn on_departure(&mut self, engine: usize, scenario: usize) {
+        if let Some(c) = self.queued[engine].get_mut(&scenario) {
+            *c -= 1;
+            if *c == 0 {
+                self.queued[engine].remove(&scenario);
+            }
+        }
+    }
+
+    /// Exact queue depth reported back from `engine` (after an arrival
+    /// or poll) — overrides the router's running estimate.
+    pub fn note_depth(&mut self, engine: usize, depth: usize) {
+        self.depths[engine] = depth;
+    }
+
+    /// Check the hot-scenario condition: if one engine's queued share of
+    /// a single scenario crossed the threshold, return `(scenario,
+    /// target)` — the engine to install a second bank on (least-loaded
+    /// among engines whose mirror lacks the scenario).  The target's
+    /// mirror is updated here; the caller performs the actual warm
+    /// install.  `None` when balanced, disabled, or every engine already
+    /// holds the scenario.
+    pub fn maybe_rebalance(&mut self) -> Option<(usize, usize)> {
+        if self.cfg.rebalance_threshold <= 0.0 || self.n() < 2 {
+            return None;
+        }
+        let total: usize =
+            self.queued.iter().flat_map(|m| m.values()).sum();
+        if total == 0 {
+            return None;
+        }
+        // hottest (engine, scenario) cell; engine id then scenario order
+        // break ties, so the scan is deterministic.
+        let mut hot: Option<(usize, usize, usize)> = None; // (count, e, s)
+        for (e, m) in self.queued.iter().enumerate() {
+            for (&s, &c) in m {
+                if hot.is_none_or(|(best, _, _)| c > best) {
+                    hot = Some((c, e, s));
+                }
+            }
+        }
+        let (count, hot_engine, scenario) = hot?;
+        // a lone queued request is 100% of itself — never "hot"
+        if count < 2
+            || (count as f64) <= self.cfg.rebalance_threshold * total as f64
+        {
+            return None;
+        }
+        let target = self
+            .depths
+            .iter()
+            .enumerate()
+            .filter(|&(e, _)| {
+                e != hot_engine && !self.residency[e].contains(&scenario)
+            })
+            .min_by_key(|&(e, &d)| (d, e))
+            .map(|(e, _)| e)?;
+        self.counters.rebalances += 1;
+        self.touch(target, scenario);
+        Some((scenario, target))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(n: usize) -> FleetRouter {
+        FleetRouter::new(n, 4, RouterConfig::default())
+    }
+
+    #[test]
+    fn single_engine_routes_everything_to_engine_zero() {
+        let mut r = router(1);
+        for s in [0, 1, 2, 0] {
+            assert_eq!(r.route(s).engine, 0);
+            r.on_accept(0, s);
+        }
+        let full = Admission::Dropped { reason: DropReason::QueueFull };
+        assert_eq!(r.retry_target(0, full, 0), None, "no other engine");
+        assert_eq!(r.maybe_rebalance(), None, "needs at least two engines");
+    }
+
+    #[test]
+    fn affinity_prefers_the_holder_else_least_loaded() {
+        let mut r = router(3);
+        // cold start: least-loaded tie -> engine 0, which then holds s7
+        let d0 = r.route(7);
+        assert_eq!((d0.engine, d0.by_affinity), (0, false));
+        r.on_accept(0, 7);
+        // s7 again: engine 0 holds it, even though it is now deeper
+        let d1 = r.route(7);
+        assert_eq!((d1.engine, d1.by_affinity), (0, true));
+        // a different scenario goes least-loaded (engine 1: lowest id
+        // among the empty engines)
+        let d2 = r.route(8);
+        assert_eq!((d2.engine, d2.by_affinity), (1, false));
+        let c = r.counters();
+        assert_eq!(c.routed_by_affinity, 1);
+        assert_eq!(c.routed_least_loaded, 2);
+    }
+
+    #[test]
+    fn affinity_off_is_pure_least_loaded() {
+        let mut r =
+            FleetRouter::new(2, 4, RouterConfig { affinity: false, ..RouterConfig::default() });
+        assert_eq!(r.route(5).engine, 0);
+        r.on_accept(0, 5);
+        // engine 0 holds s5 in its mirror, but affinity is off
+        let d = r.route(5);
+        assert_eq!((d.engine, d.by_affinity), (1, false));
+        assert_eq!(r.counters().routed_by_affinity, 0);
+    }
+
+    #[test]
+    fn queue_full_verdict_retries_least_loaded_other_engine() {
+        let mut r = router(3);
+        r.note_depth(0, 8);
+        r.note_depth(1, 3);
+        r.note_depth(2, 5);
+        let full = Admission::Dropped { reason: DropReason::QueueFull };
+        assert_eq!(r.retry_target(4, full, 0), Some(1));
+        assert_eq!(r.counters().cross_engine_retries, 1);
+        // accepted and other dropped verdicts are final
+        assert_eq!(r.retry_target(4, Admission::Accepted, 0), None);
+        let infeasible =
+            Admission::Dropped { reason: DropReason::SloInfeasible };
+        assert_eq!(r.retry_target(4, infeasible, 0), None);
+        assert_eq!(r.counters().cross_engine_retries, 1);
+    }
+
+    #[test]
+    fn hot_scenario_installs_a_second_bank_once() {
+        let mut r = router(2);
+        // 3 of 4 fleet-queued requests are scenario 9 on engine 0
+        r.route(9);
+        r.on_accept(0, 9);
+        r.on_accept(0, 9);
+        r.on_accept(0, 9);
+        r.on_accept(1, 2);
+        r.note_depth(0, 3);
+        r.note_depth(1, 1);
+        assert_eq!(r.maybe_rebalance(), Some((9, 1)));
+        assert_eq!(r.counters().rebalances, 1);
+        // engine 1 now mirrors s9: no target is left, so no re-trigger
+        assert_eq!(r.maybe_rebalance(), None);
+        // and affinity now sees two holders; the shallower one wins
+        assert_eq!(r.route(9).engine, 1);
+    }
+
+    #[test]
+    fn departures_cool_the_scenario_below_threshold() {
+        let mut r = router(2);
+        r.on_accept(0, 3);
+        r.on_accept(0, 3);
+        r.on_accept(1, 4);
+        r.on_accept(1, 5);
+        // 2/4 == threshold 0.5: strictly-above required, stays balanced
+        assert_eq!(r.maybe_rebalance(), None);
+        r.on_departure(1, 4);
+        // 2/3 > 0.5: hot now; target skips the hot engine itself
+        assert_eq!(r.maybe_rebalance(), Some((3, 1)));
+        r.on_departure(0, 3);
+        r.on_departure(0, 3);
+        assert_eq!(r.maybe_rebalance(), None, "drained scenario is cold");
+    }
+
+    #[test]
+    fn mirror_is_lru_bounded_like_the_banks() {
+        let mut r = FleetRouter::new(1, 2, RouterConfig::default());
+        r.route(0);
+        r.route(1);
+        r.route(0); // touch: 0 becomes most-recent
+        r.route(2); // evicts 1 (coldest), not 0
+        assert_eq!(r.residency[0], vec![0, 2]);
+    }
+}

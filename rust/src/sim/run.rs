@@ -52,7 +52,8 @@ use crate::model::{Cwr, ModelSession, Params};
 use crate::rng::Pcg32;
 use crate::runtime::{faults, Backend, FaultPlan, FaultyBackend, TracingBackend};
 use crate::serve::{
-    QueuedRequest, RoundDecision, ServeConfig, ServeCtx, ServeEngine, ServeEvent,
+    Fleet, FleetConfig, QueuedRequest, RoundDecision, ServeConfig, ServeCtx,
+    ServeEvent,
 };
 use crate::trace::{Lane, Tracer};
 
@@ -93,6 +94,11 @@ pub struct RunConfig {
     pub disable_serving_cache: bool,
     /// Serving-engine knobs (batching window, SLO, scheduler thresholds).
     pub serve: ServeConfig,
+    /// Fleet knobs (`--fleet N`, `--no-affinity`,
+    /// `--rebalance-threshold`).  The default fleet of one routes every
+    /// request to engine 0 and is bit-identical to the engine-only
+    /// control plane (pinned by `tests/fleet.rs`).
+    pub fleet: FleetConfig,
     /// `--no-batching`: every request draws a full batch, so each one
     /// fills and flushes its own execute at the arrival instant — the
     /// pre-engine behaviour.  Reports must be bit-identical to
@@ -128,6 +134,7 @@ impl RunConfig {
             oracle_change_detection: false,
             disable_serving_cache: false,
             serve: ServeConfig::default(),
+            fleet: FleetConfig::default(),
             serve_direct: false,
             faults: faults::env_plan(),
         }
@@ -162,7 +169,7 @@ pub struct Simulation<'b> {
     val_pool: ValPool,
     val_x: Vec<f32>,
     val_y: Vec<i32>,
-    engine: ServeEngine,
+    fleet: Fleet,
     aug_a: Vec<f32>,
     aug_b: Vec<f32>,
     last_energy_score: Option<f64>,
@@ -265,12 +272,13 @@ impl<'b> Simulation<'b> {
         report.seed = cfg.seed;
 
         let val_pool = ValPool::new(sess.m.d, VAL_KEEP);
-        let engine = ServeEngine::new(
+        let fleet = Fleet::new(
             &sess.m,
             &cfg.device,
             &cfg.serve,
             cfg.serve_direct,
             cfg.disable_serving_cache,
+            &cfg.fleet,
         );
         Ok(Simulation {
             cfg,
@@ -288,7 +296,7 @@ impl<'b> Simulation<'b> {
             val_pool,
             val_x: Vec::new(),
             val_y: Vec::new(),
-            engine,
+            fleet,
             aug_a: Vec::new(),
             aug_b: Vec::new(),
             last_energy_score: None,
@@ -298,11 +306,11 @@ impl<'b> Simulation<'b> {
         })
     }
 
-    /// Attach a tracer; the serving engine shares the same buffer, so the
-    /// full timeline (engine + rounds + backend boundary) interleaves in
-    /// one ring.
+    /// Attach a tracer; every serving engine in the fleet shares the same
+    /// buffer, so the full timeline (engines + rounds + backend boundary)
+    /// interleaves in one ring.
     pub fn set_tracer(&mut self, tracer: Tracer) {
-        self.engine.set_tracer(tracer.clone());
+        self.fleet.set_tracer(tracer.clone());
         self.tracer = tracer;
     }
 
@@ -414,14 +422,14 @@ impl<'b> Simulation<'b> {
                         // backlog the scheduler defers the round (bounded
                         // by its starvation cap) and feeds LazyTune the
                         // real queue depth.
-                        let backlog = self.engine.queue_depth();
+                        let backlog = self.fleet.queue_depth();
                         self.tracer.instant(
                             Lane::Rounds,
                             "round_trigger",
                             ev.t,
                             &[("backlog", backlog as f64)],
                         );
-                        match self.engine.scheduler_mut().consider_round(backlog) {
+                        match self.fleet.scheduler_mut().consider_round(backlog) {
                             RoundDecision::Defer => {
                                 self.tracer.instant(
                                     Lane::Rounds,
@@ -483,7 +491,7 @@ impl<'b> Simulation<'b> {
                                 self.report
                                     .hists
                                     .record("tune/round_batches", batches as f64);
-                                self.engine
+                                self.fleet
                                     .scheduler_mut()
                                     .on_round(ev.t, round_s);
                             }
@@ -496,7 +504,7 @@ impl<'b> Simulation<'b> {
                     // control plane sheds) and hand it to admission,
                     // then poll so capacity/window-0 flushes serve at
                     // the arrival instant exactly like the seed did.
-                    let rows = self.engine.rows_per_request();
+                    let rows = self.fleet.rows_per_request();
                     let (x, y) = self.schedule.world.batch(
                         rows,
                         ev.scenario,
@@ -504,14 +512,14 @@ impl<'b> Simulation<'b> {
                     );
                     let req = QueuedRequest {
                         arrival_t: ev.t,
-                        deadline_t: self.engine.deadline(ev.t),
+                        deadline_t: self.fleet.deadline(ev.t),
                         scenario: ev.scenario,
                         stale_batches: buffer.len(),
                         x,
                         y,
                         rows,
                     };
-                    self.engine.on_arrival(req);
+                    self.fleet.on_arrival(req);
                     let served = self.poll_engine(ev.t)?;
                     self.tune.on_inference();
                     self.absorb_events(
@@ -569,7 +577,7 @@ impl<'b> Simulation<'b> {
             // charge the horizon round to the occupancy ledger too, so
             // time-in-state covers every round (nothing serves after it,
             // so the device-busy horizon move is inert).
-            self.engine.scheduler_mut().on_round(t, round_s);
+            self.fleet.scheduler_mut().on_round(t, round_s);
         }
         self.cwr
             .consolidate_set(&self.sess.m, &self.params, &trained_classes);
@@ -588,8 +596,8 @@ impl<'b> Simulation<'b> {
         self.report.wall_exec_s = wall.elapsed().as_secs_f64();
         self.report.theta_marshals = self.sess.theta_marshal_count();
         self.report.theta_cache_hits = self.sess.theta_cache_hit_count();
-        self.report.serving_rebuilds = self.engine.serving_rebuilds();
-        self.report.serving_hits = self.engine.serving_hits();
+        self.report.serving_rebuilds = self.fleet.serving_rebuilds();
+        self.report.serving_hits = self.fleet.serving_hits();
         let perf = self.sess.be.perf();
         self.report.gemm_packs = perf.gemm_packs - perf0.gemm_packs;
         self.report.gemm_pack_hits = perf.gemm_pack_hits - perf0.gemm_pack_hits;
@@ -597,7 +605,7 @@ impl<'b> Simulation<'b> {
         self.report.scratch_reuses = perf.scratch_reuses - perf0.scratch_reuses;
         self.report.scratch_bytes_reused =
             perf.scratch_bytes_reused - perf0.scratch_bytes_reused;
-        let lat = self.engine.latency_summary();
+        let lat = self.fleet.latency_summary();
         self.report.latency_p50_ms = lat.p50_ms;
         self.report.latency_p95_ms = lat.p95_ms;
         self.report.latency_p99_ms = lat.p99_ms;
@@ -605,18 +613,18 @@ impl<'b> Simulation<'b> {
         self.report.latency_max_ms = lat.max_ms;
         self.report.slo_ms = self.cfg.serve.slo_ms;
         self.report.slo_violations = lat.violations;
-        self.report.serve_executes = self.engine.executes();
-        self.report.avg_batch_requests = self.engine.avg_batch_requests();
-        self.report.peak_queue_depth = self.engine.peak_queue_depth() as u64;
-        self.report.rounds_deferred = self.engine.scheduler().rounds_deferred();
-        self.report.queue_policy = self.engine.queue_policy_name().to_string();
-        self.report.requests_dropped = self.engine.requests_dropped();
-        self.report.drops_queue_full = self.engine.drops_queue_full();
-        self.report.drops_slo_infeasible = self.engine.drops_slo_infeasible();
-        self.report.deadline_misses = self.engine.deadline_misses();
-        self.report.bank_evictions = self.engine.bank_evictions();
-        self.report.banks_peak_resident = self.engine.banks_peak_resident() as u64;
-        self.report.per_scenario_latency = self.engine.per_scenario_latency();
+        self.report.serve_executes = self.fleet.executes();
+        self.report.avg_batch_requests = self.fleet.avg_batch_requests();
+        self.report.peak_queue_depth = self.fleet.peak_queue_depth() as u64;
+        self.report.rounds_deferred = self.fleet.rounds_deferred();
+        self.report.queue_policy = self.fleet.queue_policy_name().to_string();
+        self.report.requests_dropped = self.fleet.requests_dropped();
+        self.report.drops_queue_full = self.fleet.drops_queue_full();
+        self.report.drops_slo_infeasible = self.fleet.drops_slo_infeasible();
+        self.report.deadline_misses = self.fleet.deadline_misses();
+        self.report.bank_evictions = self.fleet.bank_evictions();
+        self.report.banks_peak_resident = self.fleet.banks_peak_resident() as u64;
+        self.report.per_scenario_latency = self.fleet.per_scenario_latency();
         // fault / recovery counters (fingerprint-excluded observability).
         let fstats = self.sess.be.fault_stats();
         self.report.faults_injected_exec =
@@ -627,22 +635,32 @@ impl<'b> Simulation<'b> {
             fstats.latency_spikes - faults0.latency_spikes;
         self.report.fault_delay_injected_s =
             fstats.spike_s_total - faults0.spike_s_total;
-        self.report.serve_retries = self.engine.serve_retries();
-        self.report.serve_flush_failures = self.engine.flush_failures();
-        self.report.breaker_trips = self.engine.breaker_trips();
-        self.report.degraded_serves = self.engine.degraded_serves();
+        self.report.serve_retries = self.fleet.serve_retries();
+        self.report.serve_flush_failures = self.fleet.flush_failures();
+        self.report.breaker_trips = self.fleet.breaker_trips();
+        self.report.degraded_serves = self.fleet.degraded_serves();
         self.report.drops_backend_unavailable =
-            self.engine.drops_backend_unavailable();
+            self.fleet.drops_backend_unavailable();
         self.report.round_rollbacks = self.round_rollbacks;
+        // fleet routing accounting (fingerprint-excluded; all zero for a
+        // fleet of one except the trivially-affine route counter).
+        let rc = self.fleet.router_counters();
+        self.report.fleet_engines = self.fleet.n() as u64;
+        self.report.fleet_routed_affinity = rc.routed_by_affinity;
+        self.report.fleet_routed_least_loaded = rc.routed_least_loaded;
+        self.report.fleet_cross_engine_retries = rc.cross_engine_retries;
+        self.report.fleet_rebalances = rc.rebalances;
         // time-in-state (fingerprint-excluded): how the virtual horizon
         // split between serving executes, fine-tuning rounds, and idle.
-        self.report.time_serving_s = self.engine.scheduler().serve_busy_s();
-        self.report.time_tuning_s = self.engine.scheduler().round_busy_s();
-        self.report.time_idle_s = (self.stream.horizon
+        // With a fleet the budget is N device-horizons: serving sums over
+        // engines, tuning stays on the primary, idle absorbs the rest.
+        self.report.time_serving_s = self.fleet.serve_busy_s();
+        self.report.time_tuning_s = self.fleet.round_busy_s();
+        self.report.time_idle_s = (self.fleet.n() as f64 * self.stream.horizon
             - self.report.time_serving_s
             - self.report.time_tuning_s)
             .max(0.0);
-        self.engine.fill_hists(&mut self.report.hists);
+        self.fleet.fill_hists(&mut self.report.hists);
         // one whole-run span in the sweep lane, so a single `etuner run`
         // timeline still covers all four subsystems.
         self.tracer.span(
@@ -830,10 +848,10 @@ impl<'b> Simulation<'b> {
     }
 
     /// Poll the serving control plane at `t`.  The [`ServeCtx`] is
-    /// rebuilt per call: it borrows fields disjoint from `self.engine`,
+    /// rebuilt per call: it borrows fields disjoint from `self.fleet`,
     /// so the split borrow stays legal inside one method.
     fn poll_engine(&mut self, t: f64) -> Result<Vec<ServeEvent>> {
-        self.engine.poll(
+        self.fleet.poll(
             t,
             &ServeCtx {
                 sess: &self.sess,
@@ -846,7 +864,7 @@ impl<'b> Simulation<'b> {
 
     /// Drain the serving control plane at `t` (window-unconditioned).
     fn drain_engine(&mut self, t: f64) -> Result<Vec<ServeEvent>> {
-        self.engine.drain(
+        self.fleet.drain(
             t,
             &ServeCtx {
                 sess: &self.sess,

@@ -453,39 +453,107 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             .then(a.lane.cmp(&b.lane))
     });
     for e in sorted {
-        let ts = e.t0 * 1e6;
-        let mut args: Vec<(&str, Json)> = Vec::new();
-        match e.kind {
-            Kind::Counter => {
-                // counter tracks carry their value under the series name
-                let v = e.args().first().map(|&(_, v)| v).unwrap_or(0.0);
-                args.push((e.name, Json::Num(v)));
-            }
-            _ => {
-                for &(k, v) in e.args() {
-                    args.push((k, Json::Num(v)));
-                }
+        evs.push(event_json(e, e.lane.tid()));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// One Chrome trace-event record, with the caller choosing the `tid` (the
+/// single-timeline exporter uses the lane's own tid; the fleet exporter
+/// offsets by engine so each (engine, lane) pair gets its own track).
+fn event_json(e: &Event, tid: u64) -> Json {
+    let ts = e.t0 * 1e6;
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    match e.kind {
+        Kind::Counter => {
+            // counter tracks carry their value under the series name
+            let v = e.args().first().map(|&(_, v)| v).unwrap_or(0.0);
+            args.push((e.name, Json::Num(v)));
+        }
+        _ => {
+            for &(k, v) in e.args() {
+                args.push((k, Json::Num(v)));
             }
         }
-        let mut fields = vec![
-            ("name", Json::Str(e.name.into())),
-            ("pid", Json::Num(1.0)),
-            ("tid", Json::Num(e.lane.tid() as f64)),
-            ("ts", Json::Num(ts)),
-            ("args", obj(args)),
-        ];
-        match e.kind {
-            Kind::Span => {
-                fields.push(("ph", Json::Str("X".into())));
-                fields.push(("dur", Json::Num(e.dur * 1e6)));
-            }
-            Kind::Instant => {
-                fields.push(("ph", Json::Str("i".into())));
-                fields.push(("s", Json::Str("t".into())));
-            }
-            Kind::Counter => fields.push(("ph", Json::Str("C".into()))),
+    }
+    let mut fields = vec![
+        ("name", Json::Str(e.name.into())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+        ("args", obj(args)),
+    ];
+    match e.kind {
+        Kind::Span => {
+            fields.push(("ph", Json::Str("X".into())));
+            fields.push(("dur", Json::Num(e.dur * 1e6)));
         }
-        evs.push(obj(fields));
+        Kind::Instant => {
+            fields.push(("ph", Json::Str("i".into())));
+            fields.push(("s", Json::Str("t".into())));
+        }
+        Kind::Counter => fields.push(("ph", Json::Str("C".into()))),
+    }
+    obj(fields)
+}
+
+/// Chrome trace `tid` for `lane` on fleet engine `engine`: engines are
+/// blocks of 4 consecutive tids, so every (engine, lane) pair renders as
+/// its own named track.
+fn fleet_tid(engine: usize, lane: Lane) -> u64 {
+    engine as u64 * Lane::ALL.len() as u64 + lane.tid()
+}
+
+/// Build Chrome trace-event JSON for a **fleet** run: one per-engine event
+/// batch per serving engine (engine id = slice index, the order
+/// [`crate::serve::FleetYield`] merges in).  Each (engine, lane) pair gets
+/// its own `thread_name` track (`e0/serve-engine`, `e0/rounds`, …,
+/// `e1/serve-engine`, …); events are sorted by virtual time, then engine,
+/// then lane, so the export is independent of how the engine pool was
+/// driven (sequential vs threaded).
+pub fn chrome_trace_fleet(per_engine: &[Vec<Event>]) -> Json {
+    let total: usize = per_engine.iter().map(|evs| evs.len()).sum();
+    let mut evs: Vec<Json> =
+        Vec::with_capacity(total + per_engine.len() * Lane::ALL.len() + 1);
+    evs.push(obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("process_name".into())),
+        ("pid", Json::Num(1.0)),
+        ("args", obj(vec![(
+            "name",
+            Json::Str("etuner fleet (virtual time)".into()),
+        )])),
+    ]));
+    for engine in 0..per_engine.len() {
+        for lane in Lane::ALL {
+            evs.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(fleet_tid(engine, lane) as f64)),
+                ("args", obj(vec![(
+                    "name",
+                    Json::Str(format!("e{engine}/{}", lane.name())),
+                )])),
+            ]));
+        }
+    }
+    let mut sorted: Vec<(usize, &Event)> = per_engine
+        .iter()
+        .enumerate()
+        .flat_map(|(k, batch)| batch.iter().map(move |e| (k, e)))
+        .collect();
+    sorted.sort_by(|(ka, a), (kb, b)| {
+        a.t0.partial_cmp(&b.t0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ka.cmp(kb))
+            .then(a.lane.cmp(&b.lane))
+    });
+    for (engine, e) in sorted {
+        evs.push(event_json(e, fleet_tid(engine, e.lane)));
     }
     obj(vec![
         ("traceEvents", Json::Arr(evs)),
@@ -617,6 +685,49 @@ mod tests {
         assert_eq!(span.get("name").unwrap().str().unwrap(), "execute");
         assert!((span.get("ts").unwrap().num().unwrap() - 1e6).abs() < 1e-6);
         assert!((span.get("dur").unwrap().num().unwrap() - 1.5e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fleet_export_gives_each_engine_lane_its_own_track() {
+        let e0 = Tracer::enabled(16);
+        e0.span(Lane::Engine, "execute", 1.0, 2.0, &[]);
+        let e1 = Tracer::enabled(16);
+        e1.span(Lane::Engine, "execute", 1.0, 2.0, &[]);
+        e1.instant(Lane::Rounds, "round_trigger", 0.5, &[]);
+        let text =
+            chrome_trace_fleet(&[e0.take_events(), e1.take_events()])
+                .to_string();
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().arr().unwrap();
+        // 1 process + 2 engines x 4 lanes metadata + 3 events
+        assert_eq!(evs.len(), 12);
+        let tracks: Vec<String> = evs
+            .iter()
+            .filter(|e| {
+                e.get("name").unwrap().str().unwrap() == "thread_name"
+            })
+            .map(|e| {
+                e.get("args")
+                    .unwrap()
+                    .get("name")
+                    .unwrap()
+                    .str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(tracks.len(), 8);
+        assert!(tracks.contains(&"e0/serve-engine".to_string()));
+        assert!(tracks.contains(&"e1/rounds".to_string()));
+        // same lane on different engines lands on different tids
+        let exec_tids: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("name").unwrap().str().unwrap() == "execute")
+            .map(|e| e.get("tid").unwrap().num().unwrap())
+            .collect();
+        assert_eq!(exec_tids.len(), 2);
+        assert!((exec_tids[0] - 1.0).abs() < 1e-12, "e0 engine lane: tid 1");
+        assert!((exec_tids[1] - 5.0).abs() < 1e-12, "e1 engine lane: tid 5");
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Fleet-router determinism battery (PR 8).
+//!
+//! Three contracts, mirroring `tests/faults.rs`:
+//!
+//! * **Transparency** — a fleet of one is a pure wrapper: the simulation
+//!   path keeps the scientific fingerprint bit-identical to the
+//!   engine-only control plane, and the library pool path reproduces a
+//!   bare [`ServeEngine`] drive event-for-event, histogram-for-histogram.
+//! * **Conservation** — under any routing (affinity, least-loaded
+//!   fallback, cross-engine queue-full retries, rebalance installs) every
+//!   arrival is served or accounted as dropped — including with a fault
+//!   plan degrading engine 0 until its breaker opens.
+//! * **Worker-count independence** — `run_pool` merges per-engine
+//!   events, histograms, counters, and trace batches in engine-id order,
+//!   so the sequential and threaded pools yield bit-identical results.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::cost::device::DeviceModel;
+use etuner::data::benchmarks::{Benchmark, Scenario};
+use etuner::metrics::hist::HistRegistry;
+use etuner::model::{Cwr, ModelSession};
+use etuner::runtime::FaultPlan;
+use etuner::serve::{
+    run_pool, FleetConfig, FleetPoolSpec, FleetYield, QueuedRequest,
+    ServeConfig, ServeCtx, ServeEvent,
+};
+use etuner::sim::{RunConfig, Simulation};
+use etuner::testkit;
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 80;
+    c.faults = FaultPlan::none(); // pinned: see tests/faults.rs module docs
+    c
+}
+
+/// Scenario table shared by the pool spec and the bare-engine control
+/// (unconsolidated CWR, exactly like the pool's per-worker stack).
+fn scenarios(n: usize) -> Vec<Scenario> {
+    (0..n)
+        .map(|s| Scenario {
+            id: s,
+            classes: vec![s],
+            seen: (0..=s).collect(),
+            new_pattern: false,
+        })
+        .collect()
+}
+
+/// Deterministic ascending-arrival workload over `n_scenarios` scenarios.
+fn workload(
+    d: usize,
+    rows: usize,
+    n: usize,
+    n_scenarios: usize,
+) -> Vec<QueuedRequest> {
+    (0..n)
+        .map(|i| {
+            let scenario = i % n_scenarios;
+            QueuedRequest {
+                arrival_t: i as f64 * 2.0,
+                deadline_t: i as f64 * 2.0 + 1e9,
+                scenario,
+                stale_batches: 0,
+                x: (0..rows * d)
+                    .map(|k| ((i * 13 + k * 7) % 11) as f32 * 0.15 - 0.7)
+                    .collect(),
+                y: vec![scenario as i32; rows],
+                rows,
+            }
+        })
+        .collect()
+}
+
+fn spec(
+    serve: ServeConfig,
+    fleet: FleetConfig,
+    n_scenarios: usize,
+    trace: bool,
+) -> FleetPoolSpec {
+    FleetPoolSpec {
+        backend: testkit::refcpu_spec(),
+        model: "mbv2".into(),
+        device: DeviceModel::jetson_nx_15w(),
+        scenarios: scenarios(n_scenarios),
+        serve,
+        fleet,
+        trace,
+        faults: FaultPlan::none(),
+        fault_seed: 0,
+    }
+}
+
+/// Events (and trace batches) carry `f64`s and `&'static str`s but no
+/// `PartialEq`; their derived `Debug` output round-trips every float
+/// exactly, so string equality is bit equality.
+fn rendered(events: &[(usize, ServeEvent)]) -> Vec<String> {
+    events.iter().map(|(e, ev)| format!("e{e} {ev:?}")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// transparency: a fleet of one is a pure wrapper
+// ---------------------------------------------------------------------------
+
+/// Library-level half of the fleet-of-1 contract: `run_pool` with one
+/// engine reproduces a hand-driven bare [`ServeEngine`] — same events in
+/// the same order, same merged histograms, same counters.
+#[test]
+fn fleet_of_one_pool_matches_a_bare_engine_drive() {
+    let serve = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        ..ServeConfig::default()
+    };
+    // same backend kind the pool spec names, so outputs match bit for bit
+    let be = testkit::refcpu_spec().create().unwrap();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let mut cfg = spec(serve, FleetConfig::default(), 3, false);
+    cfg.serve.rows_per_request = Some(rows);
+    let wl = workload(sess.m.d, rows, 12, 3);
+    let drain_t = 500.0;
+
+    // bare engine, driven exactly like the pool coordinator: arrive, poll
+    // at the arrival instant, final drain
+    let params = sess.theta0().unwrap();
+    let cwr = Cwr::new(&sess.m);
+    let scen = scenarios(3);
+    let ctx = ServeCtx { sess: &sess, params: &params, cwr: &cwr, scenarios: &scen };
+    let mut eng = etuner::serve::ServeEngine::new(
+        &sess.m,
+        &cfg.device,
+        &cfg.serve,
+        false,
+        false,
+    );
+    let mut bare: Vec<(usize, ServeEvent)> = Vec::new();
+    for req in &wl {
+        let t = req.arrival_t;
+        eng.on_arrival(req.clone());
+        bare.extend(eng.poll(t, &ctx).unwrap().into_iter().map(|ev| (0, ev)));
+    }
+    bare.extend(eng.drain(drain_t, &ctx).unwrap().into_iter().map(|ev| (0, ev)));
+    let mut bare_hists = HistRegistry::new();
+    eng.fill_hists(&mut bare_hists);
+
+    let y: FleetYield = run_pool(&cfg, &wl, drain_t, false).unwrap();
+
+    assert_eq!(
+        rendered(&y.events),
+        rendered(&bare),
+        "fleet-of-1 event stream diverged from the bare engine"
+    );
+    assert_eq!(y.hists, bare_hists, "merged registry is not the engine's own");
+    assert_eq!(y.counters.served, eng.served());
+    assert_eq!(y.counters.executes, eng.executes());
+    assert_eq!(y.counters.serving_rebuilds, eng.serving_rebuilds());
+    assert_eq!(y.counters.requests_dropped(), eng.requests_dropped());
+    assert_eq!(y.counters.router.cross_engine_retries, 0);
+    assert_eq!(y.counters.router.rebalances, 0, "n=1 never rebalances");
+}
+
+/// Simulation-level half: under the default serve config (window 0,
+/// FIFO, no shedding) every request serves alone at its own arrival poll
+/// on whichever engine it routed to, so the scientific fingerprint is
+/// bit-identical for a fleet of 1 and a fleet of 4 — and the served
+/// sequence matches request-for-request.
+#[test]
+fn fleet_of_four_keeps_the_scientific_fingerprint() {
+    let be = testkit::execution_backend();
+
+    let one = Simulation::new(be.as_ref(), quick(17)).unwrap().run().unwrap();
+    let mut cfg = quick(17);
+    cfg.fleet.engines = 4;
+    let four = Simulation::new(be.as_ref(), cfg).unwrap().run().unwrap();
+
+    assert_eq!(
+        one.fingerprint(),
+        four.fingerprint(),
+        "--fleet 4 changed the scientific fields:\n  one:  {}\n  four: {}",
+        one.summary(),
+        four.summary()
+    );
+    assert_eq!(one.requests.len(), four.requests.len());
+    for (a, b) in one.requests.iter().zip(&four.requests) {
+        assert_eq!(a.t, b.t, "served order changed under fleet routing");
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+
+    // observability tells the two runs apart
+    assert_eq!(one.fleet_engines, 1);
+    assert_eq!(four.fleet_engines, 4);
+    // every arrival routed exactly once
+    assert_eq!(
+        four.fleet_routed_affinity + four.fleet_routed_least_loaded,
+        80,
+        "routing decisions do not cover the arrivals"
+    );
+    // the fleet budget is N device-horizons, so all four engines' idle
+    // time is accounted: busy + idle == 4 x (busy_1 + idle_1)
+    let sum1 = one.time_serving_s + one.time_tuning_s + one.time_idle_s;
+    let sum4 = four.time_serving_s + four.time_tuning_s + four.time_idle_s;
+    assert!(
+        (sum4 - 4.0 * sum1).abs() <= 1e-6 * sum1.max(1.0),
+        "fleet time-in-state budget is not 4 device-horizons: {sum4} vs 4x{sum1}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// worker-count independence: sequential == threaded, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sequential_and_threaded_pools_are_bit_identical() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let serve = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    let fleet = FleetConfig { engines: 4, ..FleetConfig::default() };
+    let cfg = spec(serve, fleet, 3, true);
+    let wl = workload(sess.m.d, rows, 24, 3);
+
+    let seq = run_pool(&cfg, &wl, 1000.0, false).unwrap();
+    let thr = run_pool(&cfg, &wl, 1000.0, true).unwrap();
+
+    assert_eq!(
+        rendered(&seq.events),
+        rendered(&thr.events),
+        "merged event stream depends on the pool mode"
+    );
+    assert_eq!(seq.hists, thr.hists, "merged histograms diverged");
+    assert_eq!(seq.counters, thr.counters, "fleet counters diverged");
+    assert_eq!(seq.trace.len(), 4);
+    assert_eq!(
+        format!("{:?}", seq.trace),
+        format!("{:?}", thr.trace),
+        "per-engine trace batches diverged"
+    );
+
+    // the run actually exercised the fleet: everything served, spread
+    // across engines, with affinity doing the routing after warm-up
+    assert_eq!(seq.counters.served + seq.counters.requests_dropped(), 24);
+    assert_eq!(seq.counters.requests_dropped(), 0, "nothing sheds here");
+    assert_eq!(
+        seq.counters.router.routed_by_affinity
+            + seq.counters.router.routed_least_loaded,
+        24
+    );
+    assert!(
+        seq.counters.router.routed_by_affinity > 0,
+        "repeated scenarios never hit the affinity path"
+    );
+    // each engine's tracer recorded its own lane activity
+    assert!(seq.trace.iter().filter(|t| !t.is_empty()).count() > 1);
+}
+
+// ---------------------------------------------------------------------------
+// conservation under routing, retries, rebalancing, and faults
+// ---------------------------------------------------------------------------
+
+/// A 1-deep queue forces the affinity target to answer queue-full, so
+/// arrivals take the probe -> retry-least-loaded path before shedding.
+#[test]
+fn queue_full_retries_cross_engines_and_conserve_arrivals() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let serve = ServeConfig {
+        batch_window_s: 1000.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        max_queue: 1,
+        ..ServeConfig::default()
+    };
+    let fleet = FleetConfig { engines: 2, ..FleetConfig::default() };
+    let cfg = spec(serve, fleet, 1, false); // one scenario: pure affinity
+    let wl = workload(sess.m.d, rows, 6, 1);
+
+    let y = run_pool(&cfg, &wl, 5000.0, false).unwrap();
+    assert!(
+        y.counters.router.cross_engine_retries > 0,
+        "queue-full hints never redirected a request"
+    );
+    assert_eq!(
+        y.counters.served + y.counters.requests_dropped(),
+        6,
+        "requests lost across the retry path"
+    );
+    assert_eq!(
+        y.counters.requests_dropped(),
+        y.counters.drops_queue_full
+            + y.counters.drops_slo_infeasible
+            + y.counters.drops_backend_unavailable,
+        "drop-reason counters do not add up"
+    );
+}
+
+/// A hot scenario (every arrival, one engine) crosses the rebalance
+/// threshold; the router installs a second bank and later arrivals
+/// spread — while arrivals stay conserved.
+#[test]
+fn hot_scenario_rebalances_onto_a_second_engine() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let serve = ServeConfig {
+        batch_window_s: 1000.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    let fleet = FleetConfig {
+        engines: 2,
+        rebalance_threshold: 0.3,
+        ..FleetConfig::default()
+    };
+    let cfg = spec(serve, fleet, 1, false);
+    let wl = workload(sess.m.d, rows, 8, 1);
+
+    let y = run_pool(&cfg, &wl, 5000.0, false).unwrap();
+    assert!(
+        y.counters.router.rebalances >= 1,
+        "an all-one-scenario burst never tripped the rebalance threshold"
+    );
+    assert_eq!(y.counters.served + y.counters.requests_dropped(), 8);
+    // the install itself shows up as a serving rebuild on the target
+    assert!(y.counters.serving_rebuilds >= 2);
+}
+
+/// One engine behind a seeded fault plan, breaker tuned to open after
+/// two consecutive flush failures: the fleet still accounts for every
+/// arrival, and the sequential/threaded pools agree even mid-outage.
+#[test]
+fn arrival_conservation_holds_with_one_engine_degraded() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let mut serve = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    serve.recovery.max_attempts = 1; // every fault is a flush failure
+    serve.recovery.breaker_threshold = 2; // ... and two of them trip it
+    serve.recovery.breaker_cooldown_s = 1e9; // stays open through drain
+    let fleet = FleetConfig { engines: 2, ..FleetConfig::default() };
+    let mut cfg = spec(serve, fleet, 2, false);
+    // rate 1.0: engine 0's executor is deterministically down for the
+    // whole run (theta0/manifest are passthrough, so setup still works)
+    cfg.faults = FaultPlan::parse("exec:1.0,seed:3").unwrap();
+    cfg.fault_seed = 9;
+    let wl = workload(sess.m.d, rows, 16, 2);
+
+    let seq = run_pool(&cfg, &wl, 1000.0, false).unwrap();
+    let thr = run_pool(&cfg, &wl, 1000.0, true).unwrap();
+
+    assert!(
+        seq.counters.flush_failures > 0,
+        "the chaos plan injected nothing — the decorator is not in the path"
+    );
+    assert!(
+        seq.counters.breaker_trips > 0,
+        "engine 0's breaker never opened with its executor down"
+    );
+    // every arrival is served or accounted as dropped, never lost —
+    // including requests that crossed engines chasing capacity
+    assert_eq!(
+        seq.counters.served + seq.counters.requests_dropped(),
+        16,
+        "requests lost with one engine degraded"
+    );
+    assert_eq!(
+        seq.counters.requests_dropped(),
+        seq.counters.drops_queue_full
+            + seq.counters.drops_slo_infeasible
+            + seq.counters.drops_backend_unavailable
+    );
+    // fault streams are seeded per engine id, so the outage replays
+    // bit-identically across pool modes
+    assert_eq!(seq.counters, thr.counters, "fault replay diverged");
+    assert_eq!(rendered(&seq.events), rendered(&thr.events));
+    assert_eq!(seq.hists, thr.hists);
+}
+
+/// The ablation arm: affinity off routes purely least-loaded.
+#[test]
+fn affinity_off_never_routes_by_affinity() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let serve = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    let fleet =
+        FleetConfig { engines: 2, affinity: false, ..FleetConfig::default() };
+    let cfg = spec(serve, fleet, 2, false);
+    let wl = workload(sess.m.d, rows, 10, 2);
+
+    let y = run_pool(&cfg, &wl, 1000.0, false).unwrap();
+    assert_eq!(y.counters.router.routed_by_affinity, 0);
+    assert_eq!(y.counters.router.routed_least_loaded, 10);
+    assert_eq!(y.counters.served + y.counters.requests_dropped(), 10);
+}

@@ -667,6 +667,153 @@ fn requeue_preserves_service_order_once_faults_clear() {
     }
 }
 
+/// PR-8 satellite: the requeue pin above held for FIFO only.  EDF keeps
+/// a deadline side-index that `requeue_front` must re-thread; a
+/// deadline-*inverted* single-scenario burst through a transiently
+/// failing backend must still serve in pure EDF order — and every served
+/// outcome must match the fault-free EDF run bit for bit.
+#[test]
+fn edf_requeue_preserves_deadline_order_once_faults_clear() {
+    let be = testkit::execution_backend();
+    let plan = FaultPlan::parse("exec:0.3,seed:4").unwrap();
+    let faulty = FaultyBackend::new(be.as_ref(), plan, 1);
+    let rig_faulty = Rig::new(&faulty);
+    let rig_clean = Rig::new(be.as_ref());
+
+    let rows = rig_clean.sess.m.batch_infer / 4;
+    let mut cfg = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        queue_policy: QueuePolicyKind::Edf,
+        ..ServeConfig::default()
+    };
+    cfg.recovery.max_attempts = 1; // no in-place retry: force requeue
+    cfg.recovery.breaker_threshold = 1_000_000; // breaker never trips
+
+    let run = |rig: &Rig| -> (Vec<ServedRequest>, u64, u64) {
+        let mut eng = rig.engine(&cfg);
+        for i in 0..12 {
+            let mut req = rig.request(i as f64, 0, rows, i);
+            req.deadline_t = 2000.0 - i as f64; // later arrival = more urgent
+            assert_eq!(eng.on_arrival(req), Admission::Accepted);
+        }
+        let events = eng.drain(100.0, &rig.ctx()).unwrap();
+        (served(&events), eng.flush_failures(), eng.requests_dropped())
+    };
+
+    let (clean, clean_failures, _) = run(&rig_clean);
+    let (recovered, failures, dropped) = run(&rig_faulty);
+
+    assert_eq!(clean_failures, 0);
+    assert!(
+        failures > 0,
+        "a 30% exec-fault rate never failed a flush — EDF requeue untested"
+    );
+    assert_eq!(dropped, 0, "transient faults must never shed");
+    // EDF genuinely re-ordered: the inverted burst serves in reverse
+    let order: Vec<f64> = clean.iter().map(|s| s.arrival_t).collect();
+    let want: Vec<f64> = (0..12).rev().map(|i| i as f64).collect();
+    assert_eq!(order, want, "EDF did not serve the inverted burst in reverse");
+    assert_eq!(recovered.len(), clean.len(), "requests lost in EDF requeue");
+    for (a, b) in clean.iter().zip(&recovered) {
+        assert_eq!(
+            a.arrival_t, b.arrival_t,
+            "EDF service order changed across requeue/recovery"
+        );
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.accuracy, b.accuracy, "t={}: outcome changed", a.arrival_t);
+        assert_eq!(a.energy_score, b.energy_score);
+        assert!(!b.degraded, "breaker never opened, nothing is degraded");
+    }
+}
+
+/// PR-8 satellite: breaker opens mid-burst under EDF, during a *total*
+/// outage (`exec:1.0` — every execute faults, deterministically; session
+/// setup and bank installs still work because `theta0`/marshal are
+/// untouched).  The first capacity flush fails twice and trips the
+/// breaker; the degraded-serve attempt faults too (it executes on the
+/// same dead backend), so every arrival sheds `BackendUnavailable` — and
+/// the shed order within each poll must still be the EDF pop order.
+/// Half-open probes at later polls re-fail and re-open the breaker.
+#[test]
+fn edf_breaker_trips_mid_burst_and_conserves_the_backlog() {
+    let be = testkit::execution_backend();
+    let plan = FaultPlan::parse("exec:1.0,seed:6").unwrap();
+    let faulty = FaultyBackend::new(be.as_ref(), plan, 2);
+    let rig = Rig::new(&faulty);
+
+    let rows = rig.sess.m.batch_infer / 4;
+    let mut cfg = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        queue_policy: QueuePolicyKind::Edf,
+        ..ServeConfig::default()
+    };
+    cfg.recovery.max_attempts = 1;
+    cfg.recovery.breaker_threshold = 2; // two straight failures trip it
+    cfg.recovery.breaker_cooldown_s = 5.0; // ... and it cools fast
+
+    // events per poll: EDF order is a per-poll property (each capacity
+    // flush pops the earliest deadlines *then queued*; a later poll's
+    // arrivals may be more urgent than an earlier poll's survivors)
+    let mut polls: Vec<Vec<ServeEvent>> = Vec::new();
+    let mut eng = rig.engine(&cfg);
+    for i in 0..16 {
+        let mut req = rig.request(i as f64, 0, rows, i);
+        req.deadline_t = 2000.0 - i as f64; // later arrival = more urgent
+        assert_eq!(eng.on_arrival(req), Admission::Accepted);
+        polls.push(eng.poll(i as f64, &rig.ctx()).unwrap());
+    }
+    // advance virtual time: cooldowns elapse, half-open probes fire (and
+    // re-fail — the outage is total), the breaker re-opens each time
+    let mut t = 60.0;
+    while t <= 100.0 {
+        polls.push(eng.poll(t, &rig.ctx()).unwrap());
+        t += 10.0;
+    }
+    polls.push(eng.drain(1000.0, &rig.ctx()).unwrap());
+
+    assert!(eng.flush_failures() > 0, "a total outage never failed a flush");
+    assert!(
+        eng.breaker_trips() > 0,
+        "two consecutive failures with threshold 2 never opened the breaker"
+    );
+    // conservation through the shed path: nothing serves on a dead
+    // backend (the degraded attempt executes there too), nothing is lost
+    let served_n: usize = polls.iter().map(|evs| served(evs).len()).sum();
+    assert_eq!(served_n, 0, "served through a total outage");
+    assert_eq!(
+        served_n as u64 + eng.requests_dropped(),
+        16,
+        "requests lost across breaker trips"
+    );
+    // every shed batch leaves in EDF (deadline) order: within one poll,
+    // drop arrival times are non-increasing under the inverted mapping
+    for evs in &polls {
+        let dropped: Vec<f64> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                ServeEvent::RequestDropped {
+                    arrival_t,
+                    reason: DropReason::BackendUnavailable,
+                    ..
+                } => Some(*arrival_t),
+                _ => None,
+            })
+            .collect();
+        for w in dropped.windows(2) {
+            assert!(
+                w[0] >= w[1],
+                "EDF lost deadline order in a shed batch: {} before {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
 #[test]
 fn default_config_sweep_is_bit_identical_across_workers() {
     let seeds = [11u64, 12, 13, 14];

@@ -18,12 +18,17 @@
 //! (the `make ci-trace` lane).
 
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
-use etuner::data::benchmarks::Benchmark;
+use etuner::cost::device::DeviceModel;
+use etuner::data::benchmarks::{Benchmark, Scenario};
 use etuner::json::Json;
+use etuner::model::ModelSession;
 use etuner::runtime::{FaultPlan, TracingBackend};
+use etuner::serve::{
+    run_pool, FleetConfig, FleetPoolSpec, QueuedRequest, ServeConfig,
+};
 use etuner::sim::{run_config, run_config_traced, RunConfig, Simulation};
 use etuner::testkit;
-use etuner::trace::{self, Kind, Lane, Tracer};
+use etuner::trace::{self, chrome_trace_fleet, Kind, Lane, Tracer};
 
 fn quick(seed: u64) -> RunConfig {
     let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
@@ -148,6 +153,147 @@ fn report_histograms_reproduce_legacy_percentiles_bit_for_bit() {
     assert!(r.hists.get("serve/batch_rows").is_some());
     let rounds = r.hists.get("tune/round_s").expect("round histogram");
     assert_eq!(rounds.count(), r.rounds);
+}
+
+/// PR-8 satellite: a traced fleet pool run exports one Chrome track per
+/// `(engine, lane)` pair, and both engines' serve lanes actually carry
+/// events (the merged timeline keeps per-engine separation instead of
+/// collapsing the fleet into four shared lanes).
+#[test]
+fn fleet_pool_trace_exports_one_track_per_engine_lane() {
+    let be = testkit::refcpu_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let (d, rows) = (sess.m.d, sess.m.batch_infer / 4);
+    drop(sess);
+
+    let spec = FleetPoolSpec {
+        backend: testkit::refcpu_spec(),
+        model: "mbv2".into(),
+        device: DeviceModel::jetson_nx_15w(),
+        scenarios: (0..2)
+            .map(|s| Scenario {
+                id: s,
+                classes: vec![s],
+                seen: (0..=s).collect(),
+                new_pattern: false,
+            })
+            .collect(),
+        serve: ServeConfig {
+            batch_window_s: 50.0,
+            slo_ms: 1e12,
+            rows_per_request: Some(rows),
+            ..ServeConfig::default()
+        },
+        fleet: FleetConfig { engines: 2, ..FleetConfig::default() },
+        trace: true,
+        faults: FaultPlan::none(),
+        fault_seed: 0,
+    };
+    let wl: Vec<QueuedRequest> = (0..8)
+        .map(|i| QueuedRequest {
+            arrival_t: i as f64,
+            deadline_t: i as f64 + 1e9,
+            scenario: i % 2,
+            stale_batches: 0,
+            x: (0..rows * d)
+                .map(|k| ((i * 13 + k * 7) % 11) as f32 * 0.15 - 0.7)
+                .collect(),
+            y: vec![(i % 2) as i32; rows],
+            rows,
+        })
+        .collect();
+
+    let y = run_pool(&spec, &wl, 500.0, false).unwrap();
+    assert_eq!(y.trace.len(), 2, "one trace batch per engine");
+    assert!(y.trace.iter().all(|t| !t.is_empty()), "an engine went silent");
+
+    let text = chrome_trace_fleet(&y.trace).to_string();
+    let v = Json::parse(&text).expect("fleet chrome export must parse");
+    let evs = v.get("traceEvents").unwrap().arr().unwrap();
+
+    // one thread_name track per (engine, lane), named e{k}/{lane}
+    let mut tracks = Vec::new();
+    for e in evs {
+        if e.get("name").unwrap().str().unwrap() == "thread_name" {
+            tracks.push(
+                e.get("args").unwrap().get("name").unwrap().str().unwrap(),
+            );
+        }
+    }
+    assert_eq!(
+        tracks.len(),
+        2 * Lane::ALL.len(),
+        "expected one named track per (engine, lane): {tracks:?}"
+    );
+    for engine in 0..2 {
+        for lane in Lane::ALL {
+            let want = format!("e{engine}/{}", lane.name());
+            assert!(
+                tracks.iter().any(|t| *t == want),
+                "missing fleet track {want}; got {tracks:?}"
+            );
+        }
+    }
+    // both engines' serve lanes carry real events on their own tids
+    // (engine k's lane block starts at tid k*4+1 with serve-engine)
+    for engine in 0u64..2 {
+        let tid = engine * Lane::ALL.len() as u64 + 1;
+        let n = evs
+            .iter()
+            .filter(|e| {
+                e.get("name").unwrap().str().unwrap() != "thread_name"
+                    && e.opt("tid").and_then(|t| t.num().ok())
+                        == Some(tid as f64)
+            })
+            .count();
+        assert!(n > 0, "engine {engine} has no events on its serve tid {tid}");
+    }
+}
+
+/// PR-8 satellite: tracing stays pure observation under `--fleet`, and
+/// the summary's time-in-state budget scales to N device-horizons — a
+/// fleet of 4 accounts exactly 4x the wall-fleet total of a fleet of 1,
+/// with the tuning ledger identical (rounds run on engine 0 only).
+#[test]
+fn fleet_trace_summary_time_in_state_sums_to_n_device_horizons() {
+    let be = testkit::refcpu_backend();
+    let mut cfg = quick(23);
+    cfg.fleet.engines = 4;
+
+    let plain = run_config(be.as_ref(), cfg.clone()).unwrap();
+    let tracer = Tracer::enabled(trace::DEFAULT_CAPACITY);
+    let traced = run_config_traced(be.as_ref(), cfg, &tracer).unwrap();
+
+    assert_eq!(
+        plain.fingerprint(),
+        traced.fingerprint(),
+        "recording a trace changed a fleet run's scientific output"
+    );
+    // the fleet shares one tracer in the sim path: the serve lane carries
+    // every engine's activity on one interleaved timeline
+    assert!(tracer
+        .events()
+        .iter()
+        .any(|e| e.lane == Lane::Engine && matches!(e.kind, Kind::Span)));
+
+    // time-in-state is worker-independent and budgeted per engine
+    assert_eq!(plain.time_tuning_s.to_bits(), traced.time_tuning_s.to_bits());
+    assert_eq!(
+        plain.time_serving_s.to_bits(),
+        traced.time_serving_s.to_bits()
+    );
+    let one = run_config(be.as_ref(), quick(23)).unwrap();
+    assert_eq!(
+        one.time_tuning_s.to_bits(),
+        plain.time_tuning_s.to_bits(),
+        "tuning runs on engine 0 regardless of fleet size"
+    );
+    let sum1 = one.time_serving_s + one.time_tuning_s + one.time_idle_s;
+    let sum4 = plain.time_serving_s + plain.time_tuning_s + plain.time_idle_s;
+    assert!(
+        (sum4 - 4.0 * sum1).abs() <= 1e-6 * sum1.max(1.0),
+        "fleet time budget is not 4 device-horizons: {sum4} vs 4 x {sum1}"
+    );
 }
 
 #[test]
