@@ -7,6 +7,8 @@
 #   make ci-faults   tier-1 suite again under a fixed nonzero fault plan
 #   make ci-trace    short traced run -> validated Chrome trace JSON
 #   make ci-fleet    fleet lane: --fleet 4 CLI smoke + the fleet test battery
+#   make ci-crash    durability lane: crash-inject CLI smoke (exit 3 ->
+#                    --resume) + the crash/recovery test battery
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
 #   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
@@ -17,7 +19,7 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci ci-faults ci-trace ci-fleet bench \
+.PHONY: artifacts build test ci ci-faults ci-trace ci-fleet ci-crash bench \
 	bench-gemm bench-snapshot repro
 
 artifacts:
@@ -81,6 +83,25 @@ ci-fleet:
 		--requests 80 --seed 1 --fleet 4
 	cd rust && cargo test -q --release --test fleet --test trace \
 		--test serving_engine
+
+# Durability lane (PR 9): a CLI run with a deterministic crash point must
+# die with exit code 3 after writing its checkpoint records, and the same
+# command with --resume must complete from them; then the crash/recovery
+# battery — bit-identical resume from a crash at every round boundary,
+# checksum-detected corruption falling back to the previous record, the
+# sweep-cell journal, and the zero-overhead-when-disabled pin.
+ci-crash:
+	cd rust && rm -rf /tmp/etuner_ci_crash && \
+		{ cargo run --release -q -- run --model mbv2 \
+			--benchmark scifar10 --tune lazytune --freeze simfreeze \
+			--requests 80 --seed 1 --faults crash:after-round-2 \
+			--checkpoint-dir /tmp/etuner_ci_crash; \
+		  test $$? -eq 3 || { echo "expected exit code 3"; exit 1; } ; }
+	cd rust && cargo run --release -q -- run --model mbv2 \
+		--benchmark scifar10 --tune lazytune --freeze simfreeze \
+		--requests 80 --seed 1 --faults crash:after-round-2 \
+		--resume /tmp/etuner_ci_crash
+	cd rust && cargo test -q --release --test crash_recovery
 
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \

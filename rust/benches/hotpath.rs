@@ -640,6 +640,47 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(sink);
     }
 
+    // ---- checkpoint: disabled layer vs every-round durable records --------
+    // One full quickstart simulation on the executing refcpu backend, run
+    // with checkpointing off (the default — constructs nothing, the exact
+    // pre-checkpoint code path) and then with a checkpoint directory at
+    // the densest cadence (a snapshot every round).  The "off" row is the
+    // zero-overhead claim; the "on" row prices serialization + fsync-free
+    // atomic rename per round boundary.
+    if section("checkpoint") {
+        use etuner::sim::{run_config, RunConfig};
+        let mk = || {
+            let mut cfg = RunConfig::quickstart("mbv2", Benchmark::Nc);
+            cfg.n_requests = 40;
+            cfg.seed = 7;
+            cfg
+        };
+        let mut sink = 0usize;
+        report(
+            "checkpoint: off (40 reqs)",
+            bench(1, 3, || {
+                let r = run_config(refcpu.as_ref(), mk()).unwrap();
+                sink += r.requests.len();
+            }),
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("etuner-bench-ckpt-{}", std::process::id()));
+        let mut written = 0u64;
+        report(
+            "checkpoint: every round (40 reqs)",
+            bench(1, 3, || {
+                let mut cfg = mk();
+                cfg.checkpoint.dir = Some(dir.clone());
+                let r = run_config(refcpu.as_ref(), cfg).unwrap();
+                written = r.checkpoints_written;
+                sink += r.requests.len();
+            }),
+        );
+        eprintln!("  [checkpoint on] {written} records per run");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::hint::black_box(sink);
+    }
+
     // ---- refcpu model series (executes everywhere, CI included) -----------
     if section("refcpu") {
         model_series(refcpu.as_ref(), "refcpu ", &mut rng, &mut report)?;

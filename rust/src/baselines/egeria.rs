@@ -128,6 +128,47 @@ impl FreezePolicy for Egeria {
         }
         Ok(())
     }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bools(&self.state.frozen);
+        w.usize(self.last_cka.len());
+        for &c in &self.last_cka {
+            w.opt_f32(c);
+        }
+        match &self.probe {
+            Some(p) => {
+                w.bool(true);
+                w.f32s(p);
+            }
+            None => w.bool(false),
+        }
+        w.u64(self.since);
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        sess: &ModelSession,
+    ) -> Result<()> {
+        self.state.frozen = r.bools()?;
+        let n = r.usize()?;
+        let mut last_cka = Vec::with_capacity(n);
+        for _ in 0..n {
+            last_cka.push(r.opt_f32()?);
+        }
+        self.last_cka = last_cka;
+        if r.bool()? {
+            let p = r.f32s()?;
+            // ref_feats is derived: recompute on the restored probe.
+            self.ref_feats = Some(sess.features(&self.ref_params, &p)?);
+            self.probe = Some(p);
+        } else {
+            self.ref_feats = None;
+            self.probe = None;
+        }
+        self.since = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

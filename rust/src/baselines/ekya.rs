@@ -121,6 +121,37 @@ impl FreezePolicy for Ekya {
         }
         Ok(())
     }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bools(&self.state.frozen);
+        match &self.trial {
+            Some(t) => {
+                w.bool(true);
+                w.usize(t.idx);
+                w.usize(t.rounds_in_trial);
+                w.f64s(&t.results);
+            }
+            None => w.bool(false),
+        }
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        _sess: &ModelSession,
+    ) -> Result<()> {
+        self.state.frozen = r.bools()?;
+        self.trial = if r.bool()? {
+            Some(TrialState {
+                idx: r.usize()?,
+                rounds_in_trial: r.usize()?,
+                results: r.f64s()?,
+            })
+        } else {
+            None
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -140,6 +140,37 @@ impl FreezePolicy for RigL {
     fn compute_inefficiency(&self) -> f64 {
         ((1.0 - self.sparsity as f64) * INEFFICIENCY).min(1.0)
     }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bools(&self.state.frozen);
+        w.bools(&self.mask);
+        w.u64(self.since);
+        match &self.prev {
+            Some(p) => {
+                w.bool(true);
+                w.f32s(p);
+            }
+            None => w.bool(false),
+        }
+        let (s, i) = self.rng.state();
+        w.u64(s);
+        w.u64(i);
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        _sess: &ModelSession,
+    ) -> Result<()> {
+        self.state.frozen = r.bools()?;
+        self.mask = r.bools()?;
+        self.since = r.u64()?;
+        self.prev = if r.bool()? { Some(r.f32s()?) } else { None };
+        let s = r.u64()?;
+        let i = r.u64()?;
+        self.rng = Pcg32::from_state(s, i);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

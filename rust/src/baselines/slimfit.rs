@@ -88,6 +88,35 @@ impl FreezePolicy for SlimFit {
         self.snapshot = Some(params.clone());
         Ok(())
     }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bools(&self.state.frozen);
+        w.u64(self.since);
+        match &self.snapshot {
+            Some(p) => {
+                w.bool(true);
+                w.f32s(p.theta());
+            }
+            None => w.bool(false),
+        }
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        _sess: &ModelSession,
+    ) -> Result<()> {
+        self.state.frozen = r.bools()?;
+        self.since = r.u64()?;
+        self.snapshot = if r.bool()? {
+            // the snapshot is only ever read host-side (delta norms), so a
+            // fresh Params identity is fine.
+            Some(Params::from_vec(r.f32s()?))
+        } else {
+            None
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,1487 @@
+//! Crash-durable checkpointing and recovery (PR 9).
+//!
+//! The simulation is deterministic: every draw derives from `(benchmark,
+//! seed)` through seeded [`Pcg32`] streams, and fine-tuning **round
+//! boundaries are quiesce points** — the batch buffer was just drained by
+//! the round, every serve queue was drained before the round was allowed
+//! to proceed, injected spike delay was consumed, and pending bank
+//! installs were absorbed.  A snapshot of the mutable state taken exactly
+//! there, plus the index of the last fully-processed stream event, is
+//! therefore enough to reconstruct the run *bit-identically*: the resumed
+//! process re-derives everything static (stream events, schedule, probes)
+//! from the config, restores the mutable state, and re-executes the
+//! remaining events — by induction the scientific fingerprint equals the
+//! uncrashed run's.
+//!
+//! # On-disk layout (`--checkpoint-dir`)
+//!
+//! * `snapshot.bin` — one framed record, rewritten atomically (temp file +
+//!   rename) every `--checkpoint-every` (`Nr` rounds / `Ss` virtual
+//!   seconds; default `1r`).
+//! * `snapshot.prev.bin` — the previous snapshot, rotated aside before
+//!   each overwrite: the fallback target when the newest record is
+//!   corrupt.
+//! * `journal.bin` — append-only framed records for the round boundaries
+//!   *between* snapshots; truncated whenever a new snapshot lands.  A
+//!   record is a full self-contained state (not a delta), so "replay" =
+//!   apply the newest valid record.
+//!
+//! Every record is framed `[magic][round][len][fnv64][payload]`; a torn
+//! tail or flipped bit fails the checksum and recovery falls back to the
+//! next-newest valid record, counting a fallback.  The fault grammar
+//! (`--faults`) drives both deterministic crashes (`crash:after-round-N`,
+//! `crash:t=S`, seeded `crash:R` — evaluated by the simulation at round
+//! boundaries, *after* the boundary's record is written) and checkpoint
+//! corruption (`ckpt-flip:N`, `ckpt-torn:N` — applied by
+//! [`CheckpointWriter`] to the Nth record it frames).
+//!
+//! With no `--checkpoint-dir` (the default) none of this is constructed:
+//! the run takes the exact pre-PR-9 path and reports stay bit-identical.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::hist::{HistRegistry, Histogram};
+use crate::metrics::{Report, RequestRecord, RoundRecord, ScenarioLatency};
+use crate::rng::Pcg32;
+use crate::runtime::FaultPlan;
+
+// ---------------------------------------------------------------------------
+// byte codec
+// ---------------------------------------------------------------------------
+
+/// Little-endian append-only byte sink for checkpoint payloads.  Floats
+/// serialize via `to_bits`, so round-trips are bit-exact.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    pub fn bools(&mut self, v: &[bool]) {
+        self.usize(v.len());
+        for &x in v {
+            self.bool(x);
+        }
+    }
+
+    pub fn opt_f32(&mut self, v: Option<f32>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f32(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.usize(x);
+            }
+            None => self.bool(false),
+        }
+    }
+}
+
+/// Cursor over a checkpoint payload; every read is bounds-checked so a
+/// truncated or foreign blob surfaces as an error, never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "checkpoint payload truncated: need {n} bytes at offset {}, \
+                 have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes_raw()?;
+        String::from_utf8(b.to_vec()).context("checkpoint string not utf-8")
+    }
+
+    fn bytes_raw(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        Ok(self.bytes_raw()?.to_vec())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    pub fn bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.usize()?;
+        (0..n).map(|_| self.bool()).collect()
+    }
+
+    pub fn opt_f32(&mut self) -> Result<Option<f32>> {
+        Ok(if self.bool()? { Some(self.f32()?) } else { None })
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+        Ok(if self.bool()? { Some(self.usize()?) } else { None })
+    }
+
+    /// Every byte consumed?  A payload with trailing garbage is a format
+    /// skew (old binary reading a new checkpoint) and must be rejected.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "checkpoint payload has {} unread trailing bytes",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over a byte slice — same constants as
+/// [`Report::fingerprint`], reused as the record checksum.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// framed records
+// ---------------------------------------------------------------------------
+
+/// Frame magic: "ETK1".
+const MAGIC: u32 = 0x314B_5445;
+/// Frame header: magic(4) + round(8) + len(8) + checksum(8).
+const HEADER_LEN: usize = 28;
+
+/// Frame one record: `[magic][round][len][fnv64(payload)][payload]`.
+/// `round` doubles as the sweep journal's cell digest.
+pub fn frame(round: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// One checksum-valid record recovered from a file.
+pub struct ScannedRecord {
+    pub round: u64,
+    pub payload: Vec<u8>,
+}
+
+/// All records scanned out of one file, in file (write) order.
+pub struct ScanOutcome {
+    pub records: Vec<ScannedRecord>,
+    /// Frames that failed validation: bad checksum (bit flip), bad magic,
+    /// or a torn tail (partial final frame).
+    pub bad: u64,
+}
+
+/// Walk a record file front to back.  A checksum failure on an intact
+/// frame skips just that record (frame boundaries survive bit flips); a
+/// torn tail or corrupted header ends the scan.
+pub fn scan(bytes: &[u8]) -> ScanOutcome {
+    let mut records = Vec::new();
+    let mut bad = 0u64;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        if pos + HEADER_LEN > bytes.len() {
+            bad += 1; // torn header
+            break;
+        }
+        let word =
+            |i: usize| u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+        let magic =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        if magic != MAGIC {
+            bad += 1; // lost framing: cannot resync reliably
+            break;
+        }
+        let round = word(pos + 4);
+        let len = word(pos + 12) as usize;
+        let sum = word(pos + 20);
+        let start = pos + HEADER_LEN;
+        if start + len > bytes.len() {
+            bad += 1; // torn payload
+            break;
+        }
+        let payload = &bytes[start..start + len];
+        if fnv64(payload) == sum {
+            records.push(ScannedRecord { round, payload: payload.to_vec() });
+        } else {
+            bad += 1; // bit flip
+        }
+        pos = start + len;
+    }
+    ScanOutcome { records, bad }
+}
+
+/// Read a record file, treating a missing file as empty.
+fn scan_file(path: &Path) -> Result<ScanOutcome> {
+    match fs::read(path) {
+        Ok(bytes) => Ok(scan(&bytes)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Ok(ScanOutcome { records: Vec::new(), bad: 0 })
+        }
+        Err(e) => {
+            Err(e).with_context(|| format!("reading {}", path.display()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint writer
+// ---------------------------------------------------------------------------
+
+pub const SNAPSHOT: &str = "snapshot.bin";
+pub const SNAPSHOT_PREV: &str = "snapshot.prev.bin";
+pub const JOURNAL: &str = "journal.bin";
+
+/// Snapshot cadence: `Nr` = every N fine-tuning rounds, `Ss` = every S
+/// virtual seconds.  Boundaries between snapshots go to the journal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Cadence {
+    Rounds(u64),
+    Seconds(f64),
+}
+
+impl Default for Cadence {
+    fn default() -> Self {
+        Cadence::Rounds(1)
+    }
+}
+
+impl Cadence {
+    /// Parse the `--checkpoint-every` grammar: `3r` / `120s`.
+    pub fn parse(s: &str) -> Result<Cadence> {
+        let s = s.trim();
+        if let Some(n) =
+            s.strip_suffix('r').or_else(|| s.strip_suffix('R'))
+        {
+            let n: u64 = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad round count {n:?}"))?;
+            if n == 0 {
+                bail!("checkpoint cadence needs >= 1 round");
+            }
+            return Ok(Cadence::Rounds(n));
+        }
+        if let Some(v) =
+            s.strip_suffix('s').or_else(|| s.strip_suffix('S'))
+        {
+            let v: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad seconds {v:?}"))?;
+            if v <= 0.0 {
+                bail!("checkpoint cadence needs > 0 seconds");
+            }
+            return Ok(Cadence::Seconds(v));
+        }
+        bail!(
+            "bad checkpoint cadence {s:?} (expected Nr rounds or Ss virtual \
+             seconds, e.g. 3r or 120s)"
+        )
+    }
+}
+
+impl fmt::Display for Cadence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Cadence::Rounds(n) => write!(f, "{n}r"),
+            Cadence::Seconds(s) => write!(f, "{s}s"),
+        }
+    }
+}
+
+/// Checkpointing knobs carried on `RunConfig`.  The default (`dir: None`)
+/// disables the subsystem entirely.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CheckpointConfig {
+    /// Checkpoint directory (`--checkpoint-dir`); `None` = off.
+    pub dir: Option<PathBuf>,
+    /// Snapshot cadence (`--checkpoint-every`, default `1r`).
+    pub every: Cadence,
+    /// Entry came through `--resume`: restore from `dir` before running.
+    pub resume: bool,
+}
+
+/// Writes one framed record per round boundary: snapshots on the cadence
+/// (atomic temp-file + rename, previous snapshot rotated to
+/// [`SNAPSHOT_PREV`], journal truncated), journal appends in between.
+/// Applies the plan's `ckpt-flip`/`ckpt-torn` corruption to the Nth
+/// record framed, counting every record through this writer.
+pub struct CheckpointWriter {
+    dir: PathBuf,
+    every: Cadence,
+    flip: u64,
+    torn: u64,
+    /// Records framed so far (ordinal for corruption targeting).
+    framed: u64,
+    last_snapshot_round: Option<u64>,
+    last_snapshot_t: f64,
+    /// Counters surfaced on the report (fingerprint-excluded).
+    pub written: u64,
+    pub bytes: u64,
+}
+
+impl CheckpointWriter {
+    pub fn new(
+        dir: &Path,
+        every: Cadence,
+        plan: &FaultPlan,
+    ) -> Result<CheckpointWriter> {
+        fs::create_dir_all(dir).with_context(|| {
+            format!("creating checkpoint dir {}", dir.display())
+        })?;
+        Ok(CheckpointWriter {
+            dir: dir.to_path_buf(),
+            every,
+            flip: plan.ckpt_flip,
+            torn: plan.ckpt_torn,
+            framed: 0,
+            last_snapshot_round: None,
+            last_snapshot_t: f64::NEG_INFINITY,
+            written: 0,
+            bytes: 0,
+        })
+    }
+
+    fn snapshot_due(&self, round: u64, t: f64) -> bool {
+        match self.every {
+            Cadence::Rounds(n) => match self.last_snapshot_round {
+                None => true,
+                Some(last) => round.saturating_sub(last) >= n,
+            },
+            Cadence::Seconds(s) => {
+                self.last_snapshot_round.is_none()
+                    || t - self.last_snapshot_t >= s
+            }
+        }
+    }
+
+    /// Frame + scheduled corruption.  `ckpt-flip:N` flips one payload bit
+    /// of the Nth record; `ckpt-torn:N` truncates its write midway —
+    /// both leave earlier records intact so recovery can fall back.
+    fn frame_corrupted(&mut self, round: u64, payload: &[u8]) -> Vec<u8> {
+        let mut f = frame(round, payload);
+        self.framed += 1;
+        if self.flip == self.framed {
+            let mid = HEADER_LEN + payload.len() / 2;
+            f[mid.min(f.len() - 1)] ^= 0x10;
+        }
+        if self.torn == self.framed {
+            f.truncate(HEADER_LEN.min(f.len() / 2).max(1));
+        }
+        f
+    }
+
+    /// Persist one round boundary's state.  Returns the bytes written.
+    pub fn on_boundary(
+        &mut self,
+        round: u64,
+        t: f64,
+        payload: &[u8],
+    ) -> Result<u64> {
+        let n = if self.snapshot_due(round, t) {
+            let f = self.frame_corrupted(round, payload);
+            let tmp = self.dir.join("snapshot.tmp");
+            let snap = self.dir.join(SNAPSHOT);
+            fs::write(&tmp, &f).with_context(|| {
+                format!("writing {}", tmp.display())
+            })?;
+            if snap.exists() {
+                fs::rename(&snap, self.dir.join(SNAPSHOT_PREV))
+                    .context("rotating previous snapshot")?;
+            }
+            fs::rename(&tmp, &snap).context("installing snapshot")?;
+            // the journal's records are all older than the snapshot now
+            fs::write(self.dir.join(JOURNAL), [])
+                .context("truncating journal")?;
+            self.last_snapshot_round = Some(round);
+            self.last_snapshot_t = t;
+            f.len() as u64
+        } else {
+            let f = self.frame_corrupted(round, payload);
+            let mut file = fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(self.dir.join(JOURNAL))
+                .context("opening journal")?;
+            file.write_all(&f).context("appending journal record")?;
+            f.len() as u64
+        };
+        self.written += 1;
+        self.bytes += n;
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// recovery
+// ---------------------------------------------------------------------------
+
+/// The state chosen by [`recover`]: the newest checksum-valid record.
+pub struct Recovered {
+    pub round: u64,
+    pub payload: Vec<u8>,
+    /// Corrupt newer candidates skipped to reach this record (torn writes
+    /// + bit flips) — surfaced as `Report::checkpoint_fallbacks`.
+    pub fallbacks: u64,
+}
+
+/// Pick the newest valid record: journal tail first (those are newer than
+/// any snapshot — the journal is truncated when a snapshot lands), then
+/// `snapshot.bin`, then `snapshot.prev.bin`.  Every corrupt candidate
+/// newer than the chosen one counts as a fallback.
+pub fn recover(dir: &Path) -> Result<Recovered> {
+    let mut fallbacks = 0u64;
+    let journal = scan_file(&dir.join(JOURNAL))?;
+    fallbacks += journal.bad;
+    if let Some(rec) = journal.records.into_iter().last() {
+        return Ok(Recovered {
+            round: rec.round,
+            payload: rec.payload,
+            fallbacks,
+        });
+    }
+    for name in [SNAPSHOT, SNAPSHOT_PREV] {
+        let snap = scan_file(&dir.join(name))?;
+        fallbacks += snap.bad;
+        if let Some(rec) = snap.records.into_iter().last() {
+            return Ok(Recovered {
+                round: rec.round,
+                payload: rec.payload,
+                fallbacks,
+            });
+        }
+    }
+    bail!(
+        "no valid checkpoint record in {} ({} corrupt candidate(s))",
+        dir.display(),
+        fallbacks
+    )
+}
+
+// ---------------------------------------------------------------------------
+// crash injection
+// ---------------------------------------------------------------------------
+
+/// Salt for the dedicated crash-decision stream (never collides with the
+/// backend fault stream or any data stream).
+const CRASH_SEED_SALT: u64 = 0xC4A5_0FF1_CE5A_17ED;
+
+/// Typed error returned by `Simulation::run` when a crash point fires;
+/// the CLI downcasts it to map onto a distinct exit code.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashInjected {
+    pub round: u64,
+    pub t: f64,
+}
+
+impl fmt::Display for CrashInjected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected crash at round {} (t={:.3}s); resume with \
+             --resume <checkpoint-dir>",
+            self.round, self.t
+        )
+    }
+}
+
+impl std::error::Error for CrashInjected {}
+
+/// Crash-point evaluator, consulted by the simulation at every round
+/// boundary.  One-shot points (`after-round-N`, `t=S`) latch after
+/// firing; the latches and the rate stream's RNG are part of the
+/// checkpoint payload — written *post-draw*, so a resumed run never
+/// re-fires the crash that killed it.
+#[derive(Clone, Debug)]
+pub struct CrashState {
+    after_round: u64,
+    t_at: f64,
+    rate: f64,
+    rng: Pcg32,
+    round_fired: bool,
+    t_fired: bool,
+}
+
+impl CrashState {
+    pub fn new(plan: &FaultPlan, run_seed: u64) -> CrashState {
+        let seed = run_seed
+            ^ plan.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ CRASH_SEED_SALT;
+        CrashState {
+            after_round: plan.crash_after_round,
+            t_at: plan.crash_t,
+            rate: plan.crash_rate,
+            rng: Pcg32::new(seed, 0xC4A5),
+            round_fired: false,
+            t_fired: false,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.after_round > 0 || self.t_at >= 0.0 || self.rate > 0.0
+    }
+
+    /// Decide at one round boundary.  Consumes the one-shot latches and
+    /// advances the rate stream; call exactly once per boundary, *before*
+    /// serializing this state into the boundary's record.
+    pub fn check(&mut self, round: u64, t: f64) -> bool {
+        let mut fire = false;
+        if self.after_round > 0 && !self.round_fired && round >= self.after_round
+        {
+            self.round_fired = true;
+            fire = true;
+        }
+        if self.t_at >= 0.0 && !self.t_fired && t >= self.t_at {
+            self.t_fired = true;
+            fire = true;
+        }
+        if self.rate > 0.0 && self.rng.f64() < self.rate {
+            fire = true;
+        }
+        fire
+    }
+
+    pub fn save(&self, w: &mut ByteWriter) {
+        w.bool(self.round_fired);
+        w.bool(self.t_fired);
+        let (s, i) = self.rng.state();
+        w.u64(s);
+        w.u64(i);
+    }
+
+    pub fn load(&mut self, r: &mut ByteReader) -> Result<()> {
+        self.round_fired = r.bool()?;
+        self.t_fired = r.bool()?;
+        let s = r.u64()?;
+        let i = r.u64()?;
+        self.rng = Pcg32::from_state(s, i);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// config digest
+// ---------------------------------------------------------------------------
+
+/// Stable digest of a run's *scientific* configuration: keys sweep-journal
+/// cells and validates that `--resume` repeats the original flags.  The
+/// checkpoint knobs themselves are neutralized first — where the state is
+/// persisted must not change what run it belongs to.  Everything else
+/// (model, benchmark, policies, seed, arrivals, device, serve/fleet
+/// knobs, fault spec) participates via the config's `Debug` rendering,
+/// which round-trips floats exactly.
+pub fn config_digest(cfg: &crate::sim::RunConfig) -> u64 {
+    let mut c = cfg.clone();
+    c.checkpoint = CheckpointConfig::default();
+    fnv64(format!("{c:?}").as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// sweep journal
+// ---------------------------------------------------------------------------
+
+/// Append-only journal of completed sweep cells: one framed record per
+/// cell, keyed by [`config_digest`] (stored in the frame's round slot)
+/// with the cell's full [`Report`] as payload.  `ParallelSweeper` resumes
+/// a grid by skipping cells whose digest already has a valid record.
+pub struct SweepJournal {
+    path: PathBuf,
+}
+
+impl SweepJournal {
+    pub fn new(path: &Path) -> SweepJournal {
+        SweepJournal { path: path.to_path_buf() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Digest → report for every valid record (later records win, so a
+    /// re-run cell overrides).  Corrupt/torn records are simply skipped —
+    /// their cells re-run.
+    pub fn load(&self) -> Result<Vec<(u64, Report)>> {
+        let scan = scan_file(&self.path)?;
+        let mut out: Vec<(u64, Report)> = Vec::new();
+        for rec in scan.records {
+            if let Ok(report) = report_load_bytes(&rec.payload) {
+                out.retain(|(d, _)| *d != rec.round);
+                out.push((rec.round, report));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Append one completed cell.
+    pub fn record(&self, digest: u64, report: &Report) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = ByteWriter::new();
+        report_save(report, &mut w);
+        let f = frame(digest, &w.into_vec());
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| {
+                format!("opening sweep journal {}", self.path.display())
+            })?;
+        file.write_all(&f).context("appending sweep journal record")?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report codec
+// ---------------------------------------------------------------------------
+
+/// Serialize an in-progress or finished [`Report`] bit-exactly.  The
+/// destructuring has NO `..` rest pattern on purpose: adding a `Report`
+/// field fails to compile here until the codec handles it — the same
+/// census discipline `report_field_census_is_exhaustive` enforces for the
+/// fingerprint.
+pub fn report_save(r: &Report, w: &mut ByteWriter) {
+    #[rustfmt::skip]
+    let Report {
+        model, benchmark, tune_policy, freeze_policy, seed,
+        avg_inference_accuracy, energy, rounds, train_iterations,
+        train_tflops, cka_tflops, scenario_changes_detected, requests,
+        round_log, memory_begin_bytes, memory_end_bytes, wall_exec_s,
+        cka_trace, theta_marshals, theta_cache_hits, serving_rebuilds,
+        serving_hits, gemm_packs, gemm_pack_hits, scratch_allocs,
+        scratch_reuses, scratch_bytes_reused, latency_p50_ms,
+        latency_p95_ms, latency_p99_ms, latency_mean_ms, latency_max_ms,
+        slo_ms, slo_violations, serve_executes, avg_batch_requests,
+        peak_queue_depth, rounds_deferred, queue_policy, requests_dropped,
+        drops_queue_full, drops_slo_infeasible, deadline_misses,
+        bank_evictions, banks_peak_resident, per_scenario_latency,
+        faults_injected_exec, faults_injected_marshal,
+        faults_injected_spikes, fault_delay_injected_s, serve_retries,
+        serve_flush_failures, breaker_trips, degraded_serves,
+        drops_backend_unavailable, round_rollbacks, fleet_engines,
+        fleet_routed_affinity, fleet_routed_least_loaded,
+        fleet_cross_engine_retries, fleet_rebalances, checkpoints_written,
+        checkpoint_bytes, checkpoint_restores, checkpoint_fallbacks,
+        time_serving_s, time_tuning_s, time_idle_s, hists,
+    } = r;
+    w.str(model);
+    w.str(benchmark);
+    w.str(tune_policy);
+    w.str(freeze_policy);
+    w.u64(*seed);
+    w.f64(*avg_inference_accuracy);
+    w.f64(energy.init_s);
+    w.f64(energy.loadsave_s);
+    w.f64(energy.compute_s);
+    w.f64(energy.init_j);
+    w.f64(energy.loadsave_j);
+    w.f64(energy.compute_j);
+    w.u64(*rounds);
+    w.u64(*train_iterations);
+    w.f64(*train_tflops);
+    w.f64(*cka_tflops);
+    w.u64(*scenario_changes_detected);
+    w.usize(requests.len());
+    for q in requests {
+        let RequestRecord {
+            t,
+            scenario,
+            accuracy,
+            stale_batches,
+            latency_s,
+            batch_requests,
+            queue_depth,
+            degraded,
+        } = q;
+        w.f64(*t);
+        w.usize(*scenario);
+        w.f32(*accuracy);
+        w.usize(*stale_batches);
+        w.f64(*latency_s);
+        w.usize(*batch_requests);
+        w.usize(*queue_depth);
+        w.bool(*degraded);
+    }
+    w.usize(round_log.len());
+    for q in round_log {
+        let RoundRecord {
+            t,
+            scenario,
+            batches,
+            iterations,
+            batches_needed,
+            val_acc,
+            frozen_units,
+        } = q;
+        w.f64(*t);
+        w.usize(*scenario);
+        w.usize(*batches);
+        w.u64(*iterations);
+        w.usize(*batches_needed);
+        w.f64(*val_acc);
+        w.usize(*frozen_units);
+    }
+    w.f64(*memory_begin_bytes);
+    w.f64(*memory_end_bytes);
+    w.f64(*wall_exec_s);
+    w.usize(cka_trace.len());
+    for s in cka_trace {
+        w.u64(s.iteration);
+        w.usize(s.layer);
+        w.f32(s.cka);
+    }
+    w.u64(*theta_marshals);
+    w.u64(*theta_cache_hits);
+    w.u64(*serving_rebuilds);
+    w.u64(*serving_hits);
+    w.u64(*gemm_packs);
+    w.u64(*gemm_pack_hits);
+    w.u64(*scratch_allocs);
+    w.u64(*scratch_reuses);
+    w.u64(*scratch_bytes_reused);
+    w.f64(*latency_p50_ms);
+    w.f64(*latency_p95_ms);
+    w.f64(*latency_p99_ms);
+    w.f64(*latency_mean_ms);
+    w.f64(*latency_max_ms);
+    w.f64(*slo_ms);
+    w.u64(*slo_violations);
+    w.u64(*serve_executes);
+    w.f64(*avg_batch_requests);
+    w.u64(*peak_queue_depth);
+    w.u64(*rounds_deferred);
+    w.str(queue_policy);
+    w.u64(*requests_dropped);
+    w.u64(*drops_queue_full);
+    w.u64(*drops_slo_infeasible);
+    w.u64(*deadline_misses);
+    w.u64(*bank_evictions);
+    w.u64(*banks_peak_resident);
+    w.usize(per_scenario_latency.len());
+    for s in per_scenario_latency {
+        let ScenarioLatency {
+            scenario,
+            requests,
+            mean_ms,
+            p95_ms,
+            max_ms,
+            deadline_misses,
+        } = s;
+        w.usize(*scenario);
+        w.u64(*requests);
+        w.f64(*mean_ms);
+        w.f64(*p95_ms);
+        w.f64(*max_ms);
+        w.u64(*deadline_misses);
+    }
+    w.u64(*faults_injected_exec);
+    w.u64(*faults_injected_marshal);
+    w.u64(*faults_injected_spikes);
+    w.f64(*fault_delay_injected_s);
+    w.u64(*serve_retries);
+    w.u64(*serve_flush_failures);
+    w.u64(*breaker_trips);
+    w.u64(*degraded_serves);
+    w.u64(*drops_backend_unavailable);
+    w.u64(*round_rollbacks);
+    w.u64(*fleet_engines);
+    w.u64(*fleet_routed_affinity);
+    w.u64(*fleet_routed_least_loaded);
+    w.u64(*fleet_cross_engine_retries);
+    w.u64(*fleet_rebalances);
+    w.u64(*checkpoints_written);
+    w.u64(*checkpoint_bytes);
+    w.u64(*checkpoint_restores);
+    w.u64(*checkpoint_fallbacks);
+    w.f64(*time_serving_s);
+    w.f64(*time_tuning_s);
+    w.f64(*time_idle_s);
+    // histograms: persist the exact samples per key; re-recording them in
+    // order rebuilds identical buckets and max by construction.
+    let keys: Vec<&str> = hists.keys().collect();
+    w.usize(keys.len());
+    for k in keys {
+        w.str(k);
+        w.f64s(hists.get(k).map(|h| h.samples()).unwrap_or(&[]));
+    }
+}
+
+/// Inverse of [`report_save`].
+pub fn report_load(r: &mut ByteReader) -> Result<Report> {
+    let mut out = Report::default();
+    out.model = r.str()?;
+    out.benchmark = r.str()?;
+    out.tune_policy = r.str()?;
+    out.freeze_policy = r.str()?;
+    out.seed = r.u64()?;
+    out.avg_inference_accuracy = r.f64()?;
+    out.energy.init_s = r.f64()?;
+    out.energy.loadsave_s = r.f64()?;
+    out.energy.compute_s = r.f64()?;
+    out.energy.init_j = r.f64()?;
+    out.energy.loadsave_j = r.f64()?;
+    out.energy.compute_j = r.f64()?;
+    out.rounds = r.u64()?;
+    out.train_iterations = r.u64()?;
+    out.train_tflops = r.f64()?;
+    out.cka_tflops = r.f64()?;
+    out.scenario_changes_detected = r.u64()?;
+    let n = r.usize()?;
+    out.requests = (0..n)
+        .map(|_| -> Result<RequestRecord> {
+            Ok(RequestRecord {
+                t: r.f64()?,
+                scenario: r.usize()?,
+                accuracy: r.f32()?,
+                stale_batches: r.usize()?,
+                latency_s: r.f64()?,
+                batch_requests: r.usize()?,
+                queue_depth: r.usize()?,
+                degraded: r.bool()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let n = r.usize()?;
+    out.round_log = (0..n)
+        .map(|_| -> Result<RoundRecord> {
+            Ok(RoundRecord {
+                t: r.f64()?,
+                scenario: r.usize()?,
+                batches: r.usize()?,
+                iterations: r.u64()?,
+                batches_needed: r.usize()?,
+                val_acc: r.f64()?,
+                frozen_units: r.usize()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    out.memory_begin_bytes = r.f64()?;
+    out.memory_end_bytes = r.f64()?;
+    out.wall_exec_s = r.f64()?;
+    let n = r.usize()?;
+    out.cka_trace = (0..n)
+        .map(|_| -> Result<crate::coordinator::simfreeze::CkaSample> {
+            Ok(crate::coordinator::simfreeze::CkaSample {
+                iteration: r.u64()?,
+                layer: r.usize()?,
+                cka: r.f32()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    out.theta_marshals = r.u64()?;
+    out.theta_cache_hits = r.u64()?;
+    out.serving_rebuilds = r.u64()?;
+    out.serving_hits = r.u64()?;
+    out.gemm_packs = r.u64()?;
+    out.gemm_pack_hits = r.u64()?;
+    out.scratch_allocs = r.u64()?;
+    out.scratch_reuses = r.u64()?;
+    out.scratch_bytes_reused = r.u64()?;
+    out.latency_p50_ms = r.f64()?;
+    out.latency_p95_ms = r.f64()?;
+    out.latency_p99_ms = r.f64()?;
+    out.latency_mean_ms = r.f64()?;
+    out.latency_max_ms = r.f64()?;
+    out.slo_ms = r.f64()?;
+    out.slo_violations = r.u64()?;
+    out.serve_executes = r.u64()?;
+    out.avg_batch_requests = r.f64()?;
+    out.peak_queue_depth = r.u64()?;
+    out.rounds_deferred = r.u64()?;
+    out.queue_policy = r.str()?;
+    out.requests_dropped = r.u64()?;
+    out.drops_queue_full = r.u64()?;
+    out.drops_slo_infeasible = r.u64()?;
+    out.deadline_misses = r.u64()?;
+    out.bank_evictions = r.u64()?;
+    out.banks_peak_resident = r.u64()?;
+    let n = r.usize()?;
+    out.per_scenario_latency = (0..n)
+        .map(|_| -> Result<ScenarioLatency> {
+            Ok(ScenarioLatency {
+                scenario: r.usize()?,
+                requests: r.u64()?,
+                mean_ms: r.f64()?,
+                p95_ms: r.f64()?,
+                max_ms: r.f64()?,
+                deadline_misses: r.u64()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    out.faults_injected_exec = r.u64()?;
+    out.faults_injected_marshal = r.u64()?;
+    out.faults_injected_spikes = r.u64()?;
+    out.fault_delay_injected_s = r.f64()?;
+    out.serve_retries = r.u64()?;
+    out.serve_flush_failures = r.u64()?;
+    out.breaker_trips = r.u64()?;
+    out.degraded_serves = r.u64()?;
+    out.drops_backend_unavailable = r.u64()?;
+    out.round_rollbacks = r.u64()?;
+    out.fleet_engines = r.u64()?;
+    out.fleet_routed_affinity = r.u64()?;
+    out.fleet_routed_least_loaded = r.u64()?;
+    out.fleet_cross_engine_retries = r.u64()?;
+    out.fleet_rebalances = r.u64()?;
+    out.checkpoints_written = r.u64()?;
+    out.checkpoint_bytes = r.u64()?;
+    out.checkpoint_restores = r.u64()?;
+    out.checkpoint_fallbacks = r.u64()?;
+    out.time_serving_s = r.f64()?;
+    out.time_tuning_s = r.f64()?;
+    out.time_idle_s = r.f64()?;
+    let n = r.usize()?;
+    let mut hists = HistRegistry::new();
+    for _ in 0..n {
+        let key = r.str()?;
+        let samples = r.f64s()?;
+        let mut h = Histogram::new();
+        for v in samples {
+            h.record(v);
+        }
+        hists.insert(&key, h);
+    }
+    out.hists = hists;
+    Ok(out)
+}
+
+/// [`report_load`] over a standalone payload (must consume every byte).
+pub fn report_load_bytes(bytes: &[u8]) -> Result<Report> {
+    let mut r = ByteReader::new(bytes);
+    let report = report_load(&mut r)?;
+    r.expect_end()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Unique scratch dir per test (no Date/rand in tests either — a
+    /// process-local counter is enough).
+    fn scratch(name: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "etuner-ckpt-{}-{}-{}",
+            std::process::id(),
+            name,
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn byte_codec_round_trips_every_type() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEAD_BEEF);
+        w.i32(-42);
+        w.u64(u64::MAX - 1);
+        w.usize(12345);
+        w.f32(-0.0);
+        w.f64(f64::MIN_POSITIVE);
+        w.str("hällo");
+        w.bytes(&[1, 2, 3]);
+        w.f32s(&[1.5, -2.5]);
+        w.f64s(&[0.1]);
+        w.i32s(&[-1, 0, 1]);
+        w.u32s(&[9]);
+        w.bools(&[true, false]);
+        w.opt_f64(Some(3.25));
+        w.opt_f64(None);
+        w.opt_usize(Some(0));
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap(), f64::MIN_POSITIVE);
+        assert_eq!(r.str().unwrap(), "hällo");
+        assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(r.f64s().unwrap(), vec![0.1]);
+        assert_eq!(r.i32s().unwrap(), vec![-1, 0, 1]);
+        assert_eq!(r.u32s().unwrap(), vec![9]);
+        assert_eq!(r.bools().unwrap(), vec![true, false]);
+        assert_eq!(r.opt_f64().unwrap(), Some(3.25));
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.opt_usize().unwrap(), Some(0));
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncated_payload_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.u64(5);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf[..4]);
+        assert!(r.u64().is_err());
+        let mut r = ByteReader::new(&buf);
+        r.u64().unwrap();
+        assert!(r.u8().is_err(), "reading past the end errors");
+    }
+
+    #[test]
+    fn frames_scan_back_in_order() {
+        let mut file = Vec::new();
+        file.extend_from_slice(&frame(1, b"one"));
+        file.extend_from_slice(&frame(2, b"two"));
+        file.extend_from_slice(&frame(3, b"three"));
+        let out = scan(&file);
+        assert_eq!(out.bad, 0);
+        assert_eq!(out.records.len(), 3);
+        assert_eq!(out.records[2].round, 3);
+        assert_eq!(out.records[2].payload, b"three");
+    }
+
+    #[test]
+    fn bit_flip_skips_one_record_torn_tail_stops() {
+        let mut file = Vec::new();
+        file.extend_from_slice(&frame(1, b"good-1"));
+        let mut bad = frame(2, b"flipped");
+        bad[HEADER_LEN + 2] ^= 0x01;
+        file.extend_from_slice(&bad);
+        file.extend_from_slice(&frame(3, b"good-3"));
+        // torn tail: half a frame
+        let torn = frame(4, b"torn-record");
+        file.extend_from_slice(&torn[..torn.len() / 2]);
+        let out = scan(&file);
+        assert_eq!(out.records.len(), 2, "flip skipped, tail dropped");
+        assert_eq!(out.records[0].round, 1);
+        assert_eq!(out.records[1].round, 3);
+        assert_eq!(out.bad, 2);
+    }
+
+    #[test]
+    fn cadence_grammar() {
+        assert_eq!(Cadence::parse("3r").unwrap(), Cadence::Rounds(3));
+        assert_eq!(Cadence::parse("120s").unwrap(), Cadence::Seconds(120.0));
+        assert_eq!(Cadence::parse(" 1R ").unwrap(), Cadence::Rounds(1));
+        assert!(Cadence::parse("0r").is_err());
+        assert!(Cadence::parse("-5s").is_err());
+        assert!(Cadence::parse("7").is_err());
+        assert!(Cadence::parse("xr").is_err());
+        assert_eq!(Cadence::parse("3r").unwrap().to_string(), "3r");
+        assert_eq!(Cadence::default(), Cadence::Rounds(1));
+    }
+
+    #[test]
+    fn writer_rotates_snapshots_and_journals_between() {
+        let dir = scratch("rotate");
+        let plan = FaultPlan::none();
+        let mut w =
+            CheckpointWriter::new(&dir, Cadence::Rounds(2), &plan).unwrap();
+        w.on_boundary(1, 10.0, b"state-1").unwrap(); // first: snapshot
+        w.on_boundary(2, 20.0, b"state-2").unwrap(); // off-cadence: journal
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.round, 2, "journal record is newest");
+        assert_eq!(rec.payload, b"state-2");
+        assert_eq!(rec.fallbacks, 0);
+        w.on_boundary(3, 30.0, b"state-3").unwrap(); // cadence: snapshot
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.round, 3, "snapshot supersedes truncated journal");
+        // prev snapshot holds round 1
+        let prev = scan(&fs::read(dir.join(SNAPSHOT_PREV)).unwrap());
+        assert_eq!(prev.records[0].round, 1);
+        assert_eq!(w.written, 3);
+        assert!(w.bytes > 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_with_count() {
+        let dir = scratch("fallback");
+        // flip the 2nd record: with 1r cadence that's the round-2 snapshot
+        let plan = FaultPlan::parse("ckpt-flip:2").unwrap();
+        let mut w =
+            CheckpointWriter::new(&dir, Cadence::Rounds(1), &plan).unwrap();
+        w.on_boundary(1, 10.0, b"state-1").unwrap();
+        w.on_boundary(2, 20.0, b"state-2").unwrap(); // corrupted snapshot
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.round, 1, "fell back to the previous snapshot");
+        assert_eq!(rec.payload, b"state-1");
+        assert_eq!(rec.fallbacks, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_snapshot_falls_back_too() {
+        let dir = scratch("torn");
+        let plan = FaultPlan::parse("ckpt-torn:3").unwrap();
+        let mut w =
+            CheckpointWriter::new(&dir, Cadence::Rounds(1), &plan).unwrap();
+        w.on_boundary(1, 1.0, b"aaaa").unwrap();
+        w.on_boundary(2, 2.0, b"bbbb").unwrap();
+        w.on_boundary(3, 3.0, b"cccc").unwrap(); // torn write
+        let rec = recover(&dir).unwrap();
+        assert_eq!(rec.round, 2);
+        assert_eq!(rec.fallbacks, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recover_errors_when_nothing_valid() {
+        let dir = scratch("empty");
+        assert!(recover(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crash_state_latches_and_round_trips() {
+        let plan = FaultPlan::parse("crash:after-round-2").unwrap();
+        let mut cs = CrashState::new(&plan, 7);
+        assert!(cs.enabled());
+        assert!(!cs.check(1, 10.0));
+        assert!(cs.check(2, 20.0), "fires at its round");
+        // latch consumed: saved state must not re-fire after resume
+        let mut w = ByteWriter::new();
+        cs.save(&mut w);
+        let buf = w.into_vec();
+        let mut fresh = CrashState::new(&plan, 7);
+        let mut r = ByteReader::new(&buf);
+        fresh.load(&mut r).unwrap();
+        assert!(!fresh.check(2, 20.0), "restored latch suppresses re-fire");
+        assert!(!fresh.check(3, 30.0));
+    }
+
+    #[test]
+    fn crash_rate_stream_is_deterministic_across_save() {
+        let plan = FaultPlan::parse("crash:0.5,seed:3").unwrap();
+        let mut a = CrashState::new(&plan, 11);
+        let mut b = CrashState::new(&plan, 11);
+        let seq_a: Vec<bool> =
+            (1..=32).map(|i| a.check(i, i as f64)).collect();
+        // b: draw half, save, restore into a fresh state, draw the rest
+        let head: Vec<bool> = (1..=16).map(|i| b.check(i, i as f64)).collect();
+        let mut w = ByteWriter::new();
+        b.save(&mut w);
+        let buf = w.into_vec();
+        let mut c = CrashState::new(&plan, 999); // wrong seed on purpose
+        let mut r = ByteReader::new(&buf);
+        c.load(&mut r).unwrap();
+        let tail: Vec<bool> =
+            (17..=32).map(|i| c.check(i, i as f64)).collect();
+        let mut joined = head;
+        joined.extend(tail);
+        assert_eq!(joined, seq_a, "restored rate stream continues exactly");
+        assert!(seq_a.iter().any(|&f| f), "rate 0.5 fires somewhere in 32");
+    }
+
+    #[test]
+    fn report_codec_round_trips_bit_exactly() {
+        let mut rep = Report::default();
+        rep.model = "mbv2".into();
+        rep.benchmark = "scifar10".into();
+        rep.tune_policy = "LazyTune".into();
+        rep.freeze_policy = "SimFreeze".into();
+        rep.seed = 42;
+        rep.energy.compute_j = 123.456789;
+        rep.energy.init_s = 0.125;
+        rep.rounds = 9;
+        rep.train_iterations = 77;
+        rep.train_tflops = 1.5e-3;
+        rep.scenario_changes_detected = 2;
+        rep.requests.push(RequestRecord {
+            t: 12.5,
+            scenario: 1,
+            accuracy: 0.625,
+            stale_batches: 3,
+            latency_s: 0.03125,
+            batch_requests: 2,
+            queue_depth: 1,
+            degraded: true,
+        });
+        rep.round_log.push(RoundRecord {
+            t: 10.0,
+            scenario: 0,
+            batches: 4,
+            iterations: 4,
+            batches_needed: 2,
+            val_acc: 0.875,
+            frozen_units: 1,
+        });
+        rep.cka_trace.push(crate::coordinator::simfreeze::CkaSample {
+            iteration: 8,
+            layer: 2,
+            cka: 0.99,
+        });
+        rep.per_scenario_latency.push(ScenarioLatency {
+            scenario: 0,
+            requests: 5,
+            mean_ms: 2.0,
+            p95_ms: 4.0,
+            max_ms: 8.0,
+            deadline_misses: 1,
+        });
+        rep.queue_policy = "edf".into();
+        rep.memory_begin_bytes = 1e6;
+        rep.memory_end_bytes = 9e5;
+        rep.checkpoints_written = 3;
+        rep.checkpoint_bytes = 4096;
+        rep.hists.record("serve/latency_ms", 1.25);
+        rep.hists.record("serve/latency_ms", 2.5);
+        rep.hists.record("tune/round_s", 7.0);
+        rep.finish();
+        let mut w = ByteWriter::new();
+        report_save(&rep, &mut w);
+        let buf = w.into_vec();
+        let back = report_load_bytes(&buf).unwrap();
+        assert_eq!(rep.fingerprint(), back.fingerprint());
+        assert_eq!(back.queue_policy, "edf");
+        assert_eq!(back.checkpoints_written, 3);
+        assert_eq!(back.per_scenario_latency, rep.per_scenario_latency);
+        assert_eq!(back.hists, rep.hists, "histograms rebuild identically");
+        assert_eq!(
+            back.requests[0].latency_s.to_bits(),
+            rep.requests[0].latency_s.to_bits()
+        );
+        assert!(back.requests[0].degraded);
+    }
+
+    #[test]
+    fn sweep_journal_records_and_skips_corrupt() {
+        let dir = scratch("sweepj");
+        let j = SweepJournal::new(&dir.join("cells.bin"));
+        let mut a = Report::default();
+        a.seed = 1;
+        a.rounds = 3;
+        let mut b = Report::default();
+        b.seed = 2;
+        b.rounds = 5;
+        j.record(100, &a).unwrap();
+        j.record(200, &b).unwrap();
+        let cells = j.load().unwrap();
+        assert_eq!(cells.len(), 2);
+        let get = |d: u64| {
+            cells.iter().find(|(k, _)| *k == d).map(|(_, r)| r).unwrap()
+        };
+        assert_eq!(get(100).rounds, 3);
+        assert_eq!(get(200).fingerprint(), b.fingerprint());
+        // corrupt the tail: load still returns the intact records
+        let mut raw = fs::read(j.path()).unwrap();
+        let cut = raw.len() - 5;
+        raw.truncate(cut);
+        raw.extend_from_slice(&[0xFF; 3]);
+        fs::write(j.path(), &raw).unwrap();
+        let cells = j.load().unwrap();
+        assert_eq!(cells.len(), 1, "only the intact record survives");
+        assert_eq!(cells[0].0, 100);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

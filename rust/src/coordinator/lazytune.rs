@@ -132,6 +132,37 @@ impl LazyTune {
         self.history.clear();
         self.last_acc = None;
     }
+
+    /// Checkpoint the mutable trigger state.  `cap` and `decay` are
+    /// configuration — the resumed run rebuilds them from its (validated)
+    /// `RunConfig`, so only the evolving fields are persisted.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.f64(self.batches_needed);
+        w.usize(self.history.len());
+        for &(iters, acc) in &self.history {
+            w.f64(iters);
+            w.f64(acc);
+        }
+        w.opt_f64(self.last_acc);
+    }
+
+    /// Restore state saved by [`LazyTune::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.batches_needed = r.f64()?;
+        let n = r.usize()?;
+        let mut history = Vec::with_capacity(n);
+        for _ in 0..n {
+            let iters = r.f64()?;
+            let acc = r.f64()?;
+            history.push((iters, acc));
+        }
+        self.history = history;
+        self.last_acc = r.opt_f64()?;
+        Ok(())
+    }
 }
 
 impl Default for LazyTune {

@@ -80,6 +80,23 @@ impl EnergyOod {
         }
         false
     }
+
+    /// Checkpoint the detector's mutable state (the window and the
+    /// consecutive-outlier counter; the thresholds are constants).
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.f64s(&self.window);
+        w.u32(self.pending_outliers);
+    }
+
+    /// Restore state saved by [`EnergyOod::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.window = r.f64s()?;
+        self.pending_outliers = r.u32()?;
+        Ok(())
+    }
 }
 
 impl Default for EnergyOod {

@@ -91,6 +91,43 @@ impl TunePolicy {
             lt.on_scenario_change();
         }
     }
+
+    /// Checkpoint the trigger policy: a variant tag plus LazyTune's
+    /// mutable state (Immediate/Static carry no evolving state).
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        match self {
+            TunePolicy::Immediate => w.u8(0),
+            TunePolicy::Static(n) => {
+                w.u8(1);
+                w.usize(*n);
+            }
+            TunePolicy::Lazy(lt) => {
+                w.u8(2);
+                lt.ckpt_save(w);
+            }
+        }
+    }
+
+    /// Restore into a policy built from the *same* configuration: the
+    /// variant tag must match (a mismatch means the resume config lied).
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> Result<()> {
+        let tag = r.u8()?;
+        match (tag, &mut *self) {
+            (0, TunePolicy::Immediate) => Ok(()),
+            (1, TunePolicy::Static(n)) => {
+                *n = r.usize()?;
+                Ok(())
+            }
+            (2, TunePolicy::Lazy(lt)) => lt.ckpt_load(r),
+            _ => anyhow::bail!(
+                "checkpoint tune-policy tag {tag} does not match the \
+                 configured policy"
+            ),
+        }
+    }
 }
 
 /// Intra-tuning (freezing) policy selector.
@@ -175,6 +212,22 @@ pub trait FreezePolicy {
     fn cka_trace(&self) -> Vec<super::simfreeze::CkaSample> {
         vec![]
     }
+
+    /// Serialize this policy's mutable state into a checkpoint payload.
+    /// Required (no default) on purpose: a policy added without a codec
+    /// would silently break crash-durable resume, so the trait forces the
+    /// decision at compile time.
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter);
+
+    /// Restore state saved by [`FreezePolicy::ckpt_save`] into a policy
+    /// freshly built from the same configuration.  `sess` lets policies
+    /// holding derived tensors (SimFreeze's reference features) recompute
+    /// them instead of persisting them.
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        sess: &ModelSession,
+    ) -> Result<()>;
 }
 
 /// The trivial policy: nothing ever freezes.
@@ -195,6 +248,21 @@ impl FreezePolicy for NoFreeze {
 
     fn state(&self) -> &FreezeState {
         &self.state
+    }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        // nothing ever mutates, but persist the freeze vector anyway so a
+        // future stateful variant can't silently skip it.
+        w.bools(&self.state.frozen);
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        _sess: &ModelSession,
+    ) -> Result<()> {
+        self.state.frozen = r.bools()?;
+        Ok(())
     }
 }
 
@@ -258,6 +326,20 @@ impl FreezePolicy for SimFreezePolicy {
 
     fn cka_trace(&self) -> Vec<super::simfreeze::CkaSample> {
         self.inner.trace.clone()
+    }
+
+    fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bool(self.first_probe_seen);
+        self.inner.ckpt_save(w);
+    }
+
+    fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        sess: &ModelSession,
+    ) -> Result<()> {
+        self.first_probe_seen = r.bool()?;
+        self.inner.ckpt_load(r, sess)
     }
 }
 

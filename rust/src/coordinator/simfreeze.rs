@@ -168,4 +168,72 @@ impl SimFreeze {
         self.iters_since_check = 0;
         Ok(unfrozen)
     }
+
+    /// Checkpoint the evolving CKA state.  `ref_params` is NOT persisted:
+    /// it is the deterministic post-warmup θ, and the resumed process
+    /// reconstructs it identically when it rebuilds the simulation.
+    /// `ref_feats` is derived (reference features on the current probe),
+    /// so [`SimFreeze::ckpt_load`] recomputes it instead.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.bools(&self.frozen.frozen);
+        w.usize(self.last_cka.len());
+        for &c in &self.last_cka {
+            w.opt_f32(c);
+        }
+        match &self.probe {
+            Some(p) => {
+                w.bool(true);
+                w.f32s(p);
+            }
+            None => w.bool(false),
+        }
+        w.u64(self.iters_since_check);
+        w.u64(self.total_iters);
+        w.bool(self.keep_trace);
+        w.usize(self.trace.len());
+        for s in &self.trace {
+            w.u64(s.iteration);
+            w.usize(s.layer);
+            w.f32(s.cka);
+        }
+    }
+
+    /// Restore state saved by [`SimFreeze::ckpt_save`], recomputing the
+    /// reference features from the restored probe (pure derived data — no
+    /// energy is charged, matching [`SimFreeze::set_probe`]).
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        sess: &ModelSession,
+    ) -> Result<()> {
+        self.frozen.frozen = r.bools()?;
+        let n = r.usize()?;
+        let mut last_cka = Vec::with_capacity(n);
+        for _ in 0..n {
+            last_cka.push(r.opt_f32()?);
+        }
+        self.last_cka = last_cka;
+        if r.bool()? {
+            let p = r.f32s()?;
+            self.ref_feats = Some(sess.features(&self.ref_params, &p)?);
+            self.probe = Some(p);
+        } else {
+            self.ref_feats = None;
+            self.probe = None;
+        }
+        self.iters_since_check = r.u64()?;
+        self.total_iters = r.u64()?;
+        self.keep_trace = r.bool()?;
+        let n = r.usize()?;
+        let mut trace = Vec::with_capacity(n);
+        for _ in 0..n {
+            trace.push(CkaSample {
+                iteration: r.u64()?,
+                layer: r.usize()?,
+                cka: r.f32()?,
+            });
+        }
+        self.trace = trace;
+        Ok(())
+    }
 }

@@ -121,6 +121,41 @@ impl CostBook {
         t
     }
 
+    /// Checkpoint: persist the accumulated ledger.  The device model is
+    /// pure configuration and is rebuilt from flags on resume.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.f64(self.breakdown.init_s);
+        w.f64(self.breakdown.loadsave_s);
+        w.f64(self.breakdown.compute_s);
+        w.f64(self.breakdown.init_j);
+        w.f64(self.breakdown.loadsave_j);
+        w.f64(self.breakdown.compute_j);
+        w.u64(self.rounds);
+        w.u64(self.train_iterations);
+        w.f64(self.train_flops);
+        w.u64(self.cka_probes);
+        w.f64(self.cka_flops);
+    }
+
+    /// Inverse of [`Self::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.breakdown.init_s = r.f64()?;
+        self.breakdown.loadsave_s = r.f64()?;
+        self.breakdown.compute_s = r.f64()?;
+        self.breakdown.init_j = r.f64()?;
+        self.breakdown.loadsave_j = r.f64()?;
+        self.breakdown.compute_j = r.f64()?;
+        self.rounds = r.u64()?;
+        self.train_iterations = r.u64()?;
+        self.train_flops = r.f64()?;
+        self.cka_probes = r.u64()?;
+        self.cka_flops = r.f64()?;
+        Ok(())
+    }
+
     /// Charge a validation evaluation (`n` samples forward).
     pub fn charge_validation(&mut self, m: &ModelManifest, n: usize) -> f64 {
         let fl = m.paper_fwd_flops() * n as f64;

@@ -101,6 +101,19 @@ impl World {
         self.transforms.push(t);
     }
 
+    /// Sampler RNG state (the world's only mutable state after build —
+    /// prototypes and transforms are fixed once the schedule registers
+    /// them).  Checkpointing saves this pair; everything else regenerates
+    /// deterministically from `(seed, benchmark)`.
+    pub fn sampler_state(&self) -> (u64, u64) {
+        self.sampler.state()
+    }
+
+    /// Restore the sampler RNG to a checkpointed state.
+    pub fn set_sampler_state(&mut self, state: u64, inc: u64) {
+        self.sampler = Pcg32::from_state(state, inc);
+    }
+
     /// Draw one sample of class `c` under scenario `s`'s transform.
     pub fn sample_into(&mut self, c: usize, s: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), DIM);

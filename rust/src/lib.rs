@@ -40,6 +40,7 @@
 
 pub mod baselines;
 pub mod bitset;
+pub mod ckpt;
 pub mod coordinator;
 pub mod cost;
 pub mod data;

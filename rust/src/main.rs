@@ -18,12 +18,13 @@
 
 use anyhow::{bail, Context, Result};
 
+use etuner::ckpt::{Cadence, CrashInjected};
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::{BackendKind, BackendSpec, FaultPlan};
-use etuner::serve::{QueuePolicyKind, MAX_BANK_CAPACITY};
+use etuner::serve::{FaultScope, QueuePolicyKind, MAX_BANK_CAPACITY};
 use etuner::sim::{run_config_traced, ParallelSweeper, RunConfig};
 use etuner::testkit;
 use etuner::trace::{self, Tracer};
@@ -64,7 +65,9 @@ fn main() -> Result<()> {
                        [--queue-policy fifo|edf] [--max-queue N]\n\
                        [--shed-infeasible] [--bank-capacity N]\n\
                        [--fleet N] [--no-affinity] [--rebalance-threshold X]\n\
-                       [--faults SPEC] [--fault-seed S]\n\
+                       [--faults SPEC] [--fault-seed S] [--fault-scope engine0|all]\n\
+                       [--checkpoint-dir DIR] [--checkpoint-every Nr|Ss]\n\
+                       [--resume DIR]\n\
                        [--trace] [--trace-out FILE] [--trace-summary]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --batch-window S coalesces requests for up to S virtual\n\
@@ -93,7 +96,21 @@ fn main() -> Result<()> {
                        serving engine retries with virtual-time backoff,\n\
                        trips a circuit breaker, and serves stale banks\n\
                        degraded while it is open; --fault-seed varies the\n\
-                       fault stream without changing the run seed\n\
+                       fault stream without changing the run seed;\n\
+                       --fault-scope picks which engines the plan degrades\n\
+                       in the multi-backend pool runner: engine0 (default)\n\
+                       or all (per-engine salted fault streams); the plan\n\
+                       also accepts crash:after-round-N / crash:t=S /\n\
+                       crash:RATE (deterministic crash points, exit code 3)\n\
+                       and ckpt-flip:N / ckpt-torn:N (corrupt the Nth\n\
+                       checkpoint record to exercise recovery)\n\
+                       --checkpoint-dir DIR checkpoints every round boundary\n\
+                       into DIR (crash-durable: atomic snapshots on the\n\
+                       --checkpoint-every cadence, e.g. 5r or 120s, plus an\n\
+                       append-only journal between them); --resume DIR\n\
+                       restores the newest valid record and continues to a\n\
+                       bit-identical report (default: no checkpointing, the\n\
+                       exact pre-checkpoint code path)\n\
                        --trace records a virtual-time timeline (also enabled\n\
                        by ETUNER_TRACE=1 or by either flag below);\n\
                        --trace-out FILE writes it as Chrome trace-event JSON\n\
@@ -101,8 +118,13 @@ fn main() -> Result<()> {
                        --trace-summary prints the serving/tuning/idle\n\
                        time-in-state table after the run\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
+                       [--quarantine-after N] [--sweep-journal FILE]\n\
                        [--backend pjrt|refcpu|auto]\n\
                        --jobs N runs N seed-sweep workers (default: all cores)\n\
+                       --quarantine-after N quarantines a sweep cell after N\n\
+                       worker panics (default 2; min 1); --sweep-journal FILE\n\
+                       records each finished cell so an interrupted sweep\n\
+                       resumes, re-running only unfinished cells\n\
                  --backend: pjrt executes the AOT artifacts (make artifacts +\n\
                        --features xla); refcpu is the pure-rust reference\n\
                        executor (no artifacts needed — uses the built-in model\n\
@@ -226,6 +248,21 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(s) = opt(args, "--fault-seed") {
         cfg.faults.seed = s.parse().context("bad --fault-seed")?;
     }
+    if let Some(s) = opt(args, "--fault-scope") {
+        cfg.fleet.fault_scope =
+            FaultScope::parse(s).context("bad --fault-scope")?;
+    }
+    if let Some(d) = opt(args, "--checkpoint-dir") {
+        cfg.checkpoint.dir = Some(d.into());
+    }
+    if let Some(e) = opt(args, "--checkpoint-every") {
+        cfg.checkpoint.every =
+            Cadence::parse(e).context("bad --checkpoint-every")?;
+    }
+    if let Some(d) = opt(args, "--resume") {
+        cfg.checkpoint.dir = Some(d.into());
+        cfg.checkpoint.resume = true;
+    }
     if let Some(d) = opt(args, "--decay") {
         use etuner::coordinator::lazytune::DecayKind;
         cfg.decay = match d {
@@ -251,7 +288,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let be = backend_spec(args)?.create()?;
     trace::note(format_args!("[etuner] backend: {}", be.name()));
     let faults_on = cfg.faults.enabled();
-    let report = run_config_traced(be.as_ref(), cfg, &tracer)?;
+    let ckpt_dir = cfg.checkpoint.dir.clone();
+    let report = match run_config_traced(be.as_ref(), cfg, &tracer) {
+        Ok(r) => r,
+        Err(e) => match e.downcast::<CrashInjected>() {
+            Ok(crash) => {
+                let hint = match ckpt_dir {
+                    Some(d) => format!("resume with --resume {}", d.display()),
+                    None => "no --checkpoint-dir, so there is nothing to \
+                             resume from"
+                        .into(),
+                };
+                eprintln!(
+                    "[etuner] injected crash at round {} (t={:.3}s); {hint}",
+                    crash.round, crash.t
+                );
+                std::process::exit(3);
+            }
+            Err(e) => return Err(e),
+        },
+    };
     println!("{}", report.summary());
     println!(
         "  breakdown: init {:.1}s / loadsave {:.1}s / compute {:.1}s; \
@@ -367,6 +423,12 @@ fn cmd_repro(args: &[String]) -> Result<()> {
         None => ParallelSweeper::default_jobs(),
     };
     let mut sw = ParallelSweeper::new(backend_spec(args)?, jobs)?;
+    if let Some(n) = opt(args, "--quarantine-after") {
+        sw.set_quarantine_after(n.parse().context("bad --quarantine-after")?);
+    }
+    if let Some(p) = opt(args, "--sweep-journal") {
+        sw.set_journal(p);
+    }
     if flag(args, "--trace") || trace::env_enabled() {
         sw.set_tracer(Tracer::enabled(trace::DEFAULT_CAPACITY));
     }

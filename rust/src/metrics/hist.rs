@@ -100,6 +100,13 @@ impl Histogram {
         self.max
     }
 
+    /// The exact samples in record order.  The checkpoint codec persists
+    /// these and reconstructs the histogram by re-recording them in order,
+    /// which rebuilds identical buckets/max by construction.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     /// Nearest-rank index for percentile `p` over `n` samples — the exact
     /// formula the sorted-`Vec` ledger used.
     fn rank(p: f64, n: usize) -> usize {

@@ -191,6 +191,21 @@ pub struct Report {
     pub fleet_cross_engine_retries: u64,
     /// hot-scenario rebalances (second bank warm-installed elsewhere).
     pub fleet_rebalances: u64,
+    /// crash-durability accounting (PR 9; excluded from
+    /// [`Report::fingerprint`] like every counter above — with
+    /// checkpointing disabled (the default) all four are zero and the
+    /// scientific fields stay bit-identical to the seed; a resumed run
+    /// legitimately differs in them from its uncrashed reference):
+    /// snapshot + journal records written to the checkpoint directory.
+    pub checkpoints_written: u64,
+    /// total bytes of checkpoint records written.
+    pub checkpoint_bytes: u64,
+    /// times this run's state was restored from a checkpoint (1 for a
+    /// resumed run, 0 otherwise).
+    pub checkpoint_restores: u64,
+    /// recovery fallbacks: a newer checkpoint record failed its checksum
+    /// (torn write / bit flip) and an earlier good record was used.
+    pub checkpoint_fallbacks: u64,
     /// time-in-state accounting (PR 7 observability; excluded from
     /// [`Report::fingerprint`] like every serving counter above — it is a
     /// pure readout of the device schedule): virtual seconds the device
@@ -394,6 +409,10 @@ pub fn average(reports: &[Report]) -> Report {
     out.fleet_cross_engine_retries =
         mean_u64(|r| r.fleet_cross_engine_retries);
     out.fleet_rebalances = mean_u64(|r| r.fleet_rebalances);
+    out.checkpoints_written = mean_u64(|r| r.checkpoints_written);
+    out.checkpoint_bytes = mean_u64(|r| r.checkpoint_bytes);
+    out.checkpoint_restores = mean_u64(|r| r.checkpoint_restores);
+    out.checkpoint_fallbacks = mean_u64(|r| r.checkpoint_fallbacks);
     out.time_serving_s = reports.iter().map(|r| r.time_serving_s).sum::<f64>() / n;
     out.time_tuning_s = reports.iter().map(|r| r.time_tuning_s).sum::<f64>() / n;
     out.time_idle_s = reports.iter().map(|r| r.time_idle_s).sum::<f64>() / n;
@@ -582,6 +601,11 @@ mod tests {
         b.fleet_routed_least_loaded = 30;
         b.fleet_cross_engine_retries = 5;
         b.fleet_rebalances = 2;
+        // crash-durability accounting (PR 9) is also excluded
+        b.checkpoints_written = 9;
+        b.checkpoint_bytes = 1 << 16;
+        b.checkpoint_restores = 1;
+        b.checkpoint_fallbacks = 1;
         assert_eq!(a.fingerprint(), b.fingerprint());
         let mut c = a.clone();
         c.requests[0].accuracy = 0.5000001;
@@ -644,6 +668,9 @@ mod tests {
             fleet_engines: _, fleet_routed_affinity: _,
             fleet_routed_least_loaded: _, fleet_cross_engine_retries: _,
             fleet_rebalances: _,
+            // EXCLUDED — crash durability (PR 9):
+            checkpoints_written: _, checkpoint_bytes: _,
+            checkpoint_restores: _, checkpoint_fallbacks: _,
         } = Report::default();
         // Per-request records feed the fingerprint partially: t/scenario/
         // accuracy/stale_batches hash, the serving fields don't.  Same

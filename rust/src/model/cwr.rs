@@ -49,6 +49,21 @@ impl Cwr {
         self.generation
     }
 
+    /// Checkpoint view: `(bank rows, seen counts, generation)`.
+    pub fn ckpt_state(&self) -> (&[Vec<f32>], &[u32], u64) {
+        (&self.bank, &self.seen_count, self.generation)
+    }
+
+    /// Rebuild from checkpointed state (exact generation included, so a
+    /// restored serving cache keyed on it stays coherent).
+    pub fn restore(
+        bank: Vec<Vec<f32>>,
+        seen_count: Vec<u32>,
+        generation: u64,
+    ) -> Cwr {
+        Cwr { bank, seen_count, generation }
+    }
+
     /// Merge one trained class row of θ into the bank (running average
     /// over scenarios, as CWR+ does).
     fn consolidate_class(&mut self, m: &ModelManifest, theta: &[f32], c: usize) {

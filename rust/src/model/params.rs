@@ -57,6 +57,17 @@ impl Params {
         Params { theta, id: next_id(), generation: 0 }
     }
 
+    /// Rebuild an instance with an exact saved `(id, generation)` identity
+    /// (checkpoint restore).  The process-wide id counter is advanced past
+    /// `id` so no later allocation can collide with the restored instance
+    /// in an `(id, generation)`-keyed cache — and because the restored θ
+    /// bytes are identical to what the id originally named, any stale
+    /// cache entry that does match maps to identical content.
+    pub fn restore(theta: Vec<f32>, id: u64, generation: u64) -> Params {
+        NEXT_PARAMS_ID.fetch_max(id + 1, Ordering::Relaxed);
+        Params { theta, id, generation }
+    }
+
     /// Read-only view of the flat parameter vector.
     pub fn theta(&self) -> &[f32] {
         &self.theta
@@ -245,6 +256,18 @@ pub(crate) mod tests {
         assert_eq!(p.generation(), g0 + 2);
         p.set_theta(vec![0.0; 22]);
         assert_eq!(p.generation(), g0 + 3);
+    }
+
+    #[test]
+    fn restore_keeps_identity_and_blocks_collisions() {
+        let p = Params::from_vec(vec![1.0, 2.0]);
+        let r = Params::restore(p.theta().to_vec(), p.id(), 7);
+        assert_eq!(r.id(), p.id());
+        assert_eq!(r.generation(), 7);
+        assert_eq!(r.theta(), p.theta());
+        // every allocation after a restore must get a strictly larger id
+        let fresh = Params::from_vec(vec![0.0]);
+        assert!(fresh.id() > r.id());
     }
 
     #[test]

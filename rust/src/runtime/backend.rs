@@ -248,6 +248,20 @@ pub trait Backend {
         0.0
     }
 
+    /// Serialize fault-injection state (RNG position, burst counters,
+    /// undrained spike delay) for the checkpoint subsystem.  Only the
+    /// fault-wrapping decorator returns `Some`; plain backends have no
+    /// fault state and use this default.  `&self` + interior mutability,
+    /// like `fault_stats`/`take_injected_delay_s`.
+    fn fault_state_save(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore fault-injection state saved by [`Backend::fault_state_save`]
+    /// — the decorator resumes its injection stream bit-identically.
+    /// No-op on plain backends.
+    fn fault_state_load(&self, _bytes: &[u8]) {}
+
     /// A value previously produced by this backend is being dropped by a
     /// caller-side cache; derived state keyed on its buf id can be freed.
     /// ([`crate::model::ModelSession`] calls this whenever its

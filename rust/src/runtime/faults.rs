@@ -55,6 +55,22 @@ pub struct FaultPlan {
     pub burst: u32,
     /// Extra seed mixed into the fault RNG (`--fault-seed`).
     pub seed: u64,
+    /// Crash (kill the run) at the Nth fine-tuning round boundary
+    /// (`crash:after-round-N`; 0 = off).
+    pub crash_after_round: u64,
+    /// Crash at the first round boundary with virtual time >= this
+    /// (`crash:t=S`; negative = off).
+    pub crash_t: f64,
+    /// Per-round-boundary crash probability, drawn from a dedicated
+    /// seeded stream (`crash:R`; 0 = off).
+    pub crash_rate: f64,
+    /// Flip one bit in the payload of the Nth checkpoint record written
+    /// (1-based; `ckpt-flip:N`; 0 = off) — recovery must detect the bad
+    /// checksum and fall back.
+    pub ckpt_flip: u64,
+    /// Truncate the Nth checkpoint record mid-write (1-based;
+    /// `ckpt-torn:N`; 0 = off) — a torn write recovery must skip.
+    pub ckpt_torn: u64,
 }
 
 impl Default for FaultPlan {
@@ -73,13 +89,34 @@ impl FaultPlan {
             spike_s: 0.0,
             burst: 1,
             seed: 0,
+            crash_after_round: 0,
+            crash_t: -1.0,
+            crash_rate: 0.0,
+            ckpt_flip: 0,
+            ckpt_torn: 0,
         }
     }
 
-    /// True if any fault mode can fire.  `sim::run_config` wraps the
-    /// backend only when this holds — a disabled plan costs nothing.
+    /// True if any *backend* fault mode can fire.  `sim::run_config` wraps
+    /// the backend only when this holds — a disabled plan costs nothing.
+    /// Crash/corruption points live in the simulation and checkpoint
+    /// writer respectively, not in [`FaultyBackend`], so they are
+    /// deliberately excluded here: a crash-only plan constructs no
+    /// backend decorator.
     pub fn enabled(&self) -> bool {
         self.exec_rate > 0.0 || self.marshal_rate > 0.0 || self.spike_rate > 0.0
+    }
+
+    /// True if any crash point can fire (evaluated by the simulation at
+    /// round boundaries).
+    pub fn crash_enabled(&self) -> bool {
+        self.crash_after_round > 0 || self.crash_t >= 0.0 || self.crash_rate > 0.0
+    }
+
+    /// True if checkpoint-file corruption is scheduled (applied by the
+    /// checkpoint writer as records are framed).
+    pub fn corruption_enabled(&self) -> bool {
+        self.ckpt_flip > 0 || self.ckpt_torn > 0
     }
 
     /// Parse the `--faults` spec grammar (module docs).
@@ -127,9 +164,45 @@ impl FaultPlan {
                         anyhow::anyhow!("bad fault seed {val:?}")
                     })?;
                 }
+                "crash" => {
+                    if let Some(n) = val.strip_prefix("after-round-") {
+                        plan.crash_after_round = n.parse().map_err(|_| {
+                            anyhow::anyhow!("bad crash round {n:?}")
+                        })?;
+                        if plan.crash_after_round == 0 {
+                            bail!("crash:after-round-N needs N >= 1");
+                        }
+                    } else if let Some(s) = val.strip_prefix("t=") {
+                        plan.crash_t = s.parse().map_err(|_| {
+                            anyhow::anyhow!("bad crash time {s:?}")
+                        })?;
+                        if plan.crash_t < 0.0 {
+                            bail!("crash:t=S needs S >= 0, got {}", plan.crash_t);
+                        }
+                    } else {
+                        plan.crash_rate = parse_rate(val, "crash")?;
+                    }
+                }
+                "ckpt-flip" => {
+                    plan.ckpt_flip = val.parse().map_err(|_| {
+                        anyhow::anyhow!("bad ckpt-flip record index {val:?}")
+                    })?;
+                    if plan.ckpt_flip == 0 {
+                        bail!("ckpt-flip:N is 1-based (N >= 1)");
+                    }
+                }
+                "ckpt-torn" => {
+                    plan.ckpt_torn = val.parse().map_err(|_| {
+                        anyhow::anyhow!("bad ckpt-torn record index {val:?}")
+                    })?;
+                    if plan.ckpt_torn == 0 {
+                        bail!("ckpt-torn:N is 1-based (N >= 1)");
+                    }
+                }
                 other => bail!(
                     "unknown fault spec key {other:?} \
-                     (expected exec|marshal|spike|burst|seed)"
+                     (expected exec|marshal|spike|burst|seed|crash|\
+                     ckpt-flip|ckpt-torn)"
                 ),
             }
         }
@@ -138,7 +211,8 @@ impl FaultPlan {
 
     /// Render back to the spec grammar (logs, tables).
     pub fn spec(&self) -> String {
-        if !self.enabled() {
+        if !self.enabled() && !self.crash_enabled() && !self.corruption_enabled()
+        {
             return "none".into();
         }
         let mut parts = Vec::new();
@@ -153,6 +227,21 @@ impl FaultPlan {
         }
         if self.burst > 1 {
             parts.push(format!("burst:{}", self.burst));
+        }
+        if self.crash_after_round > 0 {
+            parts.push(format!("crash:after-round-{}", self.crash_after_round));
+        }
+        if self.crash_t >= 0.0 {
+            parts.push(format!("crash:t={}", self.crash_t));
+        }
+        if self.crash_rate > 0.0 {
+            parts.push(format!("crash:{}", self.crash_rate));
+        }
+        if self.ckpt_flip > 0 {
+            parts.push(format!("ckpt-flip:{}", self.ckpt_flip));
+        }
+        if self.ckpt_torn > 0 {
+            parts.push(format!("ckpt-torn:{}", self.ckpt_torn));
         }
         parts.join(",")
     }
@@ -332,6 +421,48 @@ impl Backend for FaultyBackend<'_> {
         std::mem::take(&mut self.st.borrow_mut().pending_delay_s)
     }
 
+    /// Snapshot the fault stream for checkpointing: RNG state, burst
+    /// counters, undrained spike delay, and the cumulative stats.  Fixed
+    /// 64-byte little-endian layout; [`fault_state_load`] is the inverse.
+    ///
+    /// [`fault_state_load`]: Backend::fault_state_load
+    fn fault_state_save(&self) -> Option<Vec<u8>> {
+        let st = self.st.borrow();
+        let (rs, ri) = st.rng.state();
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(&rs.to_le_bytes());
+        out.extend_from_slice(&ri.to_le_bytes());
+        out.extend_from_slice(&st.exec_burst_left.to_le_bytes());
+        out.extend_from_slice(&st.marshal_burst_left.to_le_bytes());
+        out.extend_from_slice(&st.pending_delay_s.to_le_bytes());
+        out.extend_from_slice(&st.stats.exec_faults.to_le_bytes());
+        out.extend_from_slice(&st.stats.marshal_faults.to_le_bytes());
+        out.extend_from_slice(&st.stats.latency_spikes.to_le_bytes());
+        out.extend_from_slice(&st.stats.spike_s_total.to_le_bytes());
+        Some(out)
+    }
+
+    fn fault_state_load(&self, bytes: &[u8]) {
+        if bytes.len() != 64 {
+            return; // foreign/truncated blob: leave the fresh state alone.
+        }
+        let u64_at = |i: usize| {
+            u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap())
+        };
+        let u32_at = |i: usize| {
+            u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap())
+        };
+        let mut st = self.st.borrow_mut();
+        st.rng = Pcg32::from_state(u64_at(0), u64_at(8));
+        st.exec_burst_left = u32_at(16);
+        st.marshal_burst_left = u32_at(20);
+        st.pending_delay_s = f64::from_bits(u64_at(24));
+        st.stats.exec_faults = u64_at(32);
+        st.stats.marshal_faults = u64_at(40);
+        st.stats.latency_spikes = u64_at(48);
+        st.stats.spike_s_total = f64::from_bits(u64_at(56));
+    }
+
     fn warm(&self, segment: &str, theta: &Value) -> Result<()> {
         self.inner.warm(segment, theta)
     }
@@ -429,6 +560,78 @@ mod tests {
         }
         assert!(saw_burst, "no complete fault burst observed in 256 calls");
         assert!(fb.fault_stats().marshal_faults >= 4);
+    }
+
+    #[test]
+    fn crash_grammar_round_trips_and_stays_out_of_enabled() {
+        let p = FaultPlan::parse("crash:after-round-3").unwrap();
+        assert_eq!(p.crash_after_round, 3);
+        assert!(p.crash_enabled() && !p.enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+
+        let p = FaultPlan::parse("crash:t=120.5").unwrap();
+        assert_eq!(p.crash_t, 120.5);
+        assert!(p.crash_enabled() && !p.enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+
+        let p = FaultPlan::parse("crash:0.25,seed:9").unwrap();
+        assert_eq!(p.crash_rate, 0.25);
+        assert_eq!(p.seed, 9);
+        assert!(p.crash_enabled() && !p.enabled());
+
+        // combined with backend faults both gates hold
+        let p = FaultPlan::parse("exec:0.1,crash:after-round-2").unwrap();
+        assert!(p.enabled() && p.crash_enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn corruption_grammar_round_trips() {
+        let p = FaultPlan::parse("ckpt-flip:2").unwrap();
+        assert_eq!(p.ckpt_flip, 2);
+        assert!(p.corruption_enabled());
+        assert!(!p.enabled() && !p.crash_enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+
+        let p = FaultPlan::parse("ckpt-torn:1,crash:after-round-4").unwrap();
+        assert_eq!(p.ckpt_torn, 1);
+        assert!(p.corruption_enabled() && p.crash_enabled());
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn crash_grammar_rejects_nonsense() {
+        assert!(FaultPlan::parse("crash:after-round-0").is_err());
+        assert!(FaultPlan::parse("crash:after-round-x").is_err());
+        assert!(FaultPlan::parse("crash:t=-5").is_err());
+        assert!(FaultPlan::parse("crash:1.5").is_err());
+        assert!(FaultPlan::parse("ckpt-flip:0").is_err());
+        assert!(FaultPlan::parse("ckpt-torn:0").is_err());
+    }
+
+    #[test]
+    fn fault_state_round_trip_resumes_the_stream_bit_identically() {
+        let inner = crate::testkit::refcpu_backend();
+        let plan = FaultPlan::parse("marshal:0.5,spike:0.3x0.1,burst:2")
+            .unwrap();
+        let fb = FaultyBackend::new(inner.as_ref(), plan, 11);
+        // advance mid-burst so every field is non-trivial
+        for _ in 0..13 {
+            let _ = fb.marshal_f32(&[1.0], &[1]);
+            let _ = fb.execute("nonexistent-segment", &[]);
+        }
+        let blob = fb.fault_state_save().expect("faulty backend saves state");
+        let stats0 = fb.fault_stats();
+        let tail: Vec<bool> =
+            (0..64).map(|_| fb.marshal_f32(&[1.0], &[1]).is_err()).collect();
+
+        let fb2 = FaultyBackend::new(inner.as_ref(), plan, 999); // wrong seed
+        fb2.fault_state_load(&blob);
+        assert_eq!(fb2.fault_stats(), stats0, "stats restored");
+        let tail2: Vec<bool> =
+            (0..64).map(|_| fb2.marshal_f32(&[1.0], &[1]).is_err()).collect();
+        assert_eq!(tail, tail2, "restored stream replays identically");
+        assert_eq!(fb2.fault_stats(), fb.fault_stats());
     }
 
     #[test]

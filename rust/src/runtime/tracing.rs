@@ -148,6 +148,14 @@ impl Backend for TracingBackend<'_> {
         self.inner.take_injected_delay_s()
     }
 
+    fn fault_state_save(&self) -> Option<Vec<u8>> {
+        self.inner.fault_state_save()
+    }
+
+    fn fault_state_load(&self, bytes: &[u8]) {
+        self.inner.fault_state_load(bytes)
+    }
+
     fn warm(&self, segment: &str, theta: &Value) -> Result<()> {
         let (p0, f0) = (self.inner.perf(), self.inner.fault_stats());
         let r = self.inner.warm(segment, theta);

@@ -216,6 +216,57 @@ impl BankSet {
     pub fn peak_resident(&self) -> usize {
         self.peak_resident
     }
+
+    /// Checkpoint residency as the scenario list in LRU order (coldest
+    /// first) plus the counters.  The banks' θ contents are NOT persisted:
+    /// each bank is a pure function of the live `(Params, Cwr)` the
+    /// checkpoint restores anyway, so [`BankSet::ckpt_load`] re-derives
+    /// them through the normal [`BankSet::ensure`] path (which also
+    /// re-warms the backend's marshalled literals and packed panels —
+    /// host-side caches a fresh process cannot inherit).
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        let mut order: Vec<(u64, usize)> = self
+            .banks
+            .iter()
+            .map(|b| (b.last_used, b.scenario))
+            .collect();
+        order.sort_unstable();
+        w.usize(order.len());
+        for &(_, s) in &order {
+            w.usize(s);
+        }
+        w.u64(self.clock);
+        w.u64(self.rebuilds);
+        w.u64(self.hits);
+        w.u64(self.evictions);
+        w.usize(self.peak_resident);
+    }
+
+    /// Restore into a freshly built (empty) bank set: re-ensure each
+    /// saved scenario coldest-first so relative LRU order — the only thing
+    /// eviction decisions depend on — is reconstructed, then overwrite the
+    /// counters with the saved values (the re-installs above are resume
+    /// mechanics, not simulated work).
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        ctx: &ServeCtx,
+    ) -> Result<()> {
+        let n = r.usize()?;
+        let mut scenarios = Vec::with_capacity(n);
+        for _ in 0..n {
+            scenarios.push(r.usize()?);
+        }
+        for s in scenarios {
+            self.ensure(s, ctx, false)?;
+        }
+        self.clock = r.u64()?;
+        self.rebuilds = r.u64()?;
+        self.hits = r.u64()?;
+        self.evictions = r.u64()?;
+        self.peak_resident = r.usize()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -425,6 +425,67 @@ impl ServeEngine {
         }
     }
 
+    /// Checkpoint the control plane at a quiesce point (queue drained, no
+    /// pending events — every round boundary, by construction).  Persists
+    /// the scheduler horizon, bank residency + counters, breaker state,
+    /// the latency ledger, the queue's depth instrumentation, the engine
+    /// counters, and the two engine-side histograms.  Serving θ banks are
+    /// *not* serialized — [`ServeEngine::ckpt_load`] re-warms them from
+    /// the live restored `(Params, Cwr)` through the normal ensure path.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        debug_assert!(
+            self.queue.is_empty() && self.pending.is_empty(),
+            "checkpointing a non-quiesced engine"
+        );
+        self.scheduler.ckpt_save(w);
+        self.banks.ckpt_save(w);
+        self.breaker.ckpt_save(w);
+        self.latency.ckpt_save(w);
+        self.queue.ckpt_save(w);
+        w.u64(self.executes);
+        w.u64(self.served);
+        w.u64(self.drops_queue_full);
+        w.u64(self.drops_slo_infeasible);
+        w.u64(self.serve_retries);
+        w.u64(self.flush_failures);
+        w.u64(self.degraded_serves);
+        w.u64(self.drops_backend_unavailable);
+        w.f64s(self.queue_hist.samples());
+        w.f64s(self.batch_rows_hist.samples());
+    }
+
+    /// Restore state saved by [`ServeEngine::ckpt_save`] into a freshly
+    /// built engine (same config).  `ctx` carries the already-restored
+    /// training θ the banks re-warm from.
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        ctx: &ServeCtx,
+    ) -> Result<()> {
+        self.scheduler.ckpt_load(r)?;
+        self.banks.ckpt_load(r, ctx)?;
+        self.breaker.ckpt_load(r)?;
+        self.latency.ckpt_load(r)?;
+        self.queue.ckpt_load(r)?;
+        self.executes = r.u64()?;
+        self.served = r.u64()?;
+        self.drops_queue_full = r.u64()?;
+        self.drops_slo_infeasible = r.u64()?;
+        self.serve_retries = r.u64()?;
+        self.flush_failures = r.u64()?;
+        self.degraded_serves = r.u64()?;
+        self.drops_backend_unavailable = r.u64()?;
+        self.queue_hist = Histogram::new();
+        for v in r.f64s()? {
+            self.queue_hist.record(v);
+        }
+        self.batch_rows_hist = Histogram::new();
+        for v in r.f64s()? {
+            self.batch_rows_hist.record(v);
+        }
+        Ok(())
+    }
+
     /// The verdict [`ServeEngine::on_arrival`] would return for `req`
     /// *right now*, without recording anything — the fleet router probes
     /// an affinity target with this so a `Dropped{queue-full}` hint can

@@ -76,11 +76,22 @@ pub struct FleetConfig {
     /// Hot-scenario share that triggers a second bank install
     /// (`--rebalance-threshold`; `0` disables rebalancing).
     pub rebalance_threshold: f64,
+    /// Which engines an active [`FaultPlan`] decorates (`--fault-scope`).
+    /// Takes effect in the multi-backend pool runner ([`run_pool`]),
+    /// where each engine owns a backend; the in-process simulation
+    /// shares one backend across the fleet, so its faults always span
+    /// every engine.
+    pub fault_scope: FaultScope,
 }
 
 impl Default for FleetConfig {
     fn default() -> FleetConfig {
-        FleetConfig { engines: 1, affinity: true, rebalance_threshold: 0.5 }
+        FleetConfig {
+            engines: 1,
+            affinity: true,
+            rebalance_threshold: 0.5,
+            fault_scope: FaultScope::default(),
+        }
     }
 }
 
@@ -91,6 +102,46 @@ impl FleetConfig {
             rebalance_threshold: self.rebalance_threshold,
         }
     }
+}
+
+/// Which engines' backends get the fault decorator (`--fault-scope`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultScope {
+    /// Only engine 0 is degraded — one faulty device in an otherwise
+    /// healthy fleet (the pre-`--fault-scope` behaviour, unchanged).
+    #[default]
+    Engine0,
+    /// Every engine gets its own [`FaultyBackend`], each drawing an
+    /// *independent* fault stream: the plan seed is salted by engine id
+    /// ([`engine_fault_seed`]), so engines fail at different times.
+    /// Engine 0's stream is bit-identical to `Engine0` scope.
+    All,
+}
+
+impl FaultScope {
+    pub fn parse(s: &str) -> Result<FaultScope> {
+        match s {
+            "engine0" => Ok(FaultScope::Engine0),
+            "all" => Ok(FaultScope::All),
+            _ => Err(anyhow!(
+                "unknown --fault-scope '{s}' (expected engine0|all)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultScope::Engine0 => "engine0",
+            FaultScope::All => "all",
+        }
+    }
+}
+
+/// Fault seed for `engine_id` under `FaultScope::All`: the base seed
+/// salted by a Weyl step per engine.  Engine 0's multiplier is zero, so
+/// its stream — and therefore every `Engine0`-scope result — is unchanged.
+pub fn engine_fault_seed(base: u64, engine_id: u64) -> u64 {
+    base ^ engine_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// N serving engines behind one router, driven inline by the simulation.
@@ -428,6 +479,49 @@ impl Fleet {
             reg.merge(&tmp);
         }
     }
+
+    /// Checkpoint every engine (id order), the router's bookkeeping, and
+    /// any rebalance installs decided but not yet executed.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.usize(self.engines.len());
+        for e in &self.engines {
+            e.ckpt_save(w);
+        }
+        self.router.ckpt_save(w);
+        w.usize(self.pending_installs.len());
+        for &(e, s) in &self.pending_installs {
+            w.usize(e);
+            w.usize(s);
+        }
+    }
+
+    /// Restore state saved by [`Fleet::ckpt_save`] into a freshly built
+    /// fleet of the same size; banks re-warm from `ctx`'s restored θ.
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+        ctx: &ServeCtx,
+    ) -> Result<()> {
+        let n = r.usize()?;
+        if n != self.engines.len() {
+            return Err(anyhow!(
+                "checkpoint fleet has {n} engines, config has {}",
+                self.engines.len()
+            ));
+        }
+        for e in &mut self.engines {
+            e.ckpt_load(r, ctx)?;
+        }
+        self.router.ckpt_load(r)?;
+        self.pending_installs.clear();
+        let n = r.usize()?;
+        for _ in 0..n {
+            let e = r.usize()?;
+            let s = r.usize()?;
+            self.pending_installs.push((e, s));
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -448,9 +542,8 @@ pub struct FleetPoolSpec {
     /// Give every engine its own enabled tracer; the yield carries the
     /// per-engine event batches for [`crate::trace::chrome_trace_fleet`].
     pub trace: bool,
-    /// Fault plan for **engine 0's** backend only ([`FaultPlan::none()`]
-    /// = no decorator anywhere) — one degraded engine in an otherwise
-    /// healthy fleet.
+    /// Fault plan for the scoped engines' backends ([`FaultPlan::none()`]
+    /// = no decorator anywhere).
     pub faults: FaultPlan,
     pub fault_seed: u64,
 }
@@ -763,8 +856,14 @@ fn worker(
 ) {
     let result = (|| -> Result<()> {
         let be = spec.backend.create()?;
-        if engine_id == 0 && spec.faults.enabled() {
-            let fb = FaultyBackend::new(be.as_ref(), spec.faults, spec.fault_seed);
+        let decorate = spec.faults.enabled()
+            && (engine_id == 0 || spec.fleet.fault_scope == FaultScope::All);
+        if decorate {
+            let fb = FaultyBackend::new(
+                be.as_ref(),
+                spec.faults,
+                engine_fault_seed(spec.fault_seed, engine_id as u64),
+            );
             serve_commands(&fb, spec, rx, &tx)
         } else {
             serve_commands(be.as_ref(), spec, rx, &tx)
@@ -925,21 +1024,27 @@ pub fn run_pool(
     }
     let backends: Vec<Box<dyn Backend>> =
         (0..n).map(|_| spec.backend.create()).collect::<Result<_>>()?;
-    // engine 0's fault decoration must match the threaded pool exactly.
-    let faulty: Option<FaultyBackend> = if spec.faults.enabled() {
-        Some(FaultyBackend::new(
-            backends[0].as_ref(),
-            spec.faults,
-            spec.fault_seed,
-        ))
-    } else {
-        None
-    };
+    // per-engine fault decoration must match the threaded pool exactly.
+    let faulty: Vec<Option<FaultyBackend>> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, be)| {
+            let decorate = spec.faults.enabled()
+                && (i == 0 || spec.fleet.fault_scope == FaultScope::All);
+            decorate.then(|| {
+                FaultyBackend::new(
+                    be.as_ref(),
+                    spec.faults,
+                    engine_fault_seed(spec.fault_seed, i as u64),
+                )
+            })
+        })
+        .collect();
     let mut ports: Vec<LocalPort> = Vec::with_capacity(n);
     for (i, be) in backends.iter().enumerate() {
-        let be_ref: &dyn Backend = match (&faulty, i) {
-            (Some(f), 0) => f,
-            _ => be.as_ref(),
+        let be_ref: &dyn Backend = match &faulty[i] {
+            Some(f) => f,
+            None => be.as_ref(),
         };
         ports.push(LocalPort { host: EngineHost::new(be_ref, spec)?, parked: None });
     }

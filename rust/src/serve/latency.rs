@@ -187,6 +187,52 @@ impl LatencyModel {
             .collect()
     }
 
+    /// Checkpoint the ledger (`exec_s`/`slo_s` are config, rebuilt on
+    /// restore).  Histograms persist as their exact sample sets and are
+    /// rebuilt by re-recording — bucket counts are a pure function of the
+    /// samples, so the round trip is bit-exact.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.f64s(self.hist.samples());
+        w.u64(self.violations);
+        w.u64(self.deadline_misses);
+        w.f64(self.queue_delay_total_s);
+        w.f64(self.service_total_s);
+        w.usize(self.per_scenario.len());
+        for (&s, led) in &self.per_scenario {
+            w.usize(s);
+            w.f64s(led.hist.samples());
+            w.u64(led.deadline_misses);
+        }
+    }
+
+    /// Restore state saved by [`LatencyModel::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        let mut hist = Histogram::new();
+        for v in r.f64s()? {
+            hist.record(v);
+        }
+        self.hist = hist;
+        self.violations = r.u64()?;
+        self.deadline_misses = r.u64()?;
+        self.queue_delay_total_s = r.f64()?;
+        self.service_total_s = r.f64()?;
+        self.per_scenario.clear();
+        let n = r.usize()?;
+        for _ in 0..n {
+            let s = r.usize()?;
+            let mut led = ScenarioLedger::default();
+            for v in r.f64s()? {
+                led.hist.record(v);
+            }
+            led.deadline_misses = r.u64()?;
+            self.per_scenario.insert(s, led);
+        }
+        Ok(())
+    }
+
     pub fn summary(&self) -> LatencySummary {
         let n = self.hist.count();
         if n == 0 {

@@ -69,7 +69,8 @@ pub use banks::{BankInstall, BankSet, MAX_BANK_CAPACITY};
 pub use batcher::{AdaptiveBatcher, BatchSpan, PaddedBatch};
 pub use engine::{ServeCtx, ServeEngine, ServeEvent, ServedRequest};
 pub use fleet::{
-    run_pool, Fleet, FleetConfig, FleetCounters, FleetPoolSpec, FleetYield,
+    engine_fault_seed, run_pool, FaultScope, Fleet, FleetConfig,
+    FleetCounters, FleetPoolSpec, FleetYield,
 };
 pub use latency::{LatencyModel, LatencySummary};
 pub use queue::{QueuedRequest, RequestQueue};

@@ -173,6 +173,28 @@ impl RequestQueue {
         self.total_enqueued
     }
 
+    /// Checkpoint the depth instrumentation and the arrival sequence
+    /// counter.  The queue's *contents* are never persisted: every round
+    /// boundary is a quiesce point (the simulation drains before
+    /// checkpointing), so only the counters survive a resume.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        debug_assert!(self.q.is_empty(), "checkpointing a non-empty queue");
+        w.usize(self.peak_depth);
+        w.u64(self.total_enqueued);
+        w.u64(self.next_seq);
+    }
+
+    /// Restore state saved by [`RequestQueue::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.peak_depth = r.usize()?;
+        self.total_enqueued = r.u64()?;
+        self.next_seq = r.u64()?;
+        Ok(())
+    }
+
     /// Queue position of the earliest-deadline request (ties: lowest
     /// position), or `None` when empty — the amortized backend of
     /// [`crate::serve::admission::Edf::next_index`], bit-identical to a

@@ -186,6 +186,41 @@ impl CircuitBreaker {
             self.trips += 1;
         }
     }
+
+    /// Current failure streak (0 after any success).
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures
+    }
+
+    /// Checkpoint the breaker's mutable state (threshold/cooldown are
+    /// configuration and rebuilt from the run config on restore).
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.u8(match self.state {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        });
+        w.u32(self.consecutive_failures);
+        w.f64(self.opened_at);
+        w.u64(self.trips);
+    }
+
+    /// Restore state saved by [`CircuitBreaker::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.state = match r.u8()? {
+            0 => BreakerState::Closed,
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            t => anyhow::bail!("bad breaker state tag {t}"),
+        };
+        self.consecutive_failures = r.u32()?;
+        self.opened_at = r.f64()?;
+        self.trips = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +281,66 @@ mod tests {
         assert_eq!(b.state(), BreakerState::Closed, "streak was reset");
         b.on_failure(2.0);
         assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn probe_failing_exactly_at_the_cooldown_boundary_restarts_cooldown() {
+        let mut b = CircuitBreaker::new(2, 30.0);
+        b.on_failure(5.0);
+        b.on_failure(10.0); // trips open at t=10
+        assert_eq!(b.state(), BreakerState::Open);
+        // exactly at the boundary (now - opened_at == cooldown): the probe
+        // is admitted — the comparison is >=, not >.
+        assert!(b.allow(40.0), "probe admitted exactly at the boundary");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_failure(40.0); // probe fails at that same instant
+        assert_eq!(b.state(), BreakerState::Open, "probe failure reopens");
+        assert_eq!(b.trips(), 2);
+        // the cooldown restarted from the re-open time (40.0), not from
+        // the original trip: just shy of the fresh boundary stays shut...
+        assert!(!b.allow(69.999), "fresh cooldown still running");
+        // ...and the fresh boundary admits the next probe.
+        assert!(b.allow(70.0));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn probe_success_zeroes_the_failure_streak() {
+        let mut b = CircuitBreaker::new(3, 10.0);
+        for t in 0..3 {
+            b.on_failure(t as f64); // trips at t=2
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.consecutive_failures(), 3);
+        assert!(b.allow(12.0));
+        b.on_success(); // probe succeeded
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.consecutive_failures(), 0, "streak fully reset");
+        // a fresh streak must need the full threshold again
+        b.on_failure(13.0);
+        b.on_failure(14.0);
+        assert_eq!(b.state(), BreakerState::Closed, "2 of 3 after reset");
+        b.on_failure(15.0);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn breaker_checkpoint_round_trips_mid_open() {
+        let mut b = CircuitBreaker::new(2, 30.0);
+        b.on_failure(5.0);
+        b.on_failure(10.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        let mut w = crate::ckpt::ByteWriter::new();
+        b.ckpt_save(&mut w);
+        let buf = w.into_vec();
+        let mut fresh = CircuitBreaker::new(2, 30.0);
+        let mut r = crate::ckpt::ByteReader::new(&buf);
+        fresh.ckpt_load(&mut r).unwrap();
+        assert_eq!(fresh.state(), BreakerState::Open);
+        assert_eq!(fresh.trips(), 1);
+        assert_eq!(fresh.consecutive_failures(), 2);
+        assert!(!fresh.allow(20.0), "opened_at restored: still cooling");
+        assert!(fresh.allow(40.0), "cooldown measured from restored time");
     }
 
     #[test]

@@ -243,6 +243,67 @@ impl FleetRouter {
         self.touch(target, scenario);
         Some((scenario, target))
     }
+
+    /// Checkpoint the router's bookkeeping (`cfg` and `bank_capacity` are
+    /// configuration, rebuilt from the run config on restore).
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.usize(self.residency.len());
+        for lru in &self.residency {
+            w.usizes(lru);
+        }
+        w.usizes(&self.depths);
+        w.usize(self.queued.len());
+        for m in &self.queued {
+            w.usize(m.len());
+            for (&s, &c) in m {
+                w.usize(s);
+                w.usize(c);
+            }
+        }
+        w.u64(self.counters.routed_by_affinity);
+        w.u64(self.counters.routed_least_loaded);
+        w.u64(self.counters.cross_engine_retries);
+        w.u64(self.counters.rebalances);
+    }
+
+    /// Restore state saved by [`FleetRouter::ckpt_save`] into a router
+    /// built for the same fleet size.
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        let n = r.usize()?;
+        if n != self.residency.len() {
+            anyhow::bail!(
+                "checkpoint router has {n} engines, config has {}",
+                self.residency.len()
+            );
+        }
+        let mut residency = Vec::with_capacity(n);
+        for _ in 0..n {
+            residency.push(r.usizes()?);
+        }
+        self.residency = residency;
+        self.depths = r.usizes()?;
+        let n = r.usize()?;
+        let mut queued = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = r.usize()?;
+            let mut m = BTreeMap::new();
+            for _ in 0..len {
+                let s = r.usize()?;
+                let c = r.usize()?;
+                m.insert(s, c);
+            }
+            queued.push(m);
+        }
+        self.queued = queued;
+        self.counters.routed_by_affinity = r.u64()?;
+        self.counters.routed_least_loaded = r.u64()?;
+        self.counters.cross_engine_retries = r.u64()?;
+        self.counters.rebalances = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

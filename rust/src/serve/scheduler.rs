@@ -107,6 +107,36 @@ impl Scheduler {
         self.device_free_at = start + duration_s;
         self.round_busy_s += duration_s;
     }
+
+    /// Checkpoint every mutable field.  `device_free_at` and
+    /// `consecutive_defers` shape future round/serve decisions, so they
+    /// are fingerprint-relevant state; the busy accumulators only feed the
+    /// time-in-state readout but round-trip anyway so resumed reports stay
+    /// self-consistent past the resume point.
+    pub fn ckpt_save(&self, w: &mut crate::ckpt::ByteWriter) {
+        w.f64(self.device_free_at);
+        w.usize(self.defer_backlog);
+        w.u32(self.max_defers);
+        w.u32(self.consecutive_defers);
+        w.u64(self.rounds_deferred);
+        w.f64(self.serve_busy_s);
+        w.f64(self.round_busy_s);
+    }
+
+    /// Restore state saved by [`Scheduler::ckpt_save`].
+    pub fn ckpt_load(
+        &mut self,
+        r: &mut crate::ckpt::ByteReader,
+    ) -> anyhow::Result<()> {
+        self.device_free_at = r.f64()?;
+        self.defer_backlog = r.usize()?;
+        self.max_defers = r.u32()?;
+        self.consecutive_defers = r.u32()?;
+        self.rounds_deferred = r.u64()?;
+        self.serve_busy_s = r.f64()?;
+        self.round_busy_s = r.f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

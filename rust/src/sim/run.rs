@@ -28,6 +28,7 @@
 //! `serve.batch_window_s == 0`) every batch degenerates to one full-draw
 //! request and reports are bit-identical to the pre-control-plane path.
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -109,6 +110,11 @@ pub struct RunConfig {
     /// is a true passthrough: [`run_config`] constructs no decorator and
     /// reports stay bit-identical to a build without the fault layer.
     pub faults: FaultPlan,
+    /// Crash-durable checkpointing (`--checkpoint-dir` /
+    /// `--checkpoint-every` / `--resume`; see [`crate::ckpt`]).  The
+    /// default (`dir: None`) constructs nothing: the run takes the exact
+    /// pre-checkpoint path and reports stay bit-identical.
+    pub checkpoint: crate::ckpt::CheckpointConfig,
 }
 
 impl RunConfig {
@@ -137,6 +143,7 @@ impl RunConfig {
             fleet: FleetConfig::default(),
             serve_direct: false,
             faults: faults::env_plan(),
+            checkpoint: crate::ckpt::CheckpointConfig::default(),
         }
     }
 
@@ -150,6 +157,19 @@ impl RunConfig {
         self.seed = seed;
         self
     }
+}
+
+/// The `run` event-loop locals a checkpoint record carries: everything
+/// the loop owns on its stack at a round boundary (the training buffer
+/// is deliberately absent — the round that just finished drained it).
+struct ResumeLocals {
+    events_done: usize,
+    trained_classes: BitSet,
+    reinit_done: Vec<bool>,
+    probe_pending: bool,
+    total_iters: u64,
+    first_round: bool,
+    last_train_scenario: Option<usize>,
 }
 
 /// Ready-to-run simulation state.
@@ -177,6 +197,14 @@ pub struct Simulation<'b> {
     /// generation after a mid-round fault (tentpole: a failed round must
     /// not poison session caches with a half-updated θ).
     round_rollbacks: u64,
+    /// Crash-durable checkpoint writer (`--checkpoint-dir`; `None` — the
+    /// default — writes nothing and costs nothing).
+    ckpt_writer: Option<crate::ckpt::CheckpointWriter>,
+    /// Crash-point evaluator, consulted at every round boundary.
+    crash: crate::ckpt::CrashState,
+    /// Loop state restored by [`Simulation::resume_from`], consumed at
+    /// the top of [`Simulation::run`].
+    resume: Option<ResumeLocals>,
     report: Report,
     /// Virtual-time event recorder (disabled by default — see
     /// [`crate::trace`]); shared with the serving engine via
@@ -280,6 +308,15 @@ impl<'b> Simulation<'b> {
             cfg.disable_serving_cache,
             &cfg.fleet,
         );
+        let ckpt_writer = match &cfg.checkpoint.dir {
+            Some(dir) => Some(crate::ckpt::CheckpointWriter::new(
+                dir,
+                cfg.checkpoint.every,
+                &cfg.faults,
+            )?),
+            None => None,
+        };
+        let crash = crate::ckpt::CrashState::new(&cfg.faults, cfg.seed);
         Ok(Simulation {
             cfg,
             sess,
@@ -301,6 +338,9 @@ impl<'b> Simulation<'b> {
             aug_b: Vec::new(),
             last_energy_score: None,
             round_rollbacks: 0,
+            ckpt_writer,
+            crash,
+            resume: None,
             report,
             tracer: Tracer::disabled(),
         })
@@ -312,6 +352,231 @@ impl<'b> Simulation<'b> {
     pub fn set_tracer(&mut self, tracer: Tracer) {
         self.fleet.set_tracer(tracer.clone());
         self.tracer = tracer;
+    }
+
+    /// Restore the run from the newest valid checkpoint record in `dir`
+    /// (`--resume`; see [`crate::ckpt::recover`]).  Call between
+    /// [`Simulation::new`] — which rebuilt the identical warmed-up
+    /// pre-deployment state from the config — and [`Simulation::run`],
+    /// which then skips the already-processed events and continues
+    /// bit-identically to the uncrashed run.  The simulation must be
+    /// built from the *same* scientific config, validated via
+    /// [`crate::ckpt::config_digest`].
+    pub fn resume_from(&mut self, dir: &Path) -> Result<()> {
+        let rec = crate::ckpt::recover(dir)?;
+        let mut r = crate::ckpt::ByteReader::new(&rec.payload);
+        let digest = r.u64()?;
+        let want = crate::ckpt::config_digest(&self.cfg);
+        anyhow::ensure!(
+            digest == want,
+            "checkpoint config digest {digest:#018x} does not match this \
+             run's {want:#018x}: --resume must repeat the original flags"
+        );
+        let events_done = r.usize()?;
+        let theta = r.f32s()?;
+        let id = r.u64()?;
+        let generation = r.u64()?;
+        anyhow::ensure!(
+            theta.len() == self.sess.m.theta_len,
+            "checkpoint theta length {} != manifest {}",
+            theta.len(),
+            self.sess.m.theta_len
+        );
+        self.params = Params::restore(theta, id, generation);
+        self.phi = r.f32s()?;
+        let n = r.usize()?;
+        let mut bank = Vec::with_capacity(n);
+        for _ in 0..n {
+            bank.push(r.f32s()?);
+        }
+        let seen = r.u32s()?;
+        let gen = r.u64()?;
+        self.cwr = Cwr::restore(bank, seen, gen);
+        self.tune.ckpt_load(&mut r)?;
+        self.freeze.ckpt_load(&mut r, &self.sess)?;
+        self.ood.ckpt_load(&mut r)?;
+        self.book.ckpt_load(&mut r)?;
+        let (s, i) = (r.u64()?, r.u64()?);
+        self.rng = Pcg32::from_state(s, i);
+        let (s, i) = (r.u64()?, r.u64()?);
+        self.schedule.world.set_sampler_state(s, i);
+        let d = r.usize()?;
+        let cap = r.usize()?;
+        let x = r.f32s()?;
+        let y = r.i32s()?;
+        let head = r.usize()?;
+        let len = r.usize()?;
+        self.val_pool = ValPool::restore(d, cap, x, y, head, len);
+        self.fleet.ckpt_load(
+            &mut r,
+            &ServeCtx {
+                sess: &self.sess,
+                params: &self.params,
+                cwr: &self.cwr,
+                scenarios: &self.schedule.scenarios,
+            },
+        )?;
+        self.last_energy_score = r.opt_f64()?;
+        self.round_rollbacks = r.u64()?;
+        let cap_bits = r.usize()?;
+        anyhow::ensure!(
+            cap_bits == self.sess.m.classes,
+            "checkpoint class count {cap_bits} != manifest {}",
+            self.sess.m.classes
+        );
+        let mut trained_classes = BitSet::new(cap_bits);
+        for id in r.usizes()? {
+            trained_classes.insert(id);
+        }
+        let reinit_done = r.bools()?;
+        let probe_pending = r.bool()?;
+        let total_iters = r.u64()?;
+        let first_round = r.bool()?;
+        let last_train_scenario = r.opt_usize()?;
+        if r.bool()? {
+            let blob = r.bytes()?;
+            self.sess.be.fault_state_load(&blob);
+        }
+        self.crash.load(&mut r)?;
+        self.report = crate::ckpt::report_load(&mut r)?;
+        r.expect_end()?;
+        self.report.checkpoint_restores += 1;
+        self.report.checkpoint_fallbacks += rec.fallbacks;
+        // continue the write tally where the crashed process left it, so
+        // the resumed report counts the whole timeline's records.
+        if let Some(w) = self.ckpt_writer.as_mut() {
+            w.written = self.report.checkpoints_written;
+            w.bytes = self.report.checkpoint_bytes;
+        }
+        self.resume = Some(ResumeLocals {
+            events_done,
+            trained_classes,
+            reinit_done,
+            probe_pending,
+            total_iters,
+            first_round,
+            last_train_scenario,
+        });
+        Ok(())
+    }
+
+    /// Serialize the full mutable state at a round boundary — a quiesce
+    /// point: the round drained the training buffer, the serve queues
+    /// were drained before it proceeded, and no stream event is half
+    /// processed.  Records are self-contained; recovery applies exactly
+    /// one.  Layout mirrors [`Simulation::resume_from`] field for field.
+    #[allow(clippy::too_many_arguments)]
+    fn ckpt_payload(
+        &self,
+        events_done: usize,
+        trained_classes: &BitSet,
+        reinit_done: &[bool],
+        probe_pending: bool,
+        total_iters: u64,
+        first_round: bool,
+        last_train_scenario: Option<usize>,
+    ) -> Vec<u8> {
+        let mut w = crate::ckpt::ByteWriter::new();
+        w.u64(crate::ckpt::config_digest(&self.cfg));
+        w.usize(events_done);
+        w.f32s(self.params.theta());
+        w.u64(self.params.id());
+        w.u64(self.params.generation());
+        w.f32s(&self.phi);
+        let (bank, seen, gen) = self.cwr.ckpt_state();
+        w.usize(bank.len());
+        for row in bank {
+            w.f32s(row);
+        }
+        w.u32s(seen);
+        w.u64(gen);
+        self.tune.ckpt_save(&mut w);
+        self.freeze.ckpt_save(&mut w);
+        self.ood.ckpt_save(&mut w);
+        self.book.ckpt_save(&mut w);
+        let (s, i) = self.rng.state();
+        w.u64(s);
+        w.u64(i);
+        let (s, i) = self.schedule.world.sampler_state();
+        w.u64(s);
+        w.u64(i);
+        let (d, cap, x, y, head, len) = self.val_pool.ckpt_state();
+        w.usize(d);
+        w.usize(cap);
+        w.f32s(x);
+        w.i32s(y);
+        w.usize(head);
+        w.usize(len);
+        self.fleet.ckpt_save(&mut w);
+        w.opt_f64(self.last_energy_score);
+        w.u64(self.round_rollbacks);
+        w.usize(trained_classes.capacity());
+        let ids: Vec<usize> = trained_classes.iter().collect();
+        w.usizes(&ids);
+        w.bools(reinit_done);
+        w.bool(probe_pending);
+        w.u64(total_iters);
+        w.bool(first_round);
+        w.opt_usize(last_train_scenario);
+        match self.sess.be.fault_state_save() {
+            Some(blob) => {
+                w.bool(true);
+                w.bytes(&blob);
+            }
+            None => w.bool(false),
+        }
+        self.crash.save(&mut w);
+        crate::ckpt::report_save(&self.report, &mut w);
+        w.into_vec()
+    }
+
+    /// One fine-tuning round boundary: evaluate the crash points, persist
+    /// the state, and only *then* surface an injected crash — the record
+    /// carries the post-draw crash latches, so `--resume` continues past
+    /// the boundary without re-firing.  A no-op (not even a branch into
+    /// serialization) when neither checkpointing nor crash points are
+    /// configured.
+    #[allow(clippy::too_many_arguments)]
+    fn on_round_boundary(
+        &mut self,
+        t: f64,
+        events_done: usize,
+        trained_classes: &BitSet,
+        reinit_done: &[bool],
+        probe_pending: bool,
+        total_iters: u64,
+        first_round: bool,
+        last_train_scenario: Option<usize>,
+    ) -> Result<()> {
+        if self.ckpt_writer.is_none() && !self.crash.enabled() {
+            return Ok(());
+        }
+        debug_assert_eq!(
+            self.fleet.queue_depth(),
+            0,
+            "round boundary must be quiesced"
+        );
+        let round = self.book.rounds;
+        let fired = self.crash.check(round, t);
+        if self.ckpt_writer.is_some() {
+            let payload = self.ckpt_payload(
+                events_done,
+                trained_classes,
+                reinit_done,
+                probe_pending,
+                total_iters,
+                first_round,
+                last_train_scenario,
+            );
+            let w = self.ckpt_writer.as_mut().unwrap();
+            w.on_boundary(round, t, &payload)?;
+            self.report.checkpoints_written = w.written;
+            self.report.checkpoint_bytes = w.bytes;
+        }
+        if fired {
+            return Err(crate::ckpt::CrashInjected { round, t }.into());
+        }
+        Ok(())
     }
 
     /// Run the whole event stream; consumes the simulation.
@@ -332,9 +597,26 @@ impl<'b> Simulation<'b> {
         let mut total_iters: u64 = 0;
         let mut first_round = true;
         let mut last_train_scenario: Option<usize> = None;
+        // resume: `new` rebuilt the identical warmed-up pre-deployment
+        // state from the config (warmup is deterministic), `resume_from`
+        // overwrote the evolving state and parked the loop locals here.
+        // Already-processed events are skipped, not replayed.
+        let mut events_done: usize = 0;
+        if let Some(rl) = self.resume.take() {
+            events_done = rl.events_done;
+            trained_classes = rl.trained_classes;
+            reinit_done = rl.reinit_done;
+            probe_pending = rl.probe_pending;
+            total_iters = rl.total_iters;
+            first_round = rl.first_round;
+            last_train_scenario = rl.last_train_scenario;
+        }
 
         let events = std::mem::take(&mut self.stream.events);
-        for ev in &events {
+        for (idx, ev) in events.iter().enumerate() {
+            if idx < events_done {
+                continue;
+            }
             // poll the control plane up to this event's time: serves any
             // batch whose coalescing window expired (keeps service order
             // aligned with virtual time) and surfaces pending drops.
@@ -494,6 +776,16 @@ impl<'b> Simulation<'b> {
                                 self.fleet
                                     .scheduler_mut()
                                     .on_round(ev.t, round_s);
+                                self.on_round_boundary(
+                                    ev.t,
+                                    idx + 1,
+                                    &trained_classes,
+                                    &reinit_done,
+                                    probe_pending,
+                                    total_iters,
+                                    first_round,
+                                    last_train_scenario,
+                                )?;
                             }
                         }
                     }
@@ -578,6 +870,16 @@ impl<'b> Simulation<'b> {
             // time-in-state covers every round (nothing serves after it,
             // so the device-busy horizon move is inert).
             self.fleet.scheduler_mut().on_round(t, round_s);
+            self.on_round_boundary(
+                t,
+                events.len(),
+                &trained_classes,
+                &reinit_done,
+                probe_pending,
+                total_iters,
+                first_round,
+                last_train_scenario,
+            )?;
         }
         self.cwr
             .consolidate_set(&self.sess.m, &self.params, &trained_classes);
@@ -940,10 +1242,27 @@ impl<'b> Simulation<'b> {
 pub fn run_config(be: &dyn Backend, cfg: RunConfig) -> Result<Report> {
     if cfg.faults.enabled() {
         let fb = FaultyBackend::new(be, cfg.faults, cfg.seed);
-        Simulation::new(&fb, cfg)?.run()
+        let mut sim = Simulation::new(&fb, cfg)?;
+        maybe_resume(&mut sim)?;
+        sim.run()
     } else {
-        Simulation::new(be, cfg)?.run()
+        let mut sim = Simulation::new(be, cfg)?;
+        maybe_resume(&mut sim)?;
+        sim.run()
     }
+}
+
+/// Honour `--resume`: restore from the checkpoint directory after the
+/// simulation is built (so the deterministic warmup already ran) and
+/// before the event loop starts.
+fn maybe_resume(sim: &mut Simulation) -> Result<()> {
+    if sim.cfg.checkpoint.resume {
+        let dir = sim.cfg.checkpoint.dir.clone().ok_or_else(|| {
+            anyhow::anyhow!("--resume needs a checkpoint directory")
+        })?;
+        sim.resume_from(&dir)?;
+    }
+    Ok(())
 }
 
 /// [`run_config`] with a tracer attached.  The [`TracingBackend`] wraps
@@ -963,11 +1282,13 @@ pub fn run_config_traced(
         let tb = TracingBackend::new(&fb, tracer.clone());
         let mut sim = Simulation::new(&tb, cfg)?;
         sim.set_tracer(tracer.clone());
+        maybe_resume(&mut sim)?;
         sim.run()
     } else {
         let tb = TracingBackend::new(be, tracer.clone());
         let mut sim = Simulation::new(&tb, cfg)?;
         sim.set_tracer(tracer.clone());
+        maybe_resume(&mut sim)?;
         sim.run()
     }
 }

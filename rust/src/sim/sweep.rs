@@ -36,8 +36,10 @@ use crate::trace::{self, Event, Lane, Tracer};
 
 use super::run::{run_config, run_config_traced, RunConfig};
 
-/// Consecutive panics of one sweep cell before it is quarantined (the
-/// first panic restarts the backend and requeues the cell once).
+/// Default consecutive panics of one sweep cell before it is quarantined
+/// (the first panic restarts the backend and requeues the cell once).
+/// Configurable per sweep via [`ParallelSweeper::set_quarantine_after`]
+/// (`--quarantine-after`).
 pub const QUARANTINE_AFTER: u32 = 2;
 
 /// Render a `catch_unwind` payload for the quarantine error message.
@@ -52,19 +54,20 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Run one sweep cell under supervision: a panicking attempt restarts
-/// `be` from `spec` and re-runs the cell; [`QUARANTINE_AFTER`]
-/// consecutive panics quarantine it.  `Err` results from the run itself
-/// (not panics) pass through untouched — recoverable failures are the
-/// engine's job, supervision only contains crashes.
+/// `be` from `spec` and re-runs the cell; `quarantine_after` consecutive
+/// panics quarantine it.  `Err` results from the run itself (not panics)
+/// pass through untouched — recoverable failures are the engine's job,
+/// supervision only contains crashes.
 fn run_supervised(
     be: &mut Box<dyn Backend>,
     mut restart: impl FnMut() -> Result<Box<dyn Backend>>,
     i: usize,
     cfg: &RunConfig,
     tracer: &Tracer,
+    quarantine_after: u32,
 ) -> Result<Report> {
     let mut last = String::new();
-    for _ in 0..QUARANTINE_AFTER {
+    for _ in 0..quarantine_after.max(1) {
         // AssertUnwindSafe: on panic the backend is discarded and rebuilt
         // below, and the config clone is owned by the attempt — nothing
         // in a half-unwound state is observed again.  (The tracer's
@@ -93,7 +96,7 @@ fn run_supervised(
     }
     tracer.instant(Lane::Sweep, "cell_quarantined", 0.0, &[("cell", i as f64)]);
     Err(anyhow::anyhow!(
-        "sweep cell {i} quarantined after {QUARANTINE_AFTER} panics (last: {last})"
+        "sweep cell {i} quarantined after {quarantine_after} panics (last: {last})"
     ))
 }
 
@@ -126,6 +129,13 @@ pub struct ParallelSweeper {
     /// batches in **cell order**, so the merged timeline is deterministic
     /// for any worker count.
     tracer: Tracer,
+    /// Consecutive panics before a cell is quarantined
+    /// (`--quarantine-after`; default [`QUARANTINE_AFTER`], clamped ≥ 1).
+    quarantine_after: u32,
+    /// Sweep-cell journal (`--sweep-journal`): completed cells — keyed by
+    /// [`crate::ckpt::config_digest`] — are read back instead of re-run,
+    /// so an interrupted grid resumes with only its unfinished cells.
+    journal: Option<crate::ckpt::SweepJournal>,
 }
 
 impl ParallelSweeper {
@@ -149,7 +159,24 @@ impl ParallelSweeper {
             spec,
             jobs: jobs.max(1),
             tracer: Tracer::disabled(),
+            quarantine_after: QUARANTINE_AFTER,
+            journal: None,
         })
+    }
+
+    /// Override the panic budget before a cell is quarantined
+    /// (`--quarantine-after`; clamped to ≥ 1).
+    pub fn set_quarantine_after(&mut self, n: u32) {
+        self.quarantine_after = n.max(1);
+    }
+
+    /// Attach a sweep-cell journal (`--sweep-journal`): completed cells
+    /// found in it are returned without re-running, and every freshly
+    /// completed cell is appended — so a crashed or interrupted sweep
+    /// resumes from where it stopped with bit-identical merged results.
+    pub fn set_journal<P: AsRef<std::path::Path>>(&mut self, path: P) {
+        self.journal =
+            Some(crate::ckpt::SweepJournal::new(path.as_ref()));
     }
 
     /// Attach a tracer: every cell run by [`ParallelSweeper::run_many`]
@@ -183,8 +210,41 @@ impl ParallelSweeper {
     }
 
     /// Run every config, in deterministic input order, across up to
-    /// `jobs` worker threads.
+    /// `jobs` worker threads.  With a journal attached
+    /// ([`ParallelSweeper::set_journal`]), cells whose config digest
+    /// already has a valid journal record are read back instead of
+    /// re-run; freshly completed cells are appended.
     pub fn run_many(&self, cfgs: &[RunConfig]) -> Result<Vec<Report>> {
+        let Some(journal) = &self.journal else {
+            return self.run_many_inner(cfgs);
+        };
+        let digests: Vec<u64> =
+            cfgs.iter().map(crate::ckpt::config_digest).collect();
+        let done = journal.load()?;
+        let mut out: Vec<Option<Report>> = Vec::with_capacity(cfgs.len());
+        let mut todo: Vec<usize> = Vec::new();
+        for (i, &d) in digests.iter().enumerate() {
+            match done.iter().find(|(k, _)| *k == d) {
+                Some((_, r)) => out.push(Some(r.clone())),
+                None => {
+                    out.push(None);
+                    todo.push(i);
+                }
+            }
+        }
+        if !todo.is_empty() {
+            let fresh_cfgs: Vec<RunConfig> =
+                todo.iter().map(|&i| cfgs[i].clone()).collect();
+            let fresh = self.run_many_inner(&fresh_cfgs)?;
+            for (&i, r) in todo.iter().zip(fresh) {
+                journal.record(digests[i], &r)?;
+                out[i] = Some(r);
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every cell resolved")).collect())
+    }
+
+    fn run_many_inner(&self, cfgs: &[RunConfig]) -> Result<Vec<Report>> {
         let workers = self.jobs.min(cfgs.len());
         if workers <= 1 {
             // sequential path, same supervision semantics as the worker
@@ -201,7 +261,7 @@ impl ParallelSweeper {
                     &[("cell", i as f64), ("worker", 0.0)],
                 );
                 let mut res = None;
-                for attempt in 1..=QUARANTINE_AFTER {
+                for attempt in 1..=self.quarantine_after {
                     let be: &dyn Backend =
                         replacement.as_deref().unwrap_or(self.be.as_ref());
                     match catch_unwind(AssertUnwindSafe(|| {
@@ -227,7 +287,7 @@ impl ParallelSweeper {
                                     ))
                                 },
                             )?);
-                            if attempt == QUARANTINE_AFTER {
+                            if attempt == self.quarantine_after {
                                 self.tracer.instant(
                                     Lane::Sweep,
                                     "cell_quarantined",
@@ -235,8 +295,9 @@ impl ParallelSweeper {
                                     &[("cell", i as f64)],
                                 );
                                 res = Some(Err(anyhow::anyhow!(
-                                    "sweep cell {i} quarantined after \
-                                     {QUARANTINE_AFTER} panics (last: {msg})"
+                                    "sweep cell {i} quarantined after {} \
+                                     panics (last: {msg})",
+                                    self.quarantine_after
                                 )));
                             }
                         }
@@ -254,6 +315,7 @@ impl ParallelSweeper {
         }
         let spec = &self.spec;
         let trace_on = self.tracer.on();
+        let quarantine_after = self.quarantine_after;
         let next = Mutex::new(0usize);
         let slots: Mutex<Vec<Option<Result<Report>>>> =
             Mutex::new((0..cfgs.len()).map(|_| None).collect());
@@ -308,6 +370,7 @@ impl ParallelSweeper {
                             i,
                             &cfgs[i],
                             &local,
+                            quarantine_after,
                         );
                         if trace_on {
                             cell_events.lock().unwrap()[i] =
@@ -429,6 +492,7 @@ mod tests {
             0,
             &quick(3),
             &Tracer::disabled(),
+            QUARANTINE_AFTER,
         )
         .unwrap();
         // the requeued attempt ran on the restarted (real) backend to
@@ -470,10 +534,72 @@ mod tests {
             7,
             &quick(3),
             &Tracer::disabled(),
+            QUARANTINE_AFTER,
         )
         .unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("quarantined"), "got: {msg}");
         assert!(msg.contains("sweep cell 7"), "got: {msg}");
+    }
+
+    #[test]
+    fn quarantine_budget_of_one_skips_the_retry() {
+        // restart closure that would hand over a working backend — with a
+        // budget of 1 it must never be consulted.
+        let spec = testkit::refcpu_spec();
+        let mut restarts = 0u32;
+        let mut be: Box<dyn Backend> = Box::new(PanicBackend);
+        let err = run_supervised(
+            &mut be,
+            || {
+                restarts += 1;
+                spec.create()
+            },
+            2,
+            &quick(3),
+            &Tracer::disabled(),
+            1,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("after 1 panics"), "got: {err}");
+        assert_eq!(restarts, 1, "restart happens, but no second attempt");
+    }
+
+    #[test]
+    fn raised_quarantine_budget_survives_more_panics() {
+        // a backend that panics the first two times it is constructed:
+        // with the default budget of 2 the cell would quarantine, with 3
+        // it completes on the third attempt.
+        let spec = testkit::refcpu_spec();
+        let mut failures_left = 1u32; // first restart panics too
+        let mut be: Box<dyn Backend> = Box::new(PanicBackend);
+        let got = run_supervised(
+            &mut be,
+            || {
+                if failures_left > 0 {
+                    failures_left -= 1;
+                    Ok(Box::new(PanicBackend) as Box<dyn Backend>)
+                } else {
+                    spec.create()
+                }
+            },
+            0,
+            &quick(3),
+            &Tracer::disabled(),
+            3,
+        )
+        .unwrap();
+        let direct =
+            run_config(testkit::refcpu_backend().as_ref(), quick(3)).unwrap();
+        assert_eq!(got.fingerprint(), direct.fingerprint());
+    }
+
+    #[test]
+    fn sweeper_quarantine_after_is_clamped_and_settable() {
+        let mut sw = ParallelSweeper::new(testkit::refcpu_spec(), 1).unwrap();
+        sw.set_quarantine_after(0);
+        assert_eq!(sw.quarantine_after, 1, "clamped to at least one attempt");
+        sw.set_quarantine_after(5);
+        assert_eq!(sw.quarantine_after, 5);
     }
 }

@@ -47,6 +47,25 @@ impl ValPool {
         }
     }
 
+    /// Checkpoint view: `(d, cap, x, y, head, len)` — the full physical
+    /// ring state, so a restore is bit-identical (including the physical
+    /// rotation, which future pushes depend on).
+    pub fn ckpt_state(&self) -> (usize, usize, &[f32], &[i32], usize, usize) {
+        (self.d, self.cap, &self.x, &self.y, self.head, self.len)
+    }
+
+    /// Rebuild from checkpointed physical state.
+    pub fn restore(
+        d: usize,
+        cap: usize,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        head: usize,
+        len: usize,
+    ) -> ValPool {
+        ValPool { d, cap, x, y, head, len }
+    }
+
     /// Logical index `j` (0 = oldest) -> sample view.
     pub fn get(&self, j: usize) -> (&[f32], i32) {
         debug_assert!(j < self.len);

@@ -1,0 +1,272 @@
+//! Crash-durability battery: deterministic crash injection at round
+//! boundaries, checksummed checkpoint recovery, and bit-identical resume.
+//!
+//! The headline invariant (ROADMAP: durability): for a fixed config and
+//! seed, `fingerprint(crash at round boundary B, then --resume)` equals
+//! `fingerprint(the uncrashed run)` — for **every** boundary B.  Round
+//! boundaries are quiesce points (training buffer drained, serve queues
+//! empty), so a checkpoint record plus the events-done index is the whole
+//! simulation state; the battery proves it by induction over boundaries.
+//!
+//! Also covered here: checksum-detected corruption (`ckpt-flip` /
+//! `ckpt-torn`) falling back to the previous valid record, the seeded
+//! crash-rate loop converging through repeated resumes, sweep-cell
+//! journal resume in `ParallelSweeper`, and the zero-overhead default
+//! (no checkpoint dir → the exact pre-checkpoint code path).
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use etuner::ckpt::{Cadence, CrashInjected, SweepJournal};
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::runtime::FaultPlan;
+use etuner::sim::{run_config, ParallelSweeper, RunConfig};
+use etuner::testkit;
+
+/// Unique scratch dir per test case (no wall clock, no rand — a
+/// process-local counter keeps parallel test binaries apart).
+fn scratch(name: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "etuner-crashrec-{}-{}-{}",
+        std::process::id(),
+        name,
+        N.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick(seed: u64) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.n_requests = 60;
+    c
+}
+
+/// `quick(seed)` with checkpointing into `dir` and the given fault plan.
+fn ckpt_cfg(seed: u64, dir: &PathBuf, every: &str, plan: &str) -> RunConfig {
+    let mut c = quick(seed);
+    c.checkpoint.dir = Some(dir.clone());
+    c.checkpoint.every = Cadence::parse(every).unwrap();
+    c.faults = FaultPlan::parse(plan).unwrap();
+    c
+}
+
+/// (a) The induction: crash after *every* round boundary, resume, and
+/// demand the exact uncrashed fingerprint each time.  Cadence `3r` makes
+/// recovery exercise both paths — journal-tail records between snapshots
+/// and fresh snapshots at the cadence.
+#[test]
+fn resume_after_crash_at_every_round_boundary_is_bit_identical() {
+    let be = testkit::execution_backend();
+    let clean = run_config(be.as_ref(), quick(11)).unwrap();
+    let rounds = clean.rounds;
+    assert!(rounds >= 3, "run too small to exercise boundaries ({rounds})");
+
+    for n in 1..=rounds {
+        let dir = scratch("every-boundary");
+        let plan = format!("crash:after-round-{n}");
+
+        let err = run_config(be.as_ref(), ckpt_cfg(11, &dir, "3r", &plan))
+            .expect_err("crash point never fired");
+        let crash = err
+            .downcast::<CrashInjected>()
+            .expect("run died with a non-crash error");
+        assert_eq!(crash.round, n, "crash latched at the wrong boundary");
+
+        // resume under the *same* config (the digest pins it); the crash
+        // latch was serialized post-fire, so the run completes this time.
+        let mut cfg = ckpt_cfg(11, &dir, "3r", &plan);
+        cfg.checkpoint.resume = true;
+        let resumed = run_config(be.as_ref(), cfg).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            clean.fingerprint(),
+            "resume after a crash at round {n} diverged from the uncrashed run"
+        );
+        assert_eq!(resumed.checkpoint_restores, 1);
+        assert_eq!(resumed.checkpoint_fallbacks, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+/// Time-based crash point: `crash:t=0` fires at the first boundary.
+#[test]
+fn time_based_crash_point_resumes_bit_identically() {
+    let be = testkit::execution_backend();
+    let clean = run_config(be.as_ref(), quick(19)).unwrap();
+    let dir = scratch("t-zero");
+
+    let err = run_config(be.as_ref(), ckpt_cfg(19, &dir, "1r", "crash:t=0"))
+        .expect_err("t=0 crash point never fired");
+    err.downcast::<CrashInjected>().expect("non-crash error");
+
+    let mut cfg = ckpt_cfg(19, &dir, "1r", "crash:t=0");
+    cfg.checkpoint.resume = true;
+    let resumed = run_config(be.as_ref(), cfg).unwrap();
+    assert_eq!(resumed.fingerprint(), clean.fingerprint());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Seeded crash-rate loop: every boundary flips a coin from a dedicated
+/// stream.  The rate RNG is checkpointed post-draw, so each resume makes
+/// progress and the crash sequence is exactly reproducible; looping
+/// resume-until-Ok must converge to the uncrashed fingerprint.
+#[test]
+fn seeded_crash_rate_loop_converges_through_resumes() {
+    let be = testkit::execution_backend();
+    let clean = run_config(be.as_ref(), quick(17)).unwrap();
+    let dir = scratch("rate");
+    let plan = "crash:0.5,seed:4";
+
+    let mut last = run_config(be.as_ref(), ckpt_cfg(17, &dir, "2r", plan));
+    let mut resumes = 0u64;
+    while let Err(e) = last {
+        e.downcast::<CrashInjected>().expect("non-crash error");
+        resumes += 1;
+        assert!(resumes <= 64, "crash loop did not converge");
+        let mut cfg = ckpt_cfg(17, &dir, "2r", plan);
+        cfg.checkpoint.resume = true;
+        last = run_config(be.as_ref(), cfg);
+    }
+    let fin = last.unwrap();
+    assert_eq!(
+        fin.fingerprint(),
+        clean.fingerprint(),
+        "crash-rate resume loop diverged after {resumes} resumes"
+    );
+    // each successful resume restored exactly once, and the report
+    // accumulates them across the whole resume chain
+    assert_eq!(fin.checkpoint_restores, resumes);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// (b) Corruption: flip one byte in (or tear) the newest record before
+/// the crash, and recovery must detect the checksum/framing damage, fall
+/// back to the previous valid record, count the fallback, and still land
+/// the uncrashed fingerprint.  Because the corrupted record also held the
+/// crash latch, the crash may re-fire on the redone boundary — the
+/// resume-until-Ok loop absorbs that (it is exactly what a supervisor
+/// restarting the process would experience).
+#[test]
+fn corrupt_newest_record_falls_back_and_still_lands_the_fingerprint() {
+    let be = testkit::execution_backend();
+    let clean = run_config(be.as_ref(), quick(13)).unwrap();
+    assert!(clean.rounds >= 3, "run too small ({})", clean.rounds);
+
+    for corrupt in ["ckpt-flip:3", "ckpt-torn:3"] {
+        let dir = scratch("corrupt");
+        let plan = format!("{corrupt},crash:after-round-3");
+
+        let err = run_config(be.as_ref(), ckpt_cfg(13, &dir, "1r", &plan))
+            .expect_err("crash point never fired");
+        err.downcast::<CrashInjected>().expect("non-crash error");
+
+        let mut fin = None;
+        for _attempt in 0..8 {
+            let mut cfg = ckpt_cfg(13, &dir, "1r", &plan);
+            cfg.checkpoint.resume = true;
+            match run_config(be.as_ref(), cfg) {
+                Ok(r) => {
+                    fin = Some(r);
+                    break;
+                }
+                Err(e) => {
+                    e.downcast::<CrashInjected>().expect("non-crash error");
+                }
+            }
+        }
+        let fin = fin.expect("corruption resume loop never completed");
+        assert_eq!(
+            fin.fingerprint(),
+            clean.fingerprint(),
+            "{corrupt}: fallback recovery diverged from the uncrashed run"
+        );
+        assert!(
+            fin.checkpoint_fallbacks >= 1,
+            "{corrupt}: recovery never detected the corrupted record"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+/// (c) Sweep-cell journal: a partial grid records its finished cells;
+/// re-running the full grid completes only the unfinished ones, and the
+/// merged results are bit-identical to an uninterrupted `run_many`.
+#[test]
+fn sweep_journal_resumes_only_unfinished_cells_bit_identically() {
+    let cfgs: Vec<RunConfig> = (1..=4).map(quick).collect();
+    let plain = ParallelSweeper::new(testkit::refcpu_spec(), 2)
+        .unwrap()
+        .run_many(&cfgs)
+        .unwrap();
+
+    let dir = scratch("sweep");
+    let path = dir.join("journal.bin");
+    let mut sw = ParallelSweeper::new(testkit::refcpu_spec(), 2).unwrap();
+    sw.set_journal(&path);
+
+    // interrupted grid: only the first two cells finish
+    let partial = sw.run_many(&cfgs[..2]).unwrap();
+    for (a, b) in plain[..2].iter().zip(&partial) {
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+    assert_eq!(SweepJournal::new(&path).load().unwrap().len(), 2);
+
+    // resume: the full grid — cells 0/1 read back, 2/3 run fresh
+    let full = sw.run_many(&cfgs).unwrap();
+    assert_eq!(SweepJournal::new(&path).load().unwrap().len(), 4);
+    for (i, (a, b)) in plain.iter().zip(&full).enumerate() {
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "journal-merged cell {i} diverged from the uninterrupted sweep"
+        );
+    }
+
+    // a third pass finds every cell journaled: nothing re-runs, nothing
+    // is re-recorded
+    let len = fs::metadata(&path).unwrap().len();
+    let again = sw.run_many(&cfgs).unwrap();
+    assert_eq!(
+        fs::metadata(&path).unwrap().len(),
+        len,
+        "fully-journaled sweep re-recorded cells"
+    );
+    for (a, b) in full.iter().zip(&again) {
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// (d) The default config constructs none of this: counters stay zero,
+/// and turning checkpointing *on* must not perturb the science either —
+/// the writer only observes quiesced state, so the fingerprint is the
+/// same with and without it.
+#[test]
+fn default_config_takes_the_pre_checkpoint_path() {
+    let be = testkit::execution_backend();
+    let off = run_config(be.as_ref(), quick(21)).unwrap();
+    assert_eq!(off.checkpoints_written, 0);
+    assert_eq!(off.checkpoint_bytes, 0);
+    assert_eq!(off.checkpoint_restores, 0);
+    assert_eq!(off.checkpoint_fallbacks, 0);
+
+    let dir = scratch("passive");
+    let mut cfg = quick(21);
+    cfg.checkpoint.dir = Some(dir.clone());
+    let on = run_config(be.as_ref(), cfg).unwrap();
+    assert_eq!(
+        off.fingerprint(),
+        on.fingerprint(),
+        "writing checkpoints perturbed the simulation"
+    );
+    assert!(on.checkpoints_written > 0, "no record hit the directory");
+    assert!(on.checkpoint_bytes > 0);
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -21,8 +21,8 @@ use etuner::metrics::hist::HistRegistry;
 use etuner::model::{Cwr, ModelSession};
 use etuner::runtime::FaultPlan;
 use etuner::serve::{
-    run_pool, FleetConfig, FleetPoolSpec, FleetYield, QueuedRequest,
-    ServeConfig, ServeCtx, ServeEvent,
+    run_pool, FaultScope, FleetConfig, FleetPoolSpec, FleetYield,
+    QueuedRequest, ServeConfig, ServeCtx, ServeEvent,
 };
 use etuner::sim::{RunConfig, Simulation};
 use etuner::testkit;
@@ -389,6 +389,64 @@ fn arrival_conservation_holds_with_one_engine_degraded() {
     assert_eq!(seq.counters, thr.counters, "fault replay diverged");
     assert_eq!(rendered(&seq.events), rendered(&thr.events));
     assert_eq!(seq.hists, thr.hists);
+}
+
+/// `--fault-scope all` puts every engine behind its own fault decorator
+/// (per-engine salted seeds).  With every executor deterministically down,
+/// no engine can serve or even install a bank — yet every arrival is still
+/// accounted, multiple breakers trip, and the sequential/threaded pools
+/// agree bit for bit.  The default `engine0` scope on the same plan keeps
+/// engines 1..N healthy, so requests still get served — the two scopes are
+/// observably different.
+#[test]
+fn fault_scope_all_degrades_every_engine_and_conserves_arrivals() {
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let mut serve = ServeConfig {
+        batch_window_s: 50.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    serve.recovery.max_attempts = 1; // every fault is a flush failure
+    serve.recovery.breaker_threshold = 2; // ... and two of them trip it
+    serve.recovery.breaker_cooldown_s = 1e9; // stays open through drain
+    let fleet = FleetConfig { engines: 4, ..FleetConfig::default() };
+    let mut cfg = spec(serve, fleet, 2, false);
+    cfg.faults = FaultPlan::parse("exec:1.0,seed:3").unwrap();
+    cfg.fault_seed = 9;
+    let wl = workload(sess.m.d, rows, 24, 2);
+
+    // default scope: only engine 0 is down, the rest of the fleet serves
+    let one = run_pool(&cfg, &wl, 1000.0, false).unwrap();
+    assert!(
+        one.counters.served > 0,
+        "healthy engines stopped serving under an engine0-scoped outage"
+    );
+    assert_eq!(one.counters.served + one.counters.requests_dropped(), 24);
+
+    // all scope: every engine is down — nothing serves, nothing is lost
+    cfg.fleet.fault_scope = FaultScope::All;
+    let seq = run_pool(&cfg, &wl, 1000.0, false).unwrap();
+    let thr = run_pool(&cfg, &wl, 1000.0, true).unwrap();
+    assert_eq!(seq.counters, thr.counters, "all-scope fault replay diverged");
+    assert_eq!(rendered(&seq.events), rendered(&thr.events));
+    assert_eq!(seq.hists, thr.hists);
+    assert_eq!(
+        seq.counters.served, 0,
+        "a fully degraded fleet somehow served a request"
+    );
+    assert_eq!(
+        seq.counters.served + seq.counters.requests_dropped(),
+        24,
+        "requests lost with the whole fleet degraded"
+    );
+    assert!(
+        seq.counters.breaker_trips >= 2,
+        "only one breaker tripped — the fault scope did not reach the \
+         other engines"
+    );
 }
 
 /// The ablation arm: affinity off routes purely least-loaded.
