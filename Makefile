@@ -9,9 +9,14 @@
 #   make ci-fleet    fleet lane: --fleet 4 CLI smoke + the fleet test battery
 #   make ci-crash    durability lane: crash-inject CLI smoke (exit 3 ->
 #                    --resume) + the crash/recovery test battery
+#   make ci-load     load lane: capacity-search CLI smoke + the load
+#                    property battery (rate/ratio/zipf pins, sweep and
+#                    knee bit-identity across --jobs)
 #   make bench       hotpath microbenchmarks -> BENCH_hotpath.json
 #                    (mean/min/max ms per benchmark; tracked across PRs)
 #   make bench-gemm  isolated packed-vs-naive kernel series -> BENCH_gemm.json
+#   make bench-load  isolated load-generator + open-loop-run series ->
+#                    BENCH_load.json
 #   make bench-snapshot PR=N   archive BENCH_hotpath.json under bench_history/
 #   make repro       regenerate every paper table/figure, all cores
 
@@ -19,8 +24,8 @@ ARTIFACTS ?= $(CURDIR)/rust/artifacts
 JOBS ?= $(shell nproc 2>/dev/null || echo 1)
 PR ?= dev
 
-.PHONY: artifacts build test ci ci-faults ci-trace ci-fleet ci-crash bench \
-	bench-gemm bench-snapshot repro
+.PHONY: artifacts build test ci ci-faults ci-trace ci-fleet ci-crash ci-load \
+	bench bench-gemm bench-load bench-snapshot repro
 
 artifacts:
 	cd python/compile && python3 aot.py --out $(ARTIFACTS)
@@ -103,6 +108,18 @@ ci-crash:
 		--resume /tmp/etuner_ci_crash
 	cd rust && cargo test -q --release --test crash_recovery
 
+# Load lane (PR 10): an open-loop capacity-search CLI smoke on the
+# refcpu backend (coarse bracket, short window — proves the whole
+# generator -> sweep -> bisection -> knee pipeline end to end under
+# --jobs 2) followed by the load property battery: pinned-seed
+# rate/peak-trough/zipf-ranking checks, N=1 vs N=4 sweep bit-identity
+# for open-loop configs, and probe-log bit-identity of the knee.
+ci-load:
+	cd rust && cargo run --release -q -- capacity --backend refcpu \
+		--workload poisson --load-window 30 --slo-ms 2000 \
+		--lo 0.2 --hi 2 --iters 1 --probes 1 --jobs 2
+	cd rust && cargo test -q --release --test load
+
 bench:
 	cd rust && ETUNER_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json \
 		cargo bench --bench hotpath
@@ -112,6 +129,14 @@ bench:
 bench-gemm:
 	cd rust && ETUNER_BENCH_FILTER=gemm \
 		ETUNER_BENCH_OUT=$(CURDIR)/BENCH_gemm.json \
+		cargo bench --bench hotpath
+
+# Only the load series (generator throughput per workload kind, zipf mix
+# assignment, and one end-to-end open-loop refcpu run); separate output
+# file for the same clobber-safety reason as bench-gemm.
+bench-load:
+	cd rust && ETUNER_BENCH_FILTER=load \
+		ETUNER_BENCH_OUT=$(CURDIR)/BENCH_load.json \
 		cargo bench --bench hotpath
 
 # Archive the current bench run as this PR's snapshot so the perf

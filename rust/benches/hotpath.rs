@@ -698,6 +698,56 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- load layer: open-loop generation + mix + injected run (PR 10) ----
+    // Generation and mix assignment are backend-free (pure Pcg32 + f64
+    // arithmetic) and must stay negligible against a single execute; the
+    // end-to-end row prices a full quickstart simulation fed by an
+    // injected open-loop stream on the executing refcpu backend.
+    if section("load") {
+        use etuner::load::{open_loop_times, MixSampler, MixSpec, WorkloadKind, WorkloadSpec};
+        use etuner::sim::{run_config, RunConfig};
+
+        let mut sink = 0usize;
+        for kind in WorkloadKind::all() {
+            report(
+                &format!("load: gen {} (50 rps x 200s)", kind.name()),
+                bench(3, 30, || {
+                    let mut g = Pcg32::new(11, 29);
+                    sink += open_loop_times(kind, 50.0, 200.0, &mut g).len();
+                }),
+            );
+        }
+        let spec = MixSpec::parse("zipf:s=1.1,k=8,shift=0.5").unwrap();
+        let sampler = MixSampler::new(&spec, 10, 200.0);
+        let mut g = Pcg32::new(13, 31);
+        let ts = open_loop_times(WorkloadKind::Poisson, 50.0, 200.0, &mut g);
+        report(
+            &format!("load: zipf mix assign ({} arrivals)", ts.len()),
+            bench(3, 30, || {
+                let mut r = Pcg32::new(17, 37);
+                for &t in &ts {
+                    sink += sampler.scenario_at(t, &mut r);
+                }
+            }),
+        );
+        report(
+            "load: open-loop run (poisson 1.5 rps, 40s window)",
+            bench(1, 3, || {
+                let mut cfg = RunConfig::quickstart("mbv2", Benchmark::SCifar10);
+                cfg.seed = 7;
+                cfg.workload = Some(WorkloadSpec {
+                    kind: WorkloadKind::Poisson,
+                    offered_rps: 1.5,
+                    window_s: Some(40.0),
+                    mix: None,
+                });
+                let r = run_config(refcpu.as_ref(), cfg).unwrap();
+                sink += r.requests.len();
+            }),
+        );
+        std::hint::black_box(sink);
+    }
+
     // ---- coordinator-only components (backend-free) ----
     if section("coordinator") {
         let pts: Vec<(f64, f64)> =

@@ -17,24 +17,28 @@ pub enum ArrivalKind {
     Trace,
 }
 
+/// Single source of truth for the CLI name ↔ kind pairing: `parse` and
+/// `name` both read this table, so adding a variant is one new row and
+/// the two directions cannot drift.
+const KINDS: [(&str, ArrivalKind); 4] = [
+    ("poisson", ArrivalKind::Poisson),
+    ("uniform", ArrivalKind::Uniform),
+    ("normal", ArrivalKind::Normal),
+    ("trace", ArrivalKind::Trace),
+];
+
 impl ArrivalKind {
     pub fn parse(s: &str) -> Option<ArrivalKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "poisson" => ArrivalKind::Poisson,
-            "uniform" => ArrivalKind::Uniform,
-            "normal" => ArrivalKind::Normal,
-            "trace" => ArrivalKind::Trace,
-            _ => return None,
-        })
+        let lower = s.to_ascii_lowercase();
+        KINDS.iter().find(|(n, _)| *n == lower).map(|&(_, k)| k)
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            ArrivalKind::Poisson => "poisson",
-            ArrivalKind::Uniform => "uniform",
-            ArrivalKind::Normal => "normal",
-            ArrivalKind::Trace => "trace",
-        }
+        KINDS
+            .iter()
+            .find(|(_, k)| k == self)
+            .map(|&(n, _)| n)
+            .unwrap_or("unknown")
     }
 }
 
@@ -139,5 +143,53 @@ mod tests {
     fn empty_request_stream_ok() {
         let mut rng = Pcg32::new(1, 1);
         assert!(arrivals(ArrivalKind::Poisson, 0, 100.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn parse_and_name_round_trip_through_one_table() {
+        for k in [
+            ArrivalKind::Poisson,
+            ArrivalKind::Uniform,
+            ArrivalKind::Normal,
+            ArrivalKind::Trace,
+        ] {
+            assert_eq!(ArrivalKind::parse(k.name()), Some(k));
+            assert_eq!(
+                ArrivalKind::parse(&k.name().to_ascii_uppercase()),
+                Some(k)
+            );
+        }
+        assert_eq!(ArrivalKind::parse("bursty"), None);
+    }
+
+    #[test]
+    fn output_is_sorted_and_strictly_clipped_for_every_kind() {
+        // strictly inside [0, horizon): the rescale multiplies by
+        // horizon/last * 0.999, so even the final timestamp lands short
+        // of the horizon — for every kind, across several seeds/sizes.
+        for k in [
+            ArrivalKind::Poisson,
+            ArrivalKind::Uniform,
+            ArrivalKind::Normal,
+            ArrivalKind::Trace,
+        ] {
+            for (seed, n, horizon) in
+                [(1u64, 50usize, 100.0f64), (7, 500, 2500.0), (23, 3, 10.0)]
+            {
+                let mut rng = Pcg32::new(seed, 4);
+                let xs = arrivals(k, n, horizon, &mut rng);
+                assert_eq!(xs.len(), n);
+                assert!(
+                    xs.windows(2).all(|w| w[0] <= w[1]),
+                    "{k:?} seed {seed} not sorted"
+                );
+                assert!(xs[0] >= 0.0, "{k:?} seed {seed} negative start");
+                assert!(
+                    *xs.last().unwrap() < horizon,
+                    "{k:?} seed {seed} last {} not strictly < {horizon}",
+                    xs.last().unwrap()
+                );
+            }
+        }
     }
 }

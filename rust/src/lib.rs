@@ -45,6 +45,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod data;
 pub mod json;
+pub mod load;
 pub mod metrics;
 pub mod model;
 pub mod nnls;
@@ -62,6 +63,10 @@ pub mod prelude {
     pub use crate::cost::device::DeviceModel;
     pub use crate::data::arrival::ArrivalKind;
     pub use crate::data::benchmarks::Benchmark;
+    pub use crate::load::{
+        capacity_search, CapacityResult, CapacitySpec, MixSpec, WorkloadKind,
+        WorkloadSpec,
+    };
     pub use crate::metrics::Report;
     pub use crate::runtime::{
         Backend, BackendKind, BackendSpec, FaultPlan, FaultyBackend,

@@ -1,0 +1,260 @@
+//! Capacity search: binary-search offered RPS for the knee of the
+//! latency-vs-throughput curve against an SLO predicate.
+//!
+//! The production question behind the whole load layer (modelled on the
+//! IC scalability harness): *what is the maximum sustainable request
+//! rate under the SLO?*  A probe at offered rate `r` is one full
+//! simulated run with an open-loop workload pinned to `r`; it **passes**
+//! when `latency_p99_ms ≤ slo_ms` and the drop rate is `≤ drop_eps`
+//! (drops only happen under explicit shedding knobs, so by default the
+//! p99 criterion binds).  The knee is the highest probed rate that
+//! passes.
+//!
+//! # Determinism contract
+//!
+//! The reported knee is **bit-identical** between sequential and
+//! `--jobs N` probe execution (pinned by `tests/load.rs`):
+//!
+//! * every bisection iteration evaluates a *fixed* fan-out of
+//!   [`CapacitySpec::probes_per_iter`] interior points — the fan-out
+//!   never depends on the worker count, it only decides how much of the
+//!   batch runs concurrently;
+//! * each batch goes through [`ParallelSweeper::run_many`], whose
+//!   reports are worker-count independent by the sweep contract;
+//! * the bracket update walks the batch in ascending-rate order and
+//!   stops at the first failure, so a (noise-induced) non-monotone
+//!   response cannot invert the bracket;
+//! * probe rates are pure f64 arithmetic on the bracket — no RNG, no
+//!   wall clock.
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::Report;
+use crate::sim::{ParallelSweeper, RunConfig};
+
+/// Search configuration: SLO predicate + RPS bracket + probe schedule.
+#[derive(Clone, Debug)]
+pub struct CapacitySpec {
+    /// Pass while the run's global p99 latency is at or under this.
+    pub slo_ms: f64,
+    /// Pass while `dropped / (served + dropped)` is at or under this.
+    pub drop_eps: f64,
+    /// Bracket floor (assumed sustainable; verified by the first batch).
+    pub lo_rps: f64,
+    /// Bracket ceiling (assumed saturating; verified by the first batch).
+    pub hi_rps: f64,
+    /// Bisection iterations after the endpoint batch.
+    pub iters: usize,
+    /// Interior probe points per iteration — a constant fan-out, NOT the
+    /// worker count, so the probe schedule (and therefore the knee) is
+    /// identical at any `--jobs`.
+    pub probes_per_iter: usize,
+}
+
+impl Default for CapacitySpec {
+    fn default() -> CapacitySpec {
+        CapacitySpec {
+            slo_ms: 250.0,
+            drop_eps: 0.01,
+            lo_rps: 0.1,
+            hi_rps: 8.0,
+            iters: 4,
+            probes_per_iter: 3,
+        }
+    }
+}
+
+/// One evaluated probe point.
+#[derive(Clone, Debug)]
+pub struct CapacityProbe {
+    pub offered_rps: f64,
+    pub p99_ms: f64,
+    pub drop_rate: f64,
+    pub served: usize,
+    pub dropped: u64,
+    pub passed: bool,
+}
+
+/// The knee plus the full probe log (evaluation order).
+#[derive(Clone, Debug)]
+pub struct CapacityResult {
+    /// Highest probed rate that met the SLO (0.0 when even `lo_rps`
+    /// failed — the bracket floor is already past saturation).
+    pub knee_rps: f64,
+    pub p99_at_knee_ms: f64,
+    pub drop_rate_at_knee: f64,
+    /// Lowest probed rate known to fail (`hi_rps` when the ceiling
+    /// passed — the bracket never saturated).
+    pub bracket_hi_rps: f64,
+    /// False when `hi_rps` itself passed: the knee is a bracket
+    /// artifact, widen `hi_rps` to find the real one.
+    pub saturated: bool,
+    pub probes: Vec<CapacityProbe>,
+}
+
+/// Drop rate over everything that arrived: `dropped / (served + dropped)`.
+pub fn drop_rate(r: &Report) -> f64 {
+    let total = r.requests.len() as f64 + r.requests_dropped as f64;
+    if total == 0.0 {
+        0.0
+    } else {
+        r.requests_dropped as f64 / total
+    }
+}
+
+/// The SLO predicate a probe must satisfy.
+pub fn slo_pass(r: &Report, spec: &CapacitySpec) -> bool {
+    r.latency_p99_ms <= spec.slo_ms && drop_rate(r) <= spec.drop_eps
+}
+
+/// Evaluate one batch of offered rates concurrently.  `base.workload`
+/// must be `Some`; each probe clones it with the rate overridden.
+fn run_probes(
+    sw: &ParallelSweeper,
+    base: &RunConfig,
+    spec: &CapacitySpec,
+    rates: &[f64],
+) -> Result<Vec<CapacityProbe>> {
+    let cfgs: Vec<RunConfig> = rates
+        .iter()
+        .map(|&rps| {
+            let mut c = base.clone();
+            if let Some(w) = c.workload.as_mut() {
+                w.offered_rps = rps;
+            }
+            c
+        })
+        .collect();
+    let reports = sw.run_many(&cfgs)?;
+    Ok(rates
+        .iter()
+        .zip(&reports)
+        .map(|(&offered_rps, r)| CapacityProbe {
+            offered_rps,
+            p99_ms: r.latency_p99_ms,
+            drop_rate: drop_rate(r),
+            served: r.requests.len(),
+            dropped: r.requests_dropped,
+            passed: slo_pass(r, spec),
+        })
+        .collect())
+}
+
+/// Find the knee of the latency-vs-throughput curve for `base`'s
+/// workload.  `base.workload` must be set (the kind/mix/window are kept;
+/// only `offered_rps` is swept).
+pub fn capacity_search(
+    sw: &ParallelSweeper,
+    base: &RunConfig,
+    spec: &CapacitySpec,
+) -> Result<CapacityResult> {
+    ensure!(
+        base.workload.is_some(),
+        "capacity search needs an open-loop workload on the config \
+         (--workload)"
+    );
+    ensure!(spec.lo_rps > 0.0, "bracket floor must be positive");
+    ensure!(
+        spec.hi_rps > spec.lo_rps,
+        "bracket ceiling {} must exceed floor {}",
+        spec.hi_rps,
+        spec.lo_rps
+    );
+
+    // batch 0: validate both endpoints.
+    let mut probes = run_probes(sw, base, spec, &[spec.lo_rps, spec.hi_rps])?;
+    if !probes[0].passed {
+        // the floor already violates the SLO: nothing in the bracket is
+        // sustainable.
+        let p = probes[0].clone();
+        return Ok(CapacityResult {
+            knee_rps: 0.0,
+            p99_at_knee_ms: p.p99_ms,
+            drop_rate_at_knee: p.drop_rate,
+            bracket_hi_rps: spec.lo_rps,
+            saturated: true,
+            probes,
+        });
+    }
+    if probes[1].passed {
+        // the ceiling is sustainable: the bracket never saturated.
+        let p = probes[1].clone();
+        return Ok(CapacityResult {
+            knee_rps: spec.hi_rps,
+            p99_at_knee_ms: p.p99_ms,
+            drop_rate_at_knee: p.drop_rate,
+            bracket_hi_rps: spec.hi_rps,
+            saturated: false,
+            probes,
+        });
+    }
+
+    let mut lo = spec.lo_rps; // highest rate known to pass
+    let mut hi = spec.hi_rps; // lowest rate known to fail
+    let mut knee = probes[0].clone();
+    let m = spec.probes_per_iter.max(1);
+    for _ in 0..spec.iters {
+        let rates: Vec<f64> = (1..=m)
+            .map(|i| lo + (hi - lo) * i as f64 / (m + 1) as f64)
+            .collect();
+        let batch = run_probes(sw, base, spec, &rates)?;
+        for p in &batch {
+            if p.passed {
+                lo = p.offered_rps;
+                knee = p.clone();
+            } else {
+                hi = p.offered_rps;
+                break;
+            }
+        }
+        probes.extend(batch);
+    }
+    Ok(CapacityResult {
+        knee_rps: lo,
+        p99_at_knee_ms: knee.p99_ms,
+        drop_rate_at_knee: knee.drop_rate,
+        bracket_hi_rps: hi,
+        saturated: true,
+        probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(p99: f64, served: usize, dropped: u64) -> Report {
+        let mut r = Report {
+            latency_p99_ms: p99,
+            requests_dropped: dropped,
+            ..Report::default()
+        };
+        for _ in 0..served {
+            r.requests.push(crate::metrics::RequestRecord {
+                t: 0.0,
+                scenario: 1,
+                accuracy: 0.5,
+                stale_batches: 0,
+                latency_s: 0.0,
+                batch_requests: 1,
+                queue_depth: 0,
+                degraded: false,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn predicate_binds_on_p99_and_drop_rate() {
+        let spec = CapacitySpec { slo_ms: 100.0, drop_eps: 0.05, ..CapacitySpec::default() };
+        assert!(slo_pass(&report(90.0, 100, 0), &spec));
+        assert!(!slo_pass(&report(110.0, 100, 0), &spec), "p99 over SLO");
+        assert!(!slo_pass(&report(90.0, 90, 10), &spec), "10% drops");
+        assert!(slo_pass(&report(90.0, 99, 1), &spec), "1% drops pass");
+    }
+
+    #[test]
+    fn drop_rate_of_empty_report_is_zero() {
+        assert_eq!(drop_rate(&Report::default()), 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! Seeded, deterministic **open-loop** workload generators.
+//!
+//! [`crate::data::arrival::arrivals`] answers "spread `n` requests over
+//! the horizon" — it rescales whatever gaps it drew so the stream always
+//! spans `[0, horizon)`, which makes the *offered rate* a constant
+//! `n / horizon` regardless of the distribution.  That is a closed-ish
+//! trace: it can shape burstiness but cannot sweep load, so the system
+//! can never be pushed past saturation.
+//!
+//! The generators here are the opposite contract (MLPerf-style open
+//! loop): the caller configures an **offered rate** and timestamps are
+//! emitted independently of completions — no rescaling, no coupling to
+//! service times.  The request *count* is emergent (`≈ rate × horizon`)
+//! and the queue is allowed to grow without bound, which is exactly what
+//! [`crate::load::capacity`] needs to find the latency-vs-throughput
+//! knee.
+//!
+//! Four gap processes, all driven by one [`Pcg32`] stream so a run is
+//! exactly reproducible from `(spec, seed)`:
+//!
+//! * **poisson** — exponential gaps at the offered rate (the paper's
+//!   default arrival model);
+//! * **bursty** — Markov-modulated on/off: exponential dwells alternate
+//!   between a hi-rate and a lo-rate state, duty-weighted to the offered
+//!   mean rate;
+//! * **diurnal** — inhomogeneous Poisson with a sinusoidal rate envelope
+//!   over the horizon (one full day-cycle), realized by thinning against
+//!   the peak rate; peak/trough ratio is
+//!   `(1 + DIURNAL_AMPLITUDE) / (1 - DIURNAL_AMPLITUDE)`;
+//! * **pareto** — heavy-tailed Pareto gaps (tail index
+//!   [`PARETO_ALPHA`], infinite variance) scaled so the *mean* gap is
+//!   `1 / rate`.
+
+use crate::data::stream::{Event, EventKind, Stream};
+use crate::rng::Pcg32;
+
+use super::mix::{MixSampler, MixSpec};
+
+/// Mean dwell of each bursty on/off state, virtual seconds.
+pub const BURSTY_DWELL_MEAN_S: f64 = 5.0;
+/// Bursty hi-state rate multiplier (lo-state gets `2 - hi` so the
+/// duty-weighted mean over equal expected dwells is the offered rate).
+pub const BURSTY_HI_FACTOR: f64 = 1.8;
+/// Diurnal envelope amplitude `a`: rate swings `offered * (1 ± a)`, so
+/// the configured peak/trough ratio is `(1 + a) / (1 - a)` = 4.
+pub const DIURNAL_AMPLITUDE: f64 = 0.6;
+/// Pareto tail index (1 < α < 2: finite mean, infinite variance).
+pub const PARETO_ALPHA: f64 = 1.8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Poisson,
+    Bursty,
+    Diurnal,
+    Pareto,
+}
+
+/// Single source of truth for the CLI name ↔ kind pairing — `parse` and
+/// `name` both read it, so a new variant cannot drift between them (the
+/// fix `data/arrival.rs` also adopts in this PR).
+const KINDS: [(&str, WorkloadKind); 4] = [
+    ("poisson", WorkloadKind::Poisson),
+    ("bursty", WorkloadKind::Bursty),
+    ("diurnal", WorkloadKind::Diurnal),
+    ("pareto", WorkloadKind::Pareto),
+];
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        let lower = s.to_ascii_lowercase();
+        KINDS.iter().find(|(n, _)| *n == lower).map(|&(_, k)| k)
+    }
+
+    pub fn name(&self) -> &'static str {
+        KINDS
+            .iter()
+            .find(|(_, k)| k == self)
+            .map(|&(n, _)| n)
+            .unwrap_or("unknown")
+    }
+
+    /// Every kind, in table order (repro sweeps iterate this).
+    pub fn all() -> [WorkloadKind; 4] {
+        [
+            WorkloadKind::Poisson,
+            WorkloadKind::Bursty,
+            WorkloadKind::Diurnal,
+            WorkloadKind::Pareto,
+        ]
+    }
+}
+
+/// An open-loop workload: gap process + offered rate (+ optional scenario
+/// mix and probe window).  Carried on [`crate::sim::RunConfig`] as
+/// `workload: Option<WorkloadSpec>`; `None` — the default — keeps the
+/// closed-ish `n_requests` stream byte-identical to every prior PR.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub kind: WorkloadKind,
+    /// Offered request rate, requests per virtual second.
+    pub offered_rps: f64,
+    /// Generate arrivals only over the first `min(window_s, horizon)`
+    /// virtual seconds (`None` = the full horizon).  Capacity probes use
+    /// this to bound event counts at high offered rates.
+    pub window_s: Option<f64>,
+    /// Zipf-skewed multi-scenario composition (`--mix`); `None` assigns
+    /// each request the scenario active in its arrival window, exactly
+    /// like the closed stream does.
+    pub mix: Option<MixSpec>,
+}
+
+impl WorkloadSpec {
+    pub fn poisson(offered_rps: f64) -> WorkloadSpec {
+        WorkloadSpec {
+            kind: WorkloadKind::Poisson,
+            offered_rps,
+            window_s: None,
+            mix: None,
+        }
+    }
+
+    /// Append this workload's inference events to `stream` (generated
+    /// with `n_requests == 0`, so the closed-stream RNG is untouched)
+    /// and re-sort.  The sort is stable and train events were pushed
+    /// first, so train-before-inference tie order matches the closed
+    /// stream's.  Scenario ids are always in `1..n_scen` — valid indexes
+    /// into the benchmark schedule.
+    pub fn inject(&self, stream: &mut Stream, n_scen: usize, seed: u64) {
+        debug_assert!(n_scen >= 2, "need at least one continual scenario");
+        let horizon = match self.window_s {
+            Some(w) => w.min(stream.horizon),
+            None => stream.horizon,
+        };
+        let mut rng = Pcg32::new(seed ^ 0x10AD_0001, 29);
+        let times =
+            open_loop_times(self.kind, self.offered_rps, horizon, &mut rng);
+        let window = stream.horizon / (n_scen - 1) as f64;
+        let sampler = self
+            .mix
+            .as_ref()
+            .map(|m| MixSampler::new(m, n_scen, stream.horizon));
+        for t in times {
+            let scenario = match &sampler {
+                Some(s) => s.scenario_at(t, &mut rng),
+                None => ((t / window) as usize).min(n_scen - 2) + 1,
+            };
+            stream.events.push(Event {
+                t,
+                scenario,
+                kind: EventKind::Inference,
+            });
+        }
+        stream
+            .events
+            .sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+    }
+}
+
+/// Emit open-loop arrival timestamps: strictly increasing-or-equal,
+/// clipped to `[0, horizon)`, **never rescaled** — the empirical rate
+/// converges to `offered_rps` but the count is emergent.
+pub fn open_loop_times(
+    kind: WorkloadKind,
+    offered_rps: f64,
+    horizon: f64,
+    rng: &mut Pcg32,
+) -> Vec<f64> {
+    if offered_rps <= 0.0 || horizon <= 0.0 {
+        return vec![];
+    }
+    let mut out = Vec::with_capacity((offered_rps * horizon) as usize + 16);
+    match kind {
+        WorkloadKind::Poisson => {
+            let mut t = rng.exponential(offered_rps);
+            while t < horizon {
+                out.push(t);
+                t += rng.exponential(offered_rps);
+            }
+        }
+        WorkloadKind::Bursty => {
+            // alternate exponential dwells between a hi- and a lo-rate
+            // Poisson state; equal mean dwells duty-weight the pair back
+            // to the offered mean.
+            let lo_factor = 2.0 - BURSTY_HI_FACTOR;
+            let mut t = 0.0;
+            let mut hi = true;
+            while t < horizon {
+                let dwell = rng.exponential(1.0 / BURSTY_DWELL_MEAN_S);
+                let end = (t + dwell).min(horizon);
+                let rate = offered_rps
+                    * if hi { BURSTY_HI_FACTOR } else { lo_factor };
+                let mut u = t + rng.exponential(rate);
+                while u < end {
+                    out.push(u);
+                    u += rng.exponential(rate);
+                }
+                t = end;
+                hi = !hi;
+            }
+        }
+        WorkloadKind::Diurnal => {
+            // inhomogeneous Poisson by thinning: propose at the peak
+            // rate, accept with probability r(t)/peak.  One full cycle
+            // over the horizon (peak at horizon/4, trough at 3/4).
+            let peak = offered_rps * (1.0 + DIURNAL_AMPLITUDE);
+            let mut t = rng.exponential(peak);
+            while t < horizon {
+                let r = offered_rps
+                    * (1.0
+                        + DIURNAL_AMPLITUDE
+                            * (std::f64::consts::TAU * t / horizon).sin());
+                if rng.f64() * peak < r {
+                    out.push(t);
+                }
+                t += rng.exponential(peak);
+            }
+        }
+        WorkloadKind::Pareto => {
+            // gap = xm * U^(-1/α); xm chosen so the mean gap is 1/rate.
+            let xm = (PARETO_ALPHA - 1.0) / PARETO_ALPHA / offered_rps;
+            let mut t = 0.0;
+            loop {
+                let u = rng.f64().max(1e-12);
+                t += xm / u.powf(1.0 / PARETO_ALPHA);
+                if t >= horizon {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_share_one_table() {
+        for k in WorkloadKind::all() {
+            assert_eq!(WorkloadKind::parse(k.name()), Some(k));
+            assert_eq!(
+                WorkloadKind::parse(&k.name().to_ascii_uppercase()),
+                Some(k)
+            );
+        }
+        assert_eq!(WorkloadKind::parse("uniform"), None);
+    }
+
+    #[test]
+    fn open_loop_is_sorted_clipped_and_seed_deterministic() {
+        for k in WorkloadKind::all() {
+            let mut a = Pcg32::new(7, 3);
+            let mut b = Pcg32::new(7, 3);
+            let xs = open_loop_times(k, 10.0, 200.0, &mut a);
+            let ys = open_loop_times(k, 10.0, 200.0, &mut b);
+            assert!(!xs.is_empty(), "{k:?} emitted nothing");
+            assert!(
+                xs.windows(2).all(|w| w[0] <= w[1]),
+                "{k:?} not sorted"
+            );
+            assert!(xs[0] >= 0.0);
+            assert!(*xs.last().unwrap() < 200.0, "{k:?} not clipped");
+            assert_eq!(xs.len(), ys.len(), "{k:?} not deterministic");
+            assert!(xs.iter().zip(&ys).all(|(x, y)| x == y));
+        }
+    }
+
+    #[test]
+    fn count_is_emergent_not_rescaled() {
+        // doubling the offered rate roughly doubles the count — the
+        // closed-stream rescale would have pinned it.
+        let mut rng = Pcg32::new(3, 9);
+        let n1 =
+            open_loop_times(WorkloadKind::Poisson, 5.0, 400.0, &mut rng).len();
+        let n2 =
+            open_loop_times(WorkloadKind::Poisson, 10.0, 400.0, &mut rng).len();
+        let ratio = n2 as f64 / n1 as f64;
+        assert!((1.6..2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_rate_or_horizon_is_benign() {
+        let mut rng = Pcg32::new(1, 1);
+        assert!(open_loop_times(WorkloadKind::Poisson, 0.0, 100.0, &mut rng)
+            .is_empty());
+        assert!(open_loop_times(WorkloadKind::Pareto, 5.0, 0.0, &mut rng)
+            .is_empty());
+    }
+}

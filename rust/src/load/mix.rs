@@ -1,0 +1,209 @@
+//! Multi-scenario workload composition: Zipf-skewed scenario popularity
+//! with an optional mid-run popularity shift.
+//!
+//! Real edge deployments don't spread requests evenly over scenarios —
+//! a few are hot and the tail is cold.  `--mix zipf:s=1.1,k=8` draws
+//! each request's scenario from a Zipf(s) distribution over the top `k`
+//! popularity ranks (rank `r` gets weight `1/(r+1)^s`), mapped onto the
+//! benchmark's continual scenarios `1..n_scen`.  The optional
+//! `shift=<frac>` term rotates the rank→scenario mapping once `t`
+//! crosses `frac × horizon` — the paper's "deployment scenario change",
+//! which stresses [`crate::serve::BankSet`] eviction (the hot bank
+//! changes identity) and [`crate::serve::FleetRouter`] affinity (the
+//! hot engine moves).
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::rng::Pcg32;
+
+/// Parsed `--mix` grammar: `zipf[:s=<skew>,k=<ranks>,shift=<frac>]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixSpec {
+    /// Zipf skew exponent `s` (0 = uniform over the top `k`).
+    pub skew: f64,
+    /// Popularity ranks to draw from (clamped to the benchmark's
+    /// continual scenario count at sampling time).
+    pub ranks: usize,
+    /// Rotate the rank→scenario mapping at `frac × horizon` (`None` =
+    /// popularity is stationary).
+    pub shift_frac: Option<f64>,
+}
+
+impl Default for MixSpec {
+    fn default() -> MixSpec {
+        MixSpec { skew: 1.1, ranks: 8, shift_frac: None }
+    }
+}
+
+impl MixSpec {
+    /// Parse the CLI grammar.  `zipf` alone takes every default;
+    /// `zipf:s=1.2,k=4,shift=0.5` overrides per key.
+    pub fn parse(spec: &str) -> Result<MixSpec> {
+        let rest = spec.strip_prefix("zipf").ok_or_else(|| {
+            anyhow!(
+                "unknown mix '{spec}' \
+                 (grammar: zipf[:s=<skew>,k=<ranks>,shift=<frac>])"
+            )
+        })?;
+        let mut m = MixSpec::default();
+        let rest = match rest {
+            "" => return Ok(m),
+            r => r.strip_prefix(':').ok_or_else(|| {
+                anyhow!("unknown mix '{spec}' (expected 'zipf:' prefix)")
+            })?,
+        };
+        for part in rest.split(',') {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad mix term '{part}' (want k=v)"))?;
+            match key {
+                "s" => {
+                    m.skew = val
+                        .parse()
+                        .map_err(|_| anyhow!("bad mix skew '{val}'"))?;
+                }
+                "k" => {
+                    m.ranks = val
+                        .parse()
+                        .map_err(|_| anyhow!("bad mix ranks '{val}'"))?;
+                }
+                "shift" => {
+                    m.shift_frac = Some(
+                        val.parse()
+                            .map_err(|_| anyhow!("bad mix shift '{val}'"))?,
+                    );
+                }
+                other => bail!("unknown mix key '{other}' (s, k, shift)"),
+            }
+        }
+        ensure!(m.skew >= 0.0, "mix skew must be >= 0, got {}", m.skew);
+        ensure!(m.ranks >= 1, "mix needs at least one rank");
+        if let Some(f) = m.shift_frac {
+            ensure!(
+                (0.0..=1.0).contains(&f),
+                "mix shift must be a fraction in [0, 1], got {f}"
+            );
+        }
+        Ok(m)
+    }
+
+    /// Canonical display form (CLI help, repro table labels).
+    pub fn label(&self) -> String {
+        match self.shift_frac {
+            Some(f) => {
+                format!("zipf:s={},k={},shift={}", self.skew, self.ranks, f)
+            }
+            None => format!("zipf:s={},k={}", self.skew, self.ranks),
+        }
+    }
+}
+
+/// A [`MixSpec`] bound to a benchmark: precomputed Zipf CDF over the
+/// clamped rank set, plus the shift point in virtual seconds.
+#[derive(Clone, Debug)]
+pub struct MixSampler {
+    /// Cumulative normalized rank weights, ascending.
+    cdf: Vec<f64>,
+    /// Continual scenarios (`n_scen - 1`; scenario 0 never serves).
+    scenarios: usize,
+    /// Rotate the rank→scenario map for arrivals at or past this time.
+    shift_t: Option<f64>,
+    /// Rotation distance (half the scenario ring, ≥ 1): the hot rank
+    /// lands on a scenario that was cold before the shift.
+    rot: usize,
+}
+
+impl MixSampler {
+    pub fn new(spec: &MixSpec, n_scen: usize, horizon: f64) -> MixSampler {
+        let scenarios = n_scen.saturating_sub(1).max(1);
+        let ranks = spec.ranks.clamp(1, scenarios);
+        let weights: Vec<f64> = (0..ranks)
+            .map(|r| 1.0 / ((r + 1) as f64).powf(spec.skew))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        MixSampler {
+            cdf,
+            scenarios,
+            shift_t: spec.shift_frac.map(|f| f * horizon),
+            rot: (scenarios / 2).max(1),
+        }
+    }
+
+    /// Draw the scenario for an arrival at time `t`.  Always in
+    /// `1..=scenarios` — a valid index into the benchmark schedule.
+    pub fn scenario_at(&self, t: f64, rng: &mut Pcg32) -> usize {
+        let u = rng.f64();
+        let rank = self
+            .cdf
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.cdf.len() - 1);
+        let slot = match self.shift_t {
+            Some(st) if t >= st => (rank + self.rot) % self.scenarios,
+            _ => rank,
+        };
+        slot + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        assert_eq!(MixSpec::parse("zipf").unwrap(), MixSpec::default());
+        let m = MixSpec::parse("zipf:s=1.2,k=4,shift=0.5").unwrap();
+        assert_eq!(m.skew, 1.2);
+        assert_eq!(m.ranks, 4);
+        assert_eq!(m.shift_frac, Some(0.5));
+        assert_eq!(m.label(), "zipf:s=1.2,k=4,shift=0.5");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(MixSpec::parse("uniform").is_err());
+        assert!(MixSpec::parse("zipfs=1").is_err());
+        assert!(MixSpec::parse("zipf:s").is_err());
+        assert!(MixSpec::parse("zipf:q=3").is_err());
+        assert!(MixSpec::parse("zipf:k=0").is_err());
+        assert!(MixSpec::parse("zipf:shift=1.5").is_err());
+    }
+
+    #[test]
+    fn sampler_stays_in_scenario_range() {
+        let spec = MixSpec::parse("zipf:s=1.1,k=20").unwrap();
+        let s = MixSampler::new(&spec, 5, 1000.0); // ranks clamp to 4
+        let mut rng = Pcg32::new(5, 11);
+        for i in 0..500 {
+            let scen = s.scenario_at(i as f64 * 2.0, &mut rng);
+            assert!((1..=4).contains(&scen), "scenario {scen}");
+        }
+    }
+
+    #[test]
+    fn shift_rotates_the_hot_scenario() {
+        let spec = MixSpec::parse("zipf:s=2.0,k=2,shift=0.5").unwrap();
+        let s = MixSampler::new(&spec, 9, 1000.0);
+        let mut rng = Pcg32::new(9, 13);
+        let hot_of = |t: f64, rng: &mut Pcg32| {
+            let mut counts = [0usize; 9];
+            for _ in 0..2000 {
+                counts[s.scenario_at(t, rng)] += 1;
+            }
+            (0..9).max_by_key(|&i| counts[i]).unwrap()
+        };
+        let before = hot_of(100.0, &mut rng);
+        let after = hot_of(600.0, &mut rng);
+        assert_eq!(before, 1, "rank 0 maps to scenario 1 before the shift");
+        assert_eq!(after, 1 + 8 / 2, "hot rank rotated by half the ring");
+    }
+}

@@ -1,0 +1,43 @@
+//! # Open-loop workload generation + capacity search
+//!
+//! Everything before this module drove the stack with a single
+//! closed-ish synthetic trace: [`crate::data::arrival`] always rescales
+//! its gaps to span the horizon, so the offered rate is pinned at
+//! `n_requests / horizon` and the system can never be pushed past
+//! saturation.  This subsystem asks the production questions the
+//! ROADMAP north-star names — *what is the max sustainable RPS under
+//! the SLO?  what happens at the diurnal peak when a tuning round
+//! lands?* — in three layers:
+//!
+//! * [`gen`] — seeded, deterministic **open-loop** generators
+//!   (Poisson / bursty on-off / diurnal envelope / heavy-tailed
+//!   Pareto): timestamps at a configured offered rate, independent of
+//!   completions, so queues genuinely grow (`--workload`,
+//!   `--offered-rps`);
+//! * [`mix`] — Zipf-skewed multi-scenario composition with an optional
+//!   mid-run popularity shift (`--mix zipf:s=1.1,k=8,shift=0.5`) to
+//!   stress [`crate::serve::BankSet`] eviction and
+//!   [`crate::serve::FleetRouter`] affinity;
+//! * [`capacity`] — the capacity-search driver (`etuner capacity`,
+//!   `repro capacity`): bisects offered RPS for the knee of the
+//!   latency-vs-throughput curve against an SLO predicate, running each
+//!   fixed fan-out of probe points through
+//!   [`crate::sim::ParallelSweeper`] — concurrent probes, sequential
+//!   bit-identity.
+//!
+//! **Determinism contract:** generation draws from one dedicated
+//! [`crate::rng::Pcg32`] stream salted off the run seed; with
+//! `workload: None` (the default) the closed stream's RNG sequence and
+//! reports stay byte-identical to every prior PR.  The per-probe
+//! observability (request interarrival histogram, latency/queue hists,
+//! traces) rides the existing fingerprint-excluded channels.
+
+pub mod capacity;
+pub mod gen;
+pub mod mix;
+
+pub use capacity::{
+    capacity_search, CapacityProbe, CapacityResult, CapacitySpec,
+};
+pub use gen::{open_loop_times, WorkloadKind, WorkloadSpec};
+pub use mix::{MixSampler, MixSpec};

@@ -4,7 +4,10 @@
 //! etuner list                           # experiments + models
 //! etuner run --model res50 --benchmark nc [--tune lazytune]
 //!            [--freeze simfreeze] [--requests 200] [--seed 1]
+//!            [--workload poisson --offered-rps 2 --mix zipf:s=1.1,k=8]
 //!            [--backend pjrt|refcpu|auto]
+//! etuner capacity [--workload poisson] [--slo-ms 250] [--lo 0.1 --hi 8]
+//!                 [--iters 4] [--probes 3] [--jobs N]
 //! etuner repro <id|all> [--seeds 1,2] [--requests 200] [--out results]
 //!              [--jobs N]               # N sweep worker threads
 //!              [--backend pjrt|refcpu|auto]
@@ -22,6 +25,9 @@ use etuner::ckpt::{Cadence, CrashInjected};
 use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
 use etuner::data::arrival::ArrivalKind;
 use etuner::data::benchmarks::Benchmark;
+use etuner::load::{
+    capacity_search, CapacitySpec, MixSpec, WorkloadKind, WorkloadSpec,
+};
 use etuner::repro::experiments::{self, ReproOpts};
 use etuner::runtime::{BackendKind, BackendSpec, FaultPlan};
 use etuner::serve::{FaultScope, QueuePolicyKind, MAX_BANK_CAPACITY};
@@ -54,12 +60,15 @@ fn main() -> Result<()> {
             Ok(())
         }
         "run" => cmd_run(&args[1..]),
+        "capacity" => cmd_capacity(&args[1..]),
         "repro" => cmd_repro(&args[1..]),
         "help" | "--help" | "-h" => {
             println!(
-                "usage: etuner <list|run|repro> [options]\n\
+                "usage: etuner <list|run|capacity|repro> [options]\n\
                  run   --model M --benchmark B [--tune P] [--freeze F]\n\
                        [--requests N] [--seed S] [--arrival poisson|uniform|normal|trace]\n\
+                       [--workload poisson|bursty|diurnal|pareto]\n\
+                       [--offered-rps R] [--load-window S] [--mix SPEC]\n\
                        [--quant] [--labeled FRAC] [--cka-th TH]\n\
                        [--batch-window S] [--slo-ms MS] [--no-batching]\n\
                        [--queue-policy fifo|edf] [--max-queue N]\n\
@@ -111,12 +120,37 @@ fn main() -> Result<()> {
                        restores the newest valid record and continues to a\n\
                        bit-identical report (default: no checkpointing, the\n\
                        exact pre-checkpoint code path)\n\
+                       --workload switches the inference stream to an\n\
+                       open-loop generator (timestamps at the configured\n\
+                       offered rate, independent of completions, so queues\n\
+                       genuinely grow): poisson, bursty (Markov-modulated\n\
+                       on-off), diurnal (sinusoidal rate envelope, one\n\
+                       cycle per horizon), pareto (heavy-tailed gaps);\n\
+                       --offered-rps R sets the mean offered rate (default\n\
+                       2); --load-window S only generates arrivals in\n\
+                       [0, S) of the horizon; --mix zipf:s=1.1,k=8 draws\n\
+                       each request's scenario from a Zipf popularity law\n\
+                       (skew s over the k hottest scenarios; add shift=0.5\n\
+                       to rotate popularity mid-run and stress bank\n\
+                       eviction + fleet affinity)\n\
                        --trace records a virtual-time timeline (also enabled\n\
                        by ETUNER_TRACE=1 or by either flag below);\n\
                        --trace-out FILE writes it as Chrome trace-event JSON\n\
                        (open in Perfetto / chrome://tracing);\n\
                        --trace-summary prints the serving/tuning/idle\n\
                        time-in-state table after the run\n\
+                 capacity [--model M] [--benchmark B] [--seed S] [--fleet N]\n\
+                       [--workload K] [--mix SPEC] [--load-window S]\n\
+                       [--max-queue N] [--shed-infeasible]\n\
+                       [--slo-ms MS] [--drop-eps E] [--lo RPS] [--hi RPS]\n\
+                       [--iters N] [--probes N] [--jobs N] [--backend ...]\n\
+                       bisects offered RPS for the latency-vs-throughput\n\
+                       knee: the highest rate whose probe run meets\n\
+                       p99 <= --slo-ms (default 250) and drop-rate <=\n\
+                       --drop-eps (default 0.01); each bisection iteration\n\
+                       probes a fixed fan-out of --probes rates (default 3)\n\
+                       through the parallel sweeper, so the knee is\n\
+                       bit-identical for any --jobs\n\
                  repro <id|all> [--seeds 1,2] [--requests N] [--out DIR] [--jobs N]\n\
                        [--quarantine-after N] [--sweep-journal FILE]\n\
                        [--backend pjrt|refcpu|auto]\n\
@@ -272,6 +306,19 @@ fn cmd_run(args: &[String]) -> Result<()> {
             other => bail!("unknown decay {other:?}"),
         };
     }
+    cfg.workload = parse_workload(args)?;
+    if let Some(w) = &cfg.workload {
+        trace::note(format_args!(
+            "[etuner] open-loop workload: {} at {} rps{} (--requests ignored; \
+             request count is emergent)",
+            w.kind.name(),
+            w.offered_rps,
+            match &w.mix {
+                Some(m) => format!(", mix {}", m.label()),
+                None => String::new(),
+            },
+        ));
+    }
 
     let trace_out = opt(args, "--trace-out");
     let trace_summary = flag(args, "--trace-summary");
@@ -396,6 +443,167 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if trace_summary {
         print!("{}", trace::summary_table(&report, &tracer));
     }
+    Ok(())
+}
+
+/// `--workload`/`--offered-rps`/`--load-window`/`--mix` → open-loop spec.
+/// `None` when `--workload` is absent: the closed arrival stream stays
+/// byte-identical to every pre-load-layer release.
+fn parse_workload(args: &[String]) -> Result<Option<WorkloadSpec>> {
+    let Some(w) = opt(args, "--workload") else {
+        if opt(args, "--offered-rps").is_some() || opt(args, "--mix").is_some()
+        {
+            bail!(
+                "--offered-rps/--mix require --workload \
+                 <poisson|bursty|diurnal|pareto>"
+            );
+        }
+        return Ok(None);
+    };
+    let kind = WorkloadKind::parse(w).with_context(|| {
+        format!("bad --workload {w:?} (poisson|bursty|diurnal|pareto)")
+    })?;
+    let mut spec = WorkloadSpec {
+        kind,
+        offered_rps: 2.0,
+        window_s: None,
+        mix: None,
+    };
+    if let Some(r) = opt(args, "--offered-rps") {
+        spec.offered_rps = r.parse().context("bad --offered-rps")?;
+    }
+    if let Some(s) = opt(args, "--load-window") {
+        spec.window_s = Some(s.parse().context("bad --load-window")?);
+    }
+    if let Some(m) = opt(args, "--mix") {
+        spec.mix = Some(MixSpec::parse(m)?);
+    }
+    Ok(Some(spec))
+}
+
+fn cmd_capacity(args: &[String]) -> Result<()> {
+    let model = opt(args, "--model").unwrap_or("mbv2");
+    let bench =
+        Benchmark::parse(opt(args, "--benchmark").unwrap_or("scifar10"))
+            .context("bad --benchmark")?;
+    let mut cfg = RunConfig::quickstart(model, bench);
+    if let Some(s) = opt(args, "--seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(n) = opt(args, "--fleet") {
+        let n: usize = n.parse().context("bad --fleet")?;
+        cfg.fleet.engines = n.max(1);
+    }
+    if let Some(q) = opt(args, "--max-queue") {
+        cfg.serve.max_queue = q.parse().context("bad --max-queue")?;
+    }
+    cfg.serve.shed_infeasible = flag(args, "--shed-infeasible");
+    // Probe workload: --workload defaults to poisson here (unlike `run`,
+    // where its absence means "closed stream"); offered_rps is a
+    // placeholder the search overrides per probe.  A bounded generation
+    // window keeps event counts sane at high probe rates.
+    let kind = match opt(args, "--workload") {
+        Some(w) => WorkloadKind::parse(w).with_context(|| {
+            format!("bad --workload {w:?} (poisson|bursty|diurnal|pareto)")
+        })?,
+        None => WorkloadKind::Poisson,
+    };
+    let window_s = match opt(args, "--load-window") {
+        Some(s) => s.parse().context("bad --load-window")?,
+        None => 120.0,
+    };
+    let mix = match opt(args, "--mix") {
+        Some(m) => Some(MixSpec::parse(m)?),
+        None => None,
+    };
+    cfg.workload = Some(WorkloadSpec {
+        kind,
+        offered_rps: 0.0,
+        window_s: Some(window_s),
+        mix,
+    });
+
+    let mut spec = CapacitySpec::default();
+    if let Some(s) = opt(args, "--slo-ms") {
+        spec.slo_ms = s.parse().context("bad --slo-ms")?;
+    }
+    if let Some(e) = opt(args, "--drop-eps") {
+        spec.drop_eps = e.parse().context("bad --drop-eps")?;
+    }
+    if let Some(l) = opt(args, "--lo") {
+        spec.lo_rps = l.parse().context("bad --lo")?;
+    }
+    if let Some(h) = opt(args, "--hi") {
+        spec.hi_rps = h.parse().context("bad --hi")?;
+    }
+    if let Some(i) = opt(args, "--iters") {
+        spec.iters = i.parse().context("bad --iters")?;
+    }
+    if let Some(p) = opt(args, "--probes") {
+        spec.probes_per_iter = p.parse().context("bad --probes")?;
+    }
+    cfg.serve.slo_ms = spec.slo_ms;
+
+    let jobs = match opt(args, "--jobs") {
+        Some(j) => j.parse().context("bad --jobs")?,
+        None => ParallelSweeper::default_jobs(),
+    };
+    let sw = ParallelSweeper::new(backend_spec(args)?, jobs)?;
+    trace::note(format_args!("[etuner] backend: {}", sw.backend().name()));
+    if let Some(w) = &cfg.workload {
+        println!(
+            "capacity search: {} workload{} | {model}/{} fleet={} | \
+             SLO p99<={}ms drop<={} | bracket [{}, {}] rps, {} iters x {} \
+             probes, {} jobs",
+            w.kind.name(),
+            match &w.mix {
+                Some(m) => format!(" ({})", m.label()),
+                None => String::new(),
+            },
+            bench.name(),
+            cfg.fleet.engines,
+            spec.slo_ms,
+            spec.drop_eps,
+            spec.lo_rps,
+            spec.hi_rps,
+            spec.iters,
+            spec.probes_per_iter,
+            sw.jobs(),
+        );
+    }
+    let res = capacity_search(&sw, &cfg, &spec)?;
+    for p in &res.probes {
+        println!(
+            "  probe {:>9.4} rps: p99 {:>8.1} ms, drop {:.4}, served {:>6}, \
+             dropped {:>5}  {}",
+            p.offered_rps,
+            p.p99_ms,
+            p.drop_rate,
+            p.served,
+            p.dropped,
+            if p.passed { "PASS" } else { "FAIL" },
+        );
+    }
+    if !res.saturated {
+        println!(
+            "  note: hi bracket {} rps still met the SLO — knee is a lower \
+             bound; widen --hi to find the true knee",
+            res.bracket_hi_rps,
+        );
+    }
+    let bound = if res.saturated {
+        format!("first failing rate {:.4} rps", res.bracket_hi_rps)
+    } else {
+        "bracket never saturated".to_string()
+    };
+    println!(
+        "knee: {:.4} rps sustainable (p99 {:.1} ms, drop {:.4} at knee); \
+         {bound}; {} probe runs",
+        res.knee_rps,
+        res.p99_at_knee_ms,
+        res.drop_rate_at_knee,
+        res.probes.len(),
+    );
     Ok(())
 }
 

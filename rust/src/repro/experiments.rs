@@ -56,6 +56,7 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
         ("serve-policy", "serving control plane: fifo vs edf x queue caps"),
         ("faults", "robustness: fault rate x retry policy (accuracy, p99, drops)"),
         ("fleet", "fleet router: engines x affinity (p99, drops, rebuilds)"),
+        ("capacity", "capacity search: sustainable RPS knee (workload x fleet x SLO)"),
     ]
 }
 
@@ -94,11 +95,20 @@ struct Plan {
 }
 
 pub fn run_experiment(sw: &ParallelSweeper, id: &str, opts: &ReproOpts) -> Result<()> {
+    if id == "capacity" {
+        // Adaptive bisection: each probe batch depends on the previous
+        // one, so this experiment cannot be expressed as a static Plan
+        // cell list — it drives the sweeper directly.
+        return capacity_table(sw, opts);
+    }
     let plans = if id == "all" {
         let mut plans = Vec::new();
         for (eid, _) in list() {
             if eid == "fig9" || eid == "tab2" || eid == "fig10" {
                 continue; // produced jointly with fig8/tab3
+            }
+            if eid == "capacity" {
+                continue; // adaptive; runs after the static plans below
             }
             plans.push(plan(eid, opts)?);
         }
@@ -106,7 +116,11 @@ pub fn run_experiment(sw: &ParallelSweeper, id: &str, opts: &ReproOpts) -> Resul
     } else {
         vec![plan(id, opts)?]
     };
-    run_plans(sw, plans, opts)
+    run_plans(sw, plans, opts)?;
+    if id == "all" {
+        capacity_table(sw, opts)?;
+    }
+    Ok(())
 }
 
 fn plan(id: &str, opts: &ReproOpts) -> Result<Plan> {
@@ -1230,6 +1244,76 @@ fn fleet_table(opts: &ReproOpts) -> Plan {
             t.emit(&dir, "fleet")
         }),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Capacity — sustainable RPS at the SLO knee (workload × fleet × SLO)
+// ---------------------------------------------------------------------------
+
+/// `repro capacity`: for each workload kind × fleet size × SLO, bisect
+/// the offered RPS for the latency-vs-throughput knee.  The SLO grid and
+/// the RPS bracket are scaled off one measured low-rate base probe, so
+/// the two monotone shapes the experiment demonstrates — knee decreasing
+/// as the SLO tightens, non-decreasing as the fleet grows — hold
+/// regardless of how fast the executing backend is.
+fn capacity_table(sw: &ParallelSweeper, opts: &ReproOpts) -> Result<()> {
+    use crate::load::{
+        capacity_search, CapacitySpec, WorkloadKind, WorkloadSpec,
+    };
+    let mut base = cfg("mbv2", Benchmark::SCifar10, opts);
+    base.seed = opts.seeds[0];
+    base.workload = Some(WorkloadSpec {
+        kind: WorkloadKind::Poisson,
+        offered_rps: 0.25,
+        window_s: Some(60.0),
+        mix: None,
+    });
+    // Base probe: the p99 of a nearly-unloaded run approximates the bare
+    // service time, so 1000/base_p99 approximates the per-engine service
+    // rate mu (requests per virtual second).
+    let probe = sw.run_many(std::slice::from_ref(&base))?;
+    let base_p99 = probe[0].latency_p99_ms.max(1.0);
+    let mu = 1000.0 / base_p99;
+    let slos = [("loose", base_p99 * 8.0), ("tight", base_p99 * 2.5)];
+    let kinds = [WorkloadKind::Poisson, WorkloadKind::Bursty];
+    let fleets = [1usize, 2];
+    let mut t = Table::new(
+        "Capacity: sustainable RPS at the SLO knee (mbv2, s-cifar10)",
+        &["workload", "fleet", "slo", "slo_ms", "knee_rps", "p99@knee_ms",
+          "drop@knee", "probes"],
+    );
+    for kind in kinds {
+        for &n in &fleets {
+            for (label, slo_ms) in slos {
+                let mut c = base.clone();
+                c.fleet.engines = n;
+                c.serve.slo_ms = slo_ms;
+                if let Some(w) = c.workload.as_mut() {
+                    w.kind = kind;
+                }
+                let spec = CapacitySpec {
+                    slo_ms,
+                    drop_eps: 0.01,
+                    lo_rps: 0.05,
+                    hi_rps: (4.0 * mu * n as f64).max(1.0),
+                    iters: 3,
+                    probes_per_iter: 2,
+                };
+                let res = capacity_search(sw, &c, &spec)?;
+                t.row(vec![
+                    kind.name().into(),
+                    format!("{n}"),
+                    label.into(),
+                    f1(slo_ms),
+                    f2(res.knee_rps),
+                    f1(res.p99_at_knee_ms),
+                    format!("{:.3}", res.drop_rate_at_knee),
+                    format!("{}", res.probes.len()),
+                ]);
+            }
+        }
+    }
+    t.emit(&opts.results_dir, "capacity")
 }
 
 /// Shared helper for callers needing just one averaged cell.

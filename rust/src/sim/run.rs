@@ -115,6 +115,13 @@ pub struct RunConfig {
     /// default (`dir: None`) constructs nothing: the run takes the exact
     /// pre-checkpoint path and reports stay bit-identical.
     pub checkpoint: crate::ckpt::CheckpointConfig,
+    /// Open-loop workload (`--workload`/`--offered-rps`/`--mix`; see
+    /// [`crate::load`]).  `Some` replaces the closed `n_requests`
+    /// inference stream with generator-emitted arrivals at a configured
+    /// offered rate; `None` — the default — generates the exact
+    /// pre-load-layer stream (the closed stream's RNG draws nothing for
+    /// an empty request set, so reports stay byte-identical).
+    pub workload: Option<crate::load::WorkloadSpec>,
 }
 
 impl RunConfig {
@@ -144,6 +151,7 @@ impl RunConfig {
             serve_direct: false,
             faults: faults::env_plan(),
             checkpoint: crate::ckpt::CheckpointConfig::default(),
+            workload: None,
         }
     }
 
@@ -220,13 +228,19 @@ impl<'b> Simulation<'b> {
         sess.quant = cfg.quant;
         sess.lr = cfg.lr;
         let mut schedule = benchmarks::build(cfg.benchmark, cfg.seed);
-        let stream = Stream::generate(
+        // open-loop workloads replace the closed inference stream: the
+        // closed generator draws nothing for n == 0, so the `None` path
+        // is byte-identical to every pre-load-layer run.
+        let mut stream = Stream::generate(
             cfg.benchmark,
-            cfg.n_requests,
+            if cfg.workload.is_some() { 0 } else { cfg.n_requests },
             cfg.train_arrival,
             cfg.infer_arrival,
             cfg.seed,
         );
+        if let Some(w) = &cfg.workload {
+            w.inject(&mut stream, cfg.benchmark.scenario_count(), cfg.seed);
+        }
         let rng = Pcg32::new(cfg.seed ^ 0xE7E7, 5);
 
         // --- pre-deployment: "originally well-trained on scenario 1" ----
@@ -298,6 +312,22 @@ impl<'b> Simulation<'b> {
         report.tune_policy = cfg.tune.name();
         report.freeze_policy = cfg.freeze.name().to_string();
         report.seed = cfg.seed;
+        // open-loop observability: the realized interarrival distribution
+        // of the injected workload (fingerprint-excluded like every other
+        // histogram; absent entirely on the default closed stream).
+        if cfg.workload.is_some() {
+            let mut last = None;
+            for e in stream
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::Inference)
+            {
+                if let Some(prev) = last {
+                    report.hists.record("load/interarrival_s", e.t - prev);
+                }
+                last = Some(e.t);
+            }
+        }
 
         let val_pool = ValPool::new(sess.m.d, VAL_KEEP);
         let fleet = Fleet::new(

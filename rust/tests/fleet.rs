@@ -449,6 +449,61 @@ fn fault_scope_all_degrades_every_engine_and_conserves_arrivals() {
     );
 }
 
+/// Load-layer satellite (PR 10): a Zipf-skewed scenario mix at the
+/// ISSUE's s=1.2 concentrates enough arrivals on the hot scenario
+/// (seed-pinned: 17 of 24 land on scenario 1, ~59% in expectation) that
+/// the *default* rebalance threshold (0.5) trips — no hand-tuned
+/// threshold like the all-one-scenario test above — while arrivals stay
+/// conserved.
+#[test]
+fn zipf_skewed_mix_trips_the_default_rebalance_threshold() {
+    use etuner::load::{MixSampler, MixSpec};
+    use etuner::rng::Pcg32;
+
+    let be = testkit::execution_backend();
+    let sess = ModelSession::new(be.as_ref(), "mbv2").unwrap();
+    let rows = sess.m.batch_infer / 4;
+    let serve = ServeConfig {
+        batch_window_s: 1000.0,
+        slo_ms: 1e12,
+        rows_per_request: Some(rows),
+        ..ServeConfig::default()
+    };
+    let fleet = FleetConfig { engines: 2, ..FleetConfig::default() };
+    assert!(
+        (fleet.rebalance_threshold - 0.5).abs() < 1e-12,
+        "test exercises the default threshold; update if the default moves"
+    );
+    let cfg = spec(serve, fleet, 4, false);
+
+    let mix = MixSpec::parse("zipf:s=1.2,k=3").unwrap();
+    let sampler = MixSampler::new(&mix, 4, 1000.0);
+    let mut rng = Pcg32::new(9, 13);
+    let mut wl = workload(sess.m.d, rows, 24, 4);
+    let mut hot = 0usize;
+    for req in &mut wl {
+        let s = sampler.scenario_at(req.arrival_t, &mut rng);
+        req.scenario = s;
+        req.y = vec![s as i32; rows];
+        hot += (s == 1) as usize;
+    }
+    assert!(
+        hot * 2 > 24,
+        "seed-pinned draw lost its majority hot scenario ({hot}/24)"
+    );
+
+    let y = run_pool(&cfg, &wl, 5000.0, false).unwrap();
+    assert!(
+        y.counters.router.rebalances >= 1,
+        "a majority-hot Zipf mix never tripped the default 0.5 threshold"
+    );
+    assert_eq!(
+        y.counters.served + y.counters.requests_dropped(),
+        24,
+        "requests lost under the skewed mix"
+    );
+}
+
 /// The ablation arm: affinity off routes purely least-loaded.
 #[test]
 fn affinity_off_never_routes_by_affinity() {

@@ -1,0 +1,205 @@
+//! Load-layer property battery (PR 10).
+//!
+//! Three contracts:
+//!
+//! * **Statistical shape** — each open-loop generator empirically hits
+//!   its configured offered rate (counts are emergent, never rescaled),
+//!   the diurnal envelope's peak/trough arrival ratio matches the
+//!   configured amplitude, and the Zipf mix's empirical frequency
+//!   ranking follows the skew.  Seeds are pinned, so these are exact
+//!   regression tests, not flaky statistics.
+//! * **Worker-count independence** — a sweep of open-loop workload
+//!   configs yields bit-identical reports at `--jobs 1` and `--jobs 4`,
+//!   and the capacity search's knee (plus its entire probe log) is
+//!   bit-identical across job counts.
+//! * **Observability** — open-loop runs publish the
+//!   `load/interarrival_s` histogram without touching the scientific
+//!   fingerprint.
+
+use etuner::coordinator::policy::{FreezePolicyKind, TunePolicyKind};
+use etuner::data::benchmarks::Benchmark;
+use etuner::load::{
+    capacity_search, open_loop_times, CapacitySpec, MixSampler, MixSpec,
+    WorkloadKind, WorkloadSpec,
+};
+use etuner::rng::Pcg32;
+use etuner::runtime::FaultPlan;
+use etuner::sim::{ParallelSweeper, RunConfig};
+use etuner::testkit;
+
+// ---------------------------------------------------------------------------
+// statistical shape of the generators
+// ---------------------------------------------------------------------------
+
+/// The empirical rate of every generator converges to the configured
+/// offered rate.  Tolerances reflect each process's variance over the
+/// pinned horizon: the on-off modulation (bursty) and the heavy tail
+/// (pareto) mix slower than plain exponential gaps.
+#[test]
+fn empirical_mean_rate_matches_the_offered_rate() {
+    let rate = 8.0;
+    let horizon = 2000.0;
+    let tolerances = [
+        (WorkloadKind::Poisson, 0.05),
+        (WorkloadKind::Bursty, 0.10),
+        (WorkloadKind::Diurnal, 0.05),
+        (WorkloadKind::Pareto, 0.10),
+    ];
+    for (kind, tol) in tolerances {
+        let mut rng = Pcg32::new(90, 29);
+        let xs = open_loop_times(kind, rate, horizon, &mut rng);
+        let empirical = xs.len() as f64 / horizon;
+        let rel = (empirical - rate).abs() / rate;
+        assert!(
+            rel <= tol,
+            "{kind:?}: empirical rate {empirical:.3} vs offered {rate} \
+             (rel err {rel:.4} > tol {tol})"
+        );
+    }
+}
+
+/// Arrivals in a window around the diurnal peak outnumber arrivals in
+/// the mirror window around the trough by roughly the configured
+/// `(1 + a) / (1 - a)` = 4 envelope ratio (window-averaging pulls the
+/// exact expectation slightly below 4).
+#[test]
+fn diurnal_peak_to_trough_ratio_matches_the_envelope() {
+    let horizon = 4000.0;
+    let mut rng = Pcg32::new(17, 5);
+    let xs = open_loop_times(WorkloadKind::Diurnal, 6.0, horizon, &mut rng);
+    let count_in = |center: f64| {
+        let half = horizon / 16.0;
+        xs.iter()
+            .filter(|&&t| (center - half..=center + half).contains(&t))
+            .count()
+    };
+    let peak = count_in(horizon / 4.0);
+    let trough = count_in(3.0 * horizon / 4.0);
+    assert!(trough > 0, "trough window is empty");
+    let ratio = peak as f64 / trough as f64;
+    assert!(
+        (3.0..5.0).contains(&ratio),
+        "peak/trough ratio {ratio:.2} (peak {peak}, trough {trough}) is \
+         not near the configured 4"
+    );
+}
+
+/// Hotter ranks are strictly more frequent: the Zipf sampler's empirical
+/// scenario counts decrease monotonically in rank order.
+#[test]
+fn zipf_frequency_ranking_matches_the_skew() {
+    let spec = MixSpec::parse("zipf:s=1.1,k=8").unwrap();
+    let sampler = MixSampler::new(&spec, 10, 1000.0);
+    let mut rng = Pcg32::new(33, 3);
+    let mut counts = [0usize; 10];
+    for _ in 0..20_000 {
+        counts[sampler.scenario_at(0.0, &mut rng)] += 1;
+    }
+    // ranks 0..8 map to scenarios 1..8 (no shift configured)
+    for s in 1..8 {
+        assert!(
+            counts[s] > counts[s + 1],
+            "scenario {s} ({}) not hotter than scenario {} ({}): {counts:?}",
+            counts[s],
+            s + 1,
+            counts[s + 1]
+        );
+    }
+    assert_eq!(counts[0], 0, "scenario 0 never serves inference");
+    assert_eq!(counts[9], 0, "ranks were clamped to k=8");
+}
+
+// ---------------------------------------------------------------------------
+// worker-count independence
+// ---------------------------------------------------------------------------
+
+fn load_cfg(
+    seed: u64,
+    kind: WorkloadKind,
+    mix: Option<MixSpec>,
+) -> RunConfig {
+    let mut c = RunConfig::quickstart("mbv2", Benchmark::SCifar10)
+        .with_policies(TunePolicyKind::LazyTune, FreezePolicyKind::SimFreeze)
+        .with_seed(seed);
+    c.faults = FaultPlan::none(); // pinned: see tests/faults.rs module docs
+    c.workload = Some(WorkloadSpec {
+        kind,
+        offered_rps: 1.5,
+        window_s: Some(40.0),
+        mix,
+    });
+    c
+}
+
+/// A mixed batch of open-loop workload configs sweeps bit-identically at
+/// 1 and 4 workers — and each run published the interarrival histogram.
+#[test]
+fn workload_sweeps_are_bit_identical_across_jobs() {
+    let cfgs = vec![
+        load_cfg(
+            3,
+            WorkloadKind::Poisson,
+            Some(MixSpec::parse("zipf:s=1.1,k=4,shift=0.5").unwrap()),
+        ),
+        load_cfg(4, WorkloadKind::Bursty, None),
+        load_cfg(5, WorkloadKind::Pareto, None),
+    ];
+    let one = ParallelSweeper::new(testkit::refcpu_spec(), 1)
+        .unwrap()
+        .run_many(&cfgs)
+        .unwrap();
+    let four = ParallelSweeper::new(testkit::refcpu_spec(), 4)
+        .unwrap()
+        .run_many(&cfgs)
+        .unwrap();
+    assert_eq!(one.len(), four.len());
+    for (a, b) in one.iter().zip(&four) {
+        assert!(
+            !a.requests.is_empty(),
+            "open-loop workload served no requests"
+        );
+        assert!(
+            a.hists.get("load/interarrival_s").is_some(),
+            "open-loop run published no interarrival histogram"
+        );
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.latency_p99_ms.to_bits(), b.latency_p99_ms.to_bits());
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "full report diverged across --jobs"
+        );
+    }
+}
+
+/// The capacity search returns the same knee — and the same probe log,
+/// float for float — whether its batches run on 1 worker or 4.
+#[test]
+fn capacity_knee_is_bit_identical_across_jobs() {
+    let base = load_cfg(2, WorkloadKind::Poisson, None);
+    let spec = CapacitySpec {
+        slo_ms: 400.0,
+        drop_eps: 0.01,
+        lo_rps: 0.2,
+        hi_rps: 4.0,
+        iters: 2,
+        probes_per_iter: 1,
+    };
+    let seq = ParallelSweeper::new(testkit::refcpu_spec(), 1).unwrap();
+    let par = ParallelSweeper::new(testkit::refcpu_spec(), 4).unwrap();
+    let a = capacity_search(&seq, &base, &spec).unwrap();
+    let b = capacity_search(&par, &base, &spec).unwrap();
+    assert_eq!(a.knee_rps.to_bits(), b.knee_rps.to_bits());
+    assert_eq!(a.p99_at_knee_ms.to_bits(), b.p99_at_knee_ms.to_bits());
+    assert_eq!(a.saturated, b.saturated);
+    assert_eq!(a.probes.len(), b.probes.len(), "probe schedules diverged");
+    for (pa, pb) in a.probes.iter().zip(&b.probes) {
+        assert_eq!(pa.offered_rps.to_bits(), pb.offered_rps.to_bits());
+        assert_eq!(pa.p99_ms.to_bits(), pb.p99_ms.to_bits());
+        assert_eq!(pa.drop_rate.to_bits(), pb.drop_rate.to_bits());
+        assert_eq!(pa.passed, pb.passed);
+    }
+    // at minimum the endpoint batch ran; interior batches only run when
+    // the bracket actually straddles the knee
+    assert!(a.probes.len() >= 2, "endpoint batch missing");
+}
